@@ -1,0 +1,94 @@
+//! CNN convolution energy benchmarking — the Galvez et al. use case
+//! (paper §6.1 "Energy": DP2E-AI'25 work on the az5-a890m partition).
+//!
+//! The experiment: run the CNN forward payload (a real AOT-compiled
+//! JAX + Pallas artifact executed over PJRT) on the az5-a890m model
+//! under a sweep of RAPL power caps, with §4 probes sampling at 1000
+//! SPS and a GPIO tag marking the measured region, and report
+//! time-to-solution, average power, energy-to-solution and energy/image
+//! per cap — the energy/performance trade-off curve.
+//!
+//! Run: `cargo run --release --example cnn_energy`
+
+use dalek::config::cluster::resolve_partition;
+use dalek::energy::{Ina228Probe, ProbeConfig};
+use dalek::power::{Activity, PowerModel};
+use dalek::runtime::PjRtRuntime;
+use dalek::sim::SimTime;
+use dalek::util::{units, Table, Xoshiro256};
+
+fn main() -> anyhow::Result<()> {
+    println!("== CNN convolution energy sweep on az5-a890m (Galvez use case) ==\n");
+    let artifact_dir = "artifacts";
+    anyhow::ensure!(
+        std::path::Path::new(artifact_dir).join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // 1. ground the payload cost with a real PJRT execution
+    let mut rt = PjRtRuntime::load(artifact_dir)?;
+    let exec = rt.execute_best_of("cnn_small", 7, 3)?;
+    println!(
+        "real PJRT run: cnn_small = {} / call ({}), checksum {:.4}",
+        units::secs(exec.wall_s),
+        units::si(exec.flops_per_sec, "FLOP/s"),
+        exec.output_sum
+    );
+    let images_per_call = 8u64; // batch size of cnn_small
+    let calls = 20_000u64;
+
+    // 2. sweep RAPL caps on the az5-a890m node model
+    let node = resolve_partition("az5-a890m").expect("catalog").node;
+    let act = Activity::cpu_only(0.95);
+    let roofline = node
+        .cpu
+        .peak_ops_accumulated(dalek::hw::cpu::Instr::FmaF32);
+    const ETA: f64 = 0.25; // sustained fraction of peak for conv-as-GEMM
+
+    let mut t = Table::new(&[
+        "RAPL cap", "avg power", "time-to-solution", "energy", "J/image", "probe J",
+    ])
+    .title("energy/performance trade-off, 20k CNN forward calls (batch 8)")
+    .left(0);
+
+    let mut best_j_per_image = f64::INFINITY;
+    let mut best_cap = String::new();
+    for cap_w in [None, Some(45.0), Some(35.0), Some(25.0), Some(15.0)] {
+        let mut power = PowerModel::for_node(&node);
+        power.cpu_rapl.set_cap(cap_w).expect("within bounds");
+        let perf = power.cpu_perf_factor(act);
+        let watts = power.watts(act);
+        let total_flops = exec.flops as f64 * calls as f64;
+        let secs = total_flops / (roofline * ETA * perf);
+        let energy_j = watts * secs;
+        let j_per_image = energy_j / (calls * images_per_call) as f64;
+
+        // 3. measure the same window through a §4 probe with a GPIO tag
+        let mut probe = Ina228Probe::new(0, ProbeConfig::default(), Xoshiro256::new(42));
+        let window = SimTime::from_secs_f64(secs.min(30.0)); // sample ≤30 s
+        let samples = probe.sample_until(&|_t: SimTime| watts, window, 0b1);
+        let probe_j: f64 = samples.iter().map(|s| s.power_w * 1e-3).sum::<f64>()
+            * (secs / window.as_secs_f64());
+
+        if j_per_image < best_j_per_image {
+            best_j_per_image = j_per_image;
+            best_cap = cap_w.map(|c| format!("{c:.0} W")).unwrap_or("none".into());
+        }
+        t.row(&[
+            cap_w.map(|c| format!("{c:.0} W")).unwrap_or("none".into()),
+            units::watts(watts),
+            units::secs(secs),
+            units::joules(energy_j),
+            format!("{:.2} mJ", j_per_image * 1e3),
+            units::joules(probe_j),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmost energy-efficient cap: {best_cap} ({:.2} mJ/image) — capping trades \
+         (cap/demand)^(1/3) performance for linear power, so energy/op falls",
+        best_j_per_image * 1e3
+    );
+    println!("cnn_energy OK");
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! The §3.4 energy-aware powering strategy, measured end to end.
+//!
+//! Replays the same bursty daily workload twice — suspend policy ON
+//! (the paper's deployment) and OFF (conventional always-on cluster) —
+//! and reports the energy saved, the queue-wait cost (the ≤2-minute
+//! boot delay users pay), and the idle-cluster power floor.
+//!
+//! Run: `cargo run --release --example energy_aware`
+
+use dalek::config::ClusterConfig;
+use dalek::coordinator::{trace, Cluster};
+use dalek::sim::SimTime;
+use dalek::slurm::JobSpec;
+use dalek::util::{units, Table};
+
+fn bursty_trace(seed: u64) -> Vec<trace::TraceEvent> {
+    // a working day: two bursts (morning, afternoon) + overnight silence
+    let mut gen = trace::TraceGen::dalek_mix(seed);
+    gen.payloads.clear();
+    gen.jobs_per_hour = 30.0;
+    let mut t = gen.generate(40);
+    for (i, ev) in t.iter_mut().enumerate() {
+        let base = if i < 20 {
+            SimTime::from_hours(9) // morning burst
+        } else {
+            SimTime::from_hours(14) // afternoon burst
+        };
+        ev.at = base + SimTime::from_secs((i as u64 % 20) * 90);
+    }
+    t
+}
+
+fn run(enabled: bool) -> (trace::ReplayReport, f64, u32, u32) {
+    let mut cfg = ClusterConfig::dalek_default();
+    cfg.power.enabled = enabled;
+    let mut cluster = Cluster::new(cfg, None).expect("cluster");
+    if !enabled {
+        // conventional cluster: everything is booted at 07:00 and stays up
+        for p in ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"] {
+            cluster
+                .submit(JobSpec::cpu("ops", p, 4, 1), SimTime::from_hours(7))
+                .expect("warmup job");
+        }
+    }
+    let tr = bursty_trace(0xE17);
+    let report = trace::replay(&mut cluster, &tr, false);
+    // extend to the full 24 h day so overnight idling is accounted
+    cluster.run_until(SimTime::from_hours(24), false);
+    let day_energy = cluster.report().true_energy_j;
+    let infos = cluster.slurm.node_infos();
+    let boots = infos.iter().map(|n| n.boots).sum();
+    let suspends = infos.iter().map(|n| n.suspends).sum();
+    (report, day_energy, boots, suspends)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== §3.4 energy-aware node powering: a bursty day, ON vs OFF ==\n");
+    let (r_on, e_on, boots_on, susp_on) = run(true);
+    let (r_off, e_off, boots_off, _susp_off) = run(false);
+
+    let mut t = Table::new(&["metric", "suspend ON (paper)", "always-on"])
+        .title("daily comparison (40 jobs in two bursts, 24 h accounting)")
+        .left(0);
+    t.row(&[
+        "energy / day (computes)".into(),
+        units::joules(e_on),
+        units::joules(e_off),
+    ]);
+    t.row(&[
+        "mean draw".into(),
+        units::watts(e_on / 86_400.0),
+        units::watts(e_off / 86_400.0),
+    ]);
+    t.row(&[
+        "jobs completed".into(),
+        r_on.completed.to_string(),
+        r_off.completed.to_string(),
+    ]);
+    let wait = |r: &trace::ReplayReport| {
+        r.wait
+            .as_ref()
+            .map(|w| format!("{} / {}", units::secs(w.p50), units::secs(w.max)))
+            .unwrap_or_default()
+    };
+    t.row(&["wait p50 / max".into(), wait(&r_on), wait(&r_off)]);
+    t.row(&[
+        "node boots / suspends".into(),
+        format!("{boots_on} / {susp_on}"),
+        format!("{boots_off} / always up"),
+    ]);
+    t.print();
+
+    let saved = 1.0 - e_on / e_off;
+    println!(
+        "\nsuspend policy saves {:.0}% of daily compute-node energy;",
+        saved * 100.0
+    );
+    if let Some(w) = &r_on.wait {
+        println!(
+            "the price is boot-delayed starts: max wait {} (paper budget: ≤2 min + queue).",
+            units::secs(w.max)
+        );
+        anyhow::ensure!(w.p50 <= 150.0, "median wait must sit within the boot budget");
+    }
+    anyhow::ensure!(saved > 0.5, "sparse day must save >50% energy");
+    // always-on ran 4 extra warmup jobs (one per partition at 07:00)
+    anyhow::ensure!(
+        r_on.completed + 4 == r_off.completed,
+        "same trace work must complete: {} vs {}",
+        r_on.completed,
+        r_off.completed
+    );
+    println!("energy_aware OK");
+    Ok(())
+}

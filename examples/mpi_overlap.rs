@@ -1,0 +1,110 @@
+//! MPI compute/communication overlap — the §6.2 education use case.
+//!
+//! "The 'slow' network is also noteworthy because it saturates very
+//! quickly. Therefore, even with a small number of nodes, it becomes
+//! important to consider optimizing network communications when
+//! designing prototypes. This provides a great opportunity to introduce
+//! MPI compute/communication overlapping."
+//!
+//! The exercise: a 4-node iterative stencil-style job on az4-n4090
+//! (2.5 GbE NICs). Each iteration computes a gemm512-sized step (cost
+//! grounded by a real PJRT execution) and exchanges halo buffers with
+//! both neighbours. Two implementations are compared on the flow-level
+//! network simulation:
+//!   * blocking    — compute, then exchange (MPI_Sendrecv style);
+//!   * overlapped  — exchange of iteration i runs during compute of
+//!                   i+1 (MPI_Isend/Irecv + wait), hiding whichever of
+//!                   the two phases is shorter.
+//!
+//! Run: `cargo run --release --example mpi_overlap`
+
+use dalek::config::ClusterConfig;
+use dalek::net::{FlowNet, Topology};
+use dalek::runtime::PjRtRuntime;
+use dalek::util::{units, Table};
+
+/// One ring-exchange round: every node sends its halo to the next node.
+fn exchange_secs(topo: &Topology, nodes: &[dalek::net::HostId], bytes: u64) -> f64 {
+    let mut net = FlowNet::new(topo);
+    for (i, &src) in nodes.iter().enumerate() {
+        let dst = nodes[(i + 1) % nodes.len()];
+        net.start_flow(src, dst, bytes);
+        let dst2 = nodes[(i + nodes.len() - 1) % nodes.len()];
+        net.start_flow(src, dst2, bytes);
+    }
+    net.run_to_idle().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== §6.2 MPI compute/communication overlap on 2.5 GbE ==\n");
+    let artifact_dir = "artifacts";
+    anyhow::ensure!(
+        std::path::Path::new(artifact_dir).join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    // ground the per-iteration compute cost with a real PJRT run
+    let mut rt = PjRtRuntime::load(artifact_dir)?;
+    let exec = rt.execute_best_of("gemm512", 11, 3)?;
+    println!(
+        "real PJRT run: gemm512 = {} / call ({})",
+        units::secs(exec.wall_s),
+        units::si(exec.flops_per_sec, "FLOP/s")
+    );
+    // per-iteration compute on an az4 node (CPU path, 25% of peak):
+    // a stencil step of 20 gemm512-sized blocks per node
+    const CALLS_PER_ITER: f64 = 20.0;
+    let node = dalek::config::cluster::resolve_partition("az4-n4090")
+        .expect("catalog")
+        .node;
+    let peak = node
+        .cpu
+        .peak_ops_accumulated(dalek::hw::cpu::Instr::FmaF32);
+    let compute_s = CALLS_PER_ITER * exec.flops as f64 / (peak * 0.25);
+
+    let topo = Topology::build(&ClusterConfig::dalek_default());
+    let nodes = topo.partition_nodes(0); // az4-n4090, 2.5 GbE
+    let iters = 100u32;
+
+    let mut t = Table::new(&[
+        "halo size", "comm/iter", "compute/iter", "blocking total", "overlap total", "speedup",
+    ])
+    .title(format!("{iters} iterations, 4-node ring, both-neighbour halo exchange"))
+    .left(0);
+
+    let mut crossover: Option<u64> = None;
+    for halo_mb in [1u64, 2, 4, 8, 16, 64] {
+        let bytes = halo_mb * 1_000_000;
+        let comm_s = exchange_secs(&topo, &nodes, bytes);
+        // blocking: phases serialize; overlapped: max of the two phases
+        // (+ one non-hidden exchange at the end)
+        let blocking = iters as f64 * (compute_s + comm_s);
+        let overlapped = iters as f64 * compute_s.max(comm_s) + comm_s.min(compute_s);
+        if comm_s > compute_s && crossover.is_none() {
+            crossover = Some(halo_mb);
+        }
+        t.row(&[
+            format!("{halo_mb} MB"),
+            units::secs(comm_s),
+            units::secs(compute_s),
+            units::secs(blocking),
+            units::secs(overlapped),
+            format!("{:.2}x", blocking / overlapped),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nthe 2.5 GbE fabric saturates quickly: beyond ~{} MB halos the\n\
+         exchange dominates compute and overlap approaches its 2x bound —\n\
+         the teaching point of §6.2.",
+        crossover.unwrap_or(64)
+    );
+    // overlap must help and never hurt
+    anyhow::ensure!(crossover.is_some(), "expected a comm-bound crossover");
+    anyhow::ensure!(
+        (2..=16).contains(&crossover.unwrap()),
+        "crossover should sit in the single-digit-MB halo range on 2.5 GbE"
+    );
+    println!("mpi_overlap OK");
+    Ok(())
+}

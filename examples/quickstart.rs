@@ -1,0 +1,104 @@
+//! Quickstart — the end-to-end driver.
+//!
+//! Builds the full DALEK cluster (paper topology), loads the AOT
+//! artifacts if present, replays a 200-job mixed trace (CPU jobs + real
+//! PJRT payload jobs across all four partitions) with the §4 energy
+//! platform sampling at 1000 SPS, and prints the headline report:
+//! throughput, waiting times, utilization, true vs probe-measured
+//! energy. This is experiment E2E of DESIGN.md.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dalek::config::ClusterConfig;
+use dalek::coordinator::{trace, Cluster};
+use dalek::slurm::JobState;
+use dalek::util::{units, Table};
+
+fn main() -> anyhow::Result<()> {
+    let artifact_dir = "artifacts";
+    let have_artifacts = std::path::Path::new(artifact_dir)
+        .join("manifest.json")
+        .exists();
+
+    println!("== DALEK quickstart: 200-job mixed trace on the paper topology ==\n");
+    let cfg = ClusterConfig::dalek_default();
+    println!(
+        "cluster `{}`: {} partitions, {} compute nodes, suspend after {}",
+        cfg.name,
+        cfg.partitions.len(),
+        cfg.total_nodes(),
+        units::secs(cfg.power.suspend_after.as_secs_f64()),
+    );
+    let mut cluster = Cluster::new(cfg, have_artifacts.then_some(artifact_dir))?;
+    if let Some(rt) = &cluster.runtime {
+        println!(
+            "PJRT runtime up (platform = {}), payloads: {:?}",
+            rt.platform(),
+            rt.payload_names()
+        );
+    } else {
+        println!("note: artifacts/ missing — run `make artifacts`; using synthetic jobs only");
+    }
+
+    let mut gen = trace::TraceGen::dalek_mix(0xDA1EC);
+    if cluster.runtime.is_none() {
+        gen.payloads.clear();
+    }
+    let tr = gen.generate(200);
+    println!("\nreplaying {} jobs (energy sampling ON, 1000 SPS/node)…", tr.len());
+    let t0 = std::time::Instant::now();
+    let report = trace::replay(&mut cluster, &tr, true);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&["metric", "value"]).title("E2E report").left(0).left(1);
+    t.row_strs(&["jobs", &report.jobs.to_string()]);
+    t.row_strs(&["completed", &report.completed.to_string()]);
+    t.row_strs(&["timeouts", &report.timeouts.to_string()]);
+    t.row_strs(&["simulated makespan", &units::secs(report.makespan.as_secs_f64())]);
+    if let Some(w) = &report.wait {
+        t.row_strs(&[
+            "queue wait p50 / p95 / max",
+            &format!(
+                "{} / {} / {}",
+                units::secs(w.p50),
+                units::secs(w.p95),
+                units::secs(w.max)
+            ),
+        ]);
+    }
+    t.row_strs(&["throughput", &format!("{:.1} jobs/h", report.throughput_jobs_per_hour)]);
+    t.row_strs(&["true energy (scheduler integration)", &units::joules(report.true_energy_j)]);
+    t.row_strs(&["measured energy (§4 probes @1 kSPS)", &units::joules(report.measured_energy_j)]);
+    let err = (report.measured_energy_j - report.true_energy_j).abs()
+        / report.true_energy_j.max(1e-9)
+        * 100.0;
+    t.row_strs(&["probe vs truth", &format!("{err:.3} %")]);
+    t.row_strs(&["mean cluster draw", &units::watts(report.mean_cluster_w)]);
+    t.row_strs(&["host wall-clock for the replay", &units::secs(wall)]);
+    t.print();
+
+    // per-partition node accounting (boots/suspends prove §3.4 works)
+    let mut nt = Table::new(&["node", "state", "boots", "suspends", "energy"])
+        .title("\nper-node accounting (first node of each partition)")
+        .left(0)
+        .left(1);
+    for info in cluster.slurm.node_infos().iter().filter(|n| n.name.ends_with("-0")) {
+        nt.row(&[
+            info.name.clone(),
+            format!("{:?}", info.state),
+            info.boots.to_string(),
+            info.suspends.to_string(),
+            units::joules(info.energy_j),
+        ]);
+    }
+    nt.print();
+
+    let failed = cluster
+        .slurm
+        .jobs()
+        .filter(|j| !matches!(j.state, JobState::Completed | JobState::Timeout))
+        .count();
+    anyhow::ensure!(failed == 0, "{failed} jobs did not finish");
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path for DALEK: L2 jax models + L1 pallas kernels.
+
+Nothing in this package is imported at runtime; ``make artifacts`` runs
+``python -m compile.aot`` once and the rust coordinator only ever touches
+the resulting ``artifacts/*.hlo.txt`` + ``artifacts/manifest.json``.
+"""

@@ -1,0 +1,82 @@
+"""AOT driver: lower every payload to HLO text + write the manifest.
+
+Interchange format is HLO *text* (not a serialized HloModuleProto): jax
+>= 0.5 emits protos with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowering goes through stablehlo ->
+XlaComputation with return_tuple=True, so the rust side unwraps a 1-tuple.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import PAYLOADS
+
+_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "i8": jnp.int8, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_payload(payload) -> str:
+    specs = [
+        jax.ShapeDtypeStruct(shape, _DTYPES[dt]) for (shape, dt) in payload.inputs
+    ]
+    return to_hlo_text(jax.jit(payload.fn).lower(*specs))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="comma-separated payload names")
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"format": "hlo-text-v1", "payloads": []}
+    for p in PAYLOADS:
+        if only and p.name not in only:
+            continue
+        text = lower_payload(p)
+        path = out_dir / f"{p.name}.hlo.txt"
+        path.write_text(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["payloads"].append(
+            {
+                "name": p.name,
+                "file": path.name,
+                "inputs": [
+                    {"shape": list(shape), "dtype": dt} for (shape, dt) in p.inputs
+                ],
+                "flops": p.flops,
+                "description": p.description,
+                "sha256_16": digest,
+            }
+        )
+        print(f"  {p.name:<14} {len(text):>9} chars  {p.flops/1e6:10.2f} MFLOP  {path}")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {out_dir / 'manifest.json'} ({len(manifest['payloads'])} payloads)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels for the DALEK compute payloads.
+
+All kernels are written for the TPU programming model (VMEM-tiled
+``BlockSpec`` grids feeding MXU-shaped matmul blocks) but are lowered with
+``interpret=True`` so that the resulting HLO runs on any PJRT backend,
+including the rust CPU client on the request path.
+
+Hardware adaptation note (paper GPUs -> Pallas/TPU): the paper's Fig. 5
+DPA2/DPA4 CPU instructions (2-way bf16 / 4-way int8 dot-product-accumulate)
+map onto the ``dpa`` kernels' mixed-precision matmuls with widening
+accumulation (bf16 x bf16 -> f32 and int8 x int8 -> int32), and the clpeak
+``mad`` kernels of Fig. 7 map onto the f32 fused multiply-add path of the
+blocked ``matmul`` kernel.
+"""
+
+from .matmul import matmul, DEFAULT_BLOCK
+from .dpa import dpa2_matmul, dpa4_matmul
+from .conv2d import conv2d
+
+__all__ = [
+    "matmul",
+    "DEFAULT_BLOCK",
+    "dpa2_matmul",
+    "dpa4_matmul",
+    "conv2d",
+]

@@ -1,0 +1,69 @@
+"""Conv2d forward built on the Pallas matmul kernel (im2col lowering).
+
+This is the §6 use-case payload of the paper (Galvez et al., "Benchmarking
+deep learning convolutions on energy-constrained CPUs"): a convolution
+whose hot loop is the blocked GEMM of the L1 kernel.
+
+The im2col patch extraction is pure data movement and stays in jnp (XLA
+fuses it into gathers/reshapes); the arithmetic — the part the paper's
+energy benchmark measures — runs through the Pallas MXU-tiled matmul.
+
+Layout: NHWC activations, HWIO weights (the TPU-native layouts).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "block"))
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    block: int = 128,
+) -> jax.Array:
+    """2-D convolution, NHWC x HWIO -> NHWC, via im2col + Pallas GEMM."""
+    if x.ndim != 4 or w.ndim != 4:
+        raise ValueError(f"conv2d expects NHWC x HWIO, got {x.shape} x {w.shape}")
+    n, h, wi, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    if cin != wcin:
+        raise ValueError(f"channel mismatch: {cin} vs {wcin}")
+
+    # Patch extraction: (N, Ho, Wo, KH*KW*Cin). conv_general_dilated_patches
+    # emits channel-major patches (Cin * KH * KW), so the weight reshape
+    # below must match that ordering.
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    _, ho, wo, psize = patches.shape
+    assert psize == cin * kh * kw
+
+    # GEMM: (N*Ho*Wo, Cin*KH*KW) @ (Cin*KH*KW, Cout)
+    lhs = patches.reshape(n * ho * wo, psize)
+    rhs = jnp.transpose(w, (2, 0, 1, 3)).reshape(psize, cout)  # HWIO -> (Cin,KH,KW),O
+    out = matmul(lhs, rhs, block=block)
+    return out.reshape(n, ho, wo, cout)
+
+
+def conv2d_flops(x_shape, w_shape, stride: int = 1, padding: str = "SAME") -> int:
+    """Analytic MAC->FLOP count, used by the rust power model via manifest."""
+    n, h, w, cin = x_shape
+    kh, kw, _, cout = w_shape
+    if padding == "SAME":
+        ho, wo = -(-h // stride), -(-w // stride)
+    else:
+        ho, wo = (h - kh) // stride + 1, (w - kw) // stride + 1
+    return 2 * n * ho * wo * kh * kw * cin * cout

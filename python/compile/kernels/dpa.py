@@ -1,0 +1,91 @@
+"""Dot-Product-Accumulate Pallas kernels (paper Fig. 5 DPA2 / DPA4).
+
+The paper measures the AVX-VNNI dot-product-accumulate instructions:
+
+  DPA2:  c_i32/f32 += sum_{s=1..2} a_s(i16|bf16) * b_s(i16|bf16)
+  DPA4:  c_i32     += sum_{s=1..4} a_s(i8)       * b_s(i8)
+
+On the Pallas/TPU side the natural equivalent is a widening matmul:
+low-precision operands (bf16 / int8) multiplied and accumulated into a
+wide accumulator (f32 / int32) — exactly what the MXU does natively for
+bf16 and what int8 matmul units do on inference accelerators. The grid /
+BlockSpec schedule is identical to the f32 matmul kernel; only the
+element types and the ``preferred_element_type`` widening differ.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import DEFAULT_BLOCK, _ceil_to, _pad_to
+
+
+def _dpa2_kernel(x_ref, y_ref, o_ref):
+    """bf16 x bf16 -> f32 accumulate (DPA2's bf16 flavour)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _dpa4_kernel(x_ref, y_ref, o_ref):
+    """int8 x int8 -> int32 accumulate (DPA4)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.int32
+    )
+
+
+def _blocked(kernel, x, y, out_dtype, block):
+    m, k = x.shape
+    _, n = y.shape
+    bm = min(block, _ceil_to(m, 8))
+    bn = min(block, _ceil_to(n, 8))
+    bk = min(block, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad_to(x, mp, kp)
+    yp = _pad_to(y, kp, np_)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dpa2_matmul(x: jax.Array, y: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """DPA2-equivalent: bf16 operands, f32 accumulation."""
+    if x.shape[1] != y.shape[0]:
+        raise ValueError(f"dpa2 shape mismatch: {x.shape} x {y.shape}")
+    return _blocked(
+        _dpa2_kernel, x.astype(jnp.bfloat16), y.astype(jnp.bfloat16), jnp.float32, block
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dpa4_matmul(x: jax.Array, y: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """DPA4-equivalent: int8 operands, int32 accumulation."""
+    if x.shape[1] != y.shape[0]:
+        raise ValueError(f"dpa4 shape mismatch: {x.shape} x {y.shape}")
+    if x.dtype != jnp.int8 or y.dtype != jnp.int8:
+        raise TypeError("dpa4_matmul expects int8 operands")
+    return _blocked(_dpa4_kernel, x, y, jnp.int32, block)

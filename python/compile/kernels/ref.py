@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+No pallas imports here: everything is standard jax.numpy / lax so that a
+kernel bug cannot be masked by sharing code with the implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dpa2_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """bf16 x bf16 -> f32, matching the kernel's operand rounding."""
+    return jnp.dot(
+        x.astype(jnp.bfloat16), y.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dpa4_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 (exact)."""
+    return jnp.dot(x, y, preferred_element_type=jnp.int32)
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, *, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """NHWC x HWIO conv via lax.conv_general_dilated (XLA's own conv)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

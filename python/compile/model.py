@@ -1,0 +1,188 @@
+"""Layer-2 jax models: the compute payloads DALEK jobs execute.
+
+Each payload is a pure jax function built on the L1 pallas kernels. The
+registry at the bottom gives the AOT driver everything it needs: the
+function, concrete example shapes (PJRT AOT requires static shapes), and
+an analytic FLOP count that the rust power model uses to convert measured
+execution into simulated watts.
+
+Payloads mirror the paper's §6 use cases:
+  * cnn_small / cnn_tiny — CNN convolution benchmarking on energy-
+    constrained CPUs (Galvez et al., DP2E-AI'25);
+  * gemm256 / gemm512 — the dense-kernel building block of the Fig. 5/7
+    peak-performance studies;
+  * dpa2_gemm / dpa4_gemm — the VNNI dot-product-accumulate payloads;
+  * mlp_infer — a small inference chain for the heterogeneous-scheduling
+    use case (Orhan et al., HCW'25: partially-replicable task chains).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, dpa2_matmul, dpa4_matmul, matmul
+from .kernels.conv2d import conv2d_flops
+
+
+def _init(key: jax.Array, *shape: int, scale: float = 0.1) -> jax.Array:
+    """Deterministic weight init — weights are baked into the HLO as
+    constants so the rust side only feeds activations."""
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# CNN payload (conv -> relu stack -> global average pool -> dense logits)
+# ---------------------------------------------------------------------------
+
+def _cnn_weights(channels: Sequence[int], cin: int, nclass: int):
+    keys = jax.random.split(jax.random.PRNGKey(0x0DA1EC), len(channels) + 1)
+    ws, prev = [], cin
+    for k, c in zip(keys[:-1], channels):
+        ws.append(_init(k, 3, 3, prev, c))
+        prev = c
+    dense = _init(keys[-1], prev, nclass)
+    return ws, dense
+
+
+def make_cnn(channels: Sequence[int], cin: int = 3, nclass: int = 10) -> Callable:
+    ws, dense = _cnn_weights(channels, cin, nclass)
+
+    def cnn(x: jax.Array):
+        """x: (N, H, W, Cin) f32 -> (N, nclass) logits."""
+        h = x
+        for i, w in enumerate(ws):
+            stride = 2 if i > 0 else 1  # downsample after the stem
+            h = conv2d(h, w, stride=stride, padding="SAME")
+            h = jax.nn.relu(h)
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        return (matmul(h, dense),)
+
+    return cnn
+
+
+def cnn_flops(x_shape, channels: Sequence[int], cin: int = 3, nclass: int = 10) -> int:
+    n, h, w, _ = x_shape
+    total, prev, hh, ww = 0, cin, h, w
+    for i, c in enumerate(channels):
+        stride = 2 if i > 0 else 1
+        total += conv2d_flops((n, hh, ww, prev), (3, 3, prev, c), stride=stride)
+        hh, ww, prev = -(-hh // stride), -(-ww // stride), c
+    total += 2 * n * prev * nclass
+    return total
+
+
+# ---------------------------------------------------------------------------
+# GEMM / DPA payloads
+# ---------------------------------------------------------------------------
+
+def gemm(x: jax.Array, y: jax.Array):
+    """Plain f32 GEMM through the pallas kernel (Fig. 5 FMA f32 analogue)."""
+    return (matmul(x, y),)
+
+
+def dpa2_gemm(x: jax.Array, y: jax.Array):
+    """bf16->f32 widening GEMM (Fig. 5 DPA2 analogue)."""
+    return (dpa2_matmul(x, y),)
+
+
+def dpa4_gemm(x: jax.Array, y: jax.Array):
+    """int8->int32 widening GEMM (Fig. 5 DPA4 analogue)."""
+    return (dpa4_matmul(x, y),)
+
+
+# ---------------------------------------------------------------------------
+# MLP inference chain (heterogeneous-scheduling task-chain payload)
+# ---------------------------------------------------------------------------
+
+def make_mlp(sizes: Sequence[int]) -> Callable:
+    keys = jax.random.split(jax.random.PRNGKey(0xA11CE), len(sizes) - 1)
+    ws = [_init(k, a, b) for k, a, b in zip(keys, sizes[:-1], sizes[1:])]
+
+    def mlp(x: jax.Array):
+        h = x
+        for w in ws[:-1]:
+            h = jax.nn.relu(matmul(h, w))
+        return (matmul(h, ws[-1]),)
+
+    return mlp
+
+
+def mlp_flops(batch: int, sizes: Sequence[int]) -> int:
+    return sum(2 * batch * a * b for a, b in zip(sizes[:-1], sizes[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Payload registry (consumed by aot.py and mirrored in artifacts/manifest.json)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Payload:
+    name: str
+    fn: Callable
+    # (shape, dtype) per runtime input argument
+    inputs: tuple
+    flops: int
+    description: str
+
+
+_CNN_SMALL_IN = (8, 32, 32, 3)
+_CNN_TINY_IN = (1, 16, 16, 3)
+_MLP_SIZES = (256, 512, 512, 64)
+
+PAYLOADS = [
+    Payload(
+        name="cnn_small",
+        fn=make_cnn((16, 32, 64)),
+        inputs=(((_CNN_SMALL_IN), "f32"),),
+        flops=cnn_flops(_CNN_SMALL_IN, (16, 32, 64)),
+        description="3-layer CNN forward, batch 8, 32x32x3 (Galvez use case)",
+    ),
+    Payload(
+        name="cnn_tiny",
+        fn=make_cnn((8, 16)),
+        inputs=(((_CNN_TINY_IN), "f32"),),
+        flops=cnn_flops(_CNN_TINY_IN, (8, 16)),
+        description="2-layer CNN forward, batch 1, 16x16x3 (latency probe)",
+    ),
+    Payload(
+        name="gemm256",
+        fn=gemm,
+        inputs=(((256, 256), "f32"), ((256, 256), "f32")),
+        flops=2 * 256**3,
+        description="256^3 f32 GEMM via pallas kernel (FMA f32 payload)",
+    ),
+    Payload(
+        name="gemm512",
+        fn=gemm,
+        inputs=(((512, 512), "f32"), ((512, 512), "f32")),
+        flops=2 * 512**3,
+        description="512^3 f32 GEMM via pallas kernel (sustained-load payload)",
+    ),
+    Payload(
+        name="dpa2_gemm256",
+        fn=dpa2_gemm,
+        inputs=(((256, 256), "f32"), ((256, 256), "f32")),
+        flops=2 * 256**3,
+        description="bf16->f32 widening GEMM (DPA2 payload)",
+    ),
+    Payload(
+        name="dpa4_gemm256",
+        fn=dpa4_gemm,
+        inputs=(((256, 256), "i8"), ((256, 256), "i8")),
+        flops=2 * 256**3,
+        description="int8->int32 widening GEMM (DPA4 payload)",
+    ),
+    Payload(
+        name="mlp_infer",
+        fn=make_mlp(_MLP_SIZES),
+        inputs=(((32, 256), "f32"),),
+        flops=mlp_flops(32, _MLP_SIZES),
+        description="3-layer MLP inference, batch 32 (task-chain payload)",
+    ),
+]
+
+PAYLOADS_BY_NAME = {p.name: p for p in PAYLOADS}

@@ -1,0 +1,196 @@
+"""L1 kernel correctness: pallas kernels vs pure-jnp oracles.
+
+Fixed-shape smoke tests plus hypothesis sweeps over shapes/dtypes — the
+core correctness signal for everything the rust runtime later executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, dpa2_matmul, dpa4_matmul, matmul
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32).astype(
+        dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    def test_square_block_multiple(self):
+        x, y = _rand(0, 256, 256), _rand(1, 256, 256)
+        np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_rectangular(self):
+        x, y = _rand(2, 96, 200), _rand(3, 200, 48)
+        np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_needs_padding(self):
+        # every dim prime => exercises the pad/slice path
+        x, y = _rand(4, 97, 131), _rand(5, 131, 53)
+        np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_single_row_col(self):
+        x, y = _rand(6, 1, 64), _rand(7, 64, 1)
+        np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_small_block(self):
+        x, y = _rand(8, 64, 64), _rand(9, 64, 64)
+        np.testing.assert_allclose(
+            matmul(x, y, block=16), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+        )
+
+    def test_identity(self):
+        x = _rand(10, 32, 32)
+        np.testing.assert_allclose(
+            matmul(x, jnp.eye(32)), x, rtol=1e-5, atol=1e-6
+        )
+
+    def test_zeros(self):
+        x = _rand(11, 40, 24)
+        out = matmul(x, jnp.zeros((24, 8)))
+        assert out.shape == (40, 8)
+        np.testing.assert_array_equal(out, jnp.zeros((40, 8)))
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            matmul(_rand(12, 4, 5), _rand(13, 6, 4))
+
+    @settings(**_SETTINGS)
+    @given(
+        m=st.integers(1, 150),
+        k=st.integers(1, 150),
+        n=st.integers(1, 150),
+        block=st.sampled_from([16, 32, 128]),
+    )
+    def test_hypothesis_shapes(self, m, k, n, block):
+        x, y = _rand(m * 7 + n, m, k), _rand(k * 3 + 1, k, n)
+        got, want = matmul(x, y, block=block), ref.matmul_ref(x, y)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# DPA kernels
+# ---------------------------------------------------------------------------
+
+class TestDpa2:
+    def test_basic(self):
+        x, y = _rand(20, 128, 128), _rand(21, 128, 128)
+        np.testing.assert_allclose(
+            dpa2_matmul(x, y), ref.dpa2_ref(x, y), rtol=2e-2
+        )
+
+    def test_accumulator_is_f32(self):
+        x, y = _rand(22, 64, 512), _rand(23, 512, 64)
+        out = dpa2_matmul(x, y)
+        assert out.dtype == jnp.float32
+        # bf16 operands, f32 accumulate: must be close to the bf16 oracle
+        np.testing.assert_allclose(out, ref.dpa2_ref(x, y), rtol=2e-2)
+
+    @settings(**_SETTINGS)
+    @given(m=st.integers(1, 100), k=st.integers(1, 100), n=st.integers(1, 100))
+    def test_hypothesis_shapes(self, m, k, n):
+        x, y = _rand(m + 2 * k, m, k), _rand(n + 3 * k, k, n)
+        got, want = dpa2_matmul(x, y), ref.dpa2_ref(x, y)
+        assert got.shape == want.shape and got.dtype == jnp.float32
+        np.testing.assert_allclose(got, want, rtol=3e-2, atol=1e-2)
+
+
+class TestDpa4:
+    @staticmethod
+    def _randi8(key, *shape):
+        return jax.random.randint(
+            jax.random.PRNGKey(key), shape, -128, 128, dtype=jnp.int8
+        )
+
+    def test_exact(self):
+        x, y = self._randi8(30, 128, 128), self._randi8(31, 128, 128)
+        np.testing.assert_array_equal(dpa4_matmul(x, y), ref.dpa4_ref(x, y))
+
+    def test_extremes_no_overflow(self):
+        # -128 * -128 * 256 accumulations fits int32 — verify exactness there
+        x = jnp.full((16, 256), -128, dtype=jnp.int8)
+        y = jnp.full((256, 16), -128, dtype=jnp.int8)
+        out = dpa4_matmul(x, y)
+        np.testing.assert_array_equal(out, jnp.full((16, 16), 128 * 128 * 256, jnp.int32))
+
+    def test_rejects_non_int8(self):
+        with pytest.raises(TypeError):
+            dpa4_matmul(_rand(32, 8, 8), _rand(33, 8, 8))
+
+    @settings(**_SETTINGS)
+    @given(m=st.integers(1, 80), k=st.integers(1, 80), n=st.integers(1, 80))
+    def test_hypothesis_exact(self, m, k, n):
+        x, y = self._randi8(m + k, m, k), self._randi8(n + 5 * k, k, n)
+        got, want = dpa4_matmul(x, y), ref.dpa4_ref(x, y)
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+class TestConv2d:
+    def test_same_padding_stride1(self):
+        x, w = _rand(40, 2, 16, 16, 3), _rand(41, 3, 3, 3, 8)
+        np.testing.assert_allclose(
+            conv2d(x, w), ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-5
+        )
+
+    def test_stride2(self):
+        x, w = _rand(42, 2, 16, 16, 4), _rand(43, 3, 3, 4, 8)
+        np.testing.assert_allclose(
+            conv2d(x, w, stride=2), ref.conv2d_ref(x, w, stride=2), rtol=1e-4, atol=1e-5
+        )
+
+    def test_valid_padding(self):
+        x, w = _rand(44, 1, 12, 12, 2), _rand(45, 3, 3, 2, 4)
+        np.testing.assert_allclose(
+            conv2d(x, w, padding="VALID"),
+            ref.conv2d_ref(x, w, padding="VALID"),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_1x1_conv(self):
+        x, w = _rand(46, 2, 8, 8, 16), _rand(47, 1, 1, 16, 4)
+        np.testing.assert_allclose(
+            conv2d(x, w), ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-5
+        )
+
+    def test_channel_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            conv2d(_rand(48, 1, 8, 8, 3), _rand(49, 3, 3, 4, 8))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 3),
+        hw=st.integers(4, 20),
+        cin=st.integers(1, 8),
+        cout=st.integers(1, 8),
+        k=st.sampled_from([1, 3, 5]),
+        stride=st.sampled_from([1, 2]),
+        padding=st.sampled_from(["SAME", "VALID"]),
+    )
+    def test_hypothesis_conv(self, n, hw, cin, cout, k, stride, padding):
+        if padding == "VALID" and hw < k:
+            return
+        x, w = _rand(n * hw + cin, n, hw, hw, cin), _rand(cout * k, k, k, cin, cout)
+        got = conv2d(x, w, stride=stride, padding=padding)
+        want = ref.conv2d_ref(x, w, stride=stride, padding=padding)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,112 @@
+"""L2 model tests: payload shapes, determinism, flops accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    PAYLOADS,
+    PAYLOADS_BY_NAME,
+    cnn_flops,
+    make_cnn,
+    make_mlp,
+    mlp_flops,
+)
+from compile.kernels.conv2d import conv2d_flops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestCnn:
+    def test_output_shape(self):
+        cnn = make_cnn((8, 16), cin=3, nclass=10)
+        (out,) = cnn(jnp.ones((2, 16, 16, 3)))
+        assert out.shape == (2, 10)
+
+    def test_deterministic_weights(self):
+        a = make_cnn((8,))(jnp.ones((1, 8, 8, 3)))[0]
+        b = make_cnn((8,))(jnp.ones((1, 8, 8, 3)))[0]
+        np.testing.assert_array_equal(a, b)
+
+    def test_batch_independence(self):
+        """Each batch row is processed independently (pure conv/pool/dense)."""
+        cnn = make_cnn((8,))
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 8, 3))
+        full = cnn(x)[0]
+        row2 = cnn(x[2:3])[0]
+        np.testing.assert_allclose(full[2:3], row2, rtol=1e-4, atol=1e-5)
+
+    def test_logits_finite(self):
+        cnn = make_cnn((16, 32, 64))
+        (out,) = cnn(jax.random.normal(jax.random.PRNGKey(1), (8, 32, 32, 3)))
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+class TestMlp:
+    def test_output_shape(self):
+        mlp = make_mlp((256, 512, 64))
+        (out,) = mlp(jnp.ones((8, 256)))
+        assert out.shape == (8, 64)
+
+    def test_relu_nonlinearity_present(self):
+        """MLP must not be an odd linear map: f(-x) != -f(x).
+        (ReLU is positively homogeneous, so f(2x) == 2 f(x) would NOT
+        detect the nonlinearity — negation does.)"""
+        mlp = make_mlp((16, 32, 8))
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+        y1, y2 = mlp(x)[0], mlp(-x)[0]
+        assert not np.allclose(np.asarray(y2), -np.asarray(y1), rtol=1e-3)
+
+
+class TestFlops:
+    def test_conv_flops_same(self):
+        # 2 * N*Ho*Wo*KH*KW*Cin*Cout
+        got = conv2d_flops((1, 8, 8, 3), (3, 3, 3, 4), stride=1, padding="SAME")
+        assert got == 2 * 1 * 8 * 8 * 3 * 3 * 3 * 4
+
+    def test_conv_flops_stride2(self):
+        got = conv2d_flops((1, 8, 8, 3), (3, 3, 3, 4), stride=2, padding="SAME")
+        assert got == 2 * 1 * 4 * 4 * 3 * 3 * 3 * 4
+
+    def test_conv_flops_valid(self):
+        got = conv2d_flops((1, 8, 8, 1), (3, 3, 1, 1), stride=1, padding="VALID")
+        assert got == 2 * 6 * 6 * 9
+
+    def test_mlp_flops(self):
+        assert mlp_flops(4, (8, 16, 2)) == 2 * 4 * (8 * 16 + 16 * 2)
+
+    def test_cnn_flops_positive_and_monotone(self):
+        small = cnn_flops((1, 16, 16, 3), (8,))
+        big = cnn_flops((1, 32, 32, 3), (8,))
+        assert 0 < small < big
+
+
+class TestRegistry:
+    def test_unique_names(self):
+        names = [p.name for p in PAYLOADS]
+        assert len(names) == len(set(names))
+
+    def test_by_name_index(self):
+        for p in PAYLOADS:
+            assert PAYLOADS_BY_NAME[p.name] is p
+
+    def test_all_have_positive_flops(self):
+        for p in PAYLOADS:
+            assert p.flops > 0, p.name
+
+    @pytest.mark.parametrize("p", PAYLOADS, ids=lambda p: p.name)
+    def test_payload_executes_at_example_shapes(self, p):
+        args = []
+        for shape, dt in p.inputs:
+            if dt == "i8":
+                args.append(
+                    jax.random.randint(jax.random.PRNGKey(3), shape, -10, 10).astype(
+                        jnp.int8
+                    )
+                )
+            else:
+                args.append(jax.random.normal(jax.random.PRNGKey(4), shape))
+        outs = p.fn(*args)
+        assert isinstance(outs, tuple) and len(outs) == 1
+        assert bool(jnp.all(jnp.isfinite(outs[0].astype(jnp.float32))))

@@ -1,0 +1,77 @@
+//! Bench: the end-to-end stack (experiment E2E) — trace replay with and
+//! without 1 kSPS energy sampling, plus the PJRT payload path when
+//! artifacts are available.
+
+use dalek::config::ClusterConfig;
+use dalek::coordinator::{trace, Cluster};
+use dalek::util::benchkit;
+
+fn main() {
+    println!("=== end-to-end cluster replay ===\n");
+
+    let make_trace = |n: usize| {
+        let mut gen = trace::TraceGen::dalek_mix(0xE2E);
+        gen.payloads.clear();
+        gen.generate(n)
+    };
+
+    let tr = make_trace(100);
+    let r = benchkit::bench("e2e/replay(100 jobs, sampling OFF)", 1, 10, || {
+        let mut c = Cluster::new(ClusterConfig::dalek_default(), None).expect("cluster");
+        let rep = trace::replay(&mut c, &tr, false);
+        assert_eq!(rep.completed + rep.timeouts, 100);
+        std::hint::black_box(rep.true_energy_j);
+    });
+    let sim_secs = {
+        let mut c = Cluster::new(ClusterConfig::dalek_default(), None).expect("cluster");
+        trace::replay(&mut c, &tr, false).makespan.as_secs_f64()
+    };
+    println!(
+        "simulated {:.1} h of cluster time; speedup {:.0}x\n",
+        sim_secs / 3600.0,
+        sim_secs / (r.summary.p50 / 1e9)
+    );
+
+    let tr20 = make_trace(20);
+    let r = benchkit::bench("e2e/replay(20 jobs, sampling ON @1 kSPS x16 nodes)", 1, 3, || {
+        let mut c = Cluster::new(ClusterConfig::dalek_default(), None).expect("cluster");
+        let rep = trace::replay(&mut c, &tr20, true);
+        std::hint::black_box(rep.measured_energy_j);
+    });
+    let (samples, sim_secs) = {
+        let mut c = Cluster::new(ClusterConfig::dalek_default(), None).expect("cluster");
+        let rep = trace::replay(&mut c, &tr20, true);
+        (c.report().samples, rep.makespan.as_secs_f64())
+    };
+    println!(
+        "probe samples generated: {:.1} M over {:.1} h sim; samples/s: {:.1} M\n",
+        samples as f64 / 1e6,
+        sim_secs / 3600.0,
+        benchkit::per_sec(&r, samples as f64) / 1e6
+    );
+
+    // PJRT payload path (only when `make artifacts` has run)
+    let dir = "artifacts";
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        let mut rt = dalek::runtime::PjRtRuntime::load(dir).expect("runtime");
+        rt.compile("gemm256").expect("compile");
+        let r = benchkit::bench("pjrt/execute(gemm256, 2*256^3 FLOP)", 3, 30, || {
+            let rep = rt.execute("gemm256", 1).expect("exec");
+            std::hint::black_box(rep.output_sum);
+        });
+        println!(
+            "achieved on host CPU: {:.2} GFLOP/s",
+            2.0 * 256.0f64.powi(3) / (r.summary.p50 / 1e9) / 1e9
+        );
+        let r = benchkit::bench("pjrt/execute(cnn_small fwd, batch 8)", 3, 30, || {
+            let rep = rt.execute("cnn_small", 1).expect("exec");
+            std::hint::black_box(rep.output_sum);
+        });
+        println!(
+            "CNN images/s: {:.0}",
+            benchkit::per_sec(&r, 8.0)
+        );
+    } else {
+        println!("(artifacts missing — PJRT payload benches skipped; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,64 @@
+//! Bench: the §4 energy measurement platform — sampling-rate knee
+//! (1000 SPS × 6 probes per I2C chain) and the sample-path hot loop
+//! (the perf target: tens of millions of generated samples per second,
+//! so day-long 1 kSPS cluster traces simulate in seconds).
+
+use dalek::energy::bus::I2cBus;
+use dalek::energy::{Ina228Probe, ProbeConfig};
+use dalek::sim::SimTime;
+use dalek::util::{benchkit, Table, Xoshiro256};
+
+fn main() {
+    println!("=== §4 — energy measurement platform ===\n");
+
+    // the paper's arbitration table: effective SPS vs probes on a chain
+    let mut t = Table::new(&["probes", "req 1000 SPS", "req 2000 SPS", "req 4000 SPS"])
+        .title("effective per-probe SPS after I2C arbitration");
+    for n in 1..=6usize {
+        let mut bus = I2cBus::new();
+        for i in 0..n {
+            bus.attach(i as u8).expect("≤6");
+        }
+        t.row(&[
+            n.to_string(),
+            format!("{:.0}", bus.effective_sps(1000.0)),
+            format!("{:.0}", bus.effective_sps(2000.0)),
+            format!("{:.0}", bus.effective_sps(4000.0)),
+        ]);
+    }
+    t.print();
+
+    // resolution check: mW quantization on a known signal
+    let mut probe = Ina228Probe::new(0, ProbeConfig::default(), Xoshiro256::new(7));
+    let samples = probe.sample_until(&|_t: SimTime| 123.4567, SimTime::from_secs(1), 0);
+    let mean: f64 = samples.iter().map(|s| s.power_w).sum::<f64>() / samples.len() as f64;
+    println!(
+        "\n1 s @ 123.4567 W: {} samples, mean {:.4} W (err {:+.2} mW), all mW-quantized",
+        samples.len(),
+        mean,
+        (mean - 123.4567) * 1e3
+    );
+
+    println!("\n--- sample-path timing ---");
+    let r = benchkit::bench("probe/sample_until(1 s @ 1000 SPS)", 3, 50, || {
+        let mut p = Ina228Probe::new(0, ProbeConfig::default(), Xoshiro256::new(1));
+        let s = p.sample_until(&|_t: SimTime| 100.0, SimTime::from_secs(1), 0);
+        std::hint::black_box(s.len());
+    });
+    // 4000 ADC conversions -> 1000 samples per iteration
+    println!(
+        "ADC conversions/s: {:.2} M   reported samples/s: {:.2} M",
+        benchkit::per_sec(&r, 4000.0) / 1e6,
+        benchkit::per_sec(&r, 1000.0) / 1e6
+    );
+
+    let r = benchkit::bench("probe/sample_until(60 s @ 1000 SPS)", 1, 10, || {
+        let mut p = Ina228Probe::new(0, ProbeConfig::default(), Xoshiro256::new(1));
+        let s = p.sample_until(&|_t: SimTime| 100.0, SimTime::from_secs(60), 0);
+        std::hint::black_box(s.len());
+    });
+    println!(
+        "sustained reported samples/s: {:.2} M",
+        benchkit::per_sec(&r, 60_000.0) / 1e6
+    );
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Fig. 4 (CPU memory bandwidth) and time the
+//! executor (the fig4 sweep is also a hot path of `dalek bench all`).
+
+use dalek::bench::membw;
+use dalek::hw::CacheLevel;
+use dalek::util::benchkit;
+
+fn main() {
+    println!("=== Fig. 4 — CPU memory throughput (bandwidth benchmark) ===\n");
+    let points = membw::run_all(0xDA1EC, true);
+    for lvl in [CacheLevel::L1, CacheLevel::L2, CacheLevel::L3, CacheLevel::Ram] {
+        membw::render(&points, lvl).print();
+        println!();
+    }
+    println!("--- executor timing ---");
+    let r = benchkit::bench("fig4/run_all(4 CPUs, 6 kernels, 19 sizes)", 3, 30, || {
+        let p = membw::run_all(1, true);
+        std::hint::black_box(p.len());
+    });
+    println!(
+        "points/s: {:.0}\n",
+        benchkit::per_sec(&r, points.len() as f64)
+    );
+}

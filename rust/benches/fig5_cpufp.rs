@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Fig. 5 (CPU peak op/s, cpufp).
+
+use dalek::bench::cpufp;
+use dalek::util::benchkit;
+
+fn main() {
+    println!("=== Fig. 5 — CPU peak performance (cpufp) ===\n");
+    let points = cpufp::run_all(0xDA1EC, true);
+    for m in cpufp::Mode::ALL {
+        cpufp::render(&points, m).print();
+        println!();
+    }
+    println!("--- executor timing ---");
+    benchkit::bench("fig5/run_all(4 CPUs x 4 instrs x 3 modes)", 3, 50, || {
+        let p = cpufp::run_all(1, true);
+        std::hint::black_box(p.len());
+    });
+}

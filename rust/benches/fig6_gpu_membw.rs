@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig. 6 (GPU global-memory bandwidth, clpeak).
+
+use dalek::bench::clpeak;
+use dalek::util::benchkit;
+
+fn main() {
+    println!("=== Fig. 6 — GPU global memory throughput (clpeak copy) ===\n");
+    clpeak::render_gmem(&clpeak::run_all_gmem(0xDA1EC, true)).print();
+    println!("\n--- executor timing ---");
+    benchkit::bench("fig6/run_all(7 GPUs x 5 pack widths)", 3, 100, || {
+        let p = clpeak::run_all_gmem(1, true);
+        std::hint::black_box(p.len());
+    });
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig. 7 (GPU peak op/s per dtype, clpeak).
+
+use dalek::bench::clpeak;
+use dalek::util::benchkit;
+
+fn main() {
+    println!("=== Fig. 7 — GPU peak op/s (clpeak mad kernels) ===\n");
+    clpeak::render_ops(&clpeak::run_all_ops(0xDA1EC, true)).print();
+    println!("\n--- executor timing ---");
+    benchkit::bench("fig7/run_all(7 GPUs x 6 dtypes)", 3, 100, || {
+        let p = clpeak::run_all_ops(1, true);
+        std::hint::black_box(p.len());
+    });
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Fig. 8 (GPU kernel-launch latency) — 10k
+//! simulated launches per GPU, jitter + tail modeling included.
+
+use dalek::bench::latency;
+use dalek::util::benchkit;
+
+fn main() {
+    println!("=== Fig. 8 — GPU kernel launch latency (OpenCL) ===\n");
+    latency::render(&latency::run_all(0xDA1EC, 10_000)).print();
+    println!("\n--- executor timing ---");
+    let r = benchkit::bench("fig8/run_all(7 GPUs x 10k launches)", 2, 20, || {
+        let p = latency::run_all(1, 10_000);
+        std::hint::black_box(p.len());
+    });
+    println!(
+        "simulated launches/s: {:.0}",
+        benchkit::per_sec(&r, 5.0 * 10_000.0)
+    );
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig. 9 (SSD throughput, dd/iozone).
+
+use dalek::bench::ssd;
+use dalek::util::benchkit;
+
+fn main() {
+    println!("=== Fig. 9 — SSD throughput ===\n");
+    ssd::render(&ssd::run_all(0xDA1EC, true)).print();
+    println!("\n--- executor timing ---");
+    benchkit::bench("fig9/run_all(3 SSDs x 4 patterns)", 3, 100, || {
+        let p = ssd::run_all(1, true);
+        std::hint::black_box(p.len());
+    });
+}

@@ -1,0 +1,74 @@
+//! Bench: the SLURM controller hot paths — submission + scheduling
+//! throughput, the suspend/resume machinery, and the event queue.
+//! Perf target (DESIGN.md §6): simulate a 24 h cluster day ≪ real time.
+
+use dalek::config::ClusterConfig;
+use dalek::power::Activity;
+use dalek::sim::{EventQueue, SimTime};
+use dalek::slurm::{JobSpec, Slurm};
+use dalek::util::benchkit;
+
+fn day_of_jobs(n: u64) -> Vec<(SimTime, JobSpec)> {
+    (0..n)
+        .map(|i| {
+            let part = ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"][(i % 4) as usize];
+            let spec = JobSpec {
+                user: format!("u{}", i % 5),
+                partition: part.into(),
+                nodes: 1 + (i % 4) as u32,
+                duration: SimTime::from_secs(60 + (i % 7) * 45),
+                time_limit: SimTime::from_mins(30),
+                payload: None,
+                activity: Activity::cpu_only(0.9),
+            };
+            (SimTime::from_secs(i * 97), spec)
+        })
+        .collect()
+}
+
+fn main() {
+    println!("=== scheduler / event-queue hot paths ===\n");
+
+    let jobs = day_of_jobs(800); // ~21 h of arrivals at ~97 s spacing
+    let r = benchkit::bench("slurm/day(800 jobs, 16 nodes, suspend ON)", 1, 10, || {
+        let mut s = Slurm::from_config(&ClusterConfig::dalek_default());
+        for (at, spec) in &jobs {
+            s.submit_at(spec.clone(), *at).expect("valid");
+        }
+        s.run_to_idle();
+        assert_eq!(s.stats.completed, 800);
+        std::hint::black_box(s.total_energy_j());
+    });
+    println!(
+        "simulated-day speedup vs wall clock: {:.0}x   jobs/s: {:.0}\n",
+        24.0 * 3600.0 / (r.summary.p50 / 1e9),
+        benchkit::per_sec(&r, 800.0)
+    );
+
+    let r = benchkit::bench("eventqueue/schedule+pop 100k", 2, 20, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..100_000u64 {
+            q.schedule_at(SimTime::from_ns(i * 13 % 1_000_000), i);
+        }
+        let mut acc = 0u64;
+        while let Some((_, e)) = q.pop() {
+            acc ^= e;
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "events/s: {:.1} M\n",
+        benchkit::per_sec(&r, 200_000.0) / 1e6
+    );
+
+    benchkit::bench("eventqueue/cancel-heavy (50k timers, all cancelled)", 2, 20, || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let ids: Vec<_> = (0..50_000u32)
+            .map(|i| q.schedule_at(SimTime::from_secs(600 + i as u64), i))
+            .collect();
+        for id in ids {
+            q.cancel(id);
+        }
+        assert!(q.pop().is_none());
+    });
+}

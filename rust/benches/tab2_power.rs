@@ -1,0 +1,37 @@
+//! Bench: regenerate paper Table 2 (resource & power accounting) and
+//! verify the Total row against the paper's printed values.
+
+use dalek::bench::tables;
+use dalek::hw::Catalog;
+use dalek::util::benchkit;
+
+fn main() {
+    println!("=== Table 2 — resources & power ===\n");
+    let catalog = Catalog::dalek();
+    tables::table2(&catalog).print();
+
+    let total = catalog.account_total();
+    let checks = [
+        ("nodes", total.nodes as f64, 21.0),
+        ("cpu cores", total.cpu_cores as f64, 270.0),
+        ("cpu threads", total.cpu_threads as f64, 476.0),
+        ("ram GB", total.ram_gb as f64, 1136.0),
+        ("iGPU cores", total.igpu_cores as f64, 9984.0),
+        ("dGPU cores", total.dgpu_cores as f64, 106_496.0),
+        ("VRAM GB", total.vram_gb as f64, 256.0),
+        ("idle W", total.idle_w, 727.0),
+        ("suspend W", total.suspend_w, 112.0),
+        ("TDP W", total.tdp_w, 5427.0),
+    ];
+    println!("\npaper-vs-model Total row:");
+    for (name, got, want) in checks {
+        let ok = (got - want).abs() < 1e-9;
+        println!("  {name:<12} model={got:<9} paper={want:<9} {}", if ok { "OK" } else { "MISMATCH" });
+        assert!(ok, "{name}");
+    }
+    println!("\n--- accounting timing ---");
+    benchkit::bench("tab2/account_total", 10, 200, || {
+        let c = Catalog::dalek();
+        std::hint::black_box(c.account_total());
+    });
+}

@@ -1,0 +1,270 @@
+//! Fig. 6 + Fig. 7 executor: GPU global-memory bandwidth (clpeak copy
+//! kernel, packed float32xN) and GPU peak compute (mad kernels per
+//! dtype, log-scale in the paper).
+
+use crate::hw::gpu::{GpuDtype, GpuModel, PackWidth};
+use crate::util::{Table, Xoshiro256};
+
+use super::Noise;
+
+/// One Fig. 6 point.
+#[derive(Clone, Debug)]
+pub struct GmemPoint {
+    pub gpu: &'static str,
+    pub kind: crate::hw::GpuKind,
+    pub pack: PackWidth,
+    pub gbps: f64,
+}
+
+/// One Fig. 7 point.
+#[derive(Clone, Debug)]
+pub struct OpsPoint {
+    pub gpu: &'static str,
+    pub dtype: GpuDtype,
+    pub gops: f64,
+}
+
+/// Fig. 6 for one GPU.
+pub fn run_gmem(gpu: &GpuModel, noise: &mut Noise) -> Vec<GmemPoint> {
+    PackWidth::ALL
+        .iter()
+        .map(|&pack| GmemPoint {
+            gpu: gpu.product,
+            kind: gpu.kind,
+            pack,
+            gbps: noise.apply(gpu.gmem_copy_bw(pack)) / 1e9,
+        })
+        .collect()
+}
+
+/// Fig. 7 for one GPU.
+pub fn run_ops(gpu: &GpuModel, noise: &mut Noise) -> Vec<OpsPoint> {
+    GpuDtype::ALL
+        .iter()
+        .map(|&dtype| OpsPoint {
+            gpu: gpu.product,
+            dtype,
+            gops: noise.apply(gpu.peak_ops(dtype)) / 1e9,
+        })
+        .collect()
+}
+
+pub fn run_all_gmem(seed: u64, noisy: bool) -> Vec<GmemPoint> {
+    let catalog = crate::hw::Catalog::dalek();
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = Vec::new();
+    for gpu in catalog.gpus() {
+        let mut n = if noisy {
+            Noise::new(rng.next_u64(), 0.02)
+        } else {
+            Noise::off(0)
+        };
+        out.extend(run_gmem(gpu, &mut n));
+    }
+    out
+}
+
+pub fn run_all_ops(seed: u64, noisy: bool) -> Vec<OpsPoint> {
+    let catalog = crate::hw::Catalog::dalek();
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = Vec::new();
+    for gpu in catalog.gpus() {
+        let mut n = if noisy {
+            Noise::new(rng.next_u64(), 0.02)
+        } else {
+            Noise::off(0)
+        };
+        out.extend(run_ops(gpu, &mut n));
+    }
+    out
+}
+
+/// Render Fig. 6.
+pub fn render_gmem(points: &[GmemPoint]) -> Table {
+    let mut t = Table::new(&["GPU", "x1", "x2", "x4", "x8", "x16"])
+        .title("Fig. 6 — GPU global memory throughput, GB/s (clpeak copy)")
+        .left(0);
+    let mut gpus: Vec<&'static str> = Vec::new();
+    for p in points {
+        if !gpus.contains(&p.gpu) {
+            gpus.push(p.gpu);
+        }
+    }
+    for gpu in gpus {
+        let get = |pack| {
+            points
+                .iter()
+                .find(|p| p.gpu == gpu && p.pack == pack)
+                .map(|p| format!("{:.0}", p.gbps))
+                .unwrap_or_default()
+        };
+        t.row(&[
+            gpu.to_string(),
+            get(PackWidth::X1),
+            get(PackWidth::X2),
+            get(PackWidth::X4),
+            get(PackWidth::X8),
+            get(PackWidth::X16),
+        ]);
+    }
+    t
+}
+
+/// Render Fig. 7.
+pub fn render_ops(points: &[OpsPoint]) -> Table {
+    let mut t = Table::new(&["GPU", "f16", "f32", "f64", "i8", "i16", "i32"])
+        .title("Fig. 7 — GPU peak op/s (clpeak mad kernels; paper plots log-scale)")
+        .left(0);
+    let mut gpus: Vec<&'static str> = Vec::new();
+    for p in points {
+        if !gpus.contains(&p.gpu) {
+            gpus.push(p.gpu);
+        }
+    }
+    for gpu in gpus {
+        let get = |d| {
+            points
+                .iter()
+                .find(|p| p.gpu == gpu && p.dtype == d)
+                .map(|p| crate::util::units::gops(p.gops * 1e9))
+                .unwrap_or_default()
+        };
+        t.row(&[
+            gpu.to_string(),
+            get(GpuDtype::F16),
+            get(GpuDtype::F32),
+            get(GpuDtype::F64),
+            get(GpuDtype::I8),
+            get(GpuDtype::I16),
+            get(GpuDtype::I32),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::GpuKind;
+
+    #[test]
+    fn fig6_vram_up_to_10x_ram() {
+        let ps = run_all_gmem(1, false);
+        let best = |gpu: &str| {
+            ps.iter()
+                .filter(|p| p.gpu == gpu)
+                .map(|p| p.gbps)
+                .fold(0.0f64, f64::max)
+        };
+        let ratio = best("GeForce RTX 4090") / best("Iris Xe Graphics");
+        assert!(ratio > 8.0 && ratio < 20.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn fig6_packing_gains_dgpu_only() {
+        let ps = run_all_gmem(1, false);
+        for gpu in ["GeForce RTX 4090", "Radeon 7900 XTX", "Arc A770"] {
+            let x1 = ps.iter().find(|p| p.gpu == gpu && p.pack == PackWidth::X1).unwrap().gbps;
+            let x16 = ps.iter().find(|p| p.gpu == gpu && p.pack == PackWidth::X16).unwrap().gbps;
+            assert!(x16 / x1 > 1.15, "{gpu}");
+        }
+        for gpu in ["Radeon 890M", "Arc Graphics Mobile"] {
+            let x1 = ps.iter().find(|p| p.gpu == gpu && p.pack == PackWidth::X1).unwrap().gbps;
+            let x16 = ps.iter().find(|p| p.gpu == gpu && p.pack == PackWidth::X16).unwrap().gbps;
+            assert!((x16 / x1 - 1.0).abs() < 0.05, "{gpu}");
+        }
+    }
+
+    #[test]
+    fn fig6_890m_beats_hx370_cpu_by_20_percent() {
+        // §5.3: 890M ≈ 96 GB/s vs 80 GB/s for the CPU p-cores
+        let ps = run_all_gmem(1, false);
+        let igpu = ps
+            .iter()
+            .filter(|p| p.gpu == "Radeon 890M")
+            .map(|p| p.gbps)
+            .fold(0.0f64, f64::max);
+        assert!((90.0..102.0).contains(&igpu), "{igpu}");
+        let cpu_copy = 80.0;
+        assert!(igpu / cpu_copy > 1.15 && igpu / cpu_copy < 1.30);
+    }
+
+    #[test]
+    fn fig7_igpu_dgpu_order_of_magnitude() {
+        let ps = run_all_ops(1, false);
+        let f32 = |gpu: &str| {
+            ps.iter()
+                .find(|p| p.gpu == gpu && p.dtype == GpuDtype::F32)
+                .unwrap()
+                .gops
+        };
+        assert!(f32("GeForce RTX 4090") / f32("Arc Graphics Mobile") > 7.0);
+        // 610M clearly outperformed by every other GPU
+        let others = [
+            "GeForce RTX 4090",
+            "Radeon 7900 XTX",
+            "Arc A770",
+            "Iris Xe Graphics",
+            "Arc Graphics Mobile",
+            "Radeon 890M",
+        ];
+        for o in others {
+            assert!(f32(o) > f32("Radeon 610M"), "{o}");
+        }
+    }
+
+    #[test]
+    fn fig7_igpus_beat_cpu_dpa4() {
+        // §5.4: Arc Mobile f16 (9.8 Top/s) > 185H DPA4 (5.4 Top/s)
+        let ps = run_all_ops(1, false);
+        let arc_f16 = ps
+            .iter()
+            .find(|p| p.gpu == "Arc Graphics Mobile" && p.dtype == GpuDtype::F16)
+            .unwrap()
+            .gops;
+        assert!((8_500.0..11_000.0).contains(&arc_f16), "{arc_f16}");
+        let cpu_dpa4 = crate::hw::Catalog::dalek()
+            .cpus()
+            .into_iter()
+            .find(|c| c.product == "Core Ultra 9 185H")
+            .unwrap()
+            .peak_ops_accumulated(crate::hw::cpu::Instr::Dpa4)
+            / 1e9;
+        assert!(arc_f16 > cpu_dpa4);
+    }
+
+    #[test]
+    fn fig7_f64_weakest_everywhere() {
+        let ps = run_all_ops(1, false);
+        let mut gpus: Vec<&'static str> = Vec::new();
+        for p in &ps {
+            if !gpus.contains(&p.gpu) {
+                gpus.push(p.gpu);
+            }
+        }
+        for gpu in gpus {
+            let f64_ = ps.iter().find(|p| p.gpu == gpu && p.dtype == GpuDtype::F64).unwrap().gops;
+            let f32_ = ps.iter().find(|p| p.gpu == gpu && p.dtype == GpuDtype::F32).unwrap().gops;
+            assert!(f64_ < f32_, "{gpu}");
+        }
+    }
+
+    #[test]
+    fn renders() {
+        let t = render_gmem(&run_all_gmem(1, false));
+        assert_eq!(t.n_rows(), 7);
+        let t = render_ops(&run_all_ops(1, false));
+        assert_eq!(t.n_rows(), 7);
+    }
+
+    #[test]
+    fn kinds_annotated() {
+        let ps = run_all_gmem(1, false);
+        assert!(ps
+            .iter()
+            .any(|p| p.gpu == "GeForce RTX 4090" && p.kind == GpuKind::Discrete));
+        assert!(ps
+            .iter()
+            .any(|p| p.gpu == "Radeon 890M" && p.kind == GpuKind::Integrated));
+    }
+}

@@ -1,0 +1,211 @@
+//! Fig. 5 executor: CPU peak op/s with the `cpufp` benchmark's
+//! dependency-free FMA/DPA2/DPA4 instruction mixes, in single-core,
+//! multi-core (per class) and multi-core-accumulated modes.
+
+use crate::hw::cpu::{CoreClass, CpuModel, Instr};
+use crate::util::{Table, Xoshiro256};
+
+use super::Noise;
+
+/// Fig. 5's three sub-plots.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Mode {
+    SingleCore,
+    MultiCore,
+    Accumulated,
+}
+
+impl Mode {
+    pub const ALL: [Mode; 3] = [Mode::SingleCore, Mode::MultiCore, Mode::Accumulated];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::SingleCore => "single-core",
+            Mode::MultiCore => "multi-core",
+            Mode::Accumulated => "multi-core accumulated",
+        }
+    }
+}
+
+/// One measured point.
+#[derive(Clone, Debug)]
+pub struct CpufpPoint {
+    pub cpu: &'static str,
+    /// None for the accumulated mode (all classes together)
+    pub class: Option<CoreClass>,
+    pub instr: Instr,
+    pub mode: Mode,
+    pub gops: f64,
+}
+
+/// Run Fig. 5 for one CPU.
+pub fn run_cpu(cpu: &CpuModel, noise: &mut Noise) -> Vec<CpufpPoint> {
+    let mut out = Vec::new();
+    for cluster in &cpu.clusters {
+        for &instr in &Instr::ALL {
+            out.push(CpufpPoint {
+                cpu: cpu.product,
+                class: Some(cluster.class),
+                instr,
+                mode: Mode::SingleCore,
+                gops: noise.apply(cluster.peak_ops(instr, 1)) / 1e9,
+            });
+            out.push(CpufpPoint {
+                cpu: cpu.product,
+                class: Some(cluster.class),
+                instr,
+                mode: Mode::MultiCore,
+                gops: noise.apply(cluster.peak_ops(instr, cluster.cores)) / 1e9,
+            });
+        }
+    }
+    for &instr in &Instr::ALL {
+        out.push(CpufpPoint {
+            cpu: cpu.product,
+            class: None,
+            instr,
+            mode: Mode::Accumulated,
+            gops: noise.apply(cpu.peak_ops_accumulated(instr)) / 1e9,
+        });
+    }
+    out
+}
+
+/// All DALEK CPUs.
+pub fn run_all(seed: u64, noisy: bool) -> Vec<CpufpPoint> {
+    let catalog = crate::hw::Catalog::dalek();
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = Vec::new();
+    for cpu in catalog.cpus() {
+        let mut noise = if noisy {
+            Noise::new(rng.next_u64(), 0.015)
+        } else {
+            Noise::off(0)
+        };
+        out.extend(run_cpu(cpu, &mut noise));
+    }
+    out
+}
+
+/// Render one Fig. 5 subplot.
+pub fn render(points: &[CpufpPoint], mode: Mode) -> Table {
+    let mut t = Table::new(&["CPU", "core type", "FMA f64", "FMA f32", "DPA2", "DPA4"])
+        .title(format!("Fig. 5 — peak performance, {} (cpufp)", mode.name()))
+        .left(0)
+        .left(1);
+    let mut keys: Vec<(&'static str, Option<CoreClass>)> = Vec::new();
+    for p in points.iter().filter(|p| p.mode == mode) {
+        if !keys.contains(&(p.cpu, p.class)) {
+            keys.push((p.cpu, p.class));
+        }
+    }
+    for (cpu, class) in keys {
+        let get = |instr: Instr| {
+            points
+                .iter()
+                .find(|p| p.mode == mode && p.cpu == cpu && p.class == class && p.instr == instr)
+                .map(|p| crate::util::units::gops(p.gops * 1e9))
+                .unwrap_or_default()
+        };
+        t.row(&[
+            cpu.to_string(),
+            class.map(|c| c.name()).unwrap_or("all").to_string(),
+            get(Instr::FmaF64),
+            get(Instr::FmaF32),
+            get(Instr::Dpa2),
+            get(Instr::Dpa4),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts() -> Vec<CpufpPoint> {
+        run_all(1, false)
+    }
+
+    fn get(ps: &[CpufpPoint], cpu: &str, class: Option<CoreClass>, instr: Instr, mode: Mode) -> f64 {
+        ps.iter()
+            .find(|p| p.cpu == cpu && p.class == class && p.instr == instr && p.mode == mode)
+            .map(|p| p.gops)
+            .unwrap_or_else(|| panic!("missing point {cpu} {class:?} {instr:?} {mode:?}"))
+    }
+
+    #[test]
+    fn fig5a_7945hx_best_single_core() {
+        let ps = pts();
+        let r9 = get(&ps, "Ryzen 9 7945HX", Some(CoreClass::Performance), Instr::FmaF32, Mode::SingleCore);
+        for other in ["Core i9-13900H", "Core Ultra 9 185H", "Ryzen AI 9 HX 370"] {
+            let o = get(&ps, other, Some(CoreClass::Performance), Instr::FmaF32, Mode::SingleCore);
+            assert!(r9 > o, "{other}: {o} >= {r9}");
+        }
+    }
+
+    #[test]
+    fn fig5a_13900h_ecore_missing_vnni() {
+        // "DPA2 does not outperform FMA f32 on the i9-13900H e-core"
+        let ps = pts();
+        let fma = get(&ps, "Core i9-13900H", Some(CoreClass::Efficient), Instr::FmaF32, Mode::SingleCore);
+        let dpa2 = get(&ps, "Core i9-13900H", Some(CoreClass::Efficient), Instr::Dpa2, Mode::SingleCore);
+        assert!((dpa2 - fma).abs() < 1e-9);
+        // …and it changes in the next generation (185H e-core)
+        let fma_u9 = get(&ps, "Core Ultra 9 185H", Some(CoreClass::Efficient), Instr::FmaF32, Mode::SingleCore);
+        let dpa2_u9 = get(&ps, "Core Ultra 9 185H", Some(CoreClass::Efficient), Instr::Dpa2, Mode::SingleCore);
+        assert!(dpa2_u9 > 1.8 * fma_u9);
+    }
+
+    #[test]
+    fn fig5_doubling_ladder() {
+        // f64 ×2 = f32 ×2 = DPA2 ×2 = DPA4 on VNNI hardware
+        let ps = pts();
+        let v = |i| get(&ps, "Ryzen 9 7945HX", Some(CoreClass::Performance), i, Mode::MultiCore);
+        assert!((v(Instr::FmaF32) / v(Instr::FmaF64) - 2.0).abs() < 1e-9);
+        assert!((v(Instr::Dpa2) / v(Instr::FmaF32) - 2.0).abs() < 1e-9);
+        assert!((v(Instr::Dpa4) / v(Instr::Dpa2) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig5b_7945hx_dominates_multicore() {
+        let ps = pts();
+        let r9 = get(&ps, "Ryzen 9 7945HX", Some(CoreClass::Performance), Instr::FmaF32, Mode::MultiCore);
+        for other in ["Core i9-13900H", "Core Ultra 9 185H", "Ryzen AI 9 HX 370"] {
+            let o = get(&ps, other, Some(CoreClass::Performance), Instr::FmaF32, Mode::MultiCore);
+            assert!(r9 > 2.0 * o, "{other}");
+        }
+    }
+
+    #[test]
+    fn fig5c_accumulated_ratios() {
+        let ps = pts();
+        let acc = |cpu| get(&ps, cpu, None, Instr::Dpa4, Mode::Accumulated);
+        let r9 = acc("Ryzen 9 7945HX");
+        // ≈2× the 185H and HX 370; 13900H clearly behind
+        assert!(r9 / acc("Core Ultra 9 185H") > 1.6);
+        assert!(r9 / acc("Ryzen AI 9 HX 370") > 1.6);
+        assert!(acc("Core i9-13900H") < acc("Core Ultra 9 185H"));
+        assert!(acc("Core i9-13900H") < acc("Ryzen AI 9 HX 370"));
+    }
+
+    #[test]
+    fn lpe_cores_present_for_meteor_lake_only() {
+        let ps = pts();
+        assert!(ps
+            .iter()
+            .any(|p| p.cpu == "Core Ultra 9 185H" && p.class == Some(CoreClass::LowPower)));
+        assert!(!ps
+            .iter()
+            .any(|p| p.cpu == "Ryzen 9 7945HX" && p.class == Some(CoreClass::LowPower)));
+    }
+
+    #[test]
+    fn render_all_modes() {
+        let ps = pts();
+        for m in Mode::ALL {
+            let t = render(&ps, m);
+            assert!(t.n_rows() >= 4, "{m:?}");
+        }
+    }
+}

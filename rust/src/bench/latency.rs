@@ -1,0 +1,163 @@
+//! Fig. 8 executor: GPU kernel-launch latency over the OpenCL API.
+//!
+//! Latency is sampled per launch with realistic jitter (driver queue,
+//! dispatch unit); GPUs whose OpenCL event handling is broken in the
+//! real driver stack (Radeon 610M, RX 7900 XTX — paper §5.5) report
+//! `None` and are excluded from the plot, exactly like the paper.
+
+use crate::hw::gpu::GpuModel;
+use crate::util::stats::Summary;
+use crate::util::{Table, Xoshiro256};
+
+/// Latency measurement for one GPU.
+#[derive(Clone, Debug)]
+pub struct LatencyPoint {
+    pub gpu: &'static str,
+    /// None = OpenCL event handling broken on this driver
+    pub summary: Option<Summary>,
+}
+
+/// Measure `n` launches on one GPU.
+pub fn run_gpu(gpu: &GpuModel, n: usize, rng: &mut Xoshiro256) -> LatencyPoint {
+    let Some(base_us) = gpu.launch_latency_us else {
+        return LatencyPoint {
+            gpu: gpu.product,
+            summary: None,
+        };
+    };
+    let samples: Vec<f64> = (0..n)
+        .map(|_| {
+            // log-normal-ish tail: API+driver jitter plus rare scheduler
+            // hiccups, floored at 80% of the nominal latency
+            let jitter = rng.normal_ms(0.0, 0.06 * base_us);
+            let tail = if rng.next_f64() < 0.01 {
+                rng.uniform_f64(0.5, 3.0) * base_us
+            } else {
+                0.0
+            };
+            (base_us + jitter + tail).max(0.8 * base_us)
+        })
+        .collect();
+    LatencyPoint {
+        gpu: gpu.product,
+        summary: Summary::of(&samples),
+    }
+}
+
+/// All DALEK GPUs, `n` launches each.
+pub fn run_all(seed: u64, n: usize) -> Vec<LatencyPoint> {
+    let catalog = crate::hw::Catalog::dalek();
+    let mut rng = Xoshiro256::new(seed);
+    catalog
+        .gpus()
+        .into_iter()
+        .map(|g| {
+            let mut r = rng.fork(g.product);
+            run_gpu(g, n, &mut r)
+        })
+        .collect()
+}
+
+/// Render Fig. 8.
+pub fn render(points: &[LatencyPoint]) -> Table {
+    let mut t = Table::new(&["GPU", "median µs", "p95 µs", "max µs", "note"])
+        .title("Fig. 8 — GPU kernel launch latency (OpenCL)")
+        .left(0)
+        .left(4);
+    for p in points {
+        match &p.summary {
+            Some(s) => {
+                t.row(&[
+                    p.gpu.to_string(),
+                    format!("{:.1}", s.p50),
+                    format!("{:.1}", s.p95),
+                    format!("{:.1}", s.max),
+                    String::new(),
+                ]);
+            }
+            None => {
+                t.row(&[
+                    p.gpu.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "OpenCL event handling not properly implemented".into(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn med(ps: &[LatencyPoint], gpu: &str) -> f64 {
+        ps.iter()
+            .find(|p| p.gpu == gpu)
+            .unwrap()
+            .summary
+            .as_ref()
+            .unwrap()
+            .p50
+    }
+
+    #[test]
+    fn fig8_ladder() {
+        let ps = run_all(1, 2000);
+        // A770 ~90 µs >> Intel iGPUs 35–40 µs >> 890M / 4090 ~5 µs
+        let a770 = med(&ps, "Arc A770");
+        let xe = med(&ps, "Iris Xe Graphics");
+        let arc_m = med(&ps, "Arc Graphics Mobile");
+        let r890 = med(&ps, "Radeon 890M");
+        let g4090 = med(&ps, "GeForce RTX 4090");
+        assert!((80.0..100.0).contains(&a770), "{a770}");
+        assert!((30.0..45.0).contains(&xe) && (30.0..45.0).contains(&arc_m));
+        assert!((4.0..7.0).contains(&r890) && (4.0..7.0).contains(&g4090));
+    }
+
+    #[test]
+    fn fig8_amd_event_bug_excluded() {
+        let ps = run_all(1, 100);
+        for gpu in ["Radeon 610M", "Radeon 7900 XTX"] {
+            assert!(ps.iter().find(|p| p.gpu == gpu).unwrap().summary.is_none());
+        }
+    }
+
+    #[test]
+    fn tail_exists_but_is_rare() {
+        let ps = run_all(2, 5000);
+        let s = ps
+            .iter()
+            .find(|p| p.gpu == "GeForce RTX 4090")
+            .unwrap()
+            .summary
+            .as_ref()
+            .unwrap()
+            .clone();
+        assert!(s.max > 1.5 * s.p50, "some tail: max={} p50={}", s.max, s.p50);
+        assert!(s.p95 < 1.5 * s.p50, "tail rare: p95={} p50={}", s.p95, s.p50);
+    }
+
+    #[test]
+    fn render_marks_broken_drivers() {
+        let t = render(&run_all(1, 100));
+        let s = t.render();
+        assert!(s.contains("not properly implemented"));
+        assert_eq!(t.n_rows(), 7);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run_all(9, 500);
+        let b = run_all(9, 500);
+        for (x, y) in a.iter().zip(b.iter()) {
+            match (&x.summary, &y.summary) {
+                (Some(sx), Some(sy)) => assert_eq!(sx.mean, sy.mean),
+                (None, None) => {}
+                _ => panic!("mismatch"),
+            }
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! Fig. 4 executor: CPU memory throughput with the LIP6 `bandwidth`
+//! benchmark's six kernels, swept over buffer sizes that target each
+//! cache level, per CPU and per core class.
+//!
+//! Kernel mix factors model what the paper's explicitly-vectorized
+//! kernels achieve relative to pure streaming reads: stores cost more
+//! than loads in caches (store ports), while non-temporal stores keep
+//! RAM writes competitive (the benchmark uses them, §5.1).
+
+use crate::hw::cache::CacheLevel;
+use crate::hw::cpu::{CoreClass, CpuModel};
+use crate::util::{Table, Xoshiro256};
+
+use super::Noise;
+
+/// The six micro-kernels of §5.1.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Kernel {
+    Read,
+    Write,
+    Copy,
+    Scale,
+    Add,
+    Triadd,
+}
+
+impl Kernel {
+    pub const ALL: [Kernel; 6] = [
+        Kernel::Read,
+        Kernel::Write,
+        Kernel::Copy,
+        Kernel::Scale,
+        Kernel::Add,
+        Kernel::Triadd,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Read => "read",
+            Kernel::Write => "write",
+            Kernel::Copy => "copy",
+            Kernel::Scale => "scale",
+            Kernel::Add => "add",
+            Kernel::Triadd => "triadd",
+        }
+    }
+
+    /// Streams touched (for sizing: add/triadd use 3 buffers).
+    pub fn streams(self) -> u64 {
+        match self {
+            Kernel::Read | Kernel::Write => 1,
+            Kernel::Copy | Kernel::Scale => 2,
+            Kernel::Add | Kernel::Triadd => 3,
+        }
+    }
+
+    /// Achieved fraction of the level's streaming-read bandwidth.
+    fn factor(self, level: CacheLevel) -> f64 {
+        let cache = level != CacheLevel::Ram;
+        match self {
+            Kernel::Read => 1.0,
+            // cache writes limited by store ports; RAM writes ride
+            // non-temporal stores (no RFO read-for-ownership traffic)
+            Kernel::Write => {
+                if cache {
+                    0.60
+                } else {
+                    0.85
+                }
+            }
+            Kernel::Copy => {
+                if cache {
+                    0.72
+                } else {
+                    0.78
+                }
+            }
+            Kernel::Scale => {
+                if cache {
+                    0.70
+                } else {
+                    0.76
+                }
+            }
+            Kernel::Add => {
+                if cache {
+                    0.82
+                } else {
+                    0.80
+                }
+            }
+            Kernel::Triadd => {
+                if cache {
+                    0.84
+                } else {
+                    0.82
+                }
+            }
+        }
+    }
+}
+
+/// One measured point.
+#[derive(Clone, Debug)]
+pub struct MembwPoint {
+    pub cpu: &'static str,
+    pub class: CoreClass,
+    pub kernel: Kernel,
+    pub buffer_bytes: u64,
+    pub level: CacheLevel,
+    pub cores: u32,
+    pub gbps: f64,
+}
+
+/// Run the Fig. 4 sweep for one CPU. Buffer sizes walk powers of two
+/// from 4 KiB to 1 GiB; each point groups the cores that share the
+/// resolved level (like the paper: L1 on one core, shared levels on all
+/// sharers) and reports aggregate GB/s.
+pub fn run_cpu(cpu: &CpuModel, noise: &mut Noise) -> Vec<MembwPoint> {
+    let mut out = Vec::new();
+    for cluster in &cpu.clusters {
+        for &kernel in &Kernel::ALL {
+            let mut size = 4u64 << 10;
+            while size <= 1u64 << 30 {
+                let per_stream = size / kernel.streams().max(1);
+                let level = cluster.hierarchy.level_for(per_stream);
+                // core grouping per the paper: L1 measured on one core,
+                // shared levels on every core that shares an instance,
+                // RAM on the whole cluster
+                let cores = match level {
+                    CacheLevel::L1 => 1,
+                    CacheLevel::L2 => cluster
+                        .hierarchy
+                        .l2
+                        .shared_by
+                        .min(cluster.cores),
+                    CacheLevel::L3 => cluster.cores,
+                    CacheLevel::Ram => cluster.cores,
+                };
+                let raw = cpu.stream_bw(cluster.class, cores, level);
+                let gbps = noise.apply(raw * kernel.factor(level)) / 1e9;
+                out.push(MembwPoint {
+                    cpu: cpu.product,
+                    class: cluster.class,
+                    kernel,
+                    buffer_bytes: size,
+                    level,
+                    cores,
+                    gbps,
+                });
+                size <<= 1;
+            }
+        }
+    }
+    out
+}
+
+/// The paper's per-level summary (Fig. 4 subplots a–d): best kernel
+/// bandwidth per (cpu, class, level).
+pub fn level_summary(points: &[MembwPoint], level: CacheLevel) -> Vec<(&'static str, CoreClass, f64)> {
+    let mut best: Vec<(&'static str, CoreClass, f64)> = Vec::new();
+    for p in points.iter().filter(|p| p.level == level && p.kernel == Kernel::Read) {
+        match best
+            .iter_mut()
+            .find(|(c, cl, _)| *c == p.cpu && *cl == p.class)
+        {
+            Some((_, _, bw)) => *bw = bw.max(p.gbps),
+            None => best.push((p.cpu, p.class, p.gbps)),
+        }
+    }
+    best
+}
+
+/// Render one Fig. 4 subplot as a table.
+pub fn render(points: &[MembwPoint], level: CacheLevel) -> Table {
+    let mut t = Table::new(&["CPU", "core", "kernel", "buffer", "cores", "GB/s"])
+        .title(format!("Fig. 4 — {} throughput (bandwidth benchmark)", level.name()))
+        .left(0)
+        .left(1)
+        .left(2);
+    // representative buffer per level: largest that still fits
+    for p in points.iter().filter(|p| p.level == level) {
+        let next_level_differs = points
+            .iter()
+            .filter(|q| {
+                q.cpu == p.cpu
+                    && q.class == p.class
+                    && q.kernel == p.kernel
+                    && q.level == level
+            })
+            .map(|q| q.buffer_bytes)
+            .max()
+            == Some(p.buffer_bytes);
+        if next_level_differs {
+            t.row(&[
+                p.cpu.to_string(),
+                p.class.name().to_string(),
+                p.kernel.name().to_string(),
+                crate::util::units::bytes(p.buffer_bytes),
+                p.cores.to_string(),
+                format!("{:.1}", p.gbps),
+            ]);
+        }
+    }
+    t
+}
+
+/// Convenience: the full Fig. 4 dataset for all DALEK CPUs.
+pub fn run_all(seed: u64, noisy: bool) -> Vec<MembwPoint> {
+    let catalog = crate::hw::Catalog::dalek();
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = Vec::new();
+    for cpu in catalog.cpus() {
+        let mut noise = if noisy {
+            Noise::new(rng.next_u64(), 0.02)
+        } else {
+            Noise::off(0)
+        };
+        out.extend(run_cpu(cpu, &mut noise));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn points() -> Vec<MembwPoint> {
+        run_all(1, false)
+    }
+
+    #[test]
+    fn covers_all_kernels_and_levels() {
+        let ps = points();
+        for k in Kernel::ALL {
+            assert!(ps.iter().any(|p| p.kernel == k));
+        }
+        for lvl in [CacheLevel::L1, CacheLevel::L2, CacheLevel::L3, CacheLevel::Ram] {
+            assert!(ps.iter().any(|p| p.level == lvl), "{lvl:?} missing");
+        }
+    }
+
+    #[test]
+    fn cache_hierarchy_monotone_read() {
+        // read bandwidth: L1 > L2 > L3 > RAM for every p-core CPU
+        let ps = points();
+        for cpu in ["Ryzen 9 7945HX", "Core Ultra 9 185H"] {
+            let bw = |lvl| {
+                ps.iter()
+                    .filter(|p| {
+                        p.cpu == cpu
+                            && p.class == CoreClass::Performance
+                            && p.kernel == Kernel::Read
+                            && p.level == lvl
+                    })
+                    .map(|p| p.gbps)
+                    .fold(0.0f64, f64::max)
+            };
+            assert!(bw(CacheLevel::L1) > bw(CacheLevel::L2), "{cpu} L1>L2");
+            assert!(bw(CacheLevel::L2) > bw(CacheLevel::L3), "{cpu} L2>L3");
+            assert!(bw(CacheLevel::L3) > bw(CacheLevel::Ram), "{cpu} L3>RAM");
+        }
+    }
+
+    #[test]
+    fn lpe_cores_have_no_l3_points() {
+        let ps = points();
+        assert!(!ps
+            .iter()
+            .any(|p| p.class == CoreClass::LowPower && p.level == CacheLevel::L3));
+    }
+
+    #[test]
+    fn meteor_lake_l1_beats_raptor_lake() {
+        // the paper's Fig. 4a observation
+        let ps = points();
+        let l1 = |cpu: &str| {
+            ps.iter()
+                .filter(|p| {
+                    p.cpu == cpu
+                        && p.class == CoreClass::Performance
+                        && p.level == CacheLevel::L1
+                        && p.kernel == Kernel::Read
+                })
+                .map(|p| p.gbps)
+                .fold(0.0f64, f64::max)
+        };
+        assert!(l1("Core Ultra 9 185H") > 1.3 * l1("Core i9-13900H"));
+    }
+
+    #[test]
+    fn zen5_l2_outperforms_all() {
+        let ps = points();
+        let l2 = |cpu: &str| {
+            ps.iter()
+                .filter(|p| {
+                    p.cpu == cpu
+                        && p.class == CoreClass::Performance
+                        && p.level == CacheLevel::L2
+                        && p.kernel == Kernel::Read
+                })
+                .map(|p| p.gbps)
+                .fold(0.0f64, f64::max)
+        };
+        let zen5 = l2("Ryzen AI 9 HX 370");
+        for other in ["Ryzen 9 7945HX", "Core Ultra 9 185H", "Core i9-13900H"] {
+            assert!(zen5 > l2(other), "Zen5 L2 {zen5} vs {other} {}", l2(other));
+        }
+    }
+
+    #[test]
+    fn amd_l3_faster_than_intel() {
+        let ps = points();
+        let l3 = |cpu: &str| {
+            ps.iter()
+                .filter(|p| {
+                    p.cpu == cpu
+                        && p.class == CoreClass::Performance
+                        && p.level == CacheLevel::L3
+                        && p.kernel == Kernel::Read
+                })
+                .map(|p| p.gbps)
+                .fold(0.0f64, f64::max)
+        };
+        assert!(l3("Ryzen 9 7945HX") > 2.0 * l3("Core Ultra 9 185H"));
+    }
+
+    #[test]
+    fn ram_plateau_60_to_80_gbps_and_hx370_leads() {
+        let ps = points();
+        let ram = |cpu: &str| {
+            ps.iter()
+                .filter(|p| {
+                    p.cpu == cpu && p.level == CacheLevel::Ram && p.kernel == Kernel::Read
+                })
+                .map(|p| p.gbps)
+                .fold(0.0f64, f64::max)
+        };
+        for cpu in ["Core i9-13900H", "Ryzen 9 7945HX", "Core Ultra 9 185H"] {
+            let v = ram(cpu);
+            assert!((55.0..85.0).contains(&v), "{cpu}: {v}");
+        }
+        assert!(ram("Ryzen AI 9 HX 370") > ram("Ryzen 9 7945HX"));
+    }
+
+    #[test]
+    fn write_slower_than_read_in_cache() {
+        let ps = points();
+        let get = |k: Kernel| {
+            ps.iter()
+                .filter(|p| {
+                    p.cpu == "Ryzen 9 7945HX"
+                        && p.level == CacheLevel::L1
+                        && p.kernel == k
+                })
+                .map(|p| p.gbps)
+                .fold(0.0f64, f64::max)
+        };
+        assert!(get(Kernel::Write) < get(Kernel::Read));
+    }
+
+    #[test]
+    fn render_produces_rows() {
+        let ps = points();
+        let t = render(&ps, CacheLevel::Ram);
+        assert!(t.n_rows() > 0);
+        assert!(t.render().contains("RAM"));
+    }
+
+    #[test]
+    fn noisy_run_is_deterministic() {
+        let a = run_all(7, true);
+        let b = run_all(7, true);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.gbps, y.gbps);
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Benchmark executors (paper §5): one module per figure, each
+//! producing the same rows/series the paper plots, computed from the
+//! calibrated hardware models plus a small deterministic measurement
+//! noise (real benchmarks jitter a few percent run-to-run; the noise
+//! keeps the tables honest without breaking reproducibility).
+//!
+//! | module      | regenerates        |
+//! |-------------|--------------------|
+//! | [`membw`]   | Fig. 4 (a–d)       |
+//! | [`cpufp`]   | Fig. 5 (a–c)       |
+//! | [`clpeak`]  | Fig. 6 and Fig. 7  |
+//! | [`latency`] | Fig. 8             |
+//! | [`ssd`]     | Fig. 9             |
+//! | [`tables`]  | Tables 1–3         |
+
+pub mod clpeak;
+pub mod cpufp;
+pub mod latency;
+pub mod membw;
+pub mod ssd;
+pub mod tables;
+
+use crate::util::Xoshiro256;
+
+/// Deterministic multiplicative measurement noise (~N(1, rel)).
+pub struct Noise {
+    rng: Xoshiro256,
+    rel: f64,
+}
+
+impl Noise {
+    pub fn new(seed: u64, rel: f64) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed),
+            rel,
+        }
+    }
+
+    /// Noise-free (for exact-shape unit tests).
+    pub fn off(seed: u64) -> Self {
+        Self::new(seed, 0.0)
+    }
+
+    pub fn apply(&mut self, v: f64) -> f64 {
+        if self.rel == 0.0 {
+            return v;
+        }
+        let f = self.rng.normal_ms(1.0, self.rel).clamp(0.85, 1.15);
+        v * f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_off_is_identity() {
+        let mut n = Noise::off(1);
+        assert_eq!(n.apply(123.45), 123.45);
+    }
+
+    #[test]
+    fn noise_small_and_deterministic() {
+        let mut a = Noise::new(7, 0.02);
+        let mut b = Noise::new(7, 0.02);
+        for _ in 0..100 {
+            let x = a.apply(100.0);
+            assert_eq!(x, b.apply(100.0));
+            assert!((85.0..=115.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Fig. 9 executor: SSD throughput — sequential (dd) and random
+//! (iozone) reads and writes per drive model.
+
+use crate::hw::ssd::{SsdAccess, SsdModel};
+use crate::util::{Table, Xoshiro256};
+
+use super::Noise;
+
+/// One Fig. 9 point.
+#[derive(Clone, Debug)]
+pub struct SsdPoint {
+    pub ssd: &'static str,
+    pub vendor: &'static str,
+    pub access: SsdAccess,
+    pub gbps: f64,
+}
+
+/// Measure one drive (timed transfer of `bytes`).
+pub fn run_ssd(ssd: &SsdModel, bytes: u64, noise: &mut Noise) -> Vec<SsdPoint> {
+    SsdAccess::ALL
+        .iter()
+        .map(|&access| {
+            let secs = ssd.transfer_secs(bytes, access);
+            let gbps = noise.apply(bytes as f64 / secs) / 1e9;
+            SsdPoint {
+                ssd: ssd.product,
+                vendor: ssd.vendor,
+                access,
+                gbps,
+            }
+        })
+        .collect()
+}
+
+/// All DALEK SSD models (16 GiB working set, like a dd/iozone run).
+pub fn run_all(seed: u64, noisy: bool) -> Vec<SsdPoint> {
+    let catalog = crate::hw::Catalog::dalek();
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = Vec::new();
+    for ssd in catalog.ssds() {
+        let mut n = if noisy {
+            Noise::new(rng.next_u64(), 0.03)
+        } else {
+            Noise::off(0)
+        };
+        out.extend(run_ssd(ssd, 16 << 30, &mut n));
+    }
+    out
+}
+
+/// Render Fig. 9.
+pub fn render(points: &[SsdPoint]) -> Table {
+    let mut t = Table::new(&["SSD", "seq read", "seq write", "rand read", "rand write"])
+        .title("Fig. 9 — SSD throughput, GB/s (dd sequential / iozone random)")
+        .left(0);
+    let mut drives: Vec<&'static str> = Vec::new();
+    for p in points {
+        if !drives.contains(&p.ssd) {
+            drives.push(p.ssd);
+        }
+    }
+    for d in drives {
+        let get = |a| {
+            points
+                .iter()
+                .find(|p| p.ssd == d && p.access == a)
+                .map(|p| format!("{:.2}", p.gbps))
+                .unwrap_or_default()
+        };
+        t.row(&[
+            d.to_string(),
+            get(SsdAccess::SeqRead),
+            get(SsdAccess::SeqWrite),
+            get(SsdAccess::RandRead),
+            get(SsdAccess::RandWrite),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(ps: &[SsdPoint], ssd: &str, a: SsdAccess) -> f64 {
+        ps.iter().find(|p| p.ssd == ssd && p.access == a).unwrap().gbps
+    }
+
+    #[test]
+    fn fig9_seq_3x_random() {
+        let ps = run_all(1, false);
+        for ssd in ["990 PRO", "OM8PGP41024Q-A0", "P3 Plus CT1000P3PSSD8"] {
+            let ratio = get(&ps, ssd, SsdAccess::SeqRead) / get(&ps, ssd, SsdAccess::RandRead);
+            assert!((2.0..5.0).contains(&ratio), "{ssd}: {ratio}");
+        }
+    }
+
+    #[test]
+    fn fig9_reads_beat_writes() {
+        let ps = run_all(1, false);
+        for ssd in ["990 PRO", "P3 Plus CT1000P3PSSD8"] {
+            assert!(get(&ps, ssd, SsdAccess::SeqRead) > get(&ps, ssd, SsdAccess::SeqWrite));
+            assert!(get(&ps, ssd, SsdAccess::RandRead) > get(&ps, ssd, SsdAccess::RandWrite));
+        }
+    }
+
+    #[test]
+    fn fig9_kingston_write_surprise() {
+        // "sequential writes on the Kingston OM8PGP4 are very close in
+        // speed to sequential reads"
+        let ps = run_all(1, false);
+        let r = get(&ps, "OM8PGP41024Q-A0", SsdAccess::SeqRead);
+        let w = get(&ps, "OM8PGP41024Q-A0", SsdAccess::SeqWrite);
+        assert!(w / r > 0.9, "w/r = {}", w / r);
+    }
+
+    #[test]
+    fn samsung_fastest() {
+        let ps = run_all(1, false);
+        for other in ["OM8PGP41024Q-A0", "P3 Plus CT1000P3PSSD8"] {
+            assert!(
+                get(&ps, "990 PRO", SsdAccess::SeqRead) > get(&ps, other, SsdAccess::SeqRead)
+            );
+        }
+    }
+
+    #[test]
+    fn render_three_drives() {
+        let t = render(&run_all(1, true));
+        assert_eq!(t.n_rows(), 3);
+    }
+}

@@ -1,0 +1,155 @@
+//! Table 1–3 renderers: specs, resource/power accounting, network plan.
+
+use crate::config::ClusterConfig;
+use crate::hw::Catalog;
+use crate::net::Topology;
+use crate::util::Table;
+
+/// Table 1 — CPU / GPU / SSD / RAM specifications.
+pub fn table1(catalog: &Catalog) -> Vec<Table> {
+    let mut cpu = Table::new(&["Vendor", "Product", "Architecture", "Cores", "Threads", "TDP W"])
+        .title("Table 1 — CPUs")
+        .left(0)
+        .left(1)
+        .left(2);
+    for c in catalog.cpus() {
+        cpu.row(&[
+            c.vendor.to_string(),
+            c.product.to_string(),
+            c.architecture.to_string(),
+            c.cores().to_string(),
+            c.threads().to_string(),
+            format!("{:.0}", c.tdp_w),
+        ]);
+    }
+    let mut gpu = Table::new(&["Vendor", "Product", "Architecture", "SM", "Shaders", "TDP W"])
+        .title("Table 1 — GPUs")
+        .left(0)
+        .left(1)
+        .left(2);
+    for g in catalog.gpus() {
+        gpu.row(&[
+            g.vendor.to_string(),
+            g.product.to_string(),
+            g.architecture.to_string(),
+            g.sm.to_string(),
+            g.shader_cores.to_string(),
+            format!("{:.0}", g.tdp_w),
+        ]);
+    }
+    let mut ssd = Table::new(&["Vendor", "Product", "Size TB", "Seq read GB/s"])
+        .title("Table 1 — SSDs")
+        .left(0)
+        .left(1);
+    for s in catalog.ssds() {
+        ssd.row(&[
+            s.vendor.to_string(),
+            s.product.to_string(),
+            format!("{}", s.size_tb),
+            format!("{:.1}", s.seq_read_bw / 1e9),
+        ]);
+    }
+    vec![cpu, gpu, ssd]
+}
+
+/// Table 2 — resources and power accounting, with the Total row.
+pub fn table2(catalog: &Catalog) -> Table {
+    let mut t = Table::new(&[
+        "Partition", "Nodes", "Cores", "Threads", "RAM GB", "iGPU", "dGPU", "VRAM GB",
+        "Idle W", "Susp W", "TDP W",
+    ])
+    .title("Table 2 — resource accounting & estimated power")
+    .left(0);
+    for p in catalog.partitions() {
+        let a = catalog.account_partition(p);
+        t.row(&[
+            p.name.to_string(),
+            a.nodes.to_string(),
+            a.cpu_cores.to_string(),
+            a.cpu_threads.to_string(),
+            a.ram_gb.to_string(),
+            a.igpu_cores.to_string(),
+            a.dgpu_cores.to_string(),
+            a.vram_gb.to_string(),
+            format!("{:.0}", a.idle_w),
+            format!("{:.0}", a.suspend_w),
+            format!("{:.0}", a.tdp_w),
+        ]);
+    }
+    let total = catalog.account_total();
+    t.row(&[
+        "Total".to_string(),
+        total.nodes.to_string(),
+        total.cpu_cores.to_string(),
+        total.cpu_threads.to_string(),
+        total.ram_gb.to_string(),
+        total.igpu_cores.to_string(),
+        total.dgpu_cores.to_string(),
+        total.vram_gb.to_string(),
+        format!("{:.0}", total.idle_w),
+        format!("{:.0}", total.suspend_w),
+        format!("{:.0}", total.tdp_w),
+    ]);
+    t
+}
+
+/// Table 3 — interfaces and the 192.168.1.0/24 plan.
+pub fn table3(cfg: &ClusterConfig) -> Table {
+    let topo = Topology::build(cfg);
+    let mut t = Table::new(&["Host", "Interface", "Hardware", "GbE", "IP", "Port(s)"])
+        .title("Table 3 — interfaces & 192.168.1.0/24 local network")
+        .left(0)
+        .left(1)
+        .left(2);
+    for h in topo.hosts() {
+        t.row(&[
+            h.name.clone(),
+            h.iface.clone(),
+            h.nic_hw.to_string(),
+            format!("{:.1}", h.nic_bps / 1e9),
+            h.ip.to_string(),
+            h.switch_ports
+                .iter()
+                .map(|p| p.to_string())
+                .collect::<Vec<_>>()
+                .join("+"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_sections() {
+        let ts = table1(&Catalog::dalek());
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0].n_rows(), 4); // CPUs
+        assert_eq!(ts[1].n_rows(), 7); // GPUs
+        assert_eq!(ts[2].n_rows(), 3); // SSDs
+    }
+
+    #[test]
+    fn table2_total_row_matches_paper() {
+        let t = table2(&Catalog::dalek());
+        let s = t.render();
+        // the paper's Total row values
+        assert!(s.contains("Total"));
+        assert!(s.contains("270"));
+        assert!(s.contains("476"));
+        assert!(s.contains("1136"));
+        assert!(s.contains("106496"));
+        assert!(s.contains("727"));
+        assert!(s.contains("5427"));
+    }
+
+    #[test]
+    fn table3_has_21_rows_and_front_aggregation() {
+        let t = table3(&ClusterConfig::dalek_default());
+        assert_eq!(t.n_rows(), 21);
+        assert!(t.render().contains("49+50"));
+        assert!(t.render().contains("192.168.1.254"));
+    }
+}

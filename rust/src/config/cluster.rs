@@ -1,0 +1,333 @@
+//! Typed cluster configuration, loadable from a TOML-subset file and
+//! shipped with a default that reproduces the paper's exact deployment.
+//!
+//! The config controls what a site operator would actually tune: which
+//! partitions exist (hardware models come from the `hw` catalog by
+//! name), the scheduler policy, the §3.4 power policy (suspend timeout,
+//! boot budget), network numbering (Listing 1) and the energy-platform
+//! probe layout (§4).
+
+use std::collections::BTreeMap;
+
+use super::toml_lite::{parse, TomlError, Value};
+use crate::hw::catalog::{
+    partition_az4_a7900, partition_az4_n4090, partition_az5_a890m, partition_iml_ia770,
+    PartitionSpec,
+};
+use crate::sim::SimTime;
+
+/// One partition entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionConfig {
+    /// must name a catalog partition (az4-n4090, az4-a7900, …)
+    pub name: String,
+    pub nodes: u32,
+    /// third octet block index for Listing 1 subnetting
+    pub subnet_index: u8,
+}
+
+/// §3.4 node-powering strategy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PowerPolicyConfig {
+    /// power off after this idle duration (paper: 10 minutes)
+    pub suspend_after: SimTime,
+    /// resume budget (paper: "up to a 2-minute delay")
+    pub max_boot_delay: SimTime,
+    /// whether the §3.4 WoL strategy is enabled at all
+    pub enabled: bool,
+}
+
+impl Default for PowerPolicyConfig {
+    fn default() -> Self {
+        Self {
+            suspend_after: SimTime::from_mins(10),
+            max_boot_delay: SimTime::from_mins(2),
+            enabled: true,
+        }
+    }
+}
+
+/// Scheduler policy knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerConfig {
+    /// "fifo" or "backfill"
+    pub policy: String,
+    /// scheduling tick
+    pub tick: SimTime,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            policy: "backfill".into(),
+            tick: SimTime::from_secs(1),
+        }
+    }
+}
+
+/// Energy measurement platform layout (§4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnergyConfig {
+    /// probes per main board I2C connector chain (max 6, paper §4.1)
+    pub probes_per_node: u32,
+    /// requested per-probe sample rate (paper: 1000 SPS averaged)
+    pub sample_rate_sps: u32,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        Self {
+            probes_per_node: 1,
+            sample_rate_sps: 1000,
+        }
+    }
+}
+
+/// The full cluster description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    pub name: String,
+    /// base /24 network (paper: 192.168.1.0/24)
+    pub network_base: [u8; 3],
+    pub partitions: Vec<PartitionConfig>,
+    pub power: PowerPolicyConfig,
+    pub scheduler: SchedulerConfig,
+    pub energy: EnergyConfig,
+    pub seed: u64,
+}
+
+impl ClusterConfig {
+    /// The deployment of the paper: 4 partitions × 4 nodes, §3.4 power
+    /// policy, one USB-C probe per node at 1000 SPS.
+    pub fn dalek_default() -> Self {
+        Self {
+            name: "dalek".into(),
+            network_base: [192, 168, 1],
+            partitions: vec![
+                PartitionConfig {
+                    name: "az4-n4090".into(),
+                    nodes: 4,
+                    subnet_index: 0,
+                },
+                PartitionConfig {
+                    name: "az4-a7900".into(),
+                    nodes: 4,
+                    subnet_index: 1,
+                },
+                PartitionConfig {
+                    name: "iml-ia770".into(),
+                    nodes: 4,
+                    subnet_index: 2,
+                },
+                PartitionConfig {
+                    name: "az5-a890m".into(),
+                    nodes: 4,
+                    subnet_index: 3,
+                },
+            ],
+            power: PowerPolicyConfig::default(),
+            scheduler: SchedulerConfig::default(),
+            energy: EnergyConfig::default(),
+            seed: 0xDA1EC,
+        }
+    }
+
+    /// Parse from the TOML-subset format. Missing sections fall back to
+    /// the paper's defaults; unknown partition names are rejected here
+    /// (they could not be resolved against the hw catalog later).
+    pub fn from_toml(src: &str) -> Result<Self, TomlError> {
+        let doc = parse(src)?;
+        let mut cfg = Self::dalek_default();
+        if let Some(v) = doc.get("name").and_then(Value::as_str) {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = doc.get("seed").and_then(Value::as_int) {
+            cfg.seed = v as u64;
+        }
+        if let Some(arr) = doc.get("partition").and_then(Value::as_table_array) {
+            cfg.partitions.clear();
+            for (i, t) in arr.iter().enumerate() {
+                let name = Value::get_str(t, "name")?;
+                resolve_partition(&name).ok_or_else(|| {
+                    TomlError::Type("partition.name".into(), "a known catalog partition")
+                })?;
+                cfg.partitions.push(PartitionConfig {
+                    name,
+                    nodes: Value::get_int(t, "nodes").unwrap_or(4) as u32,
+                    subnet_index: t
+                        .get("subnet_index")
+                        .and_then(Value::as_int)
+                        .unwrap_or(i as i64) as u8,
+                });
+            }
+        }
+        if let Some(t) = doc.get("power").and_then(Value::as_table) {
+            apply_power(&mut cfg.power, t)?;
+        }
+        if let Some(t) = doc.get("scheduler").and_then(Value::as_table) {
+            if let Some(p) = t.get("policy").and_then(Value::as_str) {
+                if p != "fifo" && p != "backfill" {
+                    return Err(TomlError::Type("scheduler.policy".into(), "fifo|backfill"));
+                }
+                cfg.scheduler.policy = p.to_string();
+            }
+            if let Some(s) = t.get("tick_secs").and_then(Value::as_int) {
+                cfg.scheduler.tick = SimTime::from_secs(s as u64);
+            }
+        }
+        if let Some(t) = doc.get("energy").and_then(Value::as_table) {
+            if let Some(n) = t.get("probes_per_node").and_then(Value::as_int) {
+                if !(1..=12).contains(&n) {
+                    return Err(TomlError::Type(
+                        "energy.probes_per_node".into(),
+                        "1..=12 (two I2C chains of six, §4.1)",
+                    ));
+                }
+                cfg.energy.probes_per_node = n as u32;
+            }
+            if let Some(r) = t.get("sample_rate_sps").and_then(Value::as_int) {
+                cfg.energy.sample_rate_sps = r as u32;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Total compute nodes across partitions.
+    pub fn total_nodes(&self) -> u32 {
+        self.partitions.iter().map(|p| p.nodes).sum()
+    }
+}
+
+fn apply_power(
+    p: &mut PowerPolicyConfig,
+    t: &BTreeMap<String, Value>,
+) -> Result<(), TomlError> {
+    if let Some(m) = t.get("suspend_after_mins").and_then(Value::as_int) {
+        p.suspend_after = SimTime::from_mins(m as u64);
+    }
+    if let Some(m) = t.get("max_boot_delay_mins").and_then(Value::as_int) {
+        p.max_boot_delay = SimTime::from_mins(m as u64);
+    }
+    if let Some(b) = t.get("enabled").and_then(Value::as_bool) {
+        p.enabled = b;
+    }
+    Ok(())
+}
+
+/// Resolve a partition name against the hardware catalog.
+pub fn resolve_partition(name: &str) -> Option<PartitionSpec> {
+    match name {
+        "az4-n4090" => Some(partition_az4_n4090()),
+        "az4-a7900" => Some(partition_az4_a7900()),
+        "iml-ia770" => Some(partition_iml_ia770()),
+        "az5-a890m" => Some(partition_az5_a890m()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = ClusterConfig::dalek_default();
+        assert_eq!(c.total_nodes(), 16);
+        assert_eq!(c.partitions.len(), 4);
+        assert_eq!(c.power.suspend_after, SimTime::from_mins(10));
+        assert_eq!(c.power.max_boot_delay, SimTime::from_mins(2));
+        assert_eq!(c.network_base, [192, 168, 1]);
+    }
+
+    #[test]
+    fn toml_round_trip_overrides() {
+        let cfg = ClusterConfig::from_toml(
+            r#"
+name = "dalek-test"
+seed = 7
+
+[[partition]]
+name = "az5-a890m"
+nodes = 2
+
+[power]
+suspend_after_mins = 5
+enabled = false
+
+[scheduler]
+policy = "fifo"
+tick_secs = 2
+
+[energy]
+probes_per_node = 6
+sample_rate_sps = 500
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "dalek-test");
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.partitions.len(), 1);
+        assert_eq!(cfg.partitions[0].nodes, 2);
+        assert_eq!(cfg.power.suspend_after, SimTime::from_mins(5));
+        assert!(!cfg.power.enabled);
+        assert_eq!(cfg.scheduler.policy, "fifo");
+        assert_eq!(cfg.scheduler.tick, SimTime::from_secs(2));
+        assert_eq!(cfg.energy.probes_per_node, 6);
+        assert_eq!(cfg.energy.sample_rate_sps, 500);
+    }
+
+    #[test]
+    fn empty_toml_is_paper_default() {
+        assert_eq!(
+            ClusterConfig::from_toml("").unwrap(),
+            ClusterConfig::dalek_default()
+        );
+    }
+
+    #[test]
+    fn unknown_partition_rejected() {
+        let e = ClusterConfig::from_toml("[[partition]]\nname = \"bogus\"\n").unwrap_err();
+        assert!(matches!(e, TomlError::Type(_, _)));
+    }
+
+    #[test]
+    fn bad_scheduler_policy_rejected() {
+        let e = ClusterConfig::from_toml("[scheduler]\npolicy = \"lottery\"\n").unwrap_err();
+        assert!(matches!(e, TomlError::Type(_, _)));
+    }
+
+    #[test]
+    fn probe_count_bounds_enforced() {
+        // 13 probes exceed the two six-probe I2C chains of §4.1
+        let e = ClusterConfig::from_toml("[energy]\nprobes_per_node = 13\n").unwrap_err();
+        assert!(matches!(e, TomlError::Type(_, _)));
+    }
+
+    #[test]
+    fn subnet_index_defaults_to_position() {
+        let cfg = ClusterConfig::from_toml(
+            "[[partition]]\nname = \"az4-n4090\"\n[[partition]]\nname = \"iml-ia770\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.partitions[0].subnet_index, 0);
+        assert_eq!(cfg.partitions[1].subnet_index, 1);
+    }
+
+    #[test]
+    fn shipped_config_file_matches_default() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/dalek.toml");
+        let src = std::fs::read_to_string(path).expect("configs/dalek.toml");
+        assert_eq!(
+            ClusterConfig::from_toml(&src).unwrap(),
+            ClusterConfig::dalek_default()
+        );
+    }
+
+    #[test]
+    fn resolve_partition_names() {
+        for n in ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"] {
+            assert!(resolve_partition(n).is_some(), "{n}");
+        }
+        assert!(resolve_partition("nope").is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! Cluster configuration system.
+//!
+//! A real deployment of DALEK is described by a declarative config file
+//! (the shipped [`ClusterConfig::dalek_default`] mirrors the paper's
+//! exact topology). The format is a TOML subset parsed by [`toml_lite`]
+//! — the full `toml`+`serde` crates are not vendored offline, and the
+//! subset (tables, arrays of tables, strings, ints, floats, bools,
+//! arrays) covers everything a cluster description needs.
+
+pub mod cluster;
+pub mod toml_lite;
+
+pub use cluster::{ClusterConfig, PartitionConfig, PowerPolicyConfig, SchedulerConfig};
+pub use toml_lite::{parse as parse_toml, TomlError, Value};

@@ -1,0 +1,454 @@
+//! A TOML-subset parser.
+//!
+//! Supported: `[table]` headers, `[[array-of-tables]]` headers, dotted
+//! keys in headers, `key = value` with strings ("..."), integers,
+//! floats, booleans, and homogeneous inline arrays `[a, b, c]`;
+//! `#` comments. Unsupported (by design): dates, inline tables,
+//! multi-line strings, key dots outside headers.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+    /// array of tables, from `[[name]]` headers
+    TableArray(Vec<BTreeMap<String, Value>>),
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum TomlError {
+    #[error("line {0}: {1}")]
+    Syntax(usize, String),
+    #[error("line {0}: duplicate key `{1}`")]
+    DuplicateKey(usize, String),
+    #[error("key `{0}`: expected {1}")]
+    Type(String, &'static str),
+    #[error("missing key `{0}`")]
+    Missing(String),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+    pub fn as_table_array(&self) -> Option<&[BTreeMap<String, Value>]> {
+        match self {
+            Value::TableArray(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Typed getters on tables, with path-aware errors.
+    pub fn get<'a>(table: &'a BTreeMap<String, Value>, key: &str) -> Result<&'a Value, TomlError> {
+        table.get(key).ok_or_else(|| TomlError::Missing(key.into()))
+    }
+
+    pub fn get_str(table: &BTreeMap<String, Value>, key: &str) -> Result<String, TomlError> {
+        Self::get(table, key)?
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or(TomlError::Type(key.into(), "string"))
+    }
+
+    pub fn get_int(table: &BTreeMap<String, Value>, key: &str) -> Result<i64, TomlError> {
+        Self::get(table, key)?
+            .as_int()
+            .ok_or(TomlError::Type(key.into(), "integer"))
+    }
+
+    pub fn get_float(table: &BTreeMap<String, Value>, key: &str) -> Result<f64, TomlError> {
+        Self::get(table, key)?
+            .as_float()
+            .ok_or(TomlError::Type(key.into(), "float"))
+    }
+
+    pub fn get_bool(table: &BTreeMap<String, Value>, key: &str) -> Result<bool, TomlError> {
+        Self::get(table, key)?
+            .as_bool()
+            .ok_or(TomlError::Type(key.into(), "bool"))
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Table(_) | Value::TableArray(_) => write!(f, "<table>"),
+        }
+    }
+}
+
+/// Parse a document into its root table.
+pub fn parse(src: &str) -> Result<BTreeMap<String, Value>, TomlError> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    // current insertion point expressed as a header path + array flag
+    let mut path: Vec<String> = Vec::new();
+    let mut in_array = false;
+
+    for (ln, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = ln + 1;
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            path = split_header(inner, lineno)?;
+            in_array = true;
+            // append a fresh table to the array at `path`
+            let arr = resolve_table_array(&mut root, &path, lineno)?;
+            arr.push(BTreeMap::new());
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            path = split_header(inner, lineno)?;
+            in_array = false;
+            resolve_table(&mut root, &path, lineno)?; // create
+        } else if let Some((k, v)) = line.split_once('=') {
+            let key = parse_key(k.trim(), lineno)?;
+            let value = parse_value(v.trim(), lineno)?;
+            let target = if in_array {
+                resolve_table_array(&mut root, &path, lineno)?
+                    .last_mut()
+                    .expect("array has current element")
+            } else {
+                resolve_table(&mut root, &path, lineno)?
+            };
+            if target.contains_key(&key) {
+                return Err(TomlError::DuplicateKey(lineno, key));
+            }
+            target.insert(key, value);
+        } else {
+            return Err(TomlError::Syntax(lineno, format!("cannot parse: {line}")));
+        }
+    }
+    Ok(root)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn split_header(inner: &str, lineno: usize) -> Result<Vec<String>, TomlError> {
+    let parts: Vec<String> = inner.split('.').map(|p| p.trim().to_string()).collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(TomlError::Syntax(lineno, format!("bad header [{inner}]")));
+    }
+    Ok(parts)
+}
+
+fn parse_key(k: &str, lineno: usize) -> Result<String, TomlError> {
+    if k.is_empty()
+        || !k
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        return Err(TomlError::Syntax(lineno, format!("bad key `{k}`")));
+    }
+    Ok(k.to_string())
+}
+
+fn resolve_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            Value::TableArray(arr) => arr.last_mut().ok_or_else(|| {
+                TomlError::Syntax(lineno, format!("empty table array `{part}`"))
+            })?,
+            _ => {
+                return Err(TomlError::Syntax(
+                    lineno,
+                    format!("`{part}` is not a table"),
+                ))
+            }
+        };
+    }
+    Ok(cur)
+}
+
+fn resolve_table_array<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut Vec<BTreeMap<String, Value>>, TomlError> {
+    let (last, prefix) = path.split_last().expect("non-empty header");
+    let parent = resolve_table(root, prefix, lineno)?;
+    let entry = parent
+        .entry(last.clone())
+        .or_insert_with(|| Value::TableArray(Vec::new()));
+    match entry {
+        Value::TableArray(arr) => Ok(arr),
+        _ => Err(TomlError::Syntax(
+            lineno,
+            format!("`{last}` is not an array of tables"),
+        )),
+    }
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<Value, TomlError> {
+    if v.is_empty() {
+        return Err(TomlError::Syntax(lineno, "empty value".into()));
+    }
+    if let Some(rest) = v.strip_prefix('"') {
+        let Some(s) = rest.strip_suffix('"') else {
+            return Err(TomlError::Syntax(lineno, "unterminated string".into()));
+        };
+        if s.contains('"') {
+            return Err(TomlError::Syntax(lineno, "embedded quote".into()));
+        }
+        return Ok(Value::Str(s.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut out = Vec::new();
+        for item in split_array_items(inner) {
+            out.push(parse_value(item.trim(), lineno)?);
+        }
+        return Ok(Value::Array(out));
+    }
+    let clean = v.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(TomlError::Syntax(lineno, format!("cannot parse value `{v}`")))
+}
+
+/// Split a flat array body on commas (strings may contain commas).
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&s[start..]);
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let doc = parse(
+            r#"
+name = "dalek"
+nodes = 16
+rate = 2.5
+wol = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(Value::get_str(&doc, "name").unwrap(), "dalek");
+        assert_eq!(Value::get_int(&doc, "nodes").unwrap(), 16);
+        assert_eq!(Value::get_float(&doc, "rate").unwrap(), 2.5);
+        assert!(Value::get_bool(&doc, "wol").unwrap());
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = parse("x = 3\n").unwrap();
+        assert_eq!(Value::get_float(&doc, "x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn tables_and_nesting() {
+        let doc = parse(
+            r#"
+[scheduler]
+policy = "backfill"
+[scheduler.power]
+suspend_after_mins = 10
+"#,
+        )
+        .unwrap();
+        let sched = doc["scheduler"].as_table().unwrap();
+        assert_eq!(Value::get_str(sched, "policy").unwrap(), "backfill");
+        let power = sched["power"].as_table().unwrap();
+        assert_eq!(Value::get_int(power, "suspend_after_mins").unwrap(), 10);
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = parse(
+            r#"
+[[partition]]
+name = "az4-n4090"
+nodes = 4
+[[partition]]
+name = "az5-a890m"
+nodes = 4
+"#,
+        )
+        .unwrap();
+        let parts = doc["partition"].as_table_array().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(Value::get_str(&parts[0], "name").unwrap(), "az4-n4090");
+        assert_eq!(Value::get_str(&parts[1], "name").unwrap(), "az5-a890m");
+    }
+
+    #[test]
+    fn arrays_and_comments() {
+        let doc = parse(
+            r#"
+# header comment
+sizes = [1, 2, 3]   # inline comment
+names = ["a", "b#c"]
+empty = []
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            doc["sizes"].as_array().unwrap(),
+            &[Value::Int(1), Value::Int(2), Value::Int(3)]
+        );
+        assert_eq!(
+            doc["names"].as_array().unwrap()[1],
+            Value::Str("b#c".into())
+        );
+        assert!(doc["empty"].as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn underscore_separators_in_numbers() {
+        let doc = parse("big = 2_500_000_000\n").unwrap();
+        assert_eq!(Value::get_int(&doc, "big").unwrap(), 2_500_000_000);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let e = parse("a = 1\na = 2\n").unwrap_err();
+        assert!(matches!(e, TomlError::DuplicateKey(2, k) if k == "a"));
+    }
+
+    #[test]
+    fn bad_syntax_reports_line() {
+        let e = parse("ok = 1\nnot a kv\n").unwrap_err();
+        assert!(matches!(e, TomlError::Syntax(2, _)));
+    }
+
+    #[test]
+    fn missing_and_wrong_type_errors() {
+        let doc = parse("x = 1\n").unwrap();
+        assert_eq!(
+            Value::get_str(&doc, "y").unwrap_err(),
+            TomlError::Missing("y".into())
+        );
+        assert_eq!(
+            Value::get_str(&doc, "x").unwrap_err(),
+            TomlError::Type("x".into(), "string")
+        );
+    }
+
+    #[test]
+    fn keys_under_table_array_element() {
+        let doc = parse(
+            r#"
+[[p]]
+name = "one"
+[p.extra]
+flag = true
+"#,
+        )
+        .unwrap();
+        let parts = doc["p"].as_table_array().unwrap();
+        let extra = parts[0]["extra"].as_table().unwrap();
+        assert!(Value::get_bool(extra, "flag").unwrap());
+    }
+
+    #[test]
+    fn unterminated_string_rejected() {
+        assert!(matches!(parse("s = \"oops\n"), Err(TomlError::Syntax(1, _))));
+    }
+}

@@ -1,0 +1,339 @@
+//! The `Cluster` façade: one object a user program (or the CLI) drives.
+//!
+//! Composition per the paper:
+//!   * the SLURM controller with the §3.4 power policy (ground-truth
+//!     power/energy integration lives there);
+//!   * one §4 main board per compute node, whose probe samples that
+//!     ground-truth signal at 1000 SPS / mW resolution — co-simulated
+//!     between scheduler events (power is piecewise constant there);
+//!   * the LDAP user directory and the §4.3 energy API;
+//!   * optionally a PJRT runtime: payload-backed jobs execute the real
+//!     AOT artifact once on the request path (correctness + FLOPs
+//!     grounding), then the simulated duration scales those FLOPs to
+//!     the target node's roofline.
+
+use std::collections::BTreeMap;
+
+use crate::config::ClusterConfig;
+use crate::energy::{EnergyApi, MainBoard, ProbeConfig};
+use crate::power::Activity;
+use crate::runtime::PjRtRuntime;
+use crate::services::auth::UserDb;
+use crate::sim::SimTime;
+use crate::slurm::{JobId, JobSpec, Slurm};
+use crate::util::Xoshiro256;
+
+/// Cluster-level summary for reports.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub now: SimTime,
+    pub jobs_completed: u64,
+    pub jobs_pending: usize,
+    pub cluster_watts: f64,
+    pub true_energy_j: f64,
+    /// energy integrated from probe samples (should track true_energy)
+    pub measured_energy_j: f64,
+    pub samples: u64,
+}
+
+/// Assumed sustained fraction of a node's roofline for payload jobs.
+/// GEMM-class kernels on consumer CPUs sustain roughly a quarter of
+/// peak FMA throughput; documented in DESIGN.md §Perf.
+const CPU_EFFICIENCY: f64 = 0.25;
+const GPU_EFFICIENCY: f64 = 0.30;
+
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub slurm: Slurm,
+    pub energy: EnergyApi,
+    pub users: UserDb,
+    pub runtime: Option<PjRtRuntime>,
+    rng: Xoshiro256,
+    /// nodes with probes attached (board key = node name)
+    node_names: Vec<String>,
+    sampled_to: SimTime,
+}
+
+impl Cluster {
+    /// Build the full cluster; `artifact_dir = None` runs without the
+    /// PJRT runtime (synthetic workloads only).
+    pub fn new(cfg: ClusterConfig, artifact_dir: Option<&str>) -> anyhow::Result<Self> {
+        let slurm = Slurm::from_config(&cfg);
+        let mut rng = Xoshiro256::new(cfg.seed);
+        let mut energy = EnergyApi::new();
+        let mut node_names = Vec::new();
+        let probe_cfg = ProbeConfig {
+            adc_sps: cfg.energy.sample_rate_sps * 4,
+            ..ProbeConfig::default()
+        };
+        for pc in &cfg.partitions {
+            for n in 0..pc.nodes {
+                let name = format!("{}-{}", pc.name, n);
+                let mut board = MainBoard::new(name.clone());
+                for probe in 0..cfg.energy.probes_per_node {
+                    board
+                        .attach_probe(
+                            probe as u8,
+                            probe_cfg.clone(),
+                            rng.fork(&format!("{name}/p{probe}")),
+                            4096,
+                        )
+                        .expect("config bounds probes to 12");
+                }
+                energy.add_board(board);
+                node_names.push(name);
+            }
+        }
+        let mut users = UserDb::new();
+        users.add_user("root", true).expect("fresh db");
+        let runtime = match artifact_dir {
+            Some(dir) => Some(PjRtRuntime::load(dir)?),
+            None => None,
+        };
+        Ok(Self {
+            cfg,
+            slurm,
+            energy,
+            users,
+            runtime,
+            rng,
+            node_names,
+            sampled_to: SimTime::ZERO,
+        })
+    }
+
+    pub fn add_user(&mut self, login: &str) {
+        let _ = self.users.add_user(login, false);
+    }
+
+    /// Submit a synthetic job.
+    pub fn submit(&mut self, spec: JobSpec, now: SimTime) -> anyhow::Result<JobId> {
+        Ok(self.slurm.submit_at(spec, now)?)
+    }
+
+    /// Submit a payload-backed job: executes the AOT artifact once for
+    /// real (grounding + checksum), then simulates `iters` iterations
+    /// on the target partition's hardware.
+    pub fn submit_payload(
+        &mut self,
+        user: &str,
+        partition: &str,
+        nodes: u32,
+        payload: &str,
+        iters: u64,
+        now: SimTime,
+    ) -> anyhow::Result<JobId> {
+        let rt = self
+            .runtime
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("no PJRT runtime loaded"))?;
+        let report = rt.execute(payload, self.cfg.seed ^ iters)?;
+        anyhow::ensure!(
+            report.output_sum.is_finite(),
+            "payload `{payload}` produced non-finite output"
+        );
+        let spec_part = crate::config::cluster::resolve_partition(partition)
+            .ok_or_else(|| anyhow::anyhow!("unknown partition `{partition}`"))?;
+        // GPU-heavy payloads run on the dGPU where one exists
+        let on_gpu = spec_part.node.dgpu.is_some()
+            && (payload.starts_with("gemm") || payload.starts_with("cnn"));
+        let (roofline, eff, activity) = if on_gpu {
+            (
+                spec_part.node.dgpu.as_ref().expect("checked").peak_f32(),
+                GPU_EFFICIENCY,
+                Activity {
+                    cpu: 0.3,
+                    dgpu: 0.95,
+                    igpu: 0.0,
+                },
+            )
+        } else {
+            (
+                spec_part
+                    .node
+                    .cpu
+                    .peak_ops_accumulated(crate::hw::cpu::Instr::FmaF32),
+                CPU_EFFICIENCY,
+                Activity::cpu_only(0.95),
+            )
+        };
+        let total_flops = report.flops as f64 * iters as f64;
+        let per_node = total_flops / nodes as f64;
+        let secs = per_node / (roofline * eff);
+        let duration = SimTime::from_secs_f64(secs.max(1e-3));
+        let spec = JobSpec {
+            user: user.into(),
+            partition: partition.into(),
+            nodes,
+            duration,
+            time_limit: duration + SimTime::from_mins(10),
+            payload: Some(payload.into()),
+            activity,
+        };
+        Ok(self.slurm.submit_at(spec, now)?)
+    }
+
+    /// Advance the whole cluster to `t`. When `sample` is set, the §4
+    /// boards sample every node's (piecewise-constant) power signal at
+    /// the configured rate, replayed exactly from the scheduler's power
+    /// history — sampling therefore never misses energy, regardless of
+    /// how the scheduler clock advanced (submissions, run_until calls).
+    pub fn run_until(&mut self, t: SimTime, sample: bool) {
+        self.slurm.run_until(t);
+        if !sample {
+            return;
+        }
+        let from = self.sampled_to;
+        for name in &self.node_names {
+            let hist = self.slurm.node_history(name).expect("known node");
+            let board = match self.energy.board_mut(name) {
+                Ok(b) => b,
+                Err(_) => continue,
+            };
+            let nprobes = self.cfg.energy.probes_per_node as u8;
+            // walk the change points covering (from, t]
+            for (i, &(start, w)) in hist.iter().enumerate() {
+                let seg_end = hist.get(i + 1).map(|(s, _)| *s).unwrap_or(t).min(t);
+                if seg_end <= from || start >= t {
+                    continue;
+                }
+                let sigs: BTreeMap<u8, _> =
+                    (0..nprobes).map(|p| (p, move |_t: SimTime| w)).collect();
+                board.poll(seg_end, &sigs);
+            }
+        }
+        // §4.3 admin power actions queued via the energy API
+        for action in self.energy.drain_actions() {
+            let _ = action; // manual power control is reported, not forced
+        }
+        self.sampled_to = t;
+        self.slurm.gc_history(t);
+    }
+
+    /// Current summary.
+    pub fn report(&self) -> ClusterReport {
+        let samples = self
+            .energy
+            .boards()
+            .map(|b| {
+                (0..self.cfg.energy.probes_per_node as u8)
+                    .filter_map(|p| b.store(p).ok())
+                    .map(|s| s.total_samples())
+                    .sum::<u64>()
+            })
+            .sum();
+        ClusterReport {
+            now: self.slurm.now(),
+            jobs_completed: self.slurm.stats.completed,
+            jobs_pending: self.slurm.pending_count(),
+            cluster_watts: self.slurm.cluster_watts(),
+            true_energy_j: self.slurm.total_energy_j(),
+            measured_energy_j: self.energy.total_energy_j(),
+            samples,
+        }
+    }
+
+    /// Deterministic sub-RNG for workload generators.
+    pub fn fork_rng(&mut self, label: &str) -> Xoshiro256 {
+        self.rng.fork(label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::JobState;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig::dalek_default(), None).unwrap()
+    }
+
+    fn artifacts_dir() -> Option<&'static str> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir)
+            .join("manifest.json")
+            .exists()
+            .then_some(dir)
+    }
+
+    #[test]
+    fn builds_16_boards() {
+        let c = cluster();
+        assert_eq!(c.energy.boards().count(), 16);
+        assert_eq!(c.node_names.len(), 16);
+    }
+
+    #[test]
+    fn measured_energy_tracks_truth() {
+        let mut c = cluster();
+        c.submit(JobSpec::cpu("root", "az5-a890m", 2, 120), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_mins(8), true);
+        let r = c.report();
+        assert!(r.samples > 0);
+        assert!(r.true_energy_j > 0.0);
+        // probes quantize to mW and add noise; agreement within 1%
+        let rel = (r.measured_energy_j - r.true_energy_j).abs() / r.true_energy_j;
+        assert!(rel < 0.01, "rel error {rel}: {r:?}");
+    }
+
+    #[test]
+    fn sampling_rate_is_configured_1000_sps() {
+        let mut c = cluster();
+        c.run_until(SimTime::from_secs(10), true);
+        let r = c.report();
+        // 16 nodes x 1 probe x 1000 SPS x 10 s
+        let expect = 16.0 * 1000.0 * 10.0;
+        let got = r.samples as f64;
+        assert!((got - expect).abs() / expect < 0.01, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn unsampled_run_is_cheap_and_equivalent_in_truth() {
+        let mut a = cluster();
+        let mut b = cluster();
+        a.submit(JobSpec::cpu("root", "az4-n4090", 4, 300), SimTime::ZERO)
+            .unwrap();
+        b.submit(JobSpec::cpu("root", "az4-n4090", 4, 300), SimTime::ZERO)
+            .unwrap();
+        a.run_until(SimTime::from_mins(30), false);
+        b.run_until(SimTime::from_mins(30), true);
+        let (ra, rb) = (a.report(), b.report());
+        assert_eq!(ra.jobs_completed, rb.jobs_completed);
+        assert!((ra.true_energy_j - rb.true_energy_j).abs() < 1e-6);
+        assert_eq!(ra.samples, 0);
+    }
+
+    #[test]
+    fn payload_job_runs_real_artifact_then_simulates() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut c = Cluster::new(ClusterConfig::dalek_default(), Some(dir)).unwrap();
+        c.add_user("alice");
+        let id = c
+            .submit_payload("alice", "az4-n4090", 2, "gemm256", 50_000, SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_hours(2), false);
+        let job = c.slurm.job(id).unwrap();
+        assert_eq!(job.state, JobState::Completed, "{:?}", job.state);
+        assert_eq!(job.spec.payload.as_deref(), Some("gemm256"));
+        // GPU-backed duration: 50k x 33.5 MFLOP / 2 nodes on 4090s
+        // (≈0.84 TFLOP/node over a ~25 TFLOP/s effective roofline)
+        let d = job.spec.duration.as_secs_f64();
+        assert!(d > 0.01 && d < 600.0, "duration {d}");
+        // sanity: the same payload on the CPU-only partition is slower
+        let id2 = c
+            .submit_payload("alice", "az5-a890m", 2, "gemm256", 50_000, c.slurm.now())
+            .unwrap();
+        c.run_until(c.slurm.now() + SimTime::from_hours(4), false);
+        let d2 = c.slurm.job(id2).unwrap().spec.duration.as_secs_f64();
+        assert!(d2 > 5.0 * d, "CPU {d2} vs GPU {d}");
+    }
+
+    #[test]
+    fn payload_requires_runtime() {
+        let mut c = cluster();
+        assert!(c
+            .submit_payload("root", "az4-n4090", 1, "gemm256", 1, SimTime::ZERO)
+            .is_err());
+    }
+}

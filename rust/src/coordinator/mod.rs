@@ -1,0 +1,14 @@
+//! The frontend daemon: everything `front.dalek` does, wired together.
+//!
+//! * [`cluster`] — the `Cluster` façade: SLURM controller + energy
+//!   measurement platform + user directory + (optionally) the PJRT
+//!   runtime executing real AOT payloads on the request path
+//! * [`trace`] — workload trace generation and replay, producing the
+//!   end-to-end reports (throughput, wait, energy) of the examples and
+//!   the e2e bench
+
+pub mod cluster;
+pub mod trace;
+
+pub use cluster::{Cluster, ClusterReport};
+pub use trace::{ReplayReport, TraceEvent, TraceGen};

@@ -1,0 +1,221 @@
+//! The user-facing API of §4.3, mirroring the planned C API:
+//!
+//! * retrieve measured samples                      — all users
+//! * associate tags via the GPIO inputs             — all users
+//! * control node power states (manual on/off)      — administrators only
+//!
+//! Permissions come from the LDAP [`UserDb`] (§3.2); the power-control
+//! restriction is enforced here rather than in the board, matching the
+//! paper's split between the measurement plane and the control plane.
+
+use std::collections::BTreeMap;
+
+use super::board::{BoardError, MainBoard};
+use super::probe::Sample;
+use crate::services::auth::{AuthError, UserDb};
+use crate::sim::SimTime;
+
+/// A requested power action (executed by the coordinator).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PowerAction {
+    On(String),
+    Off(String),
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ApiError {
+    #[error("restricted to administrators")]
+    AdminOnly,
+    #[error(transparent)]
+    Auth(#[from] AuthError),
+    #[error(transparent)]
+    Board(#[from] BoardError),
+    #[error("no board for node `{0}`")]
+    NoBoard(String),
+}
+
+/// The platform API over all boards in the cluster.
+pub struct EnergyApi {
+    boards: BTreeMap<String, MainBoard>,
+    /// power actions queued for the coordinator
+    pending_actions: Vec<PowerAction>,
+}
+
+impl EnergyApi {
+    pub fn new() -> Self {
+        Self {
+            boards: BTreeMap::new(),
+            pending_actions: Vec::new(),
+        }
+    }
+
+    pub fn add_board(&mut self, board: MainBoard) {
+        self.boards.insert(board.node.clone(), board);
+    }
+
+    pub fn board(&self, node: &str) -> Result<&MainBoard, ApiError> {
+        self.boards
+            .get(node)
+            .ok_or_else(|| ApiError::NoBoard(node.into()))
+    }
+
+    pub fn board_mut(&mut self, node: &str) -> Result<&mut MainBoard, ApiError> {
+        self.boards
+            .get_mut(node)
+            .ok_or_else(|| ApiError::NoBoard(node.into()))
+    }
+
+    pub fn boards(&self) -> impl Iterator<Item = &MainBoard> {
+        self.boards.values()
+    }
+
+    /// §4.3: retrieve samples — available to all users.
+    pub fn get_samples(
+        &self,
+        db: &UserDb,
+        login: &str,
+        node: &str,
+        probe: u8,
+        window: (SimTime, SimTime),
+    ) -> Result<Vec<Sample>, ApiError> {
+        db.user(login)?; // must exist, no admin needed
+        Ok(self.board(node)?.store(probe)?.window(window.0, window.1))
+    }
+
+    /// §4.3: tag samples via GPIO — available to all users.
+    pub fn set_tag(
+        &mut self,
+        db: &UserDb,
+        login: &str,
+        node: &str,
+        line: u8,
+        high: bool,
+    ) -> Result<(), ApiError> {
+        db.user(login)?;
+        self.board_mut(node)?.set_gpio(line, high);
+        Ok(())
+    }
+
+    /// §4.3: manual power control — administrators only.
+    pub fn power(
+        &mut self,
+        db: &UserDb,
+        login: &str,
+        action: PowerAction,
+    ) -> Result<(), ApiError> {
+        let user = db.user(login)?;
+        if !user.admin {
+            return Err(ApiError::AdminOnly);
+        }
+        self.pending_actions.push(action);
+        Ok(())
+    }
+
+    /// Coordinator drains queued power actions each tick.
+    pub fn drain_actions(&mut self) -> Vec<PowerAction> {
+        std::mem::take(&mut self.pending_actions)
+    }
+
+    /// Cluster-wide measured energy, joules.
+    pub fn total_energy_j(&self) -> f64 {
+        self.boards.values().map(|b| b.total_energy_j()).sum()
+    }
+}
+
+impl Default for EnergyApi {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::probe::ProbeConfig;
+    use crate::util::Xoshiro256;
+    use std::collections::BTreeMap;
+
+    fn setup() -> (EnergyApi, UserDb) {
+        let mut api = EnergyApi::new();
+        let mut board = MainBoard::new("az4-n4090-0.dalek");
+        board
+            .attach_probe(0, ProbeConfig::default(), Xoshiro256::new(5), 10_000)
+            .unwrap();
+        let sigs: BTreeMap<u8, _> = [(0u8, |_t: SimTime| 42.0)].into_iter().collect();
+        board.poll(SimTime::from_ms(100), &sigs);
+        api.add_board(board);
+        let mut db = UserDb::new();
+        db.add_user("alice", false).unwrap();
+        db.add_user("root", true).unwrap();
+        (api, db)
+    }
+
+    #[test]
+    fn any_user_reads_samples() {
+        let (api, db) = setup();
+        let samples = api
+            .get_samples(
+                &db,
+                "alice",
+                "az4-n4090-0.dalek",
+                0,
+                (SimTime::ZERO, SimTime::from_ms(100)),
+            )
+            .unwrap();
+        assert!(!samples.is_empty());
+        assert!((samples[0].power_w - 42.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn unknown_user_rejected() {
+        let (api, db) = setup();
+        let e = api.get_samples(
+            &db,
+            "mallory",
+            "az4-n4090-0.dalek",
+            0,
+            (SimTime::ZERO, SimTime::from_ms(1)),
+        );
+        assert!(matches!(e, Err(ApiError::Auth(_))));
+    }
+
+    #[test]
+    fn any_user_tags() {
+        let (mut api, db) = setup();
+        api.set_tag(&db, "alice", "az4-n4090-0.dalek", 2, true)
+            .unwrap();
+        assert!(api.board("az4-n4090-0.dalek").unwrap().gpio().get(2));
+    }
+
+    #[test]
+    fn power_control_admin_only() {
+        let (mut api, db) = setup();
+        let act = PowerAction::Off("az4-n4090-0.dalek".into());
+        assert_eq!(
+            api.power(&db, "alice", act.clone()),
+            Err(ApiError::AdminOnly)
+        );
+        api.power(&db, "root", act.clone()).unwrap();
+        assert_eq!(api.drain_actions(), vec![act]);
+        assert!(api.drain_actions().is_empty()); // drained
+    }
+
+    #[test]
+    fn missing_board_or_probe() {
+        let (api, db) = setup();
+        assert!(matches!(
+            api.get_samples(&db, "alice", "nope", 0, (SimTime::ZERO, SimTime::ZERO)),
+            Err(ApiError::NoBoard(_))
+        ));
+        assert!(matches!(
+            api.get_samples(
+                &db,
+                "alice",
+                "az4-n4090-0.dalek",
+                9,
+                (SimTime::ZERO, SimTime::ZERO)
+            ),
+            Err(ApiError::Board(_))
+        ));
+    }
+}

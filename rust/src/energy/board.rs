@@ -1,0 +1,254 @@
+//! The main board (paper §4.1): a PIC18-class aggregator with two I2C
+//! connectors (≤ 6 daisy-chained probes each), USB power/telemetry, and
+//! eight GPIO inputs whose state is latched into every sample — the
+//! mechanism that lets experiments tag "this window was function f()".
+
+use std::collections::BTreeMap;
+
+use super::bus::{BusError, I2cBus};
+use super::probe::{Ina228Probe, PowerSignal, ProbeConfig, Sample};
+use super::store::SampleStore;
+use crate::sim::SimTime;
+use crate::util::Xoshiro256;
+
+/// The 8 GPIO tag lines.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GpioTags(pub u8);
+
+impl GpioTags {
+    pub fn set(&mut self, line: u8, high: bool) {
+        assert!(line < 8, "eight GPIOs (§4.1)");
+        if high {
+            self.0 |= 1 << line;
+        } else {
+            self.0 &= !(1 << line);
+        }
+    }
+
+    pub fn get(&self, line: u8) -> bool {
+        assert!(line < 8);
+        self.0 & (1 << line) != 0
+    }
+}
+
+/// One main board with its probes and stores.
+pub struct MainBoard {
+    pub node: String,
+    chains: [I2cBus; 2],
+    probes: BTreeMap<u8, Ina228Probe>,
+    stores: BTreeMap<u8, SampleStore>,
+    tags: GpioTags,
+    /// last time the board polled its probes
+    polled_to: SimTime,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum BoardError {
+    #[error("both chains full (12 probes max)")]
+    Full,
+    #[error(transparent)]
+    Bus(#[from] BusError),
+    #[error("unknown probe {0}")]
+    UnknownProbe(u8),
+}
+
+impl MainBoard {
+    pub fn new(node: impl Into<String>) -> Self {
+        Self {
+            node: node.into(),
+            chains: [I2cBus::new(), I2cBus::new()],
+            probes: BTreeMap::new(),
+            stores: BTreeMap::new(),
+            tags: GpioTags::default(),
+            polled_to: SimTime::ZERO,
+        }
+    }
+
+    /// Attach a probe to the first chain with room.
+    pub fn attach_probe(
+        &mut self,
+        id: u8,
+        cfg: ProbeConfig,
+        rng: Xoshiro256,
+        store_cap: usize,
+    ) -> Result<(), BoardError> {
+        let period = cfg.period();
+        let chain = self
+            .chains
+            .iter_mut()
+            .find(|c| c.probes().len() < super::bus::MAX_PROBES_PER_CHAIN)
+            .ok_or(BoardError::Full)?;
+        chain.attach(id)?;
+        self.probes.insert(id, Ina228Probe::new(id, cfg, rng));
+        self.stores.insert(id, SampleStore::new(store_cap, period));
+        Ok(())
+    }
+
+    pub fn probe_count(&self) -> usize {
+        self.probes.len()
+    }
+
+    /// Effective per-probe rate after I2C arbitration (§4.1).
+    pub fn effective_sps(&self, probe_id: u8) -> Option<f64> {
+        let requested = self.probes.get(&probe_id)?.cfg.reported_sps();
+        let chain = self
+            .chains
+            .iter()
+            .find(|c| c.probes().contains(&probe_id))?;
+        Some(chain.effective_sps(requested))
+    }
+
+    /// Set a GPIO line; takes effect for samples emitted afterwards.
+    pub fn set_gpio(&mut self, line: u8, high: bool) {
+        self.tags.set(line, high);
+    }
+
+    pub fn gpio(&self) -> GpioTags {
+        self.tags
+    }
+
+    /// Poll every probe up to `now` against its signal, pushing
+    /// averaged samples into the per-probe stores. `signals` maps probe
+    /// id → the true power signal it sits on.
+    pub fn poll<S: PowerSignal>(
+        &mut self,
+        now: SimTime,
+        signals: &BTreeMap<u8, S>,
+    ) -> usize {
+        let mut emitted = 0;
+        let tags = self.tags.0;
+        for (id, probe) in self.probes.iter_mut() {
+            let Some(sig) = signals.get(id) else { continue };
+            let store = self.stores.get_mut(id).expect("store per probe");
+            // allocation-free hot path: samples stream into the store
+            probe.sample_with(sig, now, tags, |s| {
+                store.push(s);
+                emitted += 1;
+            });
+        }
+        self.polled_to = now;
+        emitted
+    }
+
+    pub fn store(&self, probe_id: u8) -> Result<&SampleStore, BoardError> {
+        self.stores
+            .get(&probe_id)
+            .ok_or(BoardError::UnknownProbe(probe_id))
+    }
+
+    /// Total energy across all probes, joules.
+    pub fn total_energy_j(&self) -> f64 {
+        self.stores.values().map(|s| s.energy_j()).sum()
+    }
+
+    /// Most recent samples of a probe (§4.3 "retrieve measured samples").
+    pub fn recent(&self, probe_id: u8, n: usize) -> Result<Vec<Sample>, BoardError> {
+        let st = self.store(probe_id)?;
+        let from = st.len().saturating_sub(n);
+        Ok(st
+            .window(SimTime::ZERO, SimTime(u64::MAX))
+            .split_off(from))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn board_with(n: usize) -> MainBoard {
+        let mut b = MainBoard::new("az4-n4090-0");
+        let mut rng = Xoshiro256::new(1);
+        for i in 0..n {
+            b.attach_probe(i as u8, ProbeConfig::default(), rng.fork("p"), 100_000)
+                .unwrap();
+        }
+        b
+    }
+
+    fn signals(n: usize, w: f64) -> BTreeMap<u8, impl PowerSignal> {
+        (0..n as u8).map(move |i| (i, move |_t: SimTime| w)).collect()
+    }
+
+    #[test]
+    fn twelve_probes_max() {
+        let mut b = board_with(12);
+        assert_eq!(b.probe_count(), 12);
+        let e = b.attach_probe(99, ProbeConfig::default(), Xoshiro256::new(9), 10);
+        assert_eq!(e, Err(BoardError::Full));
+    }
+
+    #[test]
+    fn six_per_chain_keeps_full_rate() {
+        let b = board_with(12);
+        // both chains carry 6 probes -> each still achieves 1000 SPS
+        for i in 0..12 {
+            assert!((b.effective_sps(i).unwrap() - 1000.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn polling_fills_stores() {
+        let mut b = board_with(2);
+        let sigs = signals(2, 55.0);
+        let emitted = b.poll(SimTime::from_secs(1), &sigs);
+        assert!((emitted as i64 - 2 * 1000).abs() <= 2, "{emitted}");
+        for i in 0..2 {
+            let st = b.store(i).unwrap();
+            assert!((st.mean_w() - 55.0).abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn energy_accumulates_across_polls() {
+        let mut b = board_with(1);
+        let sigs = signals(1, 100.0);
+        b.poll(SimTime::from_ms(500), &sigs);
+        b.poll(SimTime::from_secs(1), &sigs);
+        // ~100 J after 1 s at 100 W
+        assert!((b.total_energy_j() - 100.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn gpio_tags_latched_into_samples() {
+        let mut b = board_with(1);
+        let sigs = signals(1, 10.0);
+        b.poll(SimTime::from_ms(100), &sigs);
+        b.set_gpio(3, true);
+        b.poll(SimTime::from_ms(200), &sigs);
+        b.set_gpio(3, false);
+        b.poll(SimTime::from_ms(300), &sigs);
+        let st = b.store(0).unwrap();
+        let tagged = st.tagged(1 << 3);
+        assert!(!tagged.is_empty());
+        // tagged samples all lie in the [100, 200] ms window
+        for s in tagged {
+            assert!(s.t > SimTime::from_ms(99) && s.t <= SimTime::from_ms(201));
+        }
+    }
+
+    #[test]
+    fn gpio_line_bounds() {
+        let mut t = GpioTags::default();
+        t.set(7, true);
+        assert!(t.get(7));
+        t.set(7, false);
+        assert!(!t.get(7));
+    }
+
+    #[test]
+    #[should_panic(expected = "eight GPIOs")]
+    fn ninth_gpio_panics() {
+        GpioTags::default().set(8, true);
+    }
+
+    #[test]
+    fn recent_returns_tail() {
+        let mut b = board_with(1);
+        let sigs = signals(1, 1.0);
+        b.poll(SimTime::from_secs(1), &sigs);
+        let recent = b.recent(0, 10).unwrap();
+        assert_eq!(recent.len(), 10);
+        assert!(recent[9].t > recent[0].t);
+        assert!(b.recent(42, 1).is_err());
+    }
+}

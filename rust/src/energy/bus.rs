@@ -1,0 +1,149 @@
+//! I2C chain arbiter (paper §4.1): "the I2C bus is the primary
+//! performance bottleneck, and a maximum sampling rate of 1000 SPS can
+//! be achieved when six probes are connected to a single bus."
+//!
+//! A sample readout is one I2C transaction (address + VBUS/CURRENT/
+//! POWER register reads + the averaging counter); at 400 kHz fast mode
+//! that is ≈166 µs on the wire, giving the chain a capacity of ≈6000
+//! transactions per second — exactly six probes at 1000 SPS. More
+//! probes (or a higher requested rate) degrade every probe's effective
+//! rate fairly.
+
+/// One I2C chain (one of the main board's two connectors).
+#[derive(Clone, Debug)]
+pub struct I2cBus {
+    /// wire time of one full sample readout, seconds
+    pub transaction_secs: f64,
+    /// probes daisy-chained on this connector (≤ 6, §4.1)
+    probes: Vec<u8>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum BusError {
+    #[error("chain full: six probes max per connector (§4.1)")]
+    ChainFull,
+    #[error("probe {0} already on the chain")]
+    Duplicate(u8),
+}
+
+pub const MAX_PROBES_PER_CHAIN: usize = 6;
+
+impl Default for I2cBus {
+    fn default() -> Self {
+        Self {
+            // 400 kHz I2C, ~8 register-bytes + addressing/acks per sample
+            transaction_secs: 1.0 / 6000.0,
+            probes: Vec::new(),
+        }
+    }
+}
+
+impl I2cBus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn attach(&mut self, probe_id: u8) -> Result<(), BusError> {
+        if self.probes.len() >= MAX_PROBES_PER_CHAIN {
+            return Err(BusError::ChainFull);
+        }
+        if self.probes.contains(&probe_id) {
+            return Err(BusError::Duplicate(probe_id));
+        }
+        self.probes.push(probe_id);
+        Ok(())
+    }
+
+    pub fn detach(&mut self, probe_id: u8) -> bool {
+        if let Some(i) = self.probes.iter().position(|p| *p == probe_id) {
+            self.probes.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn probes(&self) -> &[u8] {
+        &self.probes
+    }
+
+    /// Transactions per second the wire can carry.
+    pub fn capacity_tps(&self) -> f64 {
+        1.0 / self.transaction_secs
+    }
+
+    /// Effective per-probe sample rate when every probe requests
+    /// `requested_sps`: fair-share capped by the wire.
+    pub fn effective_sps(&self, requested_sps: f64) -> f64 {
+        if self.probes.is_empty() {
+            return 0.0;
+        }
+        let fair = self.capacity_tps() / self.probes.len() as f64;
+        requested_sps.min(fair)
+    }
+
+    /// Is the chain currently saturated at this request rate?
+    pub fn saturated(&self, requested_sps: f64) -> bool {
+        !self.probes.is_empty()
+            && requested_sps * self.probes.len() as f64 > self.capacity_tps() * (1.0 + 1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_with(n: usize) -> I2cBus {
+        let mut b = I2cBus::new();
+        for i in 0..n {
+            b.attach(i as u8).unwrap();
+        }
+        b
+    }
+
+    #[test]
+    fn six_probes_hold_1000_sps() {
+        // the paper's §4.1 headline
+        let b = chain_with(6);
+        assert!((b.effective_sps(1000.0) - 1000.0).abs() < 1e-6);
+        assert!(!b.saturated(1000.0));
+    }
+
+    #[test]
+    fn oversubscription_degrades_fairly() {
+        let b = chain_with(6);
+        // asking 2000 SPS from six probes: wire caps at 1000 each
+        assert!((b.effective_sps(2000.0) - 1000.0).abs() < 1e-6);
+        assert!(b.saturated(2000.0));
+    }
+
+    #[test]
+    fn fewer_probes_can_go_faster() {
+        let b = chain_with(2);
+        // two probes can each be read 3000 times per second
+        assert!((b.effective_sps(3000.0) - 3000.0).abs() < 1e-6);
+        assert!((b.effective_sps(4000.0) - 3000.0).abs() < 1e-6); // capped
+    }
+
+    #[test]
+    fn chain_limit_enforced() {
+        let mut b = chain_with(6);
+        assert_eq!(b.attach(7), Err(BusError::ChainFull));
+    }
+
+    #[test]
+    fn duplicate_rejected_detach_works() {
+        let mut b = chain_with(2);
+        assert_eq!(b.attach(0), Err(BusError::Duplicate(0)));
+        assert!(b.detach(0));
+        assert!(!b.detach(0));
+        assert!(b.attach(0).is_ok());
+    }
+
+    #[test]
+    fn empty_chain_zero_rate() {
+        let b = I2cBus::new();
+        assert_eq!(b.effective_sps(1000.0), 0.0);
+        assert!(!b.saturated(1000.0));
+    }
+}

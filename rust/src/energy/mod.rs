@@ -1,0 +1,27 @@
+//! The energy measurement platform (paper §4): an open-hardware main
+//! board (PIC18) aggregating up to twelve INA228-based probes over two
+//! I2C chains, delivering 1000 averaged samples per second with
+//! milliwatt resolution, plus 8 GPIO tag inputs for code-segment
+//! synchronization.
+//!
+//! * [`probe`] — the INA228 digital power monitor model: 4000 SPS ADC,
+//!   ×4 averaging → 1000 reported SPS, mW quantization, shunt noise
+//! * [`bus`] — the I2C chain arbiter: the bandwidth bottleneck that caps
+//!   six probes at 1000 SPS each (§4.1)
+//! * [`board`] — the main board: two chains, sample aggregation, GPIO tags
+//! * [`store`] — sample storage with windowed energy integration
+//! * [`api`] — the user-facing API of §4.3 (read samples / tag / power
+//!   control, with the admin restriction)
+
+pub mod api;
+pub mod board;
+pub mod bus;
+pub mod probe;
+pub mod rails;
+pub mod store;
+
+pub use api::{ApiError, EnergyApi};
+pub use board::{GpioTags, MainBoard};
+pub use bus::I2cBus;
+pub use probe::{Ina228Probe, PowerSignal, ProbeConfig, Sample};
+pub use store::SampleStore;

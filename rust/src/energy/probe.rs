@@ -1,0 +1,291 @@
+//! INA228 probe model (paper §4.2).
+//!
+//! The physical part samples its shunt/bus ADCs at up to 10 kSPS; the
+//! paper configures 4 kSPS to trade rate for resolution, then averages
+//! four conversions so the reported stream is 1000 SPS. Each reported
+//! sample carries averaged voltage, current and power plus the count of
+//! conversions that entered the average (`n_avg`), exactly as §4.1
+//! describes. Power is quantized to the platform's milliwatt LSB.
+
+use crate::sim::SimTime;
+use crate::util::Xoshiro256;
+
+/// Anything that can tell the probe the true instantaneous draw.
+pub trait PowerSignal {
+    /// true watts at time `t`
+    fn watts(&self, t: SimTime) -> f64;
+    /// supply voltage at time `t` (USB-PD: 20 V class, or 12 V rails)
+    fn volts(&self, _t: SimTime) -> f64 {
+        20.0
+    }
+}
+
+impl<F: Fn(SimTime) -> f64> PowerSignal for F {
+    fn watts(&self, t: SimTime) -> f64 {
+        self(t)
+    }
+}
+
+/// One reported (averaged) sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sample {
+    pub t: SimTime,
+    pub voltage_v: f64,
+    pub current_a: f64,
+    /// averaged power, quantized to the mW LSB
+    pub power_w: f64,
+    /// conversions averaged into this sample (§4.1 reports this)
+    pub n_avg: u8,
+    /// GPIO tag bitmask captured with the sample (§4.1)
+    pub tags: u8,
+}
+
+impl Sample {
+    /// Energy contribution of this sample over its period, joules.
+    pub fn energy_j(&self, period: SimTime) -> f64 {
+        self.power_w * period.as_secs_f64()
+    }
+}
+
+/// Probe configuration.
+#[derive(Clone, Debug)]
+pub struct ProbeConfig {
+    /// internal ADC conversions per second (paper: 4000, max 10000)
+    pub adc_sps: u32,
+    /// conversions averaged per reported sample (paper: 4 -> 1000 SPS)
+    pub avg_count: u32,
+    /// reported power LSB, watts (paper: milliwatt-level)
+    pub power_lsb_w: f64,
+    /// ADC noise sigma as a fraction of reading + absolute floor (W)
+    pub noise_rel: f64,
+    pub noise_abs_w: f64,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        Self {
+            adc_sps: 4000,
+            avg_count: 4,
+            power_lsb_w: 1e-3,
+            noise_rel: 2e-4,
+            noise_abs_w: 2e-4,
+        }
+    }
+}
+
+impl ProbeConfig {
+    /// Reported sample rate (SPS) after averaging.
+    pub fn reported_sps(&self) -> f64 {
+        self.adc_sps as f64 / self.avg_count as f64
+    }
+
+    /// Reported sample period.
+    pub fn period(&self) -> SimTime {
+        SimTime::from_secs_f64(self.avg_count as f64 / self.adc_sps as f64)
+    }
+}
+
+/// The probe itself.
+pub struct Ina228Probe {
+    pub cfg: ProbeConfig,
+    pub id: u8,
+    rng: Xoshiro256,
+    /// next ADC conversion time
+    next_conv: SimTime,
+    /// cached conversion period in integer ns (hot-path: avoids a float
+    /// divide + round per conversion)
+    conv_period_ns: u64,
+    /// accumulated conversions for the current average window
+    acc_w: f64,
+    acc_v: f64,
+    acc_n: u32,
+}
+
+impl Ina228Probe {
+    pub fn new(id: u8, cfg: ProbeConfig, rng: Xoshiro256) -> Self {
+        let conv_period_ns = SimTime::from_secs_f64(1.0 / cfg.adc_sps as f64).as_ns();
+        Self {
+            cfg,
+            id,
+            rng,
+            next_conv: SimTime::ZERO,
+            conv_period_ns,
+            acc_w: 0.0,
+            acc_v: 0.0,
+            acc_n: 0,
+        }
+    }
+
+    /// Run the ADC up to (and including) time `until`, pushing averaged
+    /// samples into `sink` — the allocation-free hot path the main
+    /// board uses to feed sample stores directly.
+    pub fn sample_with<S: PowerSignal>(
+        &mut self,
+        signal: &S,
+        until: SimTime,
+        tags: u8,
+        mut sink: impl FnMut(Sample),
+    ) {
+        let inv_lsb = 1.0 / self.cfg.power_lsb_w;
+        let lsb = self.cfg.power_lsb_w;
+        let avg_count = self.cfg.avg_count;
+        let inv_avg = 1.0 / avg_count as f64;
+        while self.next_conv <= until {
+            let t = self.next_conv;
+            let true_w = signal.watts(t).max(0.0);
+            // single uniform draw per conversion (±√3 σ keeps the
+            // variance exact); the ×4 averaging re-normalizes the shape
+            const SQRT12: f64 = 3.464_101_615_137_754_6;
+            let noise = (self.cfg.noise_rel * true_w + self.cfg.noise_abs_w)
+                * ((self.rng.next_f64() - 0.5) * SQRT12);
+            self.acc_w += (true_w + noise).max(0.0);
+            self.acc_v += signal.volts(t);
+            self.acc_n += 1;
+            if self.acc_n == avg_count {
+                let w = self.acc_w * inv_avg;
+                let v = self.acc_v * inv_avg;
+                // quantize to the power LSB — the mW resolution claim
+                let wq = (w * inv_lsb).round() * lsb;
+                sink(Sample {
+                    t,
+                    voltage_v: v,
+                    current_a: if v > 0.0 { wq / v } else { 0.0 },
+                    power_w: wq,
+                    n_avg: avg_count as u8,
+                    tags,
+                });
+                self.acc_w = 0.0;
+                self.acc_v = 0.0;
+                self.acc_n = 0;
+            }
+            self.next_conv = SimTime(t.as_ns() + self.conv_period_ns);
+        }
+    }
+
+    /// Convenience wrapper returning the samples as a Vec.
+    pub fn sample_until<S: PowerSignal>(
+        &mut self,
+        signal: &S,
+        until: SimTime,
+        tags: u8,
+    ) -> Vec<Sample> {
+        let mut out = Vec::new();
+        self.sample_with(signal, until, tags, |s| out.push(s));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(cfg: ProbeConfig) -> Ina228Probe {
+        Ina228Probe::new(0, cfg, Xoshiro256::new(42))
+    }
+
+    #[test]
+    fn reported_rate_is_1000_sps() {
+        let cfg = ProbeConfig::default();
+        assert_eq!(cfg.reported_sps(), 1000.0);
+        assert_eq!(cfg.period(), SimTime::from_ms(1));
+        let mut p = probe(cfg);
+        let samples = p.sample_until(&|_t| 100.0, SimTime::from_secs(1), 0);
+        // 4000 conversions + t=0 conversion -> 1000 full averages
+        assert!((samples.len() as i64 - 1000).abs() <= 1, "{}", samples.len());
+    }
+
+    #[test]
+    fn constant_signal_measured_within_noise() {
+        let mut p = probe(ProbeConfig::default());
+        let samples = p.sample_until(&|_t| 212.5, SimTime::from_secs(1), 0);
+        let mean: f64 =
+            samples.iter().map(|s| s.power_w).sum::<f64>() / samples.len() as f64;
+        assert!((mean - 212.5).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn milliwatt_quantization() {
+        let mut p = probe(ProbeConfig {
+            noise_rel: 0.0,
+            noise_abs_w: 0.0,
+            ..ProbeConfig::default()
+        });
+        let samples = p.sample_until(&|_t| 1.23456, SimTime::from_ms(10), 0);
+        for s in samples {
+            let mw = s.power_w * 1000.0;
+            assert!((mw - mw.round()).abs() < 1e-9, "not mW-quantized: {mw}");
+            assert!((s.power_w - 1.235).abs() < 1e-9); // rounded to 1.235 W
+        }
+    }
+
+    #[test]
+    fn n_avg_reported() {
+        let mut p = probe(ProbeConfig::default());
+        let samples = p.sample_until(&|_t| 5.0, SimTime::from_ms(20), 0);
+        assert!(samples.iter().all(|s| s.n_avg == 4));
+    }
+
+    #[test]
+    fn averaging_improves_resolution() {
+        // the §4.2 trade-off: more averaging -> lower sample noise
+        let sig = |t: SimTime| 50.0 + (t.as_secs_f64() * 50.0).sin() * 0.0; // constant
+        let noisy = ProbeConfig {
+            avg_count: 1,
+            ..ProbeConfig::default()
+        };
+        let avg4 = ProbeConfig::default();
+        let std_of = |cfg: ProbeConfig, seed: u64| {
+            let mut p = Ina228Probe::new(0, cfg, Xoshiro256::new(seed));
+            let ss = p.sample_until(&sig, SimTime::from_secs(2), 0);
+            let m = ss.iter().map(|s| s.power_w).sum::<f64>() / ss.len() as f64;
+            (ss.iter().map(|s| (s.power_w - m).powi(2)).sum::<f64>() / ss.len() as f64)
+                .sqrt()
+        };
+        assert!(std_of(avg4, 1) < std_of(noisy, 1));
+    }
+
+    #[test]
+    fn tracks_step_change() {
+        // a suspend->active step must appear within ~1 ms
+        let sig = |t: SimTime| if t < SimTime::from_ms(500) { 6.0 } else { 212.0 };
+        let mut p = probe(ProbeConfig::default());
+        let samples = p.sample_until(&sig, SimTime::from_secs(1), 0);
+        let before: Vec<_> = samples
+            .iter()
+            .filter(|s| s.t < SimTime::from_ms(498))
+            .collect();
+        let after: Vec<_> = samples
+            .iter()
+            .filter(|s| s.t > SimTime::from_ms(503))
+            .collect();
+        assert!(before.iter().all(|s| (s.power_w - 6.0).abs() < 1.0));
+        assert!(after.iter().all(|s| (s.power_w - 212.0).abs() < 1.0));
+    }
+
+    #[test]
+    fn negative_signal_clamped() {
+        let mut p = probe(ProbeConfig::default());
+        let samples = p.sample_until(&|_t| -5.0, SimTime::from_ms(10), 0);
+        assert!(samples.iter().all(|s| s.power_w >= 0.0));
+    }
+
+    #[test]
+    fn tags_latched() {
+        let mut p = probe(ProbeConfig::default());
+        let samples = p.sample_until(&|_t| 1.0, SimTime::from_ms(5), 0b1010_0001);
+        assert!(samples.iter().all(|s| s.tags == 0b1010_0001));
+    }
+
+    #[test]
+    fn energy_integration() {
+        let s = Sample {
+            t: SimTime::ZERO,
+            voltage_v: 20.0,
+            current_a: 5.0,
+            power_w: 100.0,
+            n_avg: 4,
+            tags: 0,
+        };
+        assert!((s.energy_j(SimTime::from_ms(1)) - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,280 @@
+//! PSU rail probes — the §4.2 "planned" probe type, implemented.
+//!
+//! "Another type of probe is planned, specifically designed for PC
+//! PSUs. This probe will connect to the DC outputs of the PSU and will
+//! measure power on the 3.3 V, 5 V, and 12 V rails (via Molex,
+//! motherboard, CPU, and SATA connectors), including the new 600 W
+//! 12VHPWR connector for GPUs. […] Multiple probes will be daisy-chained
+//! on the I2C bus to provide per-connector measurements."
+//!
+//! Each rail probe is an INA228 on one DC connector; a node's rail set
+//! decomposes its activity into per-connector power, so per-component
+//! energy (CPU vs GPU) becomes measurable — more precise than socket
+//! metering, but excluding PSU conversion loss (the paper's caveat,
+//! modeled via the PSU efficiency factor).
+
+use super::probe::{Ina228Probe, PowerSignal, ProbeConfig, Sample};
+use crate::hw::NodeModel;
+use crate::power::{Activity, PowerModel};
+use crate::sim::SimTime;
+use crate::util::Xoshiro256;
+
+/// A PSU DC output connector.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Rail {
+    /// 24-pin ATX: 3.3 V + 5 V + 12 V board supply
+    Motherboard,
+    /// 8-pin EPS 12 V CPU connector
+    Cpu,
+    /// 12VHPWR, up to 600 W (dGPU)
+    GpuHpwr,
+    /// SATA/Molex peripherals (SSDs, fans)
+    Peripheral,
+}
+
+impl Rail {
+    pub const ALL: [Rail; 4] = [Rail::Motherboard, Rail::Cpu, Rail::GpuHpwr, Rail::Peripheral];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rail::Motherboard => "motherboard (3.3/5/12 V)",
+            Rail::Cpu => "CPU EPS 12 V",
+            Rail::GpuHpwr => "12VHPWR 600 W",
+            Rail::Peripheral => "SATA/Molex",
+        }
+    }
+
+    pub fn volts(self) -> f64 {
+        match self {
+            Rail::Motherboard => 12.0, // dominated by the 12 V pins
+            Rail::Cpu => 12.0,
+            Rail::GpuHpwr => 12.0,
+            Rail::Peripheral => 5.0,
+        }
+    }
+
+    /// Connector power limit, watts (12VHPWR's 600 W headline).
+    pub fn limit_w(self) -> f64 {
+        match self {
+            Rail::Motherboard => 250.0,
+            Rail::Cpu => 235.0,
+            Rail::GpuHpwr => 600.0,
+            Rail::Peripheral => 100.0,
+        }
+    }
+}
+
+/// Decomposes a node's total activity into per-rail DC power.
+/// DC-side power excludes PSU loss: `dc = socket × efficiency`.
+pub struct RailModel {
+    power: PowerModel,
+    /// PSU efficiency (Platinum ≈ 0.92 at typical load)
+    pub psu_efficiency: f64,
+    has_dgpu: bool,
+    cpu_share_of_board: f64,
+}
+
+impl RailModel {
+    pub fn for_node(node: &NodeModel) -> Self {
+        Self {
+            power: PowerModel::for_node(node),
+            psu_efficiency: 0.92,
+            has_dgpu: node.dgpu.is_some(),
+            // platform (RAM, VRMs, NIC) rides the board connector
+            cpu_share_of_board: 0.25,
+        }
+    }
+
+    /// DC watts on one rail for a given activity.
+    pub fn rail_watts(&self, rail: Rail, act: Activity) -> f64 {
+        let socket = self.power.watts(act);
+        let idle = self.power.idle_w();
+        let dyn_total = socket - idle;
+        // split: CPU dynamic vs GPU dynamic via the power model's parts
+        let cpu_dyn = self.power.watts(Activity {
+            dgpu: 0.0,
+            igpu: 0.0,
+            ..act
+        }) - idle;
+        let gpu_dyn = if self.has_dgpu {
+            (dyn_total - cpu_dyn).max(0.0)
+        } else {
+            0.0
+        };
+        let dc = |w: f64| w * self.psu_efficiency;
+        match rail {
+            Rail::GpuHpwr => dc(gpu_dyn).min(Rail::GpuHpwr.limit_w()),
+            Rail::Cpu => dc(cpu_dyn * (1.0 - self.cpu_share_of_board)),
+            Rail::Motherboard => {
+                dc(idle * 0.8 + cpu_dyn * self.cpu_share_of_board
+                    + if self.has_dgpu { 0.0 } else { dyn_total - cpu_dyn })
+            }
+            Rail::Peripheral => dc(idle * 0.2),
+        }
+    }
+
+    /// Sum of DC rails ≈ socket × efficiency (the PSU-loss caveat).
+    pub fn dc_total(&self, act: Activity) -> f64 {
+        Rail::ALL.iter().map(|r| self.rail_watts(*r, act)).sum()
+    }
+
+    pub fn socket_watts(&self, act: Activity) -> f64 {
+        self.power.watts(act)
+    }
+}
+
+/// A per-connector probe chain for one PSU (daisy-chained on one I2C
+/// connector of the main board — 4 rails ≤ 6-probe chain limit).
+pub struct RailProbeSet {
+    probes: Vec<(Rail, Ina228Probe)>,
+}
+
+impl RailProbeSet {
+    pub fn new(rng: &mut Xoshiro256) -> Self {
+        let probes = Rail::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                (
+                    *r,
+                    Ina228Probe::new(i as u8, ProbeConfig::default(), rng.fork(r.name())),
+                )
+            })
+            .collect();
+        Self { probes }
+    }
+
+    /// Sample every rail over (…, until] against a rail model held at a
+    /// constant activity; returns per-rail samples.
+    pub fn sample(
+        &mut self,
+        model: &RailModel,
+        act: Activity,
+        until: SimTime,
+    ) -> Vec<(Rail, Vec<Sample>)> {
+        self.probes
+            .iter_mut()
+            .map(|(rail, probe)| {
+                let w = model.rail_watts(*rail, act);
+                let v = rail.volts();
+                let sig = RailSignal { w, v };
+                (*rail, probe.sample_until(&sig, until, 0))
+            })
+            .collect()
+    }
+}
+
+struct RailSignal {
+    w: f64,
+    v: f64,
+}
+
+impl PowerSignal for RailSignal {
+    fn watts(&self, _t: SimTime) -> f64 {
+        self.w
+    }
+    fn volts(&self, _t: SimTime) -> f64 {
+        self.v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::cluster::resolve_partition;
+
+    fn model(p: &str) -> RailModel {
+        RailModel::for_node(&resolve_partition(p).unwrap().node)
+    }
+
+    fn busy() -> Activity {
+        Activity {
+            cpu: 1.0,
+            dgpu: 1.0,
+            igpu: 0.0,
+        }
+    }
+
+    #[test]
+    fn dc_total_is_socket_minus_psu_loss() {
+        let m = model("az4-n4090");
+        for act in [Activity::idle(), Activity::cpu_only(0.5), busy()] {
+            let socket = m.socket_watts(act);
+            let dc = m.dc_total(act);
+            let eff = dc / socket;
+            assert!(
+                (0.85..=0.95).contains(&eff),
+                "PSU efficiency out of band: {eff} at {act:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn gpu_rail_dominates_under_gpu_load() {
+        let m = model("az4-n4090");
+        let g = m.rail_watts(Rail::GpuHpwr, busy());
+        let c = m.rail_watts(Rail::Cpu, busy());
+        // RTX 4090 (450 W) ≫ Ryzen (75 W)
+        assert!(g > 3.0 * c, "gpu {g} vs cpu {c}");
+        assert!(g <= Rail::GpuHpwr.limit_w());
+    }
+
+    #[test]
+    fn no_dgpu_means_cold_hpwr_rail() {
+        let m = model("az5-a890m");
+        assert_eq!(m.rail_watts(Rail::GpuHpwr, busy()), 0.0);
+        // the iGPU draw lands on the board rail instead
+        let board_busy = m.rail_watts(
+            Rail::Motherboard,
+            Activity {
+                igpu: 1.0,
+                ..Activity::idle()
+            },
+        );
+        let board_idle = m.rail_watts(Rail::Motherboard, Activity::idle());
+        assert!(board_busy > board_idle);
+    }
+
+    #[test]
+    fn rails_monotone_in_activity() {
+        let m = model("az4-a7900");
+        let mut last = 0.0;
+        for i in 0..=4 {
+            let act = Activity {
+                cpu: i as f64 / 4.0,
+                dgpu: i as f64 / 4.0,
+                igpu: 0.0,
+            };
+            let total = m.dc_total(act);
+            assert!(total >= last);
+            last = total;
+        }
+    }
+
+    #[test]
+    fn per_connector_sampling_resolves_components() {
+        // the §4.2 goal: per-component energy measurement
+        let m = model("az4-n4090");
+        let mut rng = Xoshiro256::new(9);
+        let mut set = RailProbeSet::new(&mut rng);
+        let samples = set.sample(&m, busy(), SimTime::from_ms(100));
+        assert_eq!(samples.len(), 4);
+        for (rail, ss) in &samples {
+            assert!(!ss.is_empty(), "{rail:?}");
+            let mean = ss.iter().map(|s| s.power_w).sum::<f64>() / ss.len() as f64;
+            let want = m.rail_watts(*rail, busy());
+            assert!(
+                (mean - want).abs() < want.max(1.0) * 0.02 + 0.01,
+                "{rail:?}: {mean} vs {want}"
+            );
+            // voltage column reflects the rail
+            assert!((ss[0].voltage_v - rail.volts()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn four_rails_fit_one_chain() {
+        // 4 per-connector probes ≤ the 6-probe chain limit of §4.1
+        assert!(Rail::ALL.len() <= crate::energy::bus::MAX_PROBES_PER_CHAIN);
+    }
+}

@@ -1,0 +1,188 @@
+//! Sample storage: bounded ring of recent samples + running aggregates,
+//! with windowed energy integration. Sized so a day-long cluster trace
+//! doesn't hold every 1 ms sample in memory — the hot path pushes into
+//! a Welford accumulator and the ring keeps the recent window for the
+//! §4.3 "retrieve the measured samples" API.
+
+use std::collections::VecDeque;
+
+use super::probe::Sample;
+use crate::sim::SimTime;
+use crate::util::stats::Welford;
+
+/// Per-probe sample store.
+pub struct SampleStore {
+    ring: VecDeque<Sample>,
+    cap: usize,
+    agg: Welford,
+    /// trapezoid-free energy integral: sum(power × period)
+    energy_j: f64,
+    period: SimTime,
+    last_t: Option<SimTime>,
+    pub dropped: u64,
+}
+
+impl SampleStore {
+    pub fn new(cap: usize, period: SimTime) -> Self {
+        Self {
+            ring: VecDeque::with_capacity(cap),
+            cap,
+            agg: Welford::new(),
+            energy_j: 0.0,
+            period,
+            last_t: None,
+            dropped: 0,
+        }
+    }
+
+    /// Push one sample (must be in timestamp order).
+    pub fn push(&mut self, s: Sample) {
+        if let Some(last) = self.last_t {
+            debug_assert!(s.t >= last, "samples out of order");
+        }
+        self.last_t = Some(s.t);
+        self.agg.push(s.power_w);
+        self.energy_j += s.power_w * self.period.as_secs_f64();
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn total_samples(&self) -> u64 {
+        self.agg.count()
+    }
+
+    /// Total integrated energy, joules.
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    /// Mean power over the whole trace, watts.
+    pub fn mean_w(&self) -> f64 {
+        self.agg.mean()
+    }
+
+    pub fn max_w(&self) -> f64 {
+        self.agg.max()
+    }
+
+    pub fn min_w(&self) -> f64 {
+        self.agg.min()
+    }
+
+    /// Samples within [from, to] still in the ring.
+    pub fn window(&self, from: SimTime, to: SimTime) -> Vec<Sample> {
+        self.ring
+            .iter()
+            .filter(|s| s.t >= from && s.t <= to)
+            .copied()
+            .collect()
+    }
+
+    /// Energy within [from, to] (ring-resident samples only), joules.
+    pub fn window_energy_j(&self, from: SimTime, to: SimTime) -> f64 {
+        self.window(from, to)
+            .iter()
+            .map(|s| s.power_w * self.period.as_secs_f64())
+            .sum()
+    }
+
+    /// Samples whose GPIO tags include `mask` — the fine-grained
+    /// code-segment profiling of §4.1.
+    pub fn tagged(&self, mask: u8) -> Vec<Sample> {
+        self.ring
+            .iter()
+            .filter(|s| s.tags & mask == mask)
+            .copied()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(ms: u64, w: f64, tags: u8) -> Sample {
+        Sample {
+            t: SimTime::from_ms(ms),
+            voltage_v: 20.0,
+            current_a: w / 20.0,
+            power_w: w,
+            n_avg: 4,
+            tags,
+        }
+    }
+
+    fn store() -> SampleStore {
+        SampleStore::new(1000, SimTime::from_ms(1))
+    }
+
+    #[test]
+    fn energy_integral() {
+        let mut s = store();
+        for i in 0..1000 {
+            s.push(sample(i, 100.0, 0));
+        }
+        // 100 W for 1 s = 100 J
+        assert!((s.energy_j() - 100.0).abs() < 1e-9);
+        assert!((s.mean_w() - 100.0).abs() < 1e-12);
+        assert_eq!(s.total_samples(), 1000);
+    }
+
+    #[test]
+    fn ring_evicts_but_aggregates_keep_everything() {
+        let mut s = SampleStore::new(10, SimTime::from_ms(1));
+        for i in 0..100 {
+            s.push(sample(i, 1.0, 0));
+        }
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.dropped, 90);
+        assert_eq!(s.total_samples(), 100);
+        assert!((s.energy_j() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_queries() {
+        let mut s = store();
+        for i in 0..100 {
+            s.push(sample(i, i as f64, 0));
+        }
+        let w = s.window(SimTime::from_ms(10), SimTime::from_ms(19));
+        assert_eq!(w.len(), 10);
+        assert_eq!(w[0].power_w, 10.0);
+        let e = s.window_energy_j(SimTime::from_ms(0), SimTime::from_ms(99));
+        let expect: f64 = (0..100).map(|i| i as f64 * 1e-3).sum();
+        assert!((e - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tag_filtering() {
+        let mut s = store();
+        s.push(sample(0, 1.0, 0b01));
+        s.push(sample(1, 2.0, 0b11));
+        s.push(sample(2, 3.0, 0b10));
+        assert_eq!(s.tagged(0b01).len(), 2);
+        assert_eq!(s.tagged(0b11).len(), 1);
+        assert_eq!(s.tagged(0b100).len(), 0);
+    }
+
+    #[test]
+    fn min_max_tracked() {
+        let mut s = store();
+        s.push(sample(0, 5.0, 0));
+        s.push(sample(1, 500.0, 0));
+        s.push(sample(2, 50.0, 0));
+        assert_eq!(s.min_w(), 5.0);
+        assert_eq!(s.max_w(), 500.0);
+    }
+}

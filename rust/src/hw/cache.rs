@@ -1,0 +1,174 @@
+//! CPU cache-hierarchy specification (paper Fig. 4 substrate).
+//!
+//! Each level records its capacity, how many cores share one instance,
+//! and the streaming bandwidth one core can pull from it. The Fig. 4
+//! bench resolves a buffer size to the innermost level that fits it,
+//! exactly like the paper's `bandwidth` benchmark sweeps buffer sizes to
+//! target L1/L2/L3/RAM.
+
+/// Which memory level a buffer of a given size lands in.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash, PartialOrd, Ord)]
+pub enum CacheLevel {
+    L1,
+    L2,
+    L3,
+    Ram,
+}
+
+impl CacheLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheLevel::L1 => "L1",
+            CacheLevel::L2 => "L2",
+            CacheLevel::L3 => "L3",
+            CacheLevel::Ram => "RAM",
+        }
+    }
+}
+
+/// One cache level of one core class.
+#[derive(Clone, Debug)]
+pub struct CacheSpec {
+    /// capacity in bytes of one instance
+    pub size: u64,
+    /// cores sharing one instance (1 = private)
+    pub shared_by: u32,
+    /// sustained streaming read bandwidth per core, bytes/s
+    pub read_bw_per_core: f64,
+    /// how many instances exist across the whole core class
+    pub instances: u32,
+}
+
+impl CacheSpec {
+    pub fn new(size: u64, shared_by: u32, read_gbps_per_core: f64, instances: u32) -> Self {
+        assert!(shared_by >= 1 && instances >= 1);
+        Self {
+            size,
+            shared_by,
+            read_bw_per_core: read_gbps_per_core * 1e9,
+            instances,
+        }
+    }
+
+    /// Aggregate streaming bandwidth when `cores` cores hammer this level
+    /// together. Private levels scale linearly; shared levels saturate at
+    /// the instance bandwidth (shared_by × per-core is the instance peak).
+    pub fn aggregate_bw(&self, cores: u32) -> f64 {
+        let per_instance_peak = self.read_bw_per_core * self.shared_by as f64;
+        let instances_used =
+            ((cores + self.shared_by - 1) / self.shared_by).min(self.instances);
+        let within = (cores as f64 / instances_used as f64).min(self.shared_by as f64);
+        // per-instance: linear until the instance peak
+        let per_instance = (self.read_bw_per_core * within).min(per_instance_peak);
+        per_instance * instances_used as f64
+    }
+}
+
+/// The full hierarchy for one core class. `l3: None` models the paper's
+/// observation that Meteor Lake LPe-cores have no L3 access.
+#[derive(Clone, Debug)]
+pub struct Hierarchy {
+    pub l1: CacheSpec,
+    pub l2: CacheSpec,
+    pub l3: Option<CacheSpec>,
+}
+
+impl Hierarchy {
+    /// Innermost level that holds `bytes` per active core-group, plus the
+    /// per-stream capacity check the bandwidth benchmark implies.
+    pub fn level_for(&self, bytes: u64) -> CacheLevel {
+        if bytes <= self.l1.size {
+            CacheLevel::L1
+        } else if bytes <= self.l2.size {
+            CacheLevel::L2
+        } else if let Some(l3) = &self.l3 {
+            if bytes <= l3.size {
+                CacheLevel::L3
+            } else {
+                CacheLevel::Ram
+            }
+        } else {
+            CacheLevel::Ram
+        }
+    }
+
+    pub fn spec(&self, level: CacheLevel) -> Option<&CacheSpec> {
+        match level {
+            CacheLevel::L1 => Some(&self.l1),
+            CacheLevel::L2 => Some(&self.l2),
+            CacheLevel::L3 => self.l3.as_ref(),
+            CacheLevel::Ram => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kib(n: u64) -> u64 {
+        n << 10
+    }
+    fn mib(n: u64) -> u64 {
+        n << 20
+    }
+
+    fn hier() -> Hierarchy {
+        Hierarchy {
+            l1: CacheSpec::new(kib(48), 1, 300.0, 8),
+            l2: CacheSpec::new(mib(2), 4, 120.0, 2),
+            l3: Some(CacheSpec::new(mib(24), 8, 60.0, 1)),
+        }
+    }
+
+    #[test]
+    fn level_resolution() {
+        let h = hier();
+        assert_eq!(h.level_for(kib(16)), CacheLevel::L1);
+        assert_eq!(h.level_for(kib(48)), CacheLevel::L1);
+        assert_eq!(h.level_for(kib(49)), CacheLevel::L2);
+        assert_eq!(h.level_for(mib(2)), CacheLevel::L2);
+        assert_eq!(h.level_for(mib(10)), CacheLevel::L3);
+        assert_eq!(h.level_for(mib(100)), CacheLevel::Ram);
+    }
+
+    #[test]
+    fn no_l3_goes_to_ram() {
+        let mut h = hier();
+        h.l3 = None;
+        assert_eq!(h.level_for(mib(10)), CacheLevel::Ram);
+    }
+
+    #[test]
+    fn private_level_scales_linearly() {
+        let h = hier();
+        let one = h.l1.aggregate_bw(1);
+        let four = h.l1.aggregate_bw(4);
+        assert!((four / one - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_level_saturates() {
+        let h = hier();
+        // L2 instance: 4 cores share, peak = 4 * 120 GB/s
+        let two = h.l2.aggregate_bw(2);
+        let four = h.l2.aggregate_bw(4);
+        let eight = h.l2.aggregate_bw(8); // 2 instances
+        assert!(two < four);
+        assert!((eight / four - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn instances_cap_aggregate() {
+        let h = hier();
+        // only 1 L3 instance: 8 vs 16 cores identical
+        let l3 = h.l3.as_ref().unwrap();
+        assert_eq!(l3.aggregate_bw(8), l3.aggregate_bw(16));
+    }
+
+    #[test]
+    fn cache_level_names() {
+        assert_eq!(CacheLevel::L1.name(), "L1");
+        assert_eq!(CacheLevel::Ram.name(), "RAM");
+    }
+}

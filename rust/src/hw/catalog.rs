@@ -1,0 +1,874 @@
+//! The DALEK hardware catalog: every CPU, GPU, SSD, RAM config, node,
+//! partition, the frontend, the Raspberry Pi monitors and the switch —
+//! parameterized exactly from the paper's Tables 1–2 and calibrated to
+//! its Figures 4–9.
+//!
+//! This file is intentionally data-heavy: it is the simulation stand-in
+//! for the physical rack in Fig. 1, and the `accounting()` method must
+//! reproduce Table 2's row sums exactly (tests enforce this).
+
+use super::cache::{CacheSpec, Hierarchy};
+use super::cpu::{CoreClass, CoreCluster, CpuModel, Vnni};
+use super::gpu::{GpuKind, GpuModel};
+use super::mem::{MemKind, MemModel};
+use super::node::{NodeModel, NodePower};
+use super::ssd::SsdModel;
+use crate::sim::SimTime;
+
+const KIB: u64 = 1 << 10;
+const MIB: u64 = 1 << 20;
+
+// ---------------------------------------------------------------------------
+// CPUs (Table 1, calibrated to Figs. 4–5)
+// ---------------------------------------------------------------------------
+
+/// Intel Core i9-13900H (Raptor Lake-H) — frontend node.
+/// 6 p-cores (HT) + 8 e-cores; e-cores lack the VNNI unit (Fig. 5a shows
+/// DPA2 == FMA f32 there).
+pub fn cpu_i9_13900h() -> CpuModel {
+    CpuModel {
+        vendor: "Intel",
+        product: "Core i9-13900H",
+        architecture: "Raptor Lake-H",
+        tdp_w: 115.0,
+        ram_bw: 65e9, // DDR5-5200 dual channel, ~78% of 83.2 GB/s peak
+        clusters: vec![
+            CoreCluster {
+                class: CoreClass::Performance,
+                cores: 6,
+                threads_per_core: 2,
+                boost_ghz: 5.0,
+                allcore_ghz: 3.9,
+                simd_bits: 256,
+                fma_ports: 2,
+                vnni: Vnni::Avx256,
+                hierarchy: Hierarchy {
+                    l1: CacheSpec::new(48 * KIB, 1, 250.0, 6),
+                    l2: CacheSpec::new(2 * MIB, 1, 115.0, 6),
+                    l3: Some(CacheSpec::new(24 * MIB, 14, 12.0, 1)),
+                },
+            },
+            CoreCluster {
+                class: CoreClass::Efficient,
+                cores: 8,
+                threads_per_core: 1,
+                boost_ghz: 4.0,
+                allcore_ghz: 3.2,
+                simd_bits: 256,
+                fma_ports: 1,
+                vnni: Vnni::None, // the Fig. 5a observation
+                hierarchy: Hierarchy {
+                    l1: CacheSpec::new(32 * KIB, 1, 130.0, 8),
+                    l2: CacheSpec::new(4 * MIB, 4, 55.0, 2),
+                    l3: Some(CacheSpec::new(24 * MIB, 14, 12.0, 1)),
+                },
+            },
+        ],
+    }
+}
+
+/// AMD Ryzen 9 7945HX (Zen 4) — az4-n4090 / az4-a7900 partitions.
+/// 16 homogeneous Zen 4 cores, AVX-512 (+VNNI), big Noctua-cooled
+/// heatsink: the best single- and multi-core CPU on DALEK (Fig. 5).
+pub fn cpu_r9_7945hx() -> CpuModel {
+    let zen4 = CoreCluster {
+        class: CoreClass::Performance,
+        cores: 16,
+        threads_per_core: 2,
+        boost_ghz: 5.4,
+        allcore_ghz: 4.6,
+        simd_bits: 512, // double-pumped 256-bit pipes, AVX-512 ISA
+        fma_ports: 1,
+        vnni: Vnni::Avx512,
+        hierarchy: Hierarchy {
+            l1: CacheSpec::new(32 * KIB, 1, 280.0, 16),
+            l2: CacheSpec::new(MIB, 1, 200.0, 16),
+            // 2 CCDs x 32 MiB; Zen L3 is much faster than Intel's (Fig. 4c)
+            l3: Some(CacheSpec::new(32 * MIB, 8, 10.0, 2)),
+        },
+    };
+    CpuModel {
+        vendor: "AMD",
+        product: "Ryzen 9 7945HX",
+        architecture: "Zen 4",
+        tdp_w: 75.0,
+        ram_bw: 66e9, // DDR5-5200 dual channel
+        clusters: vec![zen4],
+    }
+}
+
+/// Intel Core Ultra 9 185H (Meteor Lake-H) — iml-ia770 partition.
+/// 6 p + 8 e + 2 LPe; LPe-cores have no L3 access (Fig. 4 note); all
+/// clusters have AVX-VNNI (the DPA2 gap vs 13900H e-cores closes).
+pub fn cpu_ultra9_185h() -> CpuModel {
+    CpuModel {
+        vendor: "Intel",
+        product: "Core Ultra 9 185H",
+        architecture: "Meteor Lake-H",
+        tdp_w: 115.0,
+        ram_bw: 67e9, // DDR5-5600 dual channel
+        clusters: vec![
+            CoreCluster {
+                class: CoreClass::Performance,
+                cores: 6,
+                threads_per_core: 2,
+                boost_ghz: 5.1,
+                allcore_ghz: 3.8,
+                simd_bits: 256,
+                fma_ports: 2,
+                vnni: Vnni::Avx256,
+                hierarchy: Hierarchy {
+                    // "significant improvement in L1 between Raptor Lake-H
+                    // and Meteor Lake-H" (Fig. 4a)
+                    l1: CacheSpec::new(48 * KIB, 1, 390.0, 6),
+                    l2: CacheSpec::new(2 * MIB, 1, 130.0, 6),
+                    l3: Some(CacheSpec::new(24 * MIB, 16, 12.0, 1)),
+                },
+            },
+            CoreCluster {
+                class: CoreClass::Efficient,
+                cores: 8,
+                threads_per_core: 1,
+                boost_ghz: 3.8,
+                allcore_ghz: 3.1,
+                simd_bits: 256,
+                fma_ports: 1,
+                vnni: Vnni::Avx256,
+                hierarchy: Hierarchy {
+                    l1: CacheSpec::new(32 * KIB, 1, 140.0, 8),
+                    l2: CacheSpec::new(4 * MIB, 4, 60.0, 2),
+                    l3: Some(CacheSpec::new(24 * MIB, 16, 12.0, 1)),
+                },
+            },
+            CoreCluster {
+                class: CoreClass::LowPower,
+                cores: 2,
+                threads_per_core: 1,
+                boost_ghz: 2.5,
+                allcore_ghz: 2.1,
+                simd_bits: 256,
+                fma_ports: 1,
+                vnni: Vnni::Avx256,
+                hierarchy: Hierarchy {
+                    l1: CacheSpec::new(32 * KIB, 1, 90.0, 2),
+                    l2: CacheSpec::new(2 * MIB, 2, 40.0, 1),
+                    l3: None, // LPe-cores do not reach the L3 (Fig. 4)
+                },
+            },
+        ],
+    }
+}
+
+/// AMD Ryzen AI 9 HX 370 (Zen 5) — az5-a890m partition.
+/// 4 Zen 5 p-cores + 8 Zen 5c e-cores (Fig. 5b: "only has four"
+/// performance cores). Zen 5's L2 outperforms all others (Fig. 4b);
+/// quad-channel LPDDR5x-7500 lifts the RAM plateau (Fig. 4d).
+pub fn cpu_ai9_hx370() -> CpuModel {
+    CpuModel {
+        vendor: "AMD",
+        product: "Ryzen AI 9 HX 370",
+        architecture: "Zen 5",
+        tdp_w: 54.0,
+        ram_bw: 80e9, // LPDDR5x-7500 x4 channels (Fig. 6: CPU copy ≈ 80 GB/s)
+        clusters: vec![
+            CoreCluster {
+                class: CoreClass::Performance,
+                cores: 4,
+                threads_per_core: 2,
+                boost_ghz: 5.1,
+                allcore_ghz: 4.0,
+                simd_bits: 512,
+                fma_ports: 1,
+                vnni: Vnni::Avx512,
+                hierarchy: Hierarchy {
+                    l1: CacheSpec::new(48 * KIB, 1, 340.0, 4),
+                    // "the L2 cache of the latest AMD Zen 5 architecture
+                    // outperforms the others" (Fig. 4b)
+                    l2: CacheSpec::new(MIB, 1, 260.0, 4),
+                    // L3 == sum of L2s; throughput hard to measure (paper)
+                    l3: Some(CacheSpec::new(16 * MIB, 4, 20.0, 1)),
+                },
+            },
+            CoreCluster {
+                class: CoreClass::Efficient,
+                cores: 8,
+                threads_per_core: 2,
+                boost_ghz: 3.3,
+                allcore_ghz: 2.9,
+                simd_bits: 512,
+                fma_ports: 1,
+                vnni: Vnni::Avx512,
+                hierarchy: Hierarchy {
+                    l1: CacheSpec::new(48 * KIB, 1, 220.0, 8),
+                    l2: CacheSpec::new(MIB, 1, 170.0, 8),
+                    l3: Some(CacheSpec::new(8 * MIB, 8, 9.0, 1)),
+                },
+            },
+        ],
+    }
+}
+
+/// Raspberry Pi 4 (per-partition monitor node, §2.3).
+pub fn cpu_rpi4() -> CpuModel {
+    let a72 = CoreCluster {
+        class: CoreClass::Efficient,
+        cores: 4,
+        threads_per_core: 1,
+        boost_ghz: 1.5,
+        allcore_ghz: 1.5,
+        simd_bits: 128, // NEON
+        fma_ports: 1,
+        vnni: Vnni::None,
+        hierarchy: Hierarchy {
+            l1: CacheSpec::new(32 * KIB, 1, 12.0, 4),
+            l2: CacheSpec::new(MIB, 4, 6.0, 1),
+            l3: None,
+        },
+    };
+    CpuModel {
+        vendor: "Broadcom",
+        product: "BCM2711 (Raspberry Pi 4)",
+        architecture: "Cortex-A72",
+        tdp_w: 9.0,
+        ram_bw: 4e9,
+        clusters: vec![a72],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GPUs (Table 1, calibrated to Figs. 6–8)
+// ---------------------------------------------------------------------------
+
+pub fn gpu_rtx4090() -> GpuModel {
+    GpuModel {
+        vendor: "Nvidia",
+        product: "GeForce RTX 4090",
+        architecture: "Ada Lovelace",
+        kind: GpuKind::Discrete,
+        sm: 128,
+        shader_cores: 16384,
+        boost_ghz: 2.52,
+        tdp_w: 450.0,
+        vram_gb: 24,
+        mem_kind: MemKind::Gddr6x,
+        gmem_bw: 1008e9,
+        rate_f16: 1.0, // Ada shader f16 == f32 rate
+        rate_f64: 1.0 / 64.0,
+        rate_i8: 1.0,
+        rate_i16: 1.0,
+        rate_i32: 0.5,
+        launch_latency_us: Some(5.0),
+    }
+}
+
+pub fn gpu_rx7900xtx() -> GpuModel {
+    GpuModel {
+        vendor: "AMD",
+        product: "Radeon 7900 XTX",
+        architecture: "RDNA 3",
+        kind: GpuKind::Discrete,
+        sm: 96,
+        shader_cores: 6144,
+        boost_ghz: 2.5,
+        tdp_w: 300.0,
+        vram_gb: 24,
+        mem_kind: MemKind::Gddr6,
+        gmem_bw: 960e9,
+        rate_f16: 2.0, // RDNA 3 dual-issue packed f16
+        rate_f64: 1.0 / 32.0,
+        rate_i8: 1.0,
+        rate_i16: 1.0,
+        rate_i32: 0.5,
+        launch_latency_us: None, // OpenCL event handling broken (Fig. 8)
+    }
+}
+
+pub fn gpu_arc_a770() -> GpuModel {
+    GpuModel {
+        vendor: "Intel",
+        product: "Arc A770",
+        architecture: "Alchemist",
+        kind: GpuKind::Discrete,
+        sm: 512,
+        shader_cores: 4096,
+        boost_ghz: 2.1,
+        tdp_w: 225.0,
+        vram_gb: 16,
+        mem_kind: MemKind::Gddr6,
+        gmem_bw: 560e9,
+        rate_f16: 2.0,
+        rate_f64: 0.03, // Alchemist has no native fp64 (emulated)
+        rate_i8: 1.0,
+        rate_i16: 1.0,
+        rate_i32: 0.5,
+        // ~90 µs — possibly Oculink-related, the paper notes (Fig. 8)
+        launch_latency_us: Some(90.0),
+    }
+}
+
+pub fn gpu_iris_xe() -> GpuModel {
+    GpuModel {
+        vendor: "Intel",
+        product: "Iris Xe Graphics",
+        architecture: "Raptor Lake GT1",
+        kind: GpuKind::Integrated,
+        sm: 96,
+        shader_cores: 768,
+        boost_ghz: 1.5,
+        tdp_w: 25.0,
+        vram_gb: 0,
+        mem_kind: MemKind::Ddr5,
+        gmem_bw: 70e9, // shares DDR5-5200 with the CPU
+        rate_f16: 2.0,
+        rate_f64: 0.25,
+        rate_i8: 1.0,
+        rate_i16: 1.0,
+        rate_i32: 0.5,
+        launch_latency_us: Some(37.0),
+    }
+}
+
+pub fn gpu_arc_mobile() -> GpuModel {
+    GpuModel {
+        vendor: "Intel",
+        product: "Arc Graphics Mobile",
+        architecture: "Meteor Lake GT1",
+        kind: GpuKind::Integrated,
+        sm: 128,
+        shader_cores: 1024,
+        boost_ghz: 2.35,
+        tdp_w: 28.0,
+        vram_gb: 0,
+        mem_kind: MemKind::Ddr5,
+        gmem_bw: 72e9,
+        rate_f16: 2.0, // §5.4: ~9.8 Top/s f16 vs ~4.8 Top/s f32
+        rate_f64: 0.25,
+        rate_i8: 1.0,
+        rate_i16: 1.0,
+        rate_i32: 0.5,
+        launch_latency_us: Some(38.0),
+    }
+}
+
+pub fn gpu_radeon_610m() -> GpuModel {
+    GpuModel {
+        vendor: "AMD",
+        product: "Radeon 610M",
+        architecture: "RDNA 2.0",
+        kind: GpuKind::Integrated,
+        sm: 2,
+        shader_cores: 128,
+        boost_ghz: 1.9,
+        tdp_w: 15.0,
+        vram_gb: 0,
+        mem_kind: MemKind::Ddr5,
+        gmem_bw: 66e9,
+        rate_f16: 2.0,
+        rate_f64: 1.0 / 16.0,
+        rate_i8: 1.0,
+        rate_i16: 1.0,
+        rate_i32: 0.5,
+        launch_latency_us: None, // OpenCL event handling broken (Fig. 8)
+    }
+}
+
+pub fn gpu_radeon_890m() -> GpuModel {
+    GpuModel {
+        vendor: "AMD",
+        product: "Radeon 890M",
+        architecture: "RDNA 3.5",
+        kind: GpuKind::Integrated,
+        sm: 16,
+        shader_cores: 1024,
+        boost_ghz: 2.9,
+        tdp_w: 30.0,
+        vram_gb: 0,
+        mem_kind: MemKind::LpDdr5,
+        // Fig. 6: 96 GB/s copy — 20% above what the CPU cores achieve on
+        // the same quad-channel LPDDR5x
+        gmem_bw: 102e9,
+        rate_f16: 2.0,
+        rate_f64: 1.0 / 16.0,
+        rate_i8: 1.0,
+        rate_i16: 1.0,
+        rate_i32: 0.5,
+        launch_latency_us: Some(5.5),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SSDs (Table 1 + Fig. 9)
+// ---------------------------------------------------------------------------
+
+pub fn ssd_990_pro(size_tb: f64) -> SsdModel {
+    SsdModel::new("Samsung", "990 PRO", size_tb, 7.4, 6.9, 2.5, 2.2)
+}
+
+pub fn ssd_kingston_om8() -> SsdModel {
+    // Fig. 9 surprise: sequential writes nearly match sequential reads
+    SsdModel::new("Kingston", "OM8PGP41024Q-A0", 1.0, 3.6, 3.5, 1.2, 1.0)
+}
+
+pub fn ssd_crucial_p3() -> SsdModel {
+    SsdModel::new("Crucial", "P3 Plus CT1000P3PSSD8", 1.0, 4.7, 3.3, 1.5, 1.1)
+}
+
+// ---------------------------------------------------------------------------
+// Partitions (Table 2)
+// ---------------------------------------------------------------------------
+
+/// One DALEK partition: 4 identical compute nodes + 1 Raspberry Pi.
+#[derive(Clone, Debug)]
+pub struct PartitionSpec {
+    pub name: &'static str,
+    pub node: NodeModel,
+    pub node_count: u32,
+    /// PSU model string (Table-2-level detail, used by the energy probes)
+    pub psu: &'static str,
+}
+
+fn node_az4(dgpu: GpuModel, ssd_tb: f64, idle_w: f64, tdp_w: f64) -> NodeModel {
+    NodeModel {
+        platform: "Minisforum BD790i",
+        cpu: cpu_r9_7945hx(),
+        igpu: Some(gpu_radeon_610m()),
+        dgpu: Some(dgpu),
+        ram: MemModel::ddr5(96, 5200, 2),
+        ssd: ssd_990_pro(ssd_tb),
+        has_npu: false,
+        power: NodePower {
+            idle_w,
+            suspend_w: 1.5,
+            tdp_w,
+        },
+        boot_time: SimTime::from_secs(95),
+        shutdown_time: SimTime::from_secs(20),
+        nic_bps: 2.5e9,
+    }
+}
+
+pub fn partition_az4_n4090() -> PartitionSpec {
+    PartitionSpec {
+        name: "az4-n4090",
+        node: node_az4(gpu_rtx4090(), 4.0, 53.0, 525.0),
+        node_count: 4,
+        psu: "Asus ROG LOKI SFX-L 1000W Platinum",
+    }
+}
+
+pub fn partition_az4_a7900() -> PartitionSpec {
+    PartitionSpec {
+        name: "az4-a7900",
+        node: node_az4(gpu_rx7900xtx(), 2.0, 48.0, 375.0),
+        node_count: 4,
+        psu: "Asus ROG LOKI SFX-L 1000W Platinum",
+    }
+}
+
+pub fn partition_iml_ia770() -> PartitionSpec {
+    PartitionSpec {
+        name: "iml-ia770",
+        node: NodeModel {
+            platform: "Minisforum AtomMan X7 Ti",
+            cpu: cpu_ultra9_185h(),
+            igpu: Some(gpu_arc_mobile()),
+            dgpu: Some(gpu_arc_a770()), // external, over Oculink
+            ram: MemModel::ddr5(32, 5600, 2),
+            ssd: ssd_kingston_om8(),
+            has_npu: true,
+            power: NodePower {
+                idle_w: 65.0,
+                suspend_w: 23.0, // the partition's high suspend draw (Table 2)
+                tdp_w: 340.0,
+            },
+            boot_time: SimTime::from_secs(105),
+            shutdown_time: SimTime::from_secs(25),
+            nic_bps: 5.0e9, // RTL8157 5 GbE (Table 3)
+        },
+        node_count: 4,
+        psu: "Asus ROG LOKI SFX-L 1000W Platinum (eGPU)",
+    }
+}
+
+pub fn partition_az5_a890m() -> PartitionSpec {
+    PartitionSpec {
+        name: "az5-a890m",
+        node: NodeModel {
+            platform: "Minisforum EliteMini AI370",
+            cpu: cpu_ai9_hx370(),
+            igpu: Some(gpu_radeon_890m()),
+            dgpu: None,
+            ram: MemModel::lpddr5x(32, 7500, 4),
+            ssd: ssd_crucial_p3(),
+            has_npu: true,
+            power: NodePower {
+                idle_w: 4.0,
+                suspend_w: 2.0,
+                tdp_w: 54.0,
+            },
+            boot_time: SimTime::from_secs(70),
+            shutdown_time: SimTime::from_secs(15),
+            nic_bps: 2.5e9,
+        },
+        node_count: 4,
+        psu: "built-in (mini-PC)",
+    }
+}
+
+/// The frontend node (Minisforum MS-01, §2.1): 2×10 G SFP+ aggregated.
+pub fn node_frontend() -> NodeModel {
+    NodeModel {
+        platform: "Minisforum MS-01 Work Station",
+        cpu: cpu_i9_13900h(),
+        igpu: Some(gpu_iris_xe()),
+        dgpu: None,
+        ram: MemModel::ddr5(96, 5200, 2),
+        ssd: ssd_990_pro(4.0),
+        has_npu: false,
+        power: NodePower {
+            idle_w: 15.0,
+            suspend_w: 0.0, // the frontend never suspends
+            tdp_w: 115.0,
+        },
+        boot_time: SimTime::from_secs(80),
+        shutdown_time: SimTime::from_secs(20),
+        nic_bps: 20e9, // 2 x 10 G SFP+ LACP-aggregated
+    }
+}
+
+/// Raspberry Pi 4 monitor node (§2.3).
+pub fn node_rpi() -> NodeModel {
+    NodeModel {
+        platform: "Raspberry Pi 4 (4 GB)",
+        cpu: cpu_rpi4(),
+        igpu: None, // VideoCore VI is not an OpenCL compute target here
+        dgpu: None,
+        ram: MemModel {
+            kind: MemKind::LpDdr4,
+            size_gb: 4,
+            mtps: 3200,
+            channels: 1,
+            channel_bits: 32,
+            efficiency: 0.6,
+        },
+        ssd: SsdModel::new("SanDisk", "microSD", 0.032, 0.04, 0.02, 0.01, 0.005),
+        has_npu: false,
+        power: NodePower {
+            idle_w: 3.0,
+            suspend_w: 0.0,
+            tdp_w: 9.0,
+        },
+        boot_time: SimTime::from_secs(35),
+        shutdown_time: SimTime::from_secs(10),
+        nic_bps: 1e9,
+    }
+}
+
+/// The UniFi USW Pro Max 48 switch (§2, Table 2/3).
+#[derive(Clone, Debug)]
+pub struct SwitchSpec {
+    pub product: &'static str,
+    pub ports: u32,
+    pub idle_w: f64,
+    pub tdp_w: f64,
+}
+
+pub fn switch_usw_pro_max_48() -> SwitchSpec {
+    SwitchSpec {
+        product: "UniFi USW Pro Max 48",
+        ports: 48 + 2, // 48 RJ45 + SFP+ uplinks used by the frontend
+        idle_w: 20.0,
+        tdp_w: 100.0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Catalog: the assembled cluster
+// ---------------------------------------------------------------------------
+
+/// Aggregated resource accounting — one row of Table 2.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Accounting {
+    pub nodes: u32,
+    pub cpu_cores: u32,
+    pub cpu_threads: u32,
+    pub ram_gb: u32,
+    pub igpu_cores: u32,
+    pub dgpu_cores: u32,
+    pub vram_gb: u32,
+    pub idle_w: f64,
+    pub suspend_w: f64,
+    pub tdp_w: f64,
+}
+
+/// The whole cluster as data.
+pub struct Catalog {
+    partitions: Vec<PartitionSpec>,
+    pub frontend: NodeModel,
+    pub rpi: NodeModel,
+    pub rpi_count: u32,
+    pub switch: SwitchSpec,
+}
+
+impl Catalog {
+    /// The cluster exactly as the paper describes it (July 2025).
+    pub fn dalek() -> Self {
+        Self {
+            partitions: vec![
+                partition_az4_n4090(),
+                partition_az4_a7900(),
+                partition_iml_ia770(),
+                partition_az5_a890m(),
+            ],
+            frontend: node_frontend(),
+            rpi: node_rpi(),
+            rpi_count: 4,
+            switch: switch_usw_pro_max_48(),
+        }
+    }
+
+    pub fn partitions(&self) -> &[PartitionSpec] {
+        &self.partitions
+    }
+
+    pub fn partition(&self, name: &str) -> Option<&PartitionSpec> {
+        self.partitions.iter().find(|p| p.name == name)
+    }
+
+    /// Every distinct CPU model benchmarked in Figs. 4–5.
+    pub fn cpus(&self) -> Vec<&CpuModel> {
+        let mut seen: Vec<&CpuModel> = vec![&self.frontend.cpu];
+        for p in &self.partitions {
+            if !seen.iter().any(|c| c.product == p.node.cpu.product) {
+                seen.push(&p.node.cpu);
+            }
+        }
+        seen
+    }
+
+    /// Every distinct GPU model benchmarked in Figs. 6–8.
+    pub fn gpus(&self) -> Vec<&GpuModel> {
+        let mut all: Vec<&GpuModel> = Vec::new();
+        for node in std::iter::once(&self.frontend).chain(self.partitions.iter().map(|p| &p.node))
+        {
+            for g in node.igpu.iter().chain(node.dgpu.iter()) {
+                if !all.iter().any(|x| x.product == g.product) {
+                    all.push(g);
+                }
+            }
+        }
+        all
+    }
+
+    pub fn gpu(&self, product: &str) -> Option<&GpuModel> {
+        self.gpus().into_iter().find(|g| g.product == product)
+    }
+
+    /// Every distinct SSD model of Fig. 9.
+    pub fn ssds(&self) -> Vec<&SsdModel> {
+        let mut all: Vec<&SsdModel> = vec![&self.frontend.ssd];
+        for p in &self.partitions {
+            if !all.iter().any(|s| s.product == p.node.ssd.product) {
+                all.push(&p.node.ssd);
+            }
+        }
+        all
+    }
+
+    pub fn ssd(&self, product: &str) -> Option<&SsdModel> {
+        self.ssds().into_iter().find(|s| s.product == product)
+    }
+
+    /// Table 2 accounting for one partition.
+    pub fn account_partition(&self, p: &PartitionSpec) -> Accounting {
+        let n = p.node_count;
+        let node = &p.node;
+        Accounting {
+            nodes: n,
+            cpu_cores: node.cpu.cores() * n,
+            cpu_threads: node.cpu.threads() * n,
+            ram_gb: node.ram.size_gb * n,
+            igpu_cores: node.igpu.as_ref().map(|g| g.shader_cores).unwrap_or(0) * n,
+            dgpu_cores: node.dgpu.as_ref().map(|g| g.shader_cores).unwrap_or(0) * n,
+            vram_gb: node.vram_gb() * n,
+            idle_w: node.power.idle_w * n as f64,
+            suspend_w: node.power.suspend_w * n as f64,
+            tdp_w: node.power.tdp_w * n as f64,
+        }
+    }
+
+    /// Table 2's "Total" row: partitions + frontend + RPis + switch.
+    pub fn account_total(&self) -> Accounting {
+        let mut t = Accounting::default();
+        let mut add = |a: Accounting| {
+            t.nodes += a.nodes;
+            t.cpu_cores += a.cpu_cores;
+            t.cpu_threads += a.cpu_threads;
+            t.ram_gb += a.ram_gb;
+            t.igpu_cores += a.igpu_cores;
+            t.dgpu_cores += a.dgpu_cores;
+            t.vram_gb += a.vram_gb;
+            t.idle_w += a.idle_w;
+            t.suspend_w += a.suspend_w;
+            t.tdp_w += a.tdp_w;
+        };
+        for p in &self.partitions {
+            add(self.account_partition(p));
+        }
+        // frontend
+        add(Accounting {
+            nodes: 1,
+            cpu_cores: self.frontend.cpu.cores(),
+            cpu_threads: self.frontend.cpu.threads(),
+            ram_gb: self.frontend.ram.size_gb,
+            igpu_cores: self
+                .frontend
+                .igpu
+                .as_ref()
+                .map(|g| g.shader_cores)
+                .unwrap_or(0),
+            dgpu_cores: 0,
+            vram_gb: 0,
+            idle_w: self.frontend.power.idle_w,
+            suspend_w: 0.0,
+            tdp_w: self.frontend.power.tdp_w,
+        });
+        // raspberry pis
+        add(Accounting {
+            nodes: self.rpi_count,
+            cpu_cores: self.rpi.cpu.cores() * self.rpi_count,
+            cpu_threads: self.rpi.cpu.threads() * self.rpi_count,
+            ram_gb: self.rpi.ram.size_gb * self.rpi_count,
+            igpu_cores: 0,
+            dgpu_cores: 0,
+            vram_gb: 0,
+            idle_w: self.rpi.power.idle_w * self.rpi_count as f64,
+            suspend_w: 0.0,
+            tdp_w: self.rpi.power.tdp_w * self.rpi_count as f64,
+        });
+        // switch (no compute resources, only power)
+        t.idle_w += self.switch.idle_w;
+        t.tdp_w += self.switch.tdp_w;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2's Total row, verbatim from the paper.
+    #[test]
+    fn table2_total_row_exact() {
+        let c = Catalog::dalek();
+        let t = c.account_total();
+        assert_eq!(t.nodes, 21);
+        assert_eq!(t.cpu_cores, 270);
+        assert_eq!(t.cpu_threads, 476);
+        assert_eq!(t.ram_gb, 1136);
+        assert_eq!(t.igpu_cores, 9984);
+        assert_eq!(t.dgpu_cores, 106_496);
+        assert_eq!(t.vram_gb, 256);
+        assert!((t.idle_w - 727.0).abs() < 1e-9, "idle={}", t.idle_w);
+        assert!((t.suspend_w - 112.0).abs() < 1e-9, "suspend={}", t.suspend_w);
+        assert!((t.tdp_w - 5427.0).abs() < 1e-9, "tdp={}", t.tdp_w);
+    }
+
+    #[test]
+    fn table2_partition_rows() {
+        let c = Catalog::dalek();
+        let p1 = c.account_partition(c.partition("az4-n4090").unwrap());
+        assert_eq!(
+            (p1.cpu_cores, p1.cpu_threads, p1.ram_gb, p1.igpu_cores, p1.dgpu_cores, p1.vram_gb),
+            (64, 128, 384, 512, 65536, 96)
+        );
+        assert_eq!((p1.idle_w, p1.suspend_w, p1.tdp_w), (212.0, 6.0, 2100.0));
+
+        let p3 = c.account_partition(c.partition("iml-ia770").unwrap());
+        assert_eq!((p3.cpu_cores, p3.cpu_threads), (64, 88));
+        assert_eq!((p3.idle_w, p3.suspend_w, p3.tdp_w), (260.0, 92.0, 1360.0));
+
+        let p4 = c.account_partition(c.partition("az5-a890m").unwrap());
+        assert_eq!((p4.cpu_cores, p4.cpu_threads), (48, 96));
+        assert_eq!((p4.idle_w, p4.suspend_w, p4.tdp_w), (16.0, 8.0, 216.0));
+    }
+
+    #[test]
+    fn four_partitions_of_four_nodes() {
+        let c = Catalog::dalek();
+        assert_eq!(c.partitions().len(), 4);
+        for p in c.partitions() {
+            assert_eq!(p.node_count, 4);
+        }
+    }
+
+    #[test]
+    fn distinct_models_counted() {
+        let c = Catalog::dalek();
+        assert_eq!(c.cpus().len(), 4); // 13900H, 7945HX, 185H, HX370
+        // §2.2 says "six different GPU types" but Table 1 lists seven
+        // distinct models (4090, 7900 XTX, A770, Iris Xe, 610M, Arc
+        // Mobile, 890M) — we follow Table 1.
+        assert_eq!(c.gpus().len(), 7);
+        assert_eq!(c.ssds().len(), 3); // 990 PRO, Kingston, Crucial
+    }
+
+    #[test]
+    fn table1_core_counts() {
+        let c = Catalog::dalek();
+        let by = |p: &str| c.cpus().into_iter().find(|x| x.product == p).unwrap().clone();
+        let i9 = by("Core i9-13900H");
+        assert_eq!((i9.cores(), i9.threads()), (14, 20));
+        let r9 = by("Ryzen 9 7945HX");
+        assert_eq!((r9.cores(), r9.threads()), (16, 32));
+        let u9 = by("Core Ultra 9 185H");
+        assert_eq!((u9.cores(), u9.threads()), (16, 22));
+        let ai9 = by("Ryzen AI 9 HX 370");
+        assert_eq!((ai9.cores(), ai9.threads()), (12, 24));
+    }
+
+    #[test]
+    fn fig5_trends_hold() {
+        use crate::hw::cpu::Instr;
+        let c = Catalog::dalek();
+        let by = |p: &str| c.cpus().into_iter().find(|x| x.product == p).unwrap().clone();
+        let r9 = by("Ryzen 9 7945HX");
+        let i9 = by("Core i9-13900H");
+        let u9 = by("Core Ultra 9 185H");
+        let ai9 = by("Ryzen AI 9 HX 370");
+        // 5a: 7945HX best single-core
+        let sc = |cpu: &CpuModel| {
+            cpu.clusters[0].peak_ops(Instr::FmaF32, 1)
+        };
+        assert!(sc(&r9) > sc(&i9) && sc(&r9) > sc(&u9) && sc(&r9) > sc(&ai9));
+        // 5c: 7945HX ≈ 2x (185H, HX370); 13900H clearly behind those two
+        let acc = |cpu: &CpuModel| cpu.peak_ops_accumulated(Instr::Dpa4);
+        let r = acc(&r9);
+        assert!(r / acc(&u9) > 1.6 && r / acc(&u9) < 2.6, "{}", r / acc(&u9));
+        assert!(r / acc(&ai9) > 1.6 && r / acc(&ai9) < 2.6);
+        assert!(acc(&i9) < acc(&u9) && acc(&i9) < acc(&ai9));
+    }
+
+    #[test]
+    fn ultra9_dpa4_approx_5_4_tops() {
+        use crate::hw::cpu::Instr;
+        // §5.4: "the Core Ultra 9 185H CPU reaches up to 5.4 Top/s with DPA4"
+        let c = Catalog::dalek();
+        let u9 = c.cpus().into_iter().find(|x| x.product == "Core Ultra 9 185H").unwrap();
+        let tops = u9.peak_ops_accumulated(Instr::Dpa4) / 1e12;
+        assert!((4.3..6.5).contains(&tops), "DPA4 Top/s = {tops}");
+    }
+
+    #[test]
+    fn frontend_has_20g_aggregated_uplink() {
+        let c = Catalog::dalek();
+        assert_eq!(c.frontend.nic_bps, 20e9);
+    }
+
+    #[test]
+    fn switch_has_enough_ports_for_table3() {
+        // Table 3 uses RJ45 ports up to 48 plus 49/50 for the frontend
+        let c = Catalog::dalek();
+        assert!(c.switch.ports >= 50);
+    }
+}

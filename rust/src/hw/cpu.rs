@@ -1,0 +1,274 @@
+//! CPU models: heterogeneous core clusters with per-class frequency,
+//! SIMD capability and cache hierarchy (paper §2.2, Fig. 4–5).
+//!
+//! A `CpuModel` is a set of `CoreCluster`s (p-cores, e-cores, LPe-cores —
+//! the paper's Intel naming, reused for AMD's Zen 5 / Zen 5c split). Peak
+//! op/s follow from ops-per-cycle × frequency × cores, where
+//! ops-per-cycle is derived from SIMD width, FMA ports and VNNI support —
+//! reproducing Fig. 5's trends, including the missing VNNI unit on the
+//! Raptor Lake e-core (DPA2 == FMA f32 there).
+
+use super::cache::{CacheLevel, CacheSpec, Hierarchy};
+
+/// Core class in the paper's terminology.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum CoreClass {
+    /// high-performance cores (Intel p-core, AMD Zen N)
+    Performance,
+    /// efficient cores (Intel e-core, AMD Zen Nc)
+    Efficient,
+    /// ultra-low-power efficient cores (Intel LPe-core)
+    LowPower,
+}
+
+impl CoreClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            CoreClass::Performance => "p-core",
+            CoreClass::Efficient => "e-core",
+            CoreClass::LowPower => "LPe-core",
+        }
+    }
+}
+
+/// Dot-product-accumulate capability (AVX-VNNI / AVX-512-VNNI).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Vnni {
+    /// no VNNI unit: DPA2/DPA4 fall back to the FMA pipeline
+    None,
+    /// 256-bit AVX-VNNI (Alder Lake+, Zen 5)
+    Avx256,
+    /// 512-bit AVX-512-VNNI (Zen 4+)
+    Avx512,
+}
+
+/// The instruction mixes of Fig. 5.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Instr {
+    FmaF64,
+    FmaF32,
+    /// 2-way dot-product accumulate, i16/bf16 -> i32/f32
+    Dpa2,
+    /// 4-way dot-product accumulate, i8 -> i32
+    Dpa4,
+}
+
+impl Instr {
+    pub const ALL: [Instr; 4] = [Instr::FmaF64, Instr::FmaF32, Instr::Dpa2, Instr::Dpa4];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Instr::FmaF64 => "FMA f64",
+            Instr::FmaF32 => "FMA f32",
+            Instr::Dpa2 => "DPA2",
+            Instr::Dpa4 => "DPA4",
+        }
+    }
+}
+
+/// A homogeneous cluster of cores within a (possibly heterogeneous) CPU.
+#[derive(Clone, Debug)]
+pub struct CoreCluster {
+    pub class: CoreClass,
+    pub cores: u32,
+    pub threads_per_core: u32,
+    /// single-core boost clock, GHz
+    pub boost_ghz: f64,
+    /// all-core sustained clock, GHz (thermal/TDP limited)
+    pub allcore_ghz: f64,
+    /// SIMD datapath width in bits (256 = AVX2, 512 = AVX-512)
+    pub simd_bits: u32,
+    /// number of FMA execution ports
+    pub fma_ports: u32,
+    pub vnni: Vnni,
+    pub hierarchy: Hierarchy,
+}
+
+impl CoreCluster {
+    /// Peak operations per cycle per core for an instruction mix.
+    /// FMA counts 2 ops (mul+add) per lane; DPA2/DPA4 count 2/4 MACs
+    /// (= 4/8 ops) per 32-bit lane, matching cpufp's op accounting.
+    pub fn ops_per_cycle(&self, instr: Instr) -> f64 {
+        let lanes_f32 = (self.simd_bits / 32 * self.fma_ports) as f64;
+        let fma_f32 = 2.0 * lanes_f32;
+        match instr {
+            Instr::FmaF64 => fma_f32 / 2.0,
+            Instr::FmaF32 => fma_f32,
+            Instr::Dpa2 => match self.vnni {
+                // VNNI executes on the FMA-width pipes: 2 MACs per lane
+                Vnni::Avx256 | Vnni::Avx512 => 2.0 * fma_f32,
+                Vnni::None => fma_f32, // falls back to FMA pipeline
+            },
+            Instr::Dpa4 => match self.vnni {
+                Vnni::Avx256 | Vnni::Avx512 => 4.0 * fma_f32,
+                Vnni::None => fma_f32,
+            },
+        }
+    }
+
+    /// Peak op/s with `cores` active cores of this cluster.
+    pub fn peak_ops(&self, instr: Instr, cores: u32) -> f64 {
+        assert!(cores <= self.cores, "cluster has only {} cores", self.cores);
+        let ghz = if cores <= 1 {
+            self.boost_ghz
+        } else {
+            self.allcore_ghz
+        };
+        self.ops_per_cycle(instr) * ghz * 1e9 * cores as f64
+    }
+}
+
+/// A full CPU: one or more clusters plus shared RAM characteristics.
+#[derive(Clone, Debug)]
+pub struct CpuModel {
+    pub vendor: &'static str,
+    pub product: &'static str,
+    pub architecture: &'static str,
+    pub tdp_w: f64,
+    pub clusters: Vec<CoreCluster>,
+    /// sustained RAM streaming bandwidth, bytes/s (all cores combined)
+    pub ram_bw: f64,
+}
+
+impl CpuModel {
+    pub fn cores(&self) -> u32 {
+        self.clusters.iter().map(|c| c.cores).sum()
+    }
+
+    pub fn threads(&self) -> u32 {
+        self.clusters
+            .iter()
+            .map(|c| c.cores * c.threads_per_core)
+            .sum()
+    }
+
+    pub fn cluster(&self, class: CoreClass) -> Option<&CoreCluster> {
+        self.clusters.iter().find(|c| c.class == class)
+    }
+
+    /// Fig. 5c's "multi-core accumulated": all clusters at all-core clocks.
+    pub fn peak_ops_accumulated(&self, instr: Instr) -> f64 {
+        self.clusters
+            .iter()
+            .map(|c| c.peak_ops(instr, c.cores))
+            .sum()
+    }
+
+    /// Streaming bandwidth for `cores` cores of `class` on buffers that
+    /// resolve to `level`. RAM is shared across the whole package.
+    pub fn stream_bw(&self, class: CoreClass, cores: u32, level: CacheLevel) -> f64 {
+        let cluster = self.cluster(class).expect("no such core class");
+        match level {
+            CacheLevel::Ram => self.ram_bw.min(
+                // small core counts can't always saturate the controller
+                cluster.hierarchy.l1.read_bw_per_core * cores as f64,
+            ),
+            lvl => cluster
+                .hierarchy
+                .spec(lvl)
+                .map(|s: &CacheSpec| s.aggregate_bw(cores))
+                .unwrap_or(self.ram_bw),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(vnni: Vnni, simd: u32) -> CoreCluster {
+        CoreCluster {
+            class: CoreClass::Performance,
+            cores: 8,
+            threads_per_core: 2,
+            boost_ghz: 5.0,
+            allcore_ghz: 4.0,
+            simd_bits: simd,
+            fma_ports: 2,
+            vnni,
+            hierarchy: Hierarchy {
+                l1: CacheSpec::new(48 << 10, 1, 300.0, 8),
+                l2: CacheSpec::new(2 << 20, 1, 150.0, 8),
+                l3: Some(CacheSpec::new(24 << 20, 8, 80.0, 1)),
+            },
+        }
+    }
+
+    #[test]
+    fn fma_doubling_ladder_with_vnni() {
+        // paper: f64 ×2 = f32, ×2 = DPA2, ×2 = DPA4
+        let c = cluster(Vnni::Avx256, 256);
+        let f64_ = c.ops_per_cycle(Instr::FmaF64);
+        let f32_ = c.ops_per_cycle(Instr::FmaF32);
+        let dpa2 = c.ops_per_cycle(Instr::Dpa2);
+        let dpa4 = c.ops_per_cycle(Instr::Dpa4);
+        assert_eq!(f32_, 2.0 * f64_);
+        assert_eq!(dpa2, 2.0 * f32_);
+        assert_eq!(dpa4, 2.0 * dpa2);
+    }
+
+    #[test]
+    fn no_vnni_dpa_equals_fma32() {
+        // paper Fig. 5a: 13900H e-core has no VNNI unit
+        let c = cluster(Vnni::None, 256);
+        assert_eq!(c.ops_per_cycle(Instr::Dpa2), c.ops_per_cycle(Instr::FmaF32));
+        assert_eq!(c.ops_per_cycle(Instr::Dpa4), c.ops_per_cycle(Instr::FmaF32));
+    }
+
+    #[test]
+    fn wider_simd_scales_ops() {
+        let narrow = cluster(Vnni::Avx512, 256);
+        let wide = cluster(Vnni::Avx512, 512);
+        assert_eq!(
+            wide.ops_per_cycle(Instr::FmaF32),
+            2.0 * narrow.ops_per_cycle(Instr::FmaF32)
+        );
+    }
+
+    #[test]
+    fn single_core_uses_boost_clock() {
+        let c = cluster(Vnni::Avx256, 256);
+        let one = c.peak_ops(Instr::FmaF32, 1);
+        assert!((one - c.ops_per_cycle(Instr::FmaF32) * 5.0e9).abs() < 1.0);
+        let all = c.peak_ops(Instr::FmaF32, 8);
+        // 8 cores at 4 GHz > 1 core at 5 GHz, but < 8x boost
+        assert!(all > one && all < 8.0 * one);
+    }
+
+    #[test]
+    #[should_panic(expected = "only")]
+    fn too_many_cores_panics() {
+        cluster(Vnni::None, 256).peak_ops(Instr::FmaF32, 9);
+    }
+
+    #[test]
+    fn accumulated_sums_clusters() {
+        let mut cpu = CpuModel {
+            vendor: "Test",
+            product: "T1",
+            architecture: "t",
+            tdp_w: 100.0,
+            clusters: vec![cluster(Vnni::Avx256, 256)],
+            ram_bw: 70e9,
+        };
+        let single = cpu.peak_ops_accumulated(Instr::FmaF32);
+        let mut e = cluster(Vnni::Avx256, 256);
+        e.class = CoreClass::Efficient;
+        cpu.clusters.push(e);
+        assert!((cpu.peak_ops_accumulated(Instr::FmaF32) - 2.0 * single).abs() < 1.0);
+    }
+
+    #[test]
+    fn ram_bw_capped_by_package() {
+        let cpu = CpuModel {
+            vendor: "Test",
+            product: "T1",
+            architecture: "t",
+            tdp_w: 100.0,
+            clusters: vec![cluster(Vnni::Avx256, 256)],
+            ram_bw: 70e9,
+        };
+        let bw = cpu.stream_bw(CoreClass::Performance, 8, CacheLevel::Ram);
+        assert!((bw - 70e9).abs() < 1.0);
+    }
+}

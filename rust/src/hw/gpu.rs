@@ -1,0 +1,237 @@
+//! GPU models (paper §2.2 Table 1, Figs. 6–8): discrete GPUs with VRAM
+//! and integrated GPUs sharing unified RAM with the CPU.
+//!
+//! Peak op/s derive from shader count × clock × 2 (mad = mul+add), with
+//! per-dtype rate multipliers; global-memory bandwidth comes from the
+//! VRAM/unified-RAM model plus the packed-width effect of Fig. 6 (packing
+//! helps dGPU VRAM, is a wash on iGPU system RAM); kernel-launch
+//! latencies reproduce Fig. 8, including the Arc A770's Oculink-inflated
+//! ~90 µs and the "not measurable over OpenCL" AMD event bug.
+
+use super::mem::MemKind;
+
+/// Discrete (own VRAM) vs integrated (unified system RAM).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum GpuKind {
+    Discrete,
+    Integrated,
+}
+
+/// clpeak packed vector widths of Fig. 6 (float32xN).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PackWidth {
+    X1,
+    X2,
+    X4,
+    X8,
+    X16,
+}
+
+impl PackWidth {
+    pub const ALL: [PackWidth; 5] = [
+        PackWidth::X1,
+        PackWidth::X2,
+        PackWidth::X4,
+        PackWidth::X8,
+        PackWidth::X16,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PackWidth::X1 => "float32x1",
+            PackWidth::X2 => "float32x2",
+            PackWidth::X4 => "float32x4",
+            PackWidth::X8 => "float32x8",
+            PackWidth::X16 => "float32x16",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            PackWidth::X1 => 0,
+            PackWidth::X2 => 1,
+            PackWidth::X4 => 2,
+            PackWidth::X8 => 3,
+            PackWidth::X16 => 4,
+        }
+    }
+}
+
+/// clpeak compute dtypes of Fig. 7.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum GpuDtype {
+    F16,
+    F32,
+    F64,
+    I8,
+    I16,
+    I32,
+}
+
+impl GpuDtype {
+    pub const ALL: [GpuDtype; 6] = [
+        GpuDtype::F16,
+        GpuDtype::F32,
+        GpuDtype::F64,
+        GpuDtype::I8,
+        GpuDtype::I16,
+        GpuDtype::I32,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuDtype::F16 => "float16",
+            GpuDtype::F32 => "float32",
+            GpuDtype::F64 => "float64",
+            GpuDtype::I8 => "int8",
+            GpuDtype::I16 => "int16",
+            GpuDtype::I32 => "int32",
+        }
+    }
+}
+
+/// A GPU model, calibrated from Table 1 + Figs. 6–8.
+#[derive(Clone, Debug)]
+pub struct GpuModel {
+    pub vendor: &'static str,
+    pub product: &'static str,
+    pub architecture: &'static str,
+    pub kind: GpuKind,
+    /// paper's "SM" column (SMs / CUs / EUs depending on vendor)
+    pub sm: u32,
+    pub shader_cores: u32,
+    pub boost_ghz: f64,
+    pub tdp_w: f64,
+    /// VRAM size (GiB) for discrete GPUs; 0 for integrated
+    pub vram_gb: u32,
+    pub mem_kind: MemKind,
+    /// peak global-memory bandwidth, bytes/s (VRAM or the node's RAM)
+    pub gmem_bw: f64,
+    /// per-dtype op/s multipliers relative to f32 mad rate
+    pub rate_f16: f64,
+    pub rate_f64: f64,
+    pub rate_i8: f64,
+    pub rate_i16: f64,
+    pub rate_i32: f64,
+    /// kernel-launch latency (Fig. 8); None = OpenCL event handling
+    /// broken on this driver (Radeon 610M / RX 7900 XTX in the paper)
+    pub launch_latency_us: Option<f64>,
+}
+
+impl GpuModel {
+    /// Peak f32 mad op/s: shaders × clock × 2 ops (mul+add).
+    pub fn peak_f32(&self) -> f64 {
+        self.shader_cores as f64 * self.boost_ghz * 1e9 * 2.0
+    }
+
+    /// Peak op/s for a clpeak dtype (Fig. 7).
+    pub fn peak_ops(&self, dtype: GpuDtype) -> f64 {
+        let base = self.peak_f32();
+        match dtype {
+            GpuDtype::F32 => base,
+            GpuDtype::F16 => base * self.rate_f16,
+            GpuDtype::F64 => base * self.rate_f64,
+            GpuDtype::I8 => base * self.rate_i8,
+            GpuDtype::I16 => base * self.rate_i16,
+            GpuDtype::I32 => base * self.rate_i32,
+        }
+    }
+
+    /// Achieved copy bandwidth for a packed width (Fig. 6). dGPUs gain
+    /// from wider packs (latency hiding on the VRAM bus); iGPUs are
+    /// limited by system RAM regardless of pack width.
+    pub fn gmem_copy_bw(&self, pack: PackWidth) -> f64 {
+        // copy moves 2 bytes per byte of buffer (read + write)
+        match self.kind {
+            GpuKind::Discrete => {
+                // ramp 72% -> 92% of peak with pack width
+                const RAMP: [f64; 5] = [0.72, 0.80, 0.86, 0.90, 0.92];
+                self.gmem_bw * RAMP[pack.index()]
+            }
+            GpuKind::Integrated => {
+                // iGPUs already saturate the RAM controller at x1; the
+                // paper notes packing has no significant effect, and that
+                // iGPUs use RAM *more* efficiently than the CPU cores.
+                const RAMP: [f64; 5] = [0.93, 0.94, 0.95, 0.95, 0.94];
+                self.gmem_bw * RAMP[pack.index()]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::Catalog;
+
+    #[test]
+    fn rtx4090_peak_f32_order() {
+        let c = Catalog::dalek();
+        let g = c.gpu("GeForce RTX 4090").unwrap();
+        // 16384 shaders * ~2.5 GHz * 2 ≈ 80+ Tflop/s
+        assert!(g.peak_f32() > 70e12 && g.peak_f32() < 100e12);
+    }
+
+    #[test]
+    fn dgpu_vram_10x_igpu_ram() {
+        // paper Fig. 6: VRAM up to 10x faster than iGPU system RAM
+        let c = Catalog::dalek();
+        let dgpu = c.gpu("GeForce RTX 4090").unwrap();
+        let igpu = c.gpu("Radeon 610M").unwrap();
+        let ratio = dgpu.gmem_copy_bw(PackWidth::X16) / igpu.gmem_copy_bw(PackWidth::X16);
+        assert!(ratio > 8.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn packing_helps_dgpu_not_igpu() {
+        let c = Catalog::dalek();
+        let dgpu = c.gpu("Radeon 7900 XTX").unwrap();
+        let igpu = c.gpu("Radeon 890M").unwrap();
+        let dgain = dgpu.gmem_copy_bw(PackWidth::X16) / dgpu.gmem_copy_bw(PackWidth::X1);
+        let igain = igpu.gmem_copy_bw(PackWidth::X16) / igpu.gmem_copy_bw(PackWidth::X1);
+        assert!(dgain > 1.15, "dGPU gain={dgain}");
+        assert!((0.95..1.05).contains(&igain), "iGPU gain={igain}");
+    }
+
+    #[test]
+    fn igpu_vs_dgpu_peak_order_of_magnitude() {
+        // paper Fig. 7: nearly an order of magnitude compute gap
+        let c = Catalog::dalek();
+        let arc_mobile = c.gpu("Arc Graphics Mobile").unwrap();
+        let a4090 = c.gpu("GeForce RTX 4090").unwrap();
+        let ratio = a4090.peak_ops(GpuDtype::F32) / arc_mobile.peak_ops(GpuDtype::F32);
+        assert!(ratio > 7.0 && ratio < 30.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn arc_mobile_f16_approx_9_8_tops() {
+        // paper §5.4: Arc Graphics Mobile delivers ~9.8 Top/s on f16
+        let c = Catalog::dalek();
+        let g = c.gpu("Arc Graphics Mobile").unwrap();
+        let tops = g.peak_ops(GpuDtype::F16) / 1e12;
+        assert!((8.5..11.0).contains(&tops), "f16 Top/s = {tops}");
+    }
+
+    #[test]
+    fn f64_much_slower_on_consumer_gpus() {
+        let c = Catalog::dalek();
+        let g = c.gpu("GeForce RTX 4090").unwrap();
+        assert!(g.peak_ops(GpuDtype::F64) < g.peak_ops(GpuDtype::F32) / 16.0);
+    }
+
+    #[test]
+    fn launch_latency_fig8_shape() {
+        let c = Catalog::dalek();
+        // A770 ~90 µs (Oculink), Intel iGPUs 35–40 µs, 890M/4090 ~5 µs
+        let a770 = c.gpu("Arc A770").unwrap().launch_latency_us.unwrap();
+        let xe = c.gpu("Iris Xe Graphics").unwrap().launch_latency_us.unwrap();
+        let r890 = c.gpu("Radeon 890M").unwrap().launch_latency_us.unwrap();
+        let g4090 = c.gpu("GeForce RTX 4090").unwrap().launch_latency_us.unwrap();
+        assert!(a770 > 2.0 * xe);
+        assert!(xe > 4.0 * r890);
+        assert!((3.0..8.0).contains(&g4090));
+        // AMD OpenCL event bug: not measurable
+        assert!(c.gpu("Radeon 610M").unwrap().launch_latency_us.is_none());
+        assert!(c.gpu("Radeon 7900 XTX").unwrap().launch_latency_us.is_none());
+    }
+}

@@ -1,0 +1,105 @@
+//! RAM models (paper Table 1, RAM section): technology, channels,
+//! transfer rate, and the sustained fraction of theoretical bandwidth a
+//! streaming workload achieves (the 60–80 GB/s plateau of Fig. 4d).
+
+/// Memory technology of a node.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MemKind {
+    Ddr5,
+    LpDdr5,
+    LpDdr4,
+    Gddr6,
+    Gddr6x,
+}
+
+impl MemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemKind::Ddr5 => "DDR5",
+            MemKind::LpDdr5 => "LPDDR5x",
+            MemKind::LpDdr4 => "LPDDR4",
+            MemKind::Gddr6 => "GDDR6",
+            MemKind::Gddr6x => "GDDR6X",
+        }
+    }
+}
+
+/// A RAM configuration.
+#[derive(Clone, Debug)]
+pub struct MemModel {
+    pub kind: MemKind,
+    pub size_gb: u32,
+    pub mtps: u32,
+    pub channels: u32,
+    /// bus width per channel in bits (64 for DDR5 boards, 16/32 for LPDDR)
+    pub channel_bits: u32,
+    /// fraction of theoretical peak a streaming kernel sustains
+    pub efficiency: f64,
+}
+
+impl MemModel {
+    /// DDR5 SO-DIMM/UDIMM dual-channel config (64-bit channels).
+    pub fn ddr5(size_gb: u32, mtps: u32, channels: u32) -> Self {
+        Self {
+            kind: MemKind::Ddr5,
+            size_gb,
+            mtps,
+            channels,
+            channel_bits: 64,
+            efficiency: 0.80,
+        }
+    }
+
+    /// LPDDR5x quad-channel (32-bit channels), the az5-a890m config.
+    pub fn lpddr5x(size_gb: u32, mtps: u32, channels: u32) -> Self {
+        Self {
+            kind: MemKind::LpDdr5,
+            size_gb,
+            mtps,
+            channels,
+            channel_bits: 32,
+            efficiency: 0.80,
+        }
+    }
+
+    /// Theoretical peak bandwidth, bytes/s.
+    pub fn peak_bw(&self) -> f64 {
+        self.mtps as f64 * 1e6 * (self.channel_bits as f64 / 8.0) * self.channels as f64
+    }
+
+    /// Sustained streaming bandwidth, bytes/s.
+    pub fn sustained_bw(&self) -> f64 {
+        self.peak_bw() * self.efficiency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddr5_5200_dual_channel_peak() {
+        // 5200 MT/s * 8 B * 2 channels = 83.2 GB/s theoretical
+        let m = MemModel::ddr5(96, 5200, 2);
+        assert!((m.peak_bw() - 83.2e9).abs() < 1e6);
+        // sustained lands in the paper's 60–80 GB/s RAM plateau
+        let s = m.sustained_bw();
+        assert!((60e9..80e9).contains(&s), "sustained={s}");
+    }
+
+    #[test]
+    fn lpddr5x_quad_beats_ddr5_dual() {
+        // paper: HX 370's quad-channel LPDDR5x-7500 gives a slight edge
+        let ddr = MemModel::ddr5(96, 5200, 2);
+        let lp = MemModel::lpddr5x(32, 7500, 4);
+        assert!(lp.sustained_bw() > ddr.sustained_bw());
+        // but within the same order (quad 32-bit ≈ dual 64-bit width)
+        assert!(lp.sustained_bw() < 2.0 * ddr.sustained_bw());
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(MemKind::Ddr5.name(), "DDR5");
+        assert_eq!(MemKind::LpDdr5.name(), "LPDDR5x");
+    }
+}

@@ -1,0 +1,23 @@
+//! Calibrated hardware models of every DALEK component (paper §2,
+//! Tables 1–2). These models are the simulation substitute for the
+//! physical consumer hardware we do not have: each is parameterized from
+//! the specs the paper publishes (core counts, cache sizes, memory
+//! channels, SM/shader counts, TDPs) and from the measured trends of the
+//! paper's own Figures 4–9, so that the bench executors regenerate the
+//! same shapes (who wins, by what factor, where crossovers fall).
+
+pub mod cache;
+pub mod catalog;
+pub mod cpu;
+pub mod gpu;
+pub mod mem;
+pub mod node;
+pub mod ssd;
+
+pub use cache::{CacheLevel, CacheSpec};
+pub use catalog::{Catalog, PartitionSpec};
+pub use cpu::{CoreClass, CoreCluster, CpuModel, Instr, Vnni};
+pub use gpu::{GpuKind, GpuModel, PackWidth};
+pub use mem::MemModel;
+pub use node::{NodeModel, NodePower};
+pub use ssd::SsdModel;

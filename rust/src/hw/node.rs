@@ -1,0 +1,105 @@
+//! Node assembly: CPU + iGPU (+ dGPU) + RAM + SSD + power envelope +
+//! boot/suspend timing (paper §2.2, Table 2, §3.4).
+
+use super::cpu::CpuModel;
+use super::gpu::GpuModel;
+use super::mem::MemModel;
+use super::ssd::SsdModel;
+use crate::sim::SimTime;
+
+/// Per-node power envelope (Table 2, divided by the 4 nodes/partition).
+#[derive(Clone, Copy, Debug)]
+pub struct NodePower {
+    /// powered on, no load, watts
+    pub idle_w: f64,
+    /// suspended / soft-off, watts (WoL listener keeps the NIC alive)
+    pub suspend_w: f64,
+    /// whole-node TDP (CPU + dGPU + platform), watts
+    pub tdp_w: f64,
+}
+
+/// Static description of one compute node (or the frontend).
+#[derive(Clone, Debug)]
+pub struct NodeModel {
+    /// e.g. "Minisforum BD790i" — the platform the node is built on
+    pub platform: &'static str,
+    pub cpu: CpuModel,
+    pub igpu: Option<GpuModel>,
+    pub dgpu: Option<GpuModel>,
+    pub ram: MemModel,
+    pub ssd: SsdModel,
+    /// heterogeneous SoCs on DALEK ship an NPU (paper §1)
+    pub has_npu: bool,
+    pub power: NodePower,
+    /// full boot (PXE local-boot path) — the ≤2 min of §3.4
+    pub boot_time: SimTime,
+    /// clean shutdown on the powerstate-ssh path
+    pub shutdown_time: SimTime,
+    /// 2.5/5/10 GbE NIC rate in bits/s
+    pub nic_bps: f64,
+}
+
+impl NodeModel {
+    /// Primary GPU (discrete if present, else integrated).
+    pub fn primary_gpu(&self) -> Option<&GpuModel> {
+        self.dgpu.as_ref().or(self.igpu.as_ref())
+    }
+
+    /// Sum of GPU VRAM, GiB.
+    pub fn vram_gb(&self) -> u32 {
+        self.dgpu.as_ref().map(|g| g.vram_gb).unwrap_or(0)
+    }
+
+    /// f32 compute roofline of the whole node (CPU accumulated + GPUs).
+    pub fn peak_f32_ops(&self) -> f64 {
+        let cpu = self
+            .cpu
+            .peak_ops_accumulated(crate::hw::cpu::Instr::FmaF32);
+        let gpu: f64 = self
+            .dgpu
+            .iter()
+            .chain(self.igpu.iter())
+            .map(|g| g.peak_f32())
+            .sum();
+        cpu + gpu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::hw::catalog::Catalog;
+
+    #[test]
+    fn primary_gpu_prefers_discrete() {
+        let c = Catalog::dalek();
+        let n4090 = &c.partition("az4-n4090").unwrap().node;
+        assert_eq!(n4090.primary_gpu().unwrap().product, "GeForce RTX 4090");
+        let a890m = &c.partition("az5-a890m").unwrap().node;
+        assert_eq!(a890m.primary_gpu().unwrap().product, "Radeon 890M");
+    }
+
+    #[test]
+    fn vram_accounting() {
+        let c = Catalog::dalek();
+        assert_eq!(c.partition("az4-n4090").unwrap().node.vram_gb(), 24);
+        assert_eq!(c.partition("az5-a890m").unwrap().node.vram_gb(), 0);
+    }
+
+    #[test]
+    fn gpu_dominates_node_roofline() {
+        let c = Catalog::dalek();
+        let node = &c.partition("az4-n4090").unwrap().node;
+        let gpu = node.dgpu.as_ref().unwrap().peak_f32();
+        assert!(node.peak_f32_ops() > gpu);
+        assert!(node.peak_f32_ops() < 1.2 * gpu); // CPU is a small fraction
+    }
+
+    #[test]
+    fn boot_within_two_minutes() {
+        // §3.4: up to 2 min between reservation and job start
+        let c = Catalog::dalek();
+        for p in c.partitions() {
+            assert!(p.node.boot_time <= crate::sim::SimTime::from_mins(2));
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! SSD models (paper §5.6, Fig. 9): NVMe drives over PCIe 4.0, ext4,
+//! sequential (dd) vs random (iozone) read/write throughput.
+
+/// Access pattern of the Fig. 9 sweep.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SsdAccess {
+    SeqRead,
+    SeqWrite,
+    RandRead,
+    RandWrite,
+}
+
+impl SsdAccess {
+    pub const ALL: [SsdAccess; 4] = [
+        SsdAccess::SeqRead,
+        SsdAccess::SeqWrite,
+        SsdAccess::RandRead,
+        SsdAccess::RandWrite,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SsdAccess::SeqRead => "seq read",
+            SsdAccess::SeqWrite => "seq write",
+            SsdAccess::RandRead => "rand read",
+            SsdAccess::RandWrite => "rand write",
+        }
+    }
+}
+
+/// An NVMe SSD model.
+#[derive(Clone, Debug)]
+pub struct SsdModel {
+    pub vendor: &'static str,
+    pub product: &'static str,
+    pub size_tb: f64,
+    pub seq_read_bw: f64,
+    pub seq_write_bw: f64,
+    pub rand_read_bw: f64,
+    pub rand_write_bw: f64,
+    /// hardware block 512 B, logical 4096 B (paper §5.6)
+    pub logical_block: u32,
+}
+
+impl SsdModel {
+    pub fn new(
+        vendor: &'static str,
+        product: &'static str,
+        size_tb: f64,
+        seq_read_gbps: f64,
+        seq_write_gbps: f64,
+        rand_read_gbps: f64,
+        rand_write_gbps: f64,
+    ) -> Self {
+        Self {
+            vendor,
+            product,
+            size_tb,
+            seq_read_bw: seq_read_gbps * 1e9,
+            seq_write_bw: seq_write_gbps * 1e9,
+            rand_read_bw: rand_read_gbps * 1e9,
+            rand_write_bw: rand_write_gbps * 1e9,
+            logical_block: 4096,
+        }
+    }
+
+    pub fn bw(&self, access: SsdAccess) -> f64 {
+        match access {
+            SsdAccess::SeqRead => self.seq_read_bw,
+            SsdAccess::SeqWrite => self.seq_write_bw,
+            SsdAccess::RandRead => self.rand_read_bw,
+            SsdAccess::RandWrite => self.rand_write_bw,
+        }
+    }
+
+    /// Time to transfer `bytes` with the given pattern, in seconds.
+    pub fn transfer_secs(&self, bytes: u64, access: SsdAccess) -> f64 {
+        bytes as f64 / self.bw(access)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::Catalog;
+
+    #[test]
+    fn fig9_shape_seq_3x_random() {
+        // paper: sequential ≈ 3× random, reads ≥ writes
+        for ssd in Catalog::dalek().ssds() {
+            let seq_r = ssd.bw(SsdAccess::SeqRead);
+            let rand_r = ssd.bw(SsdAccess::RandRead);
+            assert!(
+                seq_r / rand_r > 2.0 && seq_r / rand_r < 5.0,
+                "{}: seq/rand = {}",
+                ssd.product,
+                seq_r / rand_r
+            );
+            assert!(seq_r >= ssd.bw(SsdAccess::SeqWrite));
+            assert!(rand_r >= ssd.bw(SsdAccess::RandWrite));
+        }
+    }
+
+    #[test]
+    fn kingston_write_close_to_read() {
+        // paper's surprise: Kingston OM8PGP4 seq write ≈ seq read
+        let c = Catalog::dalek();
+        let k = c.ssd("OM8PGP41024Q-A0").unwrap();
+        let ratio = k.bw(SsdAccess::SeqWrite) / k.bw(SsdAccess::SeqRead);
+        assert!(ratio > 0.9, "ratio={ratio}");
+    }
+
+    #[test]
+    fn transfer_time_linear() {
+        let c = Catalog::dalek();
+        let s = c.ssd("990 PRO").unwrap();
+        let t1 = s.transfer_secs(1 << 30, SsdAccess::SeqRead);
+        let t2 = s.transfer_secs(2 << 30, SsdAccess::SeqRead);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+}

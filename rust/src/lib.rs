@@ -1,0 +1,37 @@
+//! # dalek — An Unconventional & Energy-Aware Heterogeneous Cluster
+//!
+//! Full-system reproduction of the DALEK paper (Cassagne, Amiot, Bouyer;
+//! LIP6 / Sorbonne Université, 2025): a 21-node heterogeneous consumer-
+//! hardware cluster with an energy-aware SLURM deployment and a custom
+//! 1000-samples-per-second, milliwatt-resolution energy measurement
+//! platform.
+//!
+//! The physical testbed is replaced by calibrated simulation models
+//! (see DESIGN.md §1 for the substitution table); the coordinator,
+//! scheduler, energy platform logic and the PJRT compute path are real
+//! code. The crate is organized bottom-up:
+//!
+//! * [`util`] — PRNG, tables, units, stats, CLI substrates
+//! * [`sim`] — deterministic discrete-event engine
+//! * [`hw`] — calibrated hardware catalog (paper Tables 1–2, Figs. 4–9)
+//! * [`net`] — flow-level network simulation (§2.4, Table 3)
+//! * [`services`] — frontend services: DHCP/DNS, PXE autoinstall, NFS (§3.2–3.3)
+//! * [`slurm`] — resource manager: jobs, partitions, node FSM (§3.4–3.5)
+//! * [`power`] — node power models, WoL control, DVFS, RAPL (§3.4, §3.6)
+//! * [`energy`] — the INA228/I2C energy measurement platform (§4)
+//! * [`bench`] — executors regenerating every table and figure (§5)
+//! * [`runtime`] — PJRT client running the AOT-compiled JAX/Pallas payloads
+//! * [`coordinator`] — the frontend daemon tying everything together
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod hw;
+pub mod net;
+pub mod power;
+pub mod runtime;
+pub mod services;
+pub mod sim;
+pub mod slurm;
+pub mod util;

@@ -1,0 +1,335 @@
+//! `dalek` — the cluster coordinator CLI.
+//!
+//! ```text
+//! dalek topology [--spec] [--power] [--net]     Tables 1 / 2 / 3
+//! dalek bench <target> [--seed N] [--csv]       regenerate a paper figure
+//!     targets: fig4 fig5 fig6 fig7 fig8 fig9 tab1 tab2 tab3
+//!              energy idle pxe all
+//! dalek run [--jobs N] [--seed N] [--sample] [--artifacts DIR]
+//!                                               end-to-end trace replay
+//! dalek payloads [--artifacts DIR]              list AOT payloads
+//! dalek exec <payload> [--iters N] [--artifacts DIR]
+//!                                               run one payload on PJRT
+//! ```
+
+use dalek::bench;
+use dalek::config::ClusterConfig;
+use dalek::coordinator::{trace, Cluster};
+use dalek::energy::bus::I2cBus;
+use dalek::hw::{CacheLevel, Catalog};
+use dalek::net::Topology;
+use dalek::runtime::PjRtRuntime;
+use dalek::services::pxe::PxeInstaller;
+use dalek::sim::SimTime;
+use dalek::util::cli::Args;
+use dalek::util::{units, Table};
+
+const VALUE_FLAGS: &[&str] = &[
+    "seed", "jobs", "iters", "artifacts", "partition", "nodes", "payload", "hours", "config",
+];
+const BOOL_FLAGS: &[&str] = &["csv", "sample", "spec", "power", "net", "help", "no-suspend"];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&raw, VALUE_FLAGS, BOOL_FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") || args.positional.is_empty() {
+        print!("{}", usage());
+        return;
+    }
+    let result = match args.positional[0].as_str() {
+        "topology" => cmd_topology(&args),
+        "bench" => cmd_bench(&args),
+        "run" => cmd_run(&args),
+        "payloads" => cmd_payloads(&args),
+        "exec" => cmd_exec(&args),
+        other => {
+            eprintln!("unknown command `{other}`\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "dalek — an unconventional & energy-aware heterogeneous cluster (reproduction)\n\
+     \n\
+     usage:\n\
+     \x20 dalek topology [--spec] [--power] [--net]\n\
+     \x20 dalek bench <fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab3|energy|idle|pxe|all> [--seed N] [--csv]\n\
+     \x20 dalek run [--jobs N] [--seed N] [--sample] [--no-suspend] [--artifacts DIR]\n\
+     \x20 dalek payloads [--artifacts DIR]\n\
+     \x20 dalek exec <payload> [--iters N] [--artifacts DIR]\n"
+        .to_string()
+}
+
+fn emit(t: &Table, csv: bool) {
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        t.print();
+        println!();
+    }
+}
+
+fn cmd_topology(args: &Args) -> anyhow::Result<()> {
+    let catalog = Catalog::dalek();
+    let cfg = ClusterConfig::dalek_default();
+    let all = !(args.has("spec") || args.has("power") || args.has("net"));
+    if all || args.has("spec") {
+        for t in bench::tables::table1(&catalog) {
+            emit(&t, args.has("csv"));
+        }
+    }
+    if all || args.has("power") {
+        emit(&bench::tables::table2(&catalog), args.has("csv"));
+    }
+    if all || args.has("net") {
+        emit(&bench::tables::table3(&cfg), args.has("csv"));
+        let topo = Topology::build(&cfg);
+        println!(
+            "{} hosts, switch fabric {}",
+            topo.hosts().len(),
+            units::si(topo.fabric_bps, "b/s")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let target = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let seed: u64 = args.get_or("seed", 0xDA1EC)?;
+    let csv = args.has("csv");
+    let catalog = Catalog::dalek();
+    let run_one = |t: &str| -> anyhow::Result<()> {
+        match t {
+            "fig4" => {
+                let points = bench::membw::run_all(seed, true);
+                for lvl in [CacheLevel::L1, CacheLevel::L2, CacheLevel::L3, CacheLevel::Ram] {
+                    emit(&bench::membw::render(&points, lvl), csv);
+                }
+            }
+            "fig5" => {
+                let points = bench::cpufp::run_all(seed, true);
+                for m in bench::cpufp::Mode::ALL {
+                    emit(&bench::cpufp::render(&points, m), csv);
+                }
+            }
+            "fig6" => emit(
+                &bench::clpeak::render_gmem(&bench::clpeak::run_all_gmem(seed, true)),
+                csv,
+            ),
+            "fig7" => emit(
+                &bench::clpeak::render_ops(&bench::clpeak::run_all_ops(seed, true)),
+                csv,
+            ),
+            "fig8" => emit(&bench::latency::render(&bench::latency::run_all(seed, 10_000)), csv),
+            "fig9" => emit(&bench::ssd::render(&bench::ssd::run_all(seed, true)), csv),
+            "tab1" => {
+                for t in bench::tables::table1(&catalog) {
+                    emit(&t, csv);
+                }
+            }
+            "tab2" => emit(&bench::tables::table2(&catalog), csv),
+            "tab3" => emit(&bench::tables::table3(&ClusterConfig::dalek_default()), csv),
+            "energy" => bench_energy(csv)?,
+            "idle" => bench_idle(csv)?,
+            "pxe" => bench_pxe(csv)?,
+            other => anyhow::bail!("unknown bench target `{other}`"),
+        }
+        Ok(())
+    };
+    if target == "all" {
+        for t in [
+            "tab1", "tab2", "tab3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "energy",
+            "idle", "pxe",
+        ] {
+            run_one(t)?;
+        }
+    } else {
+        run_one(target)?;
+    }
+    Ok(())
+}
+
+/// §4 platform characterization: probes-per-chain sweep.
+fn bench_energy(csv: bool) -> anyhow::Result<()> {
+    let mut t = Table::new(&["probes on chain", "requested SPS", "effective SPS", "saturated"])
+        .title("§4.1 — I2C chain arbitration (1000 SPS × 6 probes is the knee)");
+    for n in 1..=6usize {
+        let mut bus = I2cBus::new();
+        for i in 0..n {
+            bus.attach(i as u8).expect("≤6");
+        }
+        for req in [500.0, 1000.0, 2000.0, 4000.0] {
+            t.row(&[
+                n.to_string(),
+                format!("{req:.0}"),
+                format!("{:.0}", bus.effective_sps(req)),
+                if bus.saturated(req) { "yes" } else { "no" }.to_string(),
+            ]);
+        }
+    }
+    emit(&t, csv);
+    Ok(())
+}
+
+/// §3.4 idle-power experiment.
+fn bench_idle(csv: bool) -> anyhow::Result<()> {
+    let mut t = Table::new(&["configuration", "compute W", "infra W", "total W"])
+        .title("§3.4 — idle cluster power (paper: ≈50 W with suspend)")
+        .left(0);
+    let catalog = Catalog::dalek();
+    let infra = catalog.frontend.power.idle_w
+        + catalog.rpi.power.idle_w * catalog.rpi_count as f64
+        + catalog.switch.idle_w;
+    for (label, enabled) in [("suspend policy ON", true), ("suspend policy OFF", false)] {
+        let mut cfg = ClusterConfig::dalek_default();
+        cfg.power.enabled = enabled;
+        let mut cluster = Cluster::new(cfg, None)?;
+        if !enabled {
+            // wake everything once (policy off ⇒ nodes stay up after use)
+            for p in ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"] {
+                cluster.submit(dalek::slurm::JobSpec::cpu("root", p, 4, 10), SimTime::ZERO)?;
+            }
+        }
+        cluster.run_until(SimTime::from_hours(2), false);
+        let w = cluster.slurm.cluster_watts();
+        t.row(&[
+            label.to_string(),
+            format!("{w:.0}"),
+            format!("{infra:.0}"),
+            format!("{:.0}", w + infra),
+        ]);
+    }
+    emit(&t, csv);
+    Ok(())
+}
+
+/// §3.3 PXE reinstall experiment.
+fn bench_pxe(csv: bool) -> anyhow::Result<()> {
+    let cfg = ClusterConfig::dalek_default();
+    let topo = Topology::build(&cfg);
+    let hosts = topo.compute_hosts();
+    let reports = PxeInstaller::default().reinstall_all(&topo, &hosts);
+    let mut t = Table::new(&["node", "install time"])
+        .title("§3.3 — full-cluster PXE reinstall (paper: ≈20 min for 16 nodes)")
+        .left(0);
+    let mut worst = SimTime::ZERO;
+    for r in &reports {
+        let d = r.finished.since(r.started);
+        worst = worst.max(d);
+        t.row(&[topo.host(r.host).name.clone(), units::secs(d.as_secs_f64())]);
+    }
+    emit(&t, csv);
+    println!("slowest node: {}", units::secs(worst.as_secs_f64()));
+    Ok(())
+}
+
+fn artifacts_flag(args: &Args) -> String {
+    args.get("artifacts").unwrap_or("artifacts").to_string()
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let jobs: usize = args.get_or("jobs", 50)?;
+    let seed: u64 = args.get_or("seed", 0xDA1EC)?;
+    let sample = args.has("sample");
+    let dir = artifacts_flag(args);
+    let have_artifacts = std::path::Path::new(&dir).join("manifest.json").exists();
+    let mut cfg = ClusterConfig::dalek_default();
+    if args.has("no-suspend") {
+        cfg.power.enabled = false;
+    }
+    let mut cluster = Cluster::new(cfg, have_artifacts.then_some(dir.as_str()))?;
+    let mut gen = trace::TraceGen::dalek_mix(seed);
+    if !have_artifacts {
+        eprintln!("note: no artifacts at {dir}; payload jobs degrade to synthetic");
+        gen.payloads.clear();
+    }
+    let tr = gen.generate(jobs);
+    let report = trace::replay(&mut cluster, &tr, sample);
+    let mut t = Table::new(&["metric", "value"])
+        .title("end-to-end trace replay")
+        .left(0)
+        .left(1);
+    t.row_strs(&["jobs submitted", &report.jobs.to_string()]);
+    t.row_strs(&["completed", &report.completed.to_string()]);
+    t.row_strs(&["timeouts", &report.timeouts.to_string()]);
+    t.row_strs(&["makespan", &units::secs(report.makespan.as_secs_f64())]);
+    if let Some(w) = &report.wait {
+        t.row_strs(&[
+            "wait p50 / p95",
+            &format!("{} / {}", units::secs(w.p50), units::secs(w.p95)),
+        ]);
+    }
+    t.row_strs(&[
+        "throughput",
+        &format!("{:.1} jobs/h", report.throughput_jobs_per_hour),
+    ]);
+    t.row_strs(&["true energy", &units::joules(report.true_energy_j)]);
+    if sample {
+        t.row_strs(&[
+            "measured energy (§4 probes)",
+            &units::joules(report.measured_energy_j),
+        ]);
+    }
+    t.row_strs(&["mean cluster draw", &units::watts(report.mean_cluster_w)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_payloads(args: &Args) -> anyhow::Result<()> {
+    let rt = PjRtRuntime::load(artifacts_flag(args))?;
+    let mut t = Table::new(&["payload", "inputs", "MFLOP", "description"])
+        .title(format!("AOT payloads (platform = {})", rt.platform()))
+        .left(0)
+        .left(1)
+        .left(3);
+    for p in &rt.manifest.payloads {
+        let inputs = p
+            .inputs
+            .iter()
+            .map(|i| format!("{:?}{:?}", i.dtype, i.shape))
+            .collect::<Vec<_>>()
+            .join(", ");
+        t.row(&[
+            p.name.clone(),
+            inputs,
+            format!("{:.1}", p.flops as f64 / 1e6),
+            p.description.clone(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_exec(args: &Args) -> anyhow::Result<()> {
+    let payload = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: dalek exec <payload>"))?;
+    let iters: u32 = args.get_or("iters", 5)?;
+    let mut rt = PjRtRuntime::load(artifacts_flag(args))?;
+    let r = rt.execute_best_of(payload, 42, iters)?;
+    println!(
+        "{}: best of {iters}: {} ({}), checksum {:.6} over {} elems",
+        r.payload,
+        units::secs(r.wall_s),
+        units::si(r.flops_per_sec, "FLOP/s"),
+        r.output_sum,
+        r.output_elems,
+    );
+    Ok(())
+}

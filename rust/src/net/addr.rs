@@ -1,0 +1,223 @@
+//! IPv4 / MAC primitives and the paper's address plan (Listing 1 +
+//! Table 3): one *virtual* /27 per partition carved out of the flat
+//! 192.168.1.0/24 (the real netmask stays 255.255.255.0 — the subnets
+//! only structure the numbering).
+//!
+//! Known paper inconsistency: Table 3 lists az5-a890m-[0-3] at
+//! .86–.89, but Listing 1 assigns partition 4 the [97;126] block and
+//! the rpi at .126. We follow Listing 1 (.97–.100), which is also what
+//! the "addresses are assigned contiguously, starting from the first
+//! address in the partition's subnet" rule of §2.4 implies.
+
+use std::fmt;
+
+/// An IPv4 address.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Ipv4(pub [u8; 4]);
+
+impl Ipv4 {
+    pub fn new(a: u8, b: u8, c: u8, d: u8) -> Self {
+        Ipv4([a, b, c, d])
+    }
+
+    pub fn octets(self) -> [u8; 4] {
+        self.0
+    }
+
+    pub fn host(self) -> u8 {
+        self.0[3]
+    }
+}
+
+impl fmt::Display for Ipv4 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.{}.{}.{}", self.0[0], self.0[1], self.0[2], self.0[3])
+    }
+}
+
+impl fmt::Debug for Ipv4 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+/// A MAC address. The simulator derives stable MACs from host names so
+/// the DHCP fixed-lease table (§3.2) is reproducible.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Mac(pub [u8; 6]);
+
+impl Mac {
+    /// Deterministic locally-administered MAC from a host name.
+    pub fn from_name(name: &str) -> Self {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        let b = h.to_be_bytes();
+        // 0x02 = locally administered, unicast
+        Mac([0x02, b[1], b[2], b[3], b[4], b[5]])
+    }
+}
+
+impl fmt::Display for Mac {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{:02x}:{:02x}:{:02x}:{:02x}:{:02x}:{:02x}",
+            self.0[0], self.0[1], self.0[2], self.0[3], self.0[4], self.0[5]
+        )
+    }
+}
+
+impl fmt::Debug for Mac {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+/// The Listing-1 numbering plan over a /24 base.
+#[derive(Clone, Debug)]
+pub struct SubnetPlan {
+    pub base: [u8; 3],
+}
+
+impl SubnetPlan {
+    pub fn new(base: [u8; 3]) -> Self {
+        Self { base }
+    }
+
+    fn ip(&self, host: u8) -> Ipv4 {
+        Ipv4([self.base[0], self.base[1], self.base[2], host])
+    }
+
+    /// First host address of partition `idx`'s /27 block ( Listing 1:
+    /// block k covers hosts [32k+1 ; 32k+30] ).
+    pub fn partition_first(&self, idx: u8) -> u8 {
+        32 * idx + 1
+    }
+
+    /// Compute node `n` of partition `idx` (contiguous from the first).
+    pub fn node_ip(&self, idx: u8, n: u8) -> Ipv4 {
+        assert!(n < 30, "node index out of /27 host range");
+        self.ip(self.partition_first(idx) + n)
+    }
+
+    /// The partition's Raspberry Pi: last usable address of the block.
+    pub fn rpi_ip(&self, idx: u8) -> Ipv4 {
+        self.ip(32 * idx + 30)
+    }
+
+    /// Frontend (Table 3: .254 on both aggregated ports).
+    pub fn frontend_ip(&self) -> Ipv4 {
+        self.ip(254)
+    }
+
+    /// Switch management address (Table 3: .253).
+    pub fn switch_ip(&self) -> Ipv4 {
+        self.ip(253)
+    }
+
+    /// DHCP range for unknown interfaces (§3.2: [129; 159]).
+    pub fn unknown_range(&self) -> (Ipv4, Ipv4) {
+        (self.ip(129), self.ip(159))
+    }
+
+    /// Which partition block a host address belongs to, if any.
+    pub fn partition_of(&self, ip: Ipv4) -> Option<u8> {
+        if ip.0[0] != self.base[0] || ip.0[1] != self.base[1] || ip.0[2] != self.base[2] {
+            return None;
+        }
+        let h = ip.host();
+        if (1..=126).contains(&h) {
+            Some((h - 1) / 32)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> SubnetPlan {
+        SubnetPlan::new([192, 168, 1])
+    }
+
+    #[test]
+    fn listing1_blocks() {
+        let p = plan();
+        // partition 1: [01;030]
+        assert_eq!(p.node_ip(0, 0), Ipv4::new(192, 168, 1, 1));
+        assert_eq!(p.node_ip(0, 3), Ipv4::new(192, 168, 1, 4));
+        assert_eq!(p.rpi_ip(0), Ipv4::new(192, 168, 1, 30));
+        // partition 2: [33;062]
+        assert_eq!(p.node_ip(1, 0), Ipv4::new(192, 168, 1, 33));
+        assert_eq!(p.rpi_ip(1), Ipv4::new(192, 168, 1, 62));
+        // partition 3: [65;094]
+        assert_eq!(p.node_ip(2, 0), Ipv4::new(192, 168, 1, 65));
+        assert_eq!(p.rpi_ip(2), Ipv4::new(192, 168, 1, 94));
+        // partition 4: [97;126] (Listing 1; Table 3's .86 is the paper's typo)
+        assert_eq!(p.node_ip(3, 0), Ipv4::new(192, 168, 1, 97));
+        assert_eq!(p.rpi_ip(3), Ipv4::new(192, 168, 1, 126));
+    }
+
+    #[test]
+    fn table3_infrastructure_addresses() {
+        let p = plan();
+        assert_eq!(p.frontend_ip(), Ipv4::new(192, 168, 1, 254));
+        assert_eq!(p.switch_ip(), Ipv4::new(192, 168, 1, 253));
+        assert_eq!(
+            p.unknown_range(),
+            (Ipv4::new(192, 168, 1, 129), Ipv4::new(192, 168, 1, 159))
+        );
+    }
+
+    #[test]
+    fn partitions_never_overlap() {
+        let p = plan();
+        let mut seen = std::collections::HashSet::new();
+        for idx in 0..4u8 {
+            for n in 0..30u8 {
+                assert!(seen.insert(p.node_ip(idx, n)), "overlap at {idx}/{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_of_inverts_node_ip() {
+        let p = plan();
+        for idx in 0..4u8 {
+            for n in 0..4u8 {
+                assert_eq!(p.partition_of(p.node_ip(idx, n)), Some(idx));
+            }
+            assert_eq!(p.partition_of(p.rpi_ip(idx)), Some(idx));
+        }
+        assert_eq!(p.partition_of(p.frontend_ip()), None);
+        assert_eq!(p.partition_of(Ipv4::new(10, 0, 0, 1)), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "host range")]
+    fn node_index_bounded() {
+        plan().node_ip(0, 30);
+    }
+
+    #[test]
+    fn mac_deterministic_and_local() {
+        let a = Mac::from_name("az4-n4090-0");
+        let b = Mac::from_name("az4-n4090-0");
+        let c = Mac::from_name("az4-n4090-1");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.0[0], 0x02); // locally administered
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(Ipv4::new(192, 168, 1, 254).to_string(), "192.168.1.254");
+        let m = Mac([0x02, 0xab, 0x00, 0x01, 0x02, 0x03]).to_string();
+        assert_eq!(m, "02:ab:00:01:02:03");
+    }
+}

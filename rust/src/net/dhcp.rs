@@ -1,0 +1,173 @@
+//! dnsmasq-equivalent: combined DHCP + DNS (paper §3.2).
+//!
+//! Fixed leases keyed by MAC reproduce the paper's per-MAC IP
+//! attribution; unknown interfaces draw from the [129;159] pool; the
+//! DNS side resolves `<host>.dalek` names, with `dalek` as both domain
+//! and search domain.
+
+use std::collections::BTreeMap;
+
+use super::addr::{Ipv4, Mac};
+use super::topology::Topology;
+
+/// Combined DHCP/DNS state, normally hosted on the frontend.
+pub struct DhcpDns {
+    domain: String,
+    fixed: BTreeMap<Mac, (Ipv4, String)>,
+    dns: BTreeMap<String, Ipv4>,
+    pool: Vec<Ipv4>,
+    pool_leases: BTreeMap<Mac, Ipv4>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DhcpError {
+    #[error("address pool exhausted")]
+    PoolExhausted,
+}
+
+impl DhcpDns {
+    /// Build the lease and name tables from the topology (plus the
+    /// frontend's own records and the switch).
+    pub fn from_topology(topo: &Topology) -> Self {
+        let mut fixed = BTreeMap::new();
+        let mut dns = BTreeMap::new();
+        for h in topo.hosts() {
+            fixed.insert(h.mac, (h.ip, h.name.clone()));
+            dns.insert(h.name.clone(), h.ip);
+        }
+        dns.insert("switch.dalek".into(), topo.plan.switch_ip());
+        let (lo, hi) = topo.plan.unknown_range();
+        let pool = (lo.host()..=hi.host())
+            .map(|d| Ipv4([lo.0[0], lo.0[1], lo.0[2], d]))
+            .collect();
+        Self {
+            domain: "dalek".into(),
+            fixed,
+            dns,
+            pool,
+            pool_leases: BTreeMap::new(),
+        }
+    }
+
+    pub fn domain(&self) -> &str {
+        &self.domain
+    }
+
+    /// DHCPDISCOVER: fixed lease if the MAC is known, else pool lease
+    /// (stable per MAC, reclaimed with [`release`]).
+    pub fn offer(&mut self, mac: Mac) -> Result<Ipv4, DhcpError> {
+        if let Some((ip, _)) = self.fixed.get(&mac) {
+            return Ok(*ip);
+        }
+        if let Some(ip) = self.pool_leases.get(&mac) {
+            return Ok(*ip);
+        }
+        let used: std::collections::HashSet<Ipv4> =
+            self.pool_leases.values().copied().collect();
+        let ip = self
+            .pool
+            .iter()
+            .find(|ip| !used.contains(ip))
+            .copied()
+            .ok_or(DhcpError::PoolExhausted)?;
+        self.pool_leases.insert(mac, ip);
+        Ok(ip)
+    }
+
+    /// Release a pool lease (fixed leases are permanent).
+    pub fn release(&mut self, mac: Mac) {
+        self.pool_leases.remove(&mac);
+    }
+
+    /// DNS A-record lookup. Accepts both FQDN (`x.dalek`) and the bare
+    /// host name (search-domain behaviour).
+    pub fn resolve(&self, name: &str) -> Option<Ipv4> {
+        if let Some(ip) = self.dns.get(name) {
+            return Some(*ip);
+        }
+        self.dns.get(&format!("{name}.{}", self.domain)).copied()
+    }
+
+    /// Reverse lookup.
+    pub fn reverse(&self, ip: Ipv4) -> Option<&str> {
+        self.dns
+            .iter()
+            .find(|(_, v)| **v == ip)
+            .map(|(k, _)| k.as_str())
+    }
+
+    pub fn fixed_lease_count(&self) -> usize {
+        self.fixed.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn service() -> (Topology, DhcpDns) {
+        let t = Topology::build(&ClusterConfig::dalek_default());
+        let d = DhcpDns::from_topology(&t);
+        (t, d)
+    }
+
+    #[test]
+    fn fixed_leases_for_all_hosts() {
+        let (t, mut d) = service();
+        assert_eq!(d.fixed_lease_count(), 21);
+        for h in t.hosts() {
+            assert_eq!(d.offer(h.mac).unwrap(), h.ip);
+        }
+    }
+
+    #[test]
+    fn unknown_macs_get_pool_addresses() {
+        let (_, mut d) = service();
+        let mac = Mac::from_name("visitor-laptop");
+        let ip = d.offer(mac).unwrap();
+        assert!((129..=159).contains(&ip.host()), "{ip}");
+        // stable across repeat discovers
+        assert_eq!(d.offer(mac).unwrap(), ip);
+    }
+
+    #[test]
+    fn pool_exhaustion_and_release() {
+        let (_, mut d) = service();
+        let mut macs = Vec::new();
+        for i in 0..31 {
+            let mac = Mac::from_name(&format!("guest-{i}"));
+            macs.push(mac);
+            d.offer(mac).unwrap();
+        }
+        let overflow = Mac::from_name("guest-31");
+        assert_eq!(d.offer(overflow), Err(DhcpError::PoolExhausted));
+        d.release(macs[0]);
+        assert!(d.offer(overflow).is_ok());
+    }
+
+    #[test]
+    fn dns_fqdn_and_search_domain() {
+        let (t, d) = service();
+        let ip = t.host(t.by_name("az4-n4090-0.dalek").unwrap()).ip;
+        assert_eq!(d.resolve("az4-n4090-0.dalek"), Some(ip));
+        assert_eq!(d.resolve("az4-n4090-0"), Some(ip)); // search domain
+        assert_eq!(d.resolve("nonexistent"), None);
+    }
+
+    #[test]
+    fn switch_record_present() {
+        let (_, d) = service();
+        assert_eq!(
+            d.resolve("switch.dalek"),
+            Some(Ipv4::new(192, 168, 1, 253))
+        );
+    }
+
+    #[test]
+    fn reverse_lookup() {
+        let (_, d) = service();
+        assert_eq!(d.reverse(Ipv4::new(192, 168, 1, 254)), Some("front.dalek"));
+        assert_eq!(d.reverse(Ipv4::new(192, 168, 1, 200)), None);
+    }
+}

@@ -1,0 +1,363 @@
+//! Flow-level network simulation with max-min fair bandwidth sharing.
+//!
+//! Transfers (NFS traffic, PXE images, MPI exchanges) are modeled as
+//! fluid flows. Each flow crosses its source NIC uplink and its
+//! destination NIC downlink through a non-blocking switch fabric; link
+//! capacity is shared max-min fairly between concurrent flows — the
+//! standard abstraction for TCP-fair sharing at this timescale, and
+//! enough to reproduce the paper's observation that the 2.5 GbE fabric
+//! "saturates very quickly" (§6.2).
+//!
+//! The simulation is event-driven: rates are recomputed on every flow
+//! arrival/departure (progressive filling), and the earliest completion
+//! under the current allocation is exact because rates are piecewise
+//! constant between events.
+
+use std::collections::BTreeMap;
+
+use super::topology::{HostId, Topology};
+use crate::sim::SimTime;
+
+/// Opaque flow handle.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct FlowId(pub u64);
+
+/// Directional link identifier: a host's uplink (tx) or downlink (rx).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+enum LinkId {
+    Up(HostId),
+    Down(HostId),
+    Fabric,
+}
+
+#[derive(Clone, Debug)]
+struct Flow {
+    src: HostId,
+    dst: HostId,
+    remaining_bits: f64,
+    rate_bps: f64,
+    started: SimTime,
+}
+
+/// The fluid-flow network state.
+pub struct FlowNet {
+    capacity: BTreeMap<LinkId, f64>,
+    flows: BTreeMap<FlowId, Flow>,
+    next_id: u64,
+    now: SimTime,
+    /// total bytes delivered (for utilization accounting)
+    pub delivered_bytes: f64,
+}
+
+impl FlowNet {
+    pub fn new(topo: &Topology) -> Self {
+        let mut capacity = BTreeMap::new();
+        for (i, h) in topo.hosts().iter().enumerate() {
+            capacity.insert(LinkId::Up(HostId(i)), h.nic_bps);
+            capacity.insert(LinkId::Down(HostId(i)), h.nic_bps);
+        }
+        capacity.insert(LinkId::Fabric, topo.fabric_bps);
+        Self {
+            capacity,
+            flows: BTreeMap::new(),
+            next_id: 0,
+            now: SimTime::ZERO,
+            delivered_bytes: 0.0,
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Start a transfer of `bytes` from `src` to `dst` at current time.
+    pub fn start_flow(&mut self, src: HostId, dst: HostId, bytes: u64) -> FlowId {
+        assert_ne!(src, dst, "flow to self");
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        self.flows.insert(
+            id,
+            Flow {
+                src,
+                dst,
+                remaining_bits: bytes as f64 * 8.0,
+                rate_bps: 0.0,
+                started: self.now,
+            },
+        );
+        self.recompute_rates();
+        id
+    }
+
+    /// Current max-min fair rate of a flow, bits/s.
+    pub fn rate(&self, id: FlowId) -> Option<f64> {
+        self.flows.get(&id).map(|f| f.rate_bps)
+    }
+
+    /// Advance time to `t`, draining all flows at their current rates
+    /// (panics if a flow would complete strictly before `t` — use
+    /// [`next_completion`] to find the safe horizon).
+    pub fn advance_to(&mut self, t: SimTime) {
+        assert!(t >= self.now);
+        let dt = (t - self.now).as_secs_f64();
+        if dt > 0.0 {
+            for f in self.flows.values_mut() {
+                let drained = (f.rate_bps * dt).min(f.remaining_bits);
+                f.remaining_bits -= f.rate_bps * dt;
+                // completion times are rounded to the ns grid, so a flow
+                // can overshoot by up to rate x 1 ns (plus fp slack)
+                let tol = f.rate_bps * 2e-9 + 8.0;
+                assert!(
+                    f.remaining_bits > -tol,
+                    "flow overdrained; advance past completion"
+                );
+                f.remaining_bits = f.remaining_bits.max(0.0);
+                self.delivered_bytes += drained / 8.0;
+            }
+        }
+        self.now = t;
+    }
+
+    /// (time, flow) of the earliest completion under current rates.
+    pub fn next_completion(&self) -> Option<(SimTime, FlowId)> {
+        self.flows
+            .iter()
+            .filter(|(_, f)| f.rate_bps > 0.0)
+            .map(|(id, f)| {
+                // remaining can dip epsilon-negative after advance_to
+                let secs = (f.remaining_bits / f.rate_bps).max(0.0);
+                (self.now + SimTime::from_secs_f64(secs), *id)
+            })
+            .min_by_key(|(t, id)| (*t, *id))
+    }
+
+    /// Remove a completed flow, returning its (bytes, duration).
+    pub fn finish_flow(&mut self, id: FlowId) -> Option<(f64, SimTime)> {
+        let f = self.flows.remove(&id)?;
+        let dur = self.now.since(f.started);
+        self.recompute_rates();
+        Some((f.remaining_bits.max(0.0) / 8.0, dur))
+    }
+
+    /// Run until `id` completes; returns the completion time. All other
+    /// flows progress concurrently; flows completing earlier are dropped.
+    pub fn run_until_complete(&mut self, id: FlowId) -> SimTime {
+        loop {
+            let (t, done) = self
+                .next_completion()
+                .expect("target flow still active implies a completion exists");
+            self.advance_to(t);
+            self.finish_flow(done);
+            if done == id {
+                return t;
+            }
+        }
+    }
+
+    /// Drain every active flow; returns the time the last one finished.
+    pub fn run_to_idle(&mut self) -> SimTime {
+        while let Some((t, id)) = self.next_completion() {
+            self.advance_to(t);
+            self.finish_flow(id);
+        }
+        self.now
+    }
+
+    /// Max-min fair allocation via progressive filling.
+    fn recompute_rates(&mut self) {
+        // flows per link
+        let mut link_flows: BTreeMap<LinkId, Vec<FlowId>> = BTreeMap::new();
+        for (id, f) in &self.flows {
+            for l in [LinkId::Up(f.src), LinkId::Down(f.dst), LinkId::Fabric] {
+                link_flows.entry(l).or_default().push(*id);
+            }
+        }
+        let mut residual: BTreeMap<LinkId, f64> = self
+            .capacity
+            .iter()
+            .filter(|(l, _)| link_flows.contains_key(l))
+            .map(|(l, c)| (*l, *c))
+            .collect();
+        let mut unfixed: BTreeMap<FlowId, [LinkId; 3]> = self
+            .flows
+            .iter()
+            .map(|(id, f)| (*id, [LinkId::Up(f.src), LinkId::Down(f.dst), LinkId::Fabric]))
+            .collect();
+        let mut unfixed_per_link: BTreeMap<LinkId, usize> = link_flows
+            .iter()
+            .map(|(l, fs)| (*l, fs.len()))
+            .collect();
+
+        for f in self.flows.values_mut() {
+            f.rate_bps = 0.0;
+        }
+
+        while !unfixed.is_empty() {
+            // bottleneck link: minimal fair share among its unfixed flows
+            let (bl, share) = residual
+                .iter()
+                .filter(|(l, _)| unfixed_per_link.get(l).copied().unwrap_or(0) > 0)
+                .map(|(l, c)| (*l, c / unfixed_per_link[l] as f64))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite"))
+                .expect("some link carries unfixed flows");
+            // fix every unfixed flow crossing the bottleneck at `share`
+            let to_fix: Vec<FlowId> = unfixed
+                .iter()
+                .filter(|(_, links)| links.contains(&bl))
+                .map(|(id, _)| *id)
+                .collect();
+            for id in to_fix {
+                let links = unfixed.remove(&id).expect("present");
+                self.flows.get_mut(&id).expect("present").rate_bps = share;
+                for l in links {
+                    *residual.get_mut(&l).expect("present") -= share;
+                    *unfixed_per_link.get_mut(&l).expect("present") -= 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::net::topology::Topology;
+
+    fn net() -> (Topology, FlowNet) {
+        let t = Topology::build(&ClusterConfig::dalek_default());
+        let n = FlowNet::new(&t);
+        (t, n)
+    }
+
+    fn gb(n: u64) -> u64 {
+        n * 1_000_000_000
+    }
+
+    #[test]
+    fn single_flow_gets_nic_rate() {
+        let (t, mut n) = net();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        let f = n.start_flow(a, b, gb(1));
+        assert!((n.rate(f).unwrap() - 2.5e9).abs() < 1.0);
+        let done = n.run_until_complete(f);
+        // 8 Gbit / 2.5 Gbps = 3.2 s
+        assert!((done.as_secs_f64() - 3.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_flows_share_common_downlink() {
+        let (t, mut n) = net();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        let c = t.by_name("az4-n4090-2.dalek").unwrap();
+        let f1 = n.start_flow(a, c, gb(1));
+        let f2 = n.start_flow(b, c, gb(1));
+        // both bottlenecked on c's 2.5 G downlink -> 1.25 G each
+        assert!((n.rate(f1).unwrap() - 1.25e9).abs() < 1.0);
+        assert!((n.rate(f2).unwrap() - 1.25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn departure_releases_bandwidth() {
+        let (t, mut n) = net();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        let c = t.by_name("az4-n4090-2.dalek").unwrap();
+        let f1 = n.start_flow(a, c, gb(1));
+        let _f2 = n.start_flow(b, c, gb(2));
+        n.run_until_complete(f1);
+        // after f1 leaves, f2 should hold the whole downlink
+        let remaining: Vec<f64> = n.flows.values().map(|f| f.rate_bps).collect();
+        assert_eq!(remaining.len(), 1);
+        assert!((remaining[0] - 2.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn frontend_fanout_saturates_node_downlinks_not_uplink() {
+        // PXE-style: frontend (20 G) -> 4 nodes (2.5 G each): each flow
+        // pinned at 2.5 G, total 10 G < 20 G uplink.
+        let (t, mut n) = net();
+        let fe = t.frontend();
+        let ids: Vec<FlowId> = (0..4)
+            .map(|i| {
+                let dst = t.by_name(&format!("az4-n4090-{i}.dalek")).unwrap();
+                n.start_flow(fe, dst, gb(1))
+            })
+            .collect();
+        for id in &ids {
+            assert!((n.rate(*id).unwrap() - 2.5e9).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn frontend_uplink_is_bottleneck_for_many_nodes() {
+        // 16 nodes pulling from the frontend: 16 x 2.5 = 40 G demand
+        // > 20 G uplink -> each gets 1.25 G (the §6.2 saturation).
+        let (t, mut n) = net();
+        let fe = t.frontend();
+        let ids: Vec<FlowId> = t
+            .compute_hosts()
+            .into_iter()
+            .map(|h| n.start_flow(fe, h, gb(1)))
+            .collect();
+        for id in &ids {
+            assert!((n.rate(*id).unwrap() - 1.25e9).abs() < 1.0, "{:?}", n.rate(*id));
+        }
+    }
+
+    #[test]
+    fn max_min_not_starved_heterogeneous() {
+        // rpi (1 G) and a node (2.5 G) both pull from the frontend:
+        // rpi pinned at 1 G, node keeps 2.5 G (max-min fairness).
+        let (t, mut n) = net();
+        let fe = t.frontend();
+        let rpi = t.by_name("az4-n4090-rpi.dalek").unwrap();
+        let node = t.by_name("az4-n4090-0.dalek").unwrap();
+        let f_rpi = n.start_flow(fe, rpi, gb(1));
+        let f_node = n.start_flow(fe, node, gb(1));
+        assert!((n.rate(f_rpi).unwrap() - 1e9).abs() < 1.0);
+        assert!((n.rate(f_node).unwrap() - 2.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn run_to_idle_drains_everything() {
+        let (t, mut n) = net();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("iml-ia770-0.dalek").unwrap();
+        n.start_flow(a, b, gb(1));
+        n.start_flow(b, a, gb(3));
+        let end = n.run_to_idle();
+        assert_eq!(n.active_flows(), 0);
+        assert!(end > SimTime::ZERO);
+        // ~4 GB delivered in total
+        assert!((n.delivered_bytes - 4e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn conservation_no_link_oversubscribed() {
+        // property-style check: after any allocation, per-link sums
+        // must not exceed capacity
+        let (t, mut n) = net();
+        let hosts = t.compute_hosts();
+        for i in 0..hosts.len() {
+            n.start_flow(hosts[i], hosts[(i + 1) % hosts.len()], gb(1));
+            n.start_flow(t.frontend(), hosts[i], gb(1));
+        }
+        let mut per_link: BTreeMap<LinkId, f64> = BTreeMap::new();
+        for f in n.flows.values() {
+            *per_link.entry(LinkId::Up(f.src)).or_default() += f.rate_bps;
+            *per_link.entry(LinkId::Down(f.dst)).or_default() += f.rate_bps;
+            *per_link.entry(LinkId::Fabric).or_default() += f.rate_bps;
+        }
+        for (l, used) in per_link {
+            let cap = n.capacity[&l];
+            assert!(used <= cap * (1.0 + 1e-9), "{l:?}: {used} > {cap}");
+        }
+    }
+}

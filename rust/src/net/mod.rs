@@ -1,0 +1,21 @@
+//! Network substrate: the 2.5 GbE cluster fabric of paper §2.4.
+//!
+//! * [`addr`] — IPv4/MAC types and the Listing-1 subnet plan
+//! * [`topology`] — hosts, switch ports and links built from the config
+//!   (reproduces Table 3)
+//! * [`flow`] — flow-level max-min-fair bandwidth sharing simulation
+//!   (the "slow network saturates quickly" behaviour of §6.2)
+//! * [`dhcp`] — dnsmasq-like combined DHCP + DNS service (§3.2)
+//! * [`nat`] — the UFW NAT of §3.2 (source address/port translation)
+
+pub mod addr;
+pub mod dhcp;
+pub mod flow;
+pub mod nat;
+pub mod topology;
+
+pub use addr::{Ipv4, Mac, SubnetPlan};
+pub use dhcp::DhcpDns;
+pub use flow::{FlowId, FlowNet};
+pub use nat::NatTable;
+pub use topology::{HostId, HostRole, Topology};

@@ -1,0 +1,173 @@
+//! UFW-style source NAT (paper §3.2): outbound traffic from compute
+//! nodes to the Internet is rewritten to the frontend's address, with
+//! the source port remapped so the reply can be routed back — "the
+//! source port is modified to encode the original source address".
+
+use std::collections::BTreeMap;
+
+use super::addr::Ipv4;
+
+/// A NAT binding key: original (source ip, source port, dest ip, dest port).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct FlowKey {
+    pub src: Ipv4,
+    pub src_port: u16,
+    pub dst: Ipv4,
+    pub dst_port: u16,
+}
+
+/// The translation table.
+pub struct NatTable {
+    public_ip: Ipv4,
+    /// ephemeral range used for translated source ports
+    next_port: u16,
+    by_key: BTreeMap<FlowKey, u16>,
+    by_port: BTreeMap<u16, FlowKey>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum NatError {
+    #[error("ephemeral port range exhausted")]
+    PortsExhausted,
+    #[error("no binding for port {0}")]
+    NoBinding(u16),
+}
+
+const PORT_LO: u16 = 32768;
+const PORT_HI: u16 = 60999; // Linux default ip_local_port_range
+
+impl NatTable {
+    pub fn new(public_ip: Ipv4) -> Self {
+        Self {
+            public_ip,
+            next_port: PORT_LO,
+            by_key: BTreeMap::new(),
+            by_port: BTreeMap::new(),
+        }
+    }
+
+    pub fn bindings(&self) -> usize {
+        self.by_key.len()
+    }
+
+    /// Translate an outbound packet: returns (public ip, public port).
+    /// Idempotent per flow: the same 4-tuple keeps its binding.
+    pub fn outbound(&mut self, key: FlowKey) -> Result<(Ipv4, u16), NatError> {
+        if let Some(p) = self.by_key.get(&key) {
+            return Ok((self.public_ip, *p));
+        }
+        let start = self.next_port;
+        loop {
+            let p = self.next_port;
+            self.next_port = if self.next_port >= PORT_HI {
+                PORT_LO
+            } else {
+                self.next_port + 1
+            };
+            if !self.by_port.contains_key(&p) {
+                self.by_key.insert(key, p);
+                self.by_port.insert(p, key);
+                return Ok((self.public_ip, p));
+            }
+            if self.next_port == start {
+                return Err(NatError::PortsExhausted);
+            }
+        }
+    }
+
+    /// Translate an inbound reply (to `public_port`) back to the
+    /// original internal endpoint.
+    pub fn inbound(&self, public_port: u16) -> Result<FlowKey, NatError> {
+        self.by_port
+            .get(&public_port)
+            .copied()
+            .ok_or(NatError::NoBinding(public_port))
+    }
+
+    /// Drop a flow binding (connection close / timeout).
+    pub fn expire(&mut self, key: FlowKey) -> bool {
+        if let Some(p) = self.by_key.remove(&key) {
+            self.by_port.remove(&p);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(last: u8, port: u16) -> FlowKey {
+        FlowKey {
+            src: Ipv4::new(192, 168, 1, last),
+            src_port: port,
+            dst: Ipv4::new(93, 184, 216, 34),
+            dst_port: 443,
+        }
+    }
+
+    fn nat() -> NatTable {
+        NatTable::new(Ipv4::new(132, 227, 77, 1)) // the frontend's WAN side
+    }
+
+    #[test]
+    fn outbound_rewrites_to_public_ip() {
+        let mut n = nat();
+        let (ip, port) = n.outbound(key(1, 5555)).unwrap();
+        assert_eq!(ip, Ipv4::new(132, 227, 77, 1));
+        assert!((PORT_LO..=PORT_HI).contains(&port));
+    }
+
+    #[test]
+    fn binding_is_stable_per_flow() {
+        let mut n = nat();
+        let a = n.outbound(key(1, 5555)).unwrap();
+        let b = n.outbound(key(1, 5555)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(n.bindings(), 1);
+    }
+
+    #[test]
+    fn distinct_flows_distinct_ports() {
+        let mut n = nat();
+        let (_, p1) = n.outbound(key(1, 5555)).unwrap();
+        let (_, p2) = n.outbound(key(2, 5555)).unwrap();
+        let (_, p3) = n.outbound(key(1, 5556)).unwrap();
+        assert_ne!(p1, p2);
+        assert_ne!(p1, p3);
+    }
+
+    #[test]
+    fn inbound_reverses_outbound() {
+        let mut n = nat();
+        let k = key(7, 40000);
+        let (_, p) = n.outbound(k).unwrap();
+        assert_eq!(n.inbound(p).unwrap(), k);
+        assert_eq!(n.inbound(1234), Err(NatError::NoBinding(1234)));
+    }
+
+    #[test]
+    fn expire_frees_port() {
+        let mut n = nat();
+        let k = key(9, 1000);
+        let (_, p) = n.outbound(k).unwrap();
+        assert!(n.expire(k));
+        assert!(!n.expire(k));
+        assert_eq!(n.inbound(p), Err(NatError::NoBinding(p)));
+        assert_eq!(n.bindings(), 0);
+    }
+
+    #[test]
+    fn port_reuse_after_wraparound() {
+        let mut n = nat();
+        // exhaust a slice of the range then expire one and re-bind
+        for i in 0..100u16 {
+            n.outbound(key((i % 200) as u8, 10_000 + i)).unwrap();
+        }
+        let k = key(1, 10_000);
+        n.expire(k);
+        assert!(n.outbound(key(250, 65_000)).is_ok());
+    }
+}

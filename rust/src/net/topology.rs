@@ -1,0 +1,247 @@
+//! The cluster's physical network topology (paper Fig. 2 + Table 3):
+//! hosts with NICs, the 48-port switch, and per-port link rates.
+//!
+//! Built from a [`ClusterConfig`]; the default build reproduces Table 3
+//! row-for-row (host names, interfaces, rates, IPs, switch ports).
+
+use std::collections::BTreeMap;
+
+use super::addr::{Ipv4, Mac, SubnetPlan};
+use crate::config::cluster::{resolve_partition, ClusterConfig};
+
+/// Opaque host handle (index into the topology's host list).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct HostId(pub usize);
+
+/// What a host is, for routing/service decisions.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum HostRole {
+    Frontend,
+    Compute { partition: u8, node: u8 },
+    Rpi { partition: u8 },
+    Switch,
+}
+
+/// A network endpoint.
+#[derive(Clone, Debug)]
+pub struct Host {
+    pub name: String,
+    pub role: HostRole,
+    pub iface: String,
+    pub nic_hw: &'static str,
+    pub ip: Ipv4,
+    pub mac: Mac,
+    /// NIC rate, bits/s (both directions, full duplex)
+    pub nic_bps: f64,
+    /// switch port(s) — the frontend aggregates two (LACP, §2.1)
+    pub switch_ports: Vec<u32>,
+}
+
+/// The whole fabric.
+pub struct Topology {
+    pub plan: SubnetPlan,
+    hosts: Vec<Host>,
+    by_name: BTreeMap<String, HostId>,
+    by_ip: BTreeMap<Ipv4, HostId>,
+    /// switch store-and-forward fabric capacity, bits/s (non-blocking
+    /// for this port count — effectively never the bottleneck)
+    pub fabric_bps: f64,
+}
+
+impl Topology {
+    /// Build from a cluster config (Table 3 reproduction for the default).
+    pub fn build(cfg: &ClusterConfig) -> Self {
+        let plan = SubnetPlan::new(cfg.network_base);
+        let mut t = Self {
+            plan: plan.clone(),
+            hosts: Vec::new(),
+            by_name: BTreeMap::new(),
+            by_ip: BTreeMap::new(),
+            fabric_bps: 224e9, // USW Pro Max 48 switching capacity
+        };
+        // frontend: two SFP+ ports aggregated (Table 3: ports 49/50)
+        t.add(Host {
+            name: "front.dalek".into(),
+            role: HostRole::Frontend,
+            iface: "enp2s0f0np0+enp2s0f1np1".into(),
+            nic_hw: "Intel X710",
+            ip: plan.frontend_ip(),
+            mac: Mac::from_name("front.dalek"),
+            nic_bps: 20e9,
+            switch_ports: vec![49, 50],
+        });
+        // compute nodes + rpis, per partition
+        for (pi, pc) in cfg.partitions.iter().enumerate() {
+            let spec = resolve_partition(&pc.name).expect("validated by config");
+            let (iface, hw): (&str, &str) = match pc.name.as_str() {
+                "iml-ia770" => ("enp90s0", "Realtek RTL8157"),
+                "az4-a7900" => ("enp7s0", "Realtek RTL8125"),
+                "az5-a890m" => ("enp99s0", "Realtek RTL8125"),
+                _ => ("enp5s0", "Realtek RTL8125"),
+            };
+            for n in 0..pc.nodes {
+                // Table 3: az4-n4090 on ports 33–36, az4-a7900 37–40, …
+                let port = 33 + (pi as u32) * 4 + n;
+                t.add(Host {
+                    name: format!("{}-{}.dalek", pc.name, n),
+                    role: HostRole::Compute {
+                        partition: pc.subnet_index,
+                        node: n as u8,
+                    },
+                    iface: iface.to_string(),
+                    nic_hw: Box::leak(hw.to_string().into_boxed_str()),
+                    ip: plan.node_ip(pc.subnet_index, n as u8),
+                    mac: Mac::from_name(&format!("{}-{}", pc.name, n)),
+                    nic_bps: spec.node.nic_bps,
+                    switch_ports: vec![port],
+                });
+            }
+            t.add(Host {
+                name: format!("{}-rpi.dalek", pc.name),
+                role: HostRole::Rpi {
+                    partition: pc.subnet_index,
+                },
+                iface: "eth0".into(),
+                nic_hw: "BCM54213PE",
+                ip: plan.rpi_ip(pc.subnet_index),
+                mac: Mac::from_name(&format!("{}-rpi", pc.name)),
+                nic_bps: 1e9,
+                switch_ports: vec![1 + pi as u32], // Table 3: rpis on ports 1–4
+            });
+        }
+        t
+    }
+
+    fn add(&mut self, host: Host) {
+        let id = HostId(self.hosts.len());
+        assert!(
+            self.by_name.insert(host.name.clone(), id).is_none(),
+            "duplicate host name {}",
+            host.name
+        );
+        assert!(
+            self.by_ip.insert(host.ip, id).is_none(),
+            "duplicate IP {}",
+            host.ip
+        );
+        self.hosts.push(host);
+    }
+
+    pub fn hosts(&self) -> &[Host] {
+        &self.hosts
+    }
+
+    pub fn host(&self, id: HostId) -> &Host {
+        &self.hosts[id.0]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<HostId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn by_ip(&self, ip: Ipv4) -> Option<HostId> {
+        self.by_ip.get(&ip).copied()
+    }
+
+    pub fn frontend(&self) -> HostId {
+        HostId(0)
+    }
+
+    /// All compute hosts of one partition subnet index, in node order.
+    pub fn partition_nodes(&self, partition: u8) -> Vec<HostId> {
+        self.hosts
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| {
+                matches!(h.role, HostRole::Compute { partition: p, .. } if p == partition)
+            })
+            .map(|(i, _)| HostId(i))
+            .collect()
+    }
+
+    pub fn compute_hosts(&self) -> Vec<HostId> {
+        self.hosts
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| matches!(h.role, HostRole::Compute { .. }))
+            .map(|(i, _)| HostId(i))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn topo() -> Topology {
+        Topology::build(&ClusterConfig::dalek_default())
+    }
+
+    #[test]
+    fn host_count_matches_fig2() {
+        // 1 frontend + 16 compute + 4 rpi = 21 endpoints
+        assert_eq!(topo().hosts().len(), 21);
+    }
+
+    #[test]
+    fn table3_sample_rows() {
+        let t = topo();
+        let h = t.host(t.by_name("az4-n4090-0.dalek").unwrap());
+        assert_eq!(h.ip, Ipv4::new(192, 168, 1, 1));
+        assert_eq!(h.switch_ports, vec![33]);
+        assert_eq!(h.nic_bps, 2.5e9);
+        assert_eq!(h.iface, "enp5s0");
+
+        let h = t.host(t.by_name("iml-ia770-2.dalek").unwrap());
+        assert_eq!(h.ip, Ipv4::new(192, 168, 1, 67));
+        assert_eq!(h.switch_ports, vec![43]);
+        assert_eq!(h.nic_bps, 5.0e9); // RTL8157 5 GbE
+        assert_eq!(h.iface, "enp90s0");
+
+        let h = t.host(t.by_name("az4-a7900-rpi.dalek").unwrap());
+        assert_eq!(h.ip, Ipv4::new(192, 168, 1, 62));
+        assert_eq!(h.switch_ports, vec![2]);
+        assert_eq!(h.nic_bps, 1e9);
+    }
+
+    #[test]
+    fn frontend_aggregated() {
+        let t = topo();
+        let f = t.host(t.frontend());
+        assert_eq!(f.switch_ports, vec![49, 50]);
+        assert_eq!(f.nic_bps, 20e9);
+        assert_eq!(f.ip, Ipv4::new(192, 168, 1, 254));
+    }
+
+    #[test]
+    fn lookups_consistent() {
+        let t = topo();
+        for (i, h) in t.hosts().iter().enumerate() {
+            assert_eq!(t.by_name(&h.name), Some(HostId(i)));
+            assert_eq!(t.by_ip(h.ip), Some(HostId(i)));
+        }
+    }
+
+    #[test]
+    fn unique_switch_ports() {
+        let t = topo();
+        let mut used = std::collections::HashSet::new();
+        for h in t.hosts() {
+            for p in &h.switch_ports {
+                assert!(used.insert(*p), "port {p} double-used");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_nodes_in_order() {
+        let t = topo();
+        let nodes = t.partition_nodes(2); // iml-ia770
+        assert_eq!(nodes.len(), 4);
+        for (i, id) in nodes.iter().enumerate() {
+            assert_eq!(t.host(*id).name, format!("iml-ia770-{i}.dalek"));
+        }
+        assert_eq!(t.compute_hosts().len(), 16);
+    }
+}

@@ -1,0 +1,131 @@
+//! DVFS (cpufrequtils, paper §3.6): per-node CPU frequency control.
+//!
+//! Governors mirror the Linux cpufreq ones the paper exposes. Dynamic
+//! power follows the classic `P ∝ f·V²` with voltage roughly linear in
+//! frequency over the DVFS range, i.e. `P_dyn ∝ f³`; performance scales
+//! ~linearly in f for compute-bound work. This is the substrate for the
+//! §6.1 side-channel / scheduling experiments that trade frequency
+//! against energy.
+
+/// Linux cpufreq governor.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DvfsGovernor {
+    Performance,
+    Powersave,
+    Ondemand,
+    /// fixed user-chosen frequency (GHz)
+    Userspace(u32), // stored in MHz to stay Eq/Hash-able
+}
+
+/// Per-node DVFS state.
+#[derive(Clone, Debug)]
+pub struct DvfsState {
+    pub min_ghz: f64,
+    pub max_ghz: f64,
+    pub governor: DvfsGovernor,
+}
+
+impl DvfsState {
+    pub fn new(min_ghz: f64, max_ghz: f64) -> Self {
+        assert!(min_ghz > 0.0 && max_ghz >= min_ghz);
+        Self {
+            min_ghz,
+            max_ghz,
+            governor: DvfsGovernor::Ondemand,
+        }
+    }
+
+    /// Effective clock for a given utilization (ondemand ramps with load).
+    pub fn effective_ghz(&self, cpu_util: f64) -> f64 {
+        let u = cpu_util.clamp(0.0, 1.0);
+        match self.governor {
+            DvfsGovernor::Performance => self.max_ghz,
+            DvfsGovernor::Powersave => self.min_ghz,
+            DvfsGovernor::Ondemand => {
+                // ondemand jumps to max above ~80% load, scales below
+                if u >= 0.8 {
+                    self.max_ghz
+                } else {
+                    self.min_ghz + (self.max_ghz - self.min_ghz) * (u / 0.8)
+                }
+            }
+            DvfsGovernor::Userspace(mhz) => {
+                (mhz as f64 / 1000.0).clamp(self.min_ghz, self.max_ghz)
+            }
+        }
+    }
+
+    /// Dynamic-power multiplier vs running at max clock (f³ law).
+    pub fn power_factor(&self, cpu_util: f64) -> f64 {
+        let f = self.effective_ghz(cpu_util) / self.max_ghz;
+        f * f * f
+    }
+
+    /// Throughput multiplier vs max clock (linear for compute-bound).
+    pub fn perf_factor(&self, cpu_util: f64) -> f64 {
+        self.effective_ghz(cpu_util) / self.max_ghz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dv() -> DvfsState {
+        DvfsState::new(1.0, 5.0)
+    }
+
+    #[test]
+    fn governors_pick_expected_clocks() {
+        let mut d = dv();
+        d.governor = DvfsGovernor::Performance;
+        assert_eq!(d.effective_ghz(0.0), 5.0);
+        d.governor = DvfsGovernor::Powersave;
+        assert_eq!(d.effective_ghz(1.0), 1.0);
+        d.governor = DvfsGovernor::Userspace(2500);
+        assert_eq!(d.effective_ghz(0.5), 2.5);
+    }
+
+    #[test]
+    fn userspace_clamped_to_range() {
+        let mut d = dv();
+        d.governor = DvfsGovernor::Userspace(9000);
+        assert_eq!(d.effective_ghz(0.0), 5.0);
+        d.governor = DvfsGovernor::Userspace(100);
+        assert_eq!(d.effective_ghz(0.0), 1.0);
+    }
+
+    #[test]
+    fn ondemand_ramps_then_saturates() {
+        let mut d = dv();
+        d.governor = DvfsGovernor::Ondemand;
+        assert!(d.effective_ghz(0.2) < d.effective_ghz(0.6));
+        assert_eq!(d.effective_ghz(0.8), 5.0);
+        assert_eq!(d.effective_ghz(1.0), 5.0);
+    }
+
+    #[test]
+    fn cubic_power_linear_perf() {
+        let mut d = dv();
+        d.governor = DvfsGovernor::Userspace(2500); // half of max
+        assert!((d.perf_factor(1.0) - 0.5).abs() < 1e-12);
+        assert!((d.power_factor(1.0) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_efficiency_improves_at_lower_clock() {
+        // energy per op ∝ power/perf = f² — halving f quarters it
+        let mut d = dv();
+        d.governor = DvfsGovernor::Userspace(2500);
+        let e_half = d.power_factor(1.0) / d.perf_factor(1.0);
+        d.governor = DvfsGovernor::Performance;
+        let e_full = d.power_factor(1.0) / d.perf_factor(1.0);
+        assert!((e_half - 0.25 * e_full).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_range_panics() {
+        DvfsState::new(3.0, 2.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! Node power state machine (paper §3.4).
+//!
+//! States and the SLURM hooks that drive them:
+//!
+//! ```text
+//!          WoL magic packet (noderesume)
+//!   Off/Suspended ─────────────────────────▶ Booting ──(boot_time)──▶ Idle
+//!        ▲                                                             │
+//!        │  powerstate ssh shutdown (nodesuspend)                      │ allocate
+//!   Suspending ◀──(10 min idle timer)── Idle                          ▼
+//!        │                                ▲────────(release)──── Allocated
+//!        └──(shutdown_time)──▶ Suspended
+//! ```
+//!
+//! The FSM is pure (no clock of its own): the coordinator feeds it
+//! events and timestamps, and reads back transitions to schedule
+//! boot-complete / shutdown-complete events and to integrate energy.
+
+use crate::sim::SimTime;
+
+/// Node power states.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PowerState {
+    /// soft-off, WoL listener active (the paper's powered-off idle state)
+    Suspended,
+    /// WoL received, OS booting; payload = boot completion time
+    Booting { until: SimTime },
+    /// powered on, no job
+    Idle { since: SimTime },
+    /// powered on, job running
+    Allocated,
+    /// clean shutdown in progress; payload = completion time
+    Suspending { until: SimTime },
+}
+
+/// What the FSM asks the coordinator to do after a transition.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Transition {
+    None,
+    /// schedule a BootComplete event at the given time
+    ScheduleBootComplete(SimTime),
+    /// schedule a ShutdownComplete event at the given time
+    ScheduleShutdownComplete(SimTime),
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum FsmError {
+    #[error("invalid transition: {0} while {1}")]
+    Invalid(&'static str, &'static str),
+}
+
+/// The per-node FSM.
+#[derive(Clone, Debug)]
+pub struct NodePowerFsm {
+    state: PowerState,
+    boot_time: SimTime,
+    shutdown_time: SimTime,
+    /// lifetime counters for the †3.4 accounting
+    pub boots: u32,
+    pub suspends: u32,
+}
+
+impl NodePowerFsm {
+    /// Nodes start suspended (the cluster's idle state, §3.4).
+    pub fn new(boot_time: SimTime, shutdown_time: SimTime) -> Self {
+        Self {
+            state: PowerState::Suspended,
+            boot_time,
+            shutdown_time,
+            boots: 0,
+            suspends: 0,
+        }
+    }
+
+    pub fn state(&self) -> PowerState {
+        self.state
+    }
+
+    fn state_name(&self) -> &'static str {
+        match self.state {
+            PowerState::Suspended => "Suspended",
+            PowerState::Booting { .. } => "Booting",
+            PowerState::Idle { .. } => "Idle",
+            PowerState::Allocated => "Allocated",
+            PowerState::Suspending { .. } => "Suspending",
+        }
+    }
+
+    /// noderesume: send the WoL magic packet.
+    pub fn wake(&mut self, now: SimTime) -> Result<Transition, FsmError> {
+        match self.state {
+            PowerState::Suspended => {
+                let until = now + self.boot_time;
+                self.state = PowerState::Booting { until };
+                self.boots += 1;
+                Ok(Transition::ScheduleBootComplete(until))
+            }
+            // waking a waking/awake node is a no-op (WoL is idempotent)
+            PowerState::Booting { .. } | PowerState::Idle { .. } | PowerState::Allocated => {
+                Ok(Transition::None)
+            }
+            PowerState::Suspending { .. } => {
+                Err(FsmError::Invalid("wake", self.state_name()))
+            }
+        }
+    }
+
+    /// Boot finished (scheduled by a prior `wake`).
+    pub fn boot_complete(&mut self, now: SimTime) -> Result<Transition, FsmError> {
+        match self.state {
+            PowerState::Booting { until } if now >= until => {
+                self.state = PowerState::Idle { since: now };
+                Ok(Transition::None)
+            }
+            _ => Err(FsmError::Invalid("boot_complete", self.state_name())),
+        }
+    }
+
+    /// SLURM allocated a job to this node.
+    pub fn allocate(&mut self) -> Result<Transition, FsmError> {
+        match self.state {
+            PowerState::Idle { .. } => {
+                self.state = PowerState::Allocated;
+                Ok(Transition::None)
+            }
+            _ => Err(FsmError::Invalid("allocate", self.state_name())),
+        }
+    }
+
+    /// Job finished; node returns to idle (starting the suspend timer).
+    pub fn release(&mut self, now: SimTime) -> Result<Transition, FsmError> {
+        match self.state {
+            PowerState::Allocated => {
+                self.state = PowerState::Idle { since: now };
+                Ok(Transition::None)
+            }
+            _ => Err(FsmError::Invalid("release", self.state_name())),
+        }
+    }
+
+    /// nodesuspend: powerstate-ssh shutdown (the 10-min idle policy).
+    pub fn suspend(&mut self, now: SimTime) -> Result<Transition, FsmError> {
+        match self.state {
+            PowerState::Idle { .. } => {
+                let until = now + self.shutdown_time;
+                self.state = PowerState::Suspending { until };
+                self.suspends += 1;
+                Ok(Transition::ScheduleShutdownComplete(until))
+            }
+            _ => Err(FsmError::Invalid("suspend", self.state_name())),
+        }
+    }
+
+    /// Shutdown finished.
+    pub fn shutdown_complete(&mut self, now: SimTime) -> Result<Transition, FsmError> {
+        match self.state {
+            PowerState::Suspending { until } if now >= until => {
+                self.state = PowerState::Suspended;
+                Ok(Transition::None)
+            }
+            _ => Err(FsmError::Invalid("shutdown_complete", self.state_name())),
+        }
+    }
+
+    /// Idle duration as of `now` (None unless idle) — the §3.4 policy input.
+    pub fn idle_for(&self, now: SimTime) -> Option<SimTime> {
+        match self.state {
+            PowerState::Idle { since } => Some(now.since(since)),
+            _ => None,
+        }
+    }
+
+    /// Is the node usable for scheduling right now?
+    pub fn is_available(&self) -> bool {
+        matches!(self.state, PowerState::Idle { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fsm() -> NodePowerFsm {
+        NodePowerFsm::new(SimTime::from_secs(95), SimTime::from_secs(20))
+    }
+
+    #[test]
+    fn full_lifecycle() {
+        let mut f = fsm();
+        assert_eq!(f.state(), PowerState::Suspended);
+        let t0 = SimTime::from_secs(100);
+        let tr = f.wake(t0).unwrap();
+        assert_eq!(
+            tr,
+            Transition::ScheduleBootComplete(SimTime::from_secs(195))
+        );
+        f.boot_complete(SimTime::from_secs(195)).unwrap();
+        assert!(f.is_available());
+        f.allocate().unwrap();
+        assert_eq!(f.state(), PowerState::Allocated);
+        f.release(SimTime::from_secs(400)).unwrap();
+        assert_eq!(
+            f.idle_for(SimTime::from_secs(1000)),
+            Some(SimTime::from_secs(600))
+        );
+        let tr = f.suspend(SimTime::from_secs(1000)).unwrap();
+        assert_eq!(
+            tr,
+            Transition::ScheduleShutdownComplete(SimTime::from_secs(1020))
+        );
+        f.shutdown_complete(SimTime::from_secs(1020)).unwrap();
+        assert_eq!(f.state(), PowerState::Suspended);
+        assert_eq!((f.boots, f.suspends), (1, 1));
+    }
+
+    #[test]
+    fn wake_is_idempotent_when_awake() {
+        let mut f = fsm();
+        f.wake(SimTime::ZERO).unwrap();
+        assert_eq!(f.wake(SimTime::from_secs(1)).unwrap(), Transition::None);
+        f.boot_complete(SimTime::from_secs(95)).unwrap();
+        assert_eq!(f.wake(SimTime::from_secs(96)).unwrap(), Transition::None);
+        assert_eq!(f.boots, 1); // only the first wake boots
+    }
+
+    #[test]
+    fn cannot_allocate_suspended_or_booting() {
+        let mut f = fsm();
+        assert!(f.allocate().is_err());
+        f.wake(SimTime::ZERO).unwrap();
+        assert!(f.allocate().is_err());
+    }
+
+    #[test]
+    fn cannot_suspend_allocated() {
+        let mut f = fsm();
+        f.wake(SimTime::ZERO).unwrap();
+        f.boot_complete(SimTime::from_secs(95)).unwrap();
+        f.allocate().unwrap();
+        assert!(f.suspend(SimTime::from_secs(100)).is_err());
+    }
+
+    #[test]
+    fn boot_complete_before_deadline_rejected() {
+        let mut f = fsm();
+        f.wake(SimTime::from_secs(0)).unwrap();
+        assert!(f.boot_complete(SimTime::from_secs(10)).is_err());
+    }
+
+    #[test]
+    fn wake_during_suspending_rejected() {
+        // the paper's race: a job arrives while the node is shutting
+        // down — the coordinator must wait for ShutdownComplete
+        let mut f = fsm();
+        f.wake(SimTime::ZERO).unwrap();
+        f.boot_complete(SimTime::from_secs(95)).unwrap();
+        f.suspend(SimTime::from_secs(700)).unwrap();
+        assert!(f.wake(SimTime::from_secs(705)).is_err());
+        f.shutdown_complete(SimTime::from_secs(720)).unwrap();
+        assert!(f.wake(SimTime::from_secs(721)).is_ok());
+    }
+
+    #[test]
+    fn idle_for_only_when_idle() {
+        let mut f = fsm();
+        assert_eq!(f.idle_for(SimTime::from_secs(5)), None);
+        f.wake(SimTime::ZERO).unwrap();
+        f.boot_complete(SimTime::from_secs(95)).unwrap();
+        assert!(f.idle_for(SimTime::from_secs(100)).is_some());
+        f.allocate().unwrap();
+        assert_eq!(f.idle_for(SimTime::from_secs(200)), None);
+    }
+}

@@ -1,0 +1,19 @@
+//! Power modeling and control (paper §3.4 node powering, §3.6
+//! unconventional knobs, Table 2 power columns).
+//!
+//! * [`model`] — activity → watts for a node (idle/suspend/TDP envelope
+//!   with CPU/GPU utilization, DVFS and RAPL effects)
+//! * [`fsm`] — the node power state machine driving WoL resume and the
+//!   suspend-after-idle policy
+//! * [`dvfs`] — cpufreq-style frequency scaling (§3.6)
+//! * [`rapl`] — Intel RAPL / nvidia-smi power capping (§3.6)
+
+pub mod dvfs;
+pub mod fsm;
+pub mod model;
+pub mod rapl;
+
+pub use dvfs::{DvfsGovernor, DvfsState};
+pub use fsm::{NodePowerFsm, PowerState, Transition};
+pub use model::{Activity, PowerModel};
+pub use rapl::RaplDomain;

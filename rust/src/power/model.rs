@@ -1,0 +1,226 @@
+//! Node activity → watts (the calibration behind Table 2's power
+//! columns and every energy experiment).
+//!
+//! The model decomposes a node's draw into platform idle + CPU dynamic
+//! + GPU dynamic, with DVFS and RAPL modulating the CPU part and a
+//! GPU cap modulating the GPU part. It is deliberately first-order —
+//! utilization-proportional dynamic power — which is what socket-level
+//! measurement (the §4 platform) actually observes at 1 ms resolution.
+
+use super::dvfs::DvfsState;
+use super::rapl::RaplDomain;
+use crate::hw::NodeModel;
+
+/// Instantaneous activity on a node.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Activity {
+    /// CPU utilization, 0..1 (fraction of all-core capacity)
+    pub cpu: f64,
+    /// discrete-GPU utilization, 0..1
+    pub dgpu: f64,
+    /// integrated-GPU utilization, 0..1
+    pub igpu: f64,
+}
+
+impl Activity {
+    pub fn idle() -> Self {
+        Self::default()
+    }
+
+    pub fn cpu_only(u: f64) -> Self {
+        Self {
+            cpu: u,
+            ..Self::default()
+        }
+    }
+
+    pub fn clamped(self) -> Self {
+        Self {
+            cpu: self.cpu.clamp(0.0, 1.0),
+            dgpu: self.dgpu.clamp(0.0, 1.0),
+            igpu: self.igpu.clamp(0.0, 1.0),
+        }
+    }
+}
+
+/// Power model bound to a node's hardware.
+#[derive(Clone, Debug)]
+pub struct PowerModel {
+    idle_w: f64,
+    suspend_w: f64,
+    boot_w: f64,
+    cpu_dyn_w: f64,
+    dgpu_dyn_w: f64,
+    igpu_dyn_w: f64,
+    pub dvfs: DvfsState,
+    pub cpu_rapl: RaplDomain,
+    pub gpu_cap: Option<RaplDomain>,
+}
+
+impl PowerModel {
+    /// Build from a node's catalog entry. Dynamic budgets split the
+    /// (TDP − idle) headroom between CPU and GPUs proportionally to
+    /// their component TDPs.
+    pub fn for_node(node: &NodeModel) -> Self {
+        let idle = node.power.idle_w;
+        let headroom = (node.power.tdp_w - idle).max(0.0);
+        let cpu_tdp = node.cpu.tdp_w;
+        let dgpu_tdp = node.dgpu.as_ref().map(|g| g.tdp_w).unwrap_or(0.0);
+        let igpu_tdp = node.igpu.as_ref().map(|g| g.tdp_w).unwrap_or(0.0);
+        let total = (cpu_tdp + dgpu_tdp + igpu_tdp).max(1.0);
+        let boost = node
+            .cpu
+            .clusters
+            .iter()
+            .map(|c| c.boost_ghz)
+            .fold(0.0, f64::max);
+        let min_ghz = (boost * 0.25).max(0.4);
+        Self {
+            idle_w: idle,
+            suspend_w: node.power.suspend_w,
+            boot_w: idle + 0.5 * headroom * cpu_tdp / total,
+            cpu_dyn_w: headroom * cpu_tdp / total,
+            dgpu_dyn_w: headroom * dgpu_tdp / total,
+            igpu_dyn_w: headroom * igpu_tdp / total,
+            dvfs: DvfsState::new(min_ghz, boost),
+            cpu_rapl: RaplDomain::new("package-0", (cpu_tdp * 0.1).max(1.0), cpu_tdp),
+            gpu_cap: node
+                .dgpu
+                .as_ref()
+                .map(|g| RaplDomain::new(g.product, g.tdp_w * 0.3, g.tdp_w)),
+        }
+    }
+
+    pub fn idle_w(&self) -> f64 {
+        self.idle_w
+    }
+    pub fn suspend_w(&self) -> f64 {
+        self.suspend_w
+    }
+    pub fn boot_w(&self) -> f64 {
+        self.boot_w
+    }
+
+    /// Watts drawn for a given activity on a powered-on node.
+    pub fn watts(&self, act: Activity) -> f64 {
+        let act = act.clamped();
+        // CPU: DVFS scales the dynamic part cubically; RAPL then clips.
+        let cpu_demand = self.cpu_dyn_w * act.cpu * self.dvfs.power_factor(act.cpu);
+        let cpu = self.cpu_rapl.effective_power(cpu_demand);
+        // dGPU: utilization-proportional with an optional nvidia-smi cap
+        let dgpu_demand = self.dgpu_dyn_w * act.dgpu;
+        let dgpu = match &self.gpu_cap {
+            Some(c) => c.effective_power(dgpu_demand),
+            None => dgpu_demand,
+        };
+        let igpu = self.igpu_dyn_w * act.igpu;
+        self.idle_w + cpu + dgpu + igpu
+    }
+
+    /// Throughput multiplier for CPU-bound work under current DVFS+RAPL.
+    pub fn cpu_perf_factor(&self, act: Activity) -> f64 {
+        let demand = self.cpu_dyn_w * act.cpu * self.dvfs.power_factor(act.cpu);
+        self.dvfs.perf_factor(act.cpu) * self.cpu_rapl.perf_factor(demand)
+    }
+
+    /// Throughput multiplier for dGPU-bound work under the GPU cap.
+    pub fn gpu_perf_factor(&self, act: Activity) -> f64 {
+        match &self.gpu_cap {
+            Some(c) => c.perf_factor(self.dgpu_dyn_w * act.dgpu),
+            None => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::cluster::resolve_partition;
+
+    fn model(p: &str) -> PowerModel {
+        PowerModel::for_node(&resolve_partition(p).unwrap().node)
+    }
+
+    #[test]
+    fn idle_matches_table2() {
+        let m = model("az4-n4090");
+        assert!((m.watts(Activity::idle()) - 53.0).abs() < 1e-9);
+        assert!((m.suspend_w() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_load_approaches_node_tdp() {
+        let m = model("az4-n4090");
+        let full = m.watts(Activity {
+            cpu: 1.0,
+            dgpu: 1.0,
+            igpu: 1.0,
+        });
+        // Table 2: 2100/4 = 525 W per node
+        assert!((full - 525.0).abs() < 1.0, "full={full}");
+    }
+
+    #[test]
+    fn power_monotone_in_utilization() {
+        let m = model("iml-ia770");
+        let mut last = 0.0;
+        for i in 0..=10 {
+            let u = i as f64 / 10.0;
+            let w = m.watts(Activity::cpu_only(u));
+            assert!(w >= last);
+            last = w;
+        }
+    }
+
+    #[test]
+    fn gpu_dominates_az4_budget() {
+        let m = model("az4-n4090");
+        let cpu_only = m.watts(Activity::cpu_only(1.0)) - m.idle_w();
+        let gpu_only = m.watts(Activity {
+            dgpu: 1.0,
+            ..Default::default()
+        }) - m.idle_w();
+        // RTX 4090 (450 W) >> Ryzen (75 W)
+        assert!(gpu_only > 4.0 * cpu_only);
+    }
+
+    #[test]
+    fn rapl_cap_reduces_power_and_perf() {
+        let mut m = model("az4-a7900");
+        let before = m.watts(Activity::cpu_only(1.0));
+        let pf_before = m.cpu_perf_factor(Activity::cpu_only(1.0));
+        m.cpu_rapl.set_cap(Some(20.0)).unwrap();
+        let after = m.watts(Activity::cpu_only(1.0));
+        let pf_after = m.cpu_perf_factor(Activity::cpu_only(1.0));
+        assert!(after < before);
+        assert!(pf_after < pf_before && pf_after > 0.4);
+    }
+
+    #[test]
+    fn gpu_cap_only_on_dgpu_nodes() {
+        assert!(model("az4-n4090").gpu_cap.is_some());
+        assert!(model("az5-a890m").gpu_cap.is_none());
+    }
+
+    #[test]
+    fn powersave_governor_cuts_load_power() {
+        let mut m = model("az5-a890m");
+        let busy = Activity::cpu_only(1.0);
+        let perf_w = m.watts(busy);
+        m.dvfs.governor = crate::power::dvfs::DvfsGovernor::Powersave;
+        let save_w = m.watts(busy);
+        assert!(save_w < perf_w * 0.5, "{save_w} vs {perf_w}");
+    }
+
+    #[test]
+    fn activity_clamped() {
+        let m = model("az5-a890m");
+        let w1 = m.watts(Activity {
+            cpu: 5.0,
+            dgpu: -3.0,
+            igpu: 0.0,
+        });
+        let w2 = m.watts(Activity::cpu_only(1.0));
+        assert_eq!(w1, w2);
+    }
+}

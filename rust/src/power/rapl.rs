@@ -1,0 +1,132 @@
+//! Power capping (paper §3.6): Intel RAPL for CPUs, `nvidia-smi -pl`
+//! for Nvidia GPUs.
+//!
+//! A capped domain clips its power draw at the limit; when the
+//! uncapped demand exceeds the cap, throughput degrades. Near the cap
+//! the frequency/voltage reduction needed to hit it costs less
+//! performance than power (the f³ vs f relation), so perf scales as
+//! (cap/demand)^(1/3) — matching the empirical sub-linear slowdown of
+//! RAPL-capped CPU workloads the §6 energy studies rely on.
+
+/// One cappable power domain (CPU package or GPU board).
+#[derive(Clone, Debug)]
+pub struct RaplDomain {
+    pub name: String,
+    /// hardware maximum, watts
+    pub max_w: f64,
+    /// hardware floor — caps below this are clamped up, watts
+    pub min_w: f64,
+    cap_w: Option<f64>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum RaplError {
+    #[error("cap {0} W above domain max {1} W")]
+    AboveMax(f64, f64),
+}
+
+impl RaplDomain {
+    pub fn new(name: impl Into<String>, min_w: f64, max_w: f64) -> Self {
+        assert!(0.0 < min_w && min_w <= max_w);
+        Self {
+            name: name.into(),
+            max_w,
+            min_w,
+            cap_w: None,
+        }
+    }
+
+    /// Set (or clear with None) the power limit.
+    pub fn set_cap(&mut self, cap_w: Option<f64>) -> Result<(), RaplError> {
+        if let Some(c) = cap_w {
+            if c > self.max_w {
+                return Err(RaplError::AboveMax(c, self.max_w));
+            }
+            self.cap_w = Some(c.max(self.min_w));
+        } else {
+            self.cap_w = None;
+        }
+        Ok(())
+    }
+
+    pub fn cap(&self) -> Option<f64> {
+        self.cap_w
+    }
+
+    /// Actual power drawn when the workload demands `demand_w`.
+    pub fn effective_power(&self, demand_w: f64) -> f64 {
+        let d = demand_w.min(self.max_w);
+        match self.cap_w {
+            Some(cap) => d.min(cap),
+            None => d,
+        }
+    }
+
+    /// Throughput multiplier under the cap: 1.0 when demand fits,
+    /// (cap/demand)^(1/3) when clipped (DVFS f³ power vs f perf).
+    pub fn perf_factor(&self, demand_w: f64) -> f64 {
+        match self.cap_w {
+            Some(cap) if demand_w > cap => (cap / demand_w).cbrt(),
+            _ => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dom() -> RaplDomain {
+        RaplDomain::new("package-0", 10.0, 115.0)
+    }
+
+    #[test]
+    fn uncapped_passthrough() {
+        let d = dom();
+        assert_eq!(d.effective_power(80.0), 80.0);
+        assert_eq!(d.perf_factor(80.0), 1.0);
+        // demand beyond hardware max clips regardless
+        assert_eq!(d.effective_power(200.0), 115.0);
+    }
+
+    #[test]
+    fn cap_clips_power() {
+        let mut d = dom();
+        d.set_cap(Some(60.0)).unwrap();
+        assert_eq!(d.effective_power(80.0), 60.0);
+        assert_eq!(d.effective_power(40.0), 40.0);
+    }
+
+    #[test]
+    fn perf_degrades_sublinearly() {
+        let mut d = dom();
+        d.set_cap(Some(57.5)).unwrap(); // half the demand below
+        let pf = d.perf_factor(115.0);
+        // (1/2)^(1/3) ≈ 0.794 — much better than halving performance
+        assert!((pf - 0.7937).abs() < 1e-3, "pf={pf}");
+    }
+
+    #[test]
+    fn cap_clamped_to_floor_and_rejected_above_max() {
+        let mut d = dom();
+        d.set_cap(Some(1.0)).unwrap();
+        assert_eq!(d.cap(), Some(10.0)); // clamped to min
+        assert_eq!(
+            d.set_cap(Some(200.0)),
+            Err(RaplError::AboveMax(200.0, 115.0))
+        );
+        d.set_cap(None).unwrap();
+        assert_eq!(d.cap(), None);
+    }
+
+    #[test]
+    fn capped_energy_per_op_can_win() {
+        // energy/op under cap = (cap) / (perf) vs max: cap c, perf c^(1/3)
+        // => e ∝ c^(2/3): lowering the cap lowers energy per op
+        let mut d = dom();
+        d.set_cap(Some(57.5)).unwrap();
+        let e_capped = d.effective_power(115.0) / d.perf_factor(115.0);
+        let e_free = 115.0 / 1.0;
+        assert!(e_capped < e_free);
+    }
+}

@@ -1,0 +1,225 @@
+//! Typed view of `artifacts/manifest.json` (schema `hlo-text-v1`,
+//! written by `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{Json, JsonError};
+
+/// Input element type of a payload argument.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Dtype {
+    F32,
+    Bf16,
+    I8,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "bf16" => Some(Dtype::Bf16),
+            "i8" => Some(Dtype::I8),
+            "i32" => Some(Dtype::I32),
+            _ => None,
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::Bf16 => 2,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+/// One runtime input argument.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl InputSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled payload.
+#[derive(Clone, Debug)]
+pub struct PayloadMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<InputSpec>,
+    pub flops: u64,
+    pub description: String,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub payloads: Vec<PayloadMeta>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error(transparent)]
+    Json(#[from] JsonError),
+    #[error("manifest schema: {0}")]
+    Schema(String),
+}
+
+impl Manifest {
+    /// Load from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let src = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&src, dir)
+    }
+
+    /// Parse manifest text (dir recorded for resolving payload files).
+    pub fn parse(src: &str, dir: PathBuf) -> Result<Self, ManifestError> {
+        let j = Json::parse(src)?;
+        let schema = |m: &str| ManifestError::Schema(m.to_string());
+        if j.get("format").and_then(Json::as_str) != Some("hlo-text-v1") {
+            return Err(schema("format must be hlo-text-v1"));
+        }
+        let mut payloads = Vec::new();
+        for p in j
+            .get("payloads")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| schema("missing payloads[]"))?
+        {
+            let name = p
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| schema("payload.name"))?
+                .to_string();
+            let file = dir.join(
+                p.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| schema("payload.file"))?,
+            );
+            let mut inputs = Vec::new();
+            for i in p
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| schema("payload.inputs"))?
+            {
+                let shape = i
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| schema("input.shape"))?
+                    .iter()
+                    .map(|d| d.as_u64().map(|v| v as usize))
+                    .collect::<Option<Vec<usize>>>()
+                    .ok_or_else(|| schema("input.shape dims"))?;
+                let dtype = i
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .and_then(Dtype::parse)
+                    .ok_or_else(|| schema("input.dtype"))?;
+                inputs.push(InputSpec { shape, dtype });
+            }
+            payloads.push(PayloadMeta {
+                name,
+                file,
+                inputs,
+                flops: p
+                    .get("flops")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| schema("payload.flops"))?,
+                description: p
+                    .get("description")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+            });
+        }
+        Ok(Self { dir, payloads })
+    }
+
+    pub fn payload(&self, name: &str) -> Option<&PayloadMeta> {
+        self.payloads.iter().find(|p| p.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "format": "hlo-text-v1",
+  "payloads": [
+    {"name": "gemm256", "file": "gemm256.hlo.txt",
+     "inputs": [{"shape": [256, 256], "dtype": "f32"},
+                {"shape": [256, 256], "dtype": "f32"}],
+     "flops": 33554432, "description": "gemm", "sha256_16": "xx"},
+    {"name": "dpa4", "file": "dpa4.hlo.txt",
+     "inputs": [{"shape": [8, 8], "dtype": "i8"}],
+     "flops": 1024, "description": "dpa", "sha256_16": "yy"}
+  ]
+}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.payloads.len(), 2);
+        let g = m.payload("gemm256").unwrap();
+        assert_eq!(g.flops, 33554432);
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].shape, vec![256, 256]);
+        assert_eq!(g.inputs[0].dtype, Dtype::F32);
+        assert_eq!(g.inputs[0].element_count(), 65536);
+        assert_eq!(g.file, PathBuf::from("/tmp/a/gemm256.hlo.txt"));
+        assert_eq!(m.payload("dpa4").unwrap().inputs[0].dtype, Dtype::I8);
+        assert!(m.payload("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let e = Manifest::parse(
+            r#"{"format": "v0", "payloads": []}"#,
+            PathBuf::from("."),
+        );
+        assert!(matches!(e, Err(ManifestError::Schema(_))));
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let e = Manifest::parse(
+            r#"{"format": "hlo-text-v1", "payloads": [{"name": "x"}]}"#,
+            PathBuf::from("."),
+        );
+        assert!(matches!(e, Err(ManifestError::Schema(_))));
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(Dtype::F32.size_bytes(), 4);
+        assert_eq!(Dtype::Bf16.size_bytes(), 2);
+        assert_eq!(Dtype::I8.size_bytes(), 1);
+        assert_eq!(Dtype::parse("f64"), None);
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // integration-ish: when `make artifacts` has run, the real
+        // manifest must parse and reference existing files
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.payloads.len() >= 5);
+        for p in &m.payloads {
+            assert!(p.file.exists(), "{:?}", p.file);
+            assert!(p.flops > 0);
+        }
+    }
+}

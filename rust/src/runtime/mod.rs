@@ -1,0 +1,14 @@
+//! The PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) the python compile path produced once at build time,
+//! compiles them on the PJRT CPU client, and executes them from the rust
+//! request path. Python is never on this path.
+//!
+//! * [`manifest`] — typed view of `manifest.json`
+//! * [`client`] — `PjRtRuntime`: compile-once executable cache + typed
+//!   input synthesis + timed execution
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{ExecReport, PjRtRuntime};
+pub use manifest::{Dtype, InputSpec, Manifest, PayloadMeta};

@@ -1,0 +1,332 @@
+//! Authentication substrates (paper §3.2 slapd/SSSD, §3.4 MUNGE,
+//! §3.5 SPANK/PAM login policy).
+//!
+//! * [`UserDb`] — the LDAP directory: Users and Groups OUs under dc=dalek.
+//! * [`Munge`] — HMAC-SHA256 credentials à la MUNGE: the frontend mints
+//!   a token binding (uid, payload, timestamp); any node holding the
+//!   shared key can validate it, with a TTL window.
+//! * [`LoginGate`] — SPANK+PAM behaviour: SSH to a compute node is only
+//!   accepted while the user holds a reservation on it, and open shells
+//!   are terminated when the reservation expires.
+
+use hmac::{Hmac, Mac as HmacMac};
+use sha2::Sha256;
+
+use crate::sim::SimTime;
+use std::collections::{BTreeMap, BTreeSet};
+
+type HmacSha256 = Hmac<Sha256>;
+
+// ---------------------------------------------------------------------------
+// LDAP-ish directory
+// ---------------------------------------------------------------------------
+
+/// A user entry (ou=Users,dc=dalek).
+#[derive(Clone, Debug, PartialEq)]
+pub struct User {
+    pub uid: u32,
+    pub login: String,
+    pub groups: BTreeSet<String>,
+    pub admin: bool,
+}
+
+/// Centralized account database.
+#[derive(Default)]
+pub struct UserDb {
+    users: BTreeMap<String, User>,
+    next_uid: u32,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AuthError {
+    #[error("unknown user `{0}`")]
+    UnknownUser(String),
+    #[error("duplicate login `{0}`")]
+    Duplicate(String),
+    #[error("bad credential: {0}")]
+    BadCredential(&'static str),
+}
+
+impl UserDb {
+    pub fn new() -> Self {
+        let mut db = Self {
+            users: BTreeMap::new(),
+            next_uid: 10_000,
+        };
+        // the §3.4 power-control system user, created at node install
+        db.add_user("powerstate", true).expect("fresh db");
+        db
+    }
+
+    pub fn add_user(&mut self, login: &str, admin: bool) -> Result<&User, AuthError> {
+        if self.users.contains_key(login) {
+            return Err(AuthError::Duplicate(login.into()));
+        }
+        let uid = self.next_uid;
+        self.next_uid += 1;
+        self.users.insert(
+            login.to_string(),
+            User {
+                uid,
+                login: login.to_string(),
+                groups: BTreeSet::from(["users".to_string()]),
+                admin,
+            },
+        );
+        Ok(&self.users[login])
+    }
+
+    pub fn user(&self, login: &str) -> Result<&User, AuthError> {
+        self.users
+            .get(login)
+            .ok_or_else(|| AuthError::UnknownUser(login.into()))
+    }
+
+    pub fn add_to_group(&mut self, login: &str, group: &str) -> Result<(), AuthError> {
+        let u = self
+            .users
+            .get_mut(login)
+            .ok_or_else(|| AuthError::UnknownUser(login.into()))?;
+        u.groups.insert(group.to_string());
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.users.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.users.is_empty()
+    }
+
+    /// The NFS home path of §3.5.
+    pub fn home_path(&self, login: &str) -> Result<String, AuthError> {
+        self.user(login)?;
+        Ok(format!("/mnt/nfs/users/{login}/"))
+    }
+
+    /// The semi-permanent scratch path of §3.5.
+    pub fn scratch_path(&self, login: &str) -> Result<String, AuthError> {
+        self.user(login)?;
+        Ok(format!("/scratch/{login}/"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MUNGE-like credentials
+// ---------------------------------------------------------------------------
+
+/// A minted credential.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Credential {
+    pub uid: u32,
+    pub payload: Vec<u8>,
+    pub minted_at: SimTime,
+    tag: [u8; 32],
+}
+
+/// Shared-key credential service.
+pub struct Munge {
+    key: Vec<u8>,
+    pub ttl: SimTime,
+}
+
+impl Munge {
+    pub fn new(key: &[u8]) -> Self {
+        Self {
+            key: key.to_vec(),
+            ttl: SimTime::from_mins(5), // MUNGE default TTL
+        }
+    }
+
+    fn tag(&self, uid: u32, payload: &[u8], at: SimTime) -> [u8; 32] {
+        let mut mac = HmacSha256::new_from_slice(&self.key).expect("any key size");
+        mac.update(&uid.to_le_bytes());
+        mac.update(&at.as_ns().to_le_bytes());
+        mac.update(payload);
+        mac.finalize().into_bytes().into()
+    }
+
+    /// Mint a credential for `uid` carrying `payload`.
+    pub fn encode(&self, uid: u32, payload: &[u8], now: SimTime) -> Credential {
+        Credential {
+            uid,
+            payload: payload.to_vec(),
+            minted_at: now,
+            tag: self.tag(uid, payload, now),
+        }
+    }
+
+    /// Validate: correct HMAC under this key, and within TTL.
+    pub fn decode(&self, cred: &Credential, now: SimTime) -> Result<(), AuthError> {
+        let expect = self.tag(cred.uid, &cred.payload, cred.minted_at);
+        // constant-time-ish comparison via fold (sufficient for the sim)
+        if expect
+            .iter()
+            .zip(cred.tag.iter())
+            .fold(0u8, |acc, (a, b)| acc | (a ^ b))
+            != 0
+        {
+            return Err(AuthError::BadCredential("HMAC mismatch"));
+        }
+        if now.since(cred.minted_at) > self.ttl {
+            return Err(AuthError::BadCredential("expired"));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SPANK/PAM login gate
+// ---------------------------------------------------------------------------
+
+/// Tracks which users hold reservations on which nodes, gating SSH.
+#[derive(Default)]
+pub struct LoginGate {
+    /// (node, login) -> reservation expiry
+    grants: BTreeMap<(String, String), SimTime>,
+    /// open shells (node, login)
+    shells: BTreeSet<(String, String)>,
+}
+
+impl LoginGate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// SLURM granted `login` the node until `until`.
+    pub fn grant(&mut self, node: &str, login: &str, until: SimTime) {
+        self.grants
+            .insert((node.to_string(), login.to_string()), until);
+    }
+
+    /// SSH attempt: accepted only with a live reservation (§3.5).
+    pub fn try_ssh(&mut self, node: &str, login: &str, now: SimTime) -> bool {
+        let live = self
+            .grants
+            .get(&(node.to_string(), login.to_string()))
+            .map(|until| *until > now)
+            .unwrap_or(false);
+        if live {
+            self.shells.insert((node.to_string(), login.to_string()));
+        }
+        live
+    }
+
+    /// Reservation expiry sweep: terminates shells of expired users and
+    /// returns the evicted (node, login) pairs.
+    pub fn sweep(&mut self, now: SimTime) -> Vec<(String, String)> {
+        let expired: Vec<(String, String)> = self
+            .grants
+            .iter()
+            .filter(|(_, until)| **until <= now)
+            .map(|(k, _)| k.clone())
+            .collect();
+        let mut evicted = Vec::new();
+        for key in expired {
+            self.grants.remove(&key);
+            if self.shells.remove(&key) {
+                evicted.push(key);
+            }
+        }
+        evicted
+    }
+
+    pub fn has_shell(&self, node: &str, login: &str) -> bool {
+        self.shells
+            .contains(&(node.to_string(), login.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn userdb_creates_powerstate() {
+        let db = UserDb::new();
+        assert!(db.user("powerstate").unwrap().admin);
+        assert_eq!(db.len(), 1);
+    }
+
+    #[test]
+    fn add_and_lookup_users() {
+        let mut db = UserDb::new();
+        db.add_user("alice", false).unwrap();
+        assert_eq!(db.user("alice").unwrap().uid, 10_001);
+        assert!(matches!(
+            db.add_user("alice", false),
+            Err(AuthError::Duplicate(_))
+        ));
+        assert!(matches!(db.user("bob"), Err(AuthError::UnknownUser(_))));
+    }
+
+    #[test]
+    fn groups_and_paths() {
+        let mut db = UserDb::new();
+        db.add_user("alice", false).unwrap();
+        db.add_to_group("alice", "hpc").unwrap();
+        assert!(db.user("alice").unwrap().groups.contains("hpc"));
+        assert_eq!(db.home_path("alice").unwrap(), "/mnt/nfs/users/alice/");
+        assert_eq!(db.scratch_path("alice").unwrap(), "/scratch/alice/");
+        assert!(db.home_path("mallory").is_err());
+    }
+
+    #[test]
+    fn munge_round_trip() {
+        let m = Munge::new(b"cluster-shared-key");
+        let c = m.encode(1000, b"job=42", SimTime::from_secs(10));
+        assert!(m.decode(&c, SimTime::from_secs(11)).is_ok());
+    }
+
+    #[test]
+    fn munge_rejects_tamper() {
+        let m = Munge::new(b"cluster-shared-key");
+        let mut c = m.encode(1000, b"job=42", SimTime::from_secs(10));
+        c.payload = b"job=43".to_vec();
+        assert!(matches!(
+            m.decode(&c, SimTime::from_secs(11)),
+            Err(AuthError::BadCredential("HMAC mismatch"))
+        ));
+        // different uid also fails
+        let mut c2 = m.encode(1000, b"x", SimTime::ZERO);
+        c2.uid = 1001;
+        assert!(m.decode(&c2, SimTime::ZERO).is_err());
+    }
+
+    #[test]
+    fn munge_rejects_wrong_key_and_expiry() {
+        let a = Munge::new(b"key-a");
+        let b = Munge::new(b"key-b");
+        let c = a.encode(7, b"p", SimTime::ZERO);
+        assert!(b.decode(&c, SimTime::ZERO).is_err());
+        assert!(matches!(
+            a.decode(&c, SimTime::from_mins(6)),
+            Err(AuthError::BadCredential("expired"))
+        ));
+    }
+
+    #[test]
+    fn login_gate_requires_reservation() {
+        let mut g = LoginGate::new();
+        let now = SimTime::from_secs(100);
+        assert!(!g.try_ssh("az4-n4090-0", "alice", now));
+        g.grant("az4-n4090-0", "alice", SimTime::from_secs(200));
+        assert!(g.try_ssh("az4-n4090-0", "alice", now));
+        assert!(g.has_shell("az4-n4090-0", "alice"));
+        // other node still rejected
+        assert!(!g.try_ssh("az4-n4090-1", "alice", now));
+    }
+
+    #[test]
+    fn login_gate_sweeps_expired_shells() {
+        let mut g = LoginGate::new();
+        g.grant("n0", "alice", SimTime::from_secs(50));
+        assert!(g.try_ssh("n0", "alice", SimTime::from_secs(10)));
+        let evicted = g.sweep(SimTime::from_secs(60));
+        assert_eq!(evicted, vec![("n0".to_string(), "alice".to_string())]);
+        assert!(!g.has_shell("n0", "alice"));
+        // and the grant is gone
+        assert!(!g.try_ssh("n0", "alice", SimTime::from_secs(61)));
+    }
+}

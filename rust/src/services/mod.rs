@@ -1,0 +1,22 @@
+//! Frontend services (paper §3.2–3.3, §3.5): everything `front.dalek`
+//! runs besides SLURM itself.
+//!
+//! * [`pxe`] — network boot + Ubuntu autoinstall pipeline (§3.3): TFTP
+//!   image serving, per-MAC YAML configs over HTTP, timed installs —
+//!   reproduces the "16 nodes reinstalled in ≈20 minutes" claim.
+//! * [`nfs`] — the frontend-hosted NFS share (§3.2) with traffic
+//!   accounting over the flow network, plus the scratch/home policy of §3.5.
+//! * [`auth`] — MUNGE-like HMAC credentials (§3.4) and the LDAP-ish
+//!   user directory with SPANK/PAM login gating (§3.5).
+//! * [`ntp`] — chrony-like clock-skew model (§3.2).
+
+pub mod auth;
+pub mod nfs;
+pub mod ntp;
+pub mod proberctl;
+pub mod pxe;
+
+pub use auth::{Credential, Munge, UserDb};
+pub use nfs::NfsServer;
+pub use ntp::NtpService;
+pub use pxe::{InstallPhase, PxeInstaller};

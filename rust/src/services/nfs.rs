@@ -1,0 +1,232 @@
+//! NFS model (paper §3.2): a share on the frontend's dedicated 4 TB
+//! SSD, exported to all compute nodes.
+//!
+//! Two costs compose per operation: the frontend SSD (ext4 on a
+//! 990 PRO) and the network path to the client — which is why the paper
+//! steers compilation to local scratch (§3.5): home-directory I/O rides
+//! a 2.5 G NIC while scratch rides the local NVMe.
+
+use std::collections::BTreeMap;
+
+use crate::hw::ssd::{SsdAccess, SsdModel};
+use crate::net::flow::FlowNet;
+use crate::net::topology::{HostId, Topology};
+use crate::sim::SimTime;
+
+/// A file in the exported tree.
+#[derive(Clone, Debug, PartialEq)]
+struct Inode {
+    bytes: u64,
+    owner: String,
+}
+
+/// The frontend NFS server.
+pub struct NfsServer {
+    ssd: SsdModel,
+    files: BTreeMap<String, Inode>,
+    pub used_bytes: u64,
+    pub capacity_bytes: u64,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum NfsError {
+    #[error("no such file `{0}`")]
+    NoSuchFile(String),
+    #[error("share full: {need} B needed, {free} B free")]
+    Full { need: u64, free: u64 },
+    #[error("permission denied for `{0}`")]
+    Permission(String),
+}
+
+impl NfsServer {
+    /// The paper's export: dedicated 4 TB 990 PRO, ext4.
+    pub fn dalek_default() -> Self {
+        Self {
+            ssd: crate::hw::catalog::ssd_990_pro(4.0),
+            files: BTreeMap::new(),
+            used_bytes: 0,
+            capacity_bytes: 4_000_000_000_000,
+        }
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn stat(&self, path: &str) -> Option<u64> {
+        self.files.get(path).map(|i| i.bytes)
+    }
+
+    /// Write a file from `client` over the network; returns the
+    /// end-to-end duration (network transfer + server SSD write; the
+    /// slower of the two pipelines dominates, modeled sequentially
+    /// pessimistically as sum of a pipelined residual).
+    pub fn write(
+        &mut self,
+        topo: &Topology,
+        net: &mut FlowNet,
+        client: HostId,
+        path: &str,
+        bytes: u64,
+        owner: &str,
+    ) -> Result<SimTime, NfsError> {
+        if let Some(existing) = self.files.get(path) {
+            if existing.owner != owner {
+                return Err(NfsError::Permission(path.into()));
+            }
+        }
+        let old = self.files.get(path).map(|i| i.bytes).unwrap_or(0);
+        let free = self.capacity_bytes - self.used_bytes + old;
+        if bytes > free {
+            return Err(NfsError::Full { need: bytes, free });
+        }
+        let start = net.now();
+        let f = net.start_flow(client, topo.frontend(), bytes);
+        net.run_until_complete(f);
+        let net_time = net.now().since(start);
+        // server-side SSD write overlaps the stream; only the residual
+        // (if the SSD is slower than the network) adds latency.
+        let ssd_time = SimTime::from_secs_f64(self.ssd.transfer_secs(bytes, SsdAccess::SeqWrite));
+        let total = net_time.max(ssd_time);
+        self.used_bytes = self.used_bytes - old + bytes;
+        self.files.insert(
+            path.to_string(),
+            Inode {
+                bytes,
+                owner: owner.to_string(),
+            },
+        );
+        Ok(total)
+    }
+
+    /// Read a file to `client`; same pipelining argument as `write`.
+    pub fn read(
+        &self,
+        topo: &Topology,
+        net: &mut FlowNet,
+        client: HostId,
+        path: &str,
+    ) -> Result<SimTime, NfsError> {
+        let inode = self
+            .files
+            .get(path)
+            .ok_or_else(|| NfsError::NoSuchFile(path.into()))?;
+        let start = net.now();
+        let f = net.start_flow(topo.frontend(), client, inode.bytes);
+        net.run_until_complete(f);
+        let net_time = net.now().since(start);
+        let ssd_time =
+            SimTime::from_secs_f64(self.ssd.transfer_secs(inode.bytes, SsdAccess::SeqRead));
+        Ok(net_time.max(ssd_time))
+    }
+
+    pub fn delete(&mut self, path: &str, owner: &str) -> Result<(), NfsError> {
+        let inode = self
+            .files
+            .get(path)
+            .ok_or_else(|| NfsError::NoSuchFile(path.into()))?;
+        if inode.owner != owner {
+            return Err(NfsError::Permission(path.into()));
+        }
+        self.used_bytes -= inode.bytes;
+        self.files.remove(path);
+        Ok(())
+    }
+}
+
+/// §3.5 comparison helper: time to write `bytes` on the *local* scratch
+/// SSD of a node — what the paper recommends for compilation.
+pub fn scratch_write_secs(node: &crate::hw::NodeModel, bytes: u64) -> f64 {
+    node.ssd.transfer_secs(bytes, SsdAccess::SeqWrite)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn setup() -> (Topology, FlowNet, NfsServer) {
+        let t = Topology::build(&ClusterConfig::dalek_default());
+        let n = FlowNet::new(&t);
+        (t, n, NfsServer::dalek_default())
+    }
+
+    #[test]
+    fn write_then_read_round_trip() {
+        let (t, mut net, mut nfs) = setup();
+        let c = t.by_name("az4-n4090-0.dalek").unwrap();
+        let w = nfs
+            .write(&t, &mut net, c, "/users/alice/data.bin", 1_000_000_000, "alice")
+            .unwrap();
+        assert_eq!(nfs.stat("/users/alice/data.bin"), Some(1_000_000_000));
+        let r = nfs.read(&t, &mut net, c, "/users/alice/data.bin").unwrap();
+        // both are network-bound on the 2.5 G NIC: 8 Gbit / 2.5 Gbps = 3.2 s
+        assert!((w.as_secs_f64() - 3.2).abs() < 0.01, "{w}");
+        assert!((r.as_secs_f64() - 3.2).abs() < 0.01, "{r}");
+    }
+
+    #[test]
+    fn network_is_the_bottleneck_vs_scratch() {
+        // §3.5's motivation: local scratch beats NFS for bulk writes
+        let (t, mut net, mut nfs) = setup();
+        let c = t.by_name("az4-n4090-0.dalek").unwrap();
+        let bytes = 10_000_000_000u64;
+        let nfs_time = nfs
+            .write(&t, &mut net, c, "/users/bob/build.tar", bytes, "bob")
+            .unwrap();
+        let node = crate::config::cluster::resolve_partition("az4-n4090")
+            .unwrap()
+            .node;
+        let local = scratch_write_secs(&node, bytes);
+        assert!(
+            nfs_time.as_secs_f64() > 2.0 * local,
+            "nfs={} local={}",
+            nfs_time.as_secs_f64(),
+            local
+        );
+    }
+
+    #[test]
+    fn permission_enforced() {
+        let (t, mut net, mut nfs) = setup();
+        let c = t.by_name("az4-n4090-0.dalek").unwrap();
+        nfs.write(&t, &mut net, c, "/users/alice/x", 100, "alice")
+            .unwrap();
+        assert!(matches!(
+            nfs.write(&t, &mut net, c, "/users/alice/x", 100, "mallory"),
+            Err(NfsError::Permission(_))
+        ));
+        assert!(matches!(
+            nfs.delete("/users/alice/x", "mallory"),
+            Err(NfsError::Permission(_))
+        ));
+        nfs.delete("/users/alice/x", "alice").unwrap();
+        assert_eq!(nfs.file_count(), 0);
+        assert_eq!(nfs.used_bytes, 0);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let (t, mut net, mut nfs) = setup();
+        nfs.capacity_bytes = 1000;
+        let c = t.by_name("az4-n4090-0.dalek").unwrap();
+        assert!(matches!(
+            nfs.write(&t, &mut net, c, "/big", 2000, "alice"),
+            Err(NfsError::Full { .. })
+        ));
+        // overwrite accounting: replacing a file frees its old bytes
+        nfs.write(&t, &mut net, c, "/a", 800, "alice").unwrap();
+        assert!(nfs.write(&t, &mut net, c, "/a", 900, "alice").is_ok());
+        assert_eq!(nfs.used_bytes, 900);
+    }
+
+    #[test]
+    fn missing_file_read_errors() {
+        let (t, mut net, nfs) = setup();
+        let c = t.by_name("az4-n4090-0.dalek").unwrap();
+        assert!(matches!(
+            nfs.read(&t, &mut net, c, "/nope"),
+            Err(NfsError::NoSuchFile(_))
+        ));
+    }
+}

@@ -1,0 +1,145 @@
+//! chrony-equivalent time synchronization model (paper §3.2).
+//!
+//! Each node's clock drifts at a fixed rate (ppm); the NTP service
+//! periodically disciplines it toward the frontend's reference (itself
+//! synced to ntp.lip6.fr). The point of modeling this at all: the paper
+//! notes consistent timestamps matter for logging and NFS transactions,
+//! and the energy platform's 1 ms sample alignment depends on it.
+
+use std::collections::BTreeMap;
+
+use crate::sim::SimTime;
+use crate::util::Xoshiro256;
+
+/// One disciplined clock.
+#[derive(Clone, Debug)]
+struct Clock {
+    /// drift rate in parts-per-million (positive = runs fast)
+    drift_ppm: f64,
+    /// accumulated offset vs reference, seconds
+    offset_s: f64,
+    last_update: SimTime,
+}
+
+/// The cluster's NTP service.
+pub struct NtpService {
+    clocks: BTreeMap<String, Clock>,
+    /// polling/discipline interval
+    pub poll: SimTime,
+    /// residual error after a sync step (LAN chrony: tens of µs)
+    pub sync_residual_s: f64,
+}
+
+impl NtpService {
+    pub fn new(seed: u64) -> Self {
+        let _ = seed;
+        Self {
+            clocks: BTreeMap::new(),
+            poll: SimTime::from_secs(64), // chrony default-ish poll
+            sync_residual_s: 50e-6,
+        }
+    }
+
+    /// Register a node with a drift drawn from ±20 ppm (typical quartz).
+    pub fn register(&mut self, name: &str, rng: &mut Xoshiro256) {
+        let drift = rng.uniform_f64(-20.0, 20.0);
+        self.clocks.insert(
+            name.to_string(),
+            Clock {
+                drift_ppm: drift,
+                offset_s: rng.uniform_f64(-0.5, 0.5), // cold-boot offset
+                last_update: SimTime::ZERO,
+            },
+        );
+    }
+
+    fn drift_to(&mut self, name: &str, now: SimTime) {
+        let c = self.clocks.get_mut(name).expect("registered");
+        let dt = now.since(c.last_update).as_secs_f64();
+        c.offset_s += c.drift_ppm * 1e-6 * dt;
+        c.last_update = now;
+    }
+
+    /// Current offset of a node's clock vs the reference, seconds.
+    pub fn offset(&mut self, name: &str, now: SimTime) -> f64 {
+        self.drift_to(name, now);
+        self.clocks[name].offset_s
+    }
+
+    /// One chrony discipline step: slews the clock to the residual.
+    pub fn sync(&mut self, name: &str, now: SimTime) {
+        self.drift_to(name, now);
+        let c = self.clocks.get_mut(name).expect("registered");
+        c.offset_s = c.offset_s.signum() * self.sync_residual_s;
+    }
+
+    /// Run periodic syncs for all nodes up to `until`; returns the
+    /// worst absolute offset observed right before each sync.
+    pub fn run_until(&mut self, until: SimTime) -> f64 {
+        let names: Vec<String> = self.clocks.keys().cloned().collect();
+        let mut worst: f64 = 0.0;
+        let mut t = self.poll;
+        while t <= until {
+            for n in &names {
+                worst = worst.max(self.offset(n, t).abs());
+                self.sync(n, t);
+            }
+            t += self.poll;
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drift_accumulates_without_sync() {
+        let mut ntp = NtpService::new(1);
+        let mut rng = Xoshiro256::new(1);
+        ntp.register("n0", &mut rng);
+        let o1 = ntp.offset("n0", SimTime::from_hours(1)).abs();
+        let o2 = ntp.offset("n0", SimTime::from_hours(10)).abs();
+        assert!(o2 > o1, "drift must accumulate: {o1} vs {o2}");
+    }
+
+    #[test]
+    fn sync_bounds_offset() {
+        let mut ntp = NtpService::new(2);
+        let mut rng = Xoshiro256::new(2);
+        for i in 0..16 {
+            ntp.register(&format!("n{i}"), &mut rng);
+        }
+        ntp.run_until(SimTime::from_hours(1));
+        // after an hour of 64 s polls, every clock is within
+        // residual + one-poll drift (≈ 50 µs + 20ppm * 64 s ≈ 1.3 ms)
+        for i in 0..16 {
+            let off = ntp.offset(&format!("n{i}"), SimTime::from_hours(1)).abs();
+            assert!(off < 2e-3, "n{i} offset {off}");
+        }
+    }
+
+    #[test]
+    fn synced_clocks_good_enough_for_1ms_sampling() {
+        // the energy platform aligns samples on a 1 ms grid; post-sync
+        // offsets must sit well under that
+        let mut ntp = NtpService::new(3);
+        let mut rng = Xoshiro256::new(3);
+        ntp.register("probe-host", &mut rng);
+        ntp.sync("probe-host", SimTime::from_secs(64));
+        let off = ntp
+            .offset("probe-host", SimTime::from_secs(64))
+            .abs();
+        assert!(off <= 60e-6, "offset {off}");
+    }
+
+    #[test]
+    fn worst_offset_reported() {
+        let mut ntp = NtpService::new(4);
+        let mut rng = Xoshiro256::new(4);
+        ntp.register("n0", &mut rng);
+        let worst = ntp.run_until(SimTime::from_mins(10));
+        assert!(worst > 0.0);
+    }
+}

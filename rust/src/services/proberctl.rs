@@ -1,0 +1,199 @@
+//! `proberctl` — the per-node monitoring service of §3.5, plus the
+//! Raspberry-Pi LED visualization of §2.3.
+//!
+//! "Each compute node runs a specific proberctl service [...] every
+//! second, proberctl sends the CPU occupancy to its corresponding
+//! Raspberry Pi via SSH. This allows the LED strips to be animated."
+//!
+//! One `ProberCtl` per node publishes (cpu occupancy, temperature)
+//! samples at 1 Hz; the partition's `LedStrip` renders the latest
+//! readings as per-node color segments (green→red by load, blinking on
+//! stale data — a node that stopped reporting).
+
+use std::collections::BTreeMap;
+
+use crate::power::Activity;
+use crate::sim::SimTime;
+
+/// One 1 Hz report from a node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeReading {
+    pub at: SimTime,
+    /// CPU occupancy 0..1
+    pub cpu: f64,
+    /// package temperature, °C (coarse thermal model)
+    pub temp_c: f64,
+}
+
+/// The per-node reporting agent.
+pub struct ProberCtl {
+    pub node: String,
+    /// reporting period (paper: every second)
+    pub period: SimTime,
+    last_sent: Option<SimTime>,
+}
+
+impl ProberCtl {
+    pub fn new(node: impl Into<String>) -> Self {
+        Self {
+            node: node.into(),
+            period: SimTime::from_secs(1),
+            last_sent: None,
+        }
+    }
+
+    /// Coarse thermal model: idle 38 °C, full load ~85 °C.
+    fn temp(cpu: f64) -> f64 {
+        38.0 + 47.0 * cpu.clamp(0.0, 1.0)
+    }
+
+    /// Produce the reading due at `now`, if the period elapsed.
+    pub fn tick(&mut self, now: SimTime, act: Activity) -> Option<NodeReading> {
+        let due = match self.last_sent {
+            None => true,
+            Some(last) => now.since(last) >= self.period,
+        };
+        if !due {
+            return None;
+        }
+        self.last_sent = Some(now);
+        Some(NodeReading {
+            at: now,
+            cpu: act.cpu.clamp(0.0, 1.0),
+            temp_c: Self::temp(act.cpu),
+        })
+    }
+}
+
+/// RGB color on the strip.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Rgb(pub u8, pub u8, pub u8);
+
+/// The partition's ARGB LED strip, one segment per node (§2.3).
+pub struct LedStrip {
+    /// newest reading per node
+    readings: BTreeMap<String, NodeReading>,
+    /// data older than this blinks (node stopped reporting)
+    pub stale_after: SimTime,
+}
+
+impl LedStrip {
+    pub fn new() -> Self {
+        Self {
+            readings: BTreeMap::new(),
+            stale_after: SimTime::from_secs(5),
+        }
+    }
+
+    /// The Raspberry Pi receives a reading over SSH.
+    pub fn receive(&mut self, node: &str, reading: NodeReading) {
+        self.readings.insert(node.to_string(), reading);
+    }
+
+    /// Load → color: green (idle) through amber to red (full).
+    pub fn color_for_load(cpu: f64) -> Rgb {
+        let u = cpu.clamp(0.0, 1.0);
+        Rgb((255.0 * u) as u8, (255.0 * (1.0 - u)) as u8, 0)
+    }
+
+    /// Render the segment for one node at time `now`:
+    /// `None` = node unknown; stale data blinks at 1 Hz (off phase).
+    pub fn segment(&self, node: &str, now: SimTime) -> Option<Rgb> {
+        let r = self.readings.get(node)?;
+        if now.since(r.at) > self.stale_after {
+            // blink: 500 ms on (dim red), 500 ms off
+            let phase = (now.as_ms_f64() / 500.0) as u64 % 2;
+            return Some(if phase == 0 { Rgb(128, 0, 0) } else { Rgb(0, 0, 0) });
+        }
+        Some(Self::color_for_load(r.cpu))
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.readings.len()
+    }
+}
+
+impl Default for LedStrip {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_at_1hz_only() {
+        let mut p = ProberCtl::new("az4-n4090-0");
+        let act = Activity::cpu_only(0.5);
+        assert!(p.tick(SimTime::from_ms(0), act).is_some());
+        assert!(p.tick(SimTime::from_ms(400), act).is_none());
+        assert!(p.tick(SimTime::from_ms(999), act).is_none());
+        assert!(p.tick(SimTime::from_ms(1000), act).is_some());
+    }
+
+    #[test]
+    fn temperature_tracks_load() {
+        let mut p = ProberCtl::new("n");
+        let idle = p.tick(SimTime::from_secs(0), Activity::idle()).unwrap();
+        let busy = p.tick(SimTime::from_secs(1), Activity::cpu_only(1.0)).unwrap();
+        assert!((idle.temp_c - 38.0).abs() < 1e-9);
+        assert!((busy.temp_c - 85.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn led_color_gradient() {
+        assert_eq!(LedStrip::color_for_load(0.0), Rgb(0, 255, 0)); // green
+        assert_eq!(LedStrip::color_for_load(1.0), Rgb(255, 0, 0)); // red
+        let mid = LedStrip::color_for_load(0.5);
+        assert!(mid.0 > 100 && mid.1 > 100); // amber-ish
+    }
+
+    #[test]
+    fn strip_renders_fresh_readings() {
+        let mut strip = LedStrip::new();
+        let mut p = ProberCtl::new("az4-n4090-0");
+        let r = p.tick(SimTime::from_secs(10), Activity::cpu_only(1.0)).unwrap();
+        strip.receive(&p.node, r);
+        assert_eq!(
+            strip.segment("az4-n4090-0", SimTime::from_secs(11)),
+            Some(Rgb(255, 0, 0))
+        );
+        assert_eq!(strip.segment("unknown", SimTime::from_secs(11)), None);
+    }
+
+    #[test]
+    fn stale_nodes_blink() {
+        let mut strip = LedStrip::new();
+        strip.receive(
+            "n0",
+            NodeReading {
+                at: SimTime::from_secs(0),
+                cpu: 0.3,
+                temp_c: 50.0,
+            },
+        );
+        // 10 s later: stale — alternate between dim red and off
+        let a = strip.segment("n0", SimTime::from_ms(10_000)).unwrap();
+        let b = strip.segment("n0", SimTime::from_ms(10_500)).unwrap();
+        assert_ne!(a, b);
+        assert!(a == Rgb(128, 0, 0) || a == Rgb(0, 0, 0));
+    }
+
+    #[test]
+    fn one_segment_per_partition_node() {
+        let mut strip = LedStrip::new();
+        for i in 0..4 {
+            strip.receive(
+                &format!("az5-a890m-{i}"),
+                NodeReading {
+                    at: SimTime::from_secs(1),
+                    cpu: i as f64 / 4.0,
+                    temp_c: 40.0,
+                },
+            );
+        }
+        assert_eq!(strip.node_count(), 4);
+    }
+}

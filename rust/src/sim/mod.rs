@@ -1,0 +1,14 @@
+//! Discrete-event simulation core.
+//!
+//! Everything time-dependent in the DALEK reproduction — node boots,
+//! SLURM scheduling ticks, suspend timers, energy-probe sampling, network
+//! flow completions, PXE installs — runs on this engine. The engine is
+//! single-threaded and fully deterministic: identical seeds and event
+//! insertion order produce identical traces, which the property tests and
+//! the paper-shaped benches rely on.
+
+pub mod engine;
+pub mod time;
+
+pub use engine::{EventQueue, ScheduledId};
+pub use time::SimTime;

@@ -1,0 +1,149 @@
+//! Simulated time: nanosecond ticks in a u64 (≈ 584 years of range).
+//!
+//! Nanosecond resolution covers everything the paper measures, from GPU
+//! kernel-launch latencies (µs, Fig. 8) up to the 24 h idle-power traces
+//! of §3.4, with exact integer arithmetic (no float drift in timestamps
+//! — the energy platform's 1 ms sampling grid must stay exact).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in simulated time (ns since simulation start).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_ns(ns: u64) -> Self {
+        SimTime(ns)
+    }
+    pub fn from_us(us: u64) -> Self {
+        SimTime(us * 1_000)
+    }
+    pub fn from_ms(ms: u64) -> Self {
+        SimTime(ms * 1_000_000)
+    }
+    pub fn from_secs(s: u64) -> Self {
+        SimTime(s * 1_000_000_000)
+    }
+    pub fn from_mins(m: u64) -> Self {
+        Self::from_secs(m * 60)
+    }
+    pub fn from_hours(h: u64) -> Self {
+        Self::from_secs(h * 3600)
+    }
+    /// From fractional seconds (rounds to nearest ns; must be finite ≥ 0).
+    pub fn from_secs_f64(s: f64) -> Self {
+        assert!(s.is_finite() && s >= 0.0, "invalid duration {s}");
+        SimTime((s * 1e9).round() as u64)
+    }
+
+    pub fn as_ns(self) -> u64 {
+        self.0
+    }
+    pub fn as_us_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    pub fn as_ms_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    /// Saturating difference (self - earlier), zero if earlier is later.
+    pub fn since(self, earlier: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(earlier.0))
+    }
+
+    pub fn min(self, other: SimTime) -> SimTime {
+        SimTime(self.0.min(other.0))
+    }
+    pub fn max(self, other: SimTime) -> SimTime {
+        SimTime(self.0.max(other.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.checked_add(rhs.0).expect("SimTime overflow"))
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.checked_sub(rhs.0).expect("SimTime underflow"))
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t+{}", crate::util::units::secs(self.as_secs_f64()))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_agree() {
+        assert_eq!(SimTime::from_us(1), SimTime::from_ns(1_000));
+        assert_eq!(SimTime::from_ms(1), SimTime::from_us(1_000));
+        assert_eq!(SimTime::from_secs(1), SimTime::from_ms(1_000));
+        assert_eq!(SimTime::from_mins(2), SimTime::from_secs(120));
+        assert_eq!(SimTime::from_hours(1), SimTime::from_mins(60));
+    }
+
+    #[test]
+    fn f64_round_trip() {
+        let t = SimTime::from_secs_f64(1.5);
+        assert_eq!(t.as_ns(), 1_500_000_000);
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = SimTime::from_secs(10);
+        let b = SimTime::from_secs(4);
+        assert_eq!(a + b, SimTime::from_secs(14));
+        assert_eq!(a - b, SimTime::from_secs(6));
+        assert_eq!(b.since(a), SimTime::ZERO); // saturating
+        assert_eq!(a.since(b), SimTime::from_secs(6));
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        let _ = SimTime::from_secs(1) - SimTime::from_secs(2);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(SimTime::from_ms(999) < SimTime::from_secs(1));
+        assert_eq!(
+            SimTime::from_secs(3).max(SimTime::from_secs(5)),
+            SimTime::from_secs(5)
+        );
+    }
+
+    #[test]
+    fn display_uses_unit_ladder() {
+        assert_eq!(format!("{}", SimTime::from_us(35)), "t+35.00 µs");
+    }
+}

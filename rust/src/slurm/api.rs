@@ -1,0 +1,187 @@
+//! User-facing command front-ends (`sbatch` / `srun` / `salloc`) with
+//! MUNGE credential validation (§3.4) and the SPANK/PAM login gate
+//! wiring (§3.5).
+//!
+//! `sbatch` queues and returns immediately; `srun` blocks (drives the
+//! simulation) until the job completes; `salloc` reserves nodes and
+//! grants interactive SSH through the login gate for the job's limit.
+
+use super::job::{JobId, JobSpec, JobState};
+use super::scheduler::{Slurm, SlurmError};
+use crate::services::auth::{AuthError, LoginGate, Munge, UserDb};
+use crate::sim::SimTime;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ApiError {
+    #[error(transparent)]
+    Auth(#[from] AuthError),
+    #[error(transparent)]
+    Slurm(#[from] SlurmError),
+    #[error("job did not reach a terminal state")]
+    Incomplete,
+}
+
+/// The authenticated front-end over a controller.
+pub struct SlurmApi {
+    pub ctl: Slurm,
+    munge: Munge,
+    pub gate: LoginGate,
+}
+
+impl SlurmApi {
+    pub fn new(ctl: Slurm, munge_key: &[u8]) -> Self {
+        Self {
+            ctl,
+            munge: Munge::new(munge_key),
+            gate: LoginGate::new(),
+        }
+    }
+
+    fn authenticate(&self, db: &UserDb, login: &str, now: SimTime) -> Result<(), ApiError> {
+        let user = db.user(login)?;
+        // mint + validate a credential round-trip (what slurmctld and
+        // slurmd do on every RPC)
+        let cred = self.munge.encode(user.uid, login.as_bytes(), now);
+        self.munge.decode(&cred, now).map_err(ApiError::Auth)?;
+        Ok(())
+    }
+
+    /// sbatch: queue and return the job id.
+    pub fn sbatch(
+        &mut self,
+        db: &UserDb,
+        spec: JobSpec,
+        now: SimTime,
+    ) -> Result<JobId, ApiError> {
+        self.authenticate(db, &spec.user, now)?;
+        Ok(self.ctl.submit_at(spec, now)?)
+    }
+
+    /// srun: submit and block (advance simulation) until terminal.
+    pub fn srun(
+        &mut self,
+        db: &UserDb,
+        spec: JobSpec,
+        now: SimTime,
+    ) -> Result<(JobId, JobState), ApiError> {
+        let id = self.sbatch(db, spec, now)?;
+        // drive the sim until the job terminates
+        loop {
+            let state = self.ctl.job(id).expect("submitted").state;
+            if matches!(
+                state,
+                JobState::Completed | JobState::Timeout | JobState::Cancelled
+            ) {
+                return Ok((id, state));
+            }
+            let before = self.ctl.now();
+            self.ctl.run_until(before + SimTime::from_mins(10));
+            if self.ctl.now() == before && self.ctl.pending_count() > 0 {
+                return Err(ApiError::Incomplete);
+            }
+        }
+    }
+
+    /// salloc: reserve nodes and open the SSH gate for the allocation.
+    /// Returns the job id once nodes are granted (Configuring/Running).
+    pub fn salloc(
+        &mut self,
+        db: &UserDb,
+        spec: JobSpec,
+        now: SimTime,
+    ) -> Result<JobId, ApiError> {
+        let user = spec.user.clone();
+        let limit = spec.time_limit;
+        let id = self.sbatch(db, spec, now)?;
+        // advance until the allocation exists (≤ boot budget)
+        let deadline = now + self.ctl.power_policy.max_boot_delay + SimTime::from_mins(10);
+        while self.ctl.job(id).expect("submitted").state == JobState::Pending
+            && self.ctl.now() < deadline
+        {
+            let t = self.ctl.now() + SimTime::from_secs(10);
+            self.ctl.run_until(t);
+        }
+        let job = self.ctl.job(id).expect("submitted");
+        if matches!(job.state, JobState::Configuring | JobState::Running) {
+            let until = self.ctl.now() + limit;
+            let nodes: Vec<String> = job
+                .allocated
+                .iter()
+                .map(|&i| self.ctl.node_infos()[i].name.clone())
+                .collect();
+            for n in nodes {
+                self.gate.grant(&n, &user, until);
+            }
+        }
+        Ok(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn api() -> (SlurmApi, UserDb) {
+        let ctl = Slurm::from_config(&ClusterConfig::dalek_default());
+        let mut db = UserDb::new();
+        db.add_user("alice", false).unwrap();
+        (SlurmApi::new(ctl, b"dalek-munge-key"), db)
+    }
+
+    #[test]
+    fn sbatch_requires_known_user() {
+        let (mut api, db) = api();
+        let e = api.sbatch(&db, JobSpec::cpu("mallory", "az4-n4090", 1, 10), SimTime::ZERO);
+        assert!(matches!(e, Err(ApiError::Auth(_))));
+        assert!(api
+            .sbatch(&db, JobSpec::cpu("alice", "az4-n4090", 1, 10), SimTime::ZERO)
+            .is_ok());
+    }
+
+    #[test]
+    fn srun_blocks_to_completion() {
+        let (mut api, db) = api();
+        let (id, state) = api
+            .srun(&db, JobSpec::cpu("alice", "az5-a890m", 2, 120), SimTime::ZERO)
+            .unwrap();
+        assert_eq!(state, JobState::Completed);
+        assert!(api.ctl.job(id).unwrap().finished.is_some());
+    }
+
+    #[test]
+    fn salloc_grants_ssh_on_allocated_nodes() {
+        let (mut api, db) = api();
+        let id = api
+            .salloc(&db, JobSpec::cpu("alice", "iml-ia770", 2, 600), SimTime::ZERO)
+            .unwrap();
+        let job = api.ctl.job(id).unwrap();
+        assert!(matches!(
+            job.state,
+            JobState::Configuring | JobState::Running
+        ));
+        let node_name = api.ctl.node_infos()[job.allocated[0]].name.clone();
+        let now = api.ctl.now();
+        assert!(api.gate.try_ssh(&node_name, "alice", now));
+        assert!(!api.gate.try_ssh(&node_name, "powerstate", now));
+        // other partition's node: no grant
+        assert!(!api.gate.try_ssh("az4-n4090-0", "alice", now));
+    }
+
+    #[test]
+    fn expired_allocation_evicts_shells() {
+        let (mut api, db) = api();
+        let mut spec = JobSpec::cpu("alice", "az5-a890m", 1, 30);
+        spec.time_limit = SimTime::from_secs(60);
+        let id = api.salloc(&db, spec, SimTime::ZERO).unwrap();
+        let node = api.ctl.node_infos()[api.ctl.job(id).unwrap().allocated[0]]
+            .name
+            .clone();
+        let now = api.ctl.now();
+        assert!(api.gate.try_ssh(&node, "alice", now));
+        // after the limit passes, the sweep kicks the shell (§3.5)
+        let evicted = api.gate.sweep(now + SimTime::from_secs(61));
+        assert_eq!(evicted.len(), 1);
+        assert!(!api.gate.has_shell(&node, "alice"));
+    }
+}

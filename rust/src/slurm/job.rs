@@ -1,0 +1,144 @@
+//! Jobs: what users submit and what the controller tracks.
+
+use crate::power::Activity;
+use crate::sim::SimTime;
+
+/// Job identifier (monotonic, like SLURM job ids).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// Lifecycle states (SLURM naming).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum JobState {
+    /// queued, waiting for resources
+    Pending,
+    /// nodes reserved, waiting for boots (§3.4's ≤ 2 min window)
+    Configuring,
+    Running,
+    Completed,
+    /// killed at its time limit
+    Timeout,
+    Cancelled,
+}
+
+/// What a user submits.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub user: String,
+    pub partition: String,
+    pub nodes: u32,
+    /// wall time the job will actually take once running
+    pub duration: SimTime,
+    /// requested limit; the job is killed past it
+    pub time_limit: SimTime,
+    /// AOT payload executed on the nodes (None = synthetic load)
+    pub payload: Option<String>,
+    /// load profile while running, drives the power model
+    pub activity: Activity,
+}
+
+impl JobSpec {
+    /// A simple CPU-bound job, for tests and traces.
+    pub fn cpu(user: &str, partition: &str, nodes: u32, secs: u64) -> Self {
+        Self {
+            user: user.into(),
+            partition: partition.into(),
+            nodes,
+            duration: SimTime::from_secs(secs),
+            time_limit: SimTime::from_secs(secs * 4 + 60),
+            payload: None,
+            activity: Activity::cpu_only(0.95),
+        }
+    }
+}
+
+/// The controller's job record.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub submitted: SimTime,
+    pub started: Option<SimTime>,
+    pub finished: Option<SimTime>,
+    /// nodes allocated to the job (indices into the scheduler's table)
+    pub allocated: Vec<usize>,
+}
+
+impl Job {
+    pub fn new(id: JobId, spec: JobSpec, now: SimTime) -> Self {
+        Self {
+            id,
+            spec,
+            state: JobState::Pending,
+            submitted: now,
+            started: None,
+            finished: None,
+            allocated: Vec::new(),
+        }
+    }
+
+    /// Queue wait: submit → start (None while pending).
+    pub fn wait_time(&self) -> Option<SimTime> {
+        self.started.map(|s| s.since(self.submitted))
+    }
+
+    /// Run time: start → finish.
+    pub fn run_time(&self) -> Option<SimTime> {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) => Some(f.since(s)),
+            _ => None,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self.state,
+            JobState::Completed | JobState::Timeout | JobState::Cancelled
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_helper_sane() {
+        let s = JobSpec::cpu("alice", "az4-n4090", 2, 100);
+        assert_eq!(s.nodes, 2);
+        assert_eq!(s.duration, SimTime::from_secs(100));
+        assert!(s.time_limit > s.duration);
+        assert!(s.activity.cpu > 0.9);
+    }
+
+    #[test]
+    fn timings() {
+        let mut j = Job::new(
+            JobId(1),
+            JobSpec::cpu("a", "p", 1, 10),
+            SimTime::from_secs(5),
+        );
+        assert_eq!(j.wait_time(), None);
+        j.started = Some(SimTime::from_secs(65));
+        j.finished = Some(SimTime::from_secs(75));
+        assert_eq!(j.wait_time(), Some(SimTime::from_secs(60)));
+        assert_eq!(j.run_time(), Some(SimTime::from_secs(10)));
+    }
+
+    #[test]
+    fn terminal_states() {
+        let mut j = Job::new(JobId(1), JobSpec::cpu("a", "p", 1, 10), SimTime::ZERO);
+        assert!(!j.is_terminal());
+        j.state = JobState::Completed;
+        assert!(j.is_terminal());
+        j.state = JobState::Timeout;
+        assert!(j.is_terminal());
+    }
+}

@@ -1,0 +1,19 @@
+//! The SLURM-equivalent resource manager (paper §3.4–3.5).
+//!
+//! * [`job`] — jobs, states, resource requests
+//! * [`scheduler`] — the controller (`slurmctld`): FIFO/EASY-backfill
+//!   queueing, node allocation, and the §3.4 energy-aware powering
+//!   policy (suspend after 10 idle minutes, WoL resume on demand,
+//!   ≤ 2 min boot delay between reservation and job start)
+//! * [`api`] — `sbatch`/`srun`/`salloc`-style front-ends with
+//!   MUNGE-credential validation (§3.4)
+
+pub mod api;
+pub mod job;
+pub mod quota;
+pub mod scheduler;
+
+pub use api::SlurmApi;
+pub use job::{Job, JobId, JobSpec, JobState};
+pub use quota::{QuotaDb, QuotaDecision};
+pub use scheduler::{NodeInfo, SchedPolicy, Slurm, SlurmStats};

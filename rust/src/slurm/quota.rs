@@ -1,0 +1,245 @@
+//! Time and energy quotas — the §6.2 plan, implemented.
+//!
+//! "Finally, there are plans to implement time and energy SLURM quotas
+//! (leveraging the previously introduced energy measurement platform).
+//! These additional constraints will challenge students and provide
+//! clear insights into the resource costs of running simulations.
+//! Eco-friendly strategies, such as prototyping on energy-efficient
+//! nodes and cores, will be encouraged."
+//!
+//! Accounts accrue node-seconds and joules per job (joules from the
+//! scheduler's exact integration — the same signal the §4 platform
+//! measures); submissions are rejected once either budget is exhausted.
+//! Budgets refill on a period (a teaching-semester week by default).
+
+use std::collections::BTreeMap;
+
+use super::job::JobSpec;
+use crate::sim::SimTime;
+
+/// Per-user budgets and usage.
+#[derive(Clone, Debug)]
+pub struct Account {
+    /// node-seconds per period
+    pub time_budget_s: f64,
+    /// joules per period
+    pub energy_budget_j: f64,
+    pub used_time_s: f64,
+    pub used_energy_j: f64,
+    period_start: SimTime,
+}
+
+/// Quota decision for a submission.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QuotaDecision {
+    Admit,
+    /// rejected: which budget ran out, how much is left
+    DenyTime { left_s: f64, need_s: f64 },
+    DenyEnergy { left_j: f64, est_j: f64 },
+}
+
+/// The quota database (kept by the controller; checked at submit).
+pub struct QuotaDb {
+    accounts: BTreeMap<String, Account>,
+    /// refill period (default: one week)
+    pub period: SimTime,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum QuotaError {
+    #[error("no account for `{0}`")]
+    NoAccount(String),
+}
+
+impl QuotaDb {
+    pub fn new() -> Self {
+        Self {
+            accounts: BTreeMap::new(),
+            period: SimTime::from_hours(24 * 7),
+        }
+    }
+
+    /// Create/replace an account.
+    pub fn set_account(&mut self, user: &str, time_budget_s: f64, energy_budget_j: f64) {
+        self.accounts.insert(
+            user.to_string(),
+            Account {
+                time_budget_s,
+                energy_budget_j,
+                used_time_s: 0.0,
+                used_energy_j: 0.0,
+                period_start: SimTime::ZERO,
+            },
+        );
+    }
+
+    pub fn account(&self, user: &str) -> Result<&Account, QuotaError> {
+        self.accounts
+            .get(user)
+            .ok_or_else(|| QuotaError::NoAccount(user.into()))
+    }
+
+    fn roll_period(&mut self, user: &str, now: SimTime) {
+        let period = self.period;
+        if let Some(a) = self.accounts.get_mut(user) {
+            if now.since(a.period_start) >= period {
+                a.used_time_s = 0.0;
+                a.used_energy_j = 0.0;
+                // align the new period to the refill grid
+                let periods = now.since(a.period_start).as_ns() / period.as_ns().max(1);
+                a.period_start = SimTime::from_ns(
+                    a.period_start.as_ns() + periods * period.as_ns(),
+                );
+            }
+        }
+    }
+
+    /// Estimate a job's cost: node-seconds from the time limit, joules
+    /// from `est_watts_per_node` (callers use the partition's TDP or a
+    /// measured profile — the eco-friendly incentive: efficient
+    /// partitions estimate cheaper).
+    pub fn admit(
+        &mut self,
+        user: &str,
+        spec: &JobSpec,
+        est_watts_per_node: f64,
+        now: SimTime,
+    ) -> Result<QuotaDecision, QuotaError> {
+        self.roll_period(user, now);
+        let a = self.account(user)?;
+        let need_s = spec.time_limit.as_secs_f64() * spec.nodes as f64;
+        let left_s = a.time_budget_s - a.used_time_s;
+        if need_s > left_s {
+            return Ok(QuotaDecision::DenyTime { left_s, need_s });
+        }
+        let est_j = need_s * est_watts_per_node;
+        let left_j = a.energy_budget_j - a.used_energy_j;
+        if est_j > left_j {
+            return Ok(QuotaDecision::DenyEnergy { left_j, est_j });
+        }
+        Ok(QuotaDecision::Admit)
+    }
+
+    /// Charge actual usage after a job completes (true node-seconds and
+    /// integrated joules — not the admission estimate).
+    pub fn charge(
+        &mut self,
+        user: &str,
+        node_seconds: f64,
+        energy_j: f64,
+        now: SimTime,
+    ) -> Result<(), QuotaError> {
+        self.roll_period(user, now);
+        let a = self
+            .accounts
+            .get_mut(user)
+            .ok_or_else(|| QuotaError::NoAccount(user.into()))?;
+        a.used_time_s += node_seconds;
+        a.used_energy_j += energy_j;
+        Ok(())
+    }
+}
+
+impl Default for QuotaDb {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(nodes: u32, limit_s: u64) -> JobSpec {
+        let mut s = JobSpec::cpu("student", "az5-a890m", nodes, limit_s / 2);
+        s.time_limit = SimTime::from_secs(limit_s);
+        s
+    }
+
+    fn db() -> QuotaDb {
+        let mut q = QuotaDb::new();
+        // a teaching account: 10 node-hours and 1 kWh per week
+        q.set_account("student", 10.0 * 3600.0, 3.6e6);
+        q
+    }
+
+    #[test]
+    fn admits_within_budget() {
+        let mut q = db();
+        let d = q
+            .admit("student", &spec(2, 3600), 50.0, SimTime::ZERO)
+            .unwrap();
+        assert_eq!(d, QuotaDecision::Admit);
+    }
+
+    #[test]
+    fn denies_time_overrun() {
+        let mut q = db();
+        // 4 nodes x 4 h = 16 node-hours > 10
+        let d = q
+            .admit("student", &spec(4, 4 * 3600), 10.0, SimTime::ZERO)
+            .unwrap();
+        assert!(matches!(d, QuotaDecision::DenyTime { .. }));
+    }
+
+    #[test]
+    fn denies_energy_overrun_even_if_time_fits() {
+        let mut q = db();
+        // 2 node-hours fits, but at 525 W/node (az4-n4090 TDP) the
+        // energy estimate blows the 1 kWh budget
+        let d = q
+            .admit("student", &spec(2, 3600), 525.0, SimTime::ZERO)
+            .unwrap();
+        assert!(matches!(d, QuotaDecision::DenyEnergy { .. }));
+        // the eco-friendly alternative: same shape on the efficient
+        // partition (54 W/node) is admitted — the §6.2 incentive
+        let d = q
+            .admit("student", &spec(2, 3600), 54.0, SimTime::ZERO)
+            .unwrap();
+        assert_eq!(d, QuotaDecision::Admit);
+    }
+
+    #[test]
+    fn charging_consumes_budget() {
+        let mut q = db();
+        q.charge("student", 9.0 * 3600.0, 1e6, SimTime::ZERO).unwrap();
+        // only 1 node-hour left: a 2-node-hour ask is denied
+        let d = q
+            .admit("student", &spec(2, 3600), 10.0, SimTime::from_secs(10))
+            .unwrap();
+        assert!(matches!(d, QuotaDecision::DenyTime { .. }));
+        // a 30-minute single node still fits
+        let d = q
+            .admit("student", &spec(1, 1800), 10.0, SimTime::from_secs(10))
+            .unwrap();
+        assert_eq!(d, QuotaDecision::Admit);
+    }
+
+    #[test]
+    fn budgets_refill_each_period() {
+        let mut q = db();
+        q.charge("student", 10.0 * 3600.0, 3.6e6, SimTime::ZERO)
+            .unwrap();
+        assert!(matches!(
+            q.admit("student", &spec(1, 600), 10.0, SimTime::from_hours(1))
+                .unwrap(),
+            QuotaDecision::DenyTime { .. }
+        ));
+        // one week later: fresh budgets
+        let d = q
+            .admit("student", &spec(1, 600), 10.0, SimTime::from_hours(24 * 7 + 1))
+            .unwrap();
+        assert_eq!(d, QuotaDecision::Admit);
+        assert_eq!(q.account("student").unwrap().used_time_s, 0.0);
+    }
+
+    #[test]
+    fn unknown_user_errors() {
+        let mut q = db();
+        assert!(matches!(
+            q.admit("mallory", &spec(1, 60), 1.0, SimTime::ZERO),
+            Err(QuotaError::NoAccount(_))
+        ));
+        assert!(q.charge("mallory", 1.0, 1.0, SimTime::ZERO).is_err());
+    }
+}

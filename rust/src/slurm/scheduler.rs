@@ -1,0 +1,812 @@
+//! The controller: queueing, allocation, and energy-aware node powering.
+//!
+//! Implements the paper's §3.4 strategy verbatim:
+//!   * nodes power off (suspend) after 10 minutes of inactivity;
+//!   * submitting work wakes them with a WoL packet (`noderesume`);
+//!   * there can be up to ~2 minutes between reservation and job start
+//!     while nodes boot — jobs sit in `Configuring` for that window;
+//!   * an idle cluster therefore draws only the suspend floor
+//!     (≈50 W including frontend + switch + RPis).
+//!
+//! Scheduling is per-partition FIFO with optional EASY backfill: a
+//! later job may jump the queue iff it fits on nodes the partition head
+//! cannot use before the head's estimated start (its shadow time).
+//!
+//! Energy accounting integrates each node's power draw exactly across
+//! state changes, so `total_energy_j` is the ground truth the §4
+//! measurement platform samples at 1 ms.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::job::{Job, JobId, JobSpec, JobState};
+use crate::config::cluster::{resolve_partition, ClusterConfig, PowerPolicyConfig};
+use crate::power::{Activity, NodePowerFsm, PowerModel, PowerState, Transition};
+use crate::sim::{EventQueue, ScheduledId, SimTime};
+
+/// Queue policy.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SchedPolicy {
+    Fifo,
+    Backfill,
+}
+
+#[derive(Clone, Debug)]
+enum Event {
+    BootComplete(usize),
+    ShutdownComplete(usize),
+    JobComplete(JobId),
+    SuspendTimer(usize),
+}
+
+struct NodeEntry {
+    name: String,
+    partition: String,
+    fsm: NodePowerFsm,
+    power: PowerModel,
+    running: Option<JobId>,
+    reserved_for: Option<JobId>,
+    suspend_timer: Option<ScheduledId>,
+    // exact energy integration
+    last_change: SimTime,
+    cur_watts: f64,
+    energy_j: f64,
+    /// piecewise-constant power history: (change time, watts from then)
+    /// — consumed by the coordinator's energy-platform sampling
+    history: VecDeque<(SimTime, f64)>,
+}
+
+/// Public node snapshot.
+#[derive(Clone, Debug)]
+pub struct NodeInfo {
+    pub name: String,
+    pub partition: String,
+    pub state: PowerState,
+    pub running: Option<JobId>,
+    pub energy_j: f64,
+    pub watts: f64,
+    pub boots: u32,
+    pub suspends: u32,
+}
+
+/// Aggregate counters.
+#[derive(Clone, Debug, Default)]
+pub struct SlurmStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub timeouts: u64,
+    pub cancelled: u64,
+    pub total_wait_s: f64,
+    pub total_run_s: f64,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SlurmError {
+    #[error("unknown partition `{0}`")]
+    UnknownPartition(String),
+    #[error("job requests {req} nodes; partition `{part}` has {have}")]
+    TooManyNodes { req: u32, part: String, have: u32 },
+    #[error("unknown job {0}")]
+    UnknownJob(JobId),
+    #[error("job {0} is not pending")]
+    NotPending(JobId),
+}
+
+/// The controller.
+pub struct Slurm {
+    nodes: Vec<NodeEntry>,
+    by_partition: BTreeMap<String, Vec<usize>>,
+    jobs: BTreeMap<JobId, Job>,
+    /// pending job ids in submission order
+    queue: Vec<JobId>,
+    events: EventQueue<Event>,
+    /// wall clock: advances with run_until even when no events fire
+    clock: SimTime,
+    next_job: u64,
+    pub policy: SchedPolicy,
+    pub power_policy: PowerPolicyConfig,
+    pub stats: SlurmStats,
+}
+
+impl Slurm {
+    /// Build from a cluster config; all compute nodes start suspended
+    /// (the cluster's idle state, §3.4).
+    pub fn from_config(cfg: &ClusterConfig) -> Self {
+        let mut nodes = Vec::new();
+        let mut by_partition: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for pc in &cfg.partitions {
+            let spec = resolve_partition(&pc.name).expect("validated config");
+            for n in 0..pc.nodes {
+                let idx = nodes.len();
+                let model = &spec.node;
+                nodes.push(NodeEntry {
+                    name: format!("{}-{}", pc.name, n),
+                    partition: pc.name.clone(),
+                    fsm: NodePowerFsm::new(model.boot_time, model.shutdown_time),
+                    power: PowerModel::for_node(model),
+                    running: None,
+                    reserved_for: None,
+                    suspend_timer: None,
+                    last_change: SimTime::ZERO,
+                    cur_watts: model.power.suspend_w,
+                    energy_j: 0.0,
+                    history: VecDeque::from([(SimTime::ZERO, model.power.suspend_w)]),
+                });
+                by_partition.entry(pc.name.clone()).or_default().push(idx);
+            }
+        }
+        let policy = if cfg.scheduler.policy == "fifo" {
+            SchedPolicy::Fifo
+        } else {
+            SchedPolicy::Backfill
+        };
+        Self {
+            nodes,
+            by_partition,
+            jobs: BTreeMap::new(),
+            queue: Vec::new(),
+            events: EventQueue::new(),
+            clock: SimTime::ZERO,
+            next_job: 1,
+            policy,
+            power_policy: cfg.power.clone(),
+            stats: SlurmStats::default(),
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.clock.max(self.events.now())
+    }
+
+    /// Timestamp of the next scheduled event, if any — used by the
+    /// coordinator to co-simulate energy sampling between events (node
+    /// power is piecewise constant between events).
+    pub fn next_event_time(&mut self) -> Option<SimTime> {
+        self.events.peek_time()
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    pub fn jobs(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.values()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Node snapshots (energy integrated up to `now`).
+    pub fn node_infos(&self) -> Vec<NodeInfo> {
+        let now = self.now();
+        self.nodes
+            .iter()
+            .map(|n| NodeInfo {
+                name: n.name.clone(),
+                partition: n.partition.clone(),
+                state: n.fsm.state(),
+                running: n.running,
+                energy_j: n.energy_j + n.cur_watts * now.since(n.last_change).as_secs_f64(),
+                watts: n.cur_watts,
+                boots: n.fsm.boots,
+                suspends: n.fsm.suspends,
+            })
+            .collect()
+    }
+
+    /// Instantaneous compute-node draw, watts.
+    pub fn cluster_watts(&self) -> f64 {
+        self.nodes.iter().map(|n| n.cur_watts).sum()
+    }
+
+    /// Integrated compute-node energy up to `now`, joules.
+    pub fn total_energy_j(&self) -> f64 {
+        let now = self.now();
+        self.nodes
+            .iter()
+            .map(|n| n.energy_j + n.cur_watts * now.since(n.last_change).as_secs_f64())
+            .sum()
+    }
+
+    /// True power draw of one node at the current instant — the signal
+    /// the energy platform probes sample.
+    pub fn node_watts(&self, name: &str) -> Option<f64> {
+        self.nodes.iter().find(|n| n.name == name).map(|n| n.cur_watts)
+    }
+
+    // -- energy bookkeeping ------------------------------------------------
+
+    fn touch(&mut self, idx: usize, now: SimTime) {
+        let n = &mut self.nodes[idx];
+        n.energy_j += n.cur_watts * now.since(n.last_change).as_secs_f64();
+        n.last_change = now;
+        let old_watts = n.cur_watts;
+        n.cur_watts = match n.fsm.state() {
+            PowerState::Suspended => n.power.suspend_w(),
+            PowerState::Booting { .. } => n.power.boot_w(),
+            PowerState::Suspending { .. } => n.power.idle_w(),
+            PowerState::Idle { .. } => n.power.watts(Activity::idle()),
+            PowerState::Allocated => {
+                let act = n
+                    .running
+                    .and_then(|j| self.jobs.get(&j))
+                    .map(|j| j.spec.activity)
+                    .unwrap_or_default();
+                n.power.watts(act)
+            }
+        };
+        if (n.cur_watts - old_watts).abs() > 1e-12 {
+            n.history.push_back((now, n.cur_watts));
+        }
+    }
+
+    /// Power history of one node: change points (time, watts). The
+    /// first relevant entry for a window starting at `from` is the last
+    /// change at or before `from`.
+    pub fn node_history(&self, name: &str) -> Option<Vec<(SimTime, f64)>> {
+        self.nodes
+            .iter()
+            .find(|n| n.name == name)
+            .map(|n| n.history.iter().copied().collect())
+    }
+
+    /// Drop history entries no longer needed for windows starting at or
+    /// after `before` (always keeps the last entry ≤ `before`).
+    pub fn gc_history(&mut self, before: SimTime) {
+        for n in &mut self.nodes {
+            while n.history.len() > 1 && n.history[1].0 <= before {
+                n.history.pop_front();
+            }
+        }
+    }
+
+    // -- submission ---------------------------------------------------------
+
+    /// Submit a job at time `now` (clamped to the controller clock if
+    /// the caller lags behind it).
+    pub fn submit_at(&mut self, spec: JobSpec, now: SimTime) -> Result<JobId, SlurmError> {
+        self.run_until(now);
+        let now = self.now();
+        let part_nodes = self
+            .by_partition
+            .get(&spec.partition)
+            .ok_or_else(|| SlurmError::UnknownPartition(spec.partition.clone()))?;
+        if spec.nodes as usize > part_nodes.len() {
+            return Err(SlurmError::TooManyNodes {
+                req: spec.nodes,
+                part: spec.partition.clone(),
+                have: part_nodes.len() as u32,
+            });
+        }
+        let id = JobId(self.next_job);
+        self.next_job += 1;
+        self.jobs.insert(id, Job::new(id, spec, now));
+        self.queue.push(id);
+        self.stats.submitted += 1;
+        self.try_schedule(now);
+        Ok(id)
+    }
+
+    /// scancel for pending jobs.
+    pub fn cancel(&mut self, id: JobId) -> Result<(), SlurmError> {
+        let job = self.jobs.get_mut(&id).ok_or(SlurmError::UnknownJob(id))?;
+        if job.state != JobState::Pending {
+            return Err(SlurmError::NotPending(id));
+        }
+        job.state = JobState::Cancelled;
+        job.finished = Some(self.events.now());
+        self.queue.retain(|q| *q != id);
+        self.stats.cancelled += 1;
+        Ok(())
+    }
+
+    // -- event loop ----------------------------------------------------------
+
+    /// Process all events up to and including `t`; the clock then
+    /// stands at `t` even if no event fired.
+    pub fn run_until(&mut self, t: SimTime) {
+        while let Some(next) = self.events.peek_time() {
+            if next > t {
+                break;
+            }
+            let (now, ev) = self.events.pop().expect("peeked");
+            self.clock = self.clock.max(now);
+            self.handle(ev, now);
+        }
+        self.clock = self.clock.max(t);
+    }
+
+    /// Drain every scheduled event (cluster reaches quiescence).
+    pub fn run_to_idle(&mut self) -> SimTime {
+        while let Some((now, ev)) = self.events.pop() {
+            self.clock = self.clock.max(now);
+            self.handle(ev, now);
+        }
+        self.now()
+    }
+
+    fn handle(&mut self, ev: Event, now: SimTime) {
+        match ev {
+            Event::BootComplete(i) => {
+                self.nodes[i].fsm.boot_complete(now).expect("boot scheduled");
+                self.touch(i, now);
+                // a freshly-booted node either belongs to a configuring
+                // job or idles (and gets a suspend timer)
+                if let Some(j) = self.nodes[i].reserved_for {
+                    self.maybe_start(j, now);
+                } else {
+                    self.arm_suspend_timer(i, now);
+                }
+            }
+            Event::ShutdownComplete(i) => {
+                self.nodes[i]
+                    .fsm
+                    .shutdown_complete(now)
+                    .expect("shutdown scheduled");
+                self.touch(i, now);
+                // resources changed (a node finished suspending can now
+                // be woken again for a waiting head job)
+                self.try_schedule(now);
+            }
+            Event::JobComplete(id) => self.finish_job(id, now),
+            Event::SuspendTimer(i) => {
+                self.nodes[i].suspend_timer = None;
+                let idle_long_enough = self.nodes[i]
+                    .fsm
+                    .idle_for(now)
+                    .map(|d| d >= self.power_policy.suspend_after)
+                    .unwrap_or(false);
+                if self.power_policy.enabled
+                    && idle_long_enough
+                    && self.nodes[i].reserved_for.is_none()
+                {
+                    if let Ok(Transition::ScheduleShutdownComplete(at)) =
+                        self.nodes[i].fsm.suspend(now)
+                    {
+                        self.touch(i, now);
+                        self.events.schedule_at(at, Event::ShutdownComplete(i));
+                    }
+                }
+            }
+        }
+    }
+
+    fn arm_suspend_timer(&mut self, idx: usize, now: SimTime) {
+        if !self.power_policy.enabled {
+            return;
+        }
+        let at = now + self.power_policy.suspend_after;
+        let id = self.events.schedule_at(at, Event::SuspendTimer(idx));
+        self.nodes[idx].suspend_timer = Some(id);
+    }
+
+    fn disarm_suspend_timer(&mut self, idx: usize) {
+        if let Some(id) = self.nodes[idx].suspend_timer.take() {
+            self.events.cancel(id);
+        }
+    }
+
+    // -- scheduling ----------------------------------------------------------
+
+    fn try_schedule(&mut self, now: SimTime) {
+        // per-partition independent queues
+        let partitions: Vec<String> = self.by_partition.keys().cloned().collect();
+        for part in partitions {
+            self.schedule_partition(&part, now);
+        }
+    }
+
+    fn schedule_partition(&mut self, part: &str, now: SimTime) {
+        let pending: Vec<JobId> = self
+            .queue
+            .iter()
+            .copied()
+            .filter(|id| {
+                let j = &self.jobs[id];
+                j.spec.partition == part && j.state == JobState::Pending
+            })
+            .collect();
+        let Some(&head) = pending.first() else { return };
+
+        if self.reserve(head, now) {
+            // head got its nodes; recurse for the next head
+            self.schedule_partition(part, now);
+            return;
+        }
+        if self.policy == SchedPolicy::Fifo {
+            return;
+        }
+        // EASY backfill: shadow time = when the head could start
+        let shadow = self.shadow_time(head, now);
+        for &bf in pending.iter().skip(1) {
+            let fits_now = self.claimable(part, None).len() as u32 >= self.jobs[&bf].spec.nodes;
+            let ends_before_shadow = now + self.jobs[&bf].spec.time_limit <= shadow;
+            if fits_now && ends_before_shadow {
+                let ok = self.reserve(bf, now);
+                debug_assert!(ok, "claimable said it fits");
+            }
+        }
+    }
+
+    /// Nodes of `part` a job could claim right now (idle, booting or
+    /// suspended; unreserved, not running anything).
+    fn claimable(&self, part: &str, _for_job: Option<JobId>) -> Vec<usize> {
+        self.by_partition[part]
+            .iter()
+            .copied()
+            .filter(|&i| {
+                let n = &self.nodes[i];
+                n.reserved_for.is_none()
+                    && n.running.is_none()
+                    && matches!(
+                        n.fsm.state(),
+                        PowerState::Idle { .. }
+                            | PowerState::Booting { .. }
+                            | PowerState::Suspended
+                    )
+            })
+            .collect()
+    }
+
+    /// Earliest time `head` could plausibly start: walk running jobs'
+    /// completion times until enough nodes are free (EASY reservation).
+    fn shadow_time(&self, head: JobId, now: SimTime) -> SimTime {
+        let job = &self.jobs[&head];
+        let part = &job.spec.partition;
+        let mut free = self.claimable(part, Some(head)).len() as u32;
+        if free >= job.spec.nodes {
+            return now;
+        }
+        let mut ends: Vec<SimTime> = self.by_partition[part]
+            .iter()
+            .filter_map(|&i| self.nodes[i].running)
+            .filter_map(|jid| {
+                let j = &self.jobs[&jid];
+                j.started
+                    .map(|s| s + j.spec.duration.min(j.spec.time_limit))
+            })
+            .collect();
+        ends.sort();
+        for end in ends {
+            free += 1;
+            if free >= job.spec.nodes {
+                // plus a boot budget if suspended nodes must join
+                return end + self.power_policy.max_boot_delay;
+            }
+        }
+        // cannot estimate (shouldn't happen: submit validated size)
+        now + SimTime::from_hours(24)
+    }
+
+    /// Try to reserve nodes for a job; wakes suspended nodes. Returns
+    /// true if the reservation was made (job leaves the Pending queue).
+    fn reserve(&mut self, id: JobId, now: SimTime) -> bool {
+        let needed = self.jobs[&id].spec.nodes as usize;
+        let part = self.jobs[&id].spec.partition.clone();
+        let mut cands = self.claimable(&part, Some(id));
+        if cands.len() < needed {
+            return false;
+        }
+        // prefer nodes that are already up: Idle, then Booting, then
+        // Suspended — minimizes the §3.4 boot delay
+        cands.sort_by_key(|&i| match self.nodes[i].fsm.state() {
+            PowerState::Idle { .. } => 0,
+            PowerState::Booting { .. } => 1,
+            PowerState::Suspended => 2,
+            _ => 3,
+        });
+        cands.truncate(needed);
+        for &i in &cands {
+            self.nodes[i].reserved_for = Some(id);
+            self.disarm_suspend_timer(i);
+            if matches!(self.nodes[i].fsm.state(), PowerState::Suspended) {
+                if let Ok(Transition::ScheduleBootComplete(at)) = self.nodes[i].fsm.wake(now) {
+                    self.touch(i, now);
+                    self.events.schedule_at(at, Event::BootComplete(i));
+                }
+            }
+        }
+        let job = self.jobs.get_mut(&id).expect("exists");
+        job.state = JobState::Configuring;
+        job.allocated = cands;
+        self.queue.retain(|q| *q != id);
+        self.maybe_start(id, now);
+        true
+    }
+
+    /// Start the job if every reserved node is idle (booted).
+    fn maybe_start(&mut self, id: JobId, now: SimTime) {
+        let job = &self.jobs[&id];
+        if job.state != JobState::Configuring {
+            return;
+        }
+        let ready = job
+            .allocated
+            .iter()
+            .all(|&i| matches!(self.nodes[i].fsm.state(), PowerState::Idle { .. }));
+        if !ready {
+            return;
+        }
+        let allocated = job.allocated.clone();
+        let dur = job.spec.duration.min(job.spec.time_limit);
+        for &i in &allocated {
+            self.nodes[i].fsm.allocate().expect("idle node");
+            self.nodes[i].running = Some(id);
+            self.touch(i, now);
+        }
+        let job = self.jobs.get_mut(&id).expect("exists");
+        job.state = JobState::Running;
+        job.started = Some(now);
+        self.events.schedule_at(now + dur, Event::JobComplete(id));
+    }
+
+    fn finish_job(&mut self, id: JobId, now: SimTime) {
+        let job = self.jobs.get_mut(&id).expect("scheduled completion");
+        let timed_out = job.spec.duration > job.spec.time_limit;
+        job.state = if timed_out {
+            JobState::Timeout
+        } else {
+            JobState::Completed
+        };
+        job.finished = Some(now);
+        self.stats.completed += u64::from(!timed_out);
+        self.stats.timeouts += u64::from(timed_out);
+        if let (Some(s), Some(f)) = (job.started, job.finished) {
+            self.stats.total_run_s += f.since(s).as_secs_f64();
+            self.stats.total_wait_s += s.since(job.submitted).as_secs_f64();
+        }
+        let allocated = job.allocated.clone();
+        for &i in &allocated {
+            self.nodes[i].running = None;
+            self.nodes[i].reserved_for = None;
+            self.nodes[i].fsm.release(now).expect("allocated node");
+            self.touch(i, now);
+            self.arm_suspend_timer(i, now);
+        }
+        self.try_schedule(now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn slurm() -> Slurm {
+        Slurm::from_config(&ClusterConfig::dalek_default())
+    }
+
+    fn mins(m: u64) -> SimTime {
+        SimTime::from_mins(m)
+    }
+
+    #[test]
+    fn job_waits_for_boot_then_runs() {
+        let mut s = slurm();
+        let id = s
+            .submit_at(JobSpec::cpu("alice", "az4-n4090", 2, 300), SimTime::ZERO)
+            .unwrap();
+        assert_eq!(s.job(id).unwrap().state, JobState::Configuring);
+        s.run_to_idle();
+        let job = s.job(id).unwrap();
+        assert_eq!(job.state, JobState::Completed);
+        // started after the 95 s boot, within the §3.4 2-minute budget
+        let wait = job.wait_time().unwrap();
+        assert!(wait >= SimTime::from_secs(95) && wait <= mins(2), "{wait}");
+        assert_eq!(job.run_time().unwrap(), SimTime::from_secs(300));
+    }
+
+    #[test]
+    fn idle_nodes_resuspend_after_10_minutes() {
+        let mut s = slurm();
+        let id = s
+            .submit_at(JobSpec::cpu("alice", "az5-a890m", 4, 60), SimTime::ZERO)
+            .unwrap();
+        s.run_to_idle();
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+        // after completion + 10 min + shutdown, all nodes are suspended
+        for n in s.node_infos() {
+            assert!(
+                matches!(n.state, PowerState::Suspended),
+                "{}: {:?}",
+                n.name,
+                n.state
+            );
+            assert_eq!(n.boots, if n.partition == "az5-a890m" { 1 } else { 0 });
+        }
+    }
+
+    #[test]
+    fn suspended_cluster_draws_suspend_floor() {
+        let mut s = slurm();
+        s.run_until(mins(60));
+        // Table 2 suspend column: 6 + 6 + 92 + 8 = 112 W across partitions
+        assert!((s.cluster_watts() - 112.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn back_to_back_jobs_reuse_warm_nodes() {
+        let mut s = slurm();
+        let a = s
+            .submit_at(JobSpec::cpu("alice", "az4-a7900", 4, 120), SimTime::ZERO)
+            .unwrap();
+        // run past job a's completion (boot ~95 s + run 120 s) but well
+        // inside the 10-minute idle window
+        s.run_until(mins(5));
+        let end_a = s.job(a).unwrap().finished.unwrap();
+        assert!(end_a < mins(5));
+        // submit 1 min after completion: inside the 10-min idle window
+        let b = s
+            .submit_at(
+                JobSpec::cpu("bob", "az4-a7900", 4, 60),
+                end_a + mins(1),
+            )
+            .unwrap();
+        s.run_to_idle();
+        let job_b = s.job(b).unwrap();
+        // no boot needed: starts immediately
+        assert_eq!(job_b.wait_time().unwrap(), SimTime::ZERO);
+        // each az4-a7900 node booted exactly once in the whole scenario
+        for n in s.node_infos().iter().filter(|n| n.partition == "az4-a7900") {
+            assert_eq!(n.boots, 1);
+        }
+    }
+
+    #[test]
+    fn fifo_blocks_small_job_behind_big_one() {
+        let mut s = slurm();
+        s.policy = SchedPolicy::Fifo;
+        // occupy all 4 nodes for a long time
+        let _big = s
+            .submit_at(JobSpec::cpu("a", "iml-ia770", 4, 4000), SimTime::ZERO)
+            .unwrap();
+        let blocked = s
+            .submit_at(JobSpec::cpu("b", "iml-ia770", 4, 10), mins(1))
+            .unwrap();
+        let tiny = s
+            .submit_at(JobSpec::cpu("c", "iml-ia770", 1, 10), mins(1))
+            .unwrap();
+        s.run_until(mins(30));
+        assert_eq!(s.job(blocked).unwrap().state, JobState::Pending);
+        // FIFO: tiny waits even though a node is notionally free
+        assert_eq!(s.job(tiny).unwrap().state, JobState::Pending);
+    }
+
+    #[test]
+    fn backfill_lets_short_job_jump() {
+        let mut s = slurm();
+        assert_eq!(s.policy, SchedPolicy::Backfill);
+        // 3 of 4 nodes busy for a long time
+        let _big = s
+            .submit_at(JobSpec::cpu("a", "iml-ia770", 3, 40_000), SimTime::ZERO)
+            .unwrap();
+        // head needs all 4 (cannot start until big ends)
+        let head = s
+            .submit_at(JobSpec::cpu("b", "iml-ia770", 4, 100), mins(1))
+            .unwrap();
+        // tiny 1-node job, short enough to finish before the shadow time
+        let tiny = s
+            .submit_at(JobSpec::cpu("c", "iml-ia770", 1, 10), mins(2))
+            .unwrap();
+        s.run_until(mins(20));
+        assert_eq!(s.job(head).unwrap().state, JobState::Pending);
+        let t = s.job(tiny).unwrap();
+        assert!(
+            matches!(t.state, JobState::Completed),
+            "tiny should have backfilled: {:?}",
+            t.state
+        );
+    }
+
+    #[test]
+    fn backfill_never_delays_head() {
+        let mut s = slurm();
+        let _big = s
+            .submit_at(JobSpec::cpu("a", "iml-ia770", 3, 1000), SimTime::ZERO)
+            .unwrap();
+        let head = s
+            .submit_at(JobSpec::cpu("b", "iml-ia770", 4, 100), mins(1))
+            .unwrap();
+        // long 1-node job that would overlap the head's shadow window
+        let long = s
+            .submit_at(JobSpec::cpu("c", "iml-ia770", 1, 100_000), mins(2))
+            .unwrap();
+        s.run_to_idle();
+        let head_job = s.job(head).unwrap();
+        let long_job = s.job(long).unwrap();
+        // the long job must not have started before the head
+        assert!(long_job.started.unwrap() >= head_job.started.unwrap());
+    }
+
+    #[test]
+    fn timeout_kills_overrunning_job() {
+        let mut s = slurm();
+        let mut spec = JobSpec::cpu("a", "az5-a890m", 1, 1000);
+        spec.time_limit = SimTime::from_secs(100);
+        let id = s.submit_at(spec, SimTime::ZERO).unwrap();
+        s.run_to_idle();
+        let j = s.job(id).unwrap();
+        assert_eq!(j.state, JobState::Timeout);
+        assert_eq!(j.run_time().unwrap(), SimTime::from_secs(100));
+        assert_eq!(s.stats.timeouts, 1);
+    }
+
+    #[test]
+    fn cancel_pending_job() {
+        let mut s = slurm();
+        let _big = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 4, 1000), SimTime::ZERO)
+            .unwrap();
+        let waiting = s
+            .submit_at(JobSpec::cpu("b", "az5-a890m", 4, 10), mins(1))
+            .unwrap();
+        s.cancel(waiting).unwrap();
+        assert_eq!(s.job(waiting).unwrap().state, JobState::Cancelled);
+        assert!(matches!(
+            s.cancel(waiting),
+            Err(SlurmError::NotPending(_))
+        ));
+        s.run_to_idle();
+        assert_eq!(s.stats.cancelled, 1);
+    }
+
+    #[test]
+    fn submit_validation() {
+        let mut s = slurm();
+        assert!(matches!(
+            s.submit_at(JobSpec::cpu("a", "nope", 1, 1), SimTime::ZERO),
+            Err(SlurmError::UnknownPartition(_))
+        ));
+        assert!(matches!(
+            s.submit_at(JobSpec::cpu("a", "az4-n4090", 5, 1), SimTime::ZERO),
+            Err(SlurmError::TooManyNodes { .. })
+        ));
+    }
+
+    #[test]
+    fn energy_accounting_conserves() {
+        // a known scenario: 4 az5 nodes suspended for 1 h draw
+        // 4 × 2 W × 3600 s = 28.8 kJ
+        let mut s = slurm();
+        s.run_until(SimTime::from_hours(1));
+        let az5: f64 = s
+            .node_infos()
+            .iter()
+            .filter(|n| n.partition == "az5-a890m")
+            .map(|n| n.energy_j)
+            .sum();
+        assert!((az5 - 4.0 * 2.0 * 3600.0).abs() < 1e-6, "az5={az5}");
+    }
+
+    #[test]
+    fn power_policy_disabled_keeps_nodes_up() {
+        let mut cfg = ClusterConfig::dalek_default();
+        cfg.power.enabled = false;
+        let mut s = Slurm::from_config(&cfg);
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 4, 60), SimTime::ZERO)
+            .unwrap();
+        s.run_to_idle();
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+        // nodes stay idle forever (no suspend events), burning idle watts
+        for n in s.node_infos().iter().filter(|n| n.partition == "az5-a890m") {
+            assert!(matches!(n.state, PowerState::Idle { .. }));
+        }
+    }
+
+    #[test]
+    fn stats_track_submissions() {
+        let mut s = slurm();
+        for i in 0..5 {
+            s.submit_at(
+                JobSpec::cpu("a", "az5-a890m", 1, 30),
+                SimTime::from_secs(i * 10),
+            )
+            .unwrap();
+        }
+        s.run_to_idle();
+        assert_eq!(s.stats.submitted, 5);
+        assert_eq!(s.stats.completed, 5);
+        assert!(s.stats.total_wait_s > 0.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny benchmark harness for the `harness = false` bench targets
+//! (criterion is not vendored offline). Provides warmed-up, repeated
+//! timing with mean/p50/min reporting in criterion-like format, so
+//! `cargo bench` output stays familiar.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} time: [{} {} {}]  ({} iters)",
+            self.name,
+            fmt_ns(s.min),
+            fmt_ns(s.p50),
+            fmt_ns(s.max),
+            self.iters
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Run `f` `iters` times (after `warmup` runs) and print the summary.
+/// Returns the result for programmatic use (perf regression checks).
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: iters.max(1),
+        summary: Summary::of(&samples).expect("non-empty"),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Throughput helper: items/s from a BenchResult median.
+pub fn per_sec(r: &BenchResult, items: f64) -> f64 {
+    items / (r.summary.p50 / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let r = bench("noop", 1, 10, || n += 1);
+        assert_eq!(n, 11);
+        assert_eq!(r.iters, 10);
+        assert!(r.summary.min >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn per_sec_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            summary: Summary::of(&[1e6]).unwrap(), // 1 ms
+        };
+        assert!((per_sec(&r, 1000.0) - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1.5e3), "1.500 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

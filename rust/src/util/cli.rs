@@ -1,0 +1,160 @@
+//! Minimal CLI argument parser (clap is not vendored offline).
+//!
+//! Supports the subcommand + `--flag[=| ]value` + positional style the
+//! `dalek` binary uses:
+//!
+//! ```text
+//! dalek bench fig4 --csv --seed 7
+//! dalek submit --partition az4-n4090 --nodes 2 --payload gemm256
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand path, positionals, flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    InvalidValue(String, String),
+}
+
+impl Args {
+    /// Parse raw arguments. `value_flags` lists flags that take a value;
+    /// anything else starting with `--` is treated as a boolean switch.
+    pub fn parse<S: AsRef<str>>(
+        raw: &[S],
+        value_flags: &[&str],
+        bool_flags: &[&str],
+    ) -> Result<Self, CliError> {
+        let mut out = Args::default();
+        let mut it = raw.iter().map(|s| s.as_ref().to_string()).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if value_flags.contains(&name.as_str()) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    out.flags.entry(name).or_default().push(v);
+                } else if bool_flags.contains(&name.as_str()) {
+                    if inline.is_some() {
+                        return Err(CliError::InvalidValue(
+                            name,
+                            "boolean flag takes no value".into(),
+                        ));
+                    }
+                    out.flags.entry(name).or_default().push("true".into());
+                } else {
+                    return Err(CliError::UnknownFlag(name));
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.contains_key(flag)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, flag: &str) -> Vec<&str> {
+        self.flags
+            .get(flag)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, flag: &str) -> Result<Option<T>, CliError> {
+        match self.get(flag) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError::InvalidValue(flag.into(), s.into())),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, flag: &str, default: T) -> Result<T, CliError> {
+        Ok(self.get_parse(flag)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VALS: &[&str] = &["seed", "nodes", "partition"];
+    const BOOLS: &[&str] = &["csv", "verbose"];
+
+    #[test]
+    fn parses_positionals_and_flags() {
+        let a = Args::parse(
+            &["bench", "fig4", "--seed", "7", "--csv"],
+            VALS,
+            BOOLS,
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["bench", "fig4"]);
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.has("csv"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&["--seed=42"], VALS, BOOLS).unwrap();
+        assert_eq!(a.get_or::<u64>("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let e = Args::parse(&["--bogus"], VALS, BOOLS).unwrap_err();
+        assert_eq!(e, CliError::UnknownFlag("bogus".into()));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let e = Args::parse(&["--seed"], VALS, BOOLS).unwrap_err();
+        assert_eq!(e, CliError::MissingValue("seed".into()));
+    }
+
+    #[test]
+    fn invalid_parse_surfaces_flag_name() {
+        let a = Args::parse(&["--seed", "abc"], VALS, BOOLS).unwrap();
+        let e = a.get_parse::<u64>("seed").unwrap_err();
+        assert!(matches!(e, CliError::InvalidValue(f, _) if f == "seed"));
+    }
+
+    #[test]
+    fn repeated_flag_keeps_all_last_wins() {
+        let a = Args::parse(&["--nodes", "1", "--nodes", "4"], VALS, BOOLS).unwrap();
+        assert_eq!(a.get("nodes"), Some("4"));
+        assert_eq!(a.get_all("nodes"), vec!["1", "4"]);
+    }
+
+    #[test]
+    fn default_when_absent() {
+        let a = Args::parse::<&str>(&[], VALS, BOOLS).unwrap();
+        assert_eq!(a.get_or::<u32>("nodes", 4).unwrap(), 4);
+    }
+}

@@ -1,0 +1,19 @@
+//! Shared utilities: deterministic PRNG, ASCII table rendering, unit
+//! formatting, summary statistics and a small CLI argument parser.
+//!
+//! These exist as first-class modules because the build is fully offline:
+//! `rand`, `clap` and `comfy-table` are not vendored in the image, so the
+//! repo ships its own substrates (which also keeps the simulator
+//! bit-reproducible across platforms).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;
+
+pub use rng::Xoshiro256;
+pub use stats::Summary;
+pub use table::Table;

@@ -1,0 +1,243 @@
+//! Deterministic PRNG: xoshiro256++ seeded via splitmix64.
+//!
+//! Every stochastic element of the simulator (benchmark noise, job
+//! inter-arrival jitter, ADC noise in the energy probes) draws from this
+//! generator so that a run is exactly reproducible from its seed — a
+//! requirement for the paper-shaped benches and for the property tests.
+
+/// xoshiro256++ 1.0 (Blackman & Vigna), public-domain reference algorithm.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Xoshiro256 {
+    /// Seed the generator; any seed (including 0) yields a good state.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s }
+    }
+
+    /// Derive an independent stream for a subsystem (`label` is hashed in).
+    pub fn fork(&mut self, label: &str) -> Self {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a
+        for b in label.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        Self::new(self.next_u64() ^ h)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) with full double precision
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive). Panics if lo > hi.
+    #[inline]
+    pub fn uniform_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "uniform_u64: lo > hi");
+        let span = hi - lo;
+        if span == u64::MAX {
+            return self.next_u64();
+        }
+        // Lemire's rejection-free-ish method with widening multiply.
+        let span1 = span + 1;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (span1 as u128);
+        let mut l = m as u64;
+        if l < span1 {
+            let t = span1.wrapping_neg() % span1;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (span1 as u128);
+                l = m as u64;
+            }
+        }
+        lo + (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n) — convenience for indexing. Panics if n == 0.
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        assert!(n > 0, "index: empty range");
+        self.uniform_u64(0, n as u64 - 1) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (deterministic, no cached spare).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/sigma.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sigma: f64) -> f64 {
+        mean + sigma * self.normal()
+    }
+
+    /// Fast approximate standard normal (Irwin–Hall CLT over three
+    /// uniforms: mean 0, variance 1, support ±3). Used on the energy
+    /// sample hot path where millions of draws per second matter and
+    /// tail exactness beyond 3σ does not.
+    #[inline]
+    pub fn normal_fast(&mut self) -> f64 {
+        let s = self.next_f64() + self.next_f64() + self.next_f64();
+        (s - 1.5) * 2.0
+    }
+
+    /// Exponential with the given rate (events per unit time).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        -self.next_f64().max(f64::MIN_POSITIVE).ln() / rate
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a reference to a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_same_seed() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256::new(1);
+        let mut b = Xoshiro256::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn zero_seed_not_degenerate() {
+        let mut r = Xoshiro256::new(0);
+        let xs: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
+        assert!(xs.iter().any(|&x| x != 0));
+        assert_eq!(xs.len(), 8);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_u64_bounds_inclusive() {
+        let mut r = Xoshiro256::new(9);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..20_000 {
+            let x = r.uniform_u64(3, 7);
+            assert!((3..=7).contains(&x));
+            seen_lo |= x == 3;
+            seen_hi |= x == 7;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn uniform_u64_single_point() {
+        let mut r = Xoshiro256::new(3);
+        assert_eq!(r.uniform_u64(5, 5), 5);
+    }
+
+    #[test]
+    fn normal_moments_roughly_right() {
+        let mut r = Xoshiro256::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut r = Xoshiro256::new(13);
+        let n = 50_000;
+        let rate = 4.0;
+        let mean = (0..n).map(|_| r.exponential(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(17);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Xoshiro256::new(21);
+        let mut a = root.fork("energy");
+        let mut b = root.fork("network");
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,201 @@
+//! Minimal ASCII table renderer used by every paper-shaped bench to print
+//! the rows/series of the tables and figures it regenerates.
+
+/// Column alignment.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table: header row + data rows, auto-sized columns.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    align: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            align: vec![Align::Right; header.len()],
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn title(mut self, t: impl Into<String>) -> Self {
+        self.title = Some(t.into());
+        self
+    }
+
+    /// Left-align the given column (labels); numeric columns stay right.
+    pub fn left(mut self, col: usize) -> Self {
+        if col < self.align.len() {
+            self.align[col] = Align::Left;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render to a string (also used by tests; `print` just wraps this).
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &width {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], align: &[Align]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = width[i] - c.chars().count();
+                match align[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(c);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(c);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.align));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Render as CSV (for piping bench output into plotting scripts).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .header
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Table::new(&["name", "value"]).left(0);
+        t.row_strs(&["alpha", "1"]);
+        t.row_strs(&["b", "22"]);
+        let s = t.render();
+        assert!(s.contains("| name  | value |"));
+        assert!(s.contains("| alpha |     1 |"));
+        assert!(s.contains("| b     |    22 |"));
+    }
+
+    #[test]
+    fn title_rendered_first() {
+        let t = Table::new(&["x"]).title("Fig. 4 (a)");
+        assert!(t.render().starts_with("Fig. 4 (a)\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(&["k", "v"]);
+        t.row_strs(&["with,comma", "with\"quote"]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "k,v\n\"with,comma\",\"with\"\"quote\"\n");
+    }
+
+    #[test]
+    fn unicode_width_by_chars() {
+        let mut t = Table::new(&["µs"]);
+        t.row_strs(&["35 µs"]);
+        let s = t.render();
+        // all lines in the box have equal display width (char count)
+        let lens: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+}

@@ -1,0 +1,150 @@
+//! Human-readable unit formatting for the paper-shaped bench tables:
+//! bytes, bytes/s, op/s, watts, joules, durations.
+
+/// Format a byte count with binary prefixes (KiB/MiB/GiB), matching the
+/// buffer-size axis of the paper's Fig. 4.
+pub fn bytes(n: u64) -> String {
+    const U: [(&str, u64); 4] = [
+        ("GiB", 1 << 30),
+        ("MiB", 1 << 20),
+        ("KiB", 1 << 10),
+        ("B", 1),
+    ];
+    for (suffix, factor) in U {
+        if n >= factor {
+            let v = n as f64 / factor as f64;
+            return if (v - v.round()).abs() < 1e-9 {
+                format!("{:.0} {suffix}", v)
+            } else {
+                format!("{:.1} {suffix}", v)
+            };
+        }
+    }
+    "0 B".to_string()
+}
+
+/// Format a rate with SI prefixes: 1.23 G<unit>, 45.6 M<unit>…
+pub fn si(v: f64, unit: &str) -> String {
+    let (v, p) = si_scale(v);
+    format!("{v:.2} {p}{unit}")
+}
+
+fn si_scale(v: f64) -> (f64, &'static str) {
+    let a = v.abs();
+    if a >= 1e12 {
+        (v / 1e12, "T")
+    } else if a >= 1e9 {
+        (v / 1e9, "G")
+    } else if a >= 1e6 {
+        (v / 1e6, "M")
+    } else if a >= 1e3 {
+        (v / 1e3, "k")
+    } else if a >= 1.0 || a == 0.0 {
+        (v, "")
+    } else if a >= 1e-3 {
+        (v * 1e3, "m")
+    } else if a >= 1e-6 {
+        (v * 1e6, "µ")
+    } else {
+        (v * 1e9, "n")
+    }
+}
+
+/// GB/s with decimal gigabytes, the unit of Fig. 4/6.
+pub fn gbps(bytes_per_sec: f64) -> String {
+    format!("{:.1} GB/s", bytes_per_sec / 1e9)
+}
+
+/// Gop/s, the unit of Fig. 5/7.
+pub fn gops(ops_per_sec: f64) -> String {
+    if ops_per_sec >= 1e12 {
+        format!("{:.2} Top/s", ops_per_sec / 1e12)
+    } else {
+        format!("{:.1} Gop/s", ops_per_sec / 1e9)
+    }
+}
+
+/// Watts with milliwatt resolution (the energy platform's resolution).
+pub fn watts(w: f64) -> String {
+    if w.abs() < 1.0 {
+        format!("{:.0} mW", w * 1e3)
+    } else {
+        format!("{w:.3} W")
+    }
+}
+
+/// Joules / watt-hours.
+pub fn joules(j: f64) -> String {
+    if j >= 3600.0 {
+        format!("{:.2} Wh", j / 3600.0)
+    } else {
+        format!("{j:.2} J")
+    }
+}
+
+/// Seconds pretty-printer (ns..h).
+pub fn secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.0}h{:02.0}m", (s / 3600.0).floor(), (s % 3600.0) / 60.0)
+    } else if s >= 60.0 {
+        format!("{:.0}m{:02.0}s", (s / 60.0).floor(), s % 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_prefixes() {
+        assert_eq!(bytes(0), "0 B");
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(1024), "1 KiB");
+        assert_eq!(bytes(1536), "1.5 KiB");
+        assert_eq!(bytes(1 << 20), "1 MiB");
+        assert_eq!(bytes(3 << 30), "3 GiB");
+    }
+
+    #[test]
+    fn si_ranges() {
+        assert_eq!(si(1.5e9, "op/s"), "1.50 Gop/s");
+        assert_eq!(si(2.5e-6, "s"), "2.50 µs");
+        assert_eq!(si(0.0, "x"), "0.00 x");
+    }
+
+    #[test]
+    fn gops_crossover_to_tops() {
+        assert_eq!(gops(5.0e9), "5.0 Gop/s");
+        assert_eq!(gops(5.4e12), "5.40 Top/s");
+    }
+
+    #[test]
+    fn watts_milliwatt_floor() {
+        assert_eq!(watts(0.005), "5 mW");
+        assert_eq!(watts(212.0), "212.000 W");
+    }
+
+    #[test]
+    fn secs_ladder() {
+        assert_eq!(secs(2.0 * 3600.0 + 120.0), "2h02m");
+        assert_eq!(secs(90.0), "1m30s");
+        assert_eq!(secs(1.5), "1.50 s");
+        assert_eq!(secs(2e-3), "2.00 ms");
+        assert_eq!(secs(35e-6), "35.00 µs");
+        assert_eq!(secs(5e-9), "5 ns");
+    }
+
+    #[test]
+    fn joules_to_wh() {
+        assert_eq!(joules(7200.0), "2.00 Wh");
+        assert_eq!(joules(10.0), "10.00 J");
+    }
+}

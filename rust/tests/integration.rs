@@ -1,0 +1,178 @@
+//! Integration tests over the composed stack: runtime + coordinator +
+//! scheduler + energy platform + services, including the PJRT artifact
+//! path (these hard-require `make artifacts`, unlike the lib tests).
+
+use dalek::config::ClusterConfig;
+use dalek::coordinator::{trace, Cluster};
+use dalek::net::{DhcpDns, FlowNet, Topology};
+use dalek::runtime::PjRtRuntime;
+use dalek::services::auth::UserDb;
+use dalek::services::nfs::NfsServer;
+use dalek::sim::SimTime;
+use dalek::slurm::{JobSpec, JobState, SlurmApi, Slurm};
+
+fn artifacts() -> &'static str {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    assert!(
+        std::path::Path::new(dir).join("manifest.json").exists(),
+        "integration tests require `make artifacts`"
+    );
+    dir
+}
+
+#[test]
+fn pjrt_round_trip_all_payloads() {
+    // every artifact in the manifest must compile and execute on the
+    // CPU PJRT client with finite output — the request-path contract
+    let mut rt = PjRtRuntime::load(artifacts()).expect("runtime");
+    let names: Vec<String> = rt.payload_names().iter().map(|s| s.to_string()).collect();
+    assert!(names.len() >= 7, "expected all payloads, got {names:?}");
+    for name in names {
+        let r = rt.execute(&name, 42).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert!(r.output_sum.is_finite(), "{name} non-finite");
+        assert!(r.wall_s > 0.0 && r.flops > 0);
+    }
+}
+
+#[test]
+fn pjrt_gemm_numerics_match_manifest_shape() {
+    let mut rt = PjRtRuntime::load(artifacts()).expect("runtime");
+    let r = rt.execute("gemm512", 7).expect("exec");
+    assert_eq!(r.output_elems, 512 * 512);
+    assert_eq!(r.flops, 2 * 512u64.pow(3));
+}
+
+#[test]
+fn full_stack_trace_with_payloads_and_sampling() {
+    // the E2E composition: payload jobs execute real XLA compute, the
+    // scheduler powers nodes, probes sample at 1 kSPS, and the measured
+    // energy agrees with the scheduler's exact integration
+    let mut cluster = Cluster::new(ClusterConfig::dalek_default(), Some(artifacts())).unwrap();
+    cluster.add_user("alice");
+    let mut ids = Vec::new();
+    for (i, payload) in ["gemm256", "cnn_small", "mlp_infer"].iter().enumerate() {
+        ids.push(
+            cluster
+                .submit_payload(
+                    "alice",
+                    ["az4-n4090", "iml-ia770", "az5-a890m"][i],
+                    2,
+                    payload,
+                    200_000,
+                    SimTime::from_secs(i as u64 * 30),
+                )
+                .expect("submit"),
+        );
+    }
+    cluster.run_until(SimTime::from_mins(30), true);
+    for id in ids {
+        let j = cluster.slurm.job(id).expect("job");
+        assert_eq!(j.state, JobState::Completed, "{id}: {:?}", j.state);
+    }
+    let r = cluster.report();
+    assert!(r.samples > 100_000);
+    let rel = (r.measured_energy_j - r.true_energy_j).abs() / r.true_energy_j;
+    assert!(rel < 0.01, "probe error {rel}");
+}
+
+#[test]
+fn srun_through_api_with_munge() {
+    let ctl = Slurm::from_config(&ClusterConfig::dalek_default());
+    let mut db = UserDb::new();
+    db.add_user("alice", false).unwrap();
+    let mut api = SlurmApi::new(ctl, b"integration-key");
+    let (_, state) = api
+        .srun(&db, JobSpec::cpu("alice", "az4-a7900", 4, 180), SimTime::ZERO)
+        .expect("srun");
+    assert_eq!(state, JobState::Completed);
+}
+
+#[test]
+fn nfs_over_simulated_network_respects_table3_rates() {
+    let topo = Topology::build(&ClusterConfig::dalek_default());
+    let mut net = FlowNet::new(&topo);
+    let mut nfs = NfsServer::dalek_default();
+    // a 5 GbE client (iml partition) must beat a 2.5 GbE client
+    let fast = topo.by_name("iml-ia770-0.dalek").unwrap();
+    let slow = topo.by_name("az4-n4090-0.dalek").unwrap();
+    let t_fast = nfs
+        .write(&topo, &mut net, fast, "/users/a/f", 4_000_000_000, "a")
+        .unwrap();
+    let t_slow = nfs
+        .write(&topo, &mut net, slow, "/users/a/g", 4_000_000_000, "a")
+        .unwrap();
+    let ratio = t_slow.as_secs_f64() / t_fast.as_secs_f64();
+    assert!((1.7..2.3).contains(&ratio), "5G vs 2.5G ratio {ratio}");
+}
+
+#[test]
+fn dhcp_covers_whole_topology_and_pxe_uses_it() {
+    let topo = Topology::build(&ClusterConfig::dalek_default());
+    let mut dhcp = DhcpDns::from_topology(&topo);
+    for h in topo.hosts() {
+        assert_eq!(dhcp.offer(h.mac).unwrap(), h.ip);
+        assert_eq!(dhcp.resolve(&h.name), Some(h.ip));
+    }
+}
+
+#[test]
+fn deterministic_replay_across_full_stack() {
+    let run = || {
+        let mut gen = trace::TraceGen::dalek_mix(0xFEED);
+        gen.payloads.clear();
+        let tr = gen.generate(60);
+        let mut c = Cluster::new(ClusterConfig::dalek_default(), None).unwrap();
+        let r = trace::replay(&mut c, &tr, false);
+        (r.completed, r.makespan, r.true_energy_j.to_bits())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn backfill_beats_fifo_on_makespan() {
+    // ablation: EASY backfill should not be slower than FIFO on a
+    // mixed trace, and usually wins
+    let mut gen = trace::TraceGen::dalek_mix(0xBF);
+    gen.payloads.clear();
+    let tr = gen.generate(80);
+    let run = |policy: &str| {
+        let mut cfg = ClusterConfig::dalek_default();
+        cfg.scheduler.policy = policy.into();
+        let mut c = Cluster::new(cfg, None).unwrap();
+        trace::replay(&mut c, &tr, false).makespan
+    };
+    let fifo = run("fifo");
+    let backfill = run("backfill");
+    assert!(
+        backfill <= fifo,
+        "backfill {backfill:?} slower than fifo {fifo:?}"
+    );
+}
+
+#[test]
+fn config_file_round_trip_drives_cluster() {
+    let cfg = ClusterConfig::from_toml(
+        r#"
+name = "mini"
+[[partition]]
+name = "az5-a890m"
+nodes = 2
+[power]
+suspend_after_mins = 1
+"#,
+    )
+    .unwrap();
+    let mut cluster = Cluster::new(cfg, None).unwrap();
+    let id = cluster
+        .submit(JobSpec::cpu("root", "az5-a890m", 2, 30), SimTime::ZERO)
+        .unwrap();
+    cluster.run_until(SimTime::from_mins(10), false);
+    assert_eq!(cluster.slurm.job(id).unwrap().state, JobState::Completed);
+    // 1-minute suspend policy: nodes back to suspended well within 10 min
+    for n in cluster.slurm.node_infos() {
+        assert!(matches!(
+            n.state,
+            dalek::power::PowerState::Suspended
+        ));
+    }
+}
