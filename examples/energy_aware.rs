@@ -47,7 +47,7 @@ fn run(enabled: bool) -> (trace::ReplayReport, f64, u32, u32) {
     // extend to the full 24 h day so overnight idling is accounted
     cluster.run_until(SimTime::from_hours(24), false);
     let day_energy = cluster.report().true_energy_j;
-    let infos = cluster.slurm.node_infos();
+    let infos = cluster.slurm().node_infos();
     let boots = infos.iter().map(|n| n.boots).sum();
     let suspends = infos.iter().map(|n| n.suspends).sum();
     (report, day_energy, boots, suspends)

@@ -12,9 +12,10 @@
 //!
 //! Run: `cargo run --release --example hetero_sched`
 
+use dalek::api::ClusterApi;
+use dalek::config::ClusterConfig;
 use dalek::hw::catalog::cpu_ultra9_185h;
 use dalek::hw::cpu::{CoreClass, Instr};
-use dalek::runtime::PjRtRuntime;
 use dalek::util::{units, Table};
 
 /// One pool of identical workers.
@@ -64,11 +65,14 @@ fn main() -> anyhow::Result<()> {
         std::path::Path::new(artifact_dir).join("manifest.json").exists(),
         "artifacts missing — run `make artifacts` first"
     );
-    // ground the task cost: one mlp_infer call, real PJRT execution
-    let mut rt = PjRtRuntime::load(artifact_dir)?;
-    let exec = rt.execute_best_of("mlp_infer", 3, 3)?;
+    // ground the task cost: one mlp_infer call, real PJRT execution —
+    // reached the way a user reaches it: log in, exec through the API
+    let mut cluster = ClusterApi::new(ClusterConfig::dalek_default(), Some(artifact_dir))?;
+    cluster.add_user("alice");
+    let sid = cluster.login("alice")?;
+    let exec = cluster.exec_payload(sid, "mlp_infer", 3, 3)?;
     println!(
-        "real PJRT run: mlp_infer = {} / call ({})",
+        "real PJRT run (session {sid}): mlp_infer = {} / call ({})",
         units::secs(exec.wall_s),
         units::si(exec.flops_per_sec, "FLOP/s")
     );

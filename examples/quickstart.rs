@@ -7,10 +7,17 @@
 //! throughput, waiting times, utilization, true vs probe-measured
 //! energy. This is experiment E2E of DESIGN.md.
 //!
+//! Everything goes through the session-based `dalek::api` surface: the
+//! replay drives `ClusterApi` (the coordinator's `Cluster` façade), and
+//! the tail of the example shows the same cluster queried as a user —
+//! login, sample retrieval, and a raw JSON protocol round trip.
+//!
 //! Run: `cargo run --release --example quickstart`
 
+use dalek::api::Request;
 use dalek::config::ClusterConfig;
 use dalek::coordinator::{trace, Cluster};
+use dalek::sim::SimTime;
 use dalek::slurm::JobState;
 use dalek::util::{units, Table};
 
@@ -30,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         units::secs(cfg.power.suspend_after.as_secs_f64()),
     );
     let mut cluster = Cluster::new(cfg, have_artifacts.then_some(artifact_dir))?;
-    if let Some(rt) = &cluster.runtime {
+    if let Some(rt) = cluster.runtime() {
         println!(
             "PJRT runtime up (platform = {}), payloads: {:?}",
             rt.platform(),
@@ -41,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut gen = trace::TraceGen::dalek_mix(0xDA1EC);
-    if cluster.runtime.is_none() {
+    if !cluster.has_runtime() {
         gen.payloads.clear();
     }
     let tr = gen.generate(200);
@@ -82,7 +89,7 @@ fn main() -> anyhow::Result<()> {
         .title("\nper-node accounting (first node of each partition)")
         .left(0)
         .left(1);
-    for info in cluster.slurm.node_infos().iter().filter(|n| n.name.ends_with("-0")) {
+    for info in cluster.slurm().node_infos().iter().filter(|n| n.name.ends_with("-0")) {
         nt.row(&[
             info.name.clone(),
             format!("{:?}", info.state),
@@ -94,11 +101,49 @@ fn main() -> anyhow::Result<()> {
     nt.print();
 
     let failed = cluster
-        .slurm
+        .slurm()
         .jobs()
         .filter(|j| !matches!(j.state, JobState::Completed | JobState::Timeout))
         .count();
     anyhow::ensure!(failed == 0, "{failed} jobs did not finish");
+
+    // -- the same cluster, queried as a user through the session API --
+    println!("\n== §4.3 user access: login once, query through the protocol ==");
+    cluster.add_user("alice");
+    let sid = cluster.login("alice")?;
+    println!("alice logged in: {sid}");
+    let now = cluster.now();
+    let (total, kept) = cluster.samples(
+        sid,
+        "az4-n4090-0",
+        0,
+        (now.since(SimTime::from_secs(2)), now),
+        100,
+    )?;
+    println!(
+        "last 2 s of az4-n4090-0 probe 0: {total} samples in window, {} after 100x decimation",
+        kept.len()
+    );
+    // and the raw JSON wire surface (what `dalek api` speaks):
+    let wire = Request::QueryEnergy {
+        node: None,
+        window: None,
+    }
+    .to_json(Some(sid))
+    .to_string();
+    println!("request:  {wire}");
+    let response = cluster.handle_json(&wire);
+    println!("response: {response}");
+    anyhow::ensure!(
+        response.contains("\"ok\":true"),
+        "authenticated wire request must succeed: {response}"
+    );
+    anyhow::ensure!(total > 0, "probe window must hold samples");
+
+    // an unauthenticated request must bounce
+    let denied = cluster.handle_json(r#"{"op": "cluster_report"}"#);
+    anyhow::ensure!(denied.contains("\"ok\":false"), "no session, no service");
+
     println!("\nquickstart OK");
     Ok(())
 }

@@ -1,0 +1,1088 @@
+//! `ClusterApi` — the single authenticated entry point to the cluster.
+//!
+//! Composes, per the paper, the SLURM controller with the §3.4 power
+//! policy, one §4 main board per compute node (probes sampling the
+//! scheduler's ground-truth power signal), the LDAP directory, and
+//! optionally the PJRT runtime — and fronts all of it with the session
+//! + protocol layer of this module:
+//!
+//! * a user logs in once ([`ClusterApi::login`]) and every subsequent
+//!   operation presents the [`SessionId`] capability;
+//! * every operation is reachable both as a typed method and as a
+//!   JSON [`Request`] through [`ClusterApi::handle`] /
+//!   [`ClusterApi::handle_json`];
+//! * `EnergyApi` and `SlurmApi` are crate-internal routing targets —
+//!   nothing outside `dalek::api` constructs them or threads raw
+//!   `(db, login)` credentials.
+//!
+//! The simulation-driver surface (`run_until`, `report`, `submit` as
+//! the operator console) stays on this type too, routed through a
+//! built-in root session, so trace replay and the benches drive the
+//! same stack users do.
+
+use std::collections::BTreeMap;
+
+use super::error::DalekError;
+use super::protocol::{JobRequest, JobView, Request, Response};
+use super::session::{Session, SessionId, SessionManager};
+use crate::config::ClusterConfig;
+use crate::energy::api::PowerAction;
+use crate::energy::{EnergyApi, MainBoard, ProbeConfig, Sample};
+use crate::power::Activity;
+use crate::runtime::{ExecReport, PjRtRuntime};
+use crate::services::auth::UserDb;
+use crate::sim::SimTime;
+use crate::slurm::{JobId, JobSpec, JobState, Slurm, SlurmApi};
+use crate::util::Xoshiro256;
+
+/// Cluster-level summary for reports.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub now: SimTime,
+    pub jobs_completed: u64,
+    pub jobs_pending: usize,
+    pub cluster_watts: f64,
+    pub true_energy_j: f64,
+    /// energy integrated from probe samples (should track true_energy)
+    pub measured_energy_j: f64,
+    pub samples: u64,
+}
+
+/// Assumed sustained fraction of a node's roofline for payload jobs.
+/// GEMM-class kernels on consumer CPUs sustain roughly a quarter of
+/// peak FMA throughput; documented in DESIGN.md §Perf.
+const CPU_EFFICIENCY: f64 = 0.25;
+const GPU_EFFICIENCY: f64 = 0.30;
+
+/// The shared cluster credential key (MUNGE `/etc/munge/munge.key`).
+const MUNGE_KEY: &[u8] = b"dalek-cluster-munge-key";
+
+/// Sliding session lifetime (renewed on every validated request).
+const SESSION_TTL: SimTime = SimTime(7 * 24 * 3600 * 1_000_000_000);
+
+/// How far one non-admin `run_job` may drive the shared sim clock.
+/// `srun` blocks until the job terminates, which in a discrete-event
+/// cluster means advancing time for everyone — the same capability the
+/// `advance` op restricts to admins. Jobs are therefore clamped to a
+/// 24 h time limit per non-admin call (longer jobs hit `Timeout`).
+const NON_ADMIN_SRUN_HORIZON: SimTime = SimTime(24 * 3600 * 1_000_000_000);
+
+pub struct ClusterApi {
+    pub cfg: ClusterConfig,
+    slurm: SlurmApi,
+    energy: EnergyApi,
+    users: UserDb,
+    sessions: SessionManager,
+    runtime: Option<PjRtRuntime>,
+    rng: Xoshiro256,
+    /// nodes with probes attached (board key = node name)
+    node_names: Vec<String>,
+    sampled_to: SimTime,
+    /// the operator-console session (root), auto-renewed
+    root: SessionId,
+}
+
+impl ClusterApi {
+    /// Build the full cluster; `artifact_dir = None` runs without the
+    /// PJRT runtime (synthetic workloads only).
+    pub fn new(cfg: ClusterConfig, artifact_dir: Option<&str>) -> anyhow::Result<Self> {
+        let ctl = Slurm::from_config(&cfg);
+        let mut rng = Xoshiro256::new(cfg.seed);
+        let mut energy = EnergyApi::new();
+        let mut node_names = Vec::new();
+        let probe_cfg = ProbeConfig {
+            adc_sps: cfg.energy.sample_rate_sps * 4,
+            ..ProbeConfig::default()
+        };
+        for pc in &cfg.partitions {
+            for n in 0..pc.nodes {
+                let name = format!("{}-{}", pc.name, n);
+                let mut board = MainBoard::new(name.clone());
+                for probe in 0..cfg.energy.probes_per_node {
+                    board
+                        .attach_probe(
+                            probe as u8,
+                            probe_cfg.clone(),
+                            rng.fork(&format!("{name}/p{probe}")),
+                            4096,
+                        )
+                        .expect("config bounds probes to 12");
+                }
+                energy.add_board(board);
+                node_names.push(name);
+            }
+        }
+        let mut users = UserDb::new();
+        users.add_user("root", true).expect("fresh db");
+        // token-derivation key = cluster key ‖ config seed, so tokens
+        // differ per cluster instance. The sim necessarily hardcodes
+        // the MUNGE key in source (a real deployment loads a secret
+        // /etc/munge/munge.key); per-instance mixing is the honest
+        // equivalent of that secrecy the simulation can offer while
+        // staying deterministic for replay.
+        let mut token_key = MUNGE_KEY.to_vec();
+        token_key.extend_from_slice(&cfg.seed.to_le_bytes());
+        let mut sessions = SessionManager::new(&token_key, SESSION_TTL);
+        let root = sessions
+            .login(&users, "root", SimTime::ZERO)
+            .expect("root just created")
+            .id;
+        let runtime = match artifact_dir {
+            Some(dir) => Some(PjRtRuntime::load(dir)?),
+            None => None,
+        };
+        Ok(Self {
+            cfg,
+            slurm: SlurmApi::new(ctl, MUNGE_KEY),
+            energy,
+            users,
+            sessions,
+            runtime,
+            rng,
+            node_names,
+            sampled_to: SimTime::ZERO,
+            root,
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // sessions
+    // -----------------------------------------------------------------
+
+    /// Authenticate and open a session at the current cluster time.
+    pub fn login(&mut self, user: &str) -> Result<SessionId, DalekError> {
+        let now = self.now();
+        Ok(self.sessions.login(&self.users, user, now)?.id)
+    }
+
+    /// Close a session; returns whether it existed.
+    pub fn logout(&mut self, id: SessionId) -> bool {
+        self.sessions.logout(id)
+    }
+
+    fn session(&mut self, id: SessionId, now: SimTime) -> Result<Session, DalekError> {
+        self.sessions.validate(id, now)
+    }
+
+    fn admin_session(&mut self, id: SessionId, now: SimTime) -> Result<Session, DalekError> {
+        let s = self.session(id, now)?;
+        if !s.admin {
+            return Err(DalekError::AdminOnly);
+        }
+        Ok(s)
+    }
+
+    /// The operator-console session, re-opened if it ever expired.
+    fn root_session(&mut self, now: SimTime) -> Session {
+        if let Ok(s) = self.sessions.validate(self.root, now) {
+            return s;
+        }
+        let sess = self
+            .sessions
+            .login(&self.users, "root", now)
+            .expect("root always exists");
+        self.root = sess.id;
+        sess
+    }
+
+    // -----------------------------------------------------------------
+    // directory (operator provisioning, outside the wire protocol —
+    // the protocol path is `Request::AddUser`, admin-gated)
+    // -----------------------------------------------------------------
+
+    /// Ensure a (non-admin) account exists; idempotent.
+    pub fn add_user(&mut self, login: &str) {
+        let _ = self.users.add_user(login, false);
+    }
+
+    /// Admin-gated account creation (the `add_user` protocol op).
+    pub fn add_user_as(
+        &mut self,
+        sid: SessionId,
+        login: &str,
+        admin: bool,
+    ) -> Result<(), DalekError> {
+        let now = self.now();
+        self.admin_session(sid, now)?;
+        self.users.add_user(login, admin)?;
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // accessors
+    // -----------------------------------------------------------------
+
+    pub fn now(&self) -> SimTime {
+        self.slurm.ctl.now()
+    }
+
+    /// Read-only view of the controller (reports, node tables, tests).
+    pub fn slurm(&self) -> &Slurm {
+        &self.slurm.ctl
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    pub fn runtime(&self) -> Option<&PjRtRuntime> {
+        self.runtime.as_ref()
+    }
+
+    /// Deterministic sub-RNG for workload generators.
+    pub fn fork_rng(&mut self, label: &str) -> Xoshiro256 {
+        self.rng.fork(label)
+    }
+
+    // -----------------------------------------------------------------
+    // job control (sessions)
+    // -----------------------------------------------------------------
+
+    fn owner_for(&self, sess: &Session, requested: &Option<String>) -> Result<String, DalekError> {
+        match requested {
+            Some(u) if *u != sess.login => {
+                if !sess.admin {
+                    return Err(DalekError::AdminOnly);
+                }
+                self.users.user(u)?; // must exist
+                Ok(u.clone())
+            }
+            _ => Ok(sess.login.clone()),
+        }
+    }
+
+    fn spec_from_request(
+        &mut self,
+        owner: &str,
+        req: &JobRequest,
+    ) -> Result<JobSpec, DalekError> {
+        if req.nodes == 0 {
+            return Err(DalekError::BadRequest("`nodes` must be at least 1".into()));
+        }
+        match &req.payload {
+            Some(payload) => {
+                // duration comes from the payload grounding, but an
+                // explicit client time limit is still honored
+                let mut spec =
+                    self.payload_spec(owner, &req.partition, req.nodes, payload, req.iters)?;
+                if let Some(tl) = req.time_limit {
+                    spec.time_limit = tl;
+                }
+                Ok(spec)
+            }
+            None => Ok(JobSpec {
+                user: owner.into(),
+                partition: req.partition.clone(),
+                nodes: req.nodes,
+                duration: req.duration,
+                time_limit: req.time_limit.unwrap_or(SimTime(
+                    req.duration
+                        .as_ns()
+                        .saturating_mul(4)
+                        .saturating_add(60_000_000_000),
+                )),
+                payload: None,
+                activity: Activity::cpu_only(0.95),
+            }),
+        }
+    }
+
+    /// Build a payload-backed spec: execute the AOT artifact once for
+    /// real (grounding + checksum), then size `iters` iterations on the
+    /// target partition's roofline.
+    fn payload_spec(
+        &mut self,
+        owner: &str,
+        partition: &str,
+        nodes: u32,
+        payload: &str,
+        iters: u64,
+    ) -> Result<JobSpec, DalekError> {
+        let rt = self.runtime.as_mut().ok_or(DalekError::NoRuntime)?;
+        let report = rt
+            .execute(payload, self.cfg.seed ^ iters)
+            .map_err(|e| DalekError::Runtime(format!("{e:#}")))?;
+        if !report.output_sum.is_finite() {
+            return Err(DalekError::Runtime(format!(
+                "payload `{payload}` produced non-finite output"
+            )));
+        }
+        let spec_part = crate::config::cluster::resolve_partition(partition).ok_or_else(|| {
+            DalekError::Slurm(crate::slurm::scheduler::SlurmError::UnknownPartition(
+                partition.into(),
+            ))
+        })?;
+        // GPU-heavy payloads run on the dGPU where one exists
+        let on_gpu = spec_part.node.dgpu.is_some()
+            && (payload.starts_with("gemm") || payload.starts_with("cnn"));
+        let (roofline, eff, activity) = if on_gpu {
+            (
+                spec_part.node.dgpu.as_ref().expect("checked").peak_f32(),
+                GPU_EFFICIENCY,
+                Activity {
+                    cpu: 0.3,
+                    dgpu: 0.95,
+                    igpu: 0.0,
+                },
+            )
+        } else {
+            (
+                spec_part
+                    .node
+                    .cpu
+                    .peak_ops_accumulated(crate::hw::cpu::Instr::FmaF32),
+                CPU_EFFICIENCY,
+                Activity::cpu_only(0.95),
+            )
+        };
+        let total_flops = report.flops as f64 * iters as f64;
+        let per_node = total_flops / nodes as f64;
+        let secs = per_node / (roofline * eff);
+        let duration = SimTime::from_secs_f64(secs.max(1e-3));
+        Ok(JobSpec {
+            user: owner.into(),
+            partition: partition.into(),
+            nodes,
+            duration,
+            time_limit: duration + SimTime::from_mins(10),
+            payload: Some(payload.into()),
+            activity,
+        })
+    }
+
+    /// sbatch for an already-validated session (single validation per
+    /// request; the MUNGE per-RPC round-trip still happens in sbatch).
+    fn submit_as(
+        &mut self,
+        sess: &Session,
+        spec: JobSpec,
+        now: SimTime,
+    ) -> Result<JobId, DalekError> {
+        if spec.user != sess.login && !sess.admin {
+            return Err(DalekError::AdminOnly);
+        }
+        self.users.user(&spec.user)?; // owner must exist
+        Ok(self.slurm.sbatch(sess.uid, spec, now)?)
+    }
+
+    fn request_as(
+        &mut self,
+        sess: &Session,
+        req: &JobRequest,
+        now: SimTime,
+    ) -> Result<JobId, DalekError> {
+        let owner = self.owner_for(sess, &req.user)?;
+        let spec = self.spec_from_request(&owner, req)?;
+        Ok(self.slurm.sbatch(sess.uid, spec, now)?)
+    }
+
+    /// sbatch through a session: queue and return the job id. The spec's
+    /// owner must be the session user unless the session is an admin's.
+    pub fn submit_spec(
+        &mut self,
+        sid: SessionId,
+        spec: JobSpec,
+        now: SimTime,
+    ) -> Result<JobId, DalekError> {
+        let sess = self.session(sid, now)?;
+        self.submit_as(&sess, spec, now)
+    }
+
+    /// The `submit_job` protocol op.
+    pub fn submit_request(
+        &mut self,
+        sid: SessionId,
+        req: &JobRequest,
+        now: SimTime,
+    ) -> Result<JobId, DalekError> {
+        let sess = self.session(sid, now)?;
+        self.request_as(&sess, req, now)
+    }
+
+    /// The `run_job` protocol op (srun): submit and block — drive the
+    /// simulation — until the job reaches a terminal state.
+    pub fn run_request(
+        &mut self,
+        sid: SessionId,
+        req: &JobRequest,
+        now: SimTime,
+    ) -> Result<(JobId, JobState), DalekError> {
+        let sess = self.session(sid, now)?;
+        let owner = self.owner_for(&sess, &req.user)?;
+        let mut spec = self.spec_from_request(&owner, req)?;
+        // srun drives the shared sim clock; bound both the job's own
+        // runtime and the total advance (queue wait included) for
+        // non-admins — the unbounded version is the admin `advance` op
+        let deadline = if sess.admin {
+            None
+        } else {
+            spec.time_limit = spec.time_limit.min(NON_ADMIN_SRUN_HORIZON);
+            Some(now.max(self.now()) + NON_ADMIN_SRUN_HORIZON)
+        };
+        match self.slurm.srun(sess.uid, spec, now, deadline) {
+            Ok(r) => Ok(r),
+            // deadline hit: don't leave an unreferencable orphan queued
+            // under the user's name (a job already Running holds real
+            // resources and finishes within the clamped limit)
+            Err(crate::slurm::api::ApiError::Deadline(id)) => {
+                let _ = self.slurm.ctl.cancel(id);
+                Err(DalekError::Deadline(id))
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// The `alloc_nodes` protocol op (salloc): reserve nodes and open
+    /// the SSH gate; returns the allocated node names.
+    pub fn alloc_request(
+        &mut self,
+        sid: SessionId,
+        req: &JobRequest,
+        now: SimTime,
+    ) -> Result<(JobId, Vec<String>), DalekError> {
+        let sess = self.session(sid, now)?;
+        let owner = self.owner_for(&sess, &req.user)?;
+        let spec = self.spec_from_request(&owner, req)?;
+        let id = self.slurm.salloc(sess.uid, spec, now)?;
+        let job = self.slurm.ctl.job(id).expect("just submitted");
+        // salloc returns Ok even when the boot budget elapsed with the
+        // job still queued — that is a failed allocation on this
+        // surface. A job that already ran to termination during the
+        // wait loop DID hold its allocation, so only never-allocated
+        // states are failures.
+        if matches!(job.state, JobState::Pending | JobState::Cancelled) {
+            let _ = self.slurm.ctl.cancel(id); // don't leave it queued
+            return Err(DalekError::Incomplete);
+        }
+        let infos = self.slurm.ctl.node_infos();
+        let nodes = job
+            .allocated
+            .iter()
+            .map(|&i| infos[i].name.clone())
+            .collect();
+        Ok((id, nodes))
+    }
+
+    /// squeue-style job lookup (any authenticated user).
+    pub fn job_info(&mut self, sid: SessionId, id: JobId) -> Result<JobView, DalekError> {
+        let now = self.now();
+        self.session(sid, now)?;
+        let job = self.slurm.ctl.job(id).ok_or(DalekError::UnknownJob(id))?;
+        Ok(JobView {
+            job: job.id,
+            user: job.spec.user.clone(),
+            partition: job.spec.partition.clone(),
+            state: job.state,
+            nodes: job.spec.nodes,
+            submitted: job.submitted,
+            started: job.started,
+            finished: job.finished,
+        })
+    }
+
+    /// scancel: the owner or an admin may cancel.
+    pub fn cancel(&mut self, sid: SessionId, id: JobId) -> Result<(), DalekError> {
+        let now = self.now();
+        let sess = self.session(sid, now)?;
+        let owner = self
+            .slurm
+            .ctl
+            .job(id)
+            .ok_or(DalekError::UnknownJob(id))?
+            .spec
+            .user
+            .clone();
+        if owner != sess.login && !sess.admin {
+            return Err(DalekError::AdminOnly);
+        }
+        Ok(self.slurm.ctl.cancel(id)?)
+    }
+
+    // -----------------------------------------------------------------
+    // energy platform (§4.3, sessions)
+    // -----------------------------------------------------------------
+
+    /// Retrieve measured samples — all users. `decimate = n` keeps every
+    /// n-th sample; returns `(total_in_window, kept)`.
+    pub fn samples(
+        &mut self,
+        sid: SessionId,
+        node: &str,
+        probe: u8,
+        window: (SimTime, SimTime),
+        decimate: u32,
+    ) -> Result<(u64, Vec<Sample>), DalekError> {
+        let now = self.now();
+        self.session(sid, now)?;
+        let all = self.energy.samples(node, probe, window)?;
+        let total = all.len() as u64;
+        let step = decimate.max(1) as usize;
+        Ok((total, all.into_iter().step_by(step).collect()))
+    }
+
+    /// Tag samples via the GPIO inputs — all users.
+    pub fn set_tag(
+        &mut self,
+        sid: SessionId,
+        node: &str,
+        line: u8,
+        high: bool,
+    ) -> Result<(), DalekError> {
+        let now = self.now();
+        self.session(sid, now)?;
+        Ok(self.energy.set_gpio_tag(node, line, high)?)
+    }
+
+    /// Manual node power control — administrators only.
+    pub fn power(&mut self, sid: SessionId, node: &str, on: bool) -> Result<(), DalekError> {
+        let now = self.now();
+        self.admin_session(sid, now)?;
+        self.energy.board(node)?; // must name a real board
+        let action = if on {
+            PowerAction::On(node.into())
+        } else {
+            PowerAction::Off(node.into())
+        };
+        self.energy.queue_power(action);
+        Ok(())
+    }
+
+    /// Measured energy: whole cluster, one node, or one node windowed.
+    pub fn query_energy(
+        &mut self,
+        sid: SessionId,
+        node: Option<&str>,
+        window: Option<(SimTime, SimTime)>,
+    ) -> Result<f64, DalekError> {
+        let now = self.now();
+        self.session(sid, now)?;
+        let nprobes = self.cfg.energy.probes_per_node as u8;
+        let windowed = |board: &MainBoard, (a, b)| -> Result<f64, DalekError> {
+            let mut j = 0.0;
+            for p in 0..nprobes {
+                j += board.store(p)?.window_energy_j(a, b);
+            }
+            Ok(j)
+        };
+        match (node, window) {
+            (None, None) => Ok(self.energy.total_energy_j()),
+            (None, Some(w)) => {
+                let mut j = 0.0;
+                for board in self.energy.boards() {
+                    j += windowed(board, w)?;
+                }
+                Ok(j)
+            }
+            (Some(n), None) => Ok(self.energy.board(n)?.total_energy_j()),
+            (Some(n), Some(w)) => windowed(self.energy.board(n)?, w),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // runtime (sessions)
+    // -----------------------------------------------------------------
+
+    /// Execute an AOT payload on the PJRT runtime (best of `iters`).
+    pub fn exec_payload(
+        &mut self,
+        sid: SessionId,
+        payload: &str,
+        seed: u64,
+        iters: u32,
+    ) -> Result<ExecReport, DalekError> {
+        let now = self.now();
+        self.session(sid, now)?;
+        let rt = self.runtime.as_mut().ok_or(DalekError::NoRuntime)?;
+        rt.execute_best_of(payload, seed, iters.max(1))
+            .map_err(|e| DalekError::Runtime(format!("{e:#}")))
+    }
+
+    // -----------------------------------------------------------------
+    // operator console — the same stack, driven through the built-in
+    // root session (trace replay, benches, the CLI `run` command)
+    // -----------------------------------------------------------------
+
+    /// Submit a synthetic job as the operator, on behalf of `spec.user`
+    /// (the account is provisioned if missing — site-admin style).
+    pub fn submit(&mut self, spec: JobSpec, now: SimTime) -> Result<JobId, DalekError> {
+        self.add_user(&spec.user);
+        let root = self.root_session(now);
+        self.submit_as(&root, spec, now)
+    }
+
+    /// Submit a payload-backed job as the operator: executes the AOT
+    /// artifact once for real, then simulates `iters` iterations on the
+    /// target partition's hardware.
+    pub fn submit_payload(
+        &mut self,
+        user: &str,
+        partition: &str,
+        nodes: u32,
+        payload: &str,
+        iters: u64,
+        now: SimTime,
+    ) -> Result<JobId, DalekError> {
+        self.add_user(user);
+        let root = self.root_session(now);
+        let req = JobRequest {
+            partition: partition.into(),
+            nodes,
+            duration: SimTime::ZERO, // sized from the payload grounding
+            time_limit: None,
+            payload: Some(payload.into()),
+            iters,
+            user: Some(user.into()),
+        };
+        self.request_as(&root, &req, now)
+    }
+
+    /// Advance the whole cluster to `t`. When `sample` is set, the §4
+    /// boards sample every node's (piecewise-constant) power signal at
+    /// the configured rate, replayed exactly from the scheduler's power
+    /// history — sampling therefore never misses energy, regardless of
+    /// how the scheduler clock advanced (submissions, run_until calls).
+    pub fn run_until(&mut self, t: SimTime, sample: bool) {
+        self.slurm.ctl.run_until(t);
+        if !sample {
+            return;
+        }
+        let from = self.sampled_to;
+        if t <= from {
+            return; // never resample a covered window
+        }
+        for name in &self.node_names {
+            let hist = self.slurm.ctl.node_history(name).expect("known node");
+            let board = match self.energy.board_mut(name) {
+                Ok(b) => b,
+                Err(_) => continue,
+            };
+            let nprobes = self.cfg.energy.probes_per_node as u8;
+            // walk the change points covering (from, t]
+            for (i, &(start, w)) in hist.iter().enumerate() {
+                let seg_end = hist.get(i + 1).map(|(s, _)| *s).unwrap_or(t).min(t);
+                if seg_end <= from || start >= t {
+                    continue;
+                }
+                let sigs: BTreeMap<u8, _> =
+                    (0..nprobes).map(|p| (p, move |_t: SimTime| w)).collect();
+                board.poll(seg_end, &sigs);
+            }
+        }
+        // §4.3 admin power actions queued via the energy API
+        for action in self.energy.drain_actions() {
+            let _ = action; // manual power control is reported, not forced
+        }
+        self.sampled_to = t;
+        self.slurm.ctl.gc_history(t);
+    }
+
+    /// Current summary.
+    pub fn report(&self) -> ClusterReport {
+        let samples = self
+            .energy
+            .boards()
+            .map(|b| {
+                (0..self.cfg.energy.probes_per_node as u8)
+                    .filter_map(|p| b.store(p).ok())
+                    .map(|s| s.total_samples())
+                    .sum::<u64>()
+            })
+            .sum();
+        ClusterReport {
+            now: self.slurm.ctl.now(),
+            jobs_completed: self.slurm.ctl.stats.completed,
+            jobs_pending: self.slurm.ctl.pending_count(),
+            cluster_watts: self.slurm.ctl.cluster_watts(),
+            true_energy_j: self.slurm.ctl.total_energy_j(),
+            measured_energy_j: self.energy.total_energy_j(),
+            samples,
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // the protocol dispatcher
+    // -----------------------------------------------------------------
+
+    /// Execute one typed request. `Login` needs no session; everything
+    /// else requires a valid token.
+    pub fn handle(
+        &mut self,
+        sid: Option<SessionId>,
+        req: &Request,
+    ) -> Result<Response, DalekError> {
+        let now = self.now();
+        if let Request::Login { user } = req {
+            let sess = self.sessions.login(&self.users, user, now)?;
+            return Ok(Response::Session {
+                id: sess.id,
+                user: sess.login,
+                admin: sess.admin,
+            });
+        }
+        let sid = sid.ok_or(DalekError::InvalidSession)?;
+        match req {
+            Request::Login { .. } => unreachable!("handled above"),
+            Request::Logout => {
+                if self.logout(sid) {
+                    Ok(Response::LoggedOut)
+                } else {
+                    Err(DalekError::InvalidSession)
+                }
+            }
+            Request::AddUser { user, admin } => {
+                self.add_user_as(sid, user, *admin)?;
+                Ok(Response::UserAdded { user: user.clone() })
+            }
+            Request::SubmitJob(r) => {
+                let job = self.submit_request(sid, r, now)?;
+                Ok(Response::Submitted { job })
+            }
+            Request::RunJob(r) => {
+                let (job, state) = self.run_request(sid, r, now)?;
+                Ok(Response::JobRan { job, state })
+            }
+            Request::AllocNodes(r) => {
+                let (job, nodes) = self.alloc_request(sid, r, now)?;
+                Ok(Response::Allocated { job, nodes })
+            }
+            Request::JobInfo { job } => Ok(Response::Job(self.job_info(sid, *job)?)),
+            Request::CancelJob { job } => {
+                self.cancel(sid, *job)?;
+                Ok(Response::Cancelled { job: *job })
+            }
+            Request::QuerySamples {
+                node,
+                probe,
+                from,
+                to,
+                decimate,
+            } => {
+                let (total, samples) =
+                    self.samples(sid, node, *probe, (*from, *to), *decimate)?;
+                Ok(Response::Samples {
+                    node: node.clone(),
+                    probe: *probe,
+                    total,
+                    samples,
+                })
+            }
+            Request::QueryEnergy { node, window } => {
+                let joules = self.query_energy(sid, node.as_deref(), *window)?;
+                Ok(Response::Energy { joules })
+            }
+            Request::SetTag { node, line, high } => {
+                self.set_tag(sid, node, *line, *high)?;
+                Ok(Response::TagSet {
+                    node: node.clone(),
+                    line: *line,
+                    high: *high,
+                })
+            }
+            Request::Power { node, on } => {
+                self.power(sid, node, *on)?;
+                Ok(Response::PowerQueued {
+                    node: node.clone(),
+                    on: *on,
+                })
+            }
+            Request::ClusterReport => {
+                self.session(sid, now)?;
+                let r = self.report();
+                Ok(Response::Report {
+                    now: r.now,
+                    jobs_completed: r.jobs_completed,
+                    jobs_pending: r.jobs_pending,
+                    cluster_watts: r.cluster_watts,
+                    true_energy_j: r.true_energy_j,
+                    measured_energy_j: r.measured_energy_j,
+                    samples: r.samples,
+                })
+            }
+            Request::Advance { to, sample } => {
+                self.admin_session(sid, now)?;
+                self.run_until(*to, *sample);
+                Ok(Response::Advanced { now: self.now() })
+            }
+            Request::ExecPayload {
+                payload,
+                iters,
+                seed,
+            } => {
+                let r = self.exec_payload(sid, payload, *seed, *iters)?;
+                Ok(Response::Executed {
+                    payload: r.payload,
+                    wall_s: r.wall_s,
+                    flops: r.flops,
+                    flops_per_sec: r.flops_per_sec,
+                    output_sum: r.output_sum,
+                })
+            }
+        }
+    }
+
+    /// Execute one JSON envelope and encode the reply — the scriptable
+    /// wire surface (`dalek api request.json`). Never panics on bad
+    /// input: malformed requests and execution failures both come back
+    /// as `{"ok": false, "error": ...}`.
+    pub fn handle_json(&mut self, src: &str) -> String {
+        let resp = match Request::parse(src) {
+            Ok((sid, req)) => match self.handle(sid, &req) {
+                Ok(r) => r,
+                Err(e) => Response::from_error(&e),
+            },
+            Err(e) => Response::from_error(&e),
+        };
+        resp.to_json().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::JobState;
+
+    fn cluster() -> ClusterApi {
+        ClusterApi::new(ClusterConfig::dalek_default(), None).unwrap()
+    }
+
+    fn artifacts_dir() -> Option<&'static str> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir)
+            .join("manifest.json")
+            .exists()
+            .then_some(dir)
+    }
+
+    #[test]
+    fn builds_16_boards() {
+        let c = cluster();
+        assert_eq!(c.energy.boards().count(), 16);
+        assert_eq!(c.node_names.len(), 16);
+    }
+
+    #[test]
+    fn measured_energy_tracks_truth() {
+        let mut c = cluster();
+        c.submit(JobSpec::cpu("root", "az5-a890m", 2, 120), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_mins(8), true);
+        let r = c.report();
+        assert!(r.samples > 0);
+        assert!(r.true_energy_j > 0.0);
+        // probes quantize to mW and add noise; agreement within 1%
+        let rel = (r.measured_energy_j - r.true_energy_j).abs() / r.true_energy_j;
+        assert!(rel < 0.01, "rel error {rel}: {r:?}");
+    }
+
+    #[test]
+    fn sampling_rate_is_configured_1000_sps() {
+        let mut c = cluster();
+        c.run_until(SimTime::from_secs(10), true);
+        let r = c.report();
+        // 16 nodes x 1 probe x 1000 SPS x 10 s
+        let expect = 16.0 * 1000.0 * 10.0;
+        let got = r.samples as f64;
+        assert!((got - expect).abs() / expect < 0.01, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn unsampled_run_is_cheap_and_equivalent_in_truth() {
+        let mut a = cluster();
+        let mut b = cluster();
+        a.submit(JobSpec::cpu("root", "az4-n4090", 4, 300), SimTime::ZERO)
+            .unwrap();
+        b.submit(JobSpec::cpu("root", "az4-n4090", 4, 300), SimTime::ZERO)
+            .unwrap();
+        a.run_until(SimTime::from_mins(30), false);
+        b.run_until(SimTime::from_mins(30), true);
+        let (ra, rb) = (a.report(), b.report());
+        assert_eq!(ra.jobs_completed, rb.jobs_completed);
+        assert!((ra.true_energy_j - rb.true_energy_j).abs() < 1e-6);
+        assert_eq!(ra.samples, 0);
+    }
+
+    #[test]
+    fn payload_job_runs_real_artifact_then_simulates() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut c = ClusterApi::new(ClusterConfig::dalek_default(), Some(dir)).unwrap();
+        c.add_user("alice");
+        let id = c
+            .submit_payload("alice", "az4-n4090", 2, "gemm256", 50_000, SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_hours(2), false);
+        let job = c.slurm().job(id).unwrap();
+        assert_eq!(job.state, JobState::Completed, "{:?}", job.state);
+        assert_eq!(job.spec.payload.as_deref(), Some("gemm256"));
+        // GPU-backed duration: 50k x 33.5 MFLOP / 2 nodes on 4090s
+        // (≈0.84 TFLOP/node over a ~25 TFLOP/s effective roofline)
+        let d = job.spec.duration.as_secs_f64();
+        assert!(d > 0.01 && d < 600.0, "duration {d}");
+        // sanity: the same payload on the CPU-only partition is slower
+        let id2 = c
+            .submit_payload("alice", "az5-a890m", 2, "gemm256", 50_000, c.now())
+            .unwrap();
+        c.run_until(c.now() + SimTime::from_hours(4), false);
+        let d2 = c.slurm().job(id2).unwrap().spec.duration.as_secs_f64();
+        assert!(d2 > 5.0 * d, "CPU {d2} vs GPU {d}");
+    }
+
+    #[test]
+    fn payload_requires_runtime() {
+        let mut c = cluster();
+        assert!(matches!(
+            c.submit_payload("root", "az4-n4090", 1, "gemm256", 1, SimTime::ZERO),
+            Err(DalekError::NoRuntime)
+        ));
+    }
+
+    // ---- session semantics over the composed stack ----
+
+    #[test]
+    fn login_session_submit_flow() {
+        let mut c = cluster();
+        c.add_user("alice");
+        let sid = c.login("alice").unwrap();
+        let req = JobRequest {
+            partition: "az5-a890m".into(),
+            nodes: 1,
+            duration: SimTime::from_secs(60),
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: None,
+        };
+        let id = c.submit_request(sid, &req, SimTime::ZERO).unwrap();
+        c.run_until(SimTime::from_mins(10), false);
+        let v = c.job_info(sid, id).unwrap();
+        assert_eq!(v.user, "alice");
+        assert_eq!(v.state, JobState::Completed);
+    }
+
+    #[test]
+    fn unknown_user_cannot_login() {
+        let mut c = cluster();
+        assert!(matches!(c.login("mallory"), Err(DalekError::Auth(_))));
+    }
+
+    #[test]
+    fn non_admin_cannot_submit_on_behalf_nor_power() {
+        let mut c = cluster();
+        c.add_user("alice");
+        c.add_user("bob");
+        let sid = c.login("alice").unwrap();
+        let mut req = JobRequest {
+            partition: "az5-a890m".into(),
+            nodes: 1,
+            duration: SimTime::from_secs(30),
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: Some("bob".into()),
+        };
+        assert!(matches!(
+            c.submit_request(sid, &req, SimTime::ZERO),
+            Err(DalekError::AdminOnly)
+        ));
+        req.user = None;
+        assert!(c.submit_request(sid, &req, SimTime::ZERO).is_ok());
+        assert!(matches!(
+            c.power(sid, "az5-a890m-0", false),
+            Err(DalekError::AdminOnly)
+        ));
+    }
+
+    #[test]
+    fn admin_powers_and_advances() {
+        let mut c = cluster();
+        let sid = c.login("root").unwrap();
+        c.power(sid, "az5-a890m-0", false).unwrap();
+        assert!(matches!(
+            c.power(sid, "no-such-node", true),
+            Err(DalekError::NoBoard(_))
+        ));
+        let r = c
+            .handle(
+                Some(sid),
+                &Request::Advance {
+                    to: SimTime::from_secs(30),
+                    sample: true,
+                },
+            )
+            .unwrap();
+        assert!(matches!(r, Response::Advanced { now } if now >= SimTime::from_secs(30)));
+    }
+
+    #[test]
+    fn samples_and_energy_through_session() {
+        let mut c = cluster();
+        c.submit(JobSpec::cpu("root", "az5-a890m", 2, 120), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_secs(30), true);
+        let sid = c.login("root").unwrap();
+        let (total, kept) = c
+            .samples(
+                sid,
+                "az5-a890m-0",
+                0,
+                (SimTime::ZERO, SimTime::from_secs(30)),
+                10,
+            )
+            .unwrap();
+        assert!(total > 0);
+        assert!(kept.len() <= total as usize / 10 + 1);
+        let j = c.query_energy(sid, None, None).unwrap();
+        assert!(j > 0.0);
+        let jn = c
+            .query_energy(sid, Some("az5-a890m-0"), None)
+            .unwrap();
+        assert!(jn > 0.0 && jn <= j);
+    }
+
+    #[test]
+    fn cancel_requires_owner_or_admin() {
+        let mut c = cluster();
+        c.add_user("alice");
+        c.add_user("eve");
+        let alice = c.login("alice").unwrap();
+        let eve = c.login("eve").unwrap();
+        let blocker = JobRequest {
+            partition: "az4-n4090".into(),
+            nodes: 4,
+            duration: SimTime::from_secs(3600),
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: None,
+        };
+        c.submit_request(alice, &blocker, SimTime::ZERO).unwrap();
+        // the partition is fully reserved, so this one stays Pending
+        let req = JobRequest {
+            nodes: 1,
+            duration: SimTime::from_secs(600),
+            ..blocker
+        };
+        let id = c.submit_request(alice, &req, SimTime::ZERO).unwrap();
+        assert_eq!(c.job_info(alice, id).unwrap().state, JobState::Pending);
+        assert!(matches!(
+            c.cancel(eve, id),
+            Err(DalekError::AdminOnly)
+        ));
+        c.cancel(alice, id).unwrap();
+        assert_eq!(c.job_info(alice, id).unwrap().state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn logout_revokes_capability() {
+        let mut c = cluster();
+        let sid = c.login("root").unwrap();
+        assert!(c.logout(sid));
+        assert!(matches!(
+            c.handle(Some(sid), &Request::ClusterReport),
+            Err(DalekError::InvalidSession)
+        ));
+        assert!(matches!(
+            c.handle(None, &Request::ClusterReport),
+            Err(DalekError::InvalidSession)
+        ));
+    }
+}

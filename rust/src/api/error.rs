@@ -1,0 +1,94 @@
+//! The unified error type of the `dalek::api` protocol layer.
+//!
+//! Every subsystem error converts into [`DalekError`], so a protocol
+//! handler (and the wire codec) deal with exactly one failure surface.
+//! Crate-internal routing-target errors (`slurm::api::ApiError`,
+//! `energy::api::ApiError`) are flattened rather than wrapped, keeping
+//! the public interface free of `pub(crate)` types.
+
+use crate::energy::board::BoardError;
+use crate::services::auth::AuthError;
+use crate::slurm::scheduler::SlurmError;
+use crate::slurm::JobId;
+use crate::util::json::JsonError;
+
+/// Everything that can go wrong behind the [`super::ClusterApi`].
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DalekError {
+    #[error(transparent)]
+    Auth(#[from] AuthError),
+    #[error("invalid or expired session")]
+    InvalidSession,
+    #[error("restricted to administrators")]
+    AdminOnly,
+    #[error(transparent)]
+    Slurm(#[from] SlurmError),
+    #[error(transparent)]
+    Board(#[from] BoardError),
+    #[error("no energy board for node `{0}`")]
+    NoBoard(String),
+    #[error("unknown job {0}")]
+    UnknownJob(JobId),
+    #[error("job did not reach a terminal state")]
+    Incomplete,
+    #[error("deadline reached before {0} finished; pending work was cancelled")]
+    Deadline(JobId),
+    #[error("malformed request: {0}")]
+    BadRequest(String),
+    #[error(transparent)]
+    Wire(#[from] JsonError),
+    #[error("no PJRT runtime loaded (run `make artifacts`)")]
+    NoRuntime,
+    #[error("runtime error: {0}")]
+    Runtime(String),
+}
+
+impl From<crate::slurm::api::ApiError> for DalekError {
+    fn from(e: crate::slurm::api::ApiError) -> Self {
+        use crate::slurm::api::ApiError as E;
+        match e {
+            E::Auth(a) => DalekError::Auth(a),
+            E::Slurm(s) => DalekError::Slurm(s),
+            E::Incomplete => DalekError::Incomplete,
+            E::Deadline(id) => DalekError::Deadline(id),
+        }
+    }
+}
+
+impl From<crate::energy::api::ApiError> for DalekError {
+    fn from(e: crate::energy::api::ApiError) -> Self {
+        use crate::energy::api::ApiError as E;
+        match e {
+            E::Board(b) => DalekError::Board(b),
+            E::NoBoard(n) => DalekError::NoBoard(n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subsystem_errors_flatten() {
+        let e: DalekError = AuthError::UnknownUser("mallory".into()).into();
+        assert!(matches!(e, DalekError::Auth(_)));
+        let e: DalekError = SlurmError::UnknownPartition("nope".into()).into();
+        assert!(matches!(e, DalekError::Slurm(_)));
+        let e: DalekError = crate::slurm::api::ApiError::Incomplete.into();
+        assert_eq!(e, DalekError::Incomplete);
+        let e: DalekError = crate::energy::api::ApiError::NoBoard("n0".into()).into();
+        assert_eq!(e, DalekError::NoBoard("n0".into()));
+    }
+
+    #[test]
+    fn messages_are_user_facing() {
+        assert_eq!(
+            DalekError::AdminOnly.to_string(),
+            "restricted to administrators"
+        );
+        assert!(DalekError::BadRequest("missing `op`".into())
+            .to_string()
+            .contains("missing `op`"));
+    }
+}

@@ -1,0 +1,34 @@
+//! The unified, session-based cluster API (the paper's user surface,
+//! made one protocol).
+//!
+//! The paper exposes three disjoint user surfaces: the §3.4–3.5 SLURM
+//! front-ends (`sbatch`/`srun`/`salloc` with MUNGE credentials), the
+//! §4.3 energy-platform API (retrieve samples / tag via GPIO / power
+//! control), and the coordinator's reports. This module unifies them
+//! behind a single authenticated entry point, the way JetsonLEAP and
+//! the D.A.V.I.D.E. cluster put one programmable plane over
+//! heterogeneous monitoring and control:
+//!
+//! * [`session`] — log in once against the LDAP directory, mint/verify
+//!   a MUNGE credential, hold a capability-bearing [`SessionId`]
+//! * [`protocol`] — the typed [`Request`]/[`Response`] enums and their
+//!   JSON wire codec (`util::json`), scriptable via `dalek api`
+//! * [`error`] — [`DalekError`], the one error type every subsystem
+//!   failure converts into
+//! * [`cluster_api`] — [`ClusterApi`], the façade that composes the
+//!   scheduler, energy platform, directory and PJRT runtime and routes
+//!   every request to the (crate-internal) `SlurmApi`/`EnergyApi`
+//!   targets
+//!
+//! This layer is the seam where a real network transport, request
+//! batching and multi-tenant quotas plug in next.
+
+pub mod cluster_api;
+pub mod error;
+pub mod protocol;
+pub mod session;
+
+pub use cluster_api::{ClusterApi, ClusterReport};
+pub use error::DalekError;
+pub use protocol::{JobRequest, JobView, Request, Response};
+pub use session::{Session, SessionId, SessionManager};

@@ -1,0 +1,806 @@
+//! The typed request/response protocol and its JSON wire codec.
+//!
+//! One envelope shape for every operation the cluster exposes (§3.4–3.5
+//! job control, §4.3 energy platform, coordinator reports):
+//!
+//! ```text
+//! {"op": "submit_job", "session": 3, "partition": "az4-n4090", ...}
+//! ```
+//!
+//! [`Request::from_json`] decodes an envelope into `(Option<SessionId>,
+//! Request)`; every request except `login` must carry a session token.
+//! [`Response::to_json`] encodes the reply. Times travel as seconds
+//! (`*_s` fields); job ids and session ids as integers. The codec is
+//! built on [`crate::util::json`] and round-trips its grammar, so any
+//! JSON-speaking client can drive the cluster — this is the seam where
+//! a real network transport plugs in.
+//!
+//! Wire contract for integers: JSON numbers travel as f64, so integer
+//! fields are exact only below 2^53. Fields where rounding would lie
+//! (`nodes`, `iters`, `job`, `line`, `probe`, `decimate`, `session`)
+//! are range-checked and rejected beyond their type's or the wire's
+//! range; `seed` (an RNG seed, where precision is inconsequential) is
+//! accepted as-is.
+
+use super::error::DalekError;
+use super::session::SessionId;
+use crate::energy::Sample;
+use crate::sim::SimTime;
+use crate::slurm::{JobId, JobState};
+use crate::util::json::Json;
+
+/// What a job submission carries on the wire. The owning user comes
+/// from the session; `user` is the admin-only "submit on behalf of"
+/// override (sbatch `--uid` style).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRequest {
+    pub partition: String,
+    pub nodes: u32,
+    pub duration: SimTime,
+    /// defaults to `4 × duration + 60 s` (the [`crate::slurm::JobSpec`]
+    /// helper convention) when absent
+    pub time_limit: Option<SimTime>,
+    /// AOT payload name; payload jobs execute the real artifact once
+    pub payload: Option<String>,
+    /// simulated iterations for payload jobs
+    pub iters: u64,
+    pub user: Option<String>,
+}
+
+/// Every operation a user can request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Login { user: String },
+    Logout,
+    AddUser { user: String, admin: bool },
+    SubmitJob(JobRequest),
+    RunJob(JobRequest),
+    AllocNodes(JobRequest),
+    JobInfo { job: JobId },
+    CancelJob { job: JobId },
+    QuerySamples {
+        node: String,
+        probe: u8,
+        from: SimTime,
+        to: SimTime,
+        decimate: u32,
+    },
+    QueryEnergy {
+        node: Option<String>,
+        window: Option<(SimTime, SimTime)>,
+    },
+    SetTag { node: String, line: u8, high: bool },
+    Power { node: String, on: bool },
+    ClusterReport,
+    Advance { to: SimTime, sample: bool },
+    ExecPayload { payload: String, iters: u32, seed: u64 },
+}
+
+/// A job snapshot on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobView {
+    pub job: JobId,
+    pub user: String,
+    pub partition: String,
+    pub state: JobState,
+    pub nodes: u32,
+    pub submitted: SimTime,
+    pub started: Option<SimTime>,
+    pub finished: Option<SimTime>,
+}
+
+/// Every reply the protocol can produce.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Session { id: SessionId, user: String, admin: bool },
+    LoggedOut,
+    UserAdded { user: String },
+    Submitted { job: JobId },
+    JobRan { job: JobId, state: JobState },
+    Allocated { job: JobId, nodes: Vec<String> },
+    Job(JobView),
+    Cancelled { job: JobId },
+    Samples {
+        node: String,
+        probe: u8,
+        /// samples in the window before decimation
+        total: u64,
+        samples: Vec<Sample>,
+    },
+    Energy { joules: f64 },
+    TagSet { node: String, line: u8, high: bool },
+    PowerQueued { node: String, on: bool },
+    Report {
+        now: SimTime,
+        jobs_completed: u64,
+        jobs_pending: usize,
+        cluster_watts: f64,
+        true_energy_j: f64,
+        measured_energy_j: f64,
+        samples: u64,
+    },
+    Advanced { now: SimTime },
+    Executed {
+        payload: String,
+        wall_s: f64,
+        flops: u64,
+        flops_per_sec: f64,
+        output_sum: f64,
+    },
+    Error { message: String },
+}
+
+pub fn job_state_str(s: JobState) -> &'static str {
+    match s {
+        JobState::Pending => "pending",
+        JobState::Configuring => "configuring",
+        JobState::Running => "running",
+        JobState::Completed => "completed",
+        JobState::Timeout => "timeout",
+        JobState::Cancelled => "cancelled",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decode helpers
+// ---------------------------------------------------------------------------
+
+fn bad(msg: impl Into<String>) -> DalekError {
+    DalekError::BadRequest(msg.into())
+}
+
+fn need_str(o: &Json, k: &str) -> Result<String, DalekError> {
+    o.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| bad(format!("missing string field `{k}`")))
+}
+
+fn need_u64(o: &Json, k: &str) -> Result<u64, DalekError> {
+    o.get(k)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| bad(format!("missing integer field `{k}`")))
+}
+
+/// Wire numbers travel as f64, whose exact-integer range ends at 2^53;
+/// a larger value may already have been rounded by the JSON text, so it
+/// is rejected rather than silently accepted.
+const SAFE_INT_MAX: u64 = 1 << 53;
+
+fn safe_u64(o: &Json, k: &str, default: u64) -> Result<u64, DalekError> {
+    match o.get(k).and_then(Json::as_u64) {
+        None => Ok(default),
+        Some(v) if v < SAFE_INT_MAX => Ok(v),
+        Some(v) => Err(bad(format!(
+            "field `{k}` = {v} exceeds the exact integer range of the wire format"
+        ))),
+    }
+}
+
+fn need_safe_u64(o: &Json, k: &str) -> Result<u64, DalekError> {
+    let v = need_u64(o, k)?;
+    if v >= SAFE_INT_MAX {
+        return Err(bad(format!(
+            "field `{k}` = {v} exceeds the exact integer range of the wire format"
+        )));
+    }
+    Ok(v)
+}
+
+/// Range-checked narrowing — wire integers must never truncate
+/// (`nodes: 2^32+1` silently becoming 1 node would be a lie, not an
+/// error).
+fn narrow<T: TryFrom<u64>>(v: u64, k: &str) -> Result<T, DalekError> {
+    T::try_from(v).map_err(|_| bad(format!("field `{k}` out of range: {v}")))
+}
+
+fn need_u32(o: &Json, k: &str) -> Result<u32, DalekError> {
+    narrow(need_u64(o, k)?, k)
+}
+
+fn need_u8(o: &Json, k: &str) -> Result<u8, DalekError> {
+    narrow(need_u64(o, k)?, k)
+}
+
+fn opt_narrow<T: TryFrom<u64>>(o: &Json, k: &str, default: T) -> Result<T, DalekError> {
+    match o.get(k).and_then(Json::as_u64) {
+        Some(v) => narrow(v, k),
+        None => Ok(default),
+    }
+}
+
+fn need_f64(o: &Json, k: &str) -> Result<f64, DalekError> {
+    o.get(k)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| bad(format!("missing number field `{k}`")))
+}
+
+fn need_bool(o: &Json, k: &str) -> Result<bool, DalekError> {
+    o.get(k)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| bad(format!("missing boolean field `{k}`")))
+}
+
+fn opt_bool(o: &Json, k: &str, default: bool) -> bool {
+    o.get(k).and_then(Json::as_bool).unwrap_or(default)
+}
+
+fn secs(v: f64) -> Result<SimTime, DalekError> {
+    if !v.is_finite() || v < 0.0 {
+        return Err(bad(format!("time {v} must be a non-negative number")));
+    }
+    Ok(SimTime::from_secs_f64(v))
+}
+
+fn job_request(o: &Json) -> Result<JobRequest, DalekError> {
+    let payload = o.get("payload").and_then(Json::as_str).map(str::to_string);
+    // payload jobs are sized from the artifact grounding, so their
+    // duration is optional on the wire; synthetic jobs must state one
+    let duration = match o.get("duration_s").and_then(Json::as_f64) {
+        Some(v) => secs(v)?,
+        None if payload.is_some() => SimTime::ZERO,
+        None => return Err(bad("missing number field `duration_s`")),
+    };
+    Ok(JobRequest {
+        partition: need_str(o, "partition")?,
+        nodes: need_u32(o, "nodes")?,
+        duration,
+        time_limit: match o.get("time_limit_s").and_then(Json::as_f64) {
+            Some(v) => Some(secs(v)?),
+            None => None,
+        },
+        payload,
+        iters: safe_u64(o, "iters", 1)?,
+        user: o.get("user").and_then(Json::as_str).map(str::to_string),
+    })
+}
+
+impl Request {
+    /// Decode one wire envelope.
+    pub fn from_json(j: &Json) -> Result<(Option<SessionId>, Request), DalekError> {
+        let op = need_str(j, "op")?;
+        let session = match j.get("session").and_then(Json::as_u64) {
+            None => None,
+            Some(v) if v < SAFE_INT_MAX => Some(SessionId(v)),
+            Some(v) => {
+                return Err(bad(format!(
+                    "field `session` = {v} exceeds the exact integer range of the wire format"
+                )))
+            }
+        };
+        let req = match op.as_str() {
+            "login" => Request::Login {
+                user: need_str(j, "user")?,
+            },
+            "logout" => Request::Logout,
+            "add_user" => Request::AddUser {
+                user: need_str(j, "user")?,
+                admin: opt_bool(j, "admin", false),
+            },
+            "submit_job" => Request::SubmitJob(job_request(j)?),
+            "run_job" => Request::RunJob(job_request(j)?),
+            "alloc_nodes" => Request::AllocNodes(job_request(j)?),
+            "job_info" => Request::JobInfo {
+                job: JobId(need_safe_u64(j, "job")?),
+            },
+            "cancel_job" => Request::CancelJob {
+                job: JobId(need_safe_u64(j, "job")?),
+            },
+            "query_samples" => Request::QuerySamples {
+                node: need_str(j, "node")?,
+                probe: opt_narrow(j, "probe", 0u8)?,
+                from: secs(need_f64(j, "from_s")?)?,
+                to: secs(need_f64(j, "to_s")?)?,
+                decimate: opt_narrow(j, "decimate", 1u32)?,
+            },
+            "query_energy" => {
+                let from = j.get("from_s").and_then(Json::as_f64);
+                let to = j.get("to_s").and_then(Json::as_f64);
+                let window = match (from, to) {
+                    (Some(a), Some(b)) => Some((secs(a)?, secs(b)?)),
+                    (None, None) => None,
+                    _ => return Err(bad("`from_s` and `to_s` must come together")),
+                };
+                Request::QueryEnergy {
+                    node: j.get("node").and_then(Json::as_str).map(str::to_string),
+                    window,
+                }
+            }
+            "set_tag" => Request::SetTag {
+                node: need_str(j, "node")?,
+                line: need_u8(j, "line")?,
+                high: need_bool(j, "high")?,
+            },
+            "power" => Request::Power {
+                node: need_str(j, "node")?,
+                on: need_bool(j, "on")?,
+            },
+            "cluster_report" => Request::ClusterReport,
+            "advance" => Request::Advance {
+                to: secs(need_f64(j, "to_s")?)?,
+                sample: opt_bool(j, "sample", false),
+            },
+            "exec_payload" => Request::ExecPayload {
+                payload: need_str(j, "payload")?,
+                iters: opt_narrow(j, "iters", 1u32)?,
+                // seed is an RNG seed: wire rounding above 2^53 is
+                // harmless, so it is not range-checked (see module doc)
+                seed: j.get("seed").and_then(Json::as_u64).unwrap_or(42),
+            },
+            other => return Err(bad(format!("unknown op `{other}`"))),
+        };
+        Ok((session, req))
+    }
+
+    /// Decode from source text.
+    pub fn parse(src: &str) -> Result<(Option<SessionId>, Request), DalekError> {
+        Request::from_json(&Json::parse(src)?)
+    }
+
+    /// Encode one wire envelope.
+    pub fn to_json(&self, session: Option<SessionId>) -> Json {
+        let mut fields: Vec<(String, Json)> = Vec::new();
+        let mut push = |k: &str, v: Json| fields.push((k.to_string(), v));
+        let job_fields = |push: &mut dyn FnMut(&str, Json), r: &JobRequest| {
+            push("partition", Json::from(r.partition.as_str()));
+            push("nodes", Json::from(r.nodes));
+            push("duration_s", Json::from(r.duration.as_secs_f64()));
+            if let Some(tl) = r.time_limit {
+                push("time_limit_s", Json::from(tl.as_secs_f64()));
+            }
+            if let Some(p) = &r.payload {
+                push("payload", Json::from(p.as_str()));
+            }
+            if r.iters != 1 {
+                push("iters", Json::from(r.iters));
+            }
+            if let Some(u) = &r.user {
+                push("user", Json::from(u.as_str()));
+            }
+        };
+        let op = match self {
+            Request::Login { user } => {
+                push("user", Json::from(user.as_str()));
+                "login"
+            }
+            Request::Logout => "logout",
+            Request::AddUser { user, admin } => {
+                push("user", Json::from(user.as_str()));
+                push("admin", Json::from(*admin));
+                "add_user"
+            }
+            Request::SubmitJob(r) => {
+                job_fields(&mut push, r);
+                "submit_job"
+            }
+            Request::RunJob(r) => {
+                job_fields(&mut push, r);
+                "run_job"
+            }
+            Request::AllocNodes(r) => {
+                job_fields(&mut push, r);
+                "alloc_nodes"
+            }
+            Request::JobInfo { job } => {
+                push("job", Json::from(job.0));
+                "job_info"
+            }
+            Request::CancelJob { job } => {
+                push("job", Json::from(job.0));
+                "cancel_job"
+            }
+            Request::QuerySamples {
+                node,
+                probe,
+                from,
+                to,
+                decimate,
+            } => {
+                push("node", Json::from(node.as_str()));
+                push("probe", Json::from(*probe));
+                push("from_s", Json::from(from.as_secs_f64()));
+                push("to_s", Json::from(to.as_secs_f64()));
+                push("decimate", Json::from(*decimate));
+                "query_samples"
+            }
+            Request::QueryEnergy { node, window } => {
+                if let Some(n) = node {
+                    push("node", Json::from(n.as_str()));
+                }
+                if let Some((a, b)) = window {
+                    push("from_s", Json::from(a.as_secs_f64()));
+                    push("to_s", Json::from(b.as_secs_f64()));
+                }
+                "query_energy"
+            }
+            Request::SetTag { node, line, high } => {
+                push("node", Json::from(node.as_str()));
+                push("line", Json::from(*line));
+                push("high", Json::from(*high));
+                "set_tag"
+            }
+            Request::Power { node, on } => {
+                push("node", Json::from(node.as_str()));
+                push("on", Json::from(*on));
+                "power"
+            }
+            Request::ClusterReport => "cluster_report",
+            Request::Advance { to, sample } => {
+                push("to_s", Json::from(to.as_secs_f64()));
+                push("sample", Json::from(*sample));
+                "advance"
+            }
+            Request::ExecPayload {
+                payload,
+                iters,
+                seed,
+            } => {
+                push("payload", Json::from(payload.as_str()));
+                push("iters", Json::from(*iters));
+                push("seed", Json::from(*seed));
+                "exec_payload"
+            }
+        };
+        fields.push(("op".to_string(), Json::from(op)));
+        if let Some(s) = session {
+            fields.push(("session".to_string(), Json::from(s.0)));
+        }
+        Json::object(fields)
+    }
+}
+
+fn sample_json(s: &Sample) -> Json {
+    Json::object([
+        ("t_s", Json::from(s.t.as_secs_f64())),
+        ("power_w", Json::from(s.power_w)),
+        ("voltage_v", Json::from(s.voltage_v)),
+        ("current_a", Json::from(s.current_a)),
+        ("tags", Json::from(s.tags)),
+    ])
+}
+
+impl Response {
+    /// Encode a reply. Every success carries `"ok": true` plus a
+    /// `"type"` discriminant; errors carry `"ok": false` + `"error"`.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(String, Json)> = Vec::new();
+        let mut push = |k: &str, v: Json| fields.push((k.to_string(), v));
+        let ty = match self {
+            Response::Session { id, user, admin } => {
+                push("session", Json::from(id.0));
+                push("user", Json::from(user.as_str()));
+                push("admin", Json::from(*admin));
+                "session"
+            }
+            Response::LoggedOut => "logged_out",
+            Response::UserAdded { user } => {
+                push("user", Json::from(user.as_str()));
+                "user_added"
+            }
+            Response::Submitted { job } => {
+                push("job", Json::from(job.0));
+                "submitted"
+            }
+            Response::JobRan { job, state } => {
+                push("job", Json::from(job.0));
+                push("state", Json::from(job_state_str(*state)));
+                "job_ran"
+            }
+            Response::Allocated { job, nodes } => {
+                push("job", Json::from(job.0));
+                push(
+                    "nodes",
+                    Json::array(nodes.iter().map(|n| Json::from(n.as_str()))),
+                );
+                "allocated"
+            }
+            Response::Job(v) => {
+                push("job", Json::from(v.job.0));
+                push("user", Json::from(v.user.as_str()));
+                push("partition", Json::from(v.partition.as_str()));
+                push("state", Json::from(job_state_str(v.state)));
+                push("nodes", Json::from(v.nodes));
+                push("submitted_s", Json::from(v.submitted.as_secs_f64()));
+                if let Some(t) = v.started {
+                    push("started_s", Json::from(t.as_secs_f64()));
+                }
+                if let Some(t) = v.finished {
+                    push("finished_s", Json::from(t.as_secs_f64()));
+                }
+                "job"
+            }
+            Response::Cancelled { job } => {
+                push("job", Json::from(job.0));
+                "cancelled"
+            }
+            Response::Samples {
+                node,
+                probe,
+                total,
+                samples,
+            } => {
+                push("node", Json::from(node.as_str()));
+                push("probe", Json::from(*probe));
+                push("total", Json::from(*total));
+                push("samples", Json::array(samples.iter().map(sample_json)));
+                "samples"
+            }
+            Response::Energy { joules } => {
+                push("joules", Json::from(*joules));
+                "energy"
+            }
+            Response::TagSet { node, line, high } => {
+                push("node", Json::from(node.as_str()));
+                push("line", Json::from(*line));
+                push("high", Json::from(*high));
+                "tag_set"
+            }
+            Response::PowerQueued { node, on } => {
+                push("node", Json::from(node.as_str()));
+                push("on", Json::from(*on));
+                "power_queued"
+            }
+            Response::Report {
+                now,
+                jobs_completed,
+                jobs_pending,
+                cluster_watts,
+                true_energy_j,
+                measured_energy_j,
+                samples,
+            } => {
+                push("now_s", Json::from(now.as_secs_f64()));
+                push("jobs_completed", Json::from(*jobs_completed));
+                push("jobs_pending", Json::from(*jobs_pending));
+                push("cluster_watts", Json::from(*cluster_watts));
+                push("true_energy_j", Json::from(*true_energy_j));
+                push("measured_energy_j", Json::from(*measured_energy_j));
+                push("samples", Json::from(*samples));
+                "report"
+            }
+            Response::Advanced { now } => {
+                push("now_s", Json::from(now.as_secs_f64()));
+                "advanced"
+            }
+            Response::Executed {
+                payload,
+                wall_s,
+                flops,
+                flops_per_sec,
+                output_sum,
+            } => {
+                push("payload", Json::from(payload.as_str()));
+                push("wall_s", Json::from(*wall_s));
+                push("flops", Json::from(*flops));
+                push("flops_per_sec", Json::from(*flops_per_sec));
+                push("output_sum", Json::from(*output_sum));
+                "executed"
+            }
+            Response::Error { message } => {
+                let j = Json::object([
+                    ("ok", Json::from(false)),
+                    ("error", Json::from(message.as_str())),
+                ]);
+                return j;
+            }
+        };
+        fields.push(("ok".to_string(), Json::from(true)));
+        fields.push(("type".to_string(), Json::from(ty)));
+        Json::object(fields)
+    }
+
+    /// Errors encode uniformly; convenience for handlers.
+    pub fn from_error(e: &DalekError) -> Response {
+        Response::Error {
+            message: e.to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn login_needs_no_session_and_round_trips() {
+        let req = Request::Login {
+            user: "alice".into(),
+        };
+        let wire = req.to_json(None).to_string();
+        let (sid, back) = Request::parse(&wire).unwrap();
+        assert_eq!(sid, None);
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn submit_round_trips_with_session() {
+        let req = Request::SubmitJob(JobRequest {
+            partition: "az4-n4090".into(),
+            nodes: 2,
+            duration: SimTime::from_secs(120),
+            time_limit: Some(SimTime::from_mins(30)),
+            payload: Some("gemm256".into()),
+            iters: 50_000,
+            user: None,
+        });
+        let wire = req.to_json(Some(SessionId(7))).to_string();
+        let (sid, back) = Request::parse(&wire).unwrap();
+        assert_eq!(sid, Some(SessionId(7)));
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn every_op_round_trips() {
+        let reqs = vec![
+            Request::Logout,
+            Request::AddUser {
+                user: "bob".into(),
+                admin: true,
+            },
+            Request::RunJob(JobRequest {
+                partition: "az5-a890m".into(),
+                nodes: 1,
+                duration: SimTime::from_secs(30),
+                time_limit: None,
+                payload: None,
+                iters: 1,
+                user: Some("carol".into()),
+            }),
+            Request::AllocNodes(JobRequest {
+                partition: "iml-ia770".into(),
+                nodes: 2,
+                duration: SimTime::from_secs(60),
+                time_limit: None,
+                payload: None,
+                iters: 7, // non-payload iters must round-trip too
+                user: None,
+            }),
+            Request::JobInfo { job: JobId(4) },
+            Request::CancelJob { job: JobId(5) },
+            Request::QuerySamples {
+                node: "az4-n4090-0".into(),
+                probe: 0,
+                from: SimTime::ZERO,
+                to: SimTime::from_secs(10),
+                decimate: 100,
+            },
+            Request::QueryEnergy {
+                node: Some("az4-n4090-0".into()),
+                window: Some((SimTime::ZERO, SimTime::from_secs(5))),
+            },
+            Request::QueryEnergy {
+                node: None,
+                window: None,
+            },
+            Request::SetTag {
+                node: "az4-n4090-0".into(),
+                line: 3,
+                high: true,
+            },
+            Request::Power {
+                node: "az4-n4090-0".into(),
+                on: false,
+            },
+            Request::ClusterReport,
+            Request::Advance {
+                to: SimTime::from_hours(1),
+                sample: true,
+            },
+            Request::ExecPayload {
+                payload: "mlp_infer".into(),
+                iters: 3,
+                seed: 42,
+            },
+        ];
+        for req in reqs {
+            let wire = req.to_json(Some(SessionId(1))).to_string();
+            let (sid, back) =
+                Request::parse(&wire).unwrap_or_else(|e| panic!("{wire}: {e}"));
+            assert_eq!(sid, Some(SessionId(1)), "{wire}");
+            assert_eq!(back, req, "{wire}");
+        }
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(matches!(
+            Request::parse("{}"),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(r#"{"op": "warp_drive"}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(r#"{"op": "submit_job"}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(r#"{"op": "advance", "to_s": -5}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        // broken JSON surfaces as a wire error
+        assert!(matches!(
+            Request::parse(r#"{"op": "#),
+            Err(DalekError::Wire(_))
+        ));
+    }
+
+    #[test]
+    fn out_of_range_integers_rejected_not_truncated() {
+        // 2^32 + 1 must not silently become nodes = 1
+        assert!(matches!(
+            Request::parse(
+                r#"{"op": "submit_job", "partition": "p", "nodes": 4294967297, "duration_s": 1}"#
+            ),
+            Err(DalekError::BadRequest(_))
+        ));
+        // GPIO lines are u8: 256 must not wrap to line 0
+        assert!(matches!(
+            Request::parse(r#"{"op": "set_tag", "node": "n", "line": 256, "high": true}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(r#"{"op": "query_samples", "node": "n", "probe": 300, "from_s": 0, "to_s": 1}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        // u64 fields above 2^53 may already have been rounded by the
+        // f64 wire representation — rejected, not silently accepted
+        assert!(matches!(
+            Request::parse(r#"{"op": "job_info", "job": 9007199254740993}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn payload_jobs_need_no_duration_synthetic_jobs_do() {
+        let (_, req) = Request::parse(
+            r#"{"op": "submit_job", "session": 1, "partition": "az4-n4090",
+                "nodes": 1, "payload": "gemm256", "iters": 100}"#,
+        )
+        .unwrap();
+        let Request::SubmitJob(r) = req else {
+            panic!("expected SubmitJob")
+        };
+        assert_eq!(r.duration, SimTime::ZERO); // sized from the grounding
+        assert_eq!(r.payload.as_deref(), Some("gemm256"));
+        assert_eq!(r.iters, 100);
+        // synthetic jobs must still state a duration
+        assert!(matches!(
+            Request::parse(r#"{"op": "submit_job", "partition": "p", "nodes": 1}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn responses_encode_with_ok_flag() {
+        let ok = Response::Submitted { job: JobId(9) }.to_json();
+        assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(ok.get("job").unwrap().as_u64(), Some(9));
+        assert_eq!(ok.get("type").unwrap().as_str(), Some("submitted"));
+        let err = Response::from_error(&DalekError::AdminOnly).to_json();
+        assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            err.get("error").unwrap().as_str(),
+            Some("restricted to administrators")
+        );
+    }
+
+    #[test]
+    fn job_view_encodes_optionals() {
+        let v = JobView {
+            job: JobId(2),
+            user: "alice".into(),
+            partition: "az4-n4090".into(),
+            state: JobState::Running,
+            nodes: 2,
+            submitted: SimTime::ZERO,
+            started: Some(SimTime::from_secs(90)),
+            finished: None,
+        };
+        let j = Response::Job(v).to_json();
+        assert_eq!(j.get("state").unwrap().as_str(), Some("running"));
+        assert_eq!(j.get("started_s").unwrap().as_f64(), Some(90.0));
+        assert!(j.get("finished_s").is_none());
+    }
+}

@@ -1,0 +1,267 @@
+//! Sessions: log in once, hold a capability-bearing token.
+//!
+//! The paper's front-ends each re-authenticated on every call (an LDAP
+//! lookup plus a MUNGE mint/verify round-trip per RPC). The session
+//! layer hoists that to login time: [`SessionManager::login`] resolves
+//! the user in the LDAP [`UserDb`], mints a MUNGE credential binding
+//! `(uid, login, t)` under the cluster key, verifies it round-trip, and
+//! stores it in the session. Every subsequent request presents only the
+//! [`SessionId`]; validation re-checks the stored credential's HMAC (so
+//! a key rotation invalidates live sessions) and the session's sliding
+//! expiry, without touching the directory again.
+
+use std::collections::BTreeMap;
+
+use hmac::{Hmac, Mac as HmacMac};
+use sha2::Sha256;
+
+use super::error::DalekError;
+use crate::services::auth::{Credential, Munge, UserDb};
+use crate::sim::SimTime;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// An opaque session token handed to the user at login. Tokens are
+/// derived from an HMAC under the cluster key (not a counter), so they
+/// are unguessable by wire clients — holding one IS the capability.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct SessionId(pub u64);
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sess-{}", self.0)
+    }
+}
+
+/// One authenticated session.
+#[derive(Clone, Debug)]
+pub struct Session {
+    pub id: SessionId,
+    pub login: String,
+    pub uid: u32,
+    pub admin: bool,
+    pub opened_at: SimTime,
+    /// sliding expiry, renewed on every validated request
+    pub expires_at: SimTime,
+    /// the MUNGE credential minted at login (integrity re-checked on use)
+    credential: Credential,
+}
+
+/// Issues and validates session tokens against the cluster MUNGE key.
+pub struct SessionManager {
+    munge: Munge,
+    /// key copy for token derivation (tokens must be unguessable)
+    key: Vec<u8>,
+    /// sliding session lifetime (distinct from the per-credential MUNGE
+    /// TTL, which only bounds the login round-trip itself)
+    pub ttl: SimTime,
+    sessions: BTreeMap<SessionId, Session>,
+    counter: u64,
+}
+
+impl SessionManager {
+    pub fn new(munge_key: &[u8], ttl: SimTime) -> Self {
+        Self {
+            munge: Munge::new(munge_key),
+            key: munge_key.to_vec(),
+            ttl,
+            sessions: BTreeMap::new(),
+            counter: 0,
+        }
+    }
+
+    /// Tokens are masked to 53 bits so they survive the JSON wire codec
+    /// exactly (wire numbers travel as f64, whose exact-integer range is
+    /// 2^53); a 53-bit keyed-hash space still makes guessing hopeless.
+    const TOKEN_MASK: u64 = (1 << 53) - 1;
+
+    /// Derive an unguessable token: HMAC(key, counter ‖ uid ‖ t). The
+    /// counter keeps tokens unique; the HMAC keeps them unpredictable
+    /// (and deterministic, preserving replay reproducibility).
+    fn mint_token(&mut self, uid: u32, now: SimTime) -> SessionId {
+        loop {
+            self.counter += 1;
+            let mut mac = HmacSha256::new_from_slice(&self.key).expect("any key size");
+            mac.update(b"dalek-session-token");
+            mac.update(&self.counter.to_le_bytes());
+            mac.update(&uid.to_le_bytes());
+            mac.update(&now.as_ns().to_le_bytes());
+            let bytes = mac.finalize().into_bytes();
+            let raw = u64::from_le_bytes(bytes[..8].try_into().expect("32-byte digest"));
+            let id = SessionId(raw & Self::TOKEN_MASK);
+            if !self.sessions.contains_key(&id) {
+                return id;
+            }
+        }
+    }
+
+    /// Authenticate `login` against the directory and open a session.
+    pub fn login(&mut self, db: &UserDb, login: &str, now: SimTime) -> Result<Session, DalekError> {
+        let user = db.user(login)?;
+        let (uid, admin) = (user.uid, user.admin);
+        // mint + validate the credential round-trip (what the slurmctld
+        // RPC path did per call, §3.4) — proving we hold the key
+        let cred = self.munge.encode(uid, login.as_bytes(), now);
+        self.munge.decode(&cred, now)?;
+        let id = self.mint_token(uid, now);
+        let sess = Session {
+            id,
+            login: login.to_string(),
+            uid,
+            admin,
+            opened_at: now,
+            expires_at: now + self.ttl,
+            credential: cred,
+        };
+        self.sessions.insert(id, sess.clone());
+        Ok(sess)
+    }
+
+    /// Validate a token: known, unexpired, credential HMAC still good
+    /// under the current key. Renews the sliding expiry and returns a
+    /// snapshot of the session.
+    pub fn validate(&mut self, id: SessionId, now: SimTime) -> Result<Session, DalekError> {
+        let ttl = self.ttl;
+        let sess = self
+            .sessions
+            .get_mut(&id)
+            .ok_or(DalekError::InvalidSession)?;
+        if now >= sess.expires_at {
+            self.sessions.remove(&id);
+            return Err(DalekError::InvalidSession);
+        }
+        // integrity only: evaluate the HMAC at mint time so the MUNGE
+        // per-credential TTL does not cap the session lifetime
+        if self
+            .munge
+            .decode(&sess.credential, sess.credential.minted_at)
+            .is_err()
+        {
+            self.sessions.remove(&id);
+            return Err(DalekError::InvalidSession);
+        }
+        sess.expires_at = sess.expires_at.max(now + ttl);
+        Ok(sess.clone())
+    }
+
+    /// Close a session; returns whether it existed.
+    pub fn logout(&mut self, id: SessionId) -> bool {
+        self.sessions.remove(&id).is_some()
+    }
+
+    pub fn open_count(&self) -> usize {
+        self.sessions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db() -> UserDb {
+        let mut db = UserDb::new();
+        db.add_user("alice", false).unwrap();
+        db.add_user("root", true).unwrap();
+        db
+    }
+
+    fn mgr() -> SessionManager {
+        SessionManager::new(b"dalek-munge-key", SimTime::from_hours(12))
+    }
+
+    #[test]
+    fn login_issues_distinct_tokens() {
+        let (db, mut m) = (db(), mgr());
+        let a = m.login(&db, "alice", SimTime::ZERO).unwrap().id;
+        let b = m.login(&db, "alice", SimTime::ZERO).unwrap().id;
+        assert_ne!(a, b);
+        assert_eq!(m.open_count(), 2);
+        let s = m.validate(a, SimTime::from_secs(1)).unwrap();
+        assert_eq!(s.login, "alice");
+        assert!(!s.admin);
+        assert!(!m.validate(b, SimTime::from_secs(1)).unwrap().admin);
+    }
+
+    #[test]
+    fn tokens_are_unguessable_not_sequential() {
+        let (db, mut m) = (db(), mgr());
+        let a = m.login(&db, "alice", SimTime::ZERO).unwrap().id;
+        let b = m.login(&db, "alice", SimTime::ZERO).unwrap().id;
+        let c = m.login(&db, "root", SimTime::ZERO).unwrap().id;
+        // HMAC-derived: not small counters, not consecutive
+        assert_ne!(b.0, a.0 + 1);
+        assert_ne!(c.0, b.0 + 1);
+        assert!(a.0 > 1000 && b.0 > 1000 && c.0 > 1000);
+        // and every token survives the f64 wire representation exactly
+        for id in [a, b, c] {
+            assert!(id.0 < (1 << 53));
+            assert_eq!(id.0 as f64 as u64, id.0);
+        }
+        // and a fresh manager with a different key mints different tokens
+        let mut m2 = SessionManager::new(b"other-key", SimTime::from_hours(12));
+        let a2 = m2.login(&db, "alice", SimTime::ZERO).unwrap().id;
+        assert_ne!(a2, a);
+    }
+
+    #[test]
+    fn unknown_user_rejected_at_login() {
+        let (db, mut m) = (db(), mgr());
+        assert!(matches!(
+            m.login(&db, "mallory", SimTime::ZERO),
+            Err(DalekError::Auth(_))
+        ));
+    }
+
+    #[test]
+    fn admin_flag_carried() {
+        let (db, mut m) = (db(), mgr());
+        let r = m.login(&db, "root", SimTime::ZERO).unwrap();
+        assert!(r.admin);
+        assert!(m.validate(r.id, SimTime::ZERO).unwrap().admin);
+    }
+
+    #[test]
+    fn bogus_token_rejected() {
+        let mut m = mgr();
+        assert!(matches!(
+            m.validate(SessionId(99), SimTime::ZERO),
+            Err(DalekError::InvalidSession)
+        ));
+    }
+
+    #[test]
+    fn session_expires_but_slides_on_use() {
+        let (db, mut m) = (db(), mgr());
+        let s = m.login(&db, "alice", SimTime::ZERO).unwrap().id;
+        // touch at t=11h renews to 23h
+        assert!(m.validate(s, SimTime::from_hours(11)).is_ok());
+        assert!(m.validate(s, SimTime::from_hours(22)).is_ok());
+        // a >ttl gap kills it
+        assert!(matches!(
+            m.validate(s, SimTime::from_hours(35)),
+            Err(DalekError::InvalidSession)
+        ));
+        assert_eq!(m.open_count(), 0);
+    }
+
+    #[test]
+    fn session_outlives_munge_credential_ttl() {
+        let (db, mut m) = (db(), mgr());
+        let s = m.login(&db, "alice", SimTime::ZERO).unwrap().id;
+        // MUNGE credential TTL is 5 min; the session must not expire
+        // with it — only the session ttl governs
+        assert!(m.validate(s, SimTime::from_hours(1)).is_ok());
+    }
+
+    #[test]
+    fn logout_invalidates() {
+        let (db, mut m) = (db(), mgr());
+        let s = m.login(&db, "alice", SimTime::ZERO).unwrap().id;
+        assert!(m.logout(s));
+        assert!(!m.logout(s));
+        assert!(matches!(
+            m.validate(s, SimTime::ZERO),
+            Err(DalekError::InvalidSession)
+        ));
+    }
+}

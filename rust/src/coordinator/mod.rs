@@ -1,14 +1,16 @@
 //! The frontend daemon: everything `front.dalek` does, wired together.
 //!
-//! * [`cluster`] — the `Cluster` façade: SLURM controller + energy
-//!   measurement platform + user directory + (optionally) the PJRT
-//!   runtime executing real AOT payloads on the request path
+//! The cluster façade itself lives in [`crate::api`]: [`Cluster`] is
+//! the session-based [`crate::api::ClusterApi`] — one object that
+//! composes the SLURM controller, the §4 energy measurement platform,
+//! the user directory and (optionally) the PJRT runtime, and fronts
+//! them with the unified request/response protocol.
+//!
 //! * [`trace`] — workload trace generation and replay, producing the
 //!   end-to-end reports (throughput, wait, energy) of the examples and
-//!   the e2e bench
+//!   the e2e bench; replay drives the same [`Cluster`] surface users do
 
-pub mod cluster;
 pub mod trace;
 
-pub use cluster::{Cluster, ClusterReport};
+pub use crate::api::{ClusterApi as Cluster, ClusterReport};
 pub use trace::{ReplayReport, TraceEvent, TraceGen};

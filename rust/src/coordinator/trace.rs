@@ -5,13 +5,12 @@
 //! and reports the numbers the examples and the e2e bench print:
 //! throughput, waiting times, node utilization, true vs measured energy.
 
+use crate::api::ClusterApi as Cluster;
 use crate::power::Activity;
 use crate::sim::SimTime;
 use crate::slurm::{JobSpec, JobState};
 use crate::util::stats::Summary;
 use crate::util::Xoshiro256;
-
-use super::cluster::Cluster;
 
 /// One trace entry.
 #[derive(Clone, Debug)]
@@ -105,7 +104,7 @@ pub struct ReplayReport {
 pub fn replay(cluster: &mut Cluster, trace: &[TraceEvent], sample: bool) -> ReplayReport {
     for ev in trace {
         match &ev.payload {
-            Some((payload, iters)) if cluster.runtime.is_some() => {
+            Some((payload, iters)) if cluster.has_runtime() => {
                 cluster
                     .submit_payload(
                         &ev.spec.user.clone(),
@@ -126,10 +125,10 @@ pub fn replay(cluster: &mut Cluster, trace: &[TraceEvent], sample: bool) -> Repl
         }
     }
     // drain to quiescence: run in day-long strides until no pending work
-    let mut horizon = cluster.slurm.now() + SimTime::from_hours(1);
+    let mut horizon = cluster.now() + SimTime::from_hours(1);
     loop {
         cluster.run_until(horizon, sample);
-        let all_terminal = cluster.slurm.jobs().all(|j| j.is_terminal());
+        let all_terminal = cluster.slurm().jobs().all(|j| j.is_terminal());
         if all_terminal {
             break;
         }
@@ -140,13 +139,13 @@ pub fn replay(cluster: &mut Cluster, trace: &[TraceEvent], sample: bool) -> Repl
         );
     }
     let last_finish = cluster
-        .slurm
+        .slurm()
         .jobs()
         .filter_map(|j| j.finished)
         .max()
         .unwrap_or(SimTime::ZERO);
     let waits: Vec<f64> = cluster
-        .slurm
+        .slurm()
         .jobs()
         .filter(|j| j.state == JobState::Completed)
         .filter_map(|j| j.wait_time())
@@ -157,7 +156,7 @@ pub fn replay(cluster: &mut Cluster, trace: &[TraceEvent], sample: bool) -> Repl
     ReplayReport {
         jobs: trace.len(),
         completed: report.jobs_completed,
-        timeouts: cluster.slurm.stats.timeouts,
+        timeouts: cluster.slurm().stats.timeouts,
         makespan,
         wait: Summary::of(&waits),
         true_energy_j: report.true_energy_j,

@@ -1,18 +1,18 @@
-//! The user-facing API of §4.3, mirroring the planned C API:
+//! The §4.3 platform operations as a crate-internal routing target.
 //!
 //! * retrieve measured samples                      — all users
 //! * associate tags via the GPIO inputs             — all users
 //! * control node power states (manual on/off)      — administrators only
 //!
-//! Permissions come from the LDAP [`UserDb`] (§3.2); the power-control
-//! restriction is enforced here rather than in the board, matching the
-//! paper's split between the measurement plane and the control plane.
+//! Authentication and the admin restriction live in the session layer
+//! of [`crate::api`] — the single user entry point — so this type only
+//! routes already-authorized operations onto the boards. Nothing
+//! outside `dalek::api` constructs it.
 
 use std::collections::BTreeMap;
 
 use super::board::{BoardError, MainBoard};
 use super::probe::Sample;
-use crate::services::auth::{AuthError, UserDb};
 use crate::sim::SimTime;
 
 /// A requested power action (executed by the coordinator).
@@ -24,17 +24,13 @@ pub enum PowerAction {
 
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum ApiError {
-    #[error("restricted to administrators")]
-    AdminOnly,
-    #[error(transparent)]
-    Auth(#[from] AuthError),
     #[error(transparent)]
     Board(#[from] BoardError),
     #[error("no board for node `{0}`")]
     NoBoard(String),
 }
 
-/// The platform API over all boards in the cluster.
+/// The energy platform over all boards in the cluster.
 pub struct EnergyApi {
     boards: BTreeMap<String, MainBoard>,
     /// power actions queued for the coordinator
@@ -42,89 +38,67 @@ pub struct EnergyApi {
 }
 
 impl EnergyApi {
-    pub fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self {
             boards: BTreeMap::new(),
             pending_actions: Vec::new(),
         }
     }
 
-    pub fn add_board(&mut self, board: MainBoard) {
+    pub(crate) fn add_board(&mut self, board: MainBoard) {
         self.boards.insert(board.node.clone(), board);
     }
 
-    pub fn board(&self, node: &str) -> Result<&MainBoard, ApiError> {
+    pub(crate) fn board(&self, node: &str) -> Result<&MainBoard, ApiError> {
         self.boards
             .get(node)
             .ok_or_else(|| ApiError::NoBoard(node.into()))
     }
 
-    pub fn board_mut(&mut self, node: &str) -> Result<&mut MainBoard, ApiError> {
+    pub(crate) fn board_mut(&mut self, node: &str) -> Result<&mut MainBoard, ApiError> {
         self.boards
             .get_mut(node)
             .ok_or_else(|| ApiError::NoBoard(node.into()))
     }
 
-    pub fn boards(&self) -> impl Iterator<Item = &MainBoard> {
+    pub(crate) fn boards(&self) -> impl Iterator<Item = &MainBoard> {
         self.boards.values()
     }
 
-    /// §4.3: retrieve samples — available to all users.
-    pub fn get_samples(
+    /// §4.3: retrieve samples (authorization already established).
+    pub(crate) fn samples(
         &self,
-        db: &UserDb,
-        login: &str,
         node: &str,
         probe: u8,
         window: (SimTime, SimTime),
     ) -> Result<Vec<Sample>, ApiError> {
-        db.user(login)?; // must exist, no admin needed
         Ok(self.board(node)?.store(probe)?.window(window.0, window.1))
     }
 
-    /// §4.3: tag samples via GPIO — available to all users.
-    pub fn set_tag(
+    /// §4.3: tag samples via GPIO.
+    pub(crate) fn set_gpio_tag(
         &mut self,
-        db: &UserDb,
-        login: &str,
         node: &str,
         line: u8,
         high: bool,
     ) -> Result<(), ApiError> {
-        db.user(login)?;
         self.board_mut(node)?.set_gpio(line, high);
         Ok(())
     }
 
-    /// §4.3: manual power control — administrators only.
-    pub fn power(
-        &mut self,
-        db: &UserDb,
-        login: &str,
-        action: PowerAction,
-    ) -> Result<(), ApiError> {
-        let user = db.user(login)?;
-        if !user.admin {
-            return Err(ApiError::AdminOnly);
-        }
+    /// §4.3: queue a manual power action (admin gate is upstream).
+    pub(crate) fn queue_power(&mut self, action: PowerAction) {
         self.pending_actions.push(action);
-        Ok(())
     }
 
     /// Coordinator drains queued power actions each tick.
-    pub fn drain_actions(&mut self) -> Vec<PowerAction> {
+    pub(crate) fn drain_actions(&mut self) -> Vec<PowerAction> {
         std::mem::take(&mut self.pending_actions)
     }
 
     /// Cluster-wide measured energy, joules.
-    pub fn total_energy_j(&self) -> f64 {
+    pub(crate) fn total_energy_j(&self) -> f64 {
         self.boards.values().map(|b| b.total_energy_j()).sum()
-    }
-}
-
-impl Default for EnergyApi {
-    fn default() -> Self {
-        Self::new()
     }
 }
 
@@ -135,7 +109,7 @@ mod tests {
     use crate::util::Xoshiro256;
     use std::collections::BTreeMap;
 
-    fn setup() -> (EnergyApi, UserDb) {
+    fn setup() -> EnergyApi {
         let mut api = EnergyApi::new();
         let mut board = MainBoard::new("az4-n4090-0.dalek");
         board
@@ -144,19 +118,14 @@ mod tests {
         let sigs: BTreeMap<u8, _> = [(0u8, |_t: SimTime| 42.0)].into_iter().collect();
         board.poll(SimTime::from_ms(100), &sigs);
         api.add_board(board);
-        let mut db = UserDb::new();
-        db.add_user("alice", false).unwrap();
-        db.add_user("root", true).unwrap();
-        (api, db)
+        api
     }
 
     #[test]
-    fn any_user_reads_samples() {
-        let (api, db) = setup();
+    fn reads_samples() {
+        let api = setup();
         let samples = api
-            .get_samples(
-                &db,
-                "alice",
+            .samples(
                 "az4-n4090-0.dalek",
                 0,
                 (SimTime::ZERO, SimTime::from_ms(100)),
@@ -167,55 +136,37 @@ mod tests {
     }
 
     #[test]
-    fn unknown_user_rejected() {
-        let (api, db) = setup();
-        let e = api.get_samples(
-            &db,
-            "mallory",
-            "az4-n4090-0.dalek",
-            0,
-            (SimTime::ZERO, SimTime::from_ms(1)),
-        );
-        assert!(matches!(e, Err(ApiError::Auth(_))));
-    }
-
-    #[test]
-    fn any_user_tags() {
-        let (mut api, db) = setup();
-        api.set_tag(&db, "alice", "az4-n4090-0.dalek", 2, true)
-            .unwrap();
+    fn tags_via_gpio() {
+        let mut api = setup();
+        api.set_gpio_tag("az4-n4090-0.dalek", 2, true).unwrap();
         assert!(api.board("az4-n4090-0.dalek").unwrap().gpio().get(2));
     }
 
     #[test]
-    fn power_control_admin_only() {
-        let (mut api, db) = setup();
+    fn power_actions_queue_and_drain() {
+        let mut api = setup();
         let act = PowerAction::Off("az4-n4090-0.dalek".into());
-        assert_eq!(
-            api.power(&db, "alice", act.clone()),
-            Err(ApiError::AdminOnly)
-        );
-        api.power(&db, "root", act.clone()).unwrap();
+        api.queue_power(act.clone());
         assert_eq!(api.drain_actions(), vec![act]);
         assert!(api.drain_actions().is_empty()); // drained
     }
 
     #[test]
     fn missing_board_or_probe() {
-        let (api, db) = setup();
+        let api = setup();
         assert!(matches!(
-            api.get_samples(&db, "alice", "nope", 0, (SimTime::ZERO, SimTime::ZERO)),
+            api.samples("nope", 0, (SimTime::ZERO, SimTime::ZERO)),
             Err(ApiError::NoBoard(_))
         ));
         assert!(matches!(
-            api.get_samples(
-                &db,
-                "alice",
-                "az4-n4090-0.dalek",
-                9,
-                (SimTime::ZERO, SimTime::ZERO)
-            ),
+            api.samples("az4-n4090-0.dalek", 9, (SimTime::ZERO, SimTime::ZERO)),
             Err(ApiError::Board(_))
         ));
+    }
+
+    #[test]
+    fn total_energy_sums_boards() {
+        let api = setup();
+        assert!(api.total_energy_j() > 0.0);
     }
 }

@@ -10,17 +10,18 @@
 //!   six probes at 1000 SPS each (§4.1)
 //! * [`board`] — the main board: two chains, sample aggregation, GPIO tags
 //! * [`store`] — sample storage with windowed energy integration
-//! * [`api`] — the user-facing API of §4.3 (read samples / tag / power
-//!   control, with the admin restriction)
+//! * `api` — the §4.3 operations (read samples / tag / power control)
+//!   as a crate-internal routing target; the user-facing surface —
+//!   auth, sessions, the admin restriction — is `dalek::api`
 
-pub mod api;
+pub(crate) mod api;
 pub mod board;
 pub mod bus;
 pub mod probe;
 pub mod rails;
 pub mod store;
 
-pub use api::{ApiError, EnergyApi};
+pub(crate) use api::EnergyApi;
 pub use board::{GpioTags, MainBoard};
 pub use bus::I2cBus;
 pub use probe::{Ina228Probe, PowerSignal, ProbeConfig, Sample};

@@ -185,4 +185,86 @@ mod tests {
         assert_eq!(s.min_w(), 5.0);
         assert_eq!(s.max_w(), 500.0);
     }
+
+    #[test]
+    fn empty_store_queries_are_empty() {
+        let s = store();
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert!(s.window(SimTime::ZERO, SimTime::from_secs(10)).is_empty());
+        assert_eq!(s.window_energy_j(SimTime::ZERO, SimTime::from_secs(10)), 0.0);
+        assert_eq!(s.energy_j(), 0.0);
+        assert_eq!(s.dropped, 0);
+    }
+
+    #[test]
+    fn inverted_window_is_empty_not_panicking() {
+        let mut s = store();
+        for i in 0..50 {
+            s.push(sample(i, 10.0, 0));
+        }
+        // from > to: no sample satisfies t >= from && t <= to
+        let w = s.window(SimTime::from_ms(40), SimTime::from_ms(10));
+        assert!(w.is_empty());
+        assert_eq!(
+            s.window_energy_j(SimTime::from_ms(40), SimTime::from_ms(10)),
+            0.0
+        );
+    }
+
+    #[test]
+    fn window_outside_data_range_is_empty() {
+        let mut s = store();
+        for i in 0..10 {
+            s.push(sample(i, 10.0, 0));
+        }
+        // entirely after the data
+        assert!(s
+            .window(SimTime::from_secs(100), SimTime::from_secs(200))
+            .is_empty());
+        // degenerate single-instant window on an exact timestamp: closed
+        // bounds include it
+        assert_eq!(
+            s.window(SimTime::from_ms(5), SimTime::from_ms(5)).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn overflow_increments_dropped_and_window_sees_residents_only() {
+        let mut s = SampleStore::new(8, SimTime::from_ms(1));
+        for i in 0..20 {
+            s.push(sample(i, i as f64, 0));
+        }
+        assert_eq!(s.dropped, 12);
+        assert_eq!(s.len(), 8);
+        // a window spanning everything only returns the ring residents
+        // (t = 12..=19), oldest first
+        let w = s.window(SimTime::ZERO, SimTime::from_ms(100));
+        assert_eq!(w.len(), 8);
+        assert_eq!(w[0].power_w, 12.0);
+        assert_eq!(w[7].power_w, 19.0);
+        // but the running aggregates kept everything
+        assert_eq!(s.total_samples(), 20);
+        let expect: f64 = (0..20).map(|i| i as f64 * 1e-3).sum();
+        assert!((s.energy_j() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windowed_energy_matches_running_integral_when_ring_holds_all() {
+        let mut s = store(); // cap 1000, no eviction for 600 samples
+        let mut pushed = 0.0;
+        for i in 0..600 {
+            let w = 50.0 + (i % 7) as f64 * 3.5;
+            s.push(sample(i, w, 0));
+            pushed += w * 1e-3;
+        }
+        assert_eq!(s.dropped, 0);
+        let full = s.window_energy_j(SimTime::ZERO, SimTime::from_ms(599));
+        assert!((full - s.energy_j()).abs() < 1e-9);
+        assert!((full - pushed).abs() < 1e-9);
+        // and a half window is strictly smaller but positive
+        let half = s.window_energy_j(SimTime::ZERO, SimTime::from_ms(299));
+        assert!(half > 0.0 && half < full);
+    }
 }

@@ -11,7 +11,7 @@
 //! scheduler, energy platform logic and the PJRT compute path are real
 //! code. The crate is organized bottom-up:
 //!
-//! * [`util`] — PRNG, tables, units, stats, CLI substrates
+//! * [`util`] — PRNG, tables, units, stats, CLI and JSON substrates
 //! * [`sim`] — deterministic discrete-event engine
 //! * [`hw`] — calibrated hardware catalog (paper Tables 1–2, Figs. 4–9)
 //! * [`net`] — flow-level network simulation (§2.4, Table 3)
@@ -21,8 +21,13 @@
 //! * [`energy`] — the INA228/I2C energy measurement platform (§4)
 //! * [`bench`] — executors regenerating every table and figure (§5)
 //! * [`runtime`] — PJRT client running the AOT-compiled JAX/Pallas payloads
-//! * [`coordinator`] — the frontend daemon tying everything together
+//! * [`api`] — the unified session-based user API: log in once, then
+//!   drive jobs (§3.4–3.5), the energy platform (§4.3) and reports
+//!   through one typed request/response protocol with a JSON wire codec
+//! * [`coordinator`] — the frontend daemon: trace replay over the API
+//!   (the cluster façade itself is [`api::ClusterApi`])
 
+pub mod api;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -9,9 +9,17 @@
 //!                                               end-to-end trace replay
 //! dalek payloads [--artifacts DIR]              list AOT payloads
 //! dalek exec <payload> [--iters N] [--artifacts DIR]
-//!                                               run one payload on PJRT
+//!                                               run one payload through the API
+//! dalek api <request.json|-> [--artifacts DIR]  execute protocol requests
 //! ```
+//!
+//! Every cluster operation goes through the session-based
+//! `dalek::api::ClusterApi`; `dalek api` exposes the raw JSON protocol
+//! (one request object, or an array forming a scripted session — a
+//! `login` response's token is threaded into subsequent requests that
+//! omit `"session"`).
 
+use dalek::api::{ClusterApi, Request, Response, SessionId};
 use dalek::bench;
 use dalek::config::ClusterConfig;
 use dalek::coordinator::{trace, Cluster};
@@ -22,6 +30,7 @@ use dalek::runtime::PjRtRuntime;
 use dalek::services::pxe::PxeInstaller;
 use dalek::sim::SimTime;
 use dalek::util::cli::Args;
+use dalek::util::json::Json;
 use dalek::util::{units, Table};
 
 const VALUE_FLAGS: &[&str] = &[
@@ -48,6 +57,7 @@ fn main() {
         "run" => cmd_run(&args),
         "payloads" => cmd_payloads(&args),
         "exec" => cmd_exec(&args),
+        "api" => cmd_api(&args),
         other => {
             eprintln!("unknown command `{other}`\n{}", usage());
             std::process::exit(2);
@@ -67,7 +77,8 @@ fn usage() -> String {
      \x20 dalek bench <fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab3|energy|idle|pxe|all> [--seed N] [--csv]\n\
      \x20 dalek run [--jobs N] [--seed N] [--sample] [--no-suspend] [--artifacts DIR]\n\
      \x20 dalek payloads [--artifacts DIR]\n\
-     \x20 dalek exec <payload> [--iters N] [--artifacts DIR]\n"
+     \x20 dalek exec <payload> [--iters N] [--artifacts DIR]\n\
+     \x20 dalek api <request.json|-> [--artifacts DIR]\n"
         .to_string()
 }
 
@@ -206,7 +217,7 @@ fn bench_idle(csv: bool) -> anyhow::Result<()> {
             }
         }
         cluster.run_until(SimTime::from_hours(2), false);
-        let w = cluster.slurm.cluster_watts();
+        let w = cluster.slurm().cluster_watts();
         t.row(&[
             label.to_string(),
             format!("{w:.0}"),
@@ -321,8 +332,11 @@ fn cmd_exec(args: &Args) -> anyhow::Result<()> {
         .get(1)
         .ok_or_else(|| anyhow::anyhow!("usage: dalek exec <payload>"))?;
     let iters: u32 = args.get_or("iters", 5)?;
-    let mut rt = PjRtRuntime::load(artifacts_flag(args))?;
-    let r = rt.execute_best_of(payload, 42, iters)?;
+    let dir = artifacts_flag(args);
+    // the runtime path is a cluster operation too: session in, exec out
+    let mut cluster = ClusterApi::new(ClusterConfig::dalek_default(), Some(dir.as_str()))?;
+    let sid = cluster.login("root")?;
+    let r = cluster.exec_payload(sid, payload, 42, iters)?;
     println!(
         "{}: best of {iters}: {} ({}), checksum {:.6} over {} elems",
         r.payload,
@@ -331,5 +345,54 @@ fn cmd_exec(args: &Args) -> anyhow::Result<()> {
         r.output_sum,
         r.output_elems,
     );
+    Ok(())
+}
+
+/// `dalek api` — execute one JSON request (or an array of them) against
+/// a freshly built cluster, printing one response JSON per line. When a
+/// request omits `"session"`, the token from the last `login` response
+/// is threaded in, so a file like
+/// `[{"op":"login","user":"root"}, {"op":"cluster_report"}]`
+/// forms a scripted session.
+fn cmd_api(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: dalek api <request.json> (`-` for stdin)"))?;
+    let src = if path == "-" {
+        use std::io::Read as _;
+        let mut s = String::new();
+        std::io::stdin().read_to_string(&mut s)?;
+        s
+    } else {
+        std::fs::read_to_string(path)?
+    };
+    let dir = artifacts_flag(args);
+    let have_artifacts = std::path::Path::new(&dir).join("manifest.json").exists();
+    let mut cluster = ClusterApi::new(
+        ClusterConfig::dalek_default(),
+        have_artifacts.then_some(dir.as_str()),
+    )?;
+    let parsed = Json::parse(&src).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let entries = match parsed {
+        Json::Arr(a) => a,
+        v => vec![v],
+    };
+    let mut last: Option<SessionId> = None;
+    for entry in entries {
+        let resp = match Request::from_json(&entry) {
+            Ok((sid, req)) => match cluster.handle(sid.or(last), &req) {
+                Ok(resp) => {
+                    if let Response::Session { id, .. } = &resp {
+                        last = Some(*id);
+                    }
+                    resp
+                }
+                Err(e) => Response::from_error(&e),
+            },
+            Err(e) => Response::from_error(&e),
+        };
+        println!("{}", resp.to_json());
+    }
     Ok(())
 }

@@ -1,6 +1,11 @@
-//! User-facing command front-ends (`sbatch` / `srun` / `salloc`) with
-//! MUNGE credential validation (§3.4) and the SPANK/PAM login gate
-//! wiring (§3.5).
+//! `sbatch` / `srun` / `salloc` command back-ends with per-RPC MUNGE
+//! credential round-trips (§3.4) and the SPANK/PAM login gate wiring
+//! (§3.5) — a crate-internal routing target.
+//!
+//! User authentication (directory lookup, admin policy) lives in the
+//! session layer of [`crate::api`]; this type receives an
+//! already-resolved uid and still performs the credential mint +
+//! validate round-trip that slurmctld and slurmd do on every RPC.
 //!
 //! `sbatch` queues and returns immediately; `srun` blocks (drives the
 //! simulation) until the job completes; `salloc` reserves nodes and
@@ -8,7 +13,7 @@
 
 use super::job::{JobId, JobSpec, JobState};
 use super::scheduler::{Slurm, SlurmError};
-use crate::services::auth::{AuthError, LoginGate, Munge, UserDb};
+use crate::services::auth::{AuthError, LoginGate, Munge};
 use crate::sim::SimTime;
 
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -19,9 +24,11 @@ pub enum ApiError {
     Slurm(#[from] SlurmError),
     #[error("job did not reach a terminal state")]
     Incomplete,
+    #[error("deadline reached before {0} finished")]
+    Deadline(JobId),
 }
 
-/// The authenticated front-end over a controller.
+/// The credentialed command back-end over a controller.
 pub struct SlurmApi {
     pub ctl: Slurm,
     munge: Munge,
@@ -29,7 +36,7 @@ pub struct SlurmApi {
 }
 
 impl SlurmApi {
-    pub fn new(ctl: Slurm, munge_key: &[u8]) -> Self {
+    pub(crate) fn new(ctl: Slurm, munge_key: &[u8]) -> Self {
         Self {
             ctl,
             munge: Munge::new(munge_key),
@@ -37,34 +44,37 @@ impl SlurmApi {
         }
     }
 
-    fn authenticate(&self, db: &UserDb, login: &str, now: SimTime) -> Result<(), ApiError> {
-        let user = db.user(login)?;
+    fn authenticate(&self, uid: u32, payload: &[u8], now: SimTime) -> Result<(), ApiError> {
         // mint + validate a credential round-trip (what slurmctld and
         // slurmd do on every RPC)
-        let cred = self.munge.encode(user.uid, login.as_bytes(), now);
+        let cred = self.munge.encode(uid, payload, now);
         self.munge.decode(&cred, now).map_err(ApiError::Auth)?;
         Ok(())
     }
 
     /// sbatch: queue and return the job id.
-    pub fn sbatch(
+    pub(crate) fn sbatch(
         &mut self,
-        db: &UserDb,
+        uid: u32,
         spec: JobSpec,
         now: SimTime,
     ) -> Result<JobId, ApiError> {
-        self.authenticate(db, &spec.user, now)?;
+        self.authenticate(uid, spec.user.as_bytes(), now)?;
         Ok(self.ctl.submit_at(spec, now)?)
     }
 
     /// srun: submit and block (advance simulation) until terminal.
-    pub fn srun(
+    /// `deadline` bounds how far the shared sim clock may be driven on
+    /// behalf of this call (None = unbounded, operator/admin use);
+    /// hitting it returns `Incomplete` with the job left in place.
+    pub(crate) fn srun(
         &mut self,
-        db: &UserDb,
+        uid: u32,
         spec: JobSpec,
         now: SimTime,
+        deadline: Option<SimTime>,
     ) -> Result<(JobId, JobState), ApiError> {
-        let id = self.sbatch(db, spec, now)?;
+        let id = self.sbatch(uid, spec, now)?;
         // drive the sim until the job terminates
         loop {
             let state = self.ctl.job(id).expect("submitted").state;
@@ -75,6 +85,9 @@ impl SlurmApi {
                 return Ok((id, state));
             }
             let before = self.ctl.now();
+            if deadline.is_some_and(|d| before >= d) {
+                return Err(ApiError::Deadline(id));
+            }
             self.ctl.run_until(before + SimTime::from_mins(10));
             if self.ctl.now() == before && self.ctl.pending_count() > 0 {
                 return Err(ApiError::Incomplete);
@@ -84,15 +97,15 @@ impl SlurmApi {
 
     /// salloc: reserve nodes and open the SSH gate for the allocation.
     /// Returns the job id once nodes are granted (Configuring/Running).
-    pub fn salloc(
+    pub(crate) fn salloc(
         &mut self,
-        db: &UserDb,
+        uid: u32,
         spec: JobSpec,
         now: SimTime,
     ) -> Result<JobId, ApiError> {
         let user = spec.user.clone();
         let limit = spec.time_limit;
-        let id = self.sbatch(db, spec, now)?;
+        let id = self.sbatch(uid, spec, now)?;
         // advance until the allocation exists (≤ boot budget)
         let deadline = now + self.ctl.power_policy.max_boot_delay + SimTime::from_mins(10);
         while self.ctl.job(id).expect("submitted").state == JobState::Pending
@@ -122,38 +135,53 @@ mod tests {
     use super::*;
     use crate::config::ClusterConfig;
 
-    fn api() -> (SlurmApi, UserDb) {
+    const UID: u32 = 10_001;
+
+    fn api() -> SlurmApi {
         let ctl = Slurm::from_config(&ClusterConfig::dalek_default());
-        let mut db = UserDb::new();
-        db.add_user("alice", false).unwrap();
-        (SlurmApi::new(ctl, b"dalek-munge-key"), db)
+        SlurmApi::new(ctl, b"dalek-munge-key")
     }
 
     #[test]
-    fn sbatch_requires_known_user() {
-        let (mut api, db) = api();
-        let e = api.sbatch(&db, JobSpec::cpu("mallory", "az4-n4090", 1, 10), SimTime::ZERO);
-        assert!(matches!(e, Err(ApiError::Auth(_))));
+    fn sbatch_queues_with_credential_round_trip() {
+        let mut api = api();
         assert!(api
-            .sbatch(&db, JobSpec::cpu("alice", "az4-n4090", 1, 10), SimTime::ZERO)
+            .sbatch(UID, JobSpec::cpu("alice", "az4-n4090", 1, 10), SimTime::ZERO)
             .is_ok());
     }
 
     #[test]
     fn srun_blocks_to_completion() {
-        let (mut api, db) = api();
+        let mut api = api();
         let (id, state) = api
-            .srun(&db, JobSpec::cpu("alice", "az5-a890m", 2, 120), SimTime::ZERO)
+            .srun(UID, JobSpec::cpu("alice", "az5-a890m", 2, 120), SimTime::ZERO, None)
             .unwrap();
         assert_eq!(state, JobState::Completed);
         assert!(api.ctl.job(id).unwrap().finished.is_some());
     }
 
     #[test]
+    fn srun_deadline_bounds_clock_advance() {
+        let mut api = api();
+        // fill the partition so a second job queues behind it
+        api.sbatch(UID, JobSpec::cpu("alice", "az5-a890m", 4, 7200), SimTime::ZERO)
+            .unwrap();
+        let e = api.srun(
+            UID,
+            JobSpec::cpu("alice", "az5-a890m", 1, 60),
+            SimTime::ZERO,
+            Some(SimTime::from_mins(30)),
+        );
+        assert!(matches!(e, Err(ApiError::Deadline(_))));
+        // the clock stopped within one stride of the deadline
+        assert!(api.ctl.now() <= SimTime::from_mins(40));
+    }
+
+    #[test]
     fn salloc_grants_ssh_on_allocated_nodes() {
-        let (mut api, db) = api();
+        let mut api = api();
         let id = api
-            .salloc(&db, JobSpec::cpu("alice", "iml-ia770", 2, 600), SimTime::ZERO)
+            .salloc(UID, JobSpec::cpu("alice", "iml-ia770", 2, 600), SimTime::ZERO)
             .unwrap();
         let job = api.ctl.job(id).unwrap();
         assert!(matches!(
@@ -170,10 +198,10 @@ mod tests {
 
     #[test]
     fn expired_allocation_evicts_shells() {
-        let (mut api, db) = api();
+        let mut api = api();
         let mut spec = JobSpec::cpu("alice", "az5-a890m", 1, 30);
         spec.time_limit = SimTime::from_secs(60);
-        let id = api.salloc(&db, spec, SimTime::ZERO).unwrap();
+        let id = api.salloc(UID, spec, SimTime::ZERO).unwrap();
         let node = api.ctl.node_infos()[api.ctl.job(id).unwrap().allocated[0]]
             .name
             .clone();

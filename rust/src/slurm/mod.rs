@@ -5,15 +5,16 @@
 //!   queueing, node allocation, and the §3.4 energy-aware powering
 //!   policy (suspend after 10 idle minutes, WoL resume on demand,
 //!   ≤ 2 min boot delay between reservation and job start)
-//! * [`api`] — `sbatch`/`srun`/`salloc`-style front-ends with
-//!   MUNGE-credential validation (§3.4)
+//! * `api` — `sbatch`/`srun`/`salloc` back-ends with per-RPC MUNGE
+//!   credential round-trips (§3.4); crate-internal — the user-facing
+//!   surface is the session-based `dalek::api` layer
 
-pub mod api;
+pub(crate) mod api;
 pub mod job;
 pub mod quota;
 pub mod scheduler;
 
-pub use api::SlurmApi;
+pub(crate) use api::SlurmApi;
 pub use job::{Job, JobId, JobSpec, JobState};
 pub use quota::{QuotaDb, QuotaDecision};
 pub use scheduler::{NodeInfo, SchedPolicy, Slurm, SlurmStats};

@@ -1,8 +1,12 @@
-//! Minimal JSON parser (serde_json is not vendored offline). Parses the
-//! `artifacts/manifest.json` the AOT pipeline emits, and any similarly
-//! tame JSON: objects, arrays, strings (with escapes), numbers, bools,
-//! null. No streaming, no serialization beyond what the coordinator's
-//! metrics endpoint needs.
+//! Minimal JSON parser and serializer (serde_json is not vendored
+//! offline). Parses the `artifacts/manifest.json` the AOT pipeline
+//! emits, and any similarly tame JSON: objects, arrays, strings (with
+//! escapes), numbers, bools, null. Serialization (`Display` /
+//! [`Json::to_string`]) round-trips the parser's grammar exactly —
+//! escaped strings, integral-vs-float numbers, nested containers — and
+//! is what the `api` wire codec and the coordinator metrics endpoint
+//! emit. Non-finite numbers (which JSON cannot represent) serialize as
+//! `null`.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -66,8 +70,65 @@ impl Json {
             _ => None,
         }
     }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
+    }
+
+    /// Build an object from `(key, value)` pairs.
+    pub fn object<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Build an array from values.
+    pub fn array(items: impl IntoIterator<Item = Json>) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Self {
+        Json::Str(s)
+    }
+}
+impl From<f64> for Json {
+    fn from(n: f64) -> Self {
+        Json::Num(n)
+    }
+}
+impl From<u64> for Json {
+    fn from(n: u64) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<u32> for Json {
+    fn from(n: u32) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<u8> for Json {
+    fn from(n: u8) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(n: usize) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
     }
 }
 
@@ -77,7 +138,10 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Inf; null is the lossless-grammar choice
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -368,5 +432,106 @@ mod tests {
         assert_eq!(Json::Num(1.5).as_u64(), None);
         assert_eq!(Json::Num(-2.0).as_u64(), None);
         assert_eq!(Json::Num(7.0).as_u64(), Some(7));
+    }
+
+    #[test]
+    fn builders_compose() {
+        let j = Json::object([
+            ("op", Json::from("login")),
+            ("user", Json::from("alice")),
+            ("ids", Json::array([Json::from(1u64), Json::from(2u64)])),
+        ]);
+        assert_eq!(j.get("op").unwrap().as_str(), Some("login"));
+        assert_eq!(j.get("ids").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::parse(&Json::Num(f64::NAN).to_string()).unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn control_chars_and_quotes_round_trip() {
+        let s = "line1\nline2\ttab \"quoted\" back\\slash \r \u{8} \u{c} \u{1} end";
+        let j = Json::Str(s.into());
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    // ---- round-trip property tests (xoshiro-driven, proptest is not
+    // vendored; same discipline as tests/properties.rs) ----
+
+    use crate::util::Xoshiro256;
+
+    fn random_string(rng: &mut Xoshiro256) -> String {
+        let len = rng.uniform_u64(0, 12) as usize;
+        (0..len)
+            .map(|_| {
+                match rng.uniform_u64(0, 5) {
+                    0 => char::from_u32(rng.uniform_u64(1, 0x1f) as u32).unwrap(), // control
+                    1 => ['"', '\\', '/', '\n', '\t'][rng.uniform_u64(0, 4) as usize],
+                    2 => 'µ',                                                      // 2-byte utf8
+                    3 => '→',                                                      // 3-byte utf8
+                    _ => char::from_u32(rng.uniform_u64(0x20, 0x7e) as u32).unwrap(),
+                }
+            })
+            .collect()
+    }
+
+    fn random_json(rng: &mut Xoshiro256, depth: u32) -> Json {
+        let pick = if depth == 0 {
+            rng.uniform_u64(0, 3) // leaves only
+        } else {
+            rng.uniform_u64(0, 5)
+        };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => {
+                // mix integral, fractional and large-exponent numbers
+                match rng.uniform_u64(0, 2) {
+                    0 => Json::Num(rng.uniform_u64(0, 1 << 50) as f64),
+                    1 => Json::Num(rng.uniform_f64(-1e6, 1e6)),
+                    _ => Json::Num(rng.uniform_f64(-1.0, 1.0) * 1e300),
+                }
+            }
+            3 => Json::Str(random_string(rng)),
+            4 => Json::Arr(
+                (0..rng.uniform_u64(0, 4))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.uniform_u64(0, 4))
+                    .map(|_| (random_string(rng), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn prop_serialize_parse_round_trips() {
+        for case in 0..500u64 {
+            let mut rng = Xoshiro256::new(0x150_0 ^ case);
+            let j = random_json(&mut rng, 3);
+            let s = j.to_string();
+            let back = Json::parse(&s).unwrap_or_else(|e| panic!("case {case}: `{s}`: {e}"));
+            assert_eq!(back, j, "case {case}: `{s}`");
+        }
+    }
+
+    #[test]
+    fn prop_reserialization_is_fixpoint() {
+        // parse(to_string(x)) == x implies to_string is stable after one
+        // round trip; check the second serialization is byte-identical
+        for case in 0..200u64 {
+            let mut rng = Xoshiro256::new(0xF1F ^ case);
+            let j = random_json(&mut rng, 3);
+            let s1 = j.to_string();
+            let s2 = Json::parse(&s1).unwrap().to_string();
+            assert_eq!(s1, s2, "case {case}");
+        }
     }
 }

@@ -1,0 +1,159 @@
+//! End-to-end protocol tests: JSON wire → decode → execute → response,
+//! over the composed cluster (no artifacts required). This is the
+//! contract the `dalek api` CLI and any future network transport rely
+//! on.
+
+use dalek::api::{ClusterApi, JobRequest, Request, Response, SessionId};
+use dalek::config::ClusterConfig;
+use dalek::sim::SimTime;
+use dalek::slurm::JobState;
+use dalek::util::json::Json;
+
+fn cluster() -> ClusterApi {
+    ClusterApi::new(ClusterConfig::dalek_default(), None).unwrap()
+}
+
+/// The acceptance round trip: encode a typed `Request` to JSON, decode
+/// it back, execute it, and check the typed `Response`.
+#[test]
+fn encode_decode_execute_round_trip() {
+    let mut c = cluster();
+    c.add_user("alice");
+    let sid = c.login("alice").unwrap();
+
+    // encode → wire text
+    let req = Request::SubmitJob(JobRequest {
+        partition: "az5-a890m".into(),
+        nodes: 2,
+        duration: SimTime::from_secs(120),
+        time_limit: None,
+        payload: None,
+        iters: 1,
+        user: None,
+    });
+    let wire = req.to_json(Some(sid)).to_string();
+
+    // wire text → decode (must reproduce the typed request exactly)
+    let (decoded_sid, decoded) = Request::parse(&wire).unwrap();
+    assert_eq!(decoded_sid, Some(sid));
+    assert_eq!(decoded, req);
+
+    // execute → typed response
+    let resp = c.handle(decoded_sid, &decoded).unwrap();
+    let Response::Submitted { job } = resp else {
+        panic!("expected Submitted, got {resp:?}");
+    };
+
+    // and the job is real: drive the sim, then query it over the wire
+    let adv = Request::Advance {
+        to: SimTime::from_mins(10),
+        sample: false,
+    };
+    // alice is not an admin — advancing the cluster clock is denied
+    assert!(c.handle(Some(sid), &adv).is_err());
+    let root = c.login("root").unwrap();
+    c.handle(Some(root), &adv).unwrap();
+
+    let info_wire = Request::JobInfo { job }.to_json(Some(sid)).to_string();
+    let (isid, ireq) = Request::parse(&info_wire).unwrap();
+    let resp = c.handle(isid, &ireq).unwrap();
+    let Response::Job(view) = resp else {
+        panic!("expected Job, got {resp:?}");
+    };
+    assert_eq!(view.job, job);
+    assert_eq!(view.user, "alice");
+    assert_eq!(view.state, JobState::Completed);
+}
+
+#[test]
+fn scripted_json_session_flow() {
+    // the exact flow `dalek api` scripts: login, submit, advance,
+    // report — raw JSON in, raw JSON out
+    let mut c = cluster();
+    let login = c.handle_json(r#"{"op": "login", "user": "root"}"#);
+    let login = Json::parse(&login).unwrap();
+    assert_eq!(login.get("ok").unwrap().as_bool(), Some(true));
+    let sid = login.get("session").unwrap().as_u64().unwrap();
+
+    let submit = c.handle_json(&format!(
+        r#"{{"op": "submit_job", "session": {sid}, "partition": "az4-n4090",
+            "nodes": 1, "duration_s": 60}}"#
+    ));
+    let submit = Json::parse(&submit).unwrap();
+    assert_eq!(submit.get("ok").unwrap().as_bool(), Some(true), "{submit}");
+    assert!(submit.get("job").unwrap().as_u64().is_some());
+
+    let adv = c.handle_json(&format!(
+        r#"{{"op": "advance", "session": {sid}, "to_s": 600, "sample": true}}"#
+    ));
+    assert_eq!(Json::parse(&adv).unwrap().get("ok").unwrap().as_bool(), Some(true));
+
+    let report = c.handle_json(&format!(r#"{{"op": "cluster_report", "session": {sid}}}"#));
+    let report = Json::parse(&report).unwrap();
+    assert_eq!(report.get("jobs_completed").unwrap().as_u64(), Some(1));
+    assert!(report.get("true_energy_j").unwrap().as_f64().unwrap() > 0.0);
+    assert!(report.get("samples").unwrap().as_u64().unwrap() > 0);
+}
+
+#[test]
+fn wire_errors_never_panic() {
+    let mut c = cluster();
+    for bad in [
+        "",
+        "{",
+        "[]",
+        r#"{"op": "fire_exterminator"}"#,
+        r#"{"op": "submit_job"}"#,
+        r#"{"op": "submit_job", "session": 999, "partition": "az4-n4090", "nodes": 1, "duration_s": 60}"#,
+        r#"{"op": "cluster_report"}"#,
+    ] {
+        let out = c.handle_json(bad);
+        let j = Json::parse(&out).unwrap_or_else(|e| panic!("unparseable reply for {bad:?}: {e}"));
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false), "{bad:?} -> {out}");
+        assert!(j.get("error").unwrap().as_str().is_some());
+    }
+}
+
+#[test]
+fn salloc_over_the_wire_grants_and_reports_nodes() {
+    let mut c = cluster();
+    c.add_user("alice");
+    let sid = c.login("alice").unwrap();
+    let req = Request::AllocNodes(JobRequest {
+        partition: "iml-ia770".into(),
+        nodes: 2,
+        duration: SimTime::from_secs(300),
+        time_limit: None,
+        payload: None,
+        iters: 1,
+        user: None,
+    });
+    let wire = req.to_json(Some(sid)).to_string();
+    let (s, r) = Request::parse(&wire).unwrap();
+    let resp = c.handle(s, &r).unwrap();
+    let Response::Allocated { nodes, .. } = resp else {
+        panic!("expected Allocated, got {resp:?}");
+    };
+    assert_eq!(nodes.len(), 2);
+    assert!(nodes.iter().all(|n| n.starts_with("iml-ia770-")));
+}
+
+#[test]
+fn admin_ops_are_fenced_on_the_wire() {
+    let mut c = cluster();
+    c.add_user("alice");
+    let sid = c.login("alice").unwrap();
+    let power = Request::Power {
+        node: "az4-n4090-0".into(),
+        on: false,
+    };
+    let out = c.handle(Some(sid), &power);
+    assert!(out.is_err(), "non-admin power control must be denied");
+    // stale/foreign tokens too
+    let out = c.handle(Some(SessionId(424_242)), &power);
+    assert!(out.is_err());
+    // root may
+    let root = c.login("root").unwrap();
+    let resp = c.handle(Some(root), &power).unwrap();
+    assert!(matches!(resp, Response::PowerQueued { on: false, .. }));
+}

@@ -1,30 +1,32 @@
 //! Integration tests over the composed stack: runtime + coordinator +
 //! scheduler + energy platform + services, including the PJRT artifact
-//! path (these hard-require `make artifacts`, unlike the lib tests).
+//! path (artifact-backed tests skip with a note when `make artifacts`
+//! has not been run, same convention as the lib tests).
 
+use dalek::api::JobRequest;
 use dalek::config::ClusterConfig;
 use dalek::coordinator::{trace, Cluster};
 use dalek::net::{DhcpDns, FlowNet, Topology};
 use dalek::runtime::PjRtRuntime;
-use dalek::services::auth::UserDb;
 use dalek::services::nfs::NfsServer;
 use dalek::sim::SimTime;
-use dalek::slurm::{JobSpec, JobState, SlurmApi, Slurm};
+use dalek::slurm::{JobSpec, JobState};
 
-fn artifacts() -> &'static str {
+fn artifacts() -> Option<&'static str> {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    assert!(
-        std::path::Path::new(dir).join("manifest.json").exists(),
-        "integration tests require `make artifacts`"
-    );
-    dir
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping artifact-backed test: run `make artifacts`");
+        return None;
+    }
+    Some(dir)
 }
 
 #[test]
 fn pjrt_round_trip_all_payloads() {
+    let Some(dir) = artifacts() else { return };
     // every artifact in the manifest must compile and execute on the
     // CPU PJRT client with finite output — the request-path contract
-    let mut rt = PjRtRuntime::load(artifacts()).expect("runtime");
+    let mut rt = PjRtRuntime::load(dir).expect("runtime");
     let names: Vec<String> = rt.payload_names().iter().map(|s| s.to_string()).collect();
     assert!(names.len() >= 7, "expected all payloads, got {names:?}");
     for name in names {
@@ -36,7 +38,8 @@ fn pjrt_round_trip_all_payloads() {
 
 #[test]
 fn pjrt_gemm_numerics_match_manifest_shape() {
-    let mut rt = PjRtRuntime::load(artifacts()).expect("runtime");
+    let Some(dir) = artifacts() else { return };
+    let mut rt = PjRtRuntime::load(dir).expect("runtime");
     let r = rt.execute("gemm512", 7).expect("exec");
     assert_eq!(r.output_elems, 512 * 512);
     assert_eq!(r.flops, 2 * 512u64.pow(3));
@@ -47,7 +50,8 @@ fn full_stack_trace_with_payloads_and_sampling() {
     // the E2E composition: payload jobs execute real XLA compute, the
     // scheduler powers nodes, probes sample at 1 kSPS, and the measured
     // energy agrees with the scheduler's exact integration
-    let mut cluster = Cluster::new(ClusterConfig::dalek_default(), Some(artifacts())).unwrap();
+    let Some(dir) = artifacts() else { return };
+    let mut cluster = Cluster::new(ClusterConfig::dalek_default(), Some(dir)).unwrap();
     cluster.add_user("alice");
     let mut ids = Vec::new();
     for (i, payload) in ["gemm256", "cnn_small", "mlp_infer"].iter().enumerate() {
@@ -66,7 +70,7 @@ fn full_stack_trace_with_payloads_and_sampling() {
     }
     cluster.run_until(SimTime::from_mins(30), true);
     for id in ids {
-        let j = cluster.slurm.job(id).expect("job");
+        let j = cluster.slurm().job(id).expect("job");
         assert_eq!(j.state, JobState::Completed, "{id}: {:?}", j.state);
     }
     let r = cluster.report();
@@ -76,15 +80,24 @@ fn full_stack_trace_with_payloads_and_sampling() {
 }
 
 #[test]
-fn srun_through_api_with_munge() {
-    let ctl = Slurm::from_config(&ClusterConfig::dalek_default());
-    let mut db = UserDb::new();
-    db.add_user("alice", false).unwrap();
-    let mut api = SlurmApi::new(ctl, b"integration-key");
-    let (_, state) = api
-        .srun(&db, JobSpec::cpu("alice", "az4-a7900", 4, 180), SimTime::ZERO)
-        .expect("srun");
+fn srun_through_session_api() {
+    // the full credential path: LDAP lookup + MUNGE mint/verify at
+    // login, then srun through the session — no (db, login) threading
+    let mut cluster = Cluster::new(ClusterConfig::dalek_default(), None).unwrap();
+    cluster.add_user("alice");
+    let sid = cluster.login("alice").expect("login");
+    let req = JobRequest {
+        partition: "az4-a7900".into(),
+        nodes: 4,
+        duration: SimTime::from_secs(180),
+        time_limit: None,
+        payload: None,
+        iters: 1,
+        user: None,
+    };
+    let (id, state) = cluster.run_request(sid, &req, SimTime::ZERO).expect("srun");
     assert_eq!(state, JobState::Completed);
+    assert_eq!(cluster.job_info(sid, id).unwrap().user, "alice");
 }
 
 #[test]
@@ -167,9 +180,9 @@ suspend_after_mins = 1
         .submit(JobSpec::cpu("root", "az5-a890m", 2, 30), SimTime::ZERO)
         .unwrap();
     cluster.run_until(SimTime::from_mins(10), false);
-    assert_eq!(cluster.slurm.job(id).unwrap().state, JobState::Completed);
+    assert_eq!(cluster.slurm().job(id).unwrap().state, JobState::Completed);
     // 1-minute suspend policy: nodes back to suspended well within 10 min
-    for n in cluster.slurm.node_infos() {
+    for n in cluster.slurm().node_infos() {
         assert!(matches!(
             n.state,
             dalek::power::PowerState::Suspended
