@@ -1,0 +1,71 @@
+//! Bench: streaming segment-batched energy sampling throughput.
+//!
+//! The perf trajectory seed for the kernel refactor: replay a
+//! 24-simulated-hour, idle-heavy trace (the §3.4 sweet spot — long
+//! constant-power stretches) with 1 kSPS × 16-node sampling ON, and
+//! report wall time plus generated samples per wall-second.
+//!
+//! Pre-refactor, `run_until(sample = true)` replayed cloned per-node
+//! power histories through the per-conversion probe loop:
+//! O(simulated-seconds × probes × 4 kSPS) ≈ 5.5 G conversions for this
+//! trace, regardless of how little actually happened. The streaming
+//! sampler's cost is proportional to power *changes* (a few hundred
+//! here), so the 1.38 G generated samples cost a few closed-form
+//! batches per segment plus ring materialization.
+
+use dalek::config::ClusterConfig;
+use dalek::coordinator::{trace, Cluster};
+use dalek::sim::SimTime;
+use dalek::util::benchkit;
+
+fn main() {
+    println!("=== streaming sampler — 24 h idle-heavy trace ===\n");
+
+    // ~12 short jobs across the day: the cluster is suspended or idle
+    // for the overwhelming majority of the 24 h window
+    let make_trace = || {
+        let mut gen = trace::TraceGen::dalek_mix(0x5A9);
+        gen.payloads.clear();
+        gen.jobs_per_hour = 0.5;
+        gen.generate(12)
+    };
+    let tr = make_trace();
+    let day = SimTime::from_hours(24);
+
+    let run = |sample: bool| {
+        let mut c = Cluster::new(ClusterConfig::dalek_default(), None).expect("cluster");
+        for ev in &tr {
+            c.submit(ev.spec.clone(), ev.at).expect("valid trace");
+        }
+        c.run_until(day, sample);
+        c.report()
+    };
+
+    // correctness anchor before timing: measured tracks truth
+    let rep = run(true);
+    assert!(rep.samples > 1_000_000_000, "expected ≥1 G samples over 24 h");
+    let rel = (rep.measured_energy_j - rep.true_energy_j).abs() / rep.true_energy_j;
+    assert!(rel < 0.01, "measured energy off by {rel}");
+
+    let r = benchkit::bench("sampling/replay(24 h, 16 nodes, 1 kSPS, ON)", 1, 5, || {
+        let rep = run(true);
+        std::hint::black_box(rep.measured_energy_j);
+    });
+    let wall_s = r.summary.p50 / 1e9;
+    println!(
+        "samples generated: {:.2} G over {:.0} h sim   wall p50: {}   samples/s: {:.1} M",
+        rep.samples as f64 / 1e9,
+        day.as_secs_f64() / 3600.0,
+        dalek::util::units::secs(wall_s),
+        rep.samples as f64 / wall_s / 1e6,
+    );
+
+    let r_off = benchkit::bench("sampling/replay(24 h, 16 nodes, OFF)", 1, 5, || {
+        let rep = run(false);
+        std::hint::black_box(rep.true_energy_j);
+    });
+    println!(
+        "sampling overhead over unsampled replay: {:.2}x\n",
+        r.summary.p50 / r_off.summary.p50
+    );
+}

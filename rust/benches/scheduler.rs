@@ -5,7 +5,7 @@
 use dalek::config::ClusterConfig;
 use dalek::power::Activity;
 use dalek::sim::{EventQueue, SimTime};
-use dalek::slurm::{JobSpec, Slurm};
+use dalek::slurm::{JobSpec, SlurmSim};
 use dalek::util::benchkit;
 
 fn day_of_jobs(n: u64) -> Vec<(SimTime, JobSpec)> {
@@ -31,7 +31,7 @@ fn main() {
 
     let jobs = day_of_jobs(800); // ~21 h of arrivals at ~97 s spacing
     let r = benchkit::bench("slurm/day(800 jobs, 16 nodes, suspend ON)", 1, 10, || {
-        let mut s = Slurm::from_config(&ClusterConfig::dalek_default());
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
         for (at, spec) in &jobs {
             s.submit_at(spec.clone(), *at).expect("valid");
         }

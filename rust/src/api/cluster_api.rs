@@ -2,9 +2,10 @@
 //!
 //! Composes, per the paper, the SLURM controller with the §3.4 power
 //! policy, one §4 main board per compute node (probes sampling the
-//! scheduler's ground-truth power signal), the LDAP directory, and
-//! optionally the PJRT runtime — and fronts all of it with the session
-//! + protocol layer of this module:
+//! scheduler's ground-truth power signal), the LDAP directory, the
+//! frontend services and the flow network, and optionally the PJRT
+//! runtime — and fronts all of it with the session + protocol layer of
+//! this module:
 //!
 //! * a user logs in once ([`ClusterApi::login`]) and every subsequent
 //!   operation presents the [`SessionId`] capability;
@@ -15,25 +16,61 @@
 //!   nothing outside `dalek::api` constructs them or threads raw
 //!   `(db, login)` credentials.
 //!
-//! The simulation-driver surface (`run_until`, `report`, `submit` as
-//! the operator console) stays on this type too, routed through a
-//! built-in root session, so trace replay and the benches drive the
-//! same stack users do.
-
-use std::collections::BTreeMap;
+//! ## The unified kernel
+//!
+//! All time advancement happens on one [`sim::Kernel`] owned here. The
+//! routing enum [`ClusterEvent`] carries every subsystem's events —
+//! scheduler boot/shutdown/suspend/job timers, network flow
+//! completions, service ticks — and [`ClusterApi::run_until`] is the
+//! only dispatch loop. Energy sampling is no longer a post-hoc history
+//! replay: the scheduler publishes `PowerTransition`s and the
+//! [`StreamingSampler`] emits each constant-power segment's samples in
+//! one closed-form batch, so `run_until(t, sample = true)` costs time
+//! proportional to the number of power *changes*, not simulated
+//! seconds. Queued §4.3 admin power actions are applied to the node
+//! FSMs through `Slurm::admin_power` at the next tick (they used to be
+//! discarded).
 
 use super::error::DalekError;
 use super::protocol::{JobRequest, JobView, Request, Response};
 use super::session::{Session, SessionId, SessionManager};
+use crate::config::cluster::resolve_partition;
 use crate::config::ClusterConfig;
 use crate::energy::api::PowerAction;
-use crate::energy::{EnergyApi, MainBoard, ProbeConfig, Sample};
+use crate::energy::{EnergyApi, MainBoard, ProbeConfig, Sample, StreamingSampler};
+use crate::net::{FlowId, FlowNet, NetEvent, Topology};
 use crate::power::Activity;
 use crate::runtime::{ExecReport, PjRtRuntime};
 use crate::services::auth::UserDb;
-use crate::sim::SimTime;
-use crate::slurm::{JobId, JobSpec, JobState, Slurm, SlurmApi};
+use crate::services::{ServiceEvent, ServiceRack};
+use crate::sim::{Kernel, SimTime};
+use crate::slurm::{JobId, JobSpec, JobState, SchedEvent, Slurm, SlurmApi};
 use crate::util::Xoshiro256;
+
+/// The cluster's kernel routing enum: every subsystem's events on the
+/// one event list, dispatched by [`ClusterApi::run_until`].
+#[derive(Clone, Copy, Debug)]
+pub enum ClusterEvent {
+    Sched(SchedEvent),
+    Service(ServiceEvent),
+    Net(NetEvent),
+}
+
+impl From<SchedEvent> for ClusterEvent {
+    fn from(e: SchedEvent) -> Self {
+        ClusterEvent::Sched(e)
+    }
+}
+impl From<ServiceEvent> for ClusterEvent {
+    fn from(e: ServiceEvent) -> Self {
+        ClusterEvent::Service(e)
+    }
+}
+impl From<NetEvent> for ClusterEvent {
+    fn from(e: NetEvent) -> Self {
+        ClusterEvent::Net(e)
+    }
+}
 
 /// Cluster-level summary for reports.
 #[derive(Clone, Debug)]
@@ -67,17 +104,24 @@ const SESSION_TTL: SimTime = SimTime(7 * 24 * 3600 * 1_000_000_000);
 /// 24 h time limit per non-admin call (longer jobs hit `Timeout`).
 const NON_ADMIN_SRUN_HORIZON: SimTime = SimTime(24 * 3600 * 1_000_000_000);
 
+/// srun advances the simulation in strides this long between job-state
+/// checks (the blocking-command poll granularity).
+const SRUN_STRIDE: SimTime = SimTime(10 * 60 * 1_000_000_000);
+
 pub struct ClusterApi {
     pub cfg: ClusterConfig,
+    /// the single clock + event list every subsystem registers with
+    kernel: Kernel<ClusterEvent>,
     slurm: SlurmApi,
     energy: EnergyApi,
+    sampler: StreamingSampler,
+    services: ServiceRack,
+    topo: Topology,
+    net: FlowNet,
     users: UserDb,
     sessions: SessionManager,
     runtime: Option<PjRtRuntime>,
     rng: Xoshiro256,
-    /// nodes with probes attached (board key = node name)
-    node_names: Vec<String>,
-    sampled_to: SimTime,
     /// the operator-console session (root), auto-renewed
     root: SessionId,
 }
@@ -89,27 +133,27 @@ impl ClusterApi {
         let ctl = Slurm::from_config(&cfg);
         let mut rng = Xoshiro256::new(cfg.seed);
         let mut energy = EnergyApi::new();
-        let mut node_names = Vec::new();
+        let mut sampler = StreamingSampler::new();
         let probe_cfg = ProbeConfig {
             adc_sps: cfg.energy.sample_rate_sps * 4,
             ..ProbeConfig::default()
         };
         for pc in &cfg.partitions {
+            let spec = resolve_partition(&pc.name).expect("validated config");
             for n in 0..pc.nodes {
                 let name = format!("{}-{}", pc.name, n);
                 let mut board = MainBoard::new(name.clone());
+                // nodes start suspended; the stream needs the same
+                // initial truth the scheduler integrates from
+                let stream = sampler.add_node(name.clone(), spec.node.power.suspend_w);
                 for probe in 0..cfg.energy.probes_per_node {
+                    let probe_rng = rng.fork(&format!("{name}/p{probe}"));
                     board
-                        .attach_probe(
-                            probe as u8,
-                            probe_cfg.clone(),
-                            rng.fork(&format!("{name}/p{probe}")),
-                            4096,
-                        )
+                        .attach_probe(probe as u8, probe_cfg.clone(), probe_rng.clone(), 4096)
                         .expect("config bounds probes to 12");
+                    stream.add_probe(&probe_cfg, probe_rng);
                 }
                 energy.add_board(board);
-                node_names.push(name);
             }
         }
         let mut users = UserDb::new();
@@ -131,16 +175,24 @@ impl ClusterApi {
             Some(dir) => Some(PjRtRuntime::load(dir)?),
             None => None,
         };
+        let mut services = ServiceRack::new(&cfg, &mut rng);
+        let topo = Topology::build(&cfg);
+        let net = FlowNet::new(&topo);
+        let mut kernel = Kernel::new();
+        services.start(&mut kernel);
         Ok(Self {
             cfg,
+            kernel,
             slurm: SlurmApi::new(ctl, MUNGE_KEY),
             energy,
+            sampler,
+            services,
+            topo,
+            net,
             users,
             sessions,
             runtime,
             rng,
-            node_names,
-            sampled_to: SimTime::ZERO,
             root,
         })
     }
@@ -213,12 +265,22 @@ impl ClusterApi {
     // -----------------------------------------------------------------
 
     pub fn now(&self) -> SimTime {
-        self.slurm.ctl.now()
+        self.kernel.now()
     }
 
     /// Read-only view of the controller (reports, node tables, tests).
     pub fn slurm(&self) -> &Slurm {
         &self.slurm.ctl
+    }
+
+    /// Read-only view of the periodic frontend services.
+    pub fn services(&self) -> &ServiceRack {
+        &self.services
+    }
+
+    /// Read-only view of the flow network.
+    pub fn net(&self) -> &FlowNet {
+        &self.net
     }
 
     pub fn has_runtime(&self) -> bool {
@@ -232,6 +294,65 @@ impl ClusterApi {
     /// Deterministic sub-RNG for workload generators.
     pub fn fork_rng(&mut self, label: &str) -> Xoshiro256 {
         self.rng.fork(label)
+    }
+
+    // -----------------------------------------------------------------
+    // the kernel dispatch loop
+    // -----------------------------------------------------------------
+
+    /// Apply queued §4.3 power actions, then pop-and-route every event
+    /// due at or before `t` and advance the unified clock to `t`. The
+    /// only dispatch loop in the system; every advancing surface
+    /// (`run_until`, `srun`, `salloc`, submissions) passes through it,
+    /// so queued admin actions take effect at the next advance no
+    /// matter who drives the clock.
+    fn drive(&mut self, t: SimTime) {
+        self.apply_power_actions();
+        while let Some((now, ev)) = self.kernel.pop_due(t) {
+            self.dispatch(now, ev);
+        }
+        self.kernel.advance_to(t);
+        self.slurm.ctl.sync_clock(self.kernel.now());
+    }
+
+    fn dispatch(&mut self, now: SimTime, ev: ClusterEvent) {
+        match ev {
+            ClusterEvent::Sched(e) => {
+                self.services.observe_sched(&mut self.kernel, &e, now);
+                self.slurm.ctl.handle_event(&mut self.kernel, e, now);
+            }
+            ClusterEvent::Service(e) => {
+                self.services
+                    .on_event(&mut self.kernel, e, now, &self.slurm.ctl)
+            }
+            ClusterEvent::Net(_) => {
+                self.net.on_event(&mut self.kernel, now);
+            }
+        }
+    }
+
+    /// Feed the scheduler's drained power transitions to the streaming
+    /// sampler, emitting every due sample batch up to the present.
+    fn pump_samples(&mut self) {
+        let to = self.kernel.now();
+        let transitions = self.slurm.ctl.transitions();
+        self.sampler.pump_cluster(transitions, to, &mut self.energy);
+        self.slurm.ctl.clear_transitions();
+    }
+
+    /// Apply queued §4.3 manual power actions to the node FSMs (the
+    /// scheduler refuses actions that would kill running work).
+    fn apply_power_actions(&mut self) {
+        let now = self.kernel.now();
+        for action in self.energy.drain_actions() {
+            let (node, on) = match action {
+                PowerAction::On(n) => (n, true),
+                PowerAction::Off(n) => (n, false),
+            };
+            // outcome (applied / already-there / refused) is best-effort
+            // by design: the §4.3 queue has no reply channel
+            let _ = self.slurm.ctl.admin_power(&mut self.kernel, &node, on, now);
+        }
     }
 
     // -----------------------------------------------------------------
@@ -307,7 +428,7 @@ impl ClusterApi {
                 "payload `{payload}` produced non-finite output"
             )));
         }
-        let spec_part = crate::config::cluster::resolve_partition(partition).ok_or_else(|| {
+        let spec_part = resolve_partition(partition).ok_or_else(|| {
             DalekError::Slurm(crate::slurm::scheduler::SlurmError::UnknownPartition(
                 partition.into(),
             ))
@@ -362,7 +483,9 @@ impl ClusterApi {
             return Err(DalekError::AdminOnly);
         }
         self.users.user(&spec.user)?; // owner must exist
-        Ok(self.slurm.sbatch(sess.uid, spec, now)?)
+        // drain events due before the submission instant, then queue
+        self.drive(now.max(self.now()));
+        Ok(self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?)
     }
 
     fn request_as(
@@ -373,7 +496,8 @@ impl ClusterApi {
     ) -> Result<JobId, DalekError> {
         let owner = self.owner_for(sess, &req.user)?;
         let spec = self.spec_from_request(&owner, req)?;
-        Ok(self.slurm.sbatch(sess.uid, spec, now)?)
+        self.drive(now.max(self.now()));
+        Ok(self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?)
     }
 
     /// sbatch through a session: queue and return the job id. The spec's
@@ -419,16 +543,31 @@ impl ClusterApi {
             spec.time_limit = spec.time_limit.min(NON_ADMIN_SRUN_HORIZON);
             Some(now.max(self.now()) + NON_ADMIN_SRUN_HORIZON)
         };
-        match self.slurm.srun(sess.uid, spec, now, deadline) {
-            Ok(r) => Ok(r),
-            // deadline hit: don't leave an unreferencable orphan queued
-            // under the user's name (a job already Running holds real
-            // resources and finishes within the clamped limit)
-            Err(crate::slurm::api::ApiError::Deadline(id)) => {
-                let _ = self.slurm.ctl.cancel(id);
-                Err(DalekError::Deadline(id))
+        self.drive(now.max(self.now()));
+        let id = self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?;
+        // block: advance the whole cluster in strides until terminal
+        loop {
+            let state = self.slurm.ctl.job(id).expect("submitted").state;
+            if matches!(
+                state,
+                JobState::Completed | JobState::Timeout | JobState::Cancelled
+            ) {
+                return Ok((id, state));
             }
-            Err(e) => Err(e.into()),
+            let before = self.now();
+            if deadline.is_some_and(|d| before >= d) {
+                // deadline hit: don't leave an unreferencable orphan
+                // queued under the user's name (a job already Running
+                // holds real resources and finishes within the clamped
+                // limit)
+                let _ = self.slurm.ctl.cancel(id, before);
+                return Err(DalekError::Deadline(id));
+            }
+            // every queued job drains in finite sim time (durations are
+            // capped by their time limits), so striding forward always
+            // terminates; non-admin calls are additionally bounded by
+            // the deadline above
+            self.drive(before + SRUN_STRIDE);
         }
     }
 
@@ -443,23 +582,42 @@ impl ClusterApi {
         let sess = self.session(sid, now)?;
         let owner = self.owner_for(&sess, &req.user)?;
         let spec = self.spec_from_request(&owner, req)?;
-        let id = self.slurm.salloc(sess.uid, spec, now)?;
-        let job = self.slurm.ctl.job(id).expect("just submitted");
-        // salloc returns Ok even when the boot budget elapsed with the
-        // job still queued — that is a failed allocation on this
-        // surface. A job that already ran to termination during the
-        // wait loop DID hold its allocation, so only never-allocated
-        // states are failures.
-        if matches!(job.state, JobState::Pending | JobState::Cancelled) {
-            let _ = self.slurm.ctl.cancel(id); // don't leave it queued
+        let user = spec.user.clone();
+        let limit = spec.time_limit;
+        self.drive(now.max(self.now()));
+        let id = self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?;
+        // advance until the allocation exists (≤ boot budget)
+        let deadline =
+            now.max(self.now()) + self.slurm.ctl.power_policy.max_boot_delay + SimTime::from_mins(10);
+        while self.slurm.ctl.job(id).expect("submitted").state == JobState::Pending
+            && self.now() < deadline
+        {
+            let t = self.now() + SimTime::from_secs(10);
+            self.drive(t);
+        }
+        let (state, allocated) = {
+            let job = self.slurm.ctl.job(id).expect("submitted");
+            (job.state, job.allocated.clone())
+        };
+        // the boot budget elapsed with the job still queued — that is a
+        // failed allocation on this surface. A job that already ran to
+        // termination during the wait loop DID hold its allocation, so
+        // only never-allocated states are failures.
+        if matches!(state, JobState::Pending | JobState::Cancelled) {
+            let now = self.now();
+            let _ = self.slurm.ctl.cancel(id, now); // don't leave it queued
             return Err(DalekError::Incomplete);
         }
         let infos = self.slurm.ctl.node_infos();
-        let nodes = job
-            .allocated
-            .iter()
-            .map(|&i| infos[i].name.clone())
-            .collect();
+        let nodes: Vec<String> = allocated.iter().map(|&i| infos[i].name.clone()).collect();
+        // grant interactive SSH through the §3.5 login gate for the
+        // allocation's lifetime (only while it actually holds nodes)
+        if matches!(state, JobState::Configuring | JobState::Running) {
+            let until = self.now() + limit;
+            for n in &nodes {
+                self.slurm.gate.grant(n, &user, until);
+            }
+        }
         Ok((id, nodes))
     }
 
@@ -495,7 +653,7 @@ impl ClusterApi {
         if owner != sess.login && !sess.admin {
             return Err(DalekError::AdminOnly);
         }
-        Ok(self.slurm.ctl.cancel(id)?)
+        Ok(self.slurm.ctl.cancel(id, now)?)
     }
 
     // -----------------------------------------------------------------
@@ -533,7 +691,10 @@ impl ClusterApi {
         Ok(self.energy.set_gpio_tag(node, line, high)?)
     }
 
-    /// Manual node power control — administrators only.
+    /// Manual node power control — administrators only. The action is
+    /// queued (§4.3) and applied to the node FSM at the next
+    /// [`ClusterApi::run_until`] tick; the scheduler refuses actions
+    /// that would kill running work.
     pub fn power(&mut self, sid: SessionId, node: &str, on: bool) -> Result<(), DalekError> {
         let now = self.now();
         self.admin_session(sid, now)?;
@@ -576,6 +737,33 @@ impl ClusterApi {
             (Some(n), None) => Ok(self.energy.board(n)?.total_energy_j()),
             (Some(n), Some(w)) => windowed(self.energy.board(n)?, w),
         }
+    }
+
+    // -----------------------------------------------------------------
+    // network (operator surface)
+    // -----------------------------------------------------------------
+
+    /// Start a bulk transfer between two hosts on the flow network; the
+    /// completion rides the unified kernel. Host names accept both the
+    /// short node form (`az4-n4090-0`) and the FQDN (`…​.dalek`).
+    pub fn start_transfer(
+        &mut self,
+        src: &str,
+        dst: &str,
+        bytes: u64,
+    ) -> Result<FlowId, DalekError> {
+        let resolve = |topo: &Topology, name: &str| {
+            topo.by_name(name)
+                .or_else(|| topo.by_name(&format!("{name}.dalek")))
+        };
+        let s = resolve(&self.topo, src)
+            .ok_or_else(|| DalekError::BadRequest(format!("unknown host `{src}`")))?;
+        let d = resolve(&self.topo, dst)
+            .ok_or_else(|| DalekError::BadRequest(format!("unknown host `{dst}`")))?;
+        if s == d {
+            return Err(DalekError::BadRequest("transfer to self".into()));
+        }
+        Ok(self.net.start_flow_on(&mut self.kernel, s, d, bytes))
     }
 
     // -----------------------------------------------------------------
@@ -636,44 +824,19 @@ impl ClusterApi {
         self.request_as(&root, &req, now)
     }
 
-    /// Advance the whole cluster to `t`. When `sample` is set, the §4
-    /// boards sample every node's (piecewise-constant) power signal at
-    /// the configured rate, replayed exactly from the scheduler's power
-    /// history — sampling therefore never misses energy, regardless of
-    /// how the scheduler clock advanced (submissions, run_until calls).
+    /// Advance the whole cluster to `t`: apply queued §4.3 power
+    /// actions, dispatch every due event (scheduler, network, services)
+    /// through the unified kernel, and — when `sample` is set — stream
+    /// the §4 probe samples for everything that happened since the last
+    /// sampled advance. Sampling is segment-batched off the scheduler's
+    /// power transitions, so it never misses energy regardless of how
+    /// the clock advanced (submissions, unsampled runs), and costs time
+    /// proportional to power changes rather than simulated seconds.
     pub fn run_until(&mut self, t: SimTime, sample: bool) {
-        self.slurm.ctl.run_until(t);
-        if !sample {
-            return;
+        self.drive(t);
+        if sample {
+            self.pump_samples();
         }
-        let from = self.sampled_to;
-        if t <= from {
-            return; // never resample a covered window
-        }
-        for name in &self.node_names {
-            let hist = self.slurm.ctl.node_history(name).expect("known node");
-            let board = match self.energy.board_mut(name) {
-                Ok(b) => b,
-                Err(_) => continue,
-            };
-            let nprobes = self.cfg.energy.probes_per_node as u8;
-            // walk the change points covering (from, t]
-            for (i, &(start, w)) in hist.iter().enumerate() {
-                let seg_end = hist.get(i + 1).map(|(s, _)| *s).unwrap_or(t).min(t);
-                if seg_end <= from || start >= t {
-                    continue;
-                }
-                let sigs: BTreeMap<u8, _> =
-                    (0..nprobes).map(|p| (p, move |_t: SimTime| w)).collect();
-                board.poll(seg_end, &sigs);
-            }
-        }
-        // §4.3 admin power actions queued via the energy API
-        for action in self.energy.drain_actions() {
-            let _ = action; // manual power control is reported, not forced
-        }
-        self.sampled_to = t;
-        self.slurm.ctl.gc_history(t);
     }
 
     /// Current summary.
@@ -689,7 +852,7 @@ impl ClusterApi {
             })
             .sum();
         ClusterReport {
-            now: self.slurm.ctl.now(),
+            now: self.now(),
             jobs_completed: self.slurm.ctl.stats.completed,
             jobs_pending: self.slurm.ctl.pending_count(),
             cluster_watts: self.slurm.ctl.cluster_watts(),
@@ -839,6 +1002,7 @@ impl ClusterApi {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::power::PowerState;
     use crate::slurm::JobState;
 
     fn cluster() -> ClusterApi {
@@ -857,7 +1021,7 @@ mod tests {
     fn builds_16_boards() {
         let c = cluster();
         assert_eq!(c.energy.boards().count(), 16);
-        assert_eq!(c.node_names.len(), 16);
+        assert_eq!(c.sampler.node_count(), 16);
     }
 
     #[test]
@@ -883,6 +1047,24 @@ mod tests {
         let expect = 16.0 * 1000.0 * 10.0;
         let got = r.samples as f64;
         assert!((got - expect).abs() / expect < 0.01, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn sampling_catches_up_over_unsampled_windows() {
+        // the §4 guarantee: sampling never misses energy, regardless of
+        // how the clock advanced — an unsampled stretch is streamed in
+        // full on the next sampled advance
+        let mut c = cluster();
+        c.submit(JobSpec::cpu("root", "az5-a890m", 2, 120), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_mins(4), false); // job runs unsampled
+        assert_eq!(c.report().samples, 0);
+        c.run_until(SimTime::from_mins(8), true); // catch-up
+        let r = c.report();
+        let expect = 16.0 * 1000.0 * 480.0;
+        assert!((r.samples as f64 - expect).abs() / expect < 0.01);
+        let rel = (r.measured_energy_j - r.true_energy_j).abs() / r.true_energy_j;
+        assert!(rel < 0.01, "rel error {rel}");
     }
 
     #[test]
@@ -1013,6 +1195,75 @@ mod tests {
     }
 
     #[test]
+    fn queued_power_on_boots_suspended_node() {
+        // §4.3 wiring: the queued action reaches the node FSM
+        let mut c = cluster();
+        let sid = c.login("root").unwrap();
+        c.power(sid, "az5-a890m-0", true).unwrap();
+        assert!(matches!(
+            c.slurm().node_infos()[12].state,
+            PowerState::Suspended
+        ));
+        c.run_until(SimTime::from_mins(3), false); // az5 boots in 70 s
+        let info = &c.slurm().node_infos()[12];
+        assert_eq!(info.name, "az5-a890m-0");
+        assert!(
+            matches!(info.state, PowerState::Idle { .. }),
+            "{:?}",
+            info.state
+        );
+        assert_eq!(info.boots, 1);
+    }
+
+    #[test]
+    fn queued_power_off_transitions_node_fsm_ahead_of_policy() {
+        let mut c = cluster();
+        let id = c
+            .submit(JobSpec::cpu("root", "az5-a890m", 1, 60), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_mins(3), false); // boot 70 s + run 60 s
+        assert_eq!(c.slurm().job(id).unwrap().state, JobState::Completed);
+        let node = {
+            let infos = c.slurm().node_infos();
+            let i = c.slurm().job(id).unwrap().allocated[0];
+            assert!(matches!(infos[i].state, PowerState::Idle { .. }));
+            infos[i].name.clone()
+        };
+        let sid = c.login("root").unwrap();
+        c.power(sid, &node, false).unwrap();
+        // applied at the next tick, well before the 10-minute policy
+        c.run_until(SimTime::from_mins(4), false);
+        let info = c
+            .slurm()
+            .node_infos()
+            .into_iter()
+            .find(|n| n.name == node)
+            .unwrap();
+        assert!(
+            matches!(info.state, PowerState::Suspended),
+            "{:?}",
+            info.state
+        );
+        assert_eq!(info.suspends, 1);
+    }
+
+    #[test]
+    fn queued_power_off_never_kills_running_job() {
+        let mut c = cluster();
+        let id = c
+            .submit(JobSpec::cpu("root", "az5-a890m", 4, 600), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_mins(3), false); // running by now
+        assert_eq!(c.slurm().job(id).unwrap().state, JobState::Running);
+        let sid = c.login("root").unwrap();
+        c.power(sid, "az5-a890m-0", false).unwrap();
+        c.run_until(SimTime::from_mins(5), false);
+        // refused: still allocated, job completes normally
+        c.run_until(SimTime::from_mins(30), false);
+        assert_eq!(c.slurm().job(id).unwrap().state, JobState::Completed);
+    }
+
+    #[test]
     fn samples_and_energy_through_session() {
         let mut c = cluster();
         c.submit(JobSpec::cpu("root", "az5-a890m", 2, 120), SimTime::ZERO)
@@ -1069,6 +1320,98 @@ mod tests {
         ));
         c.cancel(alice, id).unwrap();
         assert_eq!(c.job_info(alice, id).unwrap().state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn non_admin_srun_hits_deadline_behind_blocker() {
+        let mut c = cluster();
+        c.add_user("alice");
+        // operator blocks the whole partition for two days
+        c.submit(
+            JobSpec::cpu("root", "az5-a890m", 4, 48 * 3600),
+            SimTime::ZERO,
+        )
+        .unwrap();
+        let sid = c.login("alice").unwrap();
+        let req = JobRequest {
+            partition: "az5-a890m".into(),
+            nodes: 1,
+            duration: SimTime::from_secs(60),
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: None,
+        };
+        let e = c.run_request(sid, &req, SimTime::ZERO);
+        let Err(DalekError::Deadline(id)) = e else {
+            panic!("expected Deadline, got {e:?}");
+        };
+        // the orphan was cancelled, and the clock stopped near the horizon
+        assert_eq!(c.job_info(sid, id).unwrap().state, JobState::Cancelled);
+        assert!(c.now() <= NON_ADMIN_SRUN_HORIZON + SRUN_STRIDE);
+    }
+
+    #[test]
+    fn transfers_ride_the_unified_kernel() {
+        let mut c = cluster();
+        c.start_transfer("az4-n4090-0", "az4-n4090-1", 1_000_000_000)
+            .unwrap();
+        assert_eq!(c.net().active_flows(), 1);
+        // 8 Gbit over 2.5 GbE ≈ 3.2 s; drive the cluster past it
+        c.run_until(SimTime::from_secs(10), false);
+        assert_eq!(c.net().active_flows(), 0);
+        assert_eq!(c.net().completed_flows, 1);
+        assert!((c.net().delivered_bytes - 1e9).abs() < 1e6);
+        assert!(matches!(
+            c.start_transfer("nope", "az4-n4090-1", 1),
+            Err(DalekError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn services_tick_on_the_shared_kernel() {
+        let mut c = cluster();
+        c.submit(JobSpec::cpu("root", "az5-a890m", 2, 120), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_mins(5), false);
+        // proberctl reported (2 nodes × ~2 min up at 1 Hz) and lit the strip
+        assert!(c.services().readings >= 200, "{}", c.services().readings);
+        assert!(c
+            .services()
+            .strip("az5-a890m")
+            .unwrap()
+            .node_count()
+            >= 2);
+        // NTP disciplined clocks throughout
+        assert!(c.services().worst_ntp_offset_s > 0.0);
+    }
+
+    #[test]
+    fn salloc_grants_ssh_through_login_gate() {
+        let mut c = cluster();
+        c.add_user("alice");
+        let sid = c.login("alice").unwrap();
+        let req = JobRequest {
+            partition: "iml-ia770".into(),
+            nodes: 2,
+            duration: SimTime::from_secs(600),
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: None,
+        };
+        let (id, nodes) = c.alloc_request(sid, &req, SimTime::ZERO).unwrap();
+        assert_eq!(nodes.len(), 2);
+        let job = c.slurm().job(id).unwrap();
+        assert!(matches!(
+            job.state,
+            JobState::Configuring | JobState::Running
+        ));
+        let now = c.now();
+        assert!(c.slurm.gate.try_ssh(&nodes[0], "alice", now));
+        assert!(!c.slurm.gate.try_ssh(&nodes[0], "powerstate", now));
+        // other partition's node: no grant
+        assert!(!c.slurm.gate.try_ssh("az4-n4090-0", "alice", now));
     }
 
     #[test]

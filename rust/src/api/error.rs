@@ -49,8 +49,6 @@ impl From<crate::slurm::api::ApiError> for DalekError {
         match e {
             E::Auth(a) => DalekError::Auth(a),
             E::Slurm(s) => DalekError::Slurm(s),
-            E::Incomplete => DalekError::Incomplete,
-            E::Deadline(id) => DalekError::Deadline(id),
         }
     }
 }
@@ -75,8 +73,9 @@ mod tests {
         assert!(matches!(e, DalekError::Auth(_)));
         let e: DalekError = SlurmError::UnknownPartition("nope".into()).into();
         assert!(matches!(e, DalekError::Slurm(_)));
-        let e: DalekError = crate::slurm::api::ApiError::Incomplete.into();
-        assert_eq!(e, DalekError::Incomplete);
+        let e: DalekError =
+            crate::slurm::api::ApiError::Slurm(SlurmError::NotPending(JobId(3))).into();
+        assert!(matches!(e, DalekError::Slurm(SlurmError::NotPending(_))));
         let e: DalekError = crate::energy::api::ApiError::NoBoard("n0".into()).into();
         assert_eq!(e, DalekError::NoBoard("n0".into()));
     }

@@ -16,9 +16,10 @@
 //! * [`error`] — [`DalekError`], the one error type every subsystem
 //!   failure converts into
 //! * [`cluster_api`] — [`ClusterApi`], the façade that composes the
-//!   scheduler, energy platform, directory and PJRT runtime and routes
-//!   every request to the (crate-internal) `SlurmApi`/`EnergyApi`
-//!   targets
+//!   scheduler, energy platform, network, services, directory and PJRT
+//!   runtime on one `sim::Kernel` ([`ClusterEvent`] is the routing
+//!   enum) and routes every request to the (crate-internal)
+//!   `SlurmApi`/`EnergyApi` targets
 //!
 //! This layer is the seam where a real network transport, request
 //! batching and multi-tenant quotas plug in next.
@@ -28,7 +29,7 @@ pub mod error;
 pub mod protocol;
 pub mod session;
 
-pub use cluster_api::{ClusterApi, ClusterReport};
+pub use cluster_api::{ClusterApi, ClusterEvent, ClusterReport};
 pub use error::DalekError;
 pub use protocol::{JobRequest, JobView, Request, Response};
 pub use session::{Session, SessionId, SessionManager};

@@ -136,6 +136,14 @@ impl MainBoard {
             .ok_or(BoardError::UnknownProbe(probe_id))
     }
 
+    /// Mutable store access — the streaming sampler pushes batched
+    /// samples directly (bypassing the per-conversion probe loop).
+    pub fn store_mut(&mut self, probe_id: u8) -> Result<&mut SampleStore, BoardError> {
+        self.stores
+            .get_mut(&probe_id)
+            .ok_or(BoardError::UnknownProbe(probe_id))
+    }
+
     /// Total energy across all probes, joules.
     pub fn total_energy_j(&self) -> f64 {
         self.stores.values().map(|s| s.energy_j()).sum()

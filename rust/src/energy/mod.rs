@@ -10,6 +10,10 @@
 //!   six probes at 1000 SPS each (§4.1)
 //! * [`board`] — the main board: two chains, sample aggregation, GPIO tags
 //! * [`store`] — sample storage with windowed energy integration
+//! * [`sampler`] — the streaming, segment-batched sampler: subscribes
+//!   to scheduler power transitions and emits each constant-power
+//!   segment's samples in one closed-form batch (cost ∝ power changes,
+//!   not simulated seconds)
 //! * `api` — the §4.3 operations (read samples / tag / power control)
 //!   as a crate-internal routing target; the user-facing surface —
 //!   auth, sessions, the admin restriction — is `dalek::api`
@@ -19,10 +23,12 @@ pub mod board;
 pub mod bus;
 pub mod probe;
 pub mod rails;
+pub mod sampler;
 pub mod store;
 
 pub(crate) use api::EnergyApi;
 pub use board::{GpioTags, MainBoard};
 pub use bus::I2cBus;
 pub use probe::{Ina228Probe, PowerSignal, ProbeConfig, Sample};
+pub use sampler::{NodeStream, StreamingSampler};
 pub use store::SampleStore;

@@ -50,6 +50,41 @@ impl SampleStore {
         self.ring.push_back(s);
     }
 
+    /// Push `n` equal-valued samples spaced `stride` apart starting at
+    /// `first.t`, in O(ring-residency) instead of O(n): the running
+    /// aggregates (count, mean/σ, energy) update in closed form and
+    /// only the samples that would survive ring eviction are
+    /// materialized. Semantically identical to `n` sequential `push`
+    /// calls of the same values (including the `dropped` accounting) —
+    /// the hot path of the segment-batched streaming sampler, where a
+    /// 10-minute constant-power segment is one call, not 600 000.
+    pub fn push_batch(&mut self, n: u64, first: Sample, stride: SimTime) {
+        if n == 0 {
+            return;
+        }
+        if let Some(last) = self.last_t {
+            debug_assert!(first.t >= last, "batch out of order");
+        }
+        let last_t = SimTime(first.t.as_ns() + (n - 1) * stride.as_ns());
+        self.last_t = Some(last_t);
+        self.agg.push_n(first.power_w, n);
+        self.energy_j += first.power_w * self.period.as_secs_f64() * n as f64;
+        // ring: only the tail survives; earlier samples count as dropped
+        let keep = (self.cap as u64).min(n);
+        let skipped = n - keep;
+        let evict = (self.ring.len() + keep as usize).saturating_sub(self.cap);
+        for _ in 0..evict {
+            self.ring.pop_front();
+        }
+        self.dropped += skipped + evict as u64;
+        let base = first.t.as_ns() + skipped * stride.as_ns();
+        for k in 0..keep {
+            let mut s = first;
+            s.t = SimTime(base + k * stride.as_ns());
+            self.ring.push_back(s);
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.ring.len()
     }
@@ -248,6 +283,51 @@ mod tests {
         assert_eq!(s.total_samples(), 20);
         let expect: f64 = (0..20).map(|i| i as f64 * 1e-3).sum();
         assert!((s.energy_j() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_batch_equals_sequential_pushes() {
+        // exact equivalence, including ring eviction + dropped counts
+        let mut seq = SampleStore::new(16, SimTime::from_ms(1));
+        let mut bat = SampleStore::new(16, SimTime::from_ms(1));
+        for i in 0..5 {
+            seq.push(sample(i, 2.0, 1));
+            bat.push(sample(i, 2.0, 1));
+        }
+        // a 50-sample constant segment starting at t = 10 ms
+        for k in 0..50u64 {
+            seq.push(sample(10 + k, 7.0, 3));
+        }
+        bat.push_batch(50, sample(10, 7.0, 3), SimTime::from_ms(1));
+        assert_eq!(seq.len(), bat.len());
+        assert_eq!(seq.dropped, bat.dropped);
+        assert_eq!(seq.total_samples(), bat.total_samples());
+        assert!((seq.energy_j() - bat.energy_j()).abs() < 1e-12);
+        assert!((seq.mean_w() - bat.mean_w()).abs() < 1e-12);
+        assert_eq!(seq.min_w(), bat.min_w());
+        assert_eq!(seq.max_w(), bat.max_w());
+        let (ws, wb) = (
+            seq.window(SimTime::ZERO, SimTime::from_secs(1)),
+            bat.window(SimTime::ZERO, SimTime::from_secs(1)),
+        );
+        assert_eq!(ws, wb);
+        assert_eq!(bat.tagged(3).len(), 16); // whole ring is the batch tail
+    }
+
+    #[test]
+    fn push_batch_smaller_than_cap_keeps_everything() {
+        let mut s = SampleStore::new(100, SimTime::from_ms(1));
+        s.push_batch(10, sample(0, 5.0, 0), SimTime::from_ms(2));
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.total_samples(), 10);
+        // stride honored: samples at 0, 2, 4, ... 18 ms
+        let w = s.window(SimTime::from_ms(4), SimTime::from_ms(4));
+        assert_eq!(w.len(), 1);
+        assert!((s.energy_j() - 10.0 * 5.0 * 1e-3).abs() < 1e-12);
+        // empty batch is a no-op
+        s.push_batch(0, sample(50, 9.0, 0), SimTime::from_ms(1));
+        assert_eq!(s.total_samples(), 10);
     }
 
     #[test]

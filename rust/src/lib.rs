@@ -12,18 +12,32 @@
 //! code. The crate is organized bottom-up:
 //!
 //! * [`util`] — PRNG, tables, units, stats, CLI and JSON substrates
-//! * [`sim`] — deterministic discrete-event engine
+//! * [`sim`] — the deterministic discrete-event core: the calendar
+//!   queue plus [`sim::Kernel`], the single clock + event list every
+//!   layer registers typed events with (same-timestamp events fire in
+//!   registration order; cancellation is per-id)
 //! * [`hw`] — calibrated hardware catalog (paper Tables 1–2, Figs. 4–9)
-//! * [`net`] — flow-level network simulation (§2.4, Table 3)
-//! * [`services`] — frontend services: DHCP/DNS, PXE autoinstall, NFS (§3.2–3.3)
-//! * [`slurm`] — resource manager: jobs, partitions, node FSM (§3.4–3.5)
+//! * [`net`] — flow-level network simulation (§2.4, Table 3); flow
+//!   completions ride the kernel as `net::NetEvent`s
+//! * [`services`] — frontend services: DHCP/DNS, PXE autoinstall, NFS
+//!   (§3.2–3.3); the periodic ones (proberctl 1 Hz sweeps, NTP
+//!   discipline) mount on the kernel via [`services::ServiceRack`]
+//! * [`slurm`] — resource manager: jobs, partitions, node FSM
+//!   (§3.4–3.5); clockless — its timers are `slurm::SchedEvent`s on
+//!   the kernel, and every node power change is published as a
+//!   [`power::PowerTransition`]
 //! * [`power`] — node power models, WoL control, DVFS, RAPL (§3.4, §3.6)
-//! * [`energy`] — the INA228/I2C energy measurement platform (§4)
+//! * [`energy`] — the INA228/I2C energy measurement platform (§4);
+//!   [`energy::StreamingSampler`] consumes the scheduler's transition
+//!   stream and emits each constant-power segment's 1 kSPS samples in
+//!   one closed-form batch (cost ∝ power changes, not simulated time)
 //! * [`bench`] — executors regenerating every table and figure (§5)
 //! * [`runtime`] — PJRT client running the AOT-compiled JAX/Pallas payloads
 //! * [`api`] — the unified session-based user API: log in once, then
 //!   drive jobs (§3.4–3.5), the energy platform (§4.3) and reports
-//!   through one typed request/response protocol with a JSON wire codec
+//!   through one typed request/response protocol with a JSON wire
+//!   codec; owns the cluster's kernel and its only dispatch loop
+//!   (`api::ClusterEvent` routes scheduler/network/service events)
 //! * [`coordinator`] — the frontend daemon: trace replay over the API
 //!   (the cluster façade itself is [`api::ClusterApi`])
 

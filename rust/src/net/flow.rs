@@ -16,11 +16,20 @@
 use std::collections::BTreeMap;
 
 use super::topology::{HostId, Topology};
-use crate::sim::SimTime;
+use crate::sim::{Kernel, ScheduledId, SimTime};
 
 /// Opaque flow handle.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
 pub struct FlowId(pub u64);
+
+/// The network's kernel event: "the earliest flow completion under the
+/// current max-min allocation is due". Because rates change on every
+/// arrival/departure, the network keeps exactly one such event armed
+/// and re-schedules it whenever the allocation changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetEvent {
+    CompletionDue,
+}
 
 /// Directional link identifier: a host's uplink (tx) or downlink (rx).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
@@ -45,6 +54,10 @@ pub struct FlowNet {
     flows: BTreeMap<FlowId, Flow>,
     next_id: u64,
     now: SimTime,
+    /// the armed kernel event for the next completion, if any
+    scheduled: Option<ScheduledId>,
+    /// transfers completed over the lifetime of the network
+    pub completed_flows: u64,
     /// total bytes delivered (for utilization accounting)
     pub delivered_bytes: f64,
 }
@@ -62,6 +75,8 @@ impl FlowNet {
             flows: BTreeMap::new(),
             next_id: 0,
             now: SimTime::ZERO,
+            scheduled: None,
+            completed_flows: 0,
             delivered_bytes: 0.0,
         }
     }
@@ -139,6 +154,7 @@ impl FlowNet {
     pub fn finish_flow(&mut self, id: FlowId) -> Option<(f64, SimTime)> {
         let f = self.flows.remove(&id)?;
         let dur = self.now.since(f.started);
+        self.completed_flows += 1;
         self.recompute_rates();
         Some((f.remaining_bits.max(0.0) / 8.0, dur))
     }
@@ -165,6 +181,66 @@ impl FlowNet {
             self.finish_flow(id);
         }
         self.now
+    }
+
+    // -- kernel integration --------------------------------------------------
+    //
+    // When the network rides the unified `sim::Kernel` (the cluster
+    // path), it keeps exactly one `NetEvent::CompletionDue` armed for
+    // the earliest completion under the current allocation, re-arming
+    // whenever arrivals or departures change the rates. The standalone
+    // API above (advance_to / run_until_complete / run_to_idle) remains
+    // for self-driving users (PXE, NFS, the net benches).
+
+    /// Start a flow at the kernel's current time, (re)arming the
+    /// completion event.
+    pub fn start_flow_on<E: From<NetEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        src: HostId,
+        dst: HostId,
+        bytes: u64,
+    ) -> FlowId {
+        let now = kernel.now().max(self.now);
+        self.advance_to(now);
+        let id = self.start_flow(src, dst, bytes);
+        self.reschedule(kernel);
+        id
+    }
+
+    /// Handle a due [`NetEvent`]: drain every flow completing at or
+    /// before `now`, then re-arm. Returns the completed flow ids.
+    pub fn on_event<E: From<NetEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        now: SimTime,
+    ) -> Vec<FlowId> {
+        self.scheduled = None;
+        let mut done = Vec::new();
+        // completions strictly inside the window first, then the due one
+        while let Some((t, id)) = self.next_completion() {
+            if t > now {
+                break;
+            }
+            self.advance_to(t);
+            self.finish_flow(id);
+            done.push(id);
+        }
+        self.advance_to(now.max(self.now));
+        self.reschedule(kernel);
+        done
+    }
+
+    /// Re-arm the single completion event to match the current
+    /// allocation (cancels any stale one).
+    fn reschedule<E: From<NetEvent>>(&mut self, kernel: &mut Kernel<E>) {
+        if let Some(id) = self.scheduled.take() {
+            kernel.cancel(id);
+        }
+        if let Some((t, _)) = self.next_completion() {
+            let at = t.max(kernel.now());
+            self.scheduled = Some(kernel.schedule_at(at, NetEvent::CompletionDue));
+        }
     }
 
     /// Max-min fair allocation via progressive filling.
@@ -337,6 +413,48 @@ mod tests {
         assert!(end > SimTime::ZERO);
         // ~4 GB delivered in total
         assert!((n.delivered_bytes - 4e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn kernel_driven_flows_complete_via_events() {
+        let (t, mut n) = net();
+        let mut kernel: Kernel<NetEvent> = Kernel::new();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        let f = n.start_flow_on(&mut kernel, a, b, gb(1));
+        assert!(n.rate(f).is_some());
+        assert_eq!(kernel.pending(), 1);
+        // 8 Gbit / 2.5 Gbps = 3.2 s
+        let (at, _ev) = kernel.pop_due(SimTime::from_secs(10)).unwrap();
+        assert!((at.as_secs_f64() - 3.2).abs() < 1e-6);
+        let done = n.on_event(&mut kernel, at);
+        assert_eq!(done, vec![f]);
+        assert_eq!(n.active_flows(), 0);
+        assert_eq!(n.completed_flows, 1);
+        assert!(kernel.is_idle()); // nothing left to arm
+    }
+
+    #[test]
+    fn kernel_rearms_on_departure_for_remaining_flows() {
+        let (t, mut n) = net();
+        let mut kernel: Kernel<NetEvent> = Kernel::new();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        let c = t.by_name("az4-n4090-2.dalek").unwrap();
+        let f1 = n.start_flow_on(&mut kernel, a, c, gb(1));
+        let _f2 = n.start_flow_on(&mut kernel, b, c, gb(2));
+        // exactly one completion event armed at a time
+        assert_eq!(kernel.pending(), 1);
+        let (at1, _) = kernel.pop_due(SimTime::from_hours(1)).unwrap();
+        assert_eq!(n.on_event(&mut kernel, at1), vec![f1]);
+        // f2 still active -> a fresh event is armed with the freed rate
+        assert_eq!(kernel.pending(), 1);
+        let (at2, _) = kernel.pop_due(SimTime::from_hours(1)).unwrap();
+        assert!(at2 > at1);
+        let done = n.on_event(&mut kernel, at2);
+        assert_eq!(done.len(), 1);
+        assert_eq!(n.active_flows(), 0);
+        assert_eq!(n.completed_flows, 2);
     }
 
     #[test]

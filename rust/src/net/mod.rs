@@ -16,6 +16,6 @@ pub mod topology;
 
 pub use addr::{Ipv4, Mac, SubnetPlan};
 pub use dhcp::DhcpDns;
-pub use flow::{FlowId, FlowNet};
+pub use flow::{FlowId, FlowNet, NetEvent};
 pub use nat::NatTable;
 pub use topology::{HostId, HostRole, Topology};

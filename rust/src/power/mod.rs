@@ -15,5 +15,5 @@ pub mod rapl;
 
 pub use dvfs::{DvfsGovernor, DvfsState};
 pub use fsm::{NodePowerFsm, PowerState, Transition};
-pub use model::{Activity, PowerModel};
+pub use model::{Activity, PowerModel, PowerTransition};
 pub use rapl::RaplDomain;

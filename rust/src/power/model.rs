@@ -43,6 +43,19 @@ impl Activity {
     }
 }
 
+/// One point of a node's piecewise-constant power signal: at time `at`
+/// the node started drawing `watts`. The scheduler emits these on every
+/// power-relevant state change; the §4 streaming sampler consumes them
+/// (in time order) to batch-generate probe samples segment by segment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerTransition {
+    /// index into the scheduler's node table
+    pub node: usize,
+    pub at: crate::sim::SimTime,
+    /// draw from `at` until the next transition of the same node
+    pub watts: f64,
+}
+
 /// Power model bound to a node's hardware.
 #[derive(Clone, Debug)]
 pub struct PowerModel {

@@ -9,14 +9,21 @@
 //! * [`auth`] — MUNGE-like HMAC credentials (§3.4) and the LDAP-ish
 //!   user directory with SPANK/PAM login gating (§3.5).
 //! * [`ntp`] — chrony-like clock-skew model (§3.2).
+//! * [`proberctl`] — the 1 Hz per-node monitoring agents + LED strips
+//!   (§2.3, §3.5).
+//! * [`rack`] — the periodic services (proberctl sweeps, NTP
+//!   discipline) mounted on the unified `sim::Kernel` as
+//!   [`rack::ServiceEvent`]s.
 
 pub mod auth;
 pub mod nfs;
 pub mod ntp;
 pub mod proberctl;
 pub mod pxe;
+pub mod rack;
 
 pub use auth::{Credential, Munge, UserDb};
 pub use nfs::NfsServer;
 pub use ntp::NtpService;
 pub use pxe::{InstallPhase, PxeInstaller};
+pub use rack::{ServiceEvent, ServiceRack};

@@ -73,6 +73,23 @@ impl NtpService {
         c.offset_s = c.offset_s.signum() * self.sync_residual_s;
     }
 
+    /// One discipline step for every registered clock at `now` — the
+    /// kernel-driven path (`ServiceEvent::NtpSync` fires every poll
+    /// interval). Returns the worst absolute offset observed right
+    /// before the slew.
+    pub fn sync_all(&mut self, now: SimTime) -> f64 {
+        let residual = self.sync_residual_s;
+        let mut worst = 0.0f64;
+        for c in self.clocks.values_mut() {
+            let dt = now.since(c.last_update).as_secs_f64();
+            c.offset_s += c.drift_ppm * 1e-6 * dt;
+            c.last_update = now;
+            worst = worst.max(c.offset_s.abs());
+            c.offset_s = c.offset_s.signum() * residual;
+        }
+        worst
+    }
+
     /// Run periodic syncs for all nodes up to `until`; returns the
     /// worst absolute offset observed right before each sync.
     pub fn run_until(&mut self, until: SimTime) -> f64 {
@@ -132,6 +149,31 @@ mod tests {
             .offset("probe-host", SimTime::from_secs(64))
             .abs();
         assert!(off <= 60e-6, "offset {off}");
+    }
+
+    #[test]
+    fn sync_all_matches_per_node_sync() {
+        let mut a = NtpService::new(5);
+        let mut b = NtpService::new(5);
+        let mut ra = Xoshiro256::new(5);
+        let mut rb = Xoshiro256::new(5);
+        for i in 0..4 {
+            a.register(&format!("n{i}"), &mut ra);
+            b.register(&format!("n{i}"), &mut rb);
+        }
+        let t = SimTime::from_secs(64);
+        let worst_a = a.sync_all(t);
+        let mut worst_b = 0.0f64;
+        for i in 0..4 {
+            worst_b = worst_b.max(b.offset(&format!("n{i}"), t).abs());
+            b.sync(&format!("n{i}"), t);
+        }
+        assert!((worst_a - worst_b).abs() < 1e-12);
+        for i in 0..4 {
+            let oa = a.offset(&format!("n{i}"), t);
+            let ob = b.offset(&format!("n{i}"), t);
+            assert!((oa - ob).abs() < 1e-15);
+        }
     }
 
     #[test]

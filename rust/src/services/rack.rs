@@ -1,0 +1,261 @@
+//! The frontend's periodic services, mounted on the unified kernel.
+//!
+//! Before the kernel refactor, `proberctl::tick` and the NTP discipline
+//! loop each kept a private clock and were never driven by the main
+//! simulation at all. [`ServiceRack`] puts both on the shared
+//! [`sim::Kernel`]:
+//!
+//! * [`ServiceEvent::NtpSync`] fires every chrony poll interval (64 s)
+//!   and disciplines every registered clock ([`NtpService::sync_all`]);
+//! * [`ServiceEvent::ProberTick`] fires at 1 Hz **while at least one
+//!   node is powered on** — each tick publishes (cpu, temperature)
+//!   readings from the powered nodes to their partition's LED strip
+//!   (§2.3/§3.5). The tick disarms itself when the whole cluster is
+//!   suspended and is re-armed by the dispatcher on the next node boot,
+//!   so a 24 h idle trace costs zero prober events.
+
+use std::collections::BTreeMap;
+
+use super::ntp::NtpService;
+use super::proberctl::{LedStrip, ProberCtl};
+use crate::config::ClusterConfig;
+use crate::sim::{Kernel, SimTime};
+use crate::slurm::{SchedEvent, Slurm};
+use crate::util::Xoshiro256;
+
+/// Kernel events of the service rack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceEvent {
+    /// 1 Hz proberctl reporting sweep (armed only while nodes are up)
+    ProberTick,
+    /// chrony discipline step for every clock (always armed)
+    NtpSync,
+}
+
+/// All periodic frontend services of one cluster.
+pub struct ServiceRack {
+    /// one reporting agent per compute node, index-aligned with the
+    /// scheduler's node table
+    probers: Vec<ProberCtl>,
+    /// one LED strip per partition
+    strips: BTreeMap<String, LedStrip>,
+    pub ntp: NtpService,
+    pub prober_period: SimTime,
+    prober_armed: bool,
+    /// total readings published (observability / tests)
+    pub readings: u64,
+    /// worst NTP offset observed right before any discipline step
+    pub worst_ntp_offset_s: f64,
+}
+
+impl ServiceRack {
+    /// Build agents and strips for every configured node; clock drifts
+    /// draw from `rng` (deterministic per cluster seed).
+    pub fn new(cfg: &ClusterConfig, rng: &mut Xoshiro256) -> Self {
+        let mut probers = Vec::new();
+        let mut strips = BTreeMap::new();
+        let mut ntp = NtpService::new(cfg.seed);
+        for pc in &cfg.partitions {
+            strips.insert(pc.name.clone(), LedStrip::new());
+            for n in 0..pc.nodes {
+                let name = format!("{}-{}", pc.name, n);
+                ntp.register(&name, rng);
+                probers.push(ProberCtl::new(name));
+            }
+        }
+        Self {
+            probers,
+            strips,
+            ntp,
+            prober_period: SimTime::from_secs(1),
+            prober_armed: false,
+            readings: 0,
+            worst_ntp_offset_s: 0.0,
+        }
+    }
+
+    /// Arm the always-on services (the first NTP poll). Call once after
+    /// construction, with the cluster's kernel.
+    pub fn start<E: From<ServiceEvent>>(&mut self, kernel: &mut Kernel<E>) {
+        kernel.schedule_in(self.ntp.poll, ServiceEvent::NtpSync);
+    }
+
+    /// Arm the 1 Hz prober sweep if it is not already running.
+    pub fn arm_prober<E: From<ServiceEvent>>(&mut self, kernel: &mut Kernel<E>, now: SimTime) {
+        if !self.prober_armed {
+            self.prober_armed = true;
+            kernel.schedule_at(now, ServiceEvent::ProberTick);
+        }
+    }
+
+    /// Observe a scheduler event about to be handled — the one place
+    /// the re-arm rule lives: a completed node boot brings proberctl
+    /// back online (§3.5). Every kernel driver routing both subsystems
+    /// calls this before `Slurm::handle_event`.
+    pub fn observe_sched<E: From<ServiceEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        ev: &SchedEvent,
+        now: SimTime,
+    ) {
+        if matches!(ev, SchedEvent::BootComplete(_)) {
+            self.arm_prober(kernel, now);
+        }
+    }
+
+    /// The partition strip (LED rendering surface of §2.3).
+    pub fn strip(&self, partition: &str) -> Option<&LedStrip> {
+        self.strips.get(partition)
+    }
+
+    /// Route one due service event; re-arms itself as documented.
+    pub fn on_event<E: From<ServiceEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        ev: ServiceEvent,
+        now: SimTime,
+        slurm: &Slurm,
+    ) {
+        match ev {
+            ServiceEvent::NtpSync => {
+                let worst = self.ntp.sync_all(now);
+                self.worst_ntp_offset_s = self.worst_ntp_offset_s.max(worst);
+                kernel.schedule_at(now + self.ntp.poll, ServiceEvent::NtpSync);
+            }
+            ServiceEvent::ProberTick => {
+                let mut any_up = false;
+                for (idx, name, partition, act) in slurm.powered_nodes() {
+                    any_up = true;
+                    let Some(prober) = self.probers.get_mut(idx) else {
+                        continue;
+                    };
+                    if let Some(reading) = prober.tick(now, act) {
+                        if let Some(strip) = self.strips.get_mut(partition) {
+                            strip.receive(name, reading);
+                        }
+                        self.readings += 1;
+                    }
+                }
+                if any_up {
+                    kernel.schedule_at(now + self.prober_period, ServiceEvent::ProberTick);
+                } else {
+                    // whole cluster suspended: stop ticking until the
+                    // next boot re-arms us
+                    self.prober_armed = false;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::{JobSpec, SchedEvent, SlurmSim};
+
+    /// The test routing enum — scheduler + services on one kernel,
+    /// exactly the composition `dalek::api` uses.
+    #[derive(Clone, Copy, Debug)]
+    enum Ev {
+        Sched(SchedEvent),
+        Service(ServiceEvent),
+    }
+    impl From<SchedEvent> for Ev {
+        fn from(e: SchedEvent) -> Self {
+            Ev::Sched(e)
+        }
+    }
+    impl From<ServiceEvent> for Ev {
+        fn from(e: ServiceEvent) -> Self {
+            Ev::Service(e)
+        }
+    }
+
+    struct Harness {
+        slurm: SlurmSim,
+        rack: ServiceRack,
+        kernel: Kernel<Ev>,
+    }
+
+    impl Harness {
+        fn new() -> Self {
+            let cfg = ClusterConfig::dalek_default();
+            let mut rng = Xoshiro256::new(cfg.seed);
+            let mut rack = ServiceRack::new(&cfg, &mut rng);
+            let mut kernel = Kernel::new();
+            rack.start(&mut kernel);
+            Self {
+                slurm: SlurmSim::from_config(&cfg),
+                rack,
+                kernel,
+            }
+        }
+
+        fn run_until(&mut self, t: SimTime) {
+            while let Some((now, ev)) = self.kernel.pop_due(t) {
+                match ev {
+                    Ev::Sched(e) => {
+                        self.rack.observe_sched(&mut self.kernel, &e, now);
+                        self.slurm.ctl.handle_event(&mut self.kernel, e, now);
+                    }
+                    Ev::Service(e) => {
+                        self.rack
+                            .on_event(&mut self.kernel, e, now, &self.slurm.ctl)
+                    }
+                }
+            }
+            self.kernel.advance_to(t);
+            self.slurm.ctl.sync_clock(t);
+        }
+    }
+
+    #[test]
+    fn idle_cluster_generates_no_prober_events() {
+        let mut h = Harness::new();
+        h.run_until(SimTime::from_hours(1));
+        assert_eq!(h.rack.readings, 0);
+        // but NTP kept disciplining (64 s poll → ~56 events/hour)
+        assert!(h.rack.worst_ntp_offset_s > 0.0);
+        assert!(h.kernel.processed() >= 50);
+    }
+
+    #[test]
+    fn powered_nodes_report_at_1hz_and_light_the_strip() {
+        let mut h = Harness::new();
+        h.slurm
+            .ctl
+            .submit_at(
+                &mut h.kernel,
+                JobSpec::cpu("a", "az5-a890m", 2, 120),
+                SimTime::ZERO,
+            )
+            .unwrap();
+        h.run_until(SimTime::from_mins(4));
+        // boot ≈70 s, run 120 s → ≥120 readings from 2 nodes
+        assert!(h.rack.readings >= 240, "readings {}", h.rack.readings);
+        let strip = h.rack.strip("az5-a890m").unwrap();
+        assert!(strip.node_count() >= 2);
+        assert!(strip
+            .segment("az5-a890m-0", h.kernel.now())
+            .is_some());
+    }
+
+    #[test]
+    fn prober_disarms_when_cluster_resuspends() {
+        let mut h = Harness::new();
+        h.slurm
+            .ctl
+            .submit_at(
+                &mut h.kernel,
+                JobSpec::cpu("a", "az5-a890m", 1, 30),
+                SimTime::ZERO,
+            )
+            .unwrap();
+        // run long past job end + 10-min suspend + shutdown
+        h.run_until(SimTime::from_mins(20));
+        let after_suspend = h.rack.readings;
+        h.run_until(SimTime::from_mins(40));
+        // no new readings once everything is suspended again
+        assert_eq!(h.rack.readings, after_suspend);
+    }
+}

@@ -8,7 +8,9 @@
 //! the paper-shaped benches rely on.
 
 pub mod engine;
+pub mod kernel;
 pub mod time;
 
 pub use engine::{EventQueue, ScheduledId};
+pub use kernel::Kernel;
 pub use time::SimTime;

@@ -1,20 +1,23 @@
-//! `sbatch` / `srun` / `salloc` command back-ends with per-RPC MUNGE
-//! credential round-trips (§3.4) and the SPANK/PAM login gate wiring
-//! (§3.5) — a crate-internal routing target.
+//! `sbatch` command back-end with per-RPC MUNGE credential round-trips
+//! (§3.4) and the SPANK/PAM login gate wiring (§3.5) — a crate-internal
+//! routing target.
 //!
 //! User authentication (directory lookup, admin policy) lives in the
 //! session layer of [`crate::api`]; this type receives an
 //! already-resolved uid and still performs the credential mint +
 //! validate round-trip that slurmctld and slurmd do on every RPC.
 //!
-//! `sbatch` queues and returns immediately; `srun` blocks (drives the
-//! simulation) until the job completes; `salloc` reserves nodes and
-//! grants interactive SSH through the login gate for the job's limit.
+//! The blocking commands (`srun`, `salloc`) are implemented in the
+//! `dalek::api` layer: blocking means advancing the *whole* cluster —
+//! network flows, service ticks, sampling — so their wait loops must
+//! drive the unified [`crate::sim::Kernel`], which only the top-level
+//! dispatcher can route. This module keeps what is genuinely SLURM's:
+//! credentials, submission, and the SSH login gate.
 
-use super::job::{JobId, JobSpec, JobState};
-use super::scheduler::{Slurm, SlurmError};
+use super::job::{JobId, JobSpec};
+use super::scheduler::{SchedEvent, Slurm, SlurmError};
 use crate::services::auth::{AuthError, LoginGate, Munge};
-use crate::sim::SimTime;
+use crate::sim::{Kernel, SimTime};
 
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum ApiError {
@@ -22,10 +25,6 @@ pub enum ApiError {
     Auth(#[from] AuthError),
     #[error(transparent)]
     Slurm(#[from] SlurmError),
-    #[error("job did not reach a terminal state")]
-    Incomplete,
-    #[error("deadline reached before {0} finished")]
-    Deadline(JobId),
 }
 
 /// The credentialed command back-end over a controller.
@@ -52,81 +51,17 @@ impl SlurmApi {
         Ok(())
     }
 
-    /// sbatch: queue and return the job id.
-    pub(crate) fn sbatch(
+    /// sbatch: queue and return the job id. Boot/completion timers land
+    /// on the shared kernel.
+    pub(crate) fn sbatch<E: From<SchedEvent>>(
         &mut self,
+        kernel: &mut Kernel<E>,
         uid: u32,
         spec: JobSpec,
         now: SimTime,
     ) -> Result<JobId, ApiError> {
         self.authenticate(uid, spec.user.as_bytes(), now)?;
-        Ok(self.ctl.submit_at(spec, now)?)
-    }
-
-    /// srun: submit and block (advance simulation) until terminal.
-    /// `deadline` bounds how far the shared sim clock may be driven on
-    /// behalf of this call (None = unbounded, operator/admin use);
-    /// hitting it returns `Incomplete` with the job left in place.
-    pub(crate) fn srun(
-        &mut self,
-        uid: u32,
-        spec: JobSpec,
-        now: SimTime,
-        deadline: Option<SimTime>,
-    ) -> Result<(JobId, JobState), ApiError> {
-        let id = self.sbatch(uid, spec, now)?;
-        // drive the sim until the job terminates
-        loop {
-            let state = self.ctl.job(id).expect("submitted").state;
-            if matches!(
-                state,
-                JobState::Completed | JobState::Timeout | JobState::Cancelled
-            ) {
-                return Ok((id, state));
-            }
-            let before = self.ctl.now();
-            if deadline.is_some_and(|d| before >= d) {
-                return Err(ApiError::Deadline(id));
-            }
-            self.ctl.run_until(before + SimTime::from_mins(10));
-            if self.ctl.now() == before && self.ctl.pending_count() > 0 {
-                return Err(ApiError::Incomplete);
-            }
-        }
-    }
-
-    /// salloc: reserve nodes and open the SSH gate for the allocation.
-    /// Returns the job id once nodes are granted (Configuring/Running).
-    pub(crate) fn salloc(
-        &mut self,
-        uid: u32,
-        spec: JobSpec,
-        now: SimTime,
-    ) -> Result<JobId, ApiError> {
-        let user = spec.user.clone();
-        let limit = spec.time_limit;
-        let id = self.sbatch(uid, spec, now)?;
-        // advance until the allocation exists (≤ boot budget)
-        let deadline = now + self.ctl.power_policy.max_boot_delay + SimTime::from_mins(10);
-        while self.ctl.job(id).expect("submitted").state == JobState::Pending
-            && self.ctl.now() < deadline
-        {
-            let t = self.ctl.now() + SimTime::from_secs(10);
-            self.ctl.run_until(t);
-        }
-        let job = self.ctl.job(id).expect("submitted");
-        if matches!(job.state, JobState::Configuring | JobState::Running) {
-            let until = self.ctl.now() + limit;
-            let nodes: Vec<String> = job
-                .allocated
-                .iter()
-                .map(|&i| self.ctl.node_infos()[i].name.clone())
-                .collect();
-            for n in nodes {
-                self.gate.grant(&n, &user, until);
-            }
-        }
-        Ok(id)
+        Ok(self.ctl.submit_at(kernel, spec, now)?)
     }
 }
 
@@ -134,82 +69,63 @@ impl SlurmApi {
 mod tests {
     use super::*;
     use crate::config::ClusterConfig;
+    use crate::slurm::JobState;
 
     const UID: u32 = 10_001;
 
-    fn api() -> SlurmApi {
+    fn api() -> (SlurmApi, Kernel<SchedEvent>) {
         let ctl = Slurm::from_config(&ClusterConfig::dalek_default());
-        SlurmApi::new(ctl, b"dalek-munge-key")
+        (SlurmApi::new(ctl, b"dalek-munge-key"), Kernel::new())
+    }
+
+    fn drain(api: &mut SlurmApi, kernel: &mut Kernel<SchedEvent>, to: SimTime) {
+        while let Some((now, ev)) = kernel.pop_due(to) {
+            api.ctl.handle_event(kernel, ev, now);
+        }
+        kernel.advance_to(to);
+        api.ctl.sync_clock(kernel.now());
     }
 
     #[test]
     fn sbatch_queues_with_credential_round_trip() {
-        let mut api = api();
+        let (mut api, mut kernel) = api();
         assert!(api
-            .sbatch(UID, JobSpec::cpu("alice", "az4-n4090", 1, 10), SimTime::ZERO)
+            .sbatch(
+                &mut kernel,
+                UID,
+                JobSpec::cpu("alice", "az4-n4090", 1, 10),
+                SimTime::ZERO
+            )
             .is_ok());
     }
 
     #[test]
-    fn srun_blocks_to_completion() {
-        let mut api = api();
-        let (id, state) = api
-            .srun(UID, JobSpec::cpu("alice", "az5-a890m", 2, 120), SimTime::ZERO, None)
-            .unwrap();
-        assert_eq!(state, JobState::Completed);
-        assert!(api.ctl.job(id).unwrap().finished.is_some());
-    }
-
-    #[test]
-    fn srun_deadline_bounds_clock_advance() {
-        let mut api = api();
-        // fill the partition so a second job queues behind it
-        api.sbatch(UID, JobSpec::cpu("alice", "az5-a890m", 4, 7200), SimTime::ZERO)
-            .unwrap();
-        let e = api.srun(
-            UID,
-            JobSpec::cpu("alice", "az5-a890m", 1, 60),
-            SimTime::ZERO,
-            Some(SimTime::from_mins(30)),
-        );
-        assert!(matches!(e, Err(ApiError::Deadline(_))));
-        // the clock stopped within one stride of the deadline
-        assert!(api.ctl.now() <= SimTime::from_mins(40));
-    }
-
-    #[test]
-    fn salloc_grants_ssh_on_allocated_nodes() {
-        let mut api = api();
+    fn sbatch_timers_ride_the_shared_kernel() {
+        let (mut api, mut kernel) = api();
         let id = api
-            .salloc(UID, JobSpec::cpu("alice", "iml-ia770", 2, 600), SimTime::ZERO)
+            .sbatch(
+                &mut kernel,
+                UID,
+                JobSpec::cpu("alice", "az5-a890m", 2, 120),
+                SimTime::ZERO,
+            )
             .unwrap();
-        let job = api.ctl.job(id).unwrap();
-        assert!(matches!(
-            job.state,
-            JobState::Configuring | JobState::Running
-        ));
-        let node_name = api.ctl.node_infos()[job.allocated[0]].name.clone();
-        let now = api.ctl.now();
-        assert!(api.gate.try_ssh(&node_name, "alice", now));
-        assert!(!api.gate.try_ssh(&node_name, "powerstate", now));
-        // other partition's node: no grant
-        assert!(!api.gate.try_ssh("az4-n4090-0", "alice", now));
+        // the wake → boot-complete timer landed on the caller's kernel
+        assert!(kernel.pending() > 0);
+        drain(&mut api, &mut kernel, SimTime::from_mins(10));
+        assert_eq!(api.ctl.job(id).unwrap().state, JobState::Completed);
     }
 
     #[test]
-    fn expired_allocation_evicts_shells() {
-        let mut api = api();
-        let mut spec = JobSpec::cpu("alice", "az5-a890m", 1, 30);
-        spec.time_limit = SimTime::from_secs(60);
-        let id = api.salloc(UID, spec, SimTime::ZERO).unwrap();
-        let node = api.ctl.node_infos()[api.ctl.job(id).unwrap().allocated[0]]
-            .name
-            .clone();
-        let now = api.ctl.now();
-        assert!(api.gate.try_ssh(&node, "alice", now));
+    fn gate_grants_and_evicts_shells() {
+        let (mut api, _) = api();
+        let until = SimTime::from_secs(60);
+        api.gate.grant("az5-a890m-0", "alice", until);
+        assert!(api.gate.try_ssh("az5-a890m-0", "alice", SimTime::ZERO));
+        assert!(!api.gate.try_ssh("az5-a890m-0", "powerstate", SimTime::ZERO));
         // after the limit passes, the sweep kicks the shell (§3.5)
-        let evicted = api.gate.sweep(now + SimTime::from_secs(61));
+        let evicted = api.gate.sweep(SimTime::from_secs(61));
         assert_eq!(evicted.len(), 1);
-        assert!(!api.gate.has_shell(&node, "alice"));
+        assert!(!api.gate.has_shell("az5-a890m-0", "alice"));
     }
 }

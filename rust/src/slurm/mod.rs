@@ -5,9 +5,17 @@
 //!   queueing, node allocation, and the §3.4 energy-aware powering
 //!   policy (suspend after 10 idle minutes, WoL resume on demand,
 //!   ≤ 2 min boot delay between reservation and job start)
-//! * `api` — `sbatch`/`srun`/`salloc` back-ends with per-RPC MUNGE
-//!   credential round-trips (§3.4); crate-internal — the user-facing
-//!   surface is the session-based `dalek::api` layer
+//! * `api` — the `sbatch` back-end with per-RPC MUNGE credential
+//!   round-trips (§3.4) and the SSH login gate; crate-internal — the
+//!   user-facing surface (and the blocking `srun`/`salloc` loops, which
+//!   must drive the whole-cluster kernel) is the session-based
+//!   `dalek::api` layer
+//!
+//! The controller keeps no clock of its own: its timers are
+//! [`SchedEvent`]s on the shared `sim::Kernel`, and every power change
+//! is published as a `power::PowerTransition` for the §4 streaming
+//! sampler. [`SlurmSim`] pairs a controller with a private kernel for
+//! standalone tests and benches.
 
 pub(crate) mod api;
 pub mod job;
@@ -17,4 +25,6 @@ pub mod scheduler;
 pub(crate) use api::SlurmApi;
 pub use job::{Job, JobId, JobSpec, JobState};
 pub use quota::{QuotaDb, QuotaDecision};
-pub use scheduler::{NodeInfo, SchedPolicy, Slurm, SlurmStats};
+pub use scheduler::{
+    AdminPowerOutcome, NodeInfo, SchedEvent, SchedPolicy, Slurm, SlurmSim, SlurmStats,
+};

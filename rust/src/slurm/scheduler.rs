@@ -12,16 +12,24 @@
 //! later job may jump the queue iff it fits on nodes the partition head
 //! cannot use before the head's estimated start (its shadow time).
 //!
+//! The controller owns no clock and no event queue of its own: all of
+//! its timers ([`SchedEvent`]) live on the shared [`sim::Kernel`],
+//! routed back through [`Slurm::handle_event`] by whoever drives the
+//! kernel (the `dalek::api` dispatch loop, or the [`SlurmSim`] harness
+//! for standalone tests and benches).
+//!
 //! Energy accounting integrates each node's power draw exactly across
-//! state changes, so `total_energy_j` is the ground truth the §4
-//! measurement platform samples at 1 ms.
+//! state changes; every change is also published as a
+//! [`PowerTransition`] which the §4 streaming sampler drains — the
+//! measured signal is therefore derived from the same ground truth,
+//! with no history cloning or garbage collection.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 
 use super::job::{Job, JobId, JobSpec, JobState};
 use crate::config::cluster::{resolve_partition, ClusterConfig, PowerPolicyConfig};
-use crate::power::{Activity, NodePowerFsm, PowerModel, PowerState, Transition};
-use crate::sim::{EventQueue, ScheduledId, SimTime};
+use crate::power::{Activity, NodePowerFsm, PowerModel, PowerState, PowerTransition, Transition};
+use crate::sim::{Kernel, ScheduledId, SimTime};
 
 /// Queue policy.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -30,12 +38,26 @@ pub enum SchedPolicy {
     Backfill,
 }
 
-#[derive(Clone, Debug)]
-enum Event {
+/// The controller's kernel events. Any kernel whose routing enum is
+/// `From<SchedEvent>` can host a controller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedEvent {
     BootComplete(usize),
     ShutdownComplete(usize),
     JobComplete(JobId),
     SuspendTimer(usize),
+}
+
+/// Result of a §4.3 manual power action ([`Slurm::admin_power`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdminPowerOutcome {
+    /// the FSM transition was initiated (boot/shutdown scheduled)
+    Applied,
+    /// the node is already in (or moving toward) the requested state
+    AlreadyThere,
+    /// refused: the node is running/reserved, or mid-transition the
+    /// other way — the policy never kills work
+    Refused,
 }
 
 struct NodeEntry {
@@ -50,9 +72,6 @@ struct NodeEntry {
     last_change: SimTime,
     cur_watts: f64,
     energy_j: f64,
-    /// piecewise-constant power history: (change time, watts from then)
-    /// — consumed by the coordinator's energy-platform sampling
-    history: VecDeque<(SimTime, f64)>,
 }
 
 /// Public node snapshot.
@@ -89,6 +108,8 @@ pub enum SlurmError {
     UnknownJob(JobId),
     #[error("job {0} is not pending")]
     NotPending(JobId),
+    #[error("unknown node `{0}`")]
+    UnknownNode(String),
 }
 
 /// The controller.
@@ -98,10 +119,14 @@ pub struct Slurm {
     jobs: BTreeMap<JobId, Job>,
     /// pending job ids in submission order
     queue: Vec<JobId>,
-    events: EventQueue<Event>,
-    /// wall clock: advances with run_until even when no events fire
+    /// mirror of the kernel clock: the last time this controller
+    /// observed (event dispatch, submission, or an explicit sync). The
+    /// kernel is the single authoritative clock.
     clock: SimTime,
     next_job: u64,
+    /// power change points since the last drain, in time order — the
+    /// §4 sampler borrows and clears these (no cloning)
+    transitions: Vec<PowerTransition>,
     pub policy: SchedPolicy,
     pub power_policy: PowerPolicyConfig,
     pub stats: SlurmStats,
@@ -129,7 +154,6 @@ impl Slurm {
                     last_change: SimTime::ZERO,
                     cur_watts: model.power.suspend_w,
                     energy_j: 0.0,
-                    history: VecDeque::from([(SimTime::ZERO, model.power.suspend_w)]),
                 });
                 by_partition.entry(pc.name.clone()).or_default().push(idx);
             }
@@ -144,24 +168,24 @@ impl Slurm {
             by_partition,
             jobs: BTreeMap::new(),
             queue: Vec::new(),
-            events: EventQueue::new(),
             clock: SimTime::ZERO,
             next_job: 1,
+            transitions: Vec::new(),
             policy,
             power_policy: cfg.power.clone(),
             stats: SlurmStats::default(),
         }
     }
 
+    /// Last kernel time this controller observed.
     pub fn now(&self) -> SimTime {
-        self.clock.max(self.events.now())
+        self.clock
     }
 
-    /// Timestamp of the next scheduled event, if any — used by the
-    /// coordinator to co-simulate energy sampling between events (node
-    /// power is piecewise constant between events).
-    pub fn next_event_time(&mut self) -> Option<SimTime> {
-        self.events.peek_time()
+    /// Mirror the kernel clock (called by the kernel driver after a
+    /// drain, so zero-argument accessors report up-to-date integrals).
+    pub fn sync_clock(&mut self, now: SimTime) {
+        self.clock = self.clock.max(now);
     }
 
     pub fn job(&self, id: JobId) -> Option<&Job> {
@@ -176,7 +200,7 @@ impl Slurm {
         self.queue.len()
     }
 
-    /// Node snapshots (energy integrated up to `now`).
+    /// Node snapshots (energy integrated up to the last observed time).
     pub fn node_infos(&self) -> Vec<NodeInfo> {
         let now = self.now();
         self.nodes
@@ -199,7 +223,7 @@ impl Slurm {
         self.nodes.iter().map(|n| n.cur_watts).sum()
     }
 
-    /// Integrated compute-node energy up to `now`, joules.
+    /// Integrated compute-node energy up to the last observed time, joules.
     pub fn total_energy_j(&self) -> f64 {
         let now = self.now();
         self.nodes
@@ -214,9 +238,32 @@ impl Slurm {
         self.nodes.iter().find(|n| n.name == name).map(|n| n.cur_watts)
     }
 
+    /// Powered-on nodes (Idle or Allocated) with their current activity
+    /// — the 1 Hz proberctl reporting surface of §3.5.
+    pub fn powered_nodes<'a>(
+        &'a self,
+    ) -> impl Iterator<Item = (usize, &'a str, &'a str, Activity)> + 'a {
+        self.nodes.iter().enumerate().filter_map(move |(i, n)| {
+            let act = match n.fsm.state() {
+                PowerState::Idle { .. } => Activity::idle(),
+                PowerState::Allocated => n
+                    .running
+                    .and_then(|j| self.jobs.get(&j))
+                    .map(|j| j.spec.activity)
+                    .unwrap_or_default(),
+                _ => return None,
+            };
+            Some((i, n.name.as_str(), n.partition.as_str(), act))
+        })
+    }
+
     // -- energy bookkeeping ------------------------------------------------
 
     fn touch(&mut self, idx: usize, now: SimTime) {
+        let activity = self.nodes[idx]
+            .running
+            .and_then(|j| self.jobs.get(&j))
+            .map(|j| j.spec.activity);
         let n = &mut self.nodes[idx];
         n.energy_j += n.cur_watts * now.since(n.last_change).as_secs_f64();
         n.last_change = now;
@@ -226,47 +273,50 @@ impl Slurm {
             PowerState::Booting { .. } => n.power.boot_w(),
             PowerState::Suspending { .. } => n.power.idle_w(),
             PowerState::Idle { .. } => n.power.watts(Activity::idle()),
-            PowerState::Allocated => {
-                let act = n
-                    .running
-                    .and_then(|j| self.jobs.get(&j))
-                    .map(|j| j.spec.activity)
-                    .unwrap_or_default();
-                n.power.watts(act)
-            }
+            PowerState::Allocated => n.power.watts(activity.unwrap_or_default()),
         };
         if (n.cur_watts - old_watts).abs() > 1e-12 {
-            n.history.push_back((now, n.cur_watts));
+            self.transitions.push(PowerTransition {
+                node: idx,
+                at: now,
+                watts: n.cur_watts,
+            });
         }
     }
 
-    /// Power history of one node: change points (time, watts). The
-    /// first relevant entry for a window starting at `from` is the last
-    /// change at or before `from`.
-    pub fn node_history(&self, name: &str) -> Option<Vec<(SimTime, f64)>> {
-        self.nodes
-            .iter()
-            .find(|n| n.name == name)
-            .map(|n| n.history.iter().copied().collect())
+    /// Power change points accumulated since the last
+    /// [`Slurm::clear_transitions`], in time order. The §4 streaming
+    /// sampler borrows this (no cloning), emits the corresponding
+    /// sample batches, then clears it.
+    pub fn transitions(&self) -> &[PowerTransition] {
+        &self.transitions
     }
 
-    /// Drop history entries no longer needed for windows starting at or
-    /// after `before` (always keeps the last entry ≤ `before`).
-    pub fn gc_history(&mut self, before: SimTime) {
-        for n in &mut self.nodes {
-            while n.history.len() > 1 && n.history[1].0 <= before {
-                n.history.pop_front();
-            }
-        }
+    /// Drop drained transitions (capacity is kept — the steady state
+    /// allocates nothing).
+    pub fn clear_transitions(&mut self) {
+        self.transitions.clear();
     }
 
     // -- submission ---------------------------------------------------------
 
-    /// Submit a job at time `now` (clamped to the controller clock if
-    /// the caller lags behind it).
-    pub fn submit_at(&mut self, spec: JobSpec, now: SimTime) -> Result<JobId, SlurmError> {
-        self.run_until(now);
-        let now = self.now();
+    /// Submit a job at time `now` (clamped to the kernel clock if the
+    /// caller lags behind it). The kernel driver is responsible for
+    /// draining events due before `now` first.
+    pub fn submit_at<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        spec: JobSpec,
+        now: SimTime,
+    ) -> Result<JobId, SlurmError> {
+        kernel.advance_to(now);
+        let now = now.max(kernel.now());
+        debug_assert!(
+            kernel.peek_time().map_or(true, |next| next >= now),
+            "submit_at({now:?}) with events still due earlier — drain the kernel first \
+             (handlers scheduling relative to a stale `now` would panic later)"
+        );
+        self.clock = self.clock.max(now);
         let part_nodes = self
             .by_partition
             .get(&spec.partition)
@@ -283,62 +333,47 @@ impl Slurm {
         self.jobs.insert(id, Job::new(id, spec, now));
         self.queue.push(id);
         self.stats.submitted += 1;
-        self.try_schedule(now);
+        self.try_schedule(kernel, now);
         Ok(id)
     }
 
     /// scancel for pending jobs.
-    pub fn cancel(&mut self, id: JobId) -> Result<(), SlurmError> {
+    pub fn cancel(&mut self, id: JobId, now: SimTime) -> Result<(), SlurmError> {
         let job = self.jobs.get_mut(&id).ok_or(SlurmError::UnknownJob(id))?;
         if job.state != JobState::Pending {
             return Err(SlurmError::NotPending(id));
         }
         job.state = JobState::Cancelled;
-        job.finished = Some(self.events.now());
+        job.finished = Some(now);
         self.queue.retain(|q| *q != id);
         self.stats.cancelled += 1;
         Ok(())
     }
 
-    // -- event loop ----------------------------------------------------------
+    // -- event handling ------------------------------------------------------
 
-    /// Process all events up to and including `t`; the clock then
-    /// stands at `t` even if no event fired.
-    pub fn run_until(&mut self, t: SimTime) {
-        while let Some(next) = self.events.peek_time() {
-            if next > t {
-                break;
-            }
-            let (now, ev) = self.events.pop().expect("peeked");
-            self.clock = self.clock.max(now);
-            self.handle(ev, now);
-        }
-        self.clock = self.clock.max(t);
-    }
-
-    /// Drain every scheduled event (cluster reaches quiescence).
-    pub fn run_to_idle(&mut self) -> SimTime {
-        while let Some((now, ev)) = self.events.pop() {
-            self.clock = self.clock.max(now);
-            self.handle(ev, now);
-        }
-        self.now()
-    }
-
-    fn handle(&mut self, ev: Event, now: SimTime) {
+    /// Route one kernel event back into the controller. Follow-up
+    /// timers are scheduled on the same kernel.
+    pub fn handle_event<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        ev: SchedEvent,
+        now: SimTime,
+    ) {
+        self.clock = self.clock.max(now);
         match ev {
-            Event::BootComplete(i) => {
+            SchedEvent::BootComplete(i) => {
                 self.nodes[i].fsm.boot_complete(now).expect("boot scheduled");
                 self.touch(i, now);
                 // a freshly-booted node either belongs to a configuring
                 // job or idles (and gets a suspend timer)
                 if let Some(j) = self.nodes[i].reserved_for {
-                    self.maybe_start(j, now);
+                    self.maybe_start(kernel, j, now);
                 } else {
-                    self.arm_suspend_timer(i, now);
+                    self.arm_suspend_timer(kernel, i, now);
                 }
             }
-            Event::ShutdownComplete(i) => {
+            SchedEvent::ShutdownComplete(i) => {
                 self.nodes[i]
                     .fsm
                     .shutdown_complete(now)
@@ -346,10 +381,10 @@ impl Slurm {
                 self.touch(i, now);
                 // resources changed (a node finished suspending can now
                 // be woken again for a waiting head job)
-                self.try_schedule(now);
+                self.try_schedule(kernel, now);
             }
-            Event::JobComplete(id) => self.finish_job(id, now),
-            Event::SuspendTimer(i) => {
+            SchedEvent::JobComplete(id) => self.finish_job(kernel, id, now),
+            SchedEvent::SuspendTimer(i) => {
                 self.nodes[i].suspend_timer = None;
                 let idle_long_enough = self.nodes[i]
                     .fsm
@@ -364,39 +399,105 @@ impl Slurm {
                         self.nodes[i].fsm.suspend(now)
                     {
                         self.touch(i, now);
-                        self.events.schedule_at(at, Event::ShutdownComplete(i));
+                        kernel.schedule_at(at, SchedEvent::ShutdownComplete(i));
                     }
                 }
             }
         }
     }
 
-    fn arm_suspend_timer(&mut self, idx: usize, now: SimTime) {
+    /// §4.3 manual power control: force a node's FSM toward on/off.
+    /// Never kills work — allocated/reserved nodes refuse to power off.
+    pub fn admin_power<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        node: &str,
+        on: bool,
+        now: SimTime,
+    ) -> Result<AdminPowerOutcome, SlurmError> {
+        let idx = self
+            .nodes
+            .iter()
+            .position(|n| n.name == node)
+            .ok_or_else(|| SlurmError::UnknownNode(node.into()))?;
+        self.clock = self.clock.max(now);
+        let state = self.nodes[idx].fsm.state();
+        let outcome = if on {
+            match state {
+                PowerState::Suspended => {
+                    if let Ok(Transition::ScheduleBootComplete(at)) =
+                        self.nodes[idx].fsm.wake(now)
+                    {
+                        self.touch(idx, now);
+                        kernel.schedule_at(at, SchedEvent::BootComplete(idx));
+                    }
+                    AdminPowerOutcome::Applied
+                }
+                PowerState::Booting { .. } | PowerState::Idle { .. } | PowerState::Allocated => {
+                    AdminPowerOutcome::AlreadyThere
+                }
+                PowerState::Suspending { .. } => AdminPowerOutcome::Refused,
+            }
+        } else {
+            match state {
+                PowerState::Idle { .. }
+                    if self.nodes[idx].reserved_for.is_none()
+                        && self.nodes[idx].running.is_none() =>
+                {
+                    self.disarm_suspend_timer(kernel, idx);
+                    if let Ok(Transition::ScheduleShutdownComplete(at)) =
+                        self.nodes[idx].fsm.suspend(now)
+                    {
+                        self.touch(idx, now);
+                        kernel.schedule_at(at, SchedEvent::ShutdownComplete(idx));
+                    }
+                    AdminPowerOutcome::Applied
+                }
+                PowerState::Suspended | PowerState::Suspending { .. } => {
+                    AdminPowerOutcome::AlreadyThere
+                }
+                _ => AdminPowerOutcome::Refused,
+            }
+        };
+        Ok(outcome)
+    }
+
+    fn arm_suspend_timer<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        idx: usize,
+        now: SimTime,
+    ) {
         if !self.power_policy.enabled {
             return;
         }
         let at = now + self.power_policy.suspend_after;
-        let id = self.events.schedule_at(at, Event::SuspendTimer(idx));
+        let id = kernel.schedule_at(at, SchedEvent::SuspendTimer(idx));
         self.nodes[idx].suspend_timer = Some(id);
     }
 
-    fn disarm_suspend_timer(&mut self, idx: usize) {
+    fn disarm_suspend_timer<E>(&mut self, kernel: &mut Kernel<E>, idx: usize) {
         if let Some(id) = self.nodes[idx].suspend_timer.take() {
-            self.events.cancel(id);
+            kernel.cancel(id);
         }
     }
 
     // -- scheduling ----------------------------------------------------------
 
-    fn try_schedule(&mut self, now: SimTime) {
+    fn try_schedule<E: From<SchedEvent>>(&mut self, kernel: &mut Kernel<E>, now: SimTime) {
         // per-partition independent queues
         let partitions: Vec<String> = self.by_partition.keys().cloned().collect();
         for part in partitions {
-            self.schedule_partition(&part, now);
+            self.schedule_partition(kernel, &part, now);
         }
     }
 
-    fn schedule_partition(&mut self, part: &str, now: SimTime) {
+    fn schedule_partition<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        part: &str,
+        now: SimTime,
+    ) {
         let pending: Vec<JobId> = self
             .queue
             .iter()
@@ -408,9 +509,9 @@ impl Slurm {
             .collect();
         let Some(&head) = pending.first() else { return };
 
-        if self.reserve(head, now) {
+        if self.reserve(kernel, head, now) {
             // head got its nodes; recurse for the next head
-            self.schedule_partition(part, now);
+            self.schedule_partition(kernel, part, now);
             return;
         }
         if self.policy == SchedPolicy::Fifo {
@@ -422,7 +523,7 @@ impl Slurm {
             let fits_now = self.claimable(part, None).len() as u32 >= self.jobs[&bf].spec.nodes;
             let ends_before_shadow = now + self.jobs[&bf].spec.time_limit <= shadow;
             if fits_now && ends_before_shadow {
-                let ok = self.reserve(bf, now);
+                let ok = self.reserve(kernel, bf, now);
                 debug_assert!(ok, "claimable said it fits");
             }
         }
@@ -480,7 +581,12 @@ impl Slurm {
 
     /// Try to reserve nodes for a job; wakes suspended nodes. Returns
     /// true if the reservation was made (job leaves the Pending queue).
-    fn reserve(&mut self, id: JobId, now: SimTime) -> bool {
+    fn reserve<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) -> bool {
         let needed = self.jobs[&id].spec.nodes as usize;
         let part = self.jobs[&id].spec.partition.clone();
         let mut cands = self.claimable(&part, Some(id));
@@ -498,11 +604,11 @@ impl Slurm {
         cands.truncate(needed);
         for &i in &cands {
             self.nodes[i].reserved_for = Some(id);
-            self.disarm_suspend_timer(i);
+            self.disarm_suspend_timer(kernel, i);
             if matches!(self.nodes[i].fsm.state(), PowerState::Suspended) {
                 if let Ok(Transition::ScheduleBootComplete(at)) = self.nodes[i].fsm.wake(now) {
                     self.touch(i, now);
-                    self.events.schedule_at(at, Event::BootComplete(i));
+                    kernel.schedule_at(at, SchedEvent::BootComplete(i));
                 }
             }
         }
@@ -510,12 +616,17 @@ impl Slurm {
         job.state = JobState::Configuring;
         job.allocated = cands;
         self.queue.retain(|q| *q != id);
-        self.maybe_start(id, now);
+        self.maybe_start(kernel, id, now);
         true
     }
 
     /// Start the job if every reserved node is idle (booted).
-    fn maybe_start(&mut self, id: JobId, now: SimTime) {
+    fn maybe_start<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) {
         let job = &self.jobs[&id];
         if job.state != JobState::Configuring {
             return;
@@ -537,10 +648,15 @@ impl Slurm {
         let job = self.jobs.get_mut(&id).expect("exists");
         job.state = JobState::Running;
         job.started = Some(now);
-        self.events.schedule_at(now + dur, Event::JobComplete(id));
+        kernel.schedule_at(now + dur, SchedEvent::JobComplete(id));
     }
 
-    fn finish_job(&mut self, id: JobId, now: SimTime) {
+    fn finish_job<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) {
         let job = self.jobs.get_mut(&id).expect("scheduled completion");
         let timed_out = job.spec.duration > job.spec.time_limit;
         job.state = if timed_out {
@@ -561,9 +677,71 @@ impl Slurm {
             self.nodes[i].reserved_for = None;
             self.nodes[i].fsm.release(now).expect("allocated node");
             self.touch(i, now);
-            self.arm_suspend_timer(i, now);
+            self.arm_suspend_timer(kernel, i, now);
         }
-        self.try_schedule(now);
+        self.try_schedule(kernel, now);
+    }
+}
+
+/// A controller paired with its own kernel — the standalone harness
+/// used by scheduler tests, property tests and the scheduler bench.
+/// The full cluster instead shares one kernel across all subsystems
+/// (see `dalek::api`). Derefs to [`Slurm`] for read access.
+pub struct SlurmSim {
+    pub ctl: Slurm,
+    pub kernel: Kernel<SchedEvent>,
+}
+
+impl SlurmSim {
+    pub fn from_config(cfg: &ClusterConfig) -> Self {
+        Self {
+            ctl: Slurm::from_config(cfg),
+            kernel: Kernel::new(),
+        }
+    }
+
+    /// Submit at `now`, draining events due before it first (the old
+    /// self-driving `Slurm::submit_at` semantics).
+    pub fn submit_at(&mut self, spec: JobSpec, now: SimTime) -> Result<JobId, SlurmError> {
+        self.run_until(now);
+        self.ctl.submit_at(&mut self.kernel, spec, now)
+    }
+
+    pub fn cancel(&mut self, id: JobId) -> Result<(), SlurmError> {
+        let now = self.kernel.now();
+        self.ctl.cancel(id, now)
+    }
+
+    /// Process all events up to and including `t`; the clock then
+    /// stands at `t` even if no event fired.
+    pub fn run_until(&mut self, t: SimTime) {
+        while let Some((now, ev)) = self.kernel.pop_due(t) {
+            self.ctl.handle_event(&mut self.kernel, ev, now);
+        }
+        self.kernel.advance_to(t);
+        self.ctl.sync_clock(self.kernel.now());
+    }
+
+    /// Drain every scheduled event (cluster reaches quiescence).
+    pub fn run_to_idle(&mut self) -> SimTime {
+        while let Some((now, ev)) = self.kernel.pop_due(SimTime(u64::MAX)) {
+            self.ctl.handle_event(&mut self.kernel, ev, now);
+        }
+        self.ctl.sync_clock(self.kernel.now());
+        self.kernel.now()
+    }
+}
+
+impl std::ops::Deref for SlurmSim {
+    type Target = Slurm;
+    fn deref(&self) -> &Slurm {
+        &self.ctl
+    }
+}
+
+impl std::ops::DerefMut for SlurmSim {
+    fn deref_mut(&mut self) -> &mut Slurm {
+        &mut self.ctl
     }
 }
 
@@ -572,8 +750,8 @@ mod tests {
     use super::*;
     use crate::config::ClusterConfig;
 
-    fn slurm() -> Slurm {
-        Slurm::from_config(&ClusterConfig::dalek_default())
+    fn slurm() -> SlurmSim {
+        SlurmSim::from_config(&ClusterConfig::dalek_default())
     }
 
     fn mins(m: u64) -> SimTime {
@@ -782,7 +960,7 @@ mod tests {
     fn power_policy_disabled_keeps_nodes_up() {
         let mut cfg = ClusterConfig::dalek_default();
         cfg.power.enabled = false;
-        let mut s = Slurm::from_config(&cfg);
+        let mut s = SlurmSim::from_config(&cfg);
         let id = s
             .submit_at(JobSpec::cpu("a", "az5-a890m", 4, 60), SimTime::ZERO)
             .unwrap();
@@ -808,5 +986,79 @@ mod tests {
         assert_eq!(s.stats.submitted, 5);
         assert_eq!(s.stats.completed, 5);
         assert!(s.stats.total_wait_s > 0.0);
+    }
+
+    #[test]
+    fn transitions_published_in_time_order_and_drained() {
+        let mut s = slurm();
+        s.submit_at(JobSpec::cpu("a", "az5-a890m", 2, 60), SimTime::ZERO)
+            .unwrap();
+        s.run_to_idle();
+        let trs = s.ctl.transitions();
+        assert!(!trs.is_empty());
+        for w in trs.windows(2) {
+            assert!(w[0].at <= w[1].at, "transitions out of order");
+        }
+        // the signal must include the boot and the active segment
+        assert!(trs.iter().any(|t| t.watts > 10.0));
+        s.ctl.clear_transitions();
+        assert!(s.ctl.transitions().is_empty());
+    }
+
+    #[test]
+    fn admin_power_controls_idle_and_suspended_nodes() {
+        let mut s = slurm();
+        // wake a suspended node manually
+        let out = s
+            .ctl
+            .admin_power(&mut s.kernel, "az5-a890m-0", true, SimTime::ZERO)
+            .unwrap();
+        assert_eq!(out, AdminPowerOutcome::Applied);
+        s.run_until(mins(3)); // az5 boots in 70 s
+        let info = &s.node_infos()[12]; // az5 block starts at index 12
+        assert_eq!(info.name, "az5-a890m-0");
+        assert!(matches!(info.state, PowerState::Idle { .. }));
+        // powering an already-on node is a no-op
+        let now = s.kernel.now();
+        let out = s
+            .ctl
+            .admin_power(&mut s.kernel, "az5-a890m-0", true, now)
+            .unwrap();
+        assert_eq!(out, AdminPowerOutcome::AlreadyThere);
+        // manual off ahead of the 10-minute policy
+        let out = s
+            .ctl
+            .admin_power(&mut s.kernel, "az5-a890m-0", false, now)
+            .unwrap();
+        assert_eq!(out, AdminPowerOutcome::Applied);
+        s.run_until(now + mins(1)); // shutdown takes 15 s
+        assert!(matches!(
+            s.node_infos()[12].state,
+            PowerState::Suspended
+        ));
+        // unknown nodes are rejected
+        assert!(matches!(
+            s.ctl
+                .admin_power(&mut s.kernel, "nope-0", true, s.kernel.now()),
+            Err(SlurmError::UnknownNode(_))
+        ));
+    }
+
+    #[test]
+    fn admin_power_never_kills_running_work() {
+        let mut s = slurm();
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 4, 600), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(3)); // booted + running
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        let now = s.kernel.now();
+        let out = s
+            .ctl
+            .admin_power(&mut s.kernel, "az5-a890m-0", false, now)
+            .unwrap();
+        assert_eq!(out, AdminPowerOutcome::Refused);
+        s.run_to_idle();
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
     }
 }

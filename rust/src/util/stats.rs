@@ -77,6 +77,24 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Push `m` copies of the same value in O(1) (Chan's parallel
+    /// update with zero within-batch variance) — the closed-form path
+    /// the segment-batched energy sampler uses for constant-power runs.
+    #[inline]
+    pub fn push_n(&mut self, x: f64, m: u64) {
+        if m == 0 {
+            return;
+        }
+        let n0 = self.n as f64;
+        let mf = m as f64;
+        self.n += m;
+        let d = x - self.mean;
+        self.mean += d * (mf / self.n as f64);
+        self.m2 += d * d * (n0 * mf / self.n as f64);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -146,6 +164,29 @@ mod tests {
         assert_eq!(w.min(), s.min);
         assert_eq!(w.max(), s.max);
         assert_eq!(w.count(), 1000);
+    }
+
+    #[test]
+    fn welford_push_n_matches_repeated_push() {
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        a.push(3.0);
+        b.push(3.0);
+        for _ in 0..1000 {
+            a.push(7.5);
+        }
+        b.push_n(7.5, 1000);
+        a.push(1.0);
+        b.push(1.0);
+        assert_eq!(a.count(), b.count());
+        assert!((a.mean() - b.mean()).abs() < 1e-12);
+        assert!((a.std() - b.std()).abs() < 1e-9);
+        assert_eq!(a.min(), b.min());
+        assert_eq!(a.max(), b.max());
+        // zero-count batch is a no-op
+        b.push_n(99.0, 0);
+        assert_eq!(b.count(), a.count());
+        assert_eq!(b.max(), a.max());
     }
 
     #[test]

@@ -7,11 +7,11 @@
 
 use dalek::config::ClusterConfig;
 use dalek::coordinator::{trace, Cluster};
-use dalek::energy::{Ina228Probe, ProbeConfig};
+use dalek::energy::{Ina228Probe, MainBoard, NodeStream, ProbeConfig};
 use dalek::net::{FlowNet, Topology};
 use dalek::power::{Activity, PowerModel, PowerState};
 use dalek::sim::{EventQueue, SimTime};
-use dalek::slurm::{JobSpec, Slurm};
+use dalek::slurm::{JobSpec, SlurmSim};
 use dalek::util::Xoshiro256;
 
 const CASES: u64 = 60;
@@ -90,7 +90,7 @@ fn prop_flow_network_feasible_and_starvation_free() {
 fn prop_scheduler_conservation() {
     for case in 0..CASES {
         let mut rng = Xoshiro256::new(0x51AB ^ case);
-        let mut s = Slurm::from_config(&ClusterConfig::dalek_default());
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
         let parts = ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"];
         let n_jobs = 5 + rng.index(40);
         let mut t = SimTime::ZERO;
@@ -142,7 +142,7 @@ fn prop_scheduler_conservation() {
 fn prop_no_double_allocation_under_observation() {
     for case in 0..20 {
         let mut rng = Xoshiro256::new(0xD0B1E ^ case);
-        let mut s = Slurm::from_config(&ClusterConfig::dalek_default());
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
         for i in 0..20 {
             let spec = JobSpec::cpu("p", "az5-a890m", 1 + rng.uniform_u64(0, 3) as u32, 60);
             s.submit_at(spec, SimTime::from_secs(i * 20)).expect("ok");
@@ -177,6 +177,92 @@ fn prop_energy_measurement_tracks_truth() {
         let r = trace::replay(&mut c, &tr, true);
         let rel = (r.measured_energy_j - r.true_energy_j).abs() / r.true_energy_j.max(1e-9);
         assert!(rel < 0.01, "case {case}: probe error {rel}");
+    }
+}
+
+/// Property: energy conservation through the streaming sampler — the
+/// scheduler's exact integral (`energy_j` ground truth) and the
+/// `SampleStore` energy produced by segment-batched sampling agree
+/// within one power-LSB × duration plus the per-transition smear of
+/// the averaging ADC (one conversion rectangle per power change, one
+/// trailing sample period), across randomized `TraceGen` traces and
+/// arbitrary `run_until` split points.
+#[test]
+fn prop_streaming_sampler_conserves_energy() {
+    for case in 0..10u64 {
+        let mut rng = Xoshiro256::new(0xE6E ^ case);
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+        let mut gen = trace::TraceGen::dalek_mix(0x5A3 ^ case);
+        gen.payloads.clear();
+        let jobs = 4 + rng.index(10);
+        let tr = gen.generate(jobs);
+
+        // one noise-free probe stream per node (quantization only, so
+        // the LSB bound below is exact, not statistical)
+        let probe_cfg = ProbeConfig {
+            noise_rel: 0.0,
+            noise_abs_w: 0.0,
+            ..ProbeConfig::default()
+        };
+        let infos = s.node_infos();
+        let mut boards: Vec<MainBoard> = Vec::new();
+        let mut streams: Vec<NodeStream> = Vec::new();
+        for info in &infos {
+            let mut b = MainBoard::new(info.name.clone());
+            b.attach_probe(0, probe_cfg.clone(), rng.fork(&info.name), 64)
+                .unwrap();
+            boards.push(b);
+            let mut ns = NodeStream::new(info.watts);
+            ns.add_probe(&probe_cfg, rng.fork("stream"));
+            streams.push(ns);
+        }
+
+        for ev in &tr {
+            s.submit_at(ev.spec.clone(), ev.at).expect("valid trace");
+        }
+        // drain with random split points, pumping the transition stream
+        // incrementally (the arbitrary-split-point half of the property)
+        let mut scratch: Vec<Vec<(SimTime, f64)>> = vec![Vec::new(); streams.len()];
+        let mut per_node_transitions = vec![0u64; streams.len()];
+        let mut t = s.kernel.now();
+        loop {
+            for v in &mut scratch {
+                v.clear();
+            }
+            for trn in s.ctl.transitions() {
+                scratch[trn.node].push((trn.at, trn.watts));
+                per_node_transitions[trn.node] += 1;
+            }
+            for (i, ns) in streams.iter_mut().enumerate() {
+                ns.pump(&scratch[i], t, &mut boards[i]);
+            }
+            s.ctl.clear_transitions();
+            if s.jobs().count() == jobs && s.jobs().all(|j| j.is_terminal()) {
+                break;
+            }
+            t += SimTime::from_secs_f64(rng.uniform_f64(5.0, 900.0));
+            assert!(t < SimTime::from_hours(48), "case {case}: no progress");
+            s.run_until(t);
+        }
+
+        let duration_s = t.as_secs_f64();
+        let infos = s.node_infos();
+        for (i, info) in infos.iter().enumerate() {
+            let measured = boards[i].store(0).unwrap().energy_j();
+            // one LSB × duration (quantization, ≤ LSB/2 per sample) +
+            // one 250 µs conversion rectangle per transition at the
+            // worst step height + one trailing sample period
+            let bound = 1e-3 * duration_s
+                + per_node_transitions[i] as f64 * 0.25e-3 * 600.0
+                + 1e-3 * 600.0;
+            let diff = (measured - info.energy_j).abs();
+            assert!(
+                diff <= bound,
+                "case {case} node {}: |{measured} - {}| = {diff} > {bound}",
+                info.name,
+                info.energy_j
+            );
+        }
     }
 }
 
