@@ -1,0 +1,120 @@
+//! Bench: the §3.6 power-cap governor under shrinking cluster budgets.
+//!
+//! Replays the dense GPU-heavy `powercap_mix` trace at several budget
+//! levels (fractions of the cluster's full-load draw) and prints the
+//! energy/makespan trade-off the governor buys: lower budgets cost wall
+//! time, save energy, and must never kill a job. Also times the replay
+//! itself — the governor's 1 Hz control tick must not make simulation
+//! wall time blow up.
+
+use dalek::api::ClusterApi;
+use dalek::config::cluster::resolve_partition;
+use dalek::config::ClusterConfig;
+use dalek::coordinator::trace::{replay, TraceGen};
+use dalek::power::{Activity, PowerModel};
+use dalek::util::{benchkit, Table};
+
+const JOBS: usize = 60;
+const SEED: u64 = 0xCAB;
+
+struct Outcome {
+    completed: u64,
+    makespan_s: f64,
+    energy_j: f64,
+    mean_w: f64,
+}
+
+/// Full-load cluster draw (all 16 nodes busy at peak activity) — the
+/// reference the budget fractions scale.
+fn full_load_w(cfg: &ClusterConfig) -> f64 {
+    cfg.partitions
+        .iter()
+        .map(|pc| {
+            let node = resolve_partition(&pc.name).expect("known partition").node;
+            let act = Activity {
+                cpu: 1.0,
+                dgpu: if node.dgpu.is_some() { 1.0 } else { 0.0 },
+                igpu: 0.0,
+            };
+            PowerModel::for_node(&node).watts(act) * pc.nodes as f64
+        })
+        .sum()
+}
+
+fn run_at(budget_w: Option<f64>) -> (Outcome, f64) {
+    let mut cluster = ClusterApi::new(ClusterConfig::dalek_default(), None).expect("cluster");
+    if let Some(w) = budget_w {
+        let sid = cluster.login("root").expect("root");
+        cluster.set_power_budget(sid, Some(w)).expect("admin");
+    }
+    let mut gen = TraceGen::powercap_mix(SEED);
+    let tr = gen.generate(JOBS);
+    let t0 = std::time::Instant::now();
+    let report = replay(&mut cluster, &tr, false);
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        report.completed + report.timeouts,
+        JOBS as u64,
+        "governor must never kill a job"
+    );
+    (
+        Outcome {
+            completed: report.completed,
+            makespan_s: report.makespan.as_secs_f64(),
+            energy_j: report.true_energy_j,
+            mean_w: report.mean_cluster_w,
+        },
+        wall,
+    )
+}
+
+fn main() {
+    println!("=== §3.6 power-cap governor: energy vs makespan ===\n");
+    let cfg = ClusterConfig::dalek_default();
+    let full = full_load_w(&cfg);
+    println!("full-load reference draw: {full:.0} W\n");
+
+    let mut t = Table::new(&[
+        "budget",
+        "watts",
+        "completed",
+        "makespan (s)",
+        "energy (kJ)",
+        "mean W",
+        "sim wall (s)",
+    ])
+    .title("powercap_mix, 60 jobs, seed 0xCAB")
+    .left(0);
+    for (label, frac) in [
+        ("uncapped", None),
+        ("80%", Some(0.8)),
+        ("60%", Some(0.6)),
+        ("40%", Some(0.4)),
+    ] {
+        let budget = frac.map(|f: f64| f * full);
+        let (r, wall) = run_at(budget);
+        t.row(&[
+            label.to_string(),
+            budget
+                .map(|b| format!("{b:.0}"))
+                .unwrap_or_else(|| "—".into()),
+            r.completed.to_string(),
+            format!("{:.0}", r.makespan_s),
+            format!("{:.1}", r.energy_j / 1e3),
+            format!("{:.0}", r.mean_w),
+            format!("{wall:.3}"),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // control-tick overhead: the budgeted replay of the same trace, timed
+    let r = benchkit::bench("powercap/replay(60 jobs, 60% budget)", 1, 5, || {
+        let (r, _) = run_at(Some(0.6 * full));
+        std::hint::black_box(r.energy_j);
+    });
+    println!(
+        "simulated-hour speedup vs wall clock: {:.0}x\n",
+        3600.0 / (r.summary.p50 / 1e9)
+    );
+}

@@ -44,7 +44,10 @@ use crate::runtime::{ExecReport, PjRtRuntime};
 use crate::services::auth::UserDb;
 use crate::services::{ServiceEvent, ServiceRack};
 use crate::sim::{Kernel, SimTime};
-use crate::slurm::{JobId, JobSpec, JobState, SchedEvent, Slurm, SlurmApi};
+use crate::slurm::{
+    JobId, JobSpec, JobState, PlacementPolicy, PolicyEvent, PowerGovernor, SchedEvent, Slurm,
+    SlurmApi,
+};
 use crate::util::Xoshiro256;
 
 /// The cluster's kernel routing enum: every subsystem's events on the
@@ -54,6 +57,7 @@ pub enum ClusterEvent {
     Sched(SchedEvent),
     Service(ServiceEvent),
     Net(NetEvent),
+    Policy(PolicyEvent),
 }
 
 impl From<SchedEvent> for ClusterEvent {
@@ -70,6 +74,27 @@ impl From<NetEvent> for ClusterEvent {
     fn from(e: NetEvent) -> Self {
         ClusterEvent::Net(e)
     }
+}
+impl From<PolicyEvent> for ClusterEvent {
+    fn from(e: PolicyEvent) -> Self {
+        ClusterEvent::Policy(e)
+    }
+}
+
+/// Governor telemetry + actuation snapshot (the `power_report` op).
+#[derive(Clone, Debug)]
+pub struct PowerReport {
+    pub budget_w: Option<f64>,
+    /// measured rolling-window cluster draw, watts
+    pub rolling_w: f64,
+    pub window_s: f64,
+    /// instantaneous true cluster draw, watts
+    pub cluster_w: f64,
+    /// throttle factor at the last control tick (1.0 = uncapped)
+    pub throttle: f64,
+    pub capped_nodes: u32,
+    pub governor_ticks: u64,
+    pub idle_shutdowns: u64,
 }
 
 /// Cluster-level summary for reports.
@@ -115,6 +140,9 @@ pub struct ClusterApi {
     slurm: SlurmApi,
     energy: EnergyApi,
     sampler: StreamingSampler,
+    /// §3.6 power-cap governor; its periodic tick rides the kernel as
+    /// [`PolicyEvent::GovernorTick`] while a budget is set
+    governor: PowerGovernor,
     services: ServiceRack,
     topo: Topology,
     net: FlowNet,
@@ -186,6 +214,7 @@ impl ClusterApi {
             slurm: SlurmApi::new(ctl, MUNGE_KEY),
             energy,
             sampler,
+            governor: PowerGovernor::new(),
             services,
             topo,
             net,
@@ -328,6 +357,25 @@ impl ClusterApi {
             ClusterEvent::Net(_) => {
                 self.net.on_event(&mut self.kernel, now);
             }
+            ClusterEvent::Policy(PolicyEvent::GovernorTick) => self.on_governor_tick(now),
+        }
+    }
+
+    /// One §3.6 governor control step: fold the scheduler's pending
+    /// power transitions into the rolling-telemetry window (no sample
+    /// materialization — this works identically in unsampled runs),
+    /// read the measured rolling watts, and let the governor plan and
+    /// actuate. Re-arms itself until the budget is cleared.
+    fn on_governor_tick(&mut self, now: SimTime) {
+        self.sampler.fold_rolling(self.slurm.ctl.transitions(), now);
+        let rolling = self.sampler.rolling_mean_w(self.governor.window, now);
+        let rearm = self
+            .governor
+            .tick(&mut self.slurm.ctl, &mut self.kernel, rolling, now);
+        if rearm {
+            let period = self.governor.period;
+            self.kernel
+                .schedule_at(now + period, PolicyEvent::GovernorTick);
         }
     }
 
@@ -338,6 +386,7 @@ impl ClusterApi {
         let transitions = self.slurm.ctl.transitions();
         self.sampler.pump_cluster(transitions, to, &mut self.energy);
         self.slurm.ctl.clear_transitions();
+        self.sampler.transitions_cleared();
     }
 
     /// Apply queued §4.3 manual power actions to the node FSMs (the
@@ -555,11 +604,14 @@ impl ClusterApi {
                 return Ok((id, state));
             }
             let before = self.now();
-            if deadline.is_some_and(|d| before >= d) {
-                // deadline hit: don't leave an unreferencable orphan
-                // queued under the user's name (a job already Running
-                // holds real resources and finishes within the clamped
-                // limit)
+            if deadline.is_some_and(|d| before >= d) && state == JobState::Pending {
+                // deadline hit while still queued: don't leave an
+                // unreferencable orphan under the user's name. A job
+                // that already started holds real resources and — with
+                // the §3.6 rate floored at MIN_RATE — terminates in
+                // bounded wall time even under a severe admin power
+                // cap, so the horizon bounds the queue wait only and
+                // the loop keeps blocking for started jobs.
                 let _ = self.slurm.ctl.cancel(id, before);
                 return Err(DalekError::Deadline(id));
             }
@@ -737,6 +789,102 @@ impl ClusterApi {
             (Some(n), None) => Ok(self.energy.board(n)?.total_energy_j()),
             (Some(n), Some(w)) => windowed(self.energy.board(n)?, w),
         }
+    }
+
+    // -----------------------------------------------------------------
+    // energy-aware scheduling (§3.6 governor + §6.2 policies)
+    // -----------------------------------------------------------------
+
+    /// Set (or clear with `None`) the cluster power budget —
+    /// administrators only. A fresh budget arms the governor's periodic
+    /// tick on the kernel; the governor then holds the measured rolling
+    /// cluster draw at or under the budget by capping the busy nodes
+    /// (which genuinely slows their jobs), and disarms itself once the
+    /// budget is cleared.
+    pub fn set_power_budget(
+        &mut self,
+        sid: SessionId,
+        watts: Option<f64>,
+    ) -> Result<PowerReport, DalekError> {
+        let now = self.now();
+        self.admin_session(sid, now)?;
+        if let Some(w) = watts {
+            if !w.is_finite() || w <= 0.0 {
+                return Err(DalekError::BadRequest(format!(
+                    "power budget must be a positive number of watts, got {w}"
+                )));
+            }
+        }
+        if self.governor.set_budget(watts) {
+            self.kernel.schedule_at(now, PolicyEvent::GovernorTick);
+        }
+        Ok(self.power_report_now())
+    }
+
+    /// Select a partition's §6.2 placement policy — administrators only.
+    pub fn set_policy(
+        &mut self,
+        sid: SessionId,
+        partition: &str,
+        policy: PlacementPolicy,
+    ) -> Result<(), DalekError> {
+        let now = self.now();
+        self.admin_session(sid, now)?;
+        Ok(self.slurm.ctl.set_placement(partition, policy)?)
+    }
+
+    /// Provision a §6.2 time/energy quota account — administrators
+    /// only. Submissions by `user` are then admission-checked, and
+    /// completions settle the measured joules against the budget.
+    pub fn set_quota(
+        &mut self,
+        sid: SessionId,
+        user: &str,
+        time_budget_s: f64,
+        energy_budget_j: f64,
+    ) -> Result<(), DalekError> {
+        let now = self.now();
+        self.admin_session(sid, now)?;
+        self.users.user(user)?; // must exist in the directory
+        self.slurm
+            .ctl
+            .quota
+            .set_account(user, time_budget_s, energy_budget_j);
+        Ok(())
+    }
+
+    /// Governor telemetry/actuation snapshot — any authenticated user.
+    pub fn power_report(&mut self, sid: SessionId) -> Result<PowerReport, DalekError> {
+        let now = self.now();
+        self.session(sid, now)?;
+        Ok(self.power_report_now())
+    }
+
+    fn power_report_now(&mut self) -> PowerReport {
+        let now = self.now();
+        self.sampler.fold_rolling(self.slurm.ctl.transitions(), now);
+        PowerReport {
+            budget_w: self.governor.budget_w(),
+            rolling_w: self.sampler.rolling_mean_w(self.governor.window, now),
+            window_s: self.governor.window.as_secs_f64(),
+            cluster_w: self.slurm.ctl.cluster_watts(),
+            throttle: self.governor.stats.last_throttle,
+            capped_nodes: self.slurm.ctl.capped_nodes() as u32,
+            governor_ticks: self.governor.stats.ticks,
+            idle_shutdowns: self.governor.stats.idle_shutdowns,
+        }
+    }
+
+    /// Read-only governor access (tuning knobs live behind
+    /// [`ClusterApi::governor_mut`]).
+    pub fn governor(&self) -> &PowerGovernor {
+        &self.governor
+    }
+
+    /// Tune the governor (period, window, tolerance, idle power-down
+    /// threshold) — operator-level configuration, not a wire op.
+    pub fn governor_mut(&mut self) -> &mut PowerGovernor {
+        &mut self.governor
     }
 
     // -----------------------------------------------------------------
@@ -980,6 +1128,24 @@ impl ClusterApi {
                     output_sum: r.output_sum,
                 })
             }
+            Request::SetPowerBudget { watts } => {
+                let r = self.set_power_budget(sid, *watts)?;
+                Ok(power_report_response(r))
+            }
+            Request::SetPolicy { partition, policy } => {
+                let p = PlacementPolicy::from_wire(policy).ok_or_else(|| {
+                    DalekError::BadRequest(format!("unknown policy `{policy}`"))
+                })?;
+                self.set_policy(sid, partition, p)?;
+                Ok(Response::PolicySet {
+                    partition: partition.clone(),
+                    policy: policy.clone(),
+                })
+            }
+            Request::PowerReport => {
+                let r = self.power_report(sid)?;
+                Ok(power_report_response(r))
+            }
         }
     }
 
@@ -996,6 +1162,19 @@ impl ClusterApi {
             Err(e) => Response::from_error(&e),
         };
         resp.to_json().to_string()
+    }
+}
+
+fn power_report_response(r: PowerReport) -> Response {
+    Response::PowerReport {
+        budget_w: r.budget_w,
+        rolling_w: r.rolling_w,
+        window_s: r.window_s,
+        cluster_w: r.cluster_w,
+        throttle: r.throttle,
+        capped_nodes: r.capped_nodes,
+        governor_ticks: r.governor_ticks,
+        idle_shutdowns: r.idle_shutdowns,
     }
 }
 
@@ -1412,6 +1591,128 @@ mod tests {
         assert!(!c.slurm.gate.try_ssh(&nodes[0], "powerstate", now));
         // other partition's node: no grant
         assert!(!c.slurm.gate.try_ssh("az4-n4090-0", "alice", now));
+    }
+
+    #[test]
+    fn power_budget_closes_the_loop_end_to_end() {
+        let mut c = cluster();
+        let sid = c.login("root").unwrap();
+        // non-admins may read the report but not set the budget
+        c.add_user("alice");
+        let alice = c.login("alice").unwrap();
+        assert!(matches!(
+            c.set_power_budget(alice, Some(500.0)),
+            Err(DalekError::AdminOnly)
+        ));
+        assert!(matches!(
+            c.set_power_budget(sid, Some(-1.0)),
+            Err(DalekError::BadRequest(_))
+        ));
+        let r = c.set_power_budget(sid, Some(180.0)).unwrap();
+        assert_eq!(r.budget_w, Some(180.0));
+        // saturate the az5 partition; the governor must pull the draw
+        // down to the budget and stretch the job
+        c.submit(JobSpec::cpu("root", "az5-a890m", 4, 600), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_mins(5), false);
+        let r = c.power_report(sid).unwrap();
+        assert!(r.governor_ticks > 0);
+        assert!(r.capped_nodes >= 4, "capped {}", r.capped_nodes);
+        assert!(
+            (r.cluster_w - 180.0).abs() < 1e-6,
+            "draw {} vs budget 180",
+            r.cluster_w
+        );
+        // rolling telemetry has settled onto the budget too
+        assert!(r.rolling_w <= 180.0 * 1.05, "rolling {}", r.rolling_w);
+        // capped work runs longer than nominal
+        c.run_until(SimTime::from_mins(30), false);
+        let job = c.slurm().jobs().next().unwrap();
+        assert_eq!(job.state, JobState::Completed);
+        assert!(job.run_time().unwrap() > SimTime::from_secs(620));
+        // clearing the budget releases the caps at the next tick
+        c.set_power_budget(sid, None).unwrap();
+        c.run_until(c.now() + SimTime::from_secs(5), false);
+        let r = c.power_report(sid).unwrap();
+        assert_eq!(r.capped_nodes, 0);
+        assert_eq!(r.budget_w, None);
+    }
+
+    #[test]
+    fn power_budget_via_wire_protocol() {
+        let mut c = cluster();
+        let sid = c.login("root").unwrap();
+        let r = c
+            .handle(
+                Some(sid),
+                &Request::SetPowerBudget {
+                    watts: Some(1200.0),
+                },
+            )
+            .unwrap();
+        assert!(matches!(
+            r,
+            Response::PowerReport {
+                budget_w: Some(b),
+                ..
+            } if (b - 1200.0).abs() < 1e-12
+        ));
+        let r = c
+            .handle(
+                Some(sid),
+                &Request::SetPolicy {
+                    partition: "az5-a890m".into(),
+                    policy: "energy_efficient".into(),
+                },
+            )
+            .unwrap();
+        assert!(matches!(r, Response::PolicySet { .. }));
+        // unknown partition surfaces as a slurm error
+        assert!(c
+            .handle(
+                Some(sid),
+                &Request::SetPolicy {
+                    partition: "nope".into(),
+                    policy: "first_fit".into(),
+                },
+            )
+            .is_err());
+        let r = c.handle(Some(sid), &Request::PowerReport).unwrap();
+        assert!(matches!(r, Response::PowerReport { .. }));
+    }
+
+    #[test]
+    fn quota_settlement_through_the_cluster_api() {
+        let mut c = cluster();
+        c.add_user("alice");
+        let root = c.login("root").unwrap();
+        c.set_quota(root, "alice", 1e7, 1e9).unwrap();
+        assert!(c.set_quota(root, "ghost", 1.0, 1.0).is_err());
+        let alice = c.login("alice").unwrap();
+        let req = JobRequest {
+            partition: "az5-a890m".into(),
+            nodes: 2,
+            duration: SimTime::from_secs(120),
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: None,
+        };
+        let id = c.submit_request(alice, &req, SimTime::ZERO).unwrap();
+        c.run_until(SimTime::from_mins(10), false);
+        let job = c.slurm().job(id).unwrap();
+        assert_eq!(job.state, JobState::Completed);
+        assert!(job.energy_j > 0.0);
+        let acct = c.slurm().quota.account("alice").unwrap();
+        assert!((acct.used_energy_j - job.energy_j).abs() < 1e-9);
+        // an exhausted budget rejects the next submission
+        c.set_quota(root, "alice", 1.0, 1.0).unwrap();
+        assert!(matches!(
+            c.submit_request(alice, &req, c.now()),
+            Err(DalekError::Slurm(
+                crate::slurm::scheduler::SlurmError::QuotaDenied { .. }
+            ))
+        ));
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub mod error;
 pub mod protocol;
 pub mod session;
 
-pub use cluster_api::{ClusterApi, ClusterEvent, ClusterReport};
+pub use cluster_api::{ClusterApi, ClusterEvent, ClusterReport, PowerReport};
 pub use error::DalekError;
 pub use protocol::{JobRequest, JobView, Request, Response};
 pub use session::{Session, SessionId, SessionManager};

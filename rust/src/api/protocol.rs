@@ -74,6 +74,14 @@ pub enum Request {
     ClusterReport,
     Advance { to: SimTime, sample: bool },
     ExecPayload { payload: String, iters: u32, seed: u64 },
+    /// Set (or clear, when absent) the §3.6 cluster power budget that
+    /// arms the power-cap governor. Admin-only; replies `PowerReport`.
+    SetPowerBudget { watts: Option<f64> },
+    /// Select a partition's §6.2 placement policy
+    /// (`first_fit` | `energy_efficient`). Admin-only.
+    SetPolicy { partition: String, policy: String },
+    /// Read the governor's telemetry/actuation state.
+    PowerReport,
 }
 
 /// A job snapshot on the wire.
@@ -127,6 +135,19 @@ pub enum Response {
         flops_per_sec: f64,
         output_sum: f64,
     },
+    /// Governor state: budget, measured rolling watts over the
+    /// telemetry window, instantaneous truth, and actuation counters.
+    PowerReport {
+        budget_w: Option<f64>,
+        rolling_w: f64,
+        window_s: f64,
+        cluster_w: f64,
+        throttle: f64,
+        capped_nodes: u32,
+        governor_ticks: u64,
+        idle_shutdowns: u64,
+    },
+    PolicySet { partition: String, policy: String },
     Error { message: String },
 }
 
@@ -327,6 +348,36 @@ impl Request {
                 // harmless, so it is not range-checked (see module doc)
                 seed: j.get("seed").and_then(Json::as_u64).unwrap_or(42),
             },
+            "set_power_budget" => {
+                // absent or null clears the budget; anything else must
+                // be a positive number (a mistyped string must not
+                // silently disarm the governor)
+                let watts = match j.get("watts") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => match v.as_f64() {
+                        Some(w) if w.is_finite() && w > 0.0 => Some(w),
+                        _ => {
+                            return Err(bad(format!(
+                                "field `watts` must be a positive number of watts, got {v}"
+                            )))
+                        }
+                    },
+                };
+                Request::SetPowerBudget { watts }
+            }
+            "set_policy" => {
+                let policy = need_str(j, "policy")?;
+                if crate::slurm::PlacementPolicy::from_wire(&policy).is_none() {
+                    return Err(bad(format!(
+                        "unknown policy `{policy}` (first_fit | energy_efficient)"
+                    )));
+                }
+                Request::SetPolicy {
+                    partition: need_str(j, "partition")?,
+                    policy,
+                }
+            }
+            "power_report" => Request::PowerReport,
             other => return Err(bad(format!("unknown op `{other}`"))),
         };
         Ok((session, req))
@@ -440,6 +491,18 @@ impl Request {
                 push("seed", Json::from(*seed));
                 "exec_payload"
             }
+            Request::SetPowerBudget { watts } => {
+                if let Some(w) = watts {
+                    push("watts", Json::from(*w));
+                }
+                "set_power_budget"
+            }
+            Request::SetPolicy { partition, policy } => {
+                push("partition", Json::from(partition.as_str()));
+                push("policy", Json::from(policy.as_str()));
+                "set_policy"
+            }
+            Request::PowerReport => "power_report",
         };
         fields.push(("op".to_string(), Json::from(op)));
         if let Some(s) = session {
@@ -576,6 +639,33 @@ impl Response {
                 push("output_sum", Json::from(*output_sum));
                 "executed"
             }
+            Response::PowerReport {
+                budget_w,
+                rolling_w,
+                window_s,
+                cluster_w,
+                throttle,
+                capped_nodes,
+                governor_ticks,
+                idle_shutdowns,
+            } => {
+                if let Some(b) = budget_w {
+                    push("budget_w", Json::from(*b));
+                }
+                push("rolling_w", Json::from(*rolling_w));
+                push("window_s", Json::from(*window_s));
+                push("cluster_w", Json::from(*cluster_w));
+                push("throttle", Json::from(*throttle));
+                push("capped_nodes", Json::from(*capped_nodes));
+                push("governor_ticks", Json::from(*governor_ticks));
+                push("idle_shutdowns", Json::from(*idle_shutdowns));
+                "power_report"
+            }
+            Response::PolicySet { partition, policy } => {
+                push("partition", Json::from(partition.as_str()));
+                push("policy", Json::from(policy.as_str()));
+                "policy_set"
+            }
             Response::Error { message } => {
                 let j = Json::object([
                     ("ok", Json::from(false)),
@@ -691,6 +781,15 @@ mod tests {
                 iters: 3,
                 seed: 42,
             },
+            Request::SetPowerBudget {
+                watts: Some(1234.5),
+            },
+            Request::SetPowerBudget { watts: None },
+            Request::SetPolicy {
+                partition: "az5-a890m".into(),
+                policy: "energy_efficient".into(),
+            },
+            Request::PowerReport,
         ];
         for req in reqs {
             let wire = req.to_json(Some(SessionId(1))).to_string();
@@ -770,6 +869,63 @@ mod tests {
             Request::parse(r#"{"op": "submit_job", "partition": "p", "nodes": 1}"#),
             Err(DalekError::BadRequest(_))
         ));
+    }
+
+    #[test]
+    fn power_budget_and_policy_validation() {
+        // a non-positive or non-finite budget is rejected
+        assert!(matches!(
+            Request::parse(r#"{"op": "set_power_budget", "watts": -5}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(r#"{"op": "set_power_budget", "watts": 0}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        // null (like absence) clears the budget
+        let (_, req) =
+            Request::parse(r#"{"op": "set_power_budget", "watts": null, "session": 1}"#).unwrap();
+        assert_eq!(req, Request::SetPowerBudget { watts: None });
+        // a mistyped watts must error, not silently clear the budget
+        assert!(matches!(
+            Request::parse(r#"{"op": "set_power_budget", "watts": "970"}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        // unknown placement policies are rejected at the wire
+        assert!(matches!(
+            Request::parse(r#"{"op": "set_policy", "partition": "p", "policy": "lottery"}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn power_report_encodes_optional_budget() {
+        let r = Response::PowerReport {
+            budget_w: Some(970.0),
+            rolling_w: 955.5,
+            window_s: 10.0,
+            cluster_w: 960.0,
+            throttle: 0.31,
+            capped_nodes: 16,
+            governor_ticks: 120,
+            idle_shutdowns: 2,
+        }
+        .to_json();
+        assert_eq!(r.get("budget_w").unwrap().as_f64(), Some(970.0));
+        assert_eq!(r.get("capped_nodes").unwrap().as_u64(), Some(16));
+        assert_eq!(r.get("type").unwrap().as_str(), Some("power_report"));
+        let r = Response::PowerReport {
+            budget_w: None,
+            rolling_w: 0.0,
+            window_s: 10.0,
+            cluster_w: 112.0,
+            throttle: 1.0,
+            capped_nodes: 0,
+            governor_ticks: 0,
+            idle_shutdowns: 0,
+        }
+        .to_json();
+        assert!(r.get("budget_w").is_none());
     }
 
     #[test]

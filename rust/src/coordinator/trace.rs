@@ -32,6 +32,9 @@ pub struct TraceGen {
     pub payloads: Vec<String>,
     /// fraction of jobs that are payload-backed (when payloads exist)
     pub payload_fraction: f64,
+    /// partitions whose jobs also load the discrete GPU (the §3.6
+    /// power-cap studies need GPU-heavy draw on the dGPU partitions)
+    pub gpu_partitions: Vec<String>,
 }
 
 impl TraceGen {
@@ -47,6 +50,27 @@ impl TraceGen {
             ],
             payloads: vec!["gemm256".into(), "cnn_small".into(), "mlp_infer".into()],
             payload_fraction: 0.3,
+            gpu_partitions: Vec::new(),
+        }
+    }
+
+    /// The §3.6 power-cap study mix: dense synthetic arrivals that keep
+    /// every partition busy, with GPU-heavy activity on the dGPU
+    /// partitions — the workload `benches/powercap.rs` and the scenario
+    /// suite squeeze under shrinking budgets.
+    pub fn powercap_mix(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed),
+            jobs_per_hour: 240.0,
+            partitions: vec![
+                ("az4-n4090".into(), 4),
+                ("az4-a7900".into(), 4),
+                ("iml-ia770".into(), 4),
+                ("az5-a890m".into(), 4),
+            ],
+            payloads: Vec::new(),
+            payload_fraction: 0.0,
+            gpu_partitions: vec!["az4-n4090".into(), "az4-a7900".into()],
         }
     }
 
@@ -66,6 +90,10 @@ impl TraceGen {
                 let iters = 10_000 + self.rng.uniform_u64(0, 90_000);
                 (p, iters)
             });
+            let mut activity = Activity::cpu_only(self.rng.uniform_f64(0.6, 1.0));
+            if self.gpu_partitions.contains(&part) {
+                activity.dgpu = self.rng.uniform_f64(0.7, 1.0);
+            }
             let spec = JobSpec {
                 user: format!("user{}", i % 7),
                 partition: part,
@@ -73,7 +101,7 @@ impl TraceGen {
                 duration: SimTime::from_secs_f64(dur_s),
                 time_limit: SimTime::from_secs_f64(dur_s * 4.0 + 120.0),
                 payload: None,
-                activity: Activity::cpu_only(self.rng.uniform_f64(0.6, 1.0)),
+                activity,
             };
             out.push(TraceEvent {
                 at: SimTime::from_secs_f64(t),
@@ -193,6 +221,28 @@ mod tests {
         for ev in &t {
             assert!((1..=4).contains(&ev.spec.nodes));
         }
+    }
+
+    #[test]
+    fn powercap_mix_is_dense_gpu_heavy_and_deterministic() {
+        let a = TraceGen::powercap_mix(9).generate(60);
+        let b = TraceGen::powercap_mix(9).generate(60);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.spec.activity, y.spec.activity);
+        }
+        // dGPU partitions carry GPU load, the others stay CPU-only
+        for ev in &a {
+            let gpu_part = ev.spec.partition.starts_with("az4");
+            assert_eq!(ev.spec.payload, None);
+            if gpu_part {
+                assert!(ev.spec.activity.dgpu >= 0.7, "{:?}", ev.spec);
+            } else {
+                assert_eq!(ev.spec.activity.dgpu, 0.0);
+            }
+        }
+        // dense arrivals: 60 jobs inside ~half an hour on average
+        assert!(a.last().unwrap().at < SimTime::from_hours(1));
     }
 
     #[test]

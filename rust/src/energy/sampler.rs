@@ -29,12 +29,18 @@
 //! O(simulated seconds × probes × 4000), and is gone along with
 //! `node_history` cloning and `gc_history` bookkeeping.
 
+use std::collections::VecDeque;
+
 use super::board::MainBoard;
 use super::probe::{ProbeConfig, Sample};
 use super::store::SampleStore;
 use crate::power::PowerTransition;
 use crate::sim::SimTime;
 use crate::util::Xoshiro256;
+
+/// How much piecewise power history the rolling-telemetry buffers
+/// retain. Governor windows must stay at or below this.
+const ROLLING_HORIZON: SimTime = SimTime(120 * 1_000_000_000);
 
 /// ±√3 σ uniform noise keeps the variance exact (see `probe.rs`).
 const SQRT12: f64 = 3.464_101_615_137_754_6;
@@ -227,6 +233,15 @@ pub struct StreamingSampler {
     /// per-node change buffers, reused across pumps (no steady-state
     /// allocation)
     scratch: Vec<Vec<(SimTime, f64)>>,
+    /// per-node rolling piecewise power history — the telemetry window
+    /// the §3.6 governor reads; one entry per transition, pruned past
+    /// [`ROLLING_HORIZON`], first entry kept as the value at the window
+    /// start
+    rolling: Vec<VecDeque<(SimTime, f64)>>,
+    /// prefix of the scheduler's (not-yet-cleared) transition buffer
+    /// already folded into `rolling` — lets the governor observe the
+    /// buffer repeatedly between drains without double counting
+    rolling_seen: usize,
 }
 
 impl Default for StreamingSampler {
@@ -240,6 +255,8 @@ impl StreamingSampler {
         Self {
             nodes: Vec::new(),
             scratch: Vec::new(),
+            rolling: Vec::new(),
+            rolling_seen: 0,
         }
     }
 
@@ -248,6 +265,9 @@ impl StreamingSampler {
     pub fn add_node(&mut self, name: impl Into<String>, initial_watts: f64) -> &mut NodeStream {
         self.nodes.push((name.into(), NodeStream::new(initial_watts)));
         self.scratch.push(Vec::new());
+        let mut dq = VecDeque::new();
+        dq.push_back((SimTime::ZERO, initial_watts));
+        self.rolling.push(dq);
         &mut self.nodes.last_mut().expect("just pushed").1
     }
 
@@ -255,15 +275,79 @@ impl StreamingSampler {
         self.nodes.len()
     }
 
+    /// Fold the unseen suffix of the scheduler's transition buffer into
+    /// the rolling-telemetry history (idempotent over repeated calls
+    /// with a growing buffer). Does *not* emit samples — the governor
+    /// calls this every control tick, cheaply, whether or not the run
+    /// is sampling.
+    pub fn fold_rolling(&mut self, transitions: &[PowerTransition], to: SimTime) {
+        let start = self.rolling_seen.min(transitions.len());
+        for tr in &transitions[start..] {
+            if tr.node < self.rolling.len() {
+                self.rolling[tr.node].push_back((tr.at, tr.watts));
+            }
+        }
+        self.rolling_seen = transitions.len();
+        let cutoff = SimTime(to.as_ns().saturating_sub(ROLLING_HORIZON.as_ns()));
+        for dq in &mut self.rolling {
+            while dq.len() >= 2 && dq[1].0 <= cutoff {
+                dq.pop_front();
+            }
+        }
+    }
+
+    /// The scheduler's transition buffer was cleared (after a pump):
+    /// the next fold starts from a fresh buffer.
+    pub(crate) fn transitions_cleared(&mut self) {
+        self.rolling_seen = 0;
+    }
+
+    /// Mean cluster draw over the trailing `window` ending at `now`,
+    /// from the folded piecewise history — what an ideal probe's
+    /// windowed average converges to, and the number the §3.6 governor
+    /// budgets against. Windows longer than the 120 s retention horizon
+    /// clamp to it (history past the horizon is pruned, so a longer
+    /// window could only report a fabricated mean).
+    pub fn rolling_mean_w(&self, window: SimTime, now: SimTime) -> f64 {
+        let window = window.min(ROLLING_HORIZON);
+        let from = SimTime(now.as_ns().saturating_sub(window.as_ns()));
+        let span = now.since(from).as_secs_f64();
+        let mut total = 0.0;
+        for dq in &self.rolling {
+            let Some(&(_, last_w)) = dq.back() else { continue };
+            if span <= 0.0 {
+                total += last_w;
+                continue;
+            }
+            let mut acc = 0.0;
+            for (k, &(at, w)) in dq.iter().enumerate() {
+                let seg_start = at.max(from);
+                let seg_end = dq
+                    .get(k + 1)
+                    .map(|&(t, _)| t)
+                    .unwrap_or(now)
+                    .min(now);
+                if seg_end > seg_start {
+                    acc += w * seg_end.since(seg_start).as_secs_f64();
+                }
+            }
+            total += acc / span;
+        }
+        total
+    }
+
     /// Apply a drained transition batch and advance every stream to
     /// `to`, writing samples through `board_of` (node name → board).
-    /// Returns the number of samples emitted.
+    /// Returns the number of samples emitted. The caller clears the
+    /// scheduler's transition buffer right after (and tells us via
+    /// [`StreamingSampler::transitions_cleared`]).
     pub(crate) fn pump_cluster(
         &mut self,
         transitions: &[PowerTransition],
         to: SimTime,
         energy: &mut super::api::EnergyApi,
     ) -> usize {
+        self.fold_rolling(transitions, to);
         for v in &mut self.scratch {
             v.clear();
         }
@@ -435,6 +519,58 @@ mod tests {
         for s in tagged {
             assert!(s.t > SimTime::from_ms(99));
         }
+    }
+
+    #[test]
+    fn rolling_mean_integrates_piecewise_and_skips_seen_prefix() {
+        let mut s = StreamingSampler::new();
+        s.add_node("a", 10.0);
+        let t1 = PowerTransition {
+            node: 0,
+            at: SimTime::from_secs(95),
+            watts: 110.0,
+        };
+        // fold the same growing buffer twice: the seen prefix must not
+        // double-count
+        s.fold_rolling(&[t1], SimTime::from_secs(96));
+        s.fold_rolling(&[t1], SimTime::from_secs(100));
+        // window [90, 100]: 5 s at 10 W + 5 s at 110 W = 60 W mean
+        let m = s.rolling_mean_w(SimTime::from_secs(10), SimTime::from_secs(100));
+        assert!((m - 60.0).abs() < 1e-9, "{m}");
+        // whole-history window clamps at t = 0
+        let m = s.rolling_mean_w(SimTime::from_secs(200), SimTime::from_secs(100));
+        assert!((m - (95.0 * 10.0 + 5.0 * 110.0) / 100.0).abs() < 1e-9, "{m}");
+        // a cleared buffer restarts the prefix
+        s.transitions_cleared();
+        let t2 = PowerTransition {
+            node: 0,
+            at: SimTime::from_secs(100),
+            watts: 10.0,
+        };
+        s.fold_rolling(&[t2], SimTime::from_secs(110));
+        let m = s.rolling_mean_w(SimTime::from_secs(10), SimTime::from_secs(110));
+        assert!((m - 10.0).abs() < 1e-9, "{m}");
+    }
+
+    #[test]
+    fn rolling_history_prunes_but_keeps_window_start_value() {
+        let mut s = StreamingSampler::new();
+        s.add_node("a", 5.0);
+        // many transitions far in the past, ending at 42 W
+        let trs: Vec<PowerTransition> = (1..50)
+            .map(|k| PowerTransition {
+                node: 0,
+                at: SimTime::from_secs(k),
+                watts: if k == 49 { 42.0 } else { k as f64 },
+            })
+            .collect();
+        s.fold_rolling(&trs, SimTime::from_secs(50));
+        s.transitions_cleared();
+        // hours later: everything before the horizon is pruned, but the
+        // window still sees the surviving 42 W level
+        s.fold_rolling(&[], SimTime::from_hours(2));
+        let m = s.rolling_mean_w(SimTime::from_secs(10), SimTime::from_hours(2));
+        assert!((m - 42.0).abs() < 1e-9, "{m}");
     }
 
     #[test]

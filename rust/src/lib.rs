@@ -25,7 +25,13 @@
 //! * [`slurm`] — resource manager: jobs, partitions, node FSM
 //!   (§3.4–3.5); clockless — its timers are `slurm::SchedEvent`s on
 //!   the kernel, and every node power change is published as a
-//!   [`power::PowerTransition`]
+//!   [`power::PowerTransition`]. [`slurm::policy`] closes the
+//!   telemetry→actuation loop (§3.6/§6.2): the power-cap governor
+//!   reads the sampler's rolling watts and actuates RAPL/DVFS (capped
+//!   jobs genuinely run longer), placement can rank nodes by estimated
+//!   joules-to-completion, idle nodes power down through the §4.3
+//!   admin path, and [`slurm::quota`] settles energy budgets against
+//!   the measured joules at job completion
 //! * [`power`] — node power models, WoL control, DVFS, RAPL (§3.4, §3.6)
 //! * [`energy`] — the INA228/I2C energy measurement platform (§4);
 //!   [`energy::StreamingSampler`] consumes the scheduler's transition

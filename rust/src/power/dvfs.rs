@@ -26,8 +26,14 @@ pub struct DvfsState {
 }
 
 impl DvfsState {
+    /// Build a DVFS range. Degenerate inputs clamp instead of panicking:
+    /// catalog-derived floors can exceed a small part's boost clock (a
+    /// `min_ghz` above `max_ghz` collapses the range to `max_ghz`), and
+    /// non-positive clocks clamp to a 1 MHz floor — the §3.6 knobs must
+    /// stay actuatable by an automated governor without asserting.
     pub fn new(min_ghz: f64, max_ghz: f64) -> Self {
-        assert!(min_ghz > 0.0 && max_ghz >= min_ghz);
+        let max_ghz = max_ghz.max(1e-3);
+        let min_ghz = min_ghz.clamp(1e-3, max_ghz);
         Self {
             min_ghz,
             max_ghz,
@@ -124,8 +130,25 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn invalid_range_panics() {
-        DvfsState::new(3.0, 2.0);
+    fn inverted_range_clamps_not_asserts() {
+        // a floor above the boost clock collapses the range to the max
+        let d = DvfsState::new(3.0, 2.0);
+        assert_eq!(d.min_ghz, 2.0);
+        assert_eq!(d.max_ghz, 2.0);
+        assert_eq!(d.effective_ghz(1.0), 2.0);
+        // non-positive clocks clamp to the 1 MHz floor
+        let d = DvfsState::new(0.0, 0.0);
+        assert!(d.min_ghz > 0.0 && d.max_ghz >= d.min_ghz);
+    }
+
+    #[test]
+    fn userspace_at_the_lower_clamp_keeps_perf_positive() {
+        // edge case at the clamp itself: a Userspace request far below
+        // min_ghz pins the clock at min_ghz, never below
+        let mut d = dv(); // 1.0..5.0 GHz
+        d.governor = DvfsGovernor::Userspace(1); // 1 MHz request
+        assert_eq!(d.effective_ghz(1.0), 1.0);
+        assert!(d.perf_factor(1.0) > 0.0);
+        assert!(d.power_factor(1.0) > 0.0);
     }
 }

@@ -76,6 +76,11 @@ impl NodePowerFsm {
         self.state
     }
 
+    /// Configured cold-boot duration (placement cost estimation input).
+    pub fn boot_time(&self) -> SimTime {
+        self.boot_time
+    }
+
     fn state_name(&self) -> &'static str {
         match self.state {
             PowerState::Suspended => "Suspended",

@@ -130,10 +130,38 @@ impl PowerModel {
         self.idle_w + cpu + dgpu + igpu
     }
 
+    /// Uncapped CPU-package demand for `act`, watts: what the package
+    /// would draw with DVFS applied but RAPL ignored. The §3.6 governor
+    /// plans caps against this.
+    pub fn cpu_demand_w(&self, act: Activity) -> f64 {
+        let act = act.clamped();
+        self.cpu_dyn_w * act.cpu * self.dvfs.power_factor(act.cpu)
+    }
+
+    /// Uncapped dGPU demand for `act`, watts (0 on iGPU-only nodes).
+    pub fn dgpu_demand_w(&self, act: Activity) -> f64 {
+        let act = act.clamped();
+        self.dgpu_dyn_w * act.dgpu
+    }
+
+    /// iGPU draw for `act`, watts — not behind any cappable domain.
+    pub fn igpu_w(&self, act: Activity) -> f64 {
+        let act = act.clamped();
+        self.igpu_dyn_w * act.igpu
+    }
+
     /// Throughput multiplier for CPU-bound work under current DVFS+RAPL.
     pub fn cpu_perf_factor(&self, act: Activity) -> f64 {
         let demand = self.cpu_dyn_w * act.cpu * self.dvfs.power_factor(act.cpu);
         self.dvfs.perf_factor(act.cpu) * self.cpu_rapl.perf_factor(demand)
+    }
+
+    /// Combined throughput multiplier for a mixed workload: the slowest
+    /// engaged engine gates the job (CPU under DVFS+RAPL, dGPU under
+    /// its cap). Both factors are exactly 1.0-neutral when idle on
+    /// their axis, so pure-CPU work is unaffected by a GPU cap.
+    pub fn perf_factor(&self, act: Activity) -> f64 {
+        self.cpu_perf_factor(act).min(self.gpu_perf_factor(act))
     }
 
     /// Throughput multiplier for dGPU-bound work under the GPU cap.
@@ -223,6 +251,41 @@ mod tests {
         m.dvfs.governor = crate::power::dvfs::DvfsGovernor::Powersave;
         let save_w = m.watts(busy);
         assert!(save_w < perf_w * 0.5, "{save_w} vs {perf_w}");
+    }
+
+    #[test]
+    fn demand_accessors_decompose_watts() {
+        // idle + capped(cpu demand) + capped(gpu demand) + igpu == watts
+        let mut m = model("az4-n4090");
+        let act = Activity {
+            cpu: 0.9,
+            dgpu: 0.8,
+            igpu: 0.5,
+        };
+        m.cpu_rapl.set_cap(Some(30.0)).unwrap();
+        let expect = m.idle_w()
+            + m.cpu_rapl.effective_power(m.cpu_demand_w(act))
+            + m.gpu_cap.as_ref().unwrap().effective_power(m.dgpu_demand_w(act))
+            + m.igpu_w(act);
+        assert!((m.watts(act) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn both_clamps_together_stay_finite_and_sane() {
+        // the §3.6 edge-case interaction: a Userspace clock far below
+        // min_ghz AND a RAPL cap far below min_w — both clamp, the
+        // model keeps power ≥ idle and perf > 0 (no assert, no NaN)
+        let mut m = model("az5-a890m");
+        m.dvfs.governor = crate::power::dvfs::DvfsGovernor::Userspace(1);
+        let floor_cap = 1e-6; // far below the domain floor
+        m.cpu_rapl.set_cap(Some(floor_cap)).unwrap();
+        assert_eq!(m.cpu_rapl.cap(), Some(m.cpu_rapl.min_w));
+        let act = Activity::cpu_only(1.0);
+        let w = m.watts(act);
+        assert!(w.is_finite() && w >= m.idle_w(), "w={w}");
+        let pf = m.cpu_perf_factor(act);
+        assert!(pf.is_finite() && pf > 0.0, "pf={pf}");
+        assert!(m.perf_factor(act) > 0.0);
     }
 
     #[test]

@@ -26,8 +26,13 @@ pub enum RaplError {
 }
 
 impl RaplDomain {
+    /// Build a cappable domain. Degenerate ranges clamp instead of
+    /// panicking — a floor above the hardware max collapses to the max,
+    /// and non-positive limits clamp to a 1 mW floor — so automated
+    /// governors can derive domains from arbitrary catalog data.
     pub fn new(name: impl Into<String>, min_w: f64, max_w: f64) -> Self {
-        assert!(0.0 < min_w && min_w <= max_w);
+        let max_w = max_w.max(1e-3);
+        let min_w = min_w.clamp(1e-3, max_w);
         Self {
             name: name.into(),
             max_w,
@@ -117,6 +122,32 @@ mod tests {
         );
         d.set_cap(None).unwrap();
         assert_eq!(d.cap(), None);
+    }
+
+    #[test]
+    fn degenerate_range_clamps_not_asserts() {
+        // floor above max collapses to max; caps stay usable
+        let mut d = RaplDomain::new("weird", 50.0, 10.0);
+        assert_eq!(d.min_w, 10.0);
+        assert_eq!(d.max_w, 10.0);
+        d.set_cap(Some(1.0)).unwrap();
+        assert_eq!(d.cap(), Some(10.0));
+        // non-positive limits clamp to the 1 mW floor
+        let d = RaplDomain::new("tiny", 0.0, 0.0);
+        assert!(d.min_w > 0.0 && d.max_w >= d.min_w);
+        assert!(d.perf_factor(1.0) > 0.0);
+    }
+
+    #[test]
+    fn cap_exactly_at_floor_is_lossless_below_demand() {
+        // edge case at the clamp: a cap equal to min_w behaves like any
+        // other cap — clips power, degrades perf by the cube-root law
+        let mut d = dom();
+        d.set_cap(Some(d.min_w)).unwrap();
+        assert_eq!(d.cap(), Some(10.0));
+        assert_eq!(d.effective_power(80.0), 10.0);
+        let pf = d.perf_factor(80.0);
+        assert!(((10.0f64 / 80.0).cbrt() - pf).abs() < 1e-12);
     }
 
     #[test]

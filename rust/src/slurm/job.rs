@@ -1,7 +1,7 @@
 //! Jobs: what users submit and what the controller tracks.
 
 use crate::power::Activity;
-use crate::sim::SimTime;
+use crate::sim::{ScheduledId, SimTime};
 
 /// Job identifier (monotonic, like SLURM job ids).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
@@ -69,6 +69,23 @@ pub struct Job {
     pub finished: Option<SimTime>,
     /// nodes allocated to the job (indices into the scheduler's table)
     pub allocated: Vec<usize>,
+    /// joules drawn by the allocated nodes while the job ran, from the
+    /// scheduler's exact integration — the settlement figure the §6.2
+    /// energy quotas charge at completion (0 until terminal)
+    pub energy_j: f64,
+    /// nominal work completed so far, in seconds at full rate — the
+    /// §3.6 power-cap ledger (a capped job progresses slower than wall
+    /// time, so `duration` is work, not wall time)
+    pub work_done_s: f64,
+    /// current relative execution rate: 1.0 uncapped, < 1.0 while the
+    /// governor caps any of the job's nodes
+    pub rate: f64,
+    /// when `rate` last changed (progress accrues at the old rate up
+    /// to this point)
+    pub last_rate_change: SimTime,
+    /// live completion timer on the kernel (cancelled + rescheduled on
+    /// every rate change)
+    pub(crate) completion_ev: Option<ScheduledId>,
 }
 
 impl Job {
@@ -81,6 +98,11 @@ impl Job {
             started: None,
             finished: None,
             allocated: Vec::new(),
+            energy_j: 0.0,
+            work_done_s: 0.0,
+            rate: 1.0,
+            last_rate_change: now,
+            completion_ev: None,
         }
     }
 

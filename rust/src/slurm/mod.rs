@@ -10,6 +10,13 @@
 //!   user-facing surface (and the blocking `srun`/`salloc` loops, which
 //!   must drive the whole-cluster kernel) is the session-based
 //!   `dalek::api` layer
+//! * [`policy`] — the energy-aware layer that *consumes* the §4
+//!   telemetry: the cluster power-cap governor (rolling watts →
+//!   RAPL/DVFS actuation, jobs genuinely slowed), §6.2
+//!   energy-efficient placement, and idle power-down through the
+//!   §4.3 admin path
+//! * [`quota`] — §6.2 time/energy quotas: estimate-gated at submit,
+//!   settled at completion against the measured joules
 //!
 //! The controller keeps no clock of its own: its timers are
 //! [`SchedEvent`]s on the shared `sim::Kernel`, and every power change
@@ -19,12 +26,14 @@
 
 pub(crate) mod api;
 pub mod job;
+pub mod policy;
 pub mod quota;
 pub mod scheduler;
 
 pub(crate) use api::SlurmApi;
 pub use job::{Job, JobId, JobSpec, JobState};
+pub use policy::{GovernorStats, PlacementPolicy, PolicyEvent, PowerGovernor};
 pub use quota::{QuotaDb, QuotaDecision};
 pub use scheduler::{
-    AdminPowerOutcome, NodeInfo, SchedEvent, SchedPolicy, Slurm, SlurmSim, SlurmStats,
+    AdminPowerOutcome, NodeDraw, NodeInfo, SchedEvent, SchedPolicy, Slurm, SlurmSim, SlurmStats,
 };

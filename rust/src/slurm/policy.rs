@@ -1,0 +1,534 @@
+//! Energy-aware scheduling policies (§3.6 + §6.2): the layer that
+//! *consumes* the §4 telemetry the platform produces.
+//!
+//! Three policies close the measure→actuate loop the paper leaves as
+//! future work, following the D.A.V.I.D.E. cluster-power-budget line of
+//! work and JetsonLEAP's measure-then-actuate loop:
+//!
+//! * **Cluster power-cap governor** ([`PowerGovernor`]) — a periodic
+//!   kernel event ([`PolicyEvent::GovernorTick`], armed by setting a
+//!   budget). Each tick reads the rolling-window cluster watts from the
+//!   §4 streaming sampler, then plans per-node RAPL/dGPU caps
+//!   feed-forward from the scheduler's
+//!   [`NodeDraw`](super::scheduler::NodeDraw) ledger: uncappable
+//!   floors are subtracted from the budget and the remaining headroom
+//!   is split across the busy nodes' cappable demand by one throttle
+//!   factor. Caps actuate through [`Slurm::apply_power_knobs`], which
+//!   reprices running jobs — capped work genuinely runs longer, per the
+//!   `(cap/demand)^(1/3)` RAPL model. When even floor-clamped caps
+//!   cannot reach the budget, the governor deep-throttles by switching
+//!   the busy nodes' DVFS governor to Powersave. Relaxation (clearing
+//!   caps when the demand fits again) is gated on the *measured*
+//!   rolling mean being back under budget, so the telemetry — not just
+//!   the model — closes the loop. The governor never kills work: it
+//!   only trades time for power.
+//!
+//! * **Energy-efficient placement** ([`PlacementPolicy`], per
+//!   partition) — §6.2's "prototyping on energy-efficient nodes":
+//!   candidate nodes are ordered by [`joules_to_completion`] (boot
+//!   energy for cold nodes + draw × wall-time under current knobs)
+//!   instead of the boot-delay-minimizing first fit.
+//!
+//! * **Idle power-down** — nodes idle past
+//!   [`PowerGovernor::idle_shutdown_after`] are driven through the
+//!   §4.3 `admin_power` path (which refuses to touch reserved or
+//!   running nodes) ahead of the scheduler's own 10-minute suspend
+//!   policy; demand wakes them back up through the normal WoL/PXE
+//!   resume path.
+
+use super::job::JobSpec;
+use super::scheduler::{AdminPowerOutcome, SchedEvent, Slurm, MIN_RATE};
+use crate::power::{Activity, PowerModel, PowerState};
+use crate::sim::{Kernel, SimTime};
+
+/// How a partition picks nodes for a reservation (§6.2).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum PlacementPolicy {
+    /// minimize boot delay: Idle, then Booting, then Suspended
+    #[default]
+    FirstFit,
+    /// minimize estimated joules-to-completion ([`joules_to_completion`])
+    EnergyEfficient,
+}
+
+impl PlacementPolicy {
+    /// Wire name (`dalek api` `set_policy` op).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlacementPolicy::FirstFit => "first_fit",
+            PlacementPolicy::EnergyEfficient => "energy_efficient",
+        }
+    }
+
+    /// Parse a wire name (not `FromStr`: there is no error payload,
+    /// callers turn `None` into their own protocol error).
+    pub fn from_wire(s: &str) -> Option<Self> {
+        match s {
+            "first_fit" => Some(PlacementPolicy::FirstFit),
+            "energy_efficient" => Some(PlacementPolicy::EnergyEfficient),
+            _ => None,
+        }
+    }
+}
+
+/// Kernel events of the policy layer. Routed by whoever drives the
+/// cluster kernel (`dalek::api`'s dispatch loop).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyEvent {
+    /// periodic governor control step (armed while a budget is set)
+    GovernorTick,
+}
+
+/// Observability counters of the governor.
+#[derive(Clone, Debug, Default)]
+pub struct GovernorStats {
+    /// control steps taken
+    pub ticks: u64,
+    /// ticks that wrote (tightened or re-planned) caps
+    pub cap_writes: u64,
+    /// ticks that cleared every cap (demand fit + telemetry confirmed)
+    pub relaxes: u64,
+    /// ticks spent in deep throttle (Powersave on busy nodes)
+    pub deep_ticks: u64,
+    /// §3.6 idle power-downs initiated
+    pub idle_shutdowns: u64,
+    /// rolling-window cluster watts at the last tick
+    pub last_rolling_w: f64,
+    /// throttle factor chosen at the last planning tick (1.0 = uncapped)
+    pub last_throttle: f64,
+}
+
+/// The cluster power-cap governor. Owns no clock: the `dalek::api`
+/// dispatcher fires [`PolicyEvent::GovernorTick`] at `period` and calls
+/// [`PowerGovernor::tick`] with the sampler's rolling-window watts.
+pub struct PowerGovernor {
+    budget_w: Option<f64>,
+    /// control period (tick spacing on the kernel)
+    pub period: SimTime,
+    /// rolling telemetry window the governor reads (≤ the sampler's
+    /// retention horizon)
+    pub window: SimTime,
+    /// accepted overshoot fraction before deep throttle engages
+    pub tolerance: f64,
+    /// idle power-down threshold (None disables; the scheduler's own
+    /// 10-minute policy still applies either way)
+    pub idle_shutdown_after: Option<SimTime>,
+    armed: bool,
+    deep: bool,
+    pub stats: GovernorStats,
+}
+
+impl Default for PowerGovernor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PowerGovernor {
+    pub fn new() -> Self {
+        Self {
+            budget_w: None,
+            period: SimTime::from_secs(1),
+            window: SimTime::from_secs(10),
+            tolerance: 0.05,
+            idle_shutdown_after: None,
+            armed: false,
+            deep: false,
+            stats: GovernorStats {
+                last_throttle: 1.0,
+                ..GovernorStats::default()
+            },
+        }
+    }
+
+    /// Current budget, watts (None = governor dormant).
+    pub fn budget_w(&self) -> Option<f64> {
+        self.budget_w
+    }
+
+    /// Set or clear the cluster budget. Returns true when the caller
+    /// must arm the first tick (the governor was dormant).
+    pub fn set_budget(&mut self, watts: Option<f64>) -> bool {
+        self.budget_w = watts;
+        let needs_arming = watts.is_some() && !self.armed;
+        if needs_arming {
+            self.armed = true;
+        }
+        needs_arming
+    }
+
+    /// Whether the periodic tick is live on the kernel.
+    pub fn is_armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Whether the last plan had to deep-throttle (Powersave DVFS on
+    /// the busy nodes) because floor-clamped caps alone could not reach
+    /// the budget.
+    pub fn is_deep_throttled(&self) -> bool {
+        self.deep
+    }
+
+    /// One control step. `rolling_w` is the measured rolling-window
+    /// cluster draw from the §4 sampler. Returns whether the caller
+    /// should schedule the next tick (false = self-disarm: budget
+    /// cleared).
+    pub fn tick<E: From<SchedEvent>>(
+        &mut self,
+        slurm: &mut Slurm,
+        kernel: &mut Kernel<E>,
+        rolling_w: f64,
+        now: SimTime,
+    ) -> bool {
+        self.stats.ticks += 1;
+        self.stats.last_rolling_w = rolling_w;
+
+        // §3.6 idle power-down ahead of the 10-minute policy; the
+        // admin_power path refuses reserved/running nodes, so this can
+        // never kill or delay admitted work
+        if let Some(after) = self.idle_shutdown_after {
+            for idx in slurm.idle_nodes_over(after, now) {
+                if slurm.admin_power_idx(kernel, idx, false, now) == AdminPowerOutcome::Applied {
+                    self.stats.idle_shutdowns += 1;
+                }
+            }
+        }
+
+        let Some(budget) = self.budget_w else {
+            // budget cleared since the last tick: release everything
+            // and go dormant
+            for idx in 0..slurm.node_count() {
+                slurm.apply_power_knobs(kernel, idx, None, None, false, now);
+            }
+            self.deep = false;
+            self.armed = false;
+            return false;
+        };
+
+        // feed-forward plan: floors are uncappable, the headroom above
+        // them is split across the busy nodes' nominal demand
+        let nodes = slurm.power_breakdown();
+        let floor: f64 = nodes.iter().map(|n| n.floor_w).sum();
+        let demand: f64 = nodes.iter().map(|n| n.cpu_demand_w + n.gpu_demand_w).sum();
+        let headroom = (budget - floor).max(0.0);
+        let throttle = if demand <= f64::EPSILON {
+            1.0
+        } else {
+            (headroom / demand).min(1.0)
+        };
+        self.stats.last_throttle = throttle;
+
+        if throttle >= 1.0 - 1e-12 {
+            // demand fits the budget uncapped — but only relax once the
+            // *measured* rolling mean confirms we are back under it,
+            // and only if there is anything to release (steady
+            // under-budget ticks are free)
+            if rolling_w <= budget && slurm.capped_nodes() > 0 {
+                for n in &nodes {
+                    slurm.apply_power_knobs(kernel, n.idx, None, None, false, now);
+                }
+                self.deep = false;
+                self.stats.relaxes += 1;
+            }
+            return true;
+        }
+
+        // caps clamp at their domain floors; if the floor-clamped plan
+        // still overshoots the budget, deep-throttle DVFS as well
+        let mut projected = floor;
+        for n in nodes.iter().filter(|n| n.allocated) {
+            let (cmin, cmax) = n.cpu_cap_range;
+            projected += n
+                .cpu_demand_w
+                .min((n.cpu_demand_w * throttle).clamp(cmin, cmax));
+            if let Some((gmin, gmax)) = n.gpu_cap_range {
+                projected += n
+                    .gpu_demand_w
+                    .min((n.gpu_demand_w * throttle).clamp(gmin, gmax));
+            } else {
+                projected += n.gpu_demand_w; // no cappable dGPU domain
+            }
+        }
+        let deep = projected > budget * (1.0 + self.tolerance);
+        for n in &nodes {
+            if n.allocated {
+                let gpu_cap = (n.gpu_demand_w > 0.0).then_some(n.gpu_demand_w * throttle);
+                slurm.apply_power_knobs(
+                    kernel,
+                    n.idx,
+                    Some(n.cpu_demand_w * throttle),
+                    gpu_cap,
+                    deep,
+                    now,
+                );
+            } else {
+                // idle/booting nodes draw only their floor — never capped
+                slurm.apply_power_knobs(kernel, n.idx, None, None, false, now);
+            }
+        }
+        self.deep = deep;
+        self.stats.cap_writes += 1;
+        self.stats.deep_ticks += u64::from(deep);
+        true
+    }
+}
+
+/// Relative execution rate of work with `act` under `current` knobs vs
+/// the `base` (nominal) operating point, floored at the scheduler's
+/// `MIN_RATE` — the single rate formula shared by the repricer and the
+/// placement score. Exactly 1.0 while the knobs are untouched.
+pub fn relative_rate(current: &PowerModel, base: &PowerModel, act: Activity) -> f64 {
+    let base_perf = base.perf_factor(act);
+    if base_perf <= 0.0 {
+        return 1.0;
+    }
+    (current.perf_factor(act) / base_perf).clamp(MIN_RATE, 1.0)
+}
+
+/// Estimated joules for `spec`'s share of work on one candidate node:
+/// boot energy if the node is cold, plus draw(activity) × wall time
+/// under the node's *current* knobs (work stretched by the cap-induced
+/// slowdown, via the same [`relative_rate`] the repricer uses). Lower
+/// is better. Used by [`PlacementPolicy::EnergyEfficient`].
+pub fn joules_to_completion(
+    current: &PowerModel,
+    base: &PowerModel,
+    state: PowerState,
+    boot_time: SimTime,
+    spec: &JobSpec,
+) -> f64 {
+    let boot_j = match state {
+        PowerState::Suspended => current.boot_w() * boot_time.as_secs_f64(),
+        // mid-boot: half the boot energy is still to come, on average
+        PowerState::Booting { .. } => 0.5 * current.boot_w() * boot_time.as_secs_f64(),
+        _ => 0.0,
+    };
+    let rate = relative_rate(current, base, spec.activity);
+    let work_s = spec.duration.min(spec.time_limit).as_secs_f64();
+    boot_j + current.watts(spec.activity) * (work_s / rate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::power::PowerState;
+    use crate::slurm::{JobSpec, JobState, SlurmSim};
+
+    fn sim() -> SlurmSim {
+        SlurmSim::from_config(&ClusterConfig::dalek_default())
+    }
+
+    fn mins(m: u64) -> SimTime {
+        SimTime::from_mins(m)
+    }
+
+    #[test]
+    fn governor_caps_cluster_to_budget_and_slows_the_job() {
+        let mut s = sim();
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 4, 600), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(3)); // booted (70 s) and running
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        let uncapped_w = s.cluster_watts();
+
+        // budget below the current draw but above every floor
+        let budget = 180.0;
+        assert!(uncapped_w > budget, "uncapped draw {uncapped_w}");
+        let mut gov = PowerGovernor::new();
+        gov.set_budget(Some(budget));
+        let now = s.kernel.now();
+        let rearm = gov.tick(&mut s.ctl, &mut s.kernel, uncapped_w, now);
+        assert!(rearm);
+
+        // feed-forward hits the budget exactly (no clamp binds here)
+        let w = s.cluster_watts();
+        assert!((w - budget).abs() < 1e-6, "capped draw {w}");
+        assert!(s.capped_nodes() >= 4);
+        let job = s.job(id).unwrap();
+        assert!(job.rate < 1.0, "rate {}", job.rate);
+
+        // the job genuinely runs longer than its nominal 600 s
+        s.run_to_idle();
+        let job = s.job(id).unwrap();
+        assert_eq!(job.state, JobState::Completed);
+        let run = job.run_time().unwrap().as_secs_f64();
+        assert!(run > 620.0, "capped run only took {run} s");
+        // and the work ledger closed at the nominal total
+        assert!((job.work_done_s - 600.0).abs() < 1e-6, "{}", job.work_done_s);
+    }
+
+    #[test]
+    fn governor_relaxes_only_when_telemetry_confirms() {
+        let mut s = sim();
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 4, 300), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(2));
+        let mut gov = PowerGovernor::new();
+        gov.set_budget(Some(180.0));
+        let now = s.kernel.now();
+        let live_w = s.cluster_watts();
+        gov.tick(&mut s.ctl, &mut s.kernel, live_w, now);
+        assert!(s.capped_nodes() > 0);
+
+        // job done; nodes idle — demand now fits, but a stale rolling
+        // mean above budget must keep the caps in place
+        s.run_until(mins(10));
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+        let now = s.kernel.now();
+        gov.tick(&mut s.ctl, &mut s.kernel, 500.0, now);
+        assert!(s.capped_nodes() > 0, "relaxed on stale telemetry");
+        // once the measured mean is back under budget, caps clear
+        gov.tick(&mut s.ctl, &mut s.kernel, 120.0, now);
+        assert_eq!(s.capped_nodes(), 0);
+        assert!(gov.stats.relaxes >= 1);
+    }
+
+    #[test]
+    fn clearing_the_budget_disarms_and_uncaps() {
+        let mut s = sim();
+        s.submit_at(JobSpec::cpu("a", "az5-a890m", 2, 600), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(2));
+        let mut gov = PowerGovernor::new();
+        assert!(gov.set_budget(Some(150.0)));
+        assert!(!gov.set_budget(Some(140.0))); // already armed
+        let now = s.kernel.now();
+        assert!(gov.tick(&mut s.ctl, &mut s.kernel, 300.0, now));
+        assert!(s.capped_nodes() > 0);
+        gov.set_budget(None);
+        let rearm = gov.tick(&mut s.ctl, &mut s.kernel, 300.0, now);
+        assert!(!rearm);
+        assert!(!gov.is_armed());
+        assert_eq!(s.capped_nodes(), 0);
+    }
+
+    #[test]
+    fn governor_never_kills_running_or_reserved_work() {
+        let mut s = sim();
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 4, 900), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(3));
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        let mut gov = PowerGovernor::new();
+        // an absurd budget below even the suspend floor, plus instant
+        // idle shutdowns: the governor may throttle everything to the
+        // floors but must not touch the allocation
+        gov.set_budget(Some(1.0));
+        gov.idle_shutdown_after = Some(SimTime::ZERO);
+        let now = s.kernel.now();
+        gov.tick(&mut s.ctl, &mut s.kernel, 500.0, now);
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        // even floor-clamped caps cannot reach 1 W: deep throttle engages
+        assert!(gov.is_deep_throttled());
+        assert!(gov.stats.deep_ticks >= 1);
+        s.run_to_idle();
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+        assert_eq!(s.stats.cancelled, 0);
+        assert_eq!(s.stats.timeouts, 0);
+    }
+
+    #[test]
+    fn idle_shutdown_suspends_ahead_of_the_ten_minute_policy() {
+        let mut s = sim();
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 1, 60), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(4)); // boot 70 s + run 60 s, now idle ~2 min
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+        let mut gov = PowerGovernor::new();
+        gov.set_budget(Some(10_000.0)); // budget irrelevant here
+        gov.idle_shutdown_after = Some(mins(1));
+        let now = s.kernel.now();
+        gov.tick(&mut s.ctl, &mut s.kernel, 120.0, now);
+        assert_eq!(gov.stats.idle_shutdowns, 1);
+        s.run_until(mins(5)); // well before the 10-minute timer
+        let infos = s.node_infos();
+        let node = &infos[s.job(id).unwrap().allocated[0]];
+        assert!(
+            matches!(node.state, PowerState::Suspended | PowerState::Suspending { .. }),
+            "{:?}",
+            node.state
+        );
+    }
+
+    #[test]
+    fn energy_efficient_placement_prefers_the_cheaper_node() {
+        let mut s = sim();
+        s.ctl
+            .set_placement("az5-a890m", PlacementPolicy::EnergyEfficient)
+            .unwrap();
+        assert!(s
+            .ctl
+            .set_placement("nope", PlacementPolicy::EnergyEfficient)
+            .is_err());
+        // warm up the whole partition, then cap one node: per the
+        // c^(2/3) law the capped node completes the same work on fewer
+        // joules, so the next 1-node job must land there
+        let warm = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 4, 30), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(3));
+        assert_eq!(s.job(warm).unwrap().state, JobState::Completed);
+        let capped_idx = s.job(warm).unwrap().allocated[1];
+        let now = s.kernel.now();
+        s.ctl
+            .apply_power_knobs(&mut s.kernel, capped_idx, Some(8.0), None, false, now);
+        let id = s
+            .submit_at(JobSpec::cpu("b", "az5-a890m", 1, 120), now)
+            .unwrap();
+        let job = s.job(id).unwrap();
+        assert_eq!(job.allocated, vec![capped_idx], "placement ignored the score");
+        // and on the capped node the job runs slower than nominal
+        s.run_to_idle();
+        assert!(s.job(id).unwrap().run_time().unwrap() > SimTime::from_secs(120));
+    }
+
+    #[test]
+    fn joules_score_orders_states_sanely() {
+        let node = crate::config::cluster::resolve_partition("az5-a890m")
+            .unwrap()
+            .node;
+        let m = PowerModel::for_node(&node);
+        let spec = JobSpec::cpu("a", "az5-a890m", 1, 300);
+        let boot = SimTime::from_secs(70);
+        let idle = joules_to_completion(
+            &m,
+            &m,
+            PowerState::Idle { since: SimTime::ZERO },
+            boot,
+            &spec,
+        );
+        let booting = joules_to_completion(
+            &m,
+            &m,
+            PowerState::Booting { until: boot },
+            boot,
+            &spec,
+        );
+        let cold = joules_to_completion(&m, &m, PowerState::Suspended, boot, &spec);
+        assert!(idle < booting && booting < cold, "{idle} {booting} {cold}");
+        // a capped node scores cheaper than an uncapped one (c^(2/3))
+        let mut capped = m.clone();
+        capped.cpu_rapl.set_cap(Some(10.0)).unwrap();
+        let capped_score = joules_to_completion(
+            &capped,
+            &m,
+            PowerState::Idle { since: SimTime::ZERO },
+            boot,
+            &spec,
+        );
+        assert!(capped_score < idle, "{capped_score} vs {idle}");
+    }
+
+    #[test]
+    fn placement_policy_wire_names_round_trip() {
+        for p in [PlacementPolicy::FirstFit, PlacementPolicy::EnergyEfficient] {
+            assert_eq!(PlacementPolicy::from_wire(p.as_str()), Some(p));
+        }
+        assert_eq!(PlacementPolicy::from_wire("lottery"), None);
+    }
+}

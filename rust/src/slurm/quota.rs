@@ -11,6 +11,12 @@
 //! scheduler's exact integration — the same signal the §4 platform
 //! measures); submissions are rejected once either budget is exhausted.
 //! Budgets refill on a period (a teaching-semester week by default).
+//!
+//! Enforcement is wired into the controller: `Slurm::submit_at` runs
+//! [`QuotaDb::admit`] for accounted users (estimate-based gate), and
+//! job completion settles via [`QuotaDb::charge`] with the *measured*
+//! node-seconds and joules — so a capped job that ran slower but
+//! cheaper is billed what it actually drew, not what was estimated.
 
 use std::collections::BTreeMap;
 
@@ -77,6 +83,13 @@ impl QuotaDb {
         self.accounts
             .get(user)
             .ok_or_else(|| QuotaError::NoAccount(user.into()))
+    }
+
+    /// Whether `user` is under quota enforcement at all (unaccounted
+    /// users are unconstrained — the controller skips both the
+    /// admission gate and the settlement charge).
+    pub fn has_account(&self, user: &str) -> bool {
+        self.accounts.contains_key(user)
     }
 
     fn roll_period(&mut self, user: &str, now: SimTime) {
@@ -231,6 +244,54 @@ mod tests {
             .unwrap();
         assert_eq!(d, QuotaDecision::Admit);
         assert_eq!(q.account("student").unwrap().used_time_s, 0.0);
+    }
+
+    #[test]
+    fn mid_period_deny_energy_becomes_admit_after_refill() {
+        let mut q = db();
+        // burn the whole energy budget mid-period (settlement-style
+        // charge of measured joules)
+        q.charge("student", 3600.0, 3.6e6, SimTime::from_hours(2))
+            .unwrap();
+        let d = q
+            .admit("student", &spec(1, 3600), 50.0, SimTime::from_hours(3))
+            .unwrap();
+        assert!(matches!(d, QuotaDecision::DenyEnergy { .. }), "{d:?}");
+        // the period boundary is aligned to the refill grid (t = 0), so
+        // one week after *period start* — not after the charge — refills
+        let d = q
+            .admit(
+                "student",
+                &spec(1, 3600),
+                50.0,
+                SimTime::from_hours(24 * 7),
+            )
+            .unwrap();
+        assert_eq!(d, QuotaDecision::Admit);
+        let a = q.account("student").unwrap();
+        assert_eq!(a.used_energy_j, 0.0);
+        assert_eq!(a.used_time_s, 0.0);
+    }
+
+    #[test]
+    fn charge_accumulates_exactly() {
+        // settlement conservation at the unit level: charges sum with
+        // no estimate leaking in
+        let mut q = db();
+        let mut expect = 0.0;
+        for k in 1..=10u64 {
+            let j = k as f64 * 137.5;
+            expect += j;
+            q.charge("student", 1.0, j, SimTime::from_secs(k)).unwrap();
+        }
+        assert!((q.account("student").unwrap().used_energy_j - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn has_account_gates_enforcement() {
+        let q = db();
+        assert!(q.has_account("student"));
+        assert!(!q.has_account("mallory"));
     }
 
     #[test]

@@ -23,13 +23,34 @@
 //! [`PowerTransition`] which the §4 streaming sampler drains — the
 //! measured signal is therefore derived from the same ground truth,
 //! with no history cloning or garbage collection.
+//!
+//! Since the §3.6 policy layer (`slurm::policy`) can actuate RAPL/DVFS
+//! knobs at any time, every job carries a work/rate ledger: `duration`
+//! is nominal *work*, progress accrues at the slowest allocated node's
+//! relative rate (perf under current knobs ÷ perf at the nominal
+//! operating point — exactly 1.0 until something is actuated), and
+//! [`Slurm::apply_power_knobs`] reprices the completion timer so capped
+//! jobs genuinely run longer. Completed jobs settle their §6.2 energy
+//! quota with the measured joules their nodes drew while running.
 
 use std::collections::BTreeMap;
 
 use super::job::{Job, JobId, JobSpec, JobState};
+use super::policy::{self, PlacementPolicy};
+use super::quota::{QuotaDb, QuotaDecision};
 use crate::config::cluster::{resolve_partition, ClusterConfig, PowerPolicyConfig};
-use crate::power::{Activity, NodePowerFsm, PowerModel, PowerState, PowerTransition, Transition};
+use crate::power::{
+    Activity, DvfsGovernor, NodePowerFsm, PowerModel, PowerState, PowerTransition, Transition,
+};
 use crate::sim::{Kernel, ScheduledId, SimTime};
+
+/// Floor on the relative execution rate of a capped job: even with
+/// every knob at its hardware floor a job keeps making progress (the
+/// cube-root law never collapses to zero, this just bounds the wall
+/// time a pathological configuration can cost). Shared with
+/// `policy::joules_to_completion` so placement scores use the same
+/// floor the repricer does.
+pub(crate) const MIN_RATE: f64 = 0.05;
 
 /// Queue policy.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -65,6 +86,11 @@ struct NodeEntry {
     partition: String,
     fsm: NodePowerFsm,
     power: PowerModel,
+    /// the node's nominal operating point (knobs as shipped): job
+    /// durations are calibrated against it, so the relative execution
+    /// rate of a job is perf(current knobs) / perf(base knobs) — exactly
+    /// 1.0 until the §3.6 governor actuates something
+    base_power: PowerModel,
     running: Option<JobId>,
     reserved_for: Option<JobId>,
     suspend_timer: Option<ScheduledId>,
@@ -72,6 +98,31 @@ struct NodeEntry {
     last_change: SimTime,
     cur_watts: f64,
     energy_j: f64,
+    /// `energy_j` watermark taken when the running job started — the
+    /// difference at completion is the job's measured-joules settlement
+    job_energy_mark: f64,
+}
+
+/// One node's contribution to the cluster power ledger, as the §3.6
+/// power-cap governor sees it: the uncappable floor of its current
+/// state plus the nominal (uncapped, base-governor) demand of its
+/// cappable domains.
+#[derive(Clone, Debug)]
+pub struct NodeDraw {
+    pub idx: usize,
+    /// a job is running here (only these nodes get capped)
+    pub allocated: bool,
+    /// uncappable draw at the current state: suspend/boot/idle floor,
+    /// plus the iGPU share of a running job's activity
+    pub floor_w: f64,
+    /// nominal CPU-package demand of the running job, watts (0 if idle)
+    pub cpu_demand_w: f64,
+    /// nominal dGPU demand of the running job, watts (0 if idle)
+    pub gpu_demand_w: f64,
+    /// (min, max) cap range of the CPU package domain
+    pub cpu_cap_range: (f64, f64),
+    /// (min, max) cap range of the dGPU domain, if one exists
+    pub gpu_cap_range: Option<(f64, f64)>,
 }
 
 /// Public node snapshot.
@@ -110,6 +161,8 @@ pub enum SlurmError {
     NotPending(JobId),
     #[error("unknown node `{0}`")]
     UnknownNode(String),
+    #[error("quota denied for `{user}`: {reason}")]
+    QuotaDenied { user: String, reason: String },
 }
 
 /// The controller.
@@ -129,6 +182,11 @@ pub struct Slurm {
     transitions: Vec<PowerTransition>,
     pub policy: SchedPolicy,
     pub power_policy: PowerPolicyConfig,
+    /// per-partition placement policy (§6.2): absent means first-fit
+    placement: BTreeMap<String, PlacementPolicy>,
+    /// §6.2 time/energy quotas: admission-checked at submit (estimate),
+    /// settled at completion against the measured joules
+    pub quota: QuotaDb,
     pub stats: SlurmStats,
 }
 
@@ -143,17 +201,20 @@ impl Slurm {
             for n in 0..pc.nodes {
                 let idx = nodes.len();
                 let model = &spec.node;
+                let power = PowerModel::for_node(model);
                 nodes.push(NodeEntry {
                     name: format!("{}-{}", pc.name, n),
                     partition: pc.name.clone(),
                     fsm: NodePowerFsm::new(model.boot_time, model.shutdown_time),
-                    power: PowerModel::for_node(model),
+                    base_power: power.clone(),
+                    power,
                     running: None,
                     reserved_for: None,
                     suspend_timer: None,
                     last_change: SimTime::ZERO,
                     cur_watts: model.power.suspend_w,
                     energy_j: 0.0,
+                    job_energy_mark: 0.0,
                 });
                 by_partition.entry(pc.name.clone()).or_default().push(idx);
             }
@@ -173,6 +234,8 @@ impl Slurm {
             transitions: Vec::new(),
             policy,
             power_policy: cfg.power.clone(),
+            placement: BTreeMap::new(),
+            quota: QuotaDb::new(),
             stats: SlurmStats::default(),
         }
     }
@@ -328,6 +391,35 @@ impl Slurm {
                 have: part_nodes.len() as u32,
             });
         }
+        // §6.2 quota admission for accounted users: estimate from the
+        // partition's nominal power model (the eco-friendly incentive:
+        // efficient partitions estimate cheaper). Settlement at
+        // completion charges the measured joules, not this estimate.
+        if self.quota.has_account(&spec.user) {
+            let est_w = part_nodes
+                .first()
+                .map(|&i| self.nodes[i].base_power.watts(spec.activity))
+                .unwrap_or(0.0);
+            let decision = self
+                .quota
+                .admit(&spec.user, &spec, est_w, now)
+                .expect("account checked above");
+            let reason = match decision {
+                QuotaDecision::Admit => None,
+                QuotaDecision::DenyTime { left_s, need_s } => Some(format!(
+                    "time quota exhausted (need {need_s:.0} node-s, {left_s:.0} left)"
+                )),
+                QuotaDecision::DenyEnergy { left_j, est_j } => Some(format!(
+                    "energy quota exhausted (estimated {est_j:.0} J, {left_j:.0} J left)"
+                )),
+            };
+            if let Some(reason) = reason {
+                return Err(SlurmError::QuotaDenied {
+                    user: spec.user.clone(),
+                    reason,
+                });
+            }
+        }
         let id = JobId(self.next_job);
         self.next_job += 1;
         self.jobs.insert(id, Job::new(id, spec, now));
@@ -420,9 +512,22 @@ impl Slurm {
             .iter()
             .position(|n| n.name == node)
             .ok_or_else(|| SlurmError::UnknownNode(node.into()))?;
+        Ok(self.admin_power_idx(kernel, idx, on, now))
+    }
+
+    /// [`Slurm::admin_power`] by node index — the path the §3.6 idle
+    /// power-down policy drives (it already holds indices from
+    /// [`Slurm::idle_nodes_over`]).
+    pub fn admin_power_idx<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        idx: usize,
+        on: bool,
+        now: SimTime,
+    ) -> AdminPowerOutcome {
         self.clock = self.clock.max(now);
         let state = self.nodes[idx].fsm.state();
-        let outcome = if on {
+        if on {
             match state {
                 PowerState::Suspended => {
                     if let Ok(Transition::ScheduleBootComplete(at)) =
@@ -458,8 +563,172 @@ impl Slurm {
                 }
                 _ => AdminPowerOutcome::Refused,
             }
-        };
-        Ok(outcome)
+        }
+    }
+
+    // -- §3.6 power-knob actuation (the governor's mechanism) ---------------
+
+    /// Relative execution rate of work with `act` on node `n` — see
+    /// [`policy::relative_rate`]. Exactly 1.0 while the node's knobs
+    /// are untouched.
+    fn node_rate_of(n: &NodeEntry, act: Activity) -> f64 {
+        policy::relative_rate(&n.power, &n.base_power, act)
+    }
+
+    /// Number of compute nodes in the scheduler's table.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The governor's view of the cluster power ledger: per node, the
+    /// uncappable floor of the current state plus the nominal demand of
+    /// the cappable domains (CPU package, dGPU) under the running job's
+    /// activity.
+    pub fn power_breakdown(&self) -> Vec<NodeDraw> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(idx, n)| {
+                let act = n
+                    .running
+                    .and_then(|j| self.jobs.get(&j))
+                    .map(|j| j.spec.activity);
+                let (allocated, floor_w, cpu_demand_w, gpu_demand_w) =
+                    match (n.fsm.state(), act) {
+                        (PowerState::Allocated, Some(act)) => (
+                            true,
+                            n.base_power.idle_w() + n.base_power.igpu_w(act),
+                            n.base_power.cpu_demand_w(act),
+                            n.base_power.dgpu_demand_w(act),
+                        ),
+                        // any other state draws only its (uncappable) floor
+                        _ => (false, n.cur_watts, 0.0, 0.0),
+                    };
+                NodeDraw {
+                    idx,
+                    allocated,
+                    floor_w,
+                    cpu_demand_w,
+                    gpu_demand_w,
+                    cpu_cap_range: (n.power.cpu_rapl.min_w, n.power.cpu_rapl.max_w),
+                    gpu_cap_range: n.power.gpu_cap.as_ref().map(|g| (g.min_w, g.max_w)),
+                }
+            })
+            .collect()
+    }
+
+    /// Actuate one node's §3.6 knobs: RAPL package cap, dGPU cap
+    /// (`None` clears), and optionally the deep-throttle Powersave
+    /// governor (`false` restores the nominal one). Publishes the power
+    /// transition and — when a job runs here — reprices its completion
+    /// so capped work genuinely takes longer.
+    pub fn apply_power_knobs<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        idx: usize,
+        cpu_cap: Option<f64>,
+        gpu_cap: Option<f64>,
+        powersave: bool,
+        now: SimTime,
+    ) {
+        self.clock = self.clock.max(now);
+        {
+            let n = &mut self.nodes[idx];
+            let cpu_cap =
+                cpu_cap.map(|c| c.clamp(n.power.cpu_rapl.min_w, n.power.cpu_rapl.max_w));
+            n.power
+                .cpu_rapl
+                .set_cap(cpu_cap)
+                .expect("clamped to the domain range");
+            if let Some(g) = &mut n.power.gpu_cap {
+                let gpu_cap = gpu_cap.map(|c| c.clamp(g.min_w, g.max_w));
+                g.set_cap(gpu_cap).expect("clamped to the domain range");
+            }
+            n.power.dvfs.governor = if powersave {
+                DvfsGovernor::Powersave
+            } else {
+                n.base_power.dvfs.governor
+            };
+        }
+        self.touch(idx, now);
+        if let Some(jid) = self.nodes[idx].running {
+            self.reprice(kernel, jid, now);
+        }
+    }
+
+    /// Nodes whose knobs differ from the nominal operating point.
+    pub fn capped_nodes(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| {
+                n.power.cpu_rapl.cap().is_some()
+                    || n.power
+                        .gpu_cap
+                        .as_ref()
+                        .map(|g| g.cap().is_some())
+                        .unwrap_or(false)
+                    || n.power.dvfs.governor != n.base_power.dvfs.governor
+            })
+            .count()
+    }
+
+    /// Unreserved nodes idle for at least `after` — the §3.6 idle
+    /// power-down candidates.
+    pub fn idle_nodes_over(&self, after: SimTime, now: SimTime) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| {
+                n.reserved_for.is_none()
+                    && n.running.is_none()
+                    && n.fsm.idle_for(now).map(|d| d >= after).unwrap_or(false)
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Select the §6.2 placement policy for one partition.
+    pub fn set_placement(
+        &mut self,
+        partition: &str,
+        policy: PlacementPolicy,
+    ) -> Result<(), SlurmError> {
+        if !self.by_partition.contains_key(partition) {
+            return Err(SlurmError::UnknownPartition(partition.into()));
+        }
+        self.placement.insert(partition.into(), policy);
+        Ok(())
+    }
+
+    /// Re-derive a running job's completion time after a knob change:
+    /// progress accrued so far is banked at the old rate, the remaining
+    /// work is rescheduled at the new (slowest-allocated-node) rate.
+    fn reprice<E: From<SchedEvent>>(&mut self, kernel: &mut Kernel<E>, id: JobId, now: SimTime) {
+        let Some(job) = self.jobs.get(&id) else { return };
+        if job.state != JobState::Running {
+            return;
+        }
+        let act = job.spec.activity;
+        let new_rate = job
+            .allocated
+            .iter()
+            .map(|&i| Self::node_rate_of(&self.nodes[i], act))
+            .fold(f64::INFINITY, f64::min);
+        let new_rate = if new_rate.is_finite() { new_rate } else { 1.0 };
+        let job = self.jobs.get_mut(&id).expect("checked above");
+        if (new_rate - job.rate).abs() < 1e-12 {
+            return;
+        }
+        job.work_done_s += now.since(job.last_rate_change).as_secs_f64() * job.rate;
+        job.last_rate_change = now;
+        job.rate = new_rate;
+        let work_s = job.spec.duration.min(job.spec.time_limit).as_secs_f64();
+        let remaining = (work_s - job.work_done_s).max(0.0);
+        let at = now + SimTime::from_secs_f64(remaining / new_rate);
+        if let Some(ev) = job.completion_ev.take() {
+            kernel.cancel(ev);
+        }
+        job.completion_ev = Some(kernel.schedule_at(at, SchedEvent::JobComplete(id)));
     }
 
     fn arm_suspend_timer<E: From<SchedEvent>>(
@@ -593,14 +862,51 @@ impl Slurm {
         if cands.len() < needed {
             return false;
         }
-        // prefer nodes that are already up: Idle, then Booting, then
-        // Suspended — minimizes the §3.4 boot delay
-        cands.sort_by_key(|&i| match self.nodes[i].fsm.state() {
-            PowerState::Idle { .. } => 0,
-            PowerState::Booting { .. } => 1,
-            PowerState::Suspended => 2,
-            _ => 3,
-        });
+        match self
+            .placement
+            .get(&part)
+            .copied()
+            .unwrap_or(PlacementPolicy::FirstFit)
+        {
+            // prefer nodes that are already up: Idle, then Booting,
+            // then Suspended — minimizes the §3.4 boot delay
+            PlacementPolicy::FirstFit => {
+                cands.sort_by_key(|&i| match self.nodes[i].fsm.state() {
+                    PowerState::Idle { .. } => 0,
+                    PowerState::Booting { .. } => 1,
+                    PowerState::Suspended => 2,
+                    _ => 3,
+                });
+            }
+            // §6.2 "prototyping on energy-efficient nodes": order by
+            // estimated joules-to-completion on each candidate — boot
+            // energy for cold nodes plus draw × (work / rate) under the
+            // node's current knobs (a capped node draws less per unit
+            // of work by the c^(2/3) law, so it scores better even
+            // though the job runs longer there)
+            PlacementPolicy::EnergyEfficient => {
+                let spec = self.jobs[&id].spec.clone();
+                cands.sort_by(|&a, &b| {
+                    let na = &self.nodes[a];
+                    let nb = &self.nodes[b];
+                    let sa = policy::joules_to_completion(
+                        &na.power,
+                        &na.base_power,
+                        na.fsm.state(),
+                        na.fsm.boot_time(),
+                        &spec,
+                    );
+                    let sb = policy::joules_to_completion(
+                        &nb.power,
+                        &nb.base_power,
+                        nb.fsm.state(),
+                        nb.fsm.boot_time(),
+                        &spec,
+                    );
+                    sa.total_cmp(&sb)
+                });
+            }
+        }
         cands.truncate(needed);
         for &i in &cands {
             self.nodes[i].reserved_for = Some(id);
@@ -639,16 +945,35 @@ impl Slurm {
             return;
         }
         let allocated = job.allocated.clone();
+        let act = job.spec.activity;
         let dur = job.spec.duration.min(job.spec.time_limit);
         for &i in &allocated {
             self.nodes[i].fsm.allocate().expect("idle node");
             self.nodes[i].running = Some(id);
             self.touch(i, now);
+            // settlement watermark: node energy strictly before the run
+            self.nodes[i].job_energy_mark = self.nodes[i].energy_j;
         }
+        // the slowest allocated node gates the job; exactly 1.0 (and the
+        // wall time bit-exactly `dur`) while no §3.6 knob is actuated
+        let rate = allocated
+            .iter()
+            .map(|&i| Self::node_rate_of(&self.nodes[i], act))
+            .fold(f64::INFINITY, f64::min);
+        let rate = if rate.is_finite() { rate } else { 1.0 };
+        let wall = if (rate - 1.0).abs() < 1e-15 {
+            dur
+        } else {
+            SimTime::from_secs_f64(dur.as_secs_f64() / rate)
+        };
+        let ev = kernel.schedule_at(now + wall, SchedEvent::JobComplete(id));
         let job = self.jobs.get_mut(&id).expect("exists");
         job.state = JobState::Running;
         job.started = Some(now);
-        kernel.schedule_at(now + dur, SchedEvent::JobComplete(id));
+        job.rate = rate;
+        job.last_rate_change = now;
+        job.work_done_s = 0.0;
+        job.completion_ev = Some(ev);
     }
 
     fn finish_job<E: From<SchedEvent>>(
@@ -658,6 +983,10 @@ impl Slurm {
         now: SimTime,
     ) {
         let job = self.jobs.get_mut(&id).expect("scheduled completion");
+        // a job is killed when its *work* exceeds the limit; a capped
+        // job (rate < 1) runs past the wall-clock limit without being
+        // reclassified — the §3.6 governor slows work down, it never
+        // kills it (D.A.V.I.D.E.-style capping extends runtime)
         let timed_out = job.spec.duration > job.spec.time_limit;
         job.state = if timed_out {
             JobState::Timeout
@@ -665,6 +994,9 @@ impl Slurm {
             JobState::Completed
         };
         job.finished = Some(now);
+        job.completion_ev = None; // this event just fired
+        job.work_done_s += now.since(job.last_rate_change).as_secs_f64() * job.rate;
+        job.last_rate_change = now;
         self.stats.completed += u64::from(!timed_out);
         self.stats.timeouts += u64::from(timed_out);
         if let (Some(s), Some(f)) = (job.started, job.finished) {
@@ -672,12 +1004,28 @@ impl Slurm {
             self.stats.total_wait_s += s.since(job.submitted).as_secs_f64();
         }
         let allocated = job.allocated.clone();
+        let mut job_energy = 0.0;
         for &i in &allocated {
+            self.nodes[i].fsm.release(now).expect("allocated node");
+            self.touch(i, now); // integrates the final run segment
+            job_energy += self.nodes[i].energy_j - self.nodes[i].job_energy_mark;
             self.nodes[i].running = None;
             self.nodes[i].reserved_for = None;
-            self.nodes[i].fsm.release(now).expect("allocated node");
-            self.touch(i, now);
             self.arm_suspend_timer(kernel, i, now);
+        }
+        // §6.2 settlement: charge the measured joules and the true
+        // node-seconds, not the admission estimate
+        let job = self.jobs.get_mut(&id).expect("exists");
+        job.energy_j = job_energy;
+        let user = job.spec.user.clone();
+        let node_seconds = match (job.started, job.finished) {
+            (Some(s), Some(f)) => f.since(s).as_secs_f64() * job.spec.nodes as f64,
+            _ => 0.0,
+        };
+        if self.quota.has_account(&user) {
+            self.quota
+                .charge(&user, node_seconds, job_energy, now)
+                .expect("account checked");
         }
         self.try_schedule(kernel, now);
     }
@@ -1042,6 +1390,103 @@ mod tests {
                 .admin_power(&mut s.kernel, "nope-0", true, s.kernel.now()),
             Err(SlurmError::UnknownNode(_))
         ));
+    }
+
+    #[test]
+    fn capping_mid_job_extends_runtime_and_conserves_work() {
+        let mut s = slurm();
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 2, 400), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(2)); // started at t = 70 s
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        let now = s.kernel.now();
+        for &i in &s.job(id).unwrap().allocated.clone() {
+            // half the nominal package demand (az5: 30.54 W at 0.95)
+            s.ctl
+                .apply_power_knobs(&mut s.kernel, i, Some(15.27), None, false, now);
+        }
+        let rate = s.job(id).unwrap().rate;
+        assert!(rate < 1.0 && rate > 0.5, "rate {rate}");
+        s.run_to_idle();
+        let job = s.job(id).unwrap();
+        assert_eq!(job.state, JobState::Completed);
+        assert!(job.run_time().unwrap() > SimTime::from_secs(400));
+        assert!((job.work_done_s - 400.0).abs() < 1e-6);
+        // un-actuated runs stay bit-exact: a fresh identical job with
+        // cleared knobs runs exactly its nominal duration
+        let now = s.kernel.now();
+        for i in 0..s.node_infos().len() {
+            s.ctl.apply_power_knobs(&mut s.kernel, i, None, None, false, now);
+        }
+        let id2 = s.submit_at(JobSpec::cpu("a", "az5-a890m", 2, 400), now).unwrap();
+        s.run_to_idle();
+        assert_eq!(
+            s.job(id2).unwrap().run_time().unwrap(),
+            SimTime::from_secs(400)
+        );
+    }
+
+    #[test]
+    fn job_energy_settlement_matches_exact_integral() {
+        let mut s = slurm();
+        s.ctl.quota.set_account("alice", 1e9, 1e12);
+        let id = s
+            .submit_at(JobSpec::cpu("alice", "az5-a890m", 2, 300), SimTime::ZERO)
+            .unwrap();
+        s.run_to_idle();
+        let job = s.job(id).unwrap();
+        assert_eq!(job.state, JobState::Completed);
+        // constant draw while running: energy == nodes × watts × time
+        let node = resolve_partition("az5-a890m").unwrap().node;
+        let w = PowerModel::for_node(&node).watts(job.spec.activity);
+        let expect = 2.0 * w * 300.0;
+        assert!(
+            (job.energy_j - expect).abs() < 1e-6,
+            "{} vs {expect}",
+            job.energy_j
+        );
+        // settlement charged the measured joules and true node-seconds
+        let acct = s.ctl.quota.account("alice").unwrap();
+        assert!((acct.used_energy_j - job.energy_j).abs() < 1e-9);
+        assert!((acct.used_time_s - 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quota_admission_denies_then_admits_after_refill() {
+        let mut s = slurm();
+        s.ctl.quota.period = SimTime::from_hours(1);
+        // time denial: 4 nodes × 2 h limit ≫ a 1-node-hour budget
+        s.ctl.quota.set_account("carl", 3600.0, 1e12);
+        let mut big = JobSpec::cpu("carl", "az5-a890m", 4, 1800);
+        big.time_limit = SimTime::from_hours(2);
+        assert!(matches!(
+            s.submit_at(big, SimTime::ZERO),
+            Err(SlurmError::QuotaDenied { .. })
+        ));
+        // energy flow: the budget fits one job's estimate, the first
+        // run's settlement eats into it, the second submit is denied
+        // mid-period, and the period refill re-admits it
+        s.ctl.quota.set_account("bob", 1e7, 100_000.0);
+        let j = JobSpec::cpu("bob", "az5-a890m", 1, 600);
+        let id = s.submit_at(j.clone(), SimTime::ZERO).unwrap();
+        s.run_until(mins(30));
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+        let used = s.ctl.quota.account("bob").unwrap().used_energy_j;
+        assert!(used > 5_000.0, "settlement charged {used} J");
+        assert!(matches!(
+            s.submit_at(j.clone(), mins(30)),
+            Err(SlurmError::QuotaDenied { .. })
+        ));
+        // unaccounted users are unconstrained
+        assert!(s
+            .submit_at(JobSpec::cpu("eve", "az5-a890m", 1, 600), mins(30))
+            .is_ok());
+        // one refill period later the same request is admitted
+        let at = SimTime::from_hours(1) + mins(1);
+        s.run_until(at);
+        assert!(s.submit_at(j, at).is_ok());
+        s.run_to_idle();
     }
 
     #[test]

@@ -11,7 +11,7 @@ use dalek::energy::{Ina228Probe, MainBoard, NodeStream, ProbeConfig};
 use dalek::net::{FlowNet, Topology};
 use dalek::power::{Activity, PowerModel, PowerState};
 use dalek::sim::{EventQueue, SimTime};
-use dalek::slurm::{JobSpec, SlurmSim};
+use dalek::slurm::{JobSpec, JobState, SlurmSim};
 use dalek::util::Xoshiro256;
 
 const CASES: u64 = 60;
@@ -348,6 +348,122 @@ fn prop_addressing_bijective() {
     for i in 0..31 {
         let ip = dhcp.offer(Mac::from_name(&format!("guest{i}"))).unwrap();
         assert!(!fixed.contains(&ip), "pool collided with fixed lease");
+    }
+}
+
+/// Property: under any power budget at or above the powered-on idle
+/// floor, the §3.6 governor keeps every 60 s bucket's mean cluster
+/// watts at or under budget × (1 + tolerance) — tolerance covering the
+/// ≤ 1-control-period uncapped surge when a job starts — and never
+/// kills a job to do it, across random `TraceGen` traces and budgets.
+#[test]
+fn prop_governor_bounds_bucket_mean_watts() {
+    for case in 0..4u64 {
+        let mut rng = Xoshiro256::new(0x90B ^ case);
+        // keep nodes up once booted (suspend policy off) so the floor
+        // is the powered-on idle floor and boot spikes happen once,
+        // during the warm-up, outside the measured window
+        let mut cfg = ClusterConfig::dalek_default();
+        cfg.power.enabled = false;
+        let mut c = Cluster::new(cfg, None).unwrap();
+        for p in ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"] {
+            c.submit(JobSpec::cpu("root", p, 4, 1), SimTime::ZERO).unwrap();
+        }
+        c.run_until(SimTime::from_mins(5), false);
+        let idle_floor = c.slurm().cluster_watts();
+        assert!((idle_floor - 680.0).abs() < 1.0, "floor {idle_floor}");
+
+        let budget = idle_floor * rng.uniform_f64(1.05, 1.95);
+        let sid = c.login("root").unwrap();
+        c.set_power_budget(sid, Some(budget)).unwrap();
+
+        let mut gen = trace::TraceGen::dalek_mix(0xB0D ^ case);
+        gen.payloads.clear();
+        gen.jobs_per_hour = 240.0; // dense enough to need the caps
+        let t0 = c.now();
+        let tr = gen.generate(10);
+        for ev in &tr {
+            c.submit(ev.spec.clone(), t0 + ev.at).expect("valid");
+        }
+        let mut last_e = c.slurm().total_energy_j();
+        let mut t = c.now();
+        let mut buckets = 0;
+        while !c.slurm().jobs().all(|j| j.is_terminal()) {
+            t += SimTime::from_secs(60);
+            c.run_until(t, false);
+            let e = c.slurm().total_energy_j();
+            let mean_w = (e - last_e) / 60.0;
+            last_e = e;
+            buckets += 1;
+            assert!(
+                mean_w <= budget * 1.05 + 25.0,
+                "case {case}: bucket {buckets} mean {mean_w} W over budget {budget} W"
+            );
+            assert!(t < SimTime::from_hours(24), "case {case}: no progress");
+        }
+        // nothing was killed to hold the budget: 4 warm-up jobs + all
+        // 10 trace jobs completed, none cancelled or timed out
+        assert_eq!(c.slurm().stats.cancelled, 0, "case {case}");
+        assert_eq!(c.slurm().stats.timeouts, 0, "case {case}");
+        assert_eq!(
+            c.slurm()
+                .jobs()
+                .filter(|j| j.state == JobState::Completed)
+                .count(),
+            14,
+            "case {case}"
+        );
+    }
+}
+
+/// Property: §6.2 settlement conserves energy — per-user charges equal
+/// the sum of their jobs' measured joules, each job's joules equal the
+/// scheduler's exact integral of its run segment, and the total stays
+/// within the cluster total.
+#[test]
+fn prop_quota_settlement_conserves_energy() {
+    for case in 0..10u64 {
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+        for u in 0..7 {
+            s.ctl.quota.set_account(&format!("user{u}"), 1e12, 1e15);
+        }
+        let mut gen = trace::TraceGen::dalek_mix(0x5E77 ^ case);
+        gen.payloads.clear();
+        let tr = gen.generate(12);
+        for ev in &tr {
+            s.submit_at(ev.spec.clone(), ev.at).expect("valid");
+        }
+        s.run_to_idle();
+        let mut per_user = std::collections::BTreeMap::new();
+        let mut total_jobs_j = 0.0;
+        for j in s.jobs() {
+            assert!(j.is_terminal(), "case {case}");
+            // constant activity while running ⇒ the job's settlement
+            // equals nodes × watts(activity) × run time, exactly
+            let node = dalek::config::cluster::resolve_partition(&j.spec.partition)
+                .unwrap()
+                .node;
+            let w = PowerModel::for_node(&node).watts(j.spec.activity);
+            let expect = j.spec.nodes as f64 * w * j.run_time().unwrap().as_secs_f64();
+            assert!(
+                (j.energy_j - expect).abs() <= 1e-6 * expect.max(1.0),
+                "case {case} {}: {} vs {expect}",
+                j.id,
+                j.energy_j
+            );
+            *per_user.entry(j.spec.user.clone()).or_insert(0.0) += j.energy_j;
+            total_jobs_j += j.energy_j;
+        }
+        for (user, expect) in &per_user {
+            let acct = s.ctl.quota.account(user).unwrap();
+            assert!(
+                (acct.used_energy_j - expect).abs() <= 1e-9 * expect.max(1.0),
+                "case {case} {user}: charged {} vs {expect}",
+                acct.used_energy_j
+            );
+        }
+        // job energy is a strict part of the cluster's total integral
+        assert!(total_jobs_j <= s.total_energy_j() + 1e-6, "case {case}");
     }
 }
 
