@@ -1,0 +1,108 @@
+//! Bench: the `dalek::app` phase/collective model under fabric load.
+//!
+//! Sweeps rank count x fabric load for an allreduce-loop app on the
+//! iml-ia770 partition (5 GbE NICs). Fabric load is background bulk
+//! traffic from the frontend into the app's own nodes — the NFS/PXE
+//! kind of pressure §6.2 warns about — so the collective phases share
+//! downlinks with it and the BSP barrier stretches. Prints makespan,
+//! the app job's settled energy and the fabric bytes its collectives
+//! moved; also times the replay (phase events must not blow up the
+//! simulation wall time).
+
+use dalek::api::ClusterApi;
+use dalek::app::AppSpec;
+use dalek::config::ClusterConfig;
+use dalek::sim::SimTime;
+use dalek::slurm::{JobSpec, JobState};
+use dalek::util::{benchkit, Table};
+
+const PARTITION: &str = "iml-ia770";
+/// per-iteration compute per rank, seconds
+const WORK_S: f64 = 20.0;
+/// gradient buffer each iteration allreduces
+const GRAD_BYTES: u64 = 400_000_000; // 400 MB -> ~1 s/ring hop at 5 GbE
+const ITERS: u32 = 6;
+/// one background transfer's size (big enough to outlast the app)
+const BG_BYTES: u64 = 200_000_000_000;
+
+struct Outcome {
+    makespan_s: f64,
+    job_energy_j: f64,
+    collective_bytes: f64,
+    wall_s: f64,
+}
+
+fn run(ranks: u32, bg_flows: u32) -> Outcome {
+    let mut c = ClusterApi::new(ClusterConfig::dalek_default(), None).expect("cluster");
+    // background fabric load: frontend -> the partition's nodes
+    for i in 0..bg_flows {
+        let dst = format!("{PARTITION}-{}", i % 4);
+        c.start_transfer("front", &dst, BG_BYTES).expect("hosts");
+    }
+    let app = AppSpec::allreduce_loop("cnn-train", WORK_S, GRAD_BYTES, ITERS);
+    let t0 = std::time::Instant::now();
+    let id = c
+        .submit(JobSpec::app("root", PARTITION, app, ranks), SimTime::ZERO)
+        .expect("valid app");
+    // drive until the app (not the background bulk) is done
+    let mut horizon = SimTime::from_mins(10);
+    while !c.slurm().job(id).expect("submitted").is_terminal() {
+        c.run_until(horizon, false);
+        horizon += SimTime::from_mins(10);
+        assert!(horizon < SimTime::from_hours(12), "app failed to drain");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let job = c.slurm().job(id).expect("submitted");
+    assert_eq!(job.state, JobState::Completed, "app must complete");
+    Outcome {
+        makespan_s: job.finished.expect("terminal").as_secs_f64(),
+        job_energy_j: job.energy_j,
+        collective_bytes: c.apps().stats.collective_bytes,
+        wall_s,
+    }
+}
+
+fn main() {
+    println!("=== dalek::app — allreduce loop, rank count x fabric load ===\n");
+    println!(
+        "{PARTITION} (5 GbE), {ITERS} iterations of ({WORK_S:.0} s compute + \
+         {} MB allreduce); background = frontend bulk pulls into the same nodes\n",
+        GRAD_BYTES / 1_000_000
+    );
+
+    let mut t = Table::new(&[
+        "ranks",
+        "bg flows",
+        "makespan (s)",
+        "job energy (kJ)",
+        "collective (GB)",
+        "sim wall (s)",
+    ])
+    .title("BSP barrier under contention")
+    .left(0);
+    for ranks in [2u32, 3, 4] {
+        for bg in [0u32, 2, 4, 8] {
+            let r = run(ranks, bg);
+            t.row(&[
+                ranks.to_string(),
+                bg.to_string(),
+                format!("{:.1}", r.makespan_s),
+                format!("{:.1}", r.job_energy_j / 1e3),
+                format!("{:.2}", r.collective_bytes / 1e9),
+                format!("{:.3}", r.wall_s),
+            ]);
+        }
+    }
+    t.print();
+    println!();
+
+    // event-rate overhead: the contended 4-rank case, timed
+    let r = benchkit::bench("appmodel/replay(4 ranks, 4 bg flows)", 1, 5, || {
+        let o = run(4, 4);
+        std::hint::black_box(o.makespan_s);
+    });
+    println!(
+        "simulated-hour speedup vs wall clock: {:.0}x\n",
+        3600.0 / (r.summary.p50 / 1e9)
+    );
+}

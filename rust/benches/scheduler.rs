@@ -20,6 +20,7 @@ fn day_of_jobs(n: u64) -> Vec<(SimTime, JobSpec)> {
                 time_limit: SimTime::from_mins(30),
                 payload: None,
                 activity: Activity::cpu_only(0.9),
+                app: None,
             };
             (SimTime::from_secs(i * 97), spec)
         })

@@ -18,7 +18,7 @@
 //!
 //! ## The unified kernel
 //!
-//! All time advancement happens on one [`sim::Kernel`] owned here. The
+//! All time advancement happens on one [`sim::Kernel`](crate::sim::Kernel) owned here. The
 //! routing enum [`ClusterEvent`] carries every subsystem's events —
 //! scheduler boot/shutdown/suspend/job timers, network flow
 //! completions, service ticks — and [`ClusterApi::run_until`] is the
@@ -34,6 +34,7 @@
 use super::error::DalekError;
 use super::protocol::{JobRequest, JobView, Request, Response};
 use super::session::{Session, SessionId, SessionManager};
+use crate::app::{AppEngine, AppEvent};
 use crate::config::cluster::resolve_partition;
 use crate::config::ClusterConfig;
 use crate::energy::api::PowerAction;
@@ -58,6 +59,8 @@ pub enum ClusterEvent {
     Service(ServiceEvent),
     Net(NetEvent),
     Policy(PolicyEvent),
+    /// `dalek::app` BSP barrier timers (compute-phase rank completions)
+    App(AppEvent),
 }
 
 impl From<SchedEvent> for ClusterEvent {
@@ -78,6 +81,11 @@ impl From<NetEvent> for ClusterEvent {
 impl From<PolicyEvent> for ClusterEvent {
     fn from(e: PolicyEvent) -> Self {
         ClusterEvent::Policy(e)
+    }
+}
+impl From<AppEvent> for ClusterEvent {
+    fn from(e: AppEvent) -> Self {
+        ClusterEvent::App(e)
     }
 }
 
@@ -146,6 +154,9 @@ pub struct ClusterApi {
     services: ServiceRack,
     topo: Topology,
     net: FlowNet,
+    /// executes `dalek::app` programs: compute barriers on the kernel,
+    /// collective phases lowered onto the flow network
+    apps: AppEngine,
     users: UserDb,
     sessions: SessionManager,
     runtime: Option<PjRtRuntime>,
@@ -218,6 +229,7 @@ impl ClusterApi {
             services,
             topo,
             net,
+            apps: AppEngine::new(),
             users,
             sessions,
             runtime,
@@ -312,6 +324,11 @@ impl ClusterApi {
         &self.net
     }
 
+    /// Read-only view of the app engine (`dalek::app` programs).
+    pub fn apps(&self) -> &AppEngine {
+        &self.apps
+    }
+
     pub fn has_runtime(&self) -> bool {
         self.runtime.is_some()
     }
@@ -337,11 +354,31 @@ impl ClusterApi {
     /// matter who drives the clock.
     fn drive(&mut self, t: SimTime) {
         self.apply_power_actions();
+        // app notices may be queued from a submission that started a
+        // job before any event fired
+        self.pump_apps();
         while let Some((now, ev)) = self.kernel.pop_due(t) {
             self.dispatch(now, ev);
+            // any event can start an app job (boot completions, job
+            // completions freeing nodes) or reprice one (governor
+            // ticks): hand the notices to the engine at this timestamp
+            self.pump_apps();
         }
         self.kernel.advance_to(t);
         self.slurm.ctl.sync_clock(self.kernel.now());
+    }
+
+    /// Drain the scheduler's app notices into the engine at the
+    /// kernel's current time.
+    fn pump_apps(&mut self) {
+        let now = self.kernel.now();
+        self.apps.pump(
+            &mut self.slurm.ctl,
+            &mut self.net,
+            &self.topo,
+            &mut self.kernel,
+            now,
+        );
     }
 
     fn dispatch(&mut self, now: SimTime, ev: ClusterEvent) {
@@ -355,9 +392,28 @@ impl ClusterApi {
                     .on_event(&mut self.kernel, e, now, &self.slurm.ctl)
             }
             ClusterEvent::Net(_) => {
-                self.net.on_event(&mut self.kernel, now);
+                let done = self.net.on_event(&mut self.kernel, now);
+                if !done.is_empty() {
+                    // a drained collective flow may complete a BSP phase
+                    self.apps.on_flows_done(
+                        &mut self.slurm.ctl,
+                        &mut self.net,
+                        &self.topo,
+                        &mut self.kernel,
+                        &done,
+                        now,
+                    );
+                }
             }
             ClusterEvent::Policy(PolicyEvent::GovernorTick) => self.on_governor_tick(now),
+            ClusterEvent::App(e) => self.apps.on_event(
+                &mut self.slurm.ctl,
+                &mut self.net,
+                &self.topo,
+                &mut self.kernel,
+                e,
+                now,
+            ),
         }
     }
 
@@ -429,8 +485,11 @@ impl ClusterApi {
         if req.nodes == 0 {
             return Err(DalekError::BadRequest("`nodes` must be at least 1".into()));
         }
-        match &req.payload {
-            Some(payload) => {
+        match (&req.payload, &req.app) {
+            (Some(_), Some(_)) => Err(DalekError::BadRequest(
+                "a job cannot carry both a `payload` and an `app` program".into(),
+            )),
+            (Some(payload), None) => {
                 // duration comes from the payload grounding, but an
                 // explicit client time limit is still honored
                 let mut spec =
@@ -440,7 +499,22 @@ impl ClusterApi {
                 }
                 Ok(spec)
             }
-            None => Ok(JobSpec {
+            (None, Some(app)) => {
+                // the work ledger comes from the program (validated
+                // against the rank count at submission); a stated
+                // duration would be silently dropped, so refuse it
+                if req.duration != SimTime::ZERO {
+                    return Err(DalekError::BadRequest(
+                        "app jobs derive their work from the program; omit `duration_s`".into(),
+                    ));
+                }
+                let mut spec = JobSpec::app(owner, &req.partition, app.clone(), req.nodes);
+                if let Some(tl) = req.time_limit {
+                    spec.time_limit = tl;
+                }
+                Ok(spec)
+            }
+            (None, None) => Ok(JobSpec {
                 user: owner.into(),
                 partition: req.partition.clone(),
                 nodes: req.nodes,
@@ -453,6 +527,7 @@ impl ClusterApi {
                 )),
                 payload: None,
                 activity: Activity::cpu_only(0.95),
+                app: None,
             }),
         }
     }
@@ -517,6 +592,7 @@ impl ClusterApi {
             time_limit: duration + SimTime::from_mins(10),
             payload: Some(payload.into()),
             activity,
+            app: None,
         })
     }
 
@@ -534,7 +610,9 @@ impl ClusterApi {
         self.users.user(&spec.user)?; // owner must exist
         // drain events due before the submission instant, then queue
         self.drive(now.max(self.now()));
-        Ok(self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?)
+        let id = self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?;
+        self.pump_apps(); // the job may have started on warm nodes
+        Ok(id)
     }
 
     fn request_as(
@@ -546,7 +624,9 @@ impl ClusterApi {
         let owner = self.owner_for(sess, &req.user)?;
         let spec = self.spec_from_request(&owner, req)?;
         self.drive(now.max(self.now()));
-        Ok(self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?)
+        let id = self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?;
+        self.pump_apps(); // the job may have started on warm nodes
+        Ok(id)
     }
 
     /// sbatch through a session: queue and return the job id. The spec's
@@ -887,6 +967,32 @@ impl ClusterApi {
         &mut self.governor
     }
 
+    /// Operator-level §3.6 knob actuation on one node (the governor's
+    /// mechanism, exposed for heterogeneity experiments): RAPL package
+    /// cap, dGPU cap (`None` clears), Powersave toggle. Reprices the
+    /// running job; for a phase-structured job the app engine re-arms
+    /// the current compute barrier at the new per-rank rates — a
+    /// single capped rank delays the whole barrier.
+    pub fn apply_power_knobs(
+        &mut self,
+        node: &str,
+        cpu_cap: Option<f64>,
+        gpu_cap: Option<f64>,
+        powersave: bool,
+    ) -> Result<(), DalekError> {
+        let idx = self.slurm.ctl.node_index(node).ok_or_else(|| {
+            DalekError::Slurm(crate::slurm::scheduler::SlurmError::UnknownNode(
+                node.into(),
+            ))
+        })?;
+        let now = self.now();
+        self.slurm
+            .ctl
+            .apply_power_knobs(&mut self.kernel, idx, cpu_cap, gpu_cap, powersave, now);
+        self.pump_apps(); // deliver the reprice notice to the engine
+        Ok(())
+    }
+
     // -----------------------------------------------------------------
     // network (operator surface)
     // -----------------------------------------------------------------
@@ -968,6 +1074,7 @@ impl ClusterApi {
             payload: Some(payload.into()),
             iters,
             user: Some(user.into()),
+            app: None,
         };
         self.request_as(&root, &req, now)
     }
@@ -1311,6 +1418,7 @@ mod tests {
             payload: None,
             iters: 1,
             user: None,
+            app: None,
         };
         let id = c.submit_request(sid, &req, SimTime::ZERO).unwrap();
         c.run_until(SimTime::from_mins(10), false);
@@ -1339,6 +1447,7 @@ mod tests {
             payload: None,
             iters: 1,
             user: Some("bob".into()),
+            app: None,
         };
         assert!(matches!(
             c.submit_request(sid, &req, SimTime::ZERO),
@@ -1483,6 +1592,7 @@ mod tests {
             payload: None,
             iters: 1,
             user: None,
+            app: None,
         };
         c.submit_request(alice, &blocker, SimTime::ZERO).unwrap();
         // the partition is fully reserved, so this one stays Pending
@@ -1520,6 +1630,7 @@ mod tests {
             payload: None,
             iters: 1,
             user: None,
+            app: None,
         };
         let e = c.run_request(sid, &req, SimTime::ZERO);
         let Err(DalekError::Deadline(id)) = e else {
@@ -1578,6 +1689,7 @@ mod tests {
             payload: None,
             iters: 1,
             user: None,
+            app: None,
         };
         let (id, nodes) = c.alloc_request(sid, &req, SimTime::ZERO).unwrap();
         assert_eq!(nodes.len(), 2);
@@ -1697,6 +1809,7 @@ mod tests {
             payload: None,
             iters: 1,
             user: None,
+            app: None,
         };
         let id = c.submit_request(alice, &req, SimTime::ZERO).unwrap();
         c.run_until(SimTime::from_mins(10), false);

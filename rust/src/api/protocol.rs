@@ -24,6 +24,7 @@
 
 use super::error::DalekError;
 use super::session::SessionId;
+use crate::app::{AppSpec, Collective, PhaseSpec};
 use crate::energy::Sample;
 use crate::sim::SimTime;
 use crate::slurm::{JobId, JobState};
@@ -45,6 +46,12 @@ pub struct JobRequest {
     /// simulated iterations for payload jobs
     pub iters: u64,
     pub user: Option<String>,
+    /// phase-structured program (`dalek::app`): `"app": {"phases":
+    /// [{"compute_s": 30}, {"collective": "allreduce", "bytes": ...}],
+    /// "iterations": 8}`. Mutually exclusive with `payload`; the job's
+    /// work ledger is derived from the program, so `duration_s` is
+    /// optional
+    pub app: Option<AppSpec>,
 }
 
 /// Every operation a user can request.
@@ -253,13 +260,73 @@ fn secs(v: f64) -> Result<SimTime, DalekError> {
     Ok(SimTime::from_secs_f64(v))
 }
 
+/// Decode one `{"collective": ..., "bytes": ...}` phase object.
+fn collective(o: &Json) -> Result<Collective, DalekError> {
+    let kind = need_str(o, "collective")?;
+    let bytes = need_safe_u64(o, "bytes")?;
+    Ok(match kind.as_str() {
+        "bcast" => Collective::Bcast {
+            root: opt_narrow(o, "root", 0u32)?,
+            bytes,
+        },
+        "allreduce" => Collective::Allreduce { bytes },
+        "alltoall" => Collective::AllToAll { bytes },
+        "halo" => Collective::Halo { bytes },
+        "p2p" => Collective::PointToPoint {
+            from: need_u32(o, "from")?,
+            to: need_u32(o, "to")?,
+            bytes,
+        },
+        "nfs_pull" => Collective::NfsPull { bytes },
+        other => {
+            return Err(bad(format!(
+                "unknown collective `{other}` \
+                 (bcast | allreduce | alltoall | halo | p2p | nfs_pull)"
+            )))
+        }
+    })
+}
+
+/// Decode an `"app"` program object.
+fn app_spec(o: &Json) -> Result<AppSpec, DalekError> {
+    let phases_json = o
+        .get("phases")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("app needs a `phases` array"))?;
+    let mut phases = Vec::with_capacity(phases_json.len());
+    for p in phases_json {
+        if let Some(w) = p.get("compute_s").and_then(Json::as_f64) {
+            if !w.is_finite() || w < 0.0 {
+                return Err(bad(format!("`compute_s` = {w} must be finite and >= 0")));
+            }
+            phases.push(PhaseSpec::Compute { work_s: w });
+        } else {
+            phases.push(PhaseSpec::Collective(collective(p)?));
+        }
+    }
+    Ok(AppSpec {
+        name: o
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("app")
+            .to_string(),
+        phases,
+        iterations: opt_narrow(o, "iterations", 1u32)?,
+    })
+}
+
 fn job_request(o: &Json) -> Result<JobRequest, DalekError> {
     let payload = o.get("payload").and_then(Json::as_str).map(str::to_string);
-    // payload jobs are sized from the artifact grounding, so their
-    // duration is optional on the wire; synthetic jobs must state one
+    let app = match o.get("app") {
+        None | Some(Json::Null) => None,
+        Some(a) => Some(app_spec(a)?),
+    };
+    // payload jobs are sized from the artifact grounding and app jobs
+    // from their program, so their duration is optional on the wire;
+    // synthetic jobs must state one
     let duration = match o.get("duration_s").and_then(Json::as_f64) {
         Some(v) => secs(v)?,
-        None if payload.is_some() => SimTime::ZERO,
+        None if payload.is_some() || app.is_some() => SimTime::ZERO,
         None => return Err(bad("missing number field `duration_s`")),
     };
     Ok(JobRequest {
@@ -273,6 +340,7 @@ fn job_request(o: &Json) -> Result<JobRequest, DalekError> {
         payload,
         iters: safe_u64(o, "iters", 1)?,
         user: o.get("user").and_then(Json::as_str).map(str::to_string),
+        app,
     })
 }
 
@@ -408,6 +476,9 @@ impl Request {
             if let Some(u) = &r.user {
                 push("user", Json::from(u.as_str()));
             }
+            if let Some(a) = &r.app {
+                push("app", app_json(a));
+            }
         };
         let op = match self {
             Request::Login { user } => {
@@ -510,6 +581,37 @@ impl Request {
         }
         Json::object(fields)
     }
+}
+
+/// Encode an app program as its wire object.
+fn app_json(a: &AppSpec) -> Json {
+    let phases = a.phases.iter().map(|p| match p {
+        PhaseSpec::Compute { work_s } => Json::object([("compute_s", Json::from(*work_s))]),
+        PhaseSpec::Collective(c) => {
+            let mut fields: Vec<(&str, Json)> = vec![("collective", Json::from(c.name()))];
+            match *c {
+                Collective::Bcast { root, bytes } => {
+                    fields.push(("root", Json::from(root)));
+                    fields.push(("bytes", Json::from(bytes)));
+                }
+                Collective::Allreduce { bytes }
+                | Collective::AllToAll { bytes }
+                | Collective::Halo { bytes }
+                | Collective::NfsPull { bytes } => fields.push(("bytes", Json::from(bytes))),
+                Collective::PointToPoint { from, to, bytes } => {
+                    fields.push(("from", Json::from(from)));
+                    fields.push(("to", Json::from(to)));
+                    fields.push(("bytes", Json::from(bytes)));
+                }
+            }
+            Json::object(fields)
+        }
+    });
+    Json::object([
+        ("name", Json::from(a.name.as_str())),
+        ("iterations", Json::from(a.iterations)),
+        ("phases", Json::array(phases)),
+    ])
 }
 
 fn sample_json(s: &Sample) -> Json {
@@ -712,6 +814,7 @@ mod tests {
             payload: Some("gemm256".into()),
             iters: 50_000,
             user: None,
+            app: None,
         });
         let wire = req.to_json(Some(SessionId(7))).to_string();
         let (sid, back) = Request::parse(&wire).unwrap();
@@ -735,6 +838,7 @@ mod tests {
                 payload: None,
                 iters: 1,
                 user: Some("carol".into()),
+                app: None,
             }),
             Request::AllocNodes(JobRequest {
                 partition: "iml-ia770".into(),
@@ -744,6 +848,7 @@ mod tests {
                 payload: None,
                 iters: 7, // non-payload iters must round-trip too
                 user: None,
+                app: None,
             }),
             Request::JobInfo { job: JobId(4) },
             Request::CancelJob { job: JobId(5) },
@@ -798,6 +903,78 @@ mod tests {
             assert_eq!(sid, Some(SessionId(1)), "{wire}");
             assert_eq!(back, req, "{wire}");
         }
+    }
+
+    #[test]
+    fn app_requests_round_trip_and_validate() {
+        // every collective survives the wire
+        let app = AppSpec::new(
+            "cnn-train",
+            vec![
+                PhaseSpec::Compute { work_s: 30.0 },
+                PhaseSpec::Collective(Collective::Allreduce { bytes: 64_000_000 }),
+                PhaseSpec::Collective(Collective::Bcast {
+                    root: 1,
+                    bytes: 1_000,
+                }),
+                PhaseSpec::Collective(Collective::AllToAll { bytes: 2_000 }),
+                PhaseSpec::Collective(Collective::Halo { bytes: 3_000 }),
+                PhaseSpec::Collective(Collective::PointToPoint {
+                    from: 0,
+                    to: 3,
+                    bytes: 4_000,
+                }),
+                PhaseSpec::Collective(Collective::NfsPull { bytes: 5_000 }),
+            ],
+            8,
+        );
+        let req = Request::SubmitJob(JobRequest {
+            partition: "az4-n4090".into(),
+            nodes: 4,
+            duration: SimTime::ZERO,
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: None,
+            app: Some(app),
+        });
+        let wire = req.to_json(Some(SessionId(3))).to_string();
+        let (sid, back) = Request::parse(&wire).unwrap_or_else(|e| panic!("{wire}: {e}"));
+        assert_eq!(sid, Some(SessionId(3)));
+        assert_eq!(back, req);
+
+        // app jobs need no duration_s; phases are required
+        let (_, req) = Request::parse(
+            r#"{"op": "submit_job", "session": 1, "partition": "az5-a890m", "nodes": 2,
+                "app": {"phases": [{"compute_s": 10},
+                                   {"collective": "allreduce", "bytes": 1000}]}}"#,
+        )
+        .unwrap();
+        let Request::SubmitJob(r) = req else {
+            panic!("expected SubmitJob")
+        };
+        let app = r.app.expect("app decoded");
+        assert_eq!(app.iterations, 1); // default
+        assert_eq!(app.phases.len(), 2);
+        assert_eq!(r.duration, SimTime::ZERO);
+        assert!(matches!(
+            Request::parse(r#"{"op": "submit_job", "partition": "p", "nodes": 2, "app": {}}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(
+                r#"{"op": "submit_job", "partition": "p", "nodes": 2,
+                    "app": {"phases": [{"collective": "warp", "bytes": 1}]}}"#
+            ),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(
+                r#"{"op": "submit_job", "partition": "p", "nodes": 2,
+                    "app": {"phases": [{"compute_s": -1}]}}"#
+            ),
+            Err(DalekError::BadRequest(_))
+        ));
     }
 
     #[test]

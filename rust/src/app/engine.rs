@@ -1,0 +1,535 @@
+//! The app engine: executes [`AppSpec`] programs on the cluster
+//! kernel, one BSP phase at a time.
+//!
+//! The engine lives at the `dalek::api` layer because a phase needs
+//! both halves of the cluster: compute phases read per-node rates from
+//! the scheduler (so §3.6 caps genuinely slow individual ranks), and
+//! communication phases lower onto the flow network between the job's
+//! hosts. The scheduler itself stays clockless and app-agnostic — it
+//! publishes [`AppNotice`]s (job started / knobs changed) that the
+//! dispatcher drains into the engine after every event, and the engine
+//! hands completed programs back through `Slurm::finish_app_job`.
+//!
+//! Phase mechanics:
+//!
+//! * **Compute** — every rank owes `work_s` seconds of nominal work,
+//!   progressing at its own node's relative rate. The engine arms one
+//!   kernel timer ([`AppEvent::RankDue`]) for the *earliest* rank
+//!   completion; when it fires, finished ranks drop to barrier-wait
+//!   (idle draw) and the timer re-arms for the next rank. A §3.6 knob
+//!   change mid-phase accrues every rank's ledger at the old rate and
+//!   re-arms — exactly the scheduler's repricing model, per rank.
+//! * **Collective** — the phase's lowered flows start concurrently,
+//!   tagged with the job id; every rank drops to NIC-level draw
+//!   ([`COMM_ACTIVITY`]). The phase ends when the last flow drains —
+//!   fabric contention from other jobs directly stretches the barrier.
+//!
+//! A program with one compute phase and no collectives reproduces the
+//! classic fixed-work path bit-for-bit (same completion timestamp, same
+//! power transitions), which the regression suite pins down.
+//!
+//! # Example: a two-node allreduce loop, end to end
+//!
+//! ```
+//! use dalek::api::ClusterApi;
+//! use dalek::app::AppSpec;
+//! use dalek::config::ClusterConfig;
+//! use dalek::sim::SimTime;
+//! use dalek::slurm::{JobSpec, JobState};
+//!
+//! let mut c = ClusterApi::new(ClusterConfig::dalek_default(), None).unwrap();
+//! // 3 iterations of (10 s compute, 10 MB gradient allreduce) on 2 ranks
+//! let app = AppSpec::allreduce_loop("demo", 10.0, 10_000_000, 3);
+//! let id = c
+//!     .submit(JobSpec::app("root", "az5-a890m", app, 2), SimTime::ZERO)
+//!     .unwrap();
+//! c.run_until(SimTime::from_mins(10), false);
+//! let job = c.slurm().job(id).unwrap();
+//! assert_eq!(job.state, JobState::Completed);
+//! // wall time = 3 x (compute + ring exchange), gated by the barrier
+//! assert!(job.run_time().unwrap() > SimTime::from_secs(30));
+//! assert_eq!(c.apps().stats.apps_completed, 1);
+//! ```
+//!
+//! [`AppNotice`]: crate::slurm::AppNotice
+//! [`COMM_ACTIVITY`]: super::COMM_ACTIVITY
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{AppSpec, Peer, PhaseSpec, COMM_ACTIVITY};
+use crate::net::{FlowId, FlowNet, NetEvent, Topology};
+use crate::power::Activity;
+use crate::sim::{Kernel, ScheduledId, SimTime};
+use crate::slurm::{AppNotice, JobId, SchedEvent, Slurm};
+
+/// Kernel events of the app layer, routed by the `dalek::api`
+/// dispatcher.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppEvent {
+    /// the earliest not-yet-finished rank of a compute phase is due
+    RankDue(JobId),
+}
+
+/// Observability counters of the engine.
+#[derive(Clone, Debug, Default)]
+pub struct AppStats {
+    pub apps_started: u64,
+    pub apps_completed: u64,
+    /// BSP phases completed across all apps (compute and collective)
+    pub phases_completed: u64,
+    /// flows the collective lowerings put on the fabric
+    pub collective_flows: u64,
+    /// bytes those flows carried
+    pub collective_bytes: f64,
+}
+
+/// One rank's runtime state.
+struct RankState {
+    /// index into the scheduler's node table
+    node_idx: usize,
+    /// the node's endpoint on the flow network
+    host: crate::net::HostId,
+    /// nominal work completed in the current compute phase, seconds
+    work_done_s: f64,
+    /// relative execution rate under the node's current §3.6 knobs
+    rate: f64,
+    /// when the ledger was last accrued
+    last_change: SimTime,
+    /// this rank reached the current barrier
+    done: bool,
+}
+
+/// One running program.
+struct AppRun {
+    spec: AppSpec,
+    /// the job's compute activity (what compute phases draw)
+    compute_act: Activity,
+    ranks: Vec<RankState>,
+    iter: u32,
+    phase: usize,
+    /// nominal work of the current compute phase, seconds
+    cur_work_s: f64,
+    /// armed barrier timer of the current compute phase
+    timer: Option<ScheduledId>,
+    /// outstanding flows of the current collective phase
+    pending: BTreeSet<FlowId>,
+}
+
+enum Step {
+    Finish,
+    Compute(f64),
+    Collective(super::Collective),
+}
+
+/// The engine. One per cluster, owned by `dalek::api::ClusterApi`.
+#[derive(Default)]
+pub struct AppEngine {
+    runs: BTreeMap<JobId, AppRun>,
+    /// owner of every in-flight collective flow, across all apps
+    flow_owner: BTreeMap<FlowId, JobId>,
+    pub stats: AppStats,
+}
+
+impl AppEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Programs currently executing.
+    pub fn active_apps(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Outstanding collective flows across all programs.
+    pub fn in_flight_flows(&self) -> usize {
+        self.flow_owner.len()
+    }
+
+    /// Drain the scheduler's app notices until quiescent: begin
+    /// programs for jobs that started, re-arm barriers for jobs whose
+    /// nodes' knobs changed. Called by the dispatcher after every
+    /// event and every submission; completing a program can start the
+    /// next queued job, so this loops until no notice is left.
+    pub fn pump<E>(
+        &mut self,
+        slurm: &mut Slurm,
+        net: &mut FlowNet,
+        topo: &Topology,
+        kernel: &mut Kernel<E>,
+        now: SimTime,
+    ) where
+        E: From<SchedEvent> + From<NetEvent> + From<AppEvent>,
+    {
+        loop {
+            let notices = slurm.take_app_notices();
+            if notices.is_empty() {
+                return;
+            }
+            for n in notices {
+                match n {
+                    AppNotice::Started(id) => self.begin(slurm, net, topo, kernel, id, now),
+                    AppNotice::Repriced(id) => self.repriced(slurm, kernel, id, now),
+                }
+            }
+        }
+    }
+
+    /// Route a due [`AppEvent`]: the earliest rank of a compute phase
+    /// reached the barrier.
+    pub fn on_event<E>(
+        &mut self,
+        slurm: &mut Slurm,
+        net: &mut FlowNet,
+        topo: &Topology,
+        kernel: &mut Kernel<E>,
+        ev: AppEvent,
+        now: SimTime,
+    ) where
+        E: From<SchedEvent> + From<NetEvent> + From<AppEvent>,
+    {
+        let AppEvent::RankDue(id) = ev;
+        let Some(run) = self.runs.get_mut(&id) else {
+            return;
+        };
+        run.timer = None;
+        let work_s = run.cur_work_s;
+        // accrue every unfinished rank's ledger up to the barrier check
+        for r in run.ranks.iter_mut().filter(|r| !r.done) {
+            r.work_done_s += now.since(r.last_change).as_secs_f64() * r.rate;
+            r.last_change = now;
+        }
+        // mark ranks that completed their share (ns-grid + fp slack)
+        let mut newly: Vec<usize> = Vec::new();
+        for (i, r) in run.ranks.iter().enumerate() {
+            if !r.done {
+                let tol = r.rate * 2e-9 + 1e-9;
+                if r.work_done_s >= work_s - tol {
+                    newly.push(i);
+                }
+            }
+        }
+        if newly.is_empty() {
+            // fp shortfall on the due rank: force the closest one so the
+            // barrier always makes progress
+            if let Some((i, _)) = run
+                .ranks
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| !r.done)
+                .min_by(|a, b| {
+                    let ra = work_s - a.1.work_done_s;
+                    let rb = work_s - b.1.work_done_s;
+                    ra.total_cmp(&rb)
+                })
+            {
+                newly.push(i);
+            }
+        }
+        let mut waiting_nodes: Vec<usize> = Vec::new();
+        for &i in &newly {
+            run.ranks[i].done = true;
+            waiting_nodes.push(run.ranks[i].node_idx);
+        }
+        let all_done = run.ranks.iter().all(|r| r.done);
+        if all_done {
+            // barrier reached — the next phase sets fresh activities
+            self.stats.phases_completed += 1;
+            let run = self.runs.get_mut(&id).expect("checked above");
+            run.phase += 1;
+            self.enter_phase(slurm, net, topo, kernel, id, now);
+        } else {
+            // finished ranks wait at the barrier drawing idle power
+            // (the straggler effect, visible in the energy signal)
+            for idx in waiting_nodes {
+                slurm.set_node_activity(idx, Some(Activity::idle()), now);
+            }
+            self.arm_timer(kernel, id, now);
+        }
+    }
+
+    /// Feed completed network flows to the programs that own them; a
+    /// collective phase ends when its last flow drains.
+    pub fn on_flows_done<E>(
+        &mut self,
+        slurm: &mut Slurm,
+        net: &mut FlowNet,
+        topo: &Topology,
+        kernel: &mut Kernel<E>,
+        done: &[FlowId],
+        now: SimTime,
+    ) where
+        E: From<SchedEvent> + From<NetEvent> + From<AppEvent>,
+    {
+        let mut ready: Vec<JobId> = Vec::new();
+        for fid in done {
+            let Some(id) = self.flow_owner.remove(fid) else {
+                continue;
+            };
+            let Some(run) = self.runs.get_mut(&id) else {
+                continue;
+            };
+            run.pending.remove(fid);
+            if run.pending.is_empty() {
+                ready.push(id);
+            }
+        }
+        for id in ready {
+            self.stats.phases_completed += 1;
+            if let Some(run) = self.runs.get_mut(&id) {
+                run.phase += 1;
+            }
+            self.enter_phase(slurm, net, topo, kernel, id, now);
+        }
+    }
+
+    // -- internals -----------------------------------------------------------
+
+    /// Start the program of a job that just began running.
+    fn begin<E>(
+        &mut self,
+        slurm: &mut Slurm,
+        net: &mut FlowNet,
+        topo: &Topology,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) where
+        E: From<SchedEvent> + From<NetEvent> + From<AppEvent>,
+    {
+        let (spec, compute_act, allocated) = {
+            let Some(job) = slurm.job(id) else { return };
+            let Some(app) = job.spec.app.clone() else {
+                return;
+            };
+            (app, job.spec.activity, job.allocated.clone())
+        };
+        let ranks: Vec<RankState> = allocated
+            .iter()
+            .map(|&i| {
+                let fqdn = format!("{}.dalek", slurm.node_name(i));
+                RankState {
+                    node_idx: i,
+                    host: topo
+                        .by_name(&fqdn)
+                        .expect("every scheduler node is a topology host"),
+                    work_done_s: 0.0,
+                    rate: 1.0,
+                    last_change: now,
+                    done: false,
+                }
+            })
+            .collect();
+        self.stats.apps_started += 1;
+        self.runs.insert(
+            id,
+            AppRun {
+                spec,
+                compute_act,
+                ranks,
+                iter: 0,
+                phase: 0,
+                cur_work_s: 0.0,
+                timer: None,
+                pending: BTreeSet::new(),
+            },
+        );
+        self.enter_phase(slurm, net, topo, kernel, id, now);
+    }
+
+    /// Enter the run's current phase, skipping empty ones; completes
+    /// the job when the program is exhausted.
+    fn enter_phase<E>(
+        &mut self,
+        slurm: &mut Slurm,
+        net: &mut FlowNet,
+        topo: &Topology,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) where
+        E: From<SchedEvent> + From<NetEvent> + From<AppEvent>,
+    {
+        // phases that arm nothing (zero work, collectives that lower to
+        // nothing) complete instantly. The program is constant across
+        // iterations, so once a whole iteration's worth of consecutive
+        // phases is empty, every remaining iteration is empty too —
+        // complete the job now instead of walking a potentially huge
+        // iteration count synchronously inside the dispatch loop.
+        let phase_count = self.runs.get(&id).map_or(1, |r| r.spec.phases.len());
+        let mut empty_streak = 0usize;
+        loop {
+            if empty_streak >= phase_count {
+                self.finish(slurm, net, kernel, id, now);
+                return;
+            }
+            let step = {
+                let run = self.runs.get_mut(&id).expect("run exists while stepping");
+                if run.phase >= run.spec.phases.len() {
+                    run.phase = 0;
+                    run.iter += 1;
+                }
+                if run.iter >= run.spec.iterations {
+                    Step::Finish
+                } else {
+                    match run.spec.phases[run.phase] {
+                        PhaseSpec::Compute { work_s } => Step::Compute(work_s),
+                        PhaseSpec::Collective(c) => Step::Collective(c),
+                    }
+                }
+            };
+            match step {
+                Step::Finish => {
+                    self.finish(slurm, net, kernel, id, now);
+                    return;
+                }
+                Step::Compute(work_s) => {
+                    if work_s <= 0.0 {
+                        self.bump_phase(id);
+                        empty_streak += 1;
+                        continue;
+                    }
+                    let run = self.runs.get_mut(&id).expect("run exists");
+                    run.cur_work_s = work_s;
+                    let act = run.compute_act;
+                    for r in run.ranks.iter_mut() {
+                        r.work_done_s = 0.0;
+                        r.rate = slurm.node_rate(r.node_idx, act);
+                        r.last_change = now;
+                        r.done = false;
+                        // back to the job's own compute profile
+                        slurm.set_node_activity(r.node_idx, None, now);
+                    }
+                    self.arm_timer(kernel, id, now);
+                    return;
+                }
+                Step::Collective(c) => {
+                    let (hosts, node_idxs): (Vec<crate::net::HostId>, Vec<usize>) = {
+                        let run = &self.runs[&id];
+                        (
+                            run.ranks.iter().map(|r| r.host).collect(),
+                            run.ranks.iter().map(|r| r.node_idx).collect(),
+                        )
+                    };
+                    let flows = c.lower(hosts.len() as u32);
+                    if flows.is_empty() {
+                        self.bump_phase(id);
+                        empty_streak += 1;
+                        continue;
+                    }
+                    // every rank drops to NIC-level draw for the phase
+                    for &idx in &node_idxs {
+                        slurm.set_node_activity(idx, Some(COMM_ACTIVITY), now);
+                    }
+                    let endpoint = |p: Peer| match p {
+                        Peer::Rank(r) => hosts[r as usize],
+                        Peer::Frontend => topo.frontend(),
+                    };
+                    let mut started: Vec<FlowId> = Vec::with_capacity(flows.len());
+                    for f in &flows {
+                        let fid = net.start_tagged_flow_on(
+                            kernel,
+                            endpoint(f.src),
+                            endpoint(f.dst),
+                            f.bytes,
+                            id.0,
+                        );
+                        started.push(fid);
+                        self.stats.collective_flows += 1;
+                        self.stats.collective_bytes += f.bytes as f64;
+                    }
+                    let run = self.runs.get_mut(&id).expect("run exists");
+                    for fid in started {
+                        run.pending.insert(fid);
+                        self.flow_owner.insert(fid, id);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Advance past an empty phase (no timer, no flows).
+    fn bump_phase(&mut self, id: JobId) {
+        self.stats.phases_completed += 1;
+        if let Some(run) = self.runs.get_mut(&id) {
+            run.phase += 1;
+        }
+    }
+
+    /// (Re-)arm the compute-phase barrier timer at the earliest
+    /// unfinished rank's completion under current rates.
+    fn arm_timer<E>(&mut self, kernel: &mut Kernel<E>, id: JobId, now: SimTime)
+    where
+        E: From<AppEvent>,
+    {
+        let Some(run) = self.runs.get_mut(&id) else {
+            return;
+        };
+        if let Some(t) = run.timer.take() {
+            kernel.cancel(t);
+        }
+        let work_s = run.cur_work_s;
+        let mut earliest: Option<SimTime> = None;
+        for r in run.ranks.iter().filter(|r| !r.done) {
+            let remaining = (work_s - r.work_done_s).max(0.0);
+            // rates are floored at the scheduler's MIN_RATE, never zero
+            let at = now + SimTime::from_secs_f64(remaining / r.rate);
+            earliest = Some(match earliest {
+                None => at,
+                Some(e) => e.min(at),
+            });
+        }
+        if let Some(at) = earliest {
+            run.timer = Some(kernel.schedule_at(at, AppEvent::RankDue(id)));
+        }
+    }
+
+    /// A §3.6 knob changed on one of the job's nodes: accrue every
+    /// rank's ledger at its old rate, take the new rates, re-arm.
+    fn repriced<E>(&mut self, slurm: &mut Slurm, kernel: &mut Kernel<E>, id: JobId, now: SimTime)
+    where
+        E: From<AppEvent>,
+    {
+        let Some(run) = self.runs.get_mut(&id) else {
+            return;
+        };
+        if run.timer.is_none() {
+            // collective phase: rates do not gate the barrier
+            return;
+        }
+        let act = run.compute_act;
+        for r in run.ranks.iter_mut().filter(|r| !r.done) {
+            r.work_done_s += now.since(r.last_change).as_secs_f64() * r.rate;
+            r.last_change = now;
+            r.rate = slurm.node_rate(r.node_idx, act);
+        }
+        self.arm_timer(kernel, id, now);
+    }
+
+    /// Program complete: tear down and hand the job back to the
+    /// scheduler's normal completion path (settlement, node release,
+    /// next-job scheduling).
+    fn finish<E>(
+        &mut self,
+        slurm: &mut Slurm,
+        net: &mut FlowNet,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) where
+        E: From<SchedEvent> + From<NetEvent> + From<AppEvent>,
+    {
+        if let Some(run) = self.runs.remove(&id) {
+            if let Some(t) = run.timer {
+                kernel.cancel(t);
+            }
+            // defensive: a finishing program has no flows in flight
+            for fid in run.pending {
+                self.flow_owner.remove(&fid);
+                net.cancel_flow_on(kernel, fid);
+            }
+            self.stats.apps_completed += 1;
+        }
+        slurm.finish_app_job(kernel, id, now);
+    }
+}

@@ -1,0 +1,504 @@
+//! `dalek::app` — phase-structured distributed applications (the
+//! MPI-style workload model of §6.2).
+//!
+//! Classic jobs are opaque `(work, rate)` scalars: nothing
+//! application-shaped ever crosses the 2.5 GbE fabric, so network
+//! contention and heterogeneous stragglers cannot shape runtime or
+//! energy. An [`AppSpec`] replaces the scalar with a *program*: every
+//! rank (one per allocated node) runs the same sequence of alternating
+//! **compute phases** (nominal work in seconds at the node's calibrated
+//! rate — RAPL caps and DVFS genuinely slow individual ranks through
+//! the same `(cap/demand)^(1/3)` model that reprices classic jobs) and
+//! **communication phases** (a small MPI-style collective library
+//! lowered onto `net::flow` max-min fair flows between the job's
+//! hosts), under BSP barrier semantics: a phase ends only when its
+//! slowest rank finishes — heterogeneity, §3.6 power caps and fabric
+//! contention all gate the barrier.
+//!
+//! The program is data ([`AppSpec`], this module); the runtime that
+//! executes it on the cluster kernel is [`AppEngine`] (hosted by
+//! `dalek::api`, which owns both the scheduler and the flow network).
+//! A degenerate program — one compute phase, no collectives — is
+//! bit-identical to a classic fixed-work job.
+//!
+//! # Building a program
+//!
+//! ```
+//! use dalek::app::{AppSpec, Collective, PhaseSpec};
+//!
+//! // a CNN-training-like loop: compute a step, allreduce the gradients
+//! let app = AppSpec::allreduce_loop("cnn-train", 30.0, 64_000_000, 8);
+//! assert_eq!(app.iterations, 8);
+//! assert!(app.validate(4).is_ok());
+//! // per-rank nominal compute work: 8 iterations x 30 s
+//! assert!((app.compute_work_s() - 240.0).abs() < 1e-12);
+//!
+//! // the ring allreduce puts 2*B*(R-1)/R bytes on each rank's uplink
+//! let flows = Collective::Allreduce { bytes: 64_000_000 }.lower(4);
+//! assert_eq!(flows.len(), 4);
+//! assert_eq!(flows[0].bytes, 96_000_000);
+//!
+//! // hand-rolled programs compose phases freely
+//! let stencil = AppSpec::new(
+//!     "stencil",
+//!     vec![
+//!         PhaseSpec::Compute { work_s: 12.0 },
+//!         PhaseSpec::Collective(Collective::Halo { bytes: 4_000_000 }),
+//!     ],
+//!     100,
+//! );
+//! assert!(stencil.validate(4).is_ok());
+//! ```
+//!
+//! # Collective semantics
+//!
+//! Every collective lowers to a set of concurrent fluid flows between
+//! the job's hosts ([`Collective::lower`]); the phase ends when the
+//! last of them drains. The lowerings are the bandwidth-optimal
+//! textbook algorithms at the granularity the flow model can see
+//! (links, not messages):
+//!
+//! * [`Collective::Bcast`] — flat fan-out from the root: `R-1` flows of
+//!   `B` bytes each, all crossing the root's uplink (which is exactly
+//!   the bottleneck a flat broadcast has on a switched fabric).
+//! * [`Collective::Allreduce`] — bandwidth-optimal ring: each rank
+//!   streams `2*B*(R-1)/R` bytes to its ring successor (reduce-scatter
+//!   plus allgather), so uplinks and downlinks are used once each.
+//! * [`Collective::AllToAll`] — the full bipartite exchange: `R*(R-1)`
+//!   flows of `B` bytes (personalized data per pair).
+//! * [`Collective::Halo`] — 1-D ring halo exchange: every rank sends a
+//!   `B`-byte face to each of its two neighbours (on 2 ranks, both
+//!   faces go to the same neighbour).
+//! * [`Collective::PointToPoint`] — one `B`-byte flow between two
+//!   named ranks.
+//! * [`Collective::NfsPull`] — the §3.3 prototyping pattern: every rank
+//!   pulls a `B`-byte shard from the frontend NFS export, contending
+//!   for the frontend's 20 G uplink with every other job's I/O.
+//!
+//! [`Collective::total_bytes`] gives the closed-form fabric bytes of
+//! each lowering; the property suite (`rust/tests/appmodel.rs`) checks
+//! the lowered flows conserve it exactly.
+//!
+//! [`AppEngine`]: engine::AppEngine
+
+pub mod engine;
+
+pub use engine::{AppEngine, AppEvent, AppStats};
+
+use crate::power::Activity;
+
+/// Power profile of a communication phase: the NIC, DMA engines and a
+/// polling core — far below compute draw, slightly above idle. Ranks
+/// waiting at a barrier after finishing their compute share draw
+/// [`Activity::idle`] instead.
+pub const COMM_ACTIVITY: Activity = Activity {
+    cpu: 0.05,
+    dgpu: 0.0,
+    igpu: 0.0,
+};
+
+/// One endpoint of a lowered transfer: a rank of the job, or the
+/// frontend (the NFS server) for the I/O collectives.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Peer {
+    Rank(u32),
+    Frontend,
+}
+
+/// One fluid flow a collective lowers to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct LoweredFlow {
+    pub src: Peer,
+    pub dst: Peer,
+    pub bytes: u64,
+}
+
+/// The MPI-style collective library (see the module docs for the
+/// lowering of each primitive).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Collective {
+    /// root fans `bytes` out to every other rank
+    Bcast { root: u32, bytes: u64 },
+    /// ring allreduce of a `bytes`-sized buffer
+    Allreduce { bytes: u64 },
+    /// personalized all-to-all, `bytes` per rank pair
+    AllToAll { bytes: u64 },
+    /// 1-D ring halo exchange, `bytes` per face
+    Halo { bytes: u64 },
+    /// one `bytes`-sized message between two ranks
+    PointToPoint { from: u32, to: u32, bytes: u64 },
+    /// every rank pulls a `bytes`-sized shard from the frontend NFS
+    NfsPull { bytes: u64 },
+}
+
+impl Collective {
+    /// Wire / display name of the primitive.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Collective::Bcast { .. } => "bcast",
+            Collective::Allreduce { .. } => "allreduce",
+            Collective::AllToAll { .. } => "alltoall",
+            Collective::Halo { .. } => "halo",
+            Collective::PointToPoint { .. } => "p2p",
+            Collective::NfsPull { .. } => "nfs_pull",
+        }
+    }
+
+    /// The concurrent flows this collective lowers to on `ranks` ranks.
+    /// Lowerings never emit a rank-to-itself flow; degenerate cases
+    /// (one rank, a self point-to-point) lower to nothing and the phase
+    /// completes immediately.
+    pub fn lower(&self, ranks: u32) -> Vec<LoweredFlow> {
+        let mut out = Vec::new();
+        match *self {
+            Collective::Bcast { root, bytes } => {
+                for r in 0..ranks {
+                    if r != root {
+                        out.push(LoweredFlow {
+                            src: Peer::Rank(root),
+                            dst: Peer::Rank(r),
+                            bytes,
+                        });
+                    }
+                }
+            }
+            Collective::Allreduce { bytes } => {
+                if ranks >= 2 {
+                    // reduce-scatter + allgather on a ring: every rank
+                    // streams 2*B*(R-1)/R bytes to its successor
+                    let per = (2 * bytes as u128 * (ranks as u128 - 1) / ranks as u128) as u64;
+                    for r in 0..ranks {
+                        out.push(LoweredFlow {
+                            src: Peer::Rank(r),
+                            dst: Peer::Rank((r + 1) % ranks),
+                            bytes: per,
+                        });
+                    }
+                }
+            }
+            Collective::AllToAll { bytes } => {
+                for s in 0..ranks {
+                    for d in 0..ranks {
+                        if s != d {
+                            out.push(LoweredFlow {
+                                src: Peer::Rank(s),
+                                dst: Peer::Rank(d),
+                                bytes,
+                            });
+                        }
+                    }
+                }
+            }
+            Collective::Halo { bytes } => {
+                if ranks >= 2 {
+                    for r in 0..ranks {
+                        // both faces; on 2 ranks the successor and the
+                        // predecessor are the same neighbour
+                        out.push(LoweredFlow {
+                            src: Peer::Rank(r),
+                            dst: Peer::Rank((r + 1) % ranks),
+                            bytes,
+                        });
+                        out.push(LoweredFlow {
+                            src: Peer::Rank(r),
+                            dst: Peer::Rank((r + ranks - 1) % ranks),
+                            bytes,
+                        });
+                    }
+                }
+            }
+            Collective::PointToPoint { from, to, bytes } => {
+                if from != to && from < ranks && to < ranks {
+                    out.push(LoweredFlow {
+                        src: Peer::Rank(from),
+                        dst: Peer::Rank(to),
+                        bytes,
+                    });
+                }
+            }
+            Collective::NfsPull { bytes } => {
+                for r in 0..ranks {
+                    out.push(LoweredFlow {
+                        src: Peer::Frontend,
+                        dst: Peer::Rank(r),
+                        bytes,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Closed-form total bytes the lowering puts on the fabric — the
+    /// conservation figure the property suite checks against the sum of
+    /// [`Collective::lower`]'s flows.
+    pub fn total_bytes(&self, ranks: u32) -> u64 {
+        let r = ranks as u128;
+        let total: u128 = match *self {
+            Collective::Bcast { bytes, .. } => bytes as u128 * r.saturating_sub(1),
+            Collective::Allreduce { bytes } => {
+                if r < 2 {
+                    0
+                } else {
+                    // per-rank share floors first, exactly like lower()
+                    (2 * bytes as u128 * (r - 1) / r) * r
+                }
+            }
+            Collective::AllToAll { bytes } => bytes as u128 * r * r.saturating_sub(1),
+            Collective::Halo { bytes } => {
+                if r < 2 {
+                    0
+                } else {
+                    2 * bytes as u128 * r
+                }
+            }
+            Collective::PointToPoint { from, to, bytes } => {
+                if from != to && from < ranks && to < ranks {
+                    bytes as u128
+                } else {
+                    0
+                }
+            }
+            Collective::NfsPull { bytes } => bytes as u128 * r,
+        };
+        u64::try_from(total).unwrap_or(u64::MAX)
+    }
+
+    /// Check rank references against the job size.
+    pub fn validate(&self, ranks: u32) -> Result<(), String> {
+        match *self {
+            Collective::Bcast { root, .. } if root >= ranks => {
+                Err(format!("bcast root {root} out of range for {ranks} ranks"))
+            }
+            Collective::PointToPoint { from, to, .. } if from >= ranks || to >= ranks => {
+                Err(format!("p2p ranks {from}->{to} out of range for {ranks} ranks"))
+            }
+            Collective::PointToPoint { from, to, .. } if from == to => {
+                Err(format!("p2p from rank {from} to itself"))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// One phase of the per-rank program.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum PhaseSpec {
+    /// `work_s` seconds of nominal compute per rank, rated through the
+    /// node's §3.6 knobs (a capped rank takes `work_s / rate` wall
+    /// seconds); the BSP barrier waits for the slowest rank
+    Compute { work_s: f64 },
+    /// a collective over all ranks; the barrier waits for every lowered
+    /// flow to drain
+    Collective(Collective),
+}
+
+/// A phase-structured distributed application: every rank runs
+/// `phases` in order, `iterations` times, with a BSP barrier between
+/// consecutive phases. Submitted by attaching it to a
+/// [`crate::slurm::JobSpec`] (see [`crate::slurm::JobSpec::app`]) or
+/// over the wire (`"app": {...}` on `submit_job`).
+#[derive(Clone, PartialEq, Debug)]
+pub struct AppSpec {
+    /// label for traces and reports
+    pub name: String,
+    /// the per-rank program, executed in order
+    pub phases: Vec<PhaseSpec>,
+    /// how many times the whole program repeats (at least 1)
+    pub iterations: u32,
+}
+
+impl AppSpec {
+    pub fn new(name: impl Into<String>, phases: Vec<PhaseSpec>, iterations: u32) -> Self {
+        Self {
+            name: name.into(),
+            phases,
+            iterations,
+        }
+    }
+
+    /// CNN-training-like loop: compute a step, ring-allreduce the
+    /// gradients, `iterations` times.
+    pub fn allreduce_loop(
+        name: impl Into<String>,
+        work_s: f64,
+        bytes: u64,
+        iterations: u32,
+    ) -> Self {
+        Self::new(
+            name,
+            vec![
+                PhaseSpec::Compute { work_s },
+                PhaseSpec::Collective(Collective::Allreduce { bytes }),
+            ],
+            iterations,
+        )
+    }
+
+    /// Stencil-like loop: compute a step, exchange both halo faces,
+    /// `iterations` times.
+    pub fn halo_loop(name: impl Into<String>, work_s: f64, bytes: u64, iterations: u32) -> Self {
+        Self::new(
+            name,
+            vec![
+                PhaseSpec::Compute { work_s },
+                PhaseSpec::Collective(Collective::Halo { bytes }),
+            ],
+            iterations,
+        )
+    }
+
+    /// Total nominal compute work per rank, seconds — what the job's
+    /// `duration` (the work ledger, *not* wall time) is set to.
+    pub fn compute_work_s(&self) -> f64 {
+        let per_iter: f64 = self
+            .phases
+            .iter()
+            .map(|p| match p {
+                PhaseSpec::Compute { work_s } => *work_s,
+                PhaseSpec::Collective(_) => 0.0,
+            })
+            .sum();
+        per_iter * self.iterations as f64
+    }
+
+    /// Validate the program for a job of `ranks` ranks (one per node).
+    pub fn validate(&self, ranks: u32) -> Result<(), String> {
+        if ranks == 0 {
+            return Err("an app needs at least one rank".into());
+        }
+        if self.iterations == 0 {
+            return Err("`iterations` must be at least 1".into());
+        }
+        if self.phases.is_empty() {
+            return Err("an app needs at least one phase".into());
+        }
+        for p in &self.phases {
+            match p {
+                PhaseSpec::Compute { work_s } => {
+                    if !work_s.is_finite() || *work_s < 0.0 {
+                        return Err(format!("compute work {work_s} must be finite and >= 0"));
+                    }
+                }
+                PhaseSpec::Collective(c) => c.validate(ranks)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowered_flows_conserve_total_bytes() {
+        let cases = [
+            Collective::Bcast {
+                root: 2,
+                bytes: 1_000_003,
+            },
+            Collective::Allreduce { bytes: 1_000_003 },
+            Collective::AllToAll { bytes: 77_777 },
+            Collective::Halo { bytes: 123_456 },
+            Collective::PointToPoint {
+                from: 0,
+                to: 3,
+                bytes: 5_000,
+            },
+            Collective::NfsPull { bytes: 900_001 },
+        ];
+        for ranks in 1..=6u32 {
+            for c in &cases {
+                if c.validate(ranks).is_err() {
+                    continue;
+                }
+                let sum: u128 = c.lower(ranks).iter().map(|f| f.bytes as u128).sum();
+                assert_eq!(
+                    sum,
+                    c.total_bytes(ranks) as u128,
+                    "{} on {ranks} ranks",
+                    c.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lowerings_never_self_flow() {
+        let cases = [
+            Collective::Bcast { root: 0, bytes: 10 },
+            Collective::Allreduce { bytes: 10 },
+            Collective::AllToAll { bytes: 10 },
+            Collective::Halo { bytes: 10 },
+        ];
+        for ranks in 1..=5u32 {
+            for c in &cases {
+                for f in c.lower(ranks) {
+                    assert_ne!(f.src, f.dst, "{} on {ranks}", c.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_collectives_lower_to_nothing() {
+        for c in [
+            Collective::Allreduce { bytes: 10 },
+            Collective::Halo { bytes: 10 },
+            Collective::Bcast { root: 0, bytes: 7 },
+            Collective::AllToAll { bytes: 10 },
+        ] {
+            assert!(c.lower(1).is_empty(), "{}", c.name());
+            assert_eq!(c.total_bytes(1), 0, "{}", c.name());
+        }
+        // the NFS pull still happens with one rank (frontend -> rank 0)
+        assert_eq!(Collective::NfsPull { bytes: 10 }.lower(1).len(), 1);
+    }
+
+    #[test]
+    fn two_rank_halo_sends_both_faces_to_the_neighbour() {
+        let flows = Collective::Halo { bytes: 7 }.lower(2);
+        assert_eq!(flows.len(), 4); // 2 ranks x 2 faces
+        for f in &flows {
+            assert_ne!(f.src, f.dst);
+        }
+        assert_eq!(Collective::Halo { bytes: 7 }.total_bytes(2), 28);
+    }
+
+    #[test]
+    fn validation_catches_bad_programs() {
+        assert!(AppSpec::allreduce_loop("a", 1.0, 10, 0).validate(2).is_err());
+        assert!(AppSpec::new("a", vec![], 1).validate(2).is_err());
+        assert!(AppSpec::allreduce_loop("a", 1.0, 10, 1).validate(0).is_err());
+        let nan = AppSpec::new("a", vec![PhaseSpec::Compute { work_s: f64::NAN }], 1);
+        assert!(nan.validate(2).is_err());
+        assert!(Collective::Bcast { root: 4, bytes: 1 }.validate(4).is_err());
+        let to_self = Collective::PointToPoint {
+            from: 1,
+            to: 1,
+            bytes: 1,
+        };
+        assert!(to_self.validate(4).is_err());
+        let oob = Collective::PointToPoint {
+            from: 0,
+            to: 9,
+            bytes: 1,
+        };
+        assert!(oob.validate(4).is_err());
+    }
+
+    #[test]
+    fn compute_work_sums_over_iterations() {
+        let app = AppSpec::new(
+            "w",
+            vec![
+                PhaseSpec::Compute { work_s: 10.0 },
+                PhaseSpec::Collective(Collective::Allreduce { bytes: 1 }),
+                PhaseSpec::Compute { work_s: 5.0 },
+            ],
+            4,
+        );
+        assert!((app.compute_work_s() - 60.0).abs() < 1e-12);
+    }
+}

@@ -6,6 +6,7 @@
 //! throughput, waiting times, node utilization, true vs measured energy.
 
 use crate::api::ClusterApi as Cluster;
+use crate::app::{AppSpec, Collective, PhaseSpec};
 use crate::power::Activity;
 use crate::sim::SimTime;
 use crate::slurm::{JobSpec, JobState};
@@ -35,6 +36,11 @@ pub struct TraceGen {
     /// partitions whose jobs also load the discrete GPU (the §3.6
     /// power-cap studies need GPU-heavy draw on the dGPU partitions)
     pub gpu_partitions: Vec<String>,
+    /// fraction of (non-payload) jobs that are phase-structured
+    /// `dalek::app` programs — cnn-train-like allreduce loops, stencil
+    /// halo patterns, and NFS-heavy prototyping mixes. 0.0 keeps the
+    /// classic mixes bit-identical (no RNG draw is consumed)
+    pub app_fraction: f64,
 }
 
 impl TraceGen {
@@ -51,6 +57,7 @@ impl TraceGen {
             payloads: vec!["gemm256".into(), "cnn_small".into(), "mlp_infer".into()],
             payload_fraction: 0.3,
             gpu_partitions: Vec::new(),
+            app_fraction: 0.0,
         }
     }
 
@@ -71,6 +78,29 @@ impl TraceGen {
             payloads: Vec::new(),
             payload_fraction: 0.0,
             gpu_partitions: vec!["az4-n4090".into(), "az4-a7900".into()],
+            app_fraction: 0.0,
+        }
+    }
+
+    /// The application-shaped mix: a majority of jobs carry
+    /// phase-structured programs (cnn-train-like allreduce loops,
+    /// stencil halo exchanges, NFS-heavy prototyping pulls) riding the
+    /// flow network, interleaved with classic opaque jobs — the
+    /// workload `benches/appmodel.rs` sweeps.
+    pub fn app_mix(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed),
+            jobs_per_hour: 30.0,
+            partitions: vec![
+                ("az4-n4090".into(), 4),
+                ("az4-a7900".into(), 4),
+                ("iml-ia770".into(), 4),
+                ("az5-a890m".into(), 4),
+            ],
+            payloads: Vec::new(),
+            payload_fraction: 0.0,
+            gpu_partitions: Vec::new(),
+            app_fraction: 0.6,
         }
     }
 
@@ -94,14 +124,60 @@ impl TraceGen {
             if self.gpu_partitions.contains(&part) {
                 activity.dgpu = self.rng.uniform_f64(0.7, 1.0);
             }
+            // phase-structured programs: drawn only when enabled, so a
+            // zero app_fraction consumes no RNG and the classic mixes
+            // stay bit-identical (payload jobs stay classic)
+            let use_app = self.app_fraction > 0.0
+                && !use_payload
+                && self.rng.next_f64() < self.app_fraction;
+            let app = use_app.then(|| {
+                let kind = self.rng.uniform_u64(0, 2);
+                let work_s = 10.0 + self.rng.uniform_f64(0.0, 50.0);
+                let bytes = (8 + self.rng.uniform_u64(0, 56)) * 1_000_000;
+                let iters = 3 + self.rng.uniform_u64(0, 7) as u32;
+                match kind {
+                    0 => AppSpec::allreduce_loop("cnn-train", work_s, bytes, iters),
+                    1 => AppSpec::halo_loop("stencil", work_s, bytes, iters),
+                    // prototyping: pull an NFS shard, compute, publish
+                    // a (smaller) result from rank 0
+                    _ => AppSpec::new(
+                        "proto-nfs",
+                        vec![
+                            PhaseSpec::Collective(Collective::NfsPull { bytes }),
+                            PhaseSpec::Compute { work_s },
+                            PhaseSpec::Collective(Collective::Bcast {
+                                root: 0,
+                                bytes: bytes / 8,
+                            }),
+                        ],
+                        iters,
+                    ),
+                }
+            });
+            // app jobs: duration is the program's work ledger and the
+            // limit leaves room for communication wall time
+            let (duration, time_limit) = match &app {
+                Some(a) => {
+                    let w = a.compute_work_s();
+                    (
+                        SimTime::from_secs_f64(w),
+                        SimTime::from_secs_f64(w * 4.0 + 3600.0),
+                    )
+                }
+                None => (
+                    SimTime::from_secs_f64(dur_s),
+                    SimTime::from_secs_f64(dur_s * 4.0 + 120.0),
+                ),
+            };
             let spec = JobSpec {
                 user: format!("user{}", i % 7),
                 partition: part,
                 nodes,
-                duration: SimTime::from_secs_f64(dur_s),
-                time_limit: SimTime::from_secs_f64(dur_s * 4.0 + 120.0),
+                duration,
+                time_limit,
                 payload: None,
                 activity,
+                app,
             };
             out.push(TraceEvent {
                 at: SimTime::from_secs_f64(t),
@@ -243,6 +319,44 @@ mod tests {
         }
         // dense arrivals: 60 jobs inside ~half an hour on average
         assert!(a.last().unwrap().at < SimTime::from_hours(1));
+    }
+
+    #[test]
+    fn app_mix_is_deterministic_and_valid() {
+        let a = TraceGen::app_mix(17).generate(40);
+        let b = TraceGen::app_mix(17).generate(40);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.spec.app, y.spec.app);
+        }
+        // the mix actually contains programs, of every kind, and they
+        // are valid for their rank counts
+        let apps: Vec<&TraceEvent> = a.iter().filter(|e| e.spec.app.is_some()).collect();
+        assert!(apps.len() > 10, "only {} app jobs", apps.len());
+        assert!(apps.len() < 40, "no classic jobs left");
+        let mut names = std::collections::BTreeSet::new();
+        for ev in &apps {
+            let app = ev.spec.app.as_ref().unwrap();
+            app.validate(ev.spec.nodes).expect("valid program");
+            names.insert(app.name.clone());
+            // the work ledger is the program's compute total
+            assert_eq!(
+                ev.spec.duration,
+                SimTime::from_secs_f64(app.compute_work_s())
+            );
+        }
+        assert!(names.len() >= 2, "one-note mix: {names:?}");
+    }
+
+    #[test]
+    fn app_mix_replay_completes() {
+        let mut gen = TraceGen::app_mix(23);
+        let trace = gen.generate(12);
+        assert!(trace.iter().any(|e| e.spec.app.is_some()));
+        let mut cluster = Cluster::new(ClusterConfig::dalek_default(), None).unwrap();
+        let report = replay(&mut cluster, &trace, false);
+        assert_eq!(report.completed + report.timeouts, 12);
+        assert_eq!(report.timeouts, 0, "app limits leave comm headroom");
     }
 
     #[test]

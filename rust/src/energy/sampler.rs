@@ -28,6 +28,35 @@
 //! histories through the per-conversion probe loop,
 //! O(simulated seconds × probes × 4000), and is gone along with
 //! `node_history` cloning and `gc_history` bookkeeping.
+//!
+//! Besides sample emission, the sampler keeps a *rolling telemetry*
+//! view of the same transition stream ([`StreamingSampler::fold_rolling`]
+//! / [`StreamingSampler::rolling_mean_w`]): the piecewise-constant
+//! power history of the trailing 120 s, folded without materializing a
+//! single sample. This is the measured signal the §3.6 power-cap
+//! governor budgets against, and it works identically in unsampled
+//! runs.
+//!
+//! # Example: rolling telemetry without materializing samples
+//!
+//! ```
+//! use dalek::energy::StreamingSampler;
+//! use dalek::power::PowerTransition;
+//! use dalek::sim::SimTime;
+//!
+//! let mut s = StreamingSampler::new();
+//! s.add_node("n0", 2.0); // starts suspended at 2 W
+//! // the node wakes at t = 10 s and draws 30 W from then on
+//! let tr = [PowerTransition {
+//!     node: 0,
+//!     at: SimTime::from_secs(10),
+//!     watts: 30.0,
+//! }];
+//! s.fold_rolling(&tr, SimTime::from_secs(20));
+//! // trailing 20 s window: 10 s at 2 W + 10 s at 30 W -> 16 W mean
+//! let mean = s.rolling_mean_w(SimTime::from_secs(20), SimTime::from_secs(20));
+//! assert!((mean - 16.0).abs() < 1e-9);
+//! ```
 
 use std::collections::VecDeque;
 

@@ -37,6 +37,13 @@
 //!   [`energy::StreamingSampler`] consumes the scheduler's transition
 //!   stream and emits each constant-power segment's 1 kSPS samples in
 //!   one closed-form batch (cost ∝ power changes, not simulated time)
+//! * [`app`] — phase-structured MPI-style applications (§6.2):
+//!   [`app::AppSpec`] programs of compute phases (rated through the
+//!   §3.6 knobs) and collectives (bcast/allreduce/alltoall/halo/p2p/
+//!   NFS pulls) lowered onto tagged `net::flow` flows, executed under
+//!   BSP barrier semantics by [`app::AppEngine`] — the slowest rank
+//!   (heterogeneity, caps, fabric contention) gates every phase;
+//!   degenerate one-phase programs are bit-identical to classic jobs
 //! * [`bench`] — executors regenerating every table and figure (§5)
 //! * [`runtime`] — PJRT client running the AOT-compiled JAX/Pallas payloads
 //! * [`api`] — the unified session-based user API: log in once, then
@@ -46,8 +53,12 @@
 //!   (`api::ClusterEvent` routes scheduler/network/service events)
 //! * [`coordinator`] — the frontend daemon: trace replay over the API
 //!   (the cluster façade itself is [`api::ClusterApi`])
+//!
+//! The per-layer architecture book (invariants, event-flow diagram,
+//! test pointers) is `docs/ARCHITECTURE.md` at the repository root.
 
 pub mod api;
+pub mod app;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

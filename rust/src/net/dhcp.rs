@@ -54,7 +54,7 @@ impl DhcpDns {
     }
 
     /// DHCPDISCOVER: fixed lease if the MAC is known, else pool lease
-    /// (stable per MAC, reclaimed with [`release`]).
+    /// (stable per MAC, reclaimed with [`Self::release`]).
     pub fn offer(&mut self, mac: Mac) -> Result<Ipv4, DhcpError> {
         if let Some((ip, _)) = self.fixed.get(&mac) {
             return Ok(*ip);

@@ -1,17 +1,57 @@
 //! Flow-level network simulation with max-min fair bandwidth sharing.
 //!
-//! Transfers (NFS traffic, PXE images, MPI exchanges) are modeled as
-//! fluid flows. Each flow crosses its source NIC uplink and its
-//! destination NIC downlink through a non-blocking switch fabric; link
-//! capacity is shared max-min fairly between concurrent flows — the
-//! standard abstraction for TCP-fair sharing at this timescale, and
-//! enough to reproduce the paper's observation that the 2.5 GbE fabric
-//! "saturates very quickly" (§6.2).
+//! Transfers (NFS traffic, PXE images, the `dalek::app` collective
+//! phases) are modeled as fluid flows. Each flow crosses its source NIC
+//! uplink and its destination NIC downlink through a non-blocking
+//! switch fabric; link capacity is shared max-min fairly between
+//! concurrent flows — the standard abstraction for TCP-fair sharing at
+//! this timescale, and enough to reproduce the paper's observation that
+//! the 2.5 GbE fabric "saturates very quickly" (§6.2).
 //!
 //! The simulation is event-driven: rates are recomputed on every flow
 //! arrival/departure (progressive filling), and the earliest completion
 //! under the current allocation is exact because rates are piecewise
 //! constant between events.
+//!
+//! Flows carry an optional numeric *tag* (the job id, for collective
+//! traffic), so per-job bytes in flight are attributable at any instant
+//! ([`FlowNet::tagged_in_flight_bytes`]).
+//!
+//! # Example: two flows share a downlink max-min fairly
+//!
+//! ```
+//! use dalek::config::ClusterConfig;
+//! use dalek::net::{FlowNet, Topology};
+//!
+//! let topo = Topology::build(&ClusterConfig::dalek_default());
+//! let mut net = FlowNet::new(&topo);
+//! let a = topo.by_name("az4-n4090-0.dalek").unwrap();
+//! let b = topo.by_name("az4-n4090-1.dalek").unwrap();
+//! let c = topo.by_name("az4-n4090-2.dalek").unwrap();
+//! // both flows bottleneck on c's 2.5 Gbit/s downlink -> 1.25 each
+//! let f1 = net.start_flow(a, c, 1_000_000_000);
+//! let f2 = net.start_flow(b, c, 1_000_000_000);
+//! assert!((net.rate(f1).unwrap() - 1.25e9).abs() < 1.0);
+//! assert!((net.rate(f2).unwrap() - 1.25e9).abs() < 1.0);
+//! // the first departure releases bandwidth to the survivor
+//! net.run_until_complete(f1);
+//! assert!((net.rate(f2).unwrap() - 2.5e9).abs() < 1.0);
+//! ```
+//!
+//! # Kernel integration and flow cancellation
+//!
+//! When the network rides the unified `sim::Kernel`, it keeps exactly
+//! one completion event armed for the earliest completion under the
+//! current allocation, and re-arms it on *every* change to the
+//! allocation — arrivals ([`FlowNet::start_flow_on`]), departures
+//! ([`FlowNet::on_event`]) and cancellations
+//! ([`FlowNet::cancel_flow_on`]). Cancellation is safe even when the
+//! armed completion event is due at the very timestamp of the removal:
+//! the stale event is cancelled (per-id, so no other subsystem's
+//! same-timestamp events are disturbed) and a fresh one is armed for
+//! the surviving flows; the regression tests below pin this ordering
+//! down because collective phases create and drop flows far more often
+//! than PXE/NFS ever did.
 
 use std::collections::BTreeMap;
 
@@ -46,6 +86,8 @@ struct Flow {
     remaining_bits: f64,
     rate_bps: f64,
     started: SimTime,
+    /// owner tag (job id for collective traffic); 0 = untagged
+    tag: u64,
 }
 
 /// The fluid-flow network state.
@@ -91,6 +133,11 @@ impl FlowNet {
 
     /// Start a transfer of `bytes` from `src` to `dst` at current time.
     pub fn start_flow(&mut self, src: HostId, dst: HostId, bytes: u64) -> FlowId {
+        self.start_flow_tagged(src, dst, bytes, 0)
+    }
+
+    /// [`FlowNet::start_flow`] with an owner tag (0 = untagged).
+    pub fn start_flow_tagged(&mut self, src: HostId, dst: HostId, bytes: u64, tag: u64) -> FlowId {
         assert_ne!(src, dst, "flow to self");
         let id = FlowId(self.next_id);
         self.next_id += 1;
@@ -102,6 +149,7 @@ impl FlowNet {
                 remaining_bits: bytes as f64 * 8.0,
                 rate_bps: 0.0,
                 started: self.now,
+                tag,
             },
         );
         self.recompute_rates();
@@ -113,9 +161,24 @@ impl FlowNet {
         self.flows.get(&id).map(|f| f.rate_bps)
     }
 
+    /// Owner tag of an active flow.
+    pub fn tag(&self, id: FlowId) -> Option<u64> {
+        self.flows.get(&id).map(|f| f.tag)
+    }
+
+    /// Bytes still in flight across every active flow carrying `tag` —
+    /// per-job fabric accounting for collective traffic.
+    pub fn tagged_in_flight_bytes(&self, tag: u64) -> f64 {
+        self.flows
+            .values()
+            .filter(|f| f.tag == tag)
+            .map(|f| f.remaining_bits.max(0.0) / 8.0)
+            .sum()
+    }
+
     /// Advance time to `t`, draining all flows at their current rates
     /// (panics if a flow would complete strictly before `t` — use
-    /// [`next_completion`] to find the safe horizon).
+    /// [`FlowNet::next_completion`] to find the safe horizon).
     pub fn advance_to(&mut self, t: SimTime) {
         assert!(t >= self.now);
         let dt = (t - self.now).as_secs_f64();
@@ -201,11 +264,47 @@ impl FlowNet {
         dst: HostId,
         bytes: u64,
     ) -> FlowId {
+        self.start_tagged_flow_on(kernel, src, dst, bytes, 0)
+    }
+
+    /// [`FlowNet::start_flow_on`] with an owner tag (0 = untagged) —
+    /// the `dalek::app` collective phases tag their flows with the job
+    /// id so contention and bytes are attributable per job.
+    pub fn start_tagged_flow_on<E: From<NetEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        src: HostId,
+        dst: HostId,
+        bytes: u64,
+        tag: u64,
+    ) -> FlowId {
         let now = kernel.now().max(self.now);
         self.advance_to(now);
-        let id = self.start_flow(src, dst, bytes);
+        let id = self.start_flow_tagged(src, dst, bytes, tag);
         self.reschedule(kernel);
         id
+    }
+
+    /// Remove an active flow without completing it (its completion
+    /// never fires), re-arming the single completion event for the
+    /// survivors. Safe when the armed event is due at this very
+    /// timestamp: the stale event is cancelled per-id and a fresh one
+    /// armed, so no other subsystem's same-timestamp events are skipped
+    /// or reordered. Returns whether the flow was active.
+    pub fn cancel_flow_on<E: From<NetEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        id: FlowId,
+    ) -> bool {
+        let now = kernel.now().max(self.now);
+        self.advance_to(now);
+        let existed = self.flows.remove(&id).is_some();
+        if existed {
+            self.recompute_rates();
+        }
+        // always re-arm: the armed event may point at the removed flow
+        self.reschedule(kernel);
+        existed
     }
 
     /// Handle a due [`NetEvent`]: drain every flow completing at or
@@ -455,6 +554,102 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert_eq!(n.active_flows(), 0);
         assert_eq!(n.completed_flows, 2);
+    }
+
+    #[test]
+    fn cancel_at_armed_completion_timestamp_keeps_survivors_exact() {
+        // the collective-phase pattern: a flow is removed at the very
+        // timestamp its (or a sibling's) completion event is armed for
+        let (t, mut n) = net();
+        let mut kernel: Kernel<NetEvent> = Kernel::new();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        let c = t.by_name("az4-n4090-2.dalek").unwrap();
+        // both share c's downlink at 1.25 G -> identical completion time
+        let f1 = n.start_flow_on(&mut kernel, a, c, gb(1));
+        let f2 = n.start_flow_on(&mut kernel, b, c, gb(1));
+        assert_eq!(kernel.pending(), 1);
+        let due = kernel.peek_time().unwrap();
+        // reach the armed instant without processing the event, then
+        // cancel f1 exactly there
+        kernel.advance_to(due);
+        assert!(n.cancel_flow_on(&mut kernel, f1));
+        assert!(!n.cancel_flow_on(&mut kernel, f1)); // idempotent
+        // exactly one live completion remains, re-armed for f2, still due
+        assert_eq!(kernel.pending(), 1);
+        let (at, _) = kernel.pop_due(due).unwrap();
+        assert_eq!(at, due);
+        let done = n.on_event(&mut kernel, at);
+        assert_eq!(done, vec![f2]);
+        // the cancelled flow never counts as completed
+        assert_eq!(n.completed_flows, 1);
+        assert_eq!(n.active_flows(), 0);
+        assert!(kernel.is_idle());
+    }
+
+    #[test]
+    fn cancel_rearm_cannot_skip_or_reorder_other_subsystems() {
+        // kernel-ordering regression: cancelling + re-arming the net's
+        // completion at timestamp T must not disturb another
+        // subsystem's event already registered at T — the re-armed
+        // completion fires *after* it (registration order), and only
+        // the net's own stale id is cancelled
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        enum Routed {
+            Net(NetEvent),
+            Other(u32),
+        }
+        impl From<NetEvent> for Routed {
+            fn from(e: NetEvent) -> Self {
+                Routed::Net(e)
+            }
+        }
+        let (t, mut n) = net();
+        let mut kernel: Kernel<Routed> = Kernel::new();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        let c = t.by_name("az4-n4090-2.dalek").unwrap();
+        let f1 = n.start_flow_on(&mut kernel, a, c, gb(1));
+        let _f2 = n.start_flow_on(&mut kernel, b, c, gb(1));
+        let due = kernel.peek_time().unwrap();
+        // a foreign same-timestamp event, registered after the armed
+        // completion but before the cancellation re-arms it
+        kernel.schedule_at(due, Routed::Other(7));
+        kernel.advance_to(due);
+        assert!(n.cancel_flow_on(&mut kernel, f1));
+        let mut order = Vec::new();
+        while let Some((at, ev)) = kernel.pop_due(due) {
+            assert_eq!(at, due);
+            match ev {
+                Routed::Other(x) => order.push(format!("other{x}")),
+                Routed::Net(_) => {
+                    let done = n.on_event(&mut kernel, at);
+                    order.push(format!("net:{}", done.len()));
+                }
+            }
+        }
+        assert_eq!(order, vec!["other7".to_string(), "net:1".to_string()]);
+        assert_eq!(n.active_flows(), 0);
+        assert_eq!(n.completed_flows, 1);
+    }
+
+    #[test]
+    fn tags_attribute_in_flight_bytes_per_owner() {
+        let (t, mut n) = net();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        let f1 = n.start_flow_tagged(a, b, 1000, 11);
+        let f2 = n.start_flow_tagged(b, a, 500, 22);
+        assert_eq!(n.tag(f1), Some(11));
+        assert_eq!(n.tag(f2), Some(22));
+        assert!((n.tagged_in_flight_bytes(11) - 1000.0).abs() < 1e-9);
+        assert!((n.tagged_in_flight_bytes(22) - 500.0).abs() < 1e-9);
+        assert_eq!(n.tagged_in_flight_bytes(33), 0.0);
+        n.run_to_idle();
+        assert_eq!(n.tagged_in_flight_bytes(11), 0.0);
+        // untagged flows default to tag 0
+        let f3 = n.start_flow(a, b, 10);
+        assert_eq!(n.tag(f3), Some(0));
     }
 
     #[test]

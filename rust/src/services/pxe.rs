@@ -94,7 +94,7 @@ impl PxeInstaller {
     }
 
     /// Install one node in isolation; returns the wall-clock duration.
-    /// (For concurrent installs use [`reinstall_all`], which shares the
+    /// (For concurrent installs use [`Self::reinstall_all`], which shares the
     /// network properly.)
     pub fn install_one(&self, topo: &Topology, net: &mut FlowNet, host: HostId) -> SimTime {
         let start = net.now();

@@ -3,7 +3,7 @@
 //! Before the kernel refactor, `proberctl::tick` and the NTP discipline
 //! loop each kept a private clock and were never driven by the main
 //! simulation at all. [`ServiceRack`] puts both on the shared
-//! [`sim::Kernel`]:
+//! [`sim::Kernel`](crate::sim::Kernel):
 //!
 //! * [`ServiceEvent::NtpSync`] fires every chrony poll interval (64 s)
 //!   and disciplines every registered clock ([`NtpService::sync_all`]);

@@ -1,5 +1,6 @@
 //! Jobs: what users submit and what the controller tracks.
 
+use crate::app::AppSpec;
 use crate::power::Activity;
 use crate::sim::{ScheduledId, SimTime};
 
@@ -33,14 +34,29 @@ pub struct JobSpec {
     pub user: String,
     pub partition: String,
     pub nodes: u32,
-    /// wall time the job will actually take once running
+    /// nominal *work* of the job, in seconds at the node's nominal
+    /// operating point. For an uncapped classic job this equals its
+    /// wall time; a §3.6-capped job runs the same work longer, and for
+    /// a phase-structured job ([`JobSpec::app`]) this is the per-rank
+    /// compute total (communication adds wall time on top)
     pub duration: SimTime,
-    /// requested limit; the job is killed past it
+    /// requested limit — it bounds *work, not wall time*: a job whose
+    /// nominal work exceeds the limit is reclassified `Timeout`, but a
+    /// power-capped (or barrier-delayed) job is never killed for
+    /// running past the limit on the wall clock (§3.6: the governor
+    /// trades time for power, it never kills work)
     pub time_limit: SimTime,
     /// AOT payload executed on the nodes (None = synthetic load)
     pub payload: Option<String>,
-    /// load profile while running, drives the power model
+    /// load profile while running, drives the power model (for app
+    /// jobs: the draw of *compute* phases; communication phases draw
+    /// NIC-level power and barrier waits idle)
     pub activity: Activity,
+    /// phase-structured program (`dalek::app`): when present, the job
+    /// is an MPI-style rank-per-node application and its completion is
+    /// driven by the program's BSP phases instead of the single
+    /// completion timer. `None` = classic opaque-work job
+    pub app: Option<AppSpec>,
 }
 
 impl JobSpec {
@@ -54,6 +70,25 @@ impl JobSpec {
             time_limit: SimTime::from_secs(secs * 4 + 60),
             payload: None,
             activity: Activity::cpu_only(0.95),
+            app: None,
+        }
+    }
+
+    /// A phase-structured application job: `ranks` ranks, one per node.
+    /// `duration` is set to the program's nominal per-rank compute work
+    /// (the work ledger); the time limit leaves generous room because
+    /// communication and barrier waits add wall time that is not work.
+    pub fn app(user: &str, partition: &str, app: AppSpec, ranks: u32) -> Self {
+        let work = app.compute_work_s();
+        Self {
+            user: user.into(),
+            partition: partition.into(),
+            nodes: ranks,
+            duration: SimTime::from_secs_f64(work),
+            time_limit: SimTime::from_secs_f64(work * 4.0 + 3600.0),
+            payload: None,
+            activity: Activity::cpu_only(0.95),
+            app: Some(app),
         }
     }
 }

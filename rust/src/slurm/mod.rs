@@ -23,6 +23,14 @@
 //! is published as a `power::PowerTransition` for the §4 streaming
 //! sampler. [`SlurmSim`] pairs a controller with a private kernel for
 //! standalone tests and benches.
+//!
+//! Phase-structured jobs (`dalek::app`) ride the same controller: it
+//! stays app-agnostic, publishing [`AppNotice`]s (program started /
+//! knobs changed) that the api layer's engine drains, and exposing
+//! per-node rate/activity hooks; app completion re-enters the normal
+//! `finish_job` path. A controller driven without an engine (bare
+//! [`SlurmSim`]) never completes app jobs — submit those through
+//! `dalek::api`.
 
 pub(crate) mod api;
 pub mod job;
@@ -35,5 +43,6 @@ pub use job::{Job, JobId, JobSpec, JobState};
 pub use policy::{GovernorStats, PlacementPolicy, PolicyEvent, PowerGovernor};
 pub use quota::{QuotaDb, QuotaDecision};
 pub use scheduler::{
-    AdminPowerOutcome, NodeDraw, NodeInfo, SchedEvent, SchedPolicy, Slurm, SlurmSim, SlurmStats,
+    AdminPowerOutcome, AppNotice, NodeDraw, NodeInfo, SchedEvent, SchedPolicy, Slurm, SlurmSim,
+    SlurmStats,
 };

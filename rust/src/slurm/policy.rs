@@ -35,6 +35,48 @@
 //!   running nodes) ahead of the scheduler's own 10-minute suspend
 //!   policy; demand wakes them back up through the normal WoL/PXE
 //!   resume path.
+//!
+//! # The `(cap/demand)^(1/3)` repricing model
+//!
+//! Capping trades time for power by a cube-root law: dynamic power
+//! scales roughly with `f·V²` and voltage tracks frequency, so power
+//! `∝ f³` — conversely, clamping the package to a fraction `c` of its
+//! demand drops throughput to about `c^(1/3)`. Halving the package
+//! budget costs ~21% speed, which is exactly why capped placement can
+//! *win* on energy: joules-to-completion scale as `c/c^(1/3)=c^(2/3)`,
+//! so a capped node completes the same work on fewer joules. That rate
+//! (computed by [`relative_rate`], floored at the scheduler's
+//! `MIN_RATE` so pathological caps never stall work) is what
+//! `Slurm::apply_power_knobs` reprices running jobs with — `duration`
+//! is *work*, wall time stretches — and what the `dalek::app` engine
+//! applies per rank, so one capped rank delays its whole BSP barrier.
+//!
+//! # Example: budget a standalone controller and stretch the job
+//!
+//! ```
+//! use dalek::config::ClusterConfig;
+//! use dalek::sim::SimTime;
+//! use dalek::slurm::{JobSpec, PowerGovernor, SlurmSim};
+//!
+//! let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+//! s.submit_at(JobSpec::cpu("a", "az5-a890m", 4, 600), SimTime::ZERO)
+//!     .unwrap();
+//! s.run_until(SimTime::from_mins(3)); // booted (70 s) and running
+//!
+//! let mut gov = PowerGovernor::new();
+//! gov.set_budget(Some(180.0)); // below the partition's busy draw
+//! let now = s.kernel.now();
+//! let measured = s.cluster_watts();
+//! gov.tick(&mut s.ctl, &mut s.kernel, measured, now);
+//! // the feed-forward plan lands the cluster exactly on the budget
+//! assert!((s.cluster_watts() - 180.0).abs() < 1e-6);
+//!
+//! // and the capped job genuinely runs longer than its nominal 600 s
+//! s.run_to_idle();
+//! let job = s.jobs().next().unwrap();
+//! assert!(job.run_time().unwrap() > SimTime::from_secs(600));
+//! assert!((job.work_done_s - 600.0).abs() < 1e-6); // same *work*
+//! ```
 
 use super::job::JobSpec;
 use super::scheduler::{AdminPowerOutcome, SchedEvent, Slurm, MIN_RATE};

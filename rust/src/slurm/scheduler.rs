@@ -13,7 +13,7 @@
 //! cannot use before the head's estimated start (its shadow time).
 //!
 //! The controller owns no clock and no event queue of its own: all of
-//! its timers ([`SchedEvent`]) live on the shared [`sim::Kernel`],
+//! its timers ([`SchedEvent`]) live on the shared [`sim::Kernel`](crate::sim::Kernel),
 //! routed back through [`Slurm::handle_event`] by whoever drives the
 //! kernel (the `dalek::api` dispatch loop, or the [`SlurmSim`] harness
 //! for standalone tests and benches).
@@ -69,6 +69,20 @@ pub enum SchedEvent {
     SuspendTimer(usize),
 }
 
+/// Notices the app-model engine (`dalek::app`, hosted at the api
+/// layer) drains after every dispatch ([`Slurm::take_app_notices`]):
+/// phase-structured jobs that started running, and running ones whose
+/// nodes' §3.6 knobs changed. The controller itself stays app-agnostic
+/// — it never interprets a program, it only reports these two facts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppNotice {
+    /// an app job left `Configuring`: its program must begin
+    Started(JobId),
+    /// a knob changed on a node running an app job: per-rank rates
+    /// must be re-read and the barrier re-armed
+    Repriced(JobId),
+}
+
 /// Result of a §4.3 manual power action ([`Slurm::admin_power`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdminPowerOutcome {
@@ -93,6 +107,11 @@ struct NodeEntry {
     base_power: PowerModel,
     running: Option<JobId>,
     reserved_for: Option<JobId>,
+    /// while Allocated, draw power as if running `this` instead of the
+    /// job's own profile — the app engine's per-phase handle
+    /// (communication phases draw NIC/near-idle power, barrier-waiting
+    /// ranks idle). `None` = the running job's own activity.
+    activity_override: Option<Activity>,
     suspend_timer: Option<ScheduledId>,
     // exact energy integration
     last_change: SimTime,
@@ -163,6 +182,8 @@ pub enum SlurmError {
     UnknownNode(String),
     #[error("quota denied for `{user}`: {reason}")]
     QuotaDenied { user: String, reason: String },
+    #[error("invalid app program: {0}")]
+    InvalidApp(String),
 }
 
 /// The controller.
@@ -180,6 +201,9 @@ pub struct Slurm {
     /// power change points since the last drain, in time order — the
     /// §4 sampler borrows and clears these (no cloning)
     transitions: Vec<PowerTransition>,
+    /// app-job lifecycle notices since the last drain — the app engine
+    /// ([`crate::app::AppEngine`]) takes these after every dispatch
+    app_notices: Vec<AppNotice>,
     pub policy: SchedPolicy,
     pub power_policy: PowerPolicyConfig,
     /// per-partition placement policy (§6.2): absent means first-fit
@@ -210,6 +234,7 @@ impl Slurm {
                     power,
                     running: None,
                     reserved_for: None,
+                    activity_override: None,
                     suspend_timer: None,
                     last_change: SimTime::ZERO,
                     cur_watts: model.power.suspend_w,
@@ -232,6 +257,7 @@ impl Slurm {
             clock: SimTime::ZERO,
             next_job: 1,
             transitions: Vec::new(),
+            app_notices: Vec::new(),
             policy,
             power_policy: cfg.power.clone(),
             placement: BTreeMap::new(),
@@ -309,11 +335,12 @@ impl Slurm {
         self.nodes.iter().enumerate().filter_map(move |(i, n)| {
             let act = match n.fsm.state() {
                 PowerState::Idle { .. } => Activity::idle(),
-                PowerState::Allocated => n
-                    .running
-                    .and_then(|j| self.jobs.get(&j))
-                    .map(|j| j.spec.activity)
-                    .unwrap_or_default(),
+                PowerState::Allocated => n.activity_override.unwrap_or_else(|| {
+                    n.running
+                        .and_then(|j| self.jobs.get(&j))
+                        .map(|j| j.spec.activity)
+                        .unwrap_or_default()
+                }),
                 _ => return None,
             };
             Some((i, n.name.as_str(), n.partition.as_str(), act))
@@ -323,10 +350,13 @@ impl Slurm {
     // -- energy bookkeeping ------------------------------------------------
 
     fn touch(&mut self, idx: usize, now: SimTime) {
-        let activity = self.nodes[idx]
-            .running
-            .and_then(|j| self.jobs.get(&j))
-            .map(|j| j.spec.activity);
+        // the app engine's per-phase override wins over the job profile
+        let activity = self.nodes[idx].activity_override.or_else(|| {
+            self.nodes[idx]
+                .running
+                .and_then(|j| self.jobs.get(&j))
+                .map(|j| j.spec.activity)
+        });
         let n = &mut self.nodes[idx];
         n.energy_j += n.cur_watts * now.since(n.last_change).as_secs_f64();
         n.last_change = now;
@@ -390,6 +420,12 @@ impl Slurm {
                 part: spec.partition.clone(),
                 have: part_nodes.len() as u32,
             });
+        }
+        // phase-structured jobs: rank references must fit the job size
+        // before anything is queued (every submission surface funnels
+        // through here)
+        if let Some(app) = &spec.app {
+            app.validate(spec.nodes).map_err(SlurmError::InvalidApp)?;
         }
         // §6.2 quota admission for accounted users: estimate from the
         // partition's nominal power model (the eco-friendly incentive:
@@ -508,9 +544,7 @@ impl Slurm {
         now: SimTime,
     ) -> Result<AdminPowerOutcome, SlurmError> {
         let idx = self
-            .nodes
-            .iter()
-            .position(|n| n.name == node)
+            .node_index(node)
             .ok_or_else(|| SlurmError::UnknownNode(node.into()))?;
         Ok(self.admin_power_idx(kernel, idx, on, now))
     }
@@ -580,6 +614,61 @@ impl Slurm {
         self.nodes.len()
     }
 
+    /// Name of one node (`<partition>-<n>`, the topology host is the
+    /// same name with the `.dalek` domain).
+    pub fn node_name(&self, idx: usize) -> &str {
+        &self.nodes[idx].name
+    }
+
+    /// Index of a node by name — the inverse of [`Slurm::node_name`].
+    pub fn node_index(&self, name: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+
+    /// Relative execution rate of `act` on node `idx` under its current
+    /// §3.6 knobs: exactly 1.0 at the nominal operating point, lower
+    /// per the `(cap/demand)^(1/3)` model while capped, floored at the
+    /// scheduler's `MIN_RATE`. The app engine rates each rank's compute
+    /// phases through this — the same formula the classic repricer uses.
+    pub fn node_rate(&self, idx: usize, act: Activity) -> f64 {
+        Self::node_rate_of(&self.nodes[idx], act)
+    }
+
+    /// Set (or clear with `None`) the activity a node's power draw is
+    /// computed from while Allocated. The app engine drives this per
+    /// BSP phase: communication phases draw NIC/near-idle power,
+    /// barrier-waiting ranks idle, compute phases revert to the job's
+    /// own profile. Publishes the power transition like any other
+    /// state change; cleared automatically when the job finishes.
+    pub fn set_node_activity(&mut self, idx: usize, act: Option<Activity>, now: SimTime) {
+        self.clock = self.clock.max(now);
+        self.nodes[idx].activity_override = act;
+        self.touch(idx, now);
+    }
+
+    /// Drain the app-job lifecycle notices accumulated since the last
+    /// call (the api dispatcher hands them to the app engine after
+    /// every event).
+    pub fn take_app_notices(&mut self) -> Vec<AppNotice> {
+        std::mem::take(&mut self.app_notices)
+    }
+
+    /// Complete a phase-structured job at `now` — the app engine's
+    /// completion path. App jobs carry no armed completion timer (their
+    /// progress is the program, not a single work scalar), so the
+    /// engine calls this when the last phase of the last iteration
+    /// ends; settlement, node release and next-job scheduling are the
+    /// same as the classic path.
+    pub fn finish_app_job<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) {
+        self.clock = self.clock.max(now);
+        self.finish_job(kernel, id, now);
+    }
+
     /// The governor's view of the cluster power ledger: per node, the
     /// uncappable floor of the current state plus the nominal demand of
     /// the cappable domains (CPU package, dGPU) under the running job's
@@ -589,10 +678,14 @@ impl Slurm {
             .iter()
             .enumerate()
             .map(|(idx, n)| {
-                let act = n
-                    .running
-                    .and_then(|j| self.jobs.get(&j))
-                    .map(|j| j.spec.activity);
+                // the governor plans against what the node is actually
+                // drawing for: a rank in a communication phase demands
+                // NIC-level power, not its job's compute profile
+                let act = n.activity_override.or_else(|| {
+                    n.running
+                        .and_then(|j| self.jobs.get(&j))
+                        .map(|j| j.spec.activity)
+                });
                 let (allocated, floor_w, cpu_demand_w, gpu_demand_w) =
                     match (n.fsm.state(), act) {
                         (PowerState::Allocated, Some(act)) => (
@@ -706,6 +799,12 @@ impl Slurm {
     fn reprice<E: From<SchedEvent>>(&mut self, kernel: &mut Kernel<E>, id: JobId, now: SimTime) {
         let Some(job) = self.jobs.get(&id) else { return };
         if job.state != JobState::Running {
+            return;
+        }
+        // phase-structured jobs keep per-rank ledgers in the app engine
+        // and have no completion timer to move: notify instead
+        if job.spec.app.is_some() {
+            self.app_notices.push(AppNotice::Repriced(id));
             return;
         }
         let act = job.spec.activity;
@@ -946,10 +1045,12 @@ impl Slurm {
         }
         let allocated = job.allocated.clone();
         let act = job.spec.activity;
+        let is_app = job.spec.app.is_some();
         let dur = job.spec.duration.min(job.spec.time_limit);
         for &i in &allocated {
             self.nodes[i].fsm.allocate().expect("idle node");
             self.nodes[i].running = Some(id);
+            self.nodes[i].activity_override = None;
             self.touch(i, now);
             // settlement watermark: node energy strictly before the run
             self.nodes[i].job_energy_mark = self.nodes[i].energy_j;
@@ -966,14 +1067,24 @@ impl Slurm {
         } else {
             SimTime::from_secs_f64(dur.as_secs_f64() / rate)
         };
-        let ev = kernel.schedule_at(now + wall, SchedEvent::JobComplete(id));
+        // phase-structured jobs complete when their program does (the
+        // app engine calls `finish_app_job`); classic jobs arm the
+        // single work-ledger completion timer
+        let ev = if is_app {
+            None
+        } else {
+            Some(kernel.schedule_at(now + wall, SchedEvent::JobComplete(id)))
+        };
         let job = self.jobs.get_mut(&id).expect("exists");
         job.state = JobState::Running;
         job.started = Some(now);
         job.rate = rate;
         job.last_rate_change = now;
         job.work_done_s = 0.0;
-        job.completion_ev = Some(ev);
+        job.completion_ev = ev;
+        if is_app {
+            self.app_notices.push(AppNotice::Started(id));
+        }
     }
 
     fn finish_job<E: From<SchedEvent>>(
@@ -994,8 +1105,12 @@ impl Slurm {
             JobState::Completed
         };
         job.finished = Some(now);
-        job.completion_ev = None; // this event just fired
-        job.work_done_s += now.since(job.last_rate_change).as_secs_f64() * job.rate;
+        job.completion_ev = None; // this event just fired (None for apps)
+        if job.spec.app.is_none() {
+            // classic work ledger; app jobs' authoritative ledgers are
+            // the engine's per-rank ones (wall time includes barriers)
+            job.work_done_s += now.since(job.last_rate_change).as_secs_f64() * job.rate;
+        }
         job.last_rate_change = now;
         self.stats.completed += u64::from(!timed_out);
         self.stats.timeouts += u64::from(timed_out);
@@ -1007,6 +1122,7 @@ impl Slurm {
         let mut job_energy = 0.0;
         for &i in &allocated {
             self.nodes[i].fsm.release(now).expect("allocated node");
+            self.nodes[i].activity_override = None; // app phases end here
             self.touch(i, now); // integrates the final run segment
             job_energy += self.nodes[i].energy_j - self.nodes[i].job_energy_mark;
             self.nodes[i].running = None;

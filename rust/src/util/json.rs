@@ -2,7 +2,7 @@
 //! offline). Parses the `artifacts/manifest.json` the AOT pipeline
 //! emits, and any similarly tame JSON: objects, arrays, strings (with
 //! escapes), numbers, bools, null. Serialization (`Display` /
-//! [`Json::to_string`]) round-trips the parser's grammar exactly —
+//! `Json::to_string`) round-trips the parser's grammar exactly —
 //! escaped strings, integral-vs-float numbers, nested containers — and
 //! is what the `api` wire codec and the coordinator metrics endpoint
 //! emit. Non-finite numbers (which JSON cannot represent) serialize as

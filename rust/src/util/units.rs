@@ -23,7 +23,7 @@ pub fn bytes(n: u64) -> String {
     "0 B".to_string()
 }
 
-/// Format a rate with SI prefixes: 1.23 G<unit>, 45.6 M<unit>…
+/// Format a rate with SI prefixes: 1.23 `G<unit>`, 45.6 `M<unit>`…
 pub fn si(v: f64, unit: &str) -> String {
     let (v, p) = si_scale(v);
     format!("{v:.2} {p}{unit}")

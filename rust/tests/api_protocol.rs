@@ -30,6 +30,7 @@ fn encode_decode_execute_round_trip() {
         payload: None,
         iters: 1,
         user: None,
+        app: None,
     });
     let wire = req.to_json(Some(sid)).to_string();
 
@@ -127,6 +128,7 @@ fn salloc_over_the_wire_grants_and_reports_nodes() {
         payload: None,
         iters: 1,
         user: None,
+        app: None,
     });
     let wire = req.to_json(Some(sid)).to_string();
     let (s, r) = Request::parse(&wire).unwrap();

@@ -94,6 +94,7 @@ fn srun_through_session_api() {
         payload: None,
         iters: 1,
         user: None,
+        app: None,
     };
     let (id, state) = cluster.run_request(sid, &req, SimTime::ZERO).expect("srun");
     assert_eq!(state, JobState::Completed);

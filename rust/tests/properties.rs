@@ -105,6 +105,7 @@ fn prop_scheduler_conservation() {
                 time_limit: SimTime::from_secs(rng.uniform_u64(5, 1200)),
                 payload: None,
                 activity: Activity::cpu_only(rng.next_f64()),
+                app: None,
             };
             s.submit_at(spec, t).expect("valid");
         }
