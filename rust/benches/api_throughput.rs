@@ -1,0 +1,114 @@
+//! Bench: the streaming multi-client API under load.
+//!
+//! Two timings:
+//!
+//! 1. **Request throughput** — a seeded 8-client `TraceGen::client_storm`
+//!    (srun tickets, subscriptions, polls, admin ops) replayed through
+//!    the deterministic `ApiServer` multiplexer: requests served per
+//!    wall-second, round-robin fairness and rate limits included.
+//! 2. **Telemetry decimation** — one session watching a governor-capped
+//!    hour at 10 Hz through a `Telemetry` subscription in an *unsampled*
+//!    run: the windows are cut from the rolling piecewise history in
+//!    closed form, so the events must arrive without a single probe
+//!    sample being materialized (asserted), and wall time must track
+//!    the number of power changes, not the simulated seconds.
+
+use dalek::api::{ApiServer, Channel, ClusterApi, Event};
+use dalek::config::ClusterConfig;
+use dalek::coordinator::trace::TraceGen;
+use dalek::sim::SimTime;
+use dalek::util::benchkit;
+
+const CLIENTS: usize = 8;
+const REQUESTS: usize = 400;
+const SEED: u64 = 0xDA1EC;
+
+fn storm_server() -> (ApiServer, Vec<dalek::coordinator::trace::StormEvent>) {
+    let cluster = ClusterApi::new(ClusterConfig::dalek_default(), None).expect("cluster");
+    let mut server = ApiServer::new(cluster);
+    server.connect("root").expect("root session");
+    for k in 1..CLIENTS {
+        server.connect(&format!("user{k}")).expect("user session");
+    }
+    let mut gen = TraceGen::dalek_mix(SEED);
+    gen.jobs_per_hour = 1200.0; // an arrival every ~3 s
+    let storm = gen.client_storm(CLIENTS, REQUESTS);
+    (server, storm)
+}
+
+fn main() {
+    println!("=== streaming api — multi-client storms + telemetry ===\n");
+
+    // correctness anchor: the storm is deterministic before it is fast
+    let digest = {
+        let (mut server, storm) = storm_server();
+        server.run_storm(&storm);
+        let settle = server.cluster.now() + SimTime::from_mins(30);
+        server.settle(settle);
+        server.transcript_digest()
+    };
+    let digest2 = {
+        let (mut server, storm) = storm_server();
+        server.run_storm(&storm);
+        let settle = server.cluster.now() + SimTime::from_mins(30);
+        server.settle(settle);
+        server.transcript_digest()
+    };
+    assert_eq!(digest, digest2, "storm replay must be bit-identical");
+
+    let r = benchkit::bench(
+        &format!("api/storm({CLIENTS} clients, {REQUESTS} reqs)"),
+        1,
+        5,
+        || {
+            let (mut server, storm) = storm_server();
+            server.run_storm(&storm);
+            let settle = server.cluster.now() + SimTime::from_mins(30);
+            server.settle(settle);
+            std::hint::black_box(server.transcript_digest().len());
+        },
+    );
+    let wall_s = r.summary.p50 / 1e9;
+    println!(
+        "{}\n  requests/s: {:.0}\n",
+        r.report(),
+        REQUESTS as f64 / wall_s
+    );
+
+    // telemetry decimation over a governor-capped simulated hour,
+    // entirely unsampled
+    let run_telemetry = || {
+        let mut c = ClusterApi::new(ClusterConfig::dalek_default(), None).expect("cluster");
+        let root = c.login("root").expect("root");
+        c.set_outbox_capacity(100_000);
+        c.subscribe(root, Channel::Telemetry, Some(10.0)).expect("subscribe");
+        c.set_power_budget(root, Some(400.0)).expect("budget");
+        let mut gen = TraceGen::powercap_mix(SEED);
+        for ev in gen.generate(40) {
+            c.submit(ev.spec.clone(), ev.at).expect("valid trace");
+        }
+        c.run_until(SimTime::from_hours(1), false);
+        let events = c.take_events(root, usize::MAX);
+        let windows = events
+            .iter()
+            .filter(|e| matches!(e, Event::Telemetry { .. }))
+            .count();
+        assert_eq!(
+            c.report().samples,
+            0,
+            "telemetry must not materialize samples"
+        );
+        windows
+    };
+    let windows = run_telemetry();
+    assert_eq!(windows, 36_000, "10 Hz x 3600 s");
+    let r = benchkit::bench("api/telemetry(10 Hz, capped hour, unsampled)", 1, 5, || {
+        std::hint::black_box(run_telemetry());
+    });
+    let wall_s = r.summary.p50 / 1e9;
+    println!(
+        "{}\n  windows delivered: {windows}   windows/s: {:.0} k\n",
+        r.report(),
+        windows as f64 / wall_s / 1e3
+    );
+}

@@ -31,13 +31,17 @@
 //! FSMs through `Slurm::admin_power` at the next tick (they used to be
 //! discarded).
 
+use std::collections::BTreeMap;
+
 use super::error::DalekError;
+use super::events::{Channel, Event, JobEventKind, Outbox, PowerEventKind, Ticket};
 use super::protocol::{JobRequest, JobView, Request, Response};
 use super::session::{Session, SessionId, SessionManager};
 use crate::app::{AppEngine, AppEvent};
 use crate::config::cluster::resolve_partition;
 use crate::config::ClusterConfig;
 use crate::energy::api::PowerAction;
+use crate::energy::sampler::ROLLING_HORIZON;
 use crate::energy::{EnergyApi, MainBoard, ProbeConfig, Sample, StreamingSampler};
 use crate::net::{FlowId, FlowNet, NetEvent, Topology};
 use crate::power::Activity;
@@ -46,8 +50,8 @@ use crate::services::auth::UserDb;
 use crate::services::{ServiceEvent, ServiceRack};
 use crate::sim::{Kernel, SimTime};
 use crate::slurm::{
-    JobId, JobSpec, JobState, PlacementPolicy, PolicyEvent, PowerGovernor, SchedEvent, Slurm,
-    SlurmApi,
+    JobId, JobLifecycle, JobSpec, JobState, PlacementPolicy, PolicyEvent, PowerGovernor,
+    SchedEvent, Slurm, SlurmApi,
 };
 use crate::util::Xoshiro256;
 
@@ -141,6 +145,44 @@ const NON_ADMIN_SRUN_HORIZON: SimTime = SimTime(24 * 3600 * 1_000_000_000);
 /// checks (the blocking-command poll granularity).
 const SRUN_STRIDE: SimTime = SimTime(10 * 60 * 1_000_000_000);
 
+/// Default bound on a session's event outbox. A slow consumer loses
+/// the oldest events and is told so ([`Event::Lagged`]) instead of
+/// growing the server without bound.
+const OUTBOX_CAP: usize = 256;
+
+/// How far event time may run inside one `drive` before the event
+/// plane is pumped mid-drain. Telemetry windows are cut from the
+/// 120 s rolling history, so pumps must happen at least twice per
+/// horizon; events fire at least every 64 s (the NTP discipline
+/// re-arms unconditionally), so pacing at half the horizon keeps every
+/// cursor comfortably inside it even across hour-long `run_until`s.
+const EVENT_PUMP_INTERVAL: SimTime = SimTime(60 * 1_000_000_000);
+
+/// One session's live subscription state + bounded outbox.
+struct SessionSubs {
+    /// owner scoping for `JobEvents` (admins see every job)
+    user: String,
+    admin: bool,
+    job_events: bool,
+    power_events: bool,
+    /// decimated telemetry cursor: `(period, start of the next window)`
+    telemetry: Option<(SimTime, SimTime)>,
+    outbox: Outbox,
+}
+
+impl SessionSubs {
+    fn new(user: String, admin: bool, cap: usize) -> Self {
+        Self {
+            user,
+            admin,
+            job_events: false,
+            power_events: false,
+            telemetry: None,
+            outbox: Outbox::new(cap),
+        }
+    }
+}
+
 pub struct ClusterApi {
     pub cfg: ClusterConfig,
     /// the single clock + event list every subsystem registers with
@@ -163,6 +205,20 @@ pub struct ClusterApi {
     rng: Xoshiro256,
     /// the operator-console session (root), auto-renewed
     root: SessionId,
+    /// per-session subscriptions + bounded event outboxes (BTreeMap:
+    /// deterministic fan-out order)
+    subs: BTreeMap<SessionId, SessionSubs>,
+    /// live `salloc` allocations held per session — released (not
+    /// leaked) when the session logs out or expires
+    session_allocs: BTreeMap<SessionId, Vec<JobId>>,
+    /// monotonic receipt counter for nonblocking submissions
+    next_ticket: u64,
+    /// governor-plane events staged by `on_governor_tick` until the
+    /// next `pump_events`
+    pending_power: Vec<(SimTime, PowerEventKind)>,
+    /// outbox bound applied to new subscriptions (tests shrink it to
+    /// force overflow, telemetry-heavy runs raise it)
+    outbox_cap: usize,
 }
 
 impl ClusterApi {
@@ -235,6 +291,11 @@ impl ClusterApi {
             runtime,
             rng,
             root,
+            subs: BTreeMap::new(),
+            session_allocs: BTreeMap::new(),
+            next_ticket: 1,
+            pending_power: Vec::new(),
+            outbox_cap: OUTBOX_CAP,
         })
     }
 
@@ -248,13 +309,58 @@ impl ClusterApi {
         Ok(self.sessions.login(&self.users, user, now)?.id)
     }
 
-    /// Close a session; returns whether it existed.
+    /// Close a session; returns whether it existed. Teardown is
+    /// complete: subscriptions are dropped and any live `salloc`
+    /// allocation the session holds is released (nodes freed, SSH
+    /// grants revoked) — an interactive session must not leak its
+    /// reservation past its own lifetime.
     pub fn logout(&mut self, id: SessionId) -> bool {
-        self.sessions.logout(id)
+        let existed = self.sessions.logout(id);
+        self.teardown_session(id);
+        existed
     }
 
     fn session(&mut self, id: SessionId, now: SimTime) -> Result<Session, DalekError> {
-        self.sessions.validate(id, now)
+        match self.sessions.validate(id, now) {
+            Ok(s) => Ok(s),
+            Err(e) => {
+                // expired (or forged) token: the same teardown as an
+                // explicit logout, so expiry cannot leak an allocation
+                self.teardown_session(id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Drop a session's subscriptions and release its live `salloc`
+    /// allocations. Idempotent; harmless for unknown sessions.
+    fn teardown_session(&mut self, sid: SessionId) {
+        self.subs.remove(&sid);
+        let jobs = self.session_allocs.remove(&sid).unwrap_or_default();
+        if jobs.is_empty() {
+            return;
+        }
+        let now = self.now();
+        for id in jobs {
+            let info = self.slurm.ctl.job(id).and_then(|job| {
+                (!job.is_terminal()).then(|| (job.spec.user.clone(), job.allocated.clone()))
+            });
+            let Some((user, alloc)) = info else { continue };
+            let nodes: Vec<String> = alloc
+                .iter()
+                .map(|&i| self.slurm.ctl.node_name(i).to_string())
+                .collect();
+            // a phase-structured program must not fire after its nodes
+            // are gone: tear down the engine run (barrier timer +
+            // in-flight collective flows) before releasing
+            self.apps.cancel(&mut self.net, &mut self.kernel, id);
+            let _ = self.slurm.ctl.release_job(&mut self.kernel, id, now);
+            for n in &nodes {
+                self.slurm.gate.revoke(n, &user);
+            }
+        }
+        // other subscribers still learn the jobs finished
+        self.pump_events();
     }
 
     fn admin_session(&mut self, id: SessionId, now: SimTime) -> Result<Session, DalekError> {
@@ -357,15 +463,32 @@ impl ClusterApi {
         // app notices may be queued from a submission that started a
         // job before any event fired
         self.pump_apps();
+        let mut last_pump = self.kernel.now();
         while let Some((now, ev)) = self.kernel.pop_due(t) {
             self.dispatch(now, ev);
             // any event can start an app job (boot completions, job
             // completions freeing nodes) or reprice one (governor
             // ticks): hand the notices to the engine at this timestamp
             self.pump_apps();
+            // pace the event plane through long drives so telemetry
+            // cursors never fall behind the rolling-history horizon
+            if now.since(last_pump) >= EVENT_PUMP_INTERVAL {
+                self.pump_events();
+                last_pump = now;
+            }
         }
         self.kernel.advance_to(t);
         self.slurm.ctl.sync_clock(self.kernel.now());
+        // sessions that expired during this advance are torn down now
+        // (subscriptions dropped, salloc allocations released) — an
+        // absent client must not keep its reservation to the limit
+        let now = self.kernel.now();
+        for sid in self.sessions.take_expired(now) {
+            self.teardown_session(sid);
+        }
+        // fan the lifecycle/power notices out to subscribed sessions
+        // and cut any telemetry windows now due
+        self.pump_events();
     }
 
     /// Drain the scheduler's app notices into the engine at the
@@ -425,6 +548,7 @@ impl ClusterApi {
     fn on_governor_tick(&mut self, now: SimTime) {
         self.sampler.fold_rolling(self.slurm.ctl.transitions(), now);
         let rolling = self.sampler.rolling_mean_w(self.governor.window, now);
+        let budget = self.governor.budget_w();
         let rearm = self
             .governor
             .tick(&mut self.slurm.ctl, &mut self.kernel, rolling, now);
@@ -432,6 +556,29 @@ impl ClusterApi {
             let period = self.governor.period;
             self.kernel
                 .schedule_at(now + period, PolicyEvent::GovernorTick);
+        }
+        // stage the control step for `PowerEvents` subscribers (routed
+        // by the next pump, same timestamp)
+        if let Some(b) = budget {
+            if self.subs.values().any(|s| s.power_events) {
+                self.pending_power.push((
+                    now,
+                    PowerEventKind::GovernorTick {
+                        rolling_w: rolling,
+                        budget_w: b,
+                        throttle: self.governor.stats.last_throttle,
+                    },
+                ));
+                if rolling > b * (1.0 + self.governor.tolerance) {
+                    self.pending_power.push((
+                        now,
+                        PowerEventKind::BudgetViolation {
+                            rolling_w: rolling,
+                            budget_w: b,
+                        },
+                    ));
+                }
+            }
         }
     }
 
@@ -458,6 +605,208 @@ impl ClusterApi {
             // by design: the §4.3 queue has no reply channel
             let _ = self.slurm.ctl.admin_power(&mut self.kernel, &node, on, now);
         }
+    }
+
+    // -----------------------------------------------------------------
+    // the streaming event plane
+    // -----------------------------------------------------------------
+
+    /// Route the scheduler's drained lifecycle/actuation notices to the
+    /// subscribed outboxes and cut any telemetry windows now due.
+    /// Called after every dispatch; with no subscriber it only clears
+    /// the notice buffers (they must not grow without bound).
+    fn pump_events(&mut self) {
+        let jnotices = self.slurm.ctl.take_job_notices();
+        let pnotices = self.slurm.ctl.take_power_notices();
+        let staged = std::mem::take(&mut self.pending_power);
+        if self.subs.is_empty() {
+            return;
+        }
+        // job lifecycle → JobEvents (owner-scoped; admins see all)
+        for n in &jnotices {
+            let owner = self.slurm.ctl.job(n.job).map(|j| j.spec.user.clone());
+            let kind = match n.what {
+                JobLifecycle::Queued => JobEventKind::Queued,
+                JobLifecycle::Started => JobEventKind::Started,
+                JobLifecycle::Repriced { rate } => JobEventKind::Repriced { rate },
+                JobLifecycle::Finished { state, energy_j } => JobEventKind::Finished {
+                    state,
+                    joules: energy_j,
+                },
+            };
+            for s in self.subs.values_mut().filter(|s| s.job_events) {
+                if s.admin || owner.as_deref() == Some(s.user.as_str()) {
+                    s.outbox.push(Event::Job {
+                        at: n.at,
+                        job: n.job,
+                        kind,
+                    });
+                }
+            }
+        }
+        // §3.6 actuations + staged governor steps → PowerEvents
+        if self.subs.values().any(|s| s.power_events) {
+            let mut power: Vec<(SimTime, PowerEventKind)> = Vec::new();
+            for p in &pnotices {
+                power.push((
+                    p.at,
+                    PowerEventKind::CapActuated {
+                        node: self.slurm.ctl.node_name(p.node).to_string(),
+                        cpu_cap_w: p.cpu_cap_w,
+                        gpu_cap_w: p.gpu_cap_w,
+                        powersave: p.powersave,
+                    },
+                ));
+            }
+            power.extend(staged);
+            power.sort_by_key(|(at, _)| *at); // stable: ties keep order
+            for s in self.subs.values_mut().filter(|s| s.power_events) {
+                for (at, kind) in &power {
+                    s.outbox.push(Event::Power {
+                        at: *at,
+                        kind: kind.clone(),
+                    });
+                }
+            }
+        }
+        // decimated telemetry windows, cut from the rolling piecewise
+        // history — no sample materialization on this path
+        if self.subs.values().any(|s| s.telemetry.is_some()) {
+            let now = self.kernel.now();
+            self.sampler.fold_rolling(self.slurm.ctl.transitions(), now);
+            let horizon_start = SimTime(now.as_ns().saturating_sub(ROLLING_HORIZON.as_ns()));
+            let sampler = &self.sampler;
+            for s in self.subs.values_mut() {
+                let Some((period, start)) = s.telemetry else {
+                    continue;
+                };
+                let mut next_t = start;
+                // windows that aged past the retained history cannot be
+                // integrated truthfully: skip them (rounding up, so the
+                // cursor lands at or past the horizon) and say so
+                if next_t < horizon_start {
+                    let behind = horizon_start.since(next_t).as_ns();
+                    let missed = behind.div_ceil(period.as_ns());
+                    next_t = SimTime(next_t.as_ns() + missed * period.as_ns());
+                    s.outbox.lag(missed);
+                }
+                while SimTime(next_t.as_ns() + period.as_ns()) <= now {
+                    let end = SimTime(next_t.as_ns() + period.as_ns());
+                    let energy_j = sampler.span_energy_j(next_t, end);
+                    s.outbox.push(Event::Telemetry {
+                        from: next_t,
+                        to: end,
+                        mean_w: energy_j / period.as_secs_f64(),
+                        energy_j,
+                    });
+                    next_t = end;
+                }
+                s.telemetry = Some((period, next_t));
+            }
+        }
+    }
+
+    /// Open a typed event channel on a session. `PowerEvents` is
+    /// admin-only (it exposes the governor's actuation plane).
+    /// `Telemetry` takes a client-chosen decimation rate; the window
+    /// period must fit the sampler's 120 s rolling-history horizon.
+    /// Re-subscribing to `Telemetry` restarts the cursor at `now`.
+    pub fn subscribe(
+        &mut self,
+        sid: SessionId,
+        channel: Channel,
+        rate_hz: Option<f64>,
+    ) -> Result<(), DalekError> {
+        let now = self.now();
+        let sess = match channel {
+            Channel::PowerEvents => self.admin_session(sid, now)?,
+            _ => self.session(sid, now)?,
+        };
+        let cap = self.outbox_cap;
+        let entry = self
+            .subs
+            .entry(sid)
+            .or_insert_with(|| SessionSubs::new(sess.login.clone(), sess.admin, cap));
+        match channel {
+            Channel::JobEvents => entry.job_events = true,
+            Channel::PowerEvents => entry.power_events = true,
+            Channel::Telemetry => {
+                let rate = rate_hz.unwrap_or(1.0);
+                if !rate.is_finite() || rate <= 0.0 {
+                    return Err(DalekError::BadRequest(format!(
+                        "telemetry rate must be a positive number of Hz, got {rate}"
+                    )));
+                }
+                let period = SimTime::from_secs_f64(1.0 / rate);
+                // a quarter of the rolling horizon: with the event
+                // plane pumped at least every ~64 s (paced drives +
+                // the unconditional NTP tick), a cursor can then never
+                // slip past the retained history between pumps — a
+                // window is either integrated truthfully or explicitly
+                // skipped as lag, never silently wrong
+                let max_period = SimTime(ROLLING_HORIZON.as_ns() / 4);
+                if period > max_period {
+                    return Err(DalekError::BadRequest(format!(
+                        "telemetry period {} s exceeds the supported maximum of {} s \
+                         (a quarter of the {} s rolling-history horizon)",
+                        period.as_secs_f64(),
+                        max_period.as_secs_f64(),
+                        ROLLING_HORIZON.as_secs_f64()
+                    )));
+                }
+                if period.as_ns() == 0 {
+                    return Err(DalekError::BadRequest(format!(
+                        "telemetry rate {rate} Hz is finer than the ns clock"
+                    )));
+                }
+                entry.telemetry = Some((period, now));
+            }
+        }
+        Ok(())
+    }
+
+    /// Close one channel; buffered events remain pollable. Idempotent.
+    pub fn unsubscribe(&mut self, sid: SessionId, channel: Channel) -> Result<(), DalekError> {
+        let now = self.now();
+        self.session(sid, now)?;
+        if let Some(s) = self.subs.get_mut(&sid) {
+            match channel {
+                Channel::JobEvents => s.job_events = false,
+                Channel::PowerEvents => s.power_events = false,
+                Channel::Telemetry => s.telemetry = None,
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain up to `max` buffered events from a session's outbox (a
+    /// pending overflow signal leads as [`Event::Lagged`]).
+    pub fn take_events(&mut self, sid: SessionId, max: usize) -> Vec<Event> {
+        self.subs
+            .get_mut(&sid)
+            .map(|s| s.outbox.drain(max))
+            .unwrap_or_default()
+    }
+
+    /// Buffered (not yet polled) event count of a session.
+    pub fn pending_events(&self, sid: SessionId) -> usize {
+        self.subs.get(&sid).map(|s| s.outbox.len()).unwrap_or(0)
+    }
+
+    /// Retarget the per-session outbox bound (default 256). Applies to
+    /// existing and future subscriptions; shrinking drops the oldest
+    /// buffered events and counts them as lag.
+    pub fn set_outbox_capacity(&mut self, cap: usize) {
+        self.outbox_cap = cap.max(1);
+        for s in self.subs.values_mut() {
+            s.outbox.set_cap(self.outbox_cap);
+        }
+    }
+
+    fn mint_ticket(&mut self) -> Ticket {
+        let t = self.next_ticket;
+        self.next_ticket += 1;
+        Ticket(t)
     }
 
     // -----------------------------------------------------------------
@@ -612,6 +961,7 @@ impl ClusterApi {
         self.drive(now.max(self.now()));
         let id = self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?;
         self.pump_apps(); // the job may have started on warm nodes
+        self.pump_events();
         Ok(id)
     }
 
@@ -626,6 +976,7 @@ impl ClusterApi {
         self.drive(now.max(self.now()));
         let id = self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?;
         self.pump_apps(); // the job may have started on warm nodes
+        self.pump_events();
         Ok(id)
     }
 
@@ -652,31 +1003,70 @@ impl ClusterApi {
         self.request_as(&sess, req, now)
     }
 
-    /// The `run_job` protocol op (srun): submit and block — drive the
-    /// simulation — until the job reaches a terminal state.
-    pub fn run_request(
+    /// The nonblocking `run_job` protocol op (srun, v2): queue the job
+    /// and return a [`Ticket`] immediately — the cluster clock does
+    /// not advance past the submission instant. Progress is delivered
+    /// on the `JobEvents` channel; the old blocking semantics are a
+    /// thin client-side wait on top ([`ClusterApi::wait_job`], or the
+    /// composed [`ClusterApi::run_request`]). Non-admin submissions
+    /// keep the srun horizon clamp on their time limit, so waiting on
+    /// the ticket later is bounded exactly like the old blocking call.
+    pub fn run_ticket(
         &mut self,
         sid: SessionId,
         req: &JobRequest,
         now: SimTime,
-    ) -> Result<(JobId, JobState), DalekError> {
+    ) -> Result<(Ticket, JobId), DalekError> {
         let sess = self.session(sid, now)?;
         let owner = self.owner_for(&sess, &req.user)?;
         let mut spec = self.spec_from_request(&owner, req)?;
+        if !sess.admin {
+            spec.time_limit = spec.time_limit.min(NON_ADMIN_SRUN_HORIZON);
+        }
+        self.drive(now.max(self.now()));
+        let id = self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?;
+        self.pump_apps(); // the job may have started on warm nodes
+        self.pump_events();
+        Ok((self.mint_ticket(), id))
+    }
+
+    /// The thin client-side wait that rebuilds blocking `srun` on a
+    /// ticket: drive the whole cluster in strides until the job is
+    /// terminal. Semantics (deadline, orphan cancellation, stride) are
+    /// exactly the old blocking `run_job`'s — a ticket+wait run
+    /// reproduces its timestamps and joules bit-for-bit. Non-admins
+    /// may wait only on their own jobs (waiting advances the shared
+    /// clock, the capability the `advance` op restricts) and are
+    /// bounded by the srun horizon from `issued`.
+    pub fn wait_job(
+        &mut self,
+        sid: SessionId,
+        id: JobId,
+        issued: SimTime,
+    ) -> Result<(JobId, JobState), DalekError> {
+        let now0 = self.now();
+        let sess = self.session(sid, now0)?;
+        let (owner, limit_clamped) = {
+            let job = self.slurm.ctl.job(id).ok_or(DalekError::UnknownJob(id))?;
+            (
+                job.spec.user.clone(),
+                job.spec.time_limit <= NON_ADMIN_SRUN_HORIZON,
+            )
+        };
+        if owner != sess.login && !sess.admin {
+            return Err(DalekError::AdminOnly);
+        }
         // srun drives the shared sim clock; bound both the job's own
         // runtime and the total advance (queue wait included) for
         // non-admins — the unbounded version is the admin `advance` op
         let deadline = if sess.admin {
             None
         } else {
-            spec.time_limit = spec.time_limit.min(NON_ADMIN_SRUN_HORIZON);
-            Some(now.max(self.now()) + NON_ADMIN_SRUN_HORIZON)
+            Some(issued.max(now0) + NON_ADMIN_SRUN_HORIZON)
         };
-        self.drive(now.max(self.now()));
-        let id = self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?;
         // block: advance the whole cluster in strides until terminal
         loop {
-            let state = self.slurm.ctl.job(id).expect("submitted").state;
+            let state = self.slurm.ctl.job(id).expect("checked above").state;
             if matches!(
                 state,
                 JobState::Completed | JobState::Timeout | JobState::Cancelled
@@ -684,16 +1074,29 @@ impl ClusterApi {
                 return Ok((id, state));
             }
             let before = self.now();
-            if deadline.is_some_and(|d| before >= d) && state == JobState::Pending {
-                // deadline hit while still queued: don't leave an
-                // unreferencable orphan under the user's name. A job
-                // that already started holds real resources and — with
-                // the §3.6 rate floored at MIN_RATE — terminates in
-                // bounded wall time even under a severe admin power
-                // cap, so the horizon bounds the queue wait only and
-                // the loop keeps blocking for started jobs.
-                let _ = self.slurm.ctl.cancel(id, before);
-                return Err(DalekError::Deadline(id));
+            if deadline.is_some_and(|d| before >= d) {
+                if state == JobState::Pending {
+                    // deadline hit while still queued: don't leave an
+                    // unreferencable orphan under the user's name
+                    let _ = self.slurm.ctl.cancel(id, before);
+                    self.pump_events();
+                    return Err(DalekError::Deadline(id));
+                }
+                // A started srun-ticket job has its time limit clamped
+                // to the horizon and — with the §3.6 rate floored at
+                // MIN_RATE — terminates in bounded wall time, so (like
+                // the old blocking srun, which only ever saw clamped
+                // specs) the loop keeps blocking for it: the horizon
+                // bounds the queue wait only. But wait_job also accepts
+                // any owned `submit_job` id, whose limit is unclamped —
+                // blocking on one would hand a non-admin an unbounded
+                // shared-clock advance (the capability the `advance` op
+                // restricts). Stop waiting instead: the job keeps
+                // running, and the client can wait again or follow it
+                // through JobEvents.
+                if !limit_clamped {
+                    return Err(DalekError::Deadline(id));
+                }
             }
             // every queued job drains in finite sim time (durations are
             // capped by their time limits), so striding forward always
@@ -703,32 +1106,69 @@ impl ClusterApi {
         }
     }
 
-    /// The `alloc_nodes` protocol op (salloc): reserve nodes and open
-    /// the SSH gate; returns the allocated node names.
-    pub fn alloc_request(
+    /// The old blocking srun, rebuilt on the nonblocking parts:
+    /// ticket, then wait.
+    pub fn run_request(
         &mut self,
         sid: SessionId,
         req: &JobRequest,
         now: SimTime,
-    ) -> Result<(JobId, Vec<String>), DalekError> {
+    ) -> Result<(JobId, JobState), DalekError> {
+        let (_ticket, id) = self.run_ticket(sid, req, now)?;
+        self.wait_job(sid, id, now)
+    }
+
+    /// The nonblocking `alloc_nodes` protocol op (salloc, v2): queue
+    /// the reservation and return a [`Ticket`] immediately. The
+    /// allocation is registered against the session — logout or expiry
+    /// releases it ([`ClusterApi::logout`]). `JobEvents` report when it
+    /// starts; [`ClusterApi::wait_alloc`] rebuilds the blocking
+    /// semantics (and grants interactive SSH).
+    pub fn alloc_ticket(
+        &mut self,
+        sid: SessionId,
+        req: &JobRequest,
+        now: SimTime,
+    ) -> Result<(Ticket, JobId), DalekError> {
         let sess = self.session(sid, now)?;
         let owner = self.owner_for(&sess, &req.user)?;
         let spec = self.spec_from_request(&owner, req)?;
-        let user = spec.user.clone();
-        let limit = spec.time_limit;
         self.drive(now.max(self.now()));
         let id = self.slurm.sbatch(&mut self.kernel, sess.uid, spec, now)?;
+        self.pump_apps();
+        self.pump_events();
+        self.session_allocs.entry(sid).or_default().push(id);
+        Ok((self.mint_ticket(), id))
+    }
+
+    /// The blocking half of salloc: drive the cluster until the
+    /// allocation exists (bounded by the §3.4 boot budget), grant
+    /// interactive SSH through the login gate, and return the node
+    /// names. Non-admins may wait only on their own allocations.
+    pub fn wait_alloc(
+        &mut self,
+        sid: SessionId,
+        id: JobId,
+    ) -> Result<(JobId, Vec<String>), DalekError> {
+        let now0 = self.now();
+        let sess = self.session(sid, now0)?;
+        let (user, limit) = {
+            let job = self.slurm.ctl.job(id).ok_or(DalekError::UnknownJob(id))?;
+            (job.spec.user.clone(), job.spec.time_limit)
+        };
+        if user != sess.login && !sess.admin {
+            return Err(DalekError::AdminOnly);
+        }
         // advance until the allocation exists (≤ boot budget)
-        let deadline =
-            now.max(self.now()) + self.slurm.ctl.power_policy.max_boot_delay + SimTime::from_mins(10);
-        while self.slurm.ctl.job(id).expect("submitted").state == JobState::Pending
+        let deadline = now0 + self.slurm.ctl.power_policy.max_boot_delay + SimTime::from_mins(10);
+        while self.slurm.ctl.job(id).expect("checked above").state == JobState::Pending
             && self.now() < deadline
         {
             let t = self.now() + SimTime::from_secs(10);
             self.drive(t);
         }
         let (state, allocated) = {
-            let job = self.slurm.ctl.job(id).expect("submitted");
+            let job = self.slurm.ctl.job(id).expect("checked above");
             (job.state, job.allocated.clone())
         };
         // the boot budget elapsed with the job still queued — that is a
@@ -738,6 +1178,7 @@ impl ClusterApi {
         if matches!(state, JobState::Pending | JobState::Cancelled) {
             let now = self.now();
             let _ = self.slurm.ctl.cancel(id, now); // don't leave it queued
+            self.pump_events();
             return Err(DalekError::Incomplete);
         }
         let infos = self.slurm.ctl.node_infos();
@@ -751,6 +1192,18 @@ impl ClusterApi {
             }
         }
         Ok((id, nodes))
+    }
+
+    /// The old blocking salloc, rebuilt on the nonblocking parts:
+    /// ticket, then wait.
+    pub fn alloc_request(
+        &mut self,
+        sid: SessionId,
+        req: &JobRequest,
+        now: SimTime,
+    ) -> Result<(JobId, Vec<String>), DalekError> {
+        let (_ticket, id) = self.alloc_ticket(sid, req, now)?;
+        self.wait_alloc(sid, id)
     }
 
     /// squeue-style job lookup (any authenticated user).
@@ -785,7 +1238,9 @@ impl ClusterApi {
         if owner != sess.login && !sess.admin {
             return Err(DalekError::AdminOnly);
         }
-        Ok(self.slurm.ctl.cancel(id, now)?)
+        self.slurm.ctl.cancel(id, now)?;
+        self.pump_events();
+        Ok(())
     }
 
     // -----------------------------------------------------------------
@@ -990,6 +1445,7 @@ impl ClusterApi {
             .ctl
             .apply_power_knobs(&mut self.kernel, idx, cpu_cap, gpu_cap, powersave, now);
         self.pump_apps(); // deliver the reprice notice to the engine
+        self.pump_events(); // and the actuation to PowerEvents subscribers
         Ok(())
     }
 
@@ -1156,12 +1612,50 @@ impl ClusterApi {
                 Ok(Response::Submitted { job })
             }
             Request::RunJob(r) => {
-                let (job, state) = self.run_request(sid, r, now)?;
-                Ok(Response::JobRan { job, state })
+                let (ticket, job) = self.run_ticket(sid, r, now)?;
+                Ok(Response::Ticket {
+                    ticket: ticket.0,
+                    job,
+                })
             }
             Request::AllocNodes(r) => {
-                let (job, nodes) = self.alloc_request(sid, r, now)?;
+                let (ticket, job) = self.alloc_ticket(sid, r, now)?;
+                Ok(Response::Ticket {
+                    ticket: ticket.0,
+                    job,
+                })
+            }
+            Request::WaitJob { job } => {
+                let (job, state) = self.wait_job(sid, *job, now)?;
+                Ok(Response::JobRan { job, state })
+            }
+            Request::WaitAlloc { job } => {
+                let (job, nodes) = self.wait_alloc(sid, *job)?;
                 Ok(Response::Allocated { job, nodes })
+            }
+            Request::Subscribe { channel, rate_hz } => {
+                self.subscribe(sid, *channel, *rate_hz)?;
+                Ok(Response::Subscribed { channel: *channel })
+            }
+            Request::Unsubscribe { channel } => {
+                self.unsubscribe(sid, *channel)?;
+                Ok(Response::Unsubscribed { channel: *channel })
+            }
+            Request::PollEvents { max } => {
+                self.session(sid, now)?;
+                let events = self.take_events(sid, *max as usize);
+                Ok(Response::Events { events })
+            }
+            Request::SetRateLimit { user, ops } => {
+                // the budget itself lives in the multiplexing ApiServer
+                // (which intercepts this op); the capability check and
+                // the user's existence are validated here either way
+                self.admin_session(sid, now)?;
+                self.users.user(user)?;
+                Ok(Response::RateLimitSet {
+                    user: user.clone(),
+                    ops: *ops,
+                })
             }
             Request::JobInfo { job } => Ok(Response::Job(self.job_info(sid, *job)?)),
             Request::CancelJob { job } => {
@@ -1839,6 +2333,313 @@ mod tests {
         ));
         assert!(matches!(
             c.handle(None, &Request::ClusterReport),
+            Err(DalekError::InvalidSession)
+        ));
+    }
+
+    // ---- the streaming surface ----
+
+    fn simple_req(partition: &str, nodes: u32, secs: u64) -> JobRequest {
+        JobRequest {
+            partition: partition.into(),
+            nodes,
+            duration: SimTime::from_secs(secs),
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: None,
+            app: None,
+        }
+    }
+
+    #[test]
+    fn run_ticket_is_nonblocking_and_wait_reproduces_blocking() {
+        let mut c = cluster();
+        c.add_user("alice");
+        let sid = c.login("alice").unwrap();
+        let (ticket, id) = c
+            .run_ticket(sid, &simple_req("az5-a890m", 2, 300), SimTime::ZERO)
+            .unwrap();
+        assert_eq!(ticket, Ticket(1));
+        // nonblocking: the clock did not advance past the submission
+        assert_eq!(c.now(), SimTime::ZERO);
+        assert_eq!(c.job_info(sid, id).unwrap().state, JobState::Configuring);
+        // the thin wait drives to the terminal state, like old srun
+        let (jid, state) = c.wait_job(sid, id, SimTime::ZERO).unwrap();
+        assert_eq!(jid, id);
+        assert_eq!(state, JobState::Completed);
+        let job = c.slurm().job(id).unwrap();
+        // az5 boots in 70 s; the run is exactly the nominal duration
+        assert_eq!(job.started, Some(SimTime::from_secs(70)));
+        assert_eq!(job.finished, Some(SimTime::from_secs(370)));
+    }
+
+    #[test]
+    fn wait_job_is_owner_or_admin_scoped() {
+        let mut c = cluster();
+        c.add_user("alice");
+        c.add_user("eve");
+        let alice = c.login("alice").unwrap();
+        let eve = c.login("eve").unwrap();
+        let (_t, id) = c
+            .run_ticket(alice, &simple_req("az5-a890m", 1, 60), SimTime::ZERO)
+            .unwrap();
+        // waiting advances the shared clock: not for strangers
+        assert!(matches!(
+            c.wait_job(eve, id, SimTime::ZERO),
+            Err(DalekError::AdminOnly)
+        ));
+        let root = c.login("root").unwrap();
+        assert!(c.wait_job(root, id, SimTime::ZERO).is_ok());
+    }
+
+    #[test]
+    fn job_events_are_owner_scoped_and_carry_joules() {
+        let mut c = cluster();
+        c.add_user("alice");
+        c.add_user("bob");
+        let alice = c.login("alice").unwrap();
+        let bob = c.login("bob").unwrap();
+        c.subscribe(alice, Channel::JobEvents, None).unwrap();
+        c.subscribe(bob, Channel::JobEvents, None).unwrap();
+        let req = simple_req("az5-a890m", 2, 120);
+        let id = c.submit_request(alice, &req, SimTime::ZERO).unwrap();
+        c.run_until(SimTime::from_mins(10), false);
+        let events = c.take_events(alice, usize::MAX);
+        let kinds: Vec<&Event> = events.iter().collect();
+        assert!(matches!(
+            kinds[0],
+            Event::Job { job, kind: JobEventKind::Queued, .. } if *job == id
+        ));
+        assert!(matches!(
+            kinds[1],
+            Event::Job { at, kind: JobEventKind::Started, .. }
+                if *at == SimTime::from_secs(70)
+        ));
+        let Event::Job {
+            kind: JobEventKind::Finished { state, joules },
+            ..
+        } = kinds[2]
+        else {
+            panic!("expected Finished, got {:?}", kinds[2]);
+        };
+        assert_eq!(*state, JobState::Completed);
+        let settled = c.slurm().job(id).unwrap().energy_j;
+        assert!((joules - settled).abs() < 1e-12, "{joules} vs {settled}");
+        // bob subscribed too but owns nothing: no events
+        assert!(c.take_events(bob, usize::MAX).is_empty());
+        // an admin subscriber sees everyone's jobs
+        let root = c.login("root").unwrap();
+        c.subscribe(root, Channel::JobEvents, None).unwrap();
+        c.submit_request(alice, &req, c.now()).unwrap();
+        c.run_until(c.now() + SimTime::from_mins(10), false);
+        assert!(!c.take_events(root, usize::MAX).is_empty());
+    }
+
+    #[test]
+    fn outbox_overflow_signals_lagged() {
+        let mut c = cluster();
+        c.add_user("alice");
+        let sid = c.login("alice").unwrap();
+        c.set_outbox_capacity(4);
+        c.subscribe(sid, Channel::JobEvents, None).unwrap();
+        // 3 jobs x (queued + started + finished) = 9 events >> 4
+        for k in 0..3 {
+            let at = c.now() + SimTime::from_secs(k);
+            c.submit_request(sid, &simple_req("az5-a890m", 1, 30), at)
+                .unwrap();
+        }
+        c.run_until(c.now() + SimTime::from_mins(10), false);
+        let events = c.take_events(sid, usize::MAX);
+        let Event::Lagged { missed } = events[0] else {
+            panic!("expected a leading Lagged, got {:?}", events[0]);
+        };
+        assert_eq!(missed, 5);
+        assert_eq!(events.len(), 5); // the signal + the surviving 4
+    }
+
+    #[test]
+    fn power_events_deliver_governor_and_actuations() {
+        let mut c = cluster();
+        let root = c.login("root").unwrap();
+        c.subscribe(root, Channel::PowerEvents, None).unwrap();
+        c.set_power_budget(root, Some(180.0)).unwrap();
+        c.submit(JobSpec::cpu("root", "az5-a890m", 4, 300), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_mins(4), false);
+        let events = c.take_events(root, usize::MAX);
+        let ticks = events
+            .iter()
+            .filter(|e| matches!(e, Event::Power { kind: PowerEventKind::GovernorTick { .. }, .. }))
+            .count();
+        let caps = events
+            .iter()
+            .filter(|e| matches!(e, Event::Power { kind: PowerEventKind::CapActuated { .. }, .. }))
+            .count();
+        assert!(ticks > 0, "no governor ticks in {} events", events.len());
+        assert!(caps > 0, "no cap actuations in {} events", events.len());
+        // timestamps are non-decreasing within the power stream
+        let mut last = SimTime::ZERO;
+        for e in &events {
+            if let Event::Power { at, .. } = e {
+                assert!(*at >= last);
+                last = *at;
+            }
+        }
+    }
+
+    #[test]
+    fn telemetry_windows_tile_the_timeline_without_samples() {
+        let mut c = cluster();
+        let root = c.login("root").unwrap();
+        c.set_outbox_capacity(10_000);
+        c.subscribe(root, Channel::Telemetry, Some(2.0)).unwrap();
+        c.submit(JobSpec::cpu("root", "az5-a890m", 2, 60), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_secs(30), false);
+        c.run_until(SimTime::from_secs(100), false);
+        let events = c.take_events(root, usize::MAX);
+        // 2 Hz over 100 s = 200 windows, regardless of drive splits
+        assert_eq!(events.len(), 200, "{events:?}");
+        let mut expect_from = SimTime::ZERO;
+        let mut total = 0.0;
+        for e in &events {
+            let Event::Telemetry { from, to, energy_j, .. } = e else {
+                panic!("expected telemetry, got {e:?}");
+            };
+            assert_eq!(*from, expect_from, "windows must tile");
+            assert_eq!(to.as_ns() - from.as_ns(), 500_000_000);
+            total += energy_j;
+            expect_from = *to;
+        }
+        // the tiled windows integrate the scheduler's exact truth
+        let truth = c.slurm().total_energy_j();
+        assert!(
+            (total - truth).abs() < 1e-6,
+            "telemetry {total} vs truth {truth}"
+        );
+        // and no sample was ever materialized
+        assert_eq!(c.report().samples, 0);
+    }
+
+    #[test]
+    fn power_events_and_rate_limit_are_admin_only() {
+        let mut c = cluster();
+        c.add_user("alice");
+        let sid = c.login("alice").unwrap();
+        assert!(matches!(
+            c.subscribe(sid, Channel::PowerEvents, None),
+            Err(DalekError::AdminOnly)
+        ));
+        assert!(matches!(
+            c.handle(
+                Some(sid),
+                &Request::SetRateLimit {
+                    user: "alice".into(),
+                    ops: 1
+                }
+            ),
+            Err(DalekError::AdminOnly)
+        ));
+        // non-admins may watch their own jobs and the telemetry
+        assert!(c.subscribe(sid, Channel::JobEvents, None).is_ok());
+        assert!(c.subscribe(sid, Channel::Telemetry, Some(1.0)).is_ok());
+        // and bad telemetry rates are rejected
+        assert!(matches!(
+            c.subscribe(sid, Channel::Telemetry, Some(1.0 / 500.0)),
+            Err(DalekError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn logout_releases_salloc_allocation_and_subscriptions() {
+        let mut c = cluster();
+        c.add_user("alice");
+        let sid = c.login("alice").unwrap();
+        c.subscribe(sid, Channel::JobEvents, None).unwrap();
+        let (_t, id) = c
+            .alloc_ticket(sid, &simple_req("iml-ia770", 2, 3600), SimTime::ZERO)
+            .unwrap();
+        let (_, nodes) = c.wait_alloc(sid, id).unwrap();
+        assert_eq!(nodes.len(), 2);
+        let now = c.now();
+        assert!(c.slurm.gate.try_ssh(&nodes[0], "alice", now));
+        // logout: the allocation must not survive the session
+        assert!(c.logout(sid));
+        let job = c.slurm().job(id).unwrap();
+        assert_eq!(job.state, JobState::Cancelled);
+        let now = c.now();
+        assert!(!c.slurm.gate.try_ssh(&nodes[0], "alice", now));
+        // nodes drain back to the pool (idle, then §3.4 suspend)
+        c.run_until(now + SimTime::from_mins(15), false);
+        for n in c.slurm().node_infos().iter().filter(|n| nodes.contains(&n.name)) {
+            assert!(n.running.is_none());
+        }
+        // subscriptions died with the session
+        assert_eq!(c.pending_events(sid), 0);
+        assert!(c.take_events(sid, usize::MAX).is_empty());
+    }
+
+    #[test]
+    fn logout_tears_down_a_running_app_program_cleanly() {
+        // the salloc'd job carries a phase-structured program: teardown
+        // must cancel the engine run (barrier timer, collective flows)
+        // before releasing the nodes, or a later RankDue would complete
+        // a cancelled job against freed nodes
+        let mut c = cluster();
+        c.add_user("alice");
+        let sid = c.login("alice").unwrap();
+        let app = crate::app::AppSpec::allreduce_loop("train", 120.0, 8_000_000, 50);
+        let req = JobRequest {
+            partition: "az5-a890m".into(),
+            nodes: 2,
+            duration: SimTime::ZERO,
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: None,
+            app: Some(app),
+        };
+        let (_t, id) = c.alloc_ticket(sid, &req, SimTime::ZERO).unwrap();
+        c.run_until(SimTime::from_mins(3), false); // booted, program running
+        assert_eq!(c.slurm().job(id).unwrap().state, JobState::Running);
+        assert_eq!(c.apps().active_apps(), 1);
+        assert!(c.logout(sid));
+        assert_eq!(c.apps().active_apps(), 0, "engine run must be torn down");
+        assert_eq!(c.slurm().job(id).unwrap().state, JobState::Cancelled);
+        // drain far past where the program would have completed: no
+        // stale timer fires, nothing panics, the job stays cancelled
+        c.run_until(SimTime::from_hours(6), false);
+        assert_eq!(c.slurm().job(id).unwrap().state, JobState::Cancelled);
+        assert_eq!(c.net().active_flows(), 0);
+    }
+
+    #[test]
+    fn session_expiry_releases_allocation_like_logout() {
+        let mut c = cluster();
+        c.add_user("alice");
+        let sid = c.login("alice").unwrap();
+        // a 20-day interactive reservation: still live when the 7-day
+        // session TTL lapses
+        let (_t, id) = c
+            .alloc_ticket(sid, &simple_req("iml-ia770", 1, 20 * 24 * 3600), SimTime::ZERO)
+            .unwrap();
+        c.wait_alloc(sid, id).unwrap();
+        // idle past the sliding TTL (7 days), via the operator console
+        let root = c.login("root").unwrap();
+        c.handle(
+            Some(root),
+            &Request::Advance {
+                to: SimTime::from_hours(8 * 24),
+                sample: false,
+            },
+        )
+        .unwrap();
+        // the advance's expiry sweep tore the session down — the
+        // allocation is released even though the client never returned
+        assert_eq!(c.slurm().job(id).unwrap().state, JobState::Cancelled);
+        assert!(matches!(
+            c.handle(Some(sid), &Request::ClusterReport),
             Err(DalekError::InvalidSession)
         ));
     }

@@ -1,0 +1,361 @@
+//! Typed streaming events: what a subscribed session receives.
+//!
+//! The §4 energy platform exists to be *watched live*: 1 kSPS probes,
+//! governor actuations, job state changes. This module defines the
+//! three subscription channels ([`Channel`]) and their event payloads
+//! ([`Event`]), plus the bounded per-session [`Outbox`] they buffer in:
+//!
+//! * `JobEvents` — queued / started / repriced / finished (with the
+//!   measured joules the §6.2 settlement charged), scoped to the
+//!   session's own jobs (admins see every job);
+//! * `PowerEvents` — governor control ticks, §3.6 cap actuations and
+//!   budget violations (admin-only, like the ops that cause them);
+//! * `Telemetry` — decimated windows cut from the streaming sampler's
+//!   rolling piecewise history at a client-chosen rate. No sample is
+//!   materialized: each window is one closed-form integral over the
+//!   transition segments, so a 10 Hz subscription costs the same in a
+//!   sampled and an unsampled run.
+//!
+//! Outboxes are bounded; on overflow the oldest events are dropped and
+//! the next poll leads with an explicit [`Event::Lagged`] signal, the
+//! way `tokio::sync::broadcast` reports lagging receivers — a slow
+//! client learns it lost data instead of silently seeing a gap.
+
+use std::collections::VecDeque;
+
+use super::protocol::job_state_str;
+use crate::sim::SimTime;
+use crate::slurm::{JobId, JobState};
+use crate::util::json::Json;
+
+/// Receipt for a nonblocking submission (`run_job` / `alloc_nodes`):
+/// the request was accepted and the job queued; progress arrives as
+/// `JobEvents`. Blocking semantics are a client-side wait on top
+/// (`wait_job` / `wait_alloc`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Ticket(pub u64);
+
+/// The subscription channels.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Channel {
+    JobEvents,
+    PowerEvents,
+    Telemetry,
+}
+
+impl Channel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Channel::JobEvents => "job_events",
+            Channel::PowerEvents => "power_events",
+            Channel::Telemetry => "telemetry",
+        }
+    }
+
+    pub fn from_wire(s: &str) -> Option<Self> {
+        match s {
+            "job_events" => Some(Channel::JobEvents),
+            "power_events" => Some(Channel::PowerEvents),
+            "telemetry" => Some(Channel::Telemetry),
+            _ => None,
+        }
+    }
+}
+
+/// One job's lifecycle step, as delivered on the `JobEvents` channel.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum JobEventKind {
+    Queued,
+    Started,
+    /// a §3.6 knob changed on one of the job's nodes; `rate` is the new
+    /// slowest-allocated-node relative execution rate
+    Repriced { rate: f64 },
+    /// terminal: `joules` is the measured settlement energy the job's
+    /// nodes drew while it ran (0 for jobs cancelled before starting)
+    Finished { state: JobState, joules: f64 },
+}
+
+/// One governor/power-plane step, as delivered on `PowerEvents`.
+#[derive(Clone, PartialEq, Debug)]
+pub enum PowerEventKind {
+    /// one §3.6 control step: measured rolling watts vs the budget
+    GovernorTick {
+        rolling_w: f64,
+        budget_w: f64,
+        throttle: f64,
+    },
+    /// a node's RAPL/dGPU/DVFS knobs were actuated
+    CapActuated {
+        node: String,
+        cpu_cap_w: Option<f64>,
+        gpu_cap_w: Option<f64>,
+        powersave: bool,
+    },
+    /// the measured rolling draw exceeded budget × (1 + tolerance)
+    BudgetViolation { rolling_w: f64, budget_w: f64 },
+}
+
+/// Everything a subscribed session can receive.
+#[derive(Clone, PartialEq, Debug)]
+pub enum Event {
+    Job {
+        at: SimTime,
+        job: JobId,
+        kind: JobEventKind,
+    },
+    Power {
+        at: SimTime,
+        kind: PowerEventKind,
+    },
+    /// one decimated telemetry window: the true piecewise cluster power
+    /// integrated over `[from, to)` — no sample materialization
+    Telemetry {
+        from: SimTime,
+        to: SimTime,
+        mean_w: f64,
+        energy_j: f64,
+    },
+    /// the outbox overflowed (or telemetry windows aged past the
+    /// rolling-history horizon): `missed` events/windows were dropped
+    Lagged { missed: u64 },
+}
+
+impl Event {
+    /// Encode for the wire (`poll_events` replies, the `dalek api`
+    /// batch transcript). Events are server → client only; there is no
+    /// decoder.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::Job { at, job, kind } => {
+                let mut fields: Vec<(&str, Json)> = vec![
+                    ("event", Json::from("job")),
+                    ("at_s", Json::from(at.as_secs_f64())),
+                    ("job", Json::from(job.0)),
+                ];
+                match kind {
+                    JobEventKind::Queued => fields.push(("kind", Json::from("queued"))),
+                    JobEventKind::Started => fields.push(("kind", Json::from("started"))),
+                    JobEventKind::Repriced { rate } => {
+                        fields.push(("kind", Json::from("repriced")));
+                        fields.push(("rate", Json::from(*rate)));
+                    }
+                    JobEventKind::Finished { state, joules } => {
+                        fields.push(("kind", Json::from("finished")));
+                        fields.push(("state", Json::from(job_state_str(*state))));
+                        fields.push(("joules", Json::from(*joules)));
+                    }
+                }
+                Json::object(fields)
+            }
+            Event::Power { at, kind } => {
+                let mut fields: Vec<(&str, Json)> = vec![
+                    ("event", Json::from("power")),
+                    ("at_s", Json::from(at.as_secs_f64())),
+                ];
+                match kind {
+                    PowerEventKind::GovernorTick {
+                        rolling_w,
+                        budget_w,
+                        throttle,
+                    } => {
+                        fields.push(("kind", Json::from("governor_tick")));
+                        fields.push(("rolling_w", Json::from(*rolling_w)));
+                        fields.push(("budget_w", Json::from(*budget_w)));
+                        fields.push(("throttle", Json::from(*throttle)));
+                    }
+                    PowerEventKind::CapActuated {
+                        node,
+                        cpu_cap_w,
+                        gpu_cap_w,
+                        powersave,
+                    } => {
+                        fields.push(("kind", Json::from("cap_actuated")));
+                        fields.push(("node", Json::from(node.as_str())));
+                        if let Some(c) = cpu_cap_w {
+                            fields.push(("cpu_cap_w", Json::from(*c)));
+                        }
+                        if let Some(g) = gpu_cap_w {
+                            fields.push(("gpu_cap_w", Json::from(*g)));
+                        }
+                        fields.push(("powersave", Json::from(*powersave)));
+                    }
+                    PowerEventKind::BudgetViolation {
+                        rolling_w,
+                        budget_w,
+                    } => {
+                        fields.push(("kind", Json::from("budget_violation")));
+                        fields.push(("rolling_w", Json::from(*rolling_w)));
+                        fields.push(("budget_w", Json::from(*budget_w)));
+                    }
+                }
+                Json::object(fields)
+            }
+            Event::Telemetry {
+                from,
+                to,
+                mean_w,
+                energy_j,
+            } => Json::object([
+                ("event", Json::from("telemetry")),
+                ("from_s", Json::from(from.as_secs_f64())),
+                ("to_s", Json::from(to.as_secs_f64())),
+                ("mean_w", Json::from(*mean_w)),
+                ("energy_j", Json::from(*energy_j)),
+            ]),
+            Event::Lagged { missed } => Json::object([
+                ("event", Json::from("lagged")),
+                ("missed", Json::from(*missed)),
+            ]),
+        }
+    }
+}
+
+/// A bounded per-session event buffer. Overflow drops the oldest
+/// events and records the count; the next drain leads with one
+/// [`Event::Lagged`] carrying it.
+#[derive(Debug)]
+pub(crate) struct Outbox {
+    buf: VecDeque<Event>,
+    cap: usize,
+    missed: u64,
+}
+
+impl Outbox {
+    pub(crate) fn new(cap: usize) -> Self {
+        Self {
+            buf: VecDeque::new(),
+            cap: cap.max(1),
+            missed: 0,
+        }
+    }
+
+    pub(crate) fn push(&mut self, ev: Event) {
+        if self.buf.len() >= self.cap {
+            self.buf.pop_front();
+            self.missed += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    /// Record `n` missed items directly, without touching the buffer
+    /// (telemetry windows that aged past the rolling horizon and were
+    /// never materialized).
+    pub(crate) fn lag(&mut self, n: u64) {
+        self.missed += n;
+    }
+
+    /// Retarget the capacity; if the buffer already exceeds it, the
+    /// overflow is dropped (oldest first) and counted as missed.
+    pub(crate) fn set_cap(&mut self, cap: usize) {
+        self.cap = cap.max(1);
+        while self.buf.len() > self.cap {
+            self.buf.pop_front();
+            self.missed += 1;
+        }
+    }
+
+    /// Take up to `max` events; a pending lag signal comes first and
+    /// counts toward `max`.
+    pub(crate) fn drain(&mut self, max: usize) -> Vec<Event> {
+        let mut out = Vec::new();
+        if max == 0 {
+            return out;
+        }
+        if self.missed > 0 {
+            out.push(Event::Lagged {
+                missed: self.missed,
+            });
+            self.missed = 0;
+        }
+        while out.len() < max {
+            match self.buf.pop_front() {
+                Some(e) => out.push(e),
+                None => break,
+            }
+        }
+        out
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_names_round_trip() {
+        for c in [Channel::JobEvents, Channel::PowerEvents, Channel::Telemetry] {
+            assert_eq!(Channel::from_wire(c.as_str()), Some(c));
+        }
+        assert_eq!(Channel::from_wire("exterminate"), None);
+    }
+
+    #[test]
+    fn outbox_bounds_and_signals_lag() {
+        let mut o = Outbox::new(3);
+        for i in 0..5u64 {
+            o.push(Event::Lagged { missed: 100 + i }); // payload irrelevant
+        }
+        assert_eq!(o.len(), 3);
+        let drained = o.drain(10);
+        // 2 dropped -> leading Lagged{2}, then the surviving 3
+        assert_eq!(drained.len(), 4);
+        assert_eq!(drained[0], Event::Lagged { missed: 2 });
+        // lag cleared after reporting
+        assert!(o.drain(10).is_empty());
+    }
+
+    #[test]
+    fn outbox_drain_respects_max() {
+        let mut o = Outbox::new(10);
+        for _ in 0..5 {
+            o.push(Event::Lagged { missed: 9 });
+        }
+        assert_eq!(o.drain(2).len(), 2);
+        assert_eq!(o.drain(100).len(), 3);
+    }
+
+    #[test]
+    fn shrinking_cap_drops_oldest_and_counts() {
+        let mut o = Outbox::new(8);
+        for i in 0..6u64 {
+            o.push(Event::Lagged { missed: i });
+        }
+        o.set_cap(2);
+        assert_eq!(o.len(), 2);
+        let d = o.drain(10);
+        assert_eq!(d[0], Event::Lagged { missed: 4 });
+        assert_eq!(d.len(), 3);
+    }
+
+    #[test]
+    fn event_json_shapes() {
+        let e = Event::Job {
+            at: SimTime::from_secs(70),
+            job: JobId(3),
+            kind: JobEventKind::Finished {
+                state: JobState::Completed,
+                joules: 123.5,
+            },
+        }
+        .to_json();
+        assert_eq!(e.get("event").unwrap().as_str(), Some("job"));
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("finished"));
+        assert_eq!(e.get("state").unwrap().as_str(), Some("completed"));
+        assert_eq!(e.get("joules").unwrap().as_f64(), Some(123.5));
+        let t = Event::Telemetry {
+            from: SimTime::ZERO,
+            to: SimTime::from_ms(100),
+            mean_w: 42.0,
+            energy_j: 4.2,
+        }
+        .to_json();
+        assert_eq!(t.get("event").unwrap().as_str(), Some("telemetry"));
+        assert_eq!(t.get("mean_w").unwrap().as_f64(), Some(42.0));
+        let l = Event::Lagged { missed: 7 }.to_json();
+        assert_eq!(l.get("missed").unwrap().as_u64(), Some(7));
+    }
+}

@@ -20,16 +20,30 @@
 //!   runtime on one `sim::Kernel` ([`ClusterEvent`] is the routing
 //!   enum) and routes every request to the (crate-internal)
 //!   `SlurmApi`/`EnergyApi` targets
+//! * [`events`] — the streaming side: typed [`Event`]s on three
+//!   subscription channels (`JobEvents`, `PowerEvents`, `Telemetry`),
+//!   buffered in bounded per-session outboxes with explicit lag
+//!   signaling; `run_job`/`alloc_nodes` are nonblocking [`Ticket`]s
+//!   with the old blocking semantics rebuilt on top (`wait_job` /
+//!   `wait_alloc`)
+//! * [`server`] — [`ApiServer`], the deterministic multiplexer: N
+//!   concurrent client sessions, round-robin request draining with
+//!   per-session rate limits, reproducible bit-for-bit under a seeded
+//!   `TraceGen` storm
 //!
 //! This layer is the seam where a real network transport, request
 //! batching and multi-tenant quotas plug in next.
 
 pub mod cluster_api;
 pub mod error;
+pub mod events;
 pub mod protocol;
+pub mod server;
 pub mod session;
 
 pub use cluster_api::{ClusterApi, ClusterEvent, ClusterReport, PowerReport};
 pub use error::DalekError;
-pub use protocol::{JobRequest, JobView, Request, Response};
+pub use events::{Channel, Event, JobEventKind, PowerEventKind, Ticket};
+pub use protocol::{JobRequest, JobView, Request, Response, WIRE_MAJOR};
+pub use server::ApiServer;
 pub use session::{Session, SessionId, SessionManager};

@@ -1,10 +1,11 @@
 //! The typed request/response protocol and its JSON wire codec.
 //!
 //! One envelope shape for every operation the cluster exposes (§3.4–3.5
-//! job control, §4.3 energy platform, coordinator reports):
+//! job control, §4.3 energy platform, subscriptions, coordinator
+//! reports):
 //!
 //! ```text
-//! {"op": "submit_job", "session": 3, "partition": "az4-n4090", ...}
+//! {"v": 2, "op": "submit_job", "session": 3, "partition": "az4-n4090", ...}
 //! ```
 //!
 //! [`Request::from_json`] decodes an envelope into `(Option<SessionId>,
@@ -15,6 +16,17 @@
 //! JSON-speaking client can drive the cluster — this is the seam where
 //! a real network transport plugs in.
 //!
+//! ## Versioning
+//!
+//! The envelope carries a major protocol version in `"v"`
+//! ([`WIRE_MAJOR`], currently 2: the streaming redesign — nonblocking
+//! `run_job`/`alloc_nodes` tickets, subscriptions). The codec is
+//! tolerant by construction: unknown fields are ignored (so minor
+//! additions never break an older server), an absent `"v"` is accepted
+//! as a pre-versioned v1 client, and only a *future major* — a client
+//! speaking a grammar this server cannot honour — is refused at decode
+//! time with a `BadRequest`.
+//!
 //! Wire contract for integers: JSON numbers travel as f64, so integer
 //! fields are exact only below 2^53. Fields where rounding would lie
 //! (`nodes`, `iters`, `job`, `line`, `probe`, `decimate`, `session`)
@@ -23,12 +35,19 @@
 //! accepted as-is.
 
 use super::error::DalekError;
+use super::events::{Channel, Event};
 use super::session::SessionId;
 use crate::app::{AppSpec, Collective, PhaseSpec};
 use crate::energy::Sample;
 use crate::sim::SimTime;
 use crate::slurm::{JobId, JobState};
 use crate::util::json::Json;
+
+/// The protocol's major version, carried as `"v"` on every envelope.
+/// Version 2 is the streaming redesign: `run_job`/`alloc_nodes` return
+/// tickets, `subscribe`/`unsubscribe`/`poll_events` deliver typed
+/// events, and the blocking semantics moved to `wait_job`/`wait_alloc`.
+pub const WIRE_MAJOR: u64 = 2;
 
 /// What a job submission carries on the wire. The owning user comes
 /// from the session; `user` is the admin-only "submit on behalf of"
@@ -89,6 +108,30 @@ pub enum Request {
     SetPolicy { partition: String, policy: String },
     /// Read the governor's telemetry/actuation state.
     PowerReport,
+    /// Open a typed event channel on this session. `PowerEvents` is
+    /// admin-only (it exposes the governor's actuation plane);
+    /// `Telemetry` takes a client-chosen decimation rate (`rate_hz`,
+    /// default 1 Hz, period at most the 120 s rolling horizon).
+    Subscribe {
+        channel: Channel,
+        rate_hz: Option<f64>,
+    },
+    /// Close one channel (idempotent; buffered events stay pollable).
+    Unsubscribe { channel: Channel },
+    /// Drain up to `max` buffered events from this session's outbox; a
+    /// pending overflow signal arrives first as a `lagged` event.
+    PollEvents { max: u32 },
+    /// The thin client-side wait that rebuilds blocking `srun` on top
+    /// of a `run_job` ticket: drive the cluster until the job is
+    /// terminal. Non-admins may wait only on their own jobs and are
+    /// bounded by the srun horizon, exactly like the old blocking op.
+    WaitJob { job: JobId },
+    /// The blocking half of `alloc_nodes`: drive the cluster until the
+    /// allocation exists, grant interactive SSH, return the node names.
+    WaitAlloc { job: JobId },
+    /// Override a user's per-drain request budget on the multiplexing
+    /// `ApiServer` (admin-only; a no-op outside a server).
+    SetRateLimit { user: String, ops: u32 },
 }
 
 /// A job snapshot on the wire.
@@ -155,6 +198,14 @@ pub enum Response {
         idle_shutdowns: u64,
     },
     PolicySet { partition: String, policy: String },
+    /// Nonblocking acceptance of `run_job`/`alloc_nodes`: the job is
+    /// queued; progress arrives on the `JobEvents` channel (or via
+    /// `wait_job`/`wait_alloc`).
+    Ticket { ticket: u64, job: JobId },
+    Subscribed { channel: Channel },
+    Unsubscribed { channel: Channel },
+    Events { events: Vec<Event> },
+    RateLimitSet { user: String, ops: u32 },
     Error { message: String },
 }
 
@@ -345,8 +396,26 @@ fn job_request(o: &Json) -> Result<JobRequest, DalekError> {
 }
 
 impl Request {
-    /// Decode one wire envelope.
+    /// Decode one wire envelope. Unknown fields are tolerated (minor
+    /// additions must not break this server); a future-major `"v"` is
+    /// refused — the client speaks a grammar we cannot honour.
     pub fn from_json(j: &Json) -> Result<(Option<SessionId>, Request), DalekError> {
+        match j.get("v") {
+            None => {} // pre-versioned v1 client
+            Some(v) => {
+                let major = v.as_u64().ok_or_else(|| {
+                    bad(format!(
+                        "field `v` must be a non-negative integer protocol version, got {v}"
+                    ))
+                })?;
+                if major > WIRE_MAJOR {
+                    return Err(bad(format!(
+                        "protocol version {major} is newer than this server speaks \
+                         (max {WIRE_MAJOR})"
+                    )));
+                }
+            }
+        }
         let op = need_str(j, "op")?;
         let session = match j.get("session").and_then(Json::as_u64) {
             None => None,
@@ -446,6 +515,57 @@ impl Request {
                 }
             }
             "power_report" => Request::PowerReport,
+            "subscribe" => {
+                let ch = need_str(j, "channel")?;
+                let channel = Channel::from_wire(&ch).ok_or_else(|| {
+                    bad(format!(
+                        "unknown channel `{ch}` (job_events | power_events | telemetry)"
+                    ))
+                })?;
+                let rate_hz = match j.get("rate_hz") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => match v.as_f64() {
+                        Some(r) if r.is_finite() && r > 0.0 => Some(r),
+                        _ => {
+                            return Err(bad(format!(
+                                "field `rate_hz` must be a positive number, got {v}"
+                            )))
+                        }
+                    },
+                };
+                Request::Subscribe { channel, rate_hz }
+            }
+            "unsubscribe" => {
+                let ch = need_str(j, "channel")?;
+                let channel = Channel::from_wire(&ch).ok_or_else(|| {
+                    bad(format!(
+                        "unknown channel `{ch}` (job_events | power_events | telemetry)"
+                    ))
+                })?;
+                Request::Unsubscribe { channel }
+            }
+            "poll_events" => Request::PollEvents {
+                max: opt_narrow(j, "max", 64u32)?,
+            },
+            "wait_job" => Request::WaitJob {
+                job: JobId(need_safe_u64(j, "job")?),
+            },
+            "wait_alloc" => Request::WaitAlloc {
+                job: JobId(need_safe_u64(j, "job")?),
+            },
+            "set_rate_limit" => {
+                let ops = need_u32(j, "ops")?;
+                if ops == 0 {
+                    // 0 would wedge the client's queue forever; the
+                    // server clamps defensively, but the wire must not
+                    // acknowledge a limit that is not applied
+                    return Err(bad("field `ops` must be at least 1"));
+                }
+                Request::SetRateLimit {
+                    user: need_str(j, "user")?,
+                    ops,
+                }
+            }
             other => return Err(bad(format!("unknown op `{other}`"))),
         };
         Ok((session, req))
@@ -574,8 +694,37 @@ impl Request {
                 "set_policy"
             }
             Request::PowerReport => "power_report",
+            Request::Subscribe { channel, rate_hz } => {
+                push("channel", Json::from(channel.as_str()));
+                if let Some(r) = rate_hz {
+                    push("rate_hz", Json::from(*r));
+                }
+                "subscribe"
+            }
+            Request::Unsubscribe { channel } => {
+                push("channel", Json::from(channel.as_str()));
+                "unsubscribe"
+            }
+            Request::PollEvents { max } => {
+                push("max", Json::from(*max));
+                "poll_events"
+            }
+            Request::WaitJob { job } => {
+                push("job", Json::from(job.0));
+                "wait_job"
+            }
+            Request::WaitAlloc { job } => {
+                push("job", Json::from(job.0));
+                "wait_alloc"
+            }
+            Request::SetRateLimit { user, ops } => {
+                push("user", Json::from(user.as_str()));
+                push("ops", Json::from(*ops));
+                "set_rate_limit"
+            }
         };
         fields.push(("op".to_string(), Json::from(op)));
+        fields.push(("v".to_string(), Json::from(WIRE_MAJOR)));
         if let Some(s) = session {
             fields.push(("session".to_string(), Json::from(s.0)));
         }
@@ -768,15 +917,40 @@ impl Response {
                 push("policy", Json::from(policy.as_str()));
                 "policy_set"
             }
+            Response::Ticket { ticket, job } => {
+                push("ticket", Json::from(*ticket));
+                push("job", Json::from(job.0));
+                "ticket"
+            }
+            Response::Subscribed { channel } => {
+                push("channel", Json::from(channel.as_str()));
+                "subscribed"
+            }
+            Response::Unsubscribed { channel } => {
+                push("channel", Json::from(channel.as_str()));
+                "unsubscribed"
+            }
+            Response::Events { events } => {
+                push("events", Json::array(events.iter().map(Event::to_json)));
+                push("count", Json::from(events.len()));
+                "events"
+            }
+            Response::RateLimitSet { user, ops } => {
+                push("user", Json::from(user.as_str()));
+                push("ops", Json::from(*ops));
+                "rate_limit_set"
+            }
             Response::Error { message } => {
                 let j = Json::object([
                     ("ok", Json::from(false)),
+                    ("v", Json::from(WIRE_MAJOR)),
                     ("error", Json::from(message.as_str())),
                 ]);
                 return j;
             }
         };
         fields.push(("ok".to_string(), Json::from(true)));
+        fields.push(("v".to_string(), Json::from(WIRE_MAJOR)));
         fields.push(("type".to_string(), Json::from(ty)));
         Json::object(fields)
     }
@@ -895,6 +1069,24 @@ mod tests {
                 policy: "energy_efficient".into(),
             },
             Request::PowerReport,
+            Request::Subscribe {
+                channel: Channel::JobEvents,
+                rate_hz: None,
+            },
+            Request::Subscribe {
+                channel: Channel::Telemetry,
+                rate_hz: Some(10.0),
+            },
+            Request::Unsubscribe {
+                channel: Channel::PowerEvents,
+            },
+            Request::PollEvents { max: 32 },
+            Request::WaitJob { job: JobId(7) },
+            Request::WaitAlloc { job: JobId(8) },
+            Request::SetRateLimit {
+                user: "alice".into(),
+                ops: 2,
+            },
         ];
         for req in reqs {
             let wire = req.to_json(Some(SessionId(1))).to_string();
@@ -973,6 +1165,117 @@ mod tests {
                 r#"{"op": "submit_job", "partition": "p", "nodes": 2,
                     "app": {"phases": [{"compute_s": -1}]}}"#
             ),
+            Err(DalekError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn versioning_tolerates_past_rejects_future() {
+        // the encoder stamps the current major
+        let wire = Request::PowerReport.to_json(Some(SessionId(1)));
+        assert_eq!(wire.get("v").unwrap().as_u64(), Some(WIRE_MAJOR));
+        // absent v = pre-versioned v1 client: accepted
+        let (_, r) = Request::parse(r#"{"op": "power_report", "session": 1}"#).unwrap();
+        assert_eq!(r, Request::PowerReport);
+        // same or older major: accepted
+        for v in 1..=WIRE_MAJOR {
+            let (_, r) = Request::parse(&format!(
+                r#"{{"op": "power_report", "session": 1, "v": {v}}}"#
+            ))
+            .unwrap();
+            assert_eq!(r, Request::PowerReport);
+        }
+        // a future major is refused at decode time
+        let e = Request::parse(r#"{"op": "power_report", "session": 1, "v": 99}"#).unwrap_err();
+        assert!(matches!(e, DalekError::BadRequest(_)));
+        assert!(e.to_string().contains("99"), "{e}");
+        // and a mistyped version is an error, not silently v1
+        assert!(matches!(
+            Request::parse(r#"{"op": "power_report", "session": 1, "v": "two"}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(r#"{"op": "power_report", "session": 1, "v": 1.5}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn prop_codec_tolerates_unknown_fields() {
+        // forward tolerance: any request decorated with arbitrary
+        // unknown fields must decode to the same typed request (minor
+        // protocol additions never break this server)
+        use crate::util::Xoshiro256;
+        let mut rng = Xoshiro256::new(0x0E1);
+        let reqs = vec![
+            Request::Login { user: "alice".into() },
+            Request::PowerReport,
+            Request::PollEvents { max: 5 },
+            Request::Subscribe {
+                channel: Channel::Telemetry,
+                rate_hz: Some(2.0),
+            },
+            Request::JobInfo { job: JobId(3) },
+            Request::QueryEnergy {
+                node: None,
+                window: None,
+            },
+        ];
+        for case in 0..100 {
+            let req = &reqs[rng.index(reqs.len())];
+            let Json::Obj(mut o) = req.to_json(Some(SessionId(1))) else {
+                panic!("envelope is an object")
+            };
+            for k in 0..rng.uniform_u64(1, 4) {
+                let key = format!("x_future_field_{case}_{k}");
+                let val = match rng.uniform_u64(0, 3) {
+                    0 => Json::from(rng.next_f64()),
+                    1 => Json::from("text"),
+                    2 => Json::array([Json::from(1u64)]),
+                    _ => Json::object([("nested", Json::Bool(true))]),
+                };
+                o.insert(key, val);
+            }
+            let decorated = Json::Obj(o).to_string();
+            let (sid, back) = Request::parse(&decorated)
+                .unwrap_or_else(|e| panic!("case {case}: `{decorated}`: {e}"));
+            assert_eq!(sid, Some(SessionId(1)), "case {case}");
+            assert_eq!(&back, req, "case {case}");
+        }
+    }
+
+    #[test]
+    fn ticket_and_events_encode() {
+        let t = Response::Ticket {
+            ticket: 9,
+            job: JobId(4),
+        }
+        .to_json();
+        assert_eq!(t.get("type").unwrap().as_str(), Some("ticket"));
+        assert_eq!(t.get("ticket").unwrap().as_u64(), Some(9));
+        assert_eq!(t.get("job").unwrap().as_u64(), Some(4));
+        assert_eq!(t.get("v").unwrap().as_u64(), Some(WIRE_MAJOR));
+        let e = Response::Events {
+            events: vec![Event::Lagged { missed: 3 }],
+        }
+        .to_json();
+        assert_eq!(e.get("count").unwrap().as_u64(), Some(1));
+        let arr = e.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].get("event").unwrap().as_str(), Some("lagged"));
+        // bad subscribe channels and rates are rejected at decode
+        assert!(matches!(
+            Request::parse(r#"{"op": "subscribe", "channel": "davros", "session": 1}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(
+                r#"{"op": "subscribe", "channel": "telemetry", "rate_hz": -1, "session": 1}"#
+            ),
+            Err(DalekError::BadRequest(_))
+        ));
+        // a zero rate limit would wedge the client's queue: refused
+        assert!(matches!(
+            Request::parse(r#"{"op": "set_rate_limit", "user": "a", "ops": 0, "session": 1}"#),
             Err(DalekError::BadRequest(_))
         ));
     }

@@ -1,0 +1,325 @@
+//! `ApiServer` — the deterministic multi-client multiplexer.
+//!
+//! One server owns the composed [`ClusterApi`] and N concurrent client
+//! sessions, each with a FIFO request queue. Draining is round-robin —
+//! one request per client per round, so no client can starve another —
+//! under a per-client *rate limit*: at most `ops_per_drain` requests
+//! per [`ApiServer::drain`] call (admins override it per user with the
+//! `set_rate_limit` op; excess requests stay queued, they are never
+//! dropped). Capability scoping is the session layer's: an admin op
+//! enqueued by a non-admin comes back as the same error it would over
+//! the wire.
+//!
+//! Everything is deterministic by construction: clients drain in
+//! connect order, queues are FIFO, the cluster below is seeded, and no
+//! wall clock or OS entropy is consulted — so a seeded
+//! [`TraceGen::client_storm`](crate::coordinator::trace::TraceGen::client_storm)
+//! replayed through [`ApiServer::run_storm`] produces bit-identical
+//! transcripts (responses *and* polled events) across runs. That
+//! reproducibility is pinned by `tests/streaming_api.rs` and is the
+//! contract every later scale-out layer (sharding, remote transports)
+//! must preserve.
+
+use std::collections::VecDeque;
+
+use super::cluster_api::ClusterApi;
+use super::error::DalekError;
+use super::events::Event;
+use super::protocol::{Request, Response};
+use super::session::SessionId;
+use crate::coordinator::trace::StormEvent;
+use crate::sim::SimTime;
+
+/// Default per-drain request budget of a client (overridable per user
+/// through the admin `set_rate_limit` op).
+pub const DEFAULT_OPS_PER_DRAIN: u32 = 8;
+
+/// One connected client: a session plus its FIFO queue and transcript.
+pub struct Client {
+    pub user: String,
+    pub sid: SessionId,
+    queue: VecDeque<Request>,
+    /// every response this client received, as wire JSON lines — the
+    /// bit-identity surface of the determinism tests
+    pub transcript: Vec<String>,
+    /// max requests served per `drain` call (rate limit)
+    pub ops_per_drain: u32,
+    /// total requests served
+    pub served: u64,
+}
+
+/// The deterministic multiplexer over one [`ClusterApi`].
+pub struct ApiServer {
+    pub cluster: ClusterApi,
+    clients: Vec<Client>,
+}
+
+impl ApiServer {
+    pub fn new(cluster: ClusterApi) -> Self {
+        Self {
+            cluster,
+            clients: Vec::new(),
+        }
+    }
+
+    /// Open a session for `user` (provisioning the account if needed)
+    /// and register the client; returns its index. Client order is
+    /// fairness order.
+    pub fn connect(&mut self, user: &str) -> Result<usize, DalekError> {
+        if user != "root" {
+            self.cluster.add_user(user);
+        }
+        let sid = self.cluster.login(user)?;
+        self.clients.push(Client {
+            user: user.to_string(),
+            sid,
+            queue: VecDeque::new(),
+            transcript: Vec::new(),
+            ops_per_drain: DEFAULT_OPS_PER_DRAIN,
+            served: 0,
+        });
+        Ok(self.clients.len() - 1)
+    }
+
+    pub fn client_count(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn client(&self, idx: usize) -> &Client {
+        &self.clients[idx]
+    }
+
+    /// Queue one request on a client (FIFO; served at the next drain).
+    pub fn enqueue(&mut self, client: usize, req: Request) {
+        self.clients[client].queue.push_back(req);
+    }
+
+    /// Queued-but-unserved request count across all clients.
+    pub fn backlog(&self) -> usize {
+        self.clients.iter().map(|c| c.queue.len()).sum()
+    }
+
+    /// One drain: round-robin over the clients in connect order, one
+    /// request per client per round, until every queue is empty or
+    /// every client exhausted its per-drain budget. Requests past the
+    /// budget stay queued for the next drain — rate limiting delays,
+    /// it never drops.
+    pub fn drain(&mut self) {
+        let mut budget: Vec<u32> = self.clients.iter().map(|c| c.ops_per_drain).collect();
+        loop {
+            let mut progressed = false;
+            for ci in 0..self.clients.len() {
+                if budget[ci] == 0 {
+                    continue;
+                }
+                let Some(req) = self.clients[ci].queue.pop_front() else {
+                    continue;
+                };
+                budget[ci] -= 1;
+                progressed = true;
+                let resp = self.execute(ci, &req);
+                let line = resp.to_json().to_string();
+                let c = &mut self.clients[ci];
+                c.transcript.push(line);
+                c.served += 1;
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+
+    /// Drain until every queue is empty, however many rate-limit
+    /// rounds that takes.
+    pub fn drain_all(&mut self) {
+        while self.backlog() > 0 {
+            self.drain();
+        }
+    }
+
+    fn execute(&mut self, ci: usize, req: &Request) -> Response {
+        let sid = self.clients[ci].sid;
+        match self.cluster.handle(Some(sid), req) {
+            Ok(resp) => {
+                // the rate-limit override is server-scoped: the session
+                // layer validated the capability and the user, the
+                // budget itself lives here
+                if let (Request::SetRateLimit { user, ops }, Response::RateLimitSet { .. }) =
+                    (req, &resp)
+                {
+                    for c in &mut self.clients {
+                        if &c.user == user {
+                            c.ops_per_drain = (*ops).max(1);
+                        }
+                    }
+                }
+                resp
+            }
+            Err(e) => Response::from_error(&e),
+        }
+    }
+
+    /// Advance the cluster below (events, governor, app engine) to `t`
+    /// without sampling.
+    pub fn run_until(&mut self, t: SimTime) {
+        self.cluster.run_until(t, false);
+    }
+
+    /// Replay a seeded multi-client storm: arrivals are processed in
+    /// time order — the cluster is driven to each arrival batch's
+    /// timestamp, the batch is enqueued, and the queues drained
+    /// round-robin. Deterministic end to end.
+    pub fn run_storm(&mut self, storm: &[StormEvent]) {
+        let mut i = 0;
+        while i < storm.len() {
+            let at = storm[i].at;
+            self.run_until(at);
+            while i < storm.len() && storm[i].at == at {
+                self.enqueue(storm[i].client, storm[i].request.clone());
+                i += 1;
+            }
+            self.drain();
+        }
+    }
+
+    /// Quiesce after a storm: drive to `until`, serve any rate-limited
+    /// backlog, then have every client poll its remaining events so
+    /// they land in the transcript.
+    pub fn settle(&mut self, until: SimTime) {
+        self.run_until(until);
+        self.drain_all();
+        for ci in 0..self.clients.len() {
+            self.enqueue(ci, Request::PollEvents { max: u32::MAX });
+        }
+        self.drain_all();
+    }
+
+    /// Drain a client's buffered events directly (tests, dashboards).
+    pub fn take_events(&mut self, client: usize) -> Vec<Event> {
+        let sid = self.clients[client].sid;
+        self.cluster.take_events(sid, usize::MAX)
+    }
+
+    /// The full per-client transcripts joined into one comparable
+    /// digest (client index prefixes keep interleavings apart).
+    pub fn transcript_digest(&self) -> String {
+        let mut out = String::new();
+        for (ci, c) in self.clients.iter().enumerate() {
+            for line in &c.transcript {
+                out.push_str(&format!("{ci} {line}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::protocol::JobRequest;
+    use crate::config::ClusterConfig;
+    use crate::slurm::JobState;
+
+    fn server() -> ApiServer {
+        ApiServer::new(ClusterApi::new(ClusterConfig::dalek_default(), None).unwrap())
+    }
+
+    fn submit(partition: &str, secs: u64) -> Request {
+        Request::SubmitJob(JobRequest {
+            partition: partition.into(),
+            nodes: 1,
+            duration: SimTime::from_secs(secs),
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: None,
+            app: None,
+        })
+    }
+
+    #[test]
+    fn round_robin_interleaves_clients_fairly() {
+        let mut s = server();
+        let a = s.connect("alice").unwrap();
+        let b = s.connect("bob").unwrap();
+        // alice floods; bob sends one — bob is served in round one
+        for _ in 0..6 {
+            s.enqueue(a, Request::ClusterReport);
+        }
+        s.enqueue(b, Request::ClusterReport);
+        s.drain();
+        assert_eq!(s.client(a).served, 6);
+        assert_eq!(s.client(b).served, 1);
+        assert_eq!(s.backlog(), 0);
+    }
+
+    #[test]
+    fn rate_limit_defers_but_never_drops() {
+        let mut s = server();
+        let root = s.connect("root").unwrap();
+        let a = s.connect("alice").unwrap();
+        s.enqueue(
+            root,
+            Request::SetRateLimit {
+                user: "alice".into(),
+                ops: 2,
+            },
+        );
+        s.drain();
+        for _ in 0..5 {
+            s.enqueue(a, Request::ClusterReport);
+        }
+        s.drain();
+        assert_eq!(s.client(a).served, 2);
+        assert_eq!(s.backlog(), 3);
+        s.drain();
+        assert_eq!(s.client(a).served, 4);
+        s.drain_all();
+        assert_eq!(s.client(a).served, 5);
+        assert_eq!(s.backlog(), 0);
+        // every response was recorded
+        assert_eq!(s.client(a).transcript.len(), 5);
+    }
+
+    #[test]
+    fn non_admin_rate_limit_override_is_refused() {
+        let mut s = server();
+        let a = s.connect("alice").unwrap();
+        let before = s.client(a).ops_per_drain;
+        s.enqueue(
+            a,
+            Request::SetRateLimit {
+                user: "alice".into(),
+                ops: 1_000,
+            },
+        );
+        s.drain();
+        assert_eq!(s.client(a).ops_per_drain, before, "no self-service limits");
+        assert!(s.client(a).transcript[0].contains("restricted to administrators"));
+    }
+
+    #[test]
+    fn storm_of_tickets_completes_jobs() {
+        let mut s = server();
+        let a = s.connect("alice").unwrap();
+        s.enqueue(a, submit("az5-a890m", 60));
+        s.enqueue(
+            a,
+            Request::Subscribe {
+                channel: crate::api::Channel::JobEvents,
+                rate_hz: None,
+            },
+        );
+        s.drain();
+        s.run_until(SimTime::from_mins(10));
+        let events = s.take_events(a);
+        assert!(!events.is_empty());
+        let done = s
+            .cluster
+            .slurm()
+            .jobs()
+            .filter(|j| j.state == JobState::Completed)
+            .count();
+        assert_eq!(done, 1);
+    }
+}

@@ -149,6 +149,24 @@ impl SessionManager {
         self.sessions.remove(&id).is_some()
     }
 
+    /// Remove every session whose sliding expiry has lapsed by `now`
+    /// and return their ids (in token order — deterministic). The
+    /// cluster sweeps this on every advance so an expired session's
+    /// resources are torn down even if its client never returns;
+    /// lazy per-request validation remains the backstop.
+    pub fn take_expired(&mut self, now: SimTime) -> Vec<SessionId> {
+        let ids: Vec<SessionId> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| now >= s.expires_at)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &ids {
+            self.sessions.remove(id);
+        }
+        ids
+    }
+
     pub fn open_count(&self) -> usize {
         self.sessions.len()
     }

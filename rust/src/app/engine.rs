@@ -532,4 +532,25 @@ impl AppEngine {
         }
         slurm.finish_app_job(kernel, id, now);
     }
+
+    /// Tear a program down without completing it — the session-teardown
+    /// path: the scheduler is releasing (or has released) the job's
+    /// nodes, so the run must not fire again. Cancels the armed barrier
+    /// timer and every in-flight collective flow; scheduler-side
+    /// release/settlement is the caller's responsibility. No-op for
+    /// jobs the engine is not running.
+    pub fn cancel<E>(&mut self, net: &mut FlowNet, kernel: &mut Kernel<E>, id: JobId)
+    where
+        E: From<NetEvent>,
+    {
+        if let Some(run) = self.runs.remove(&id) {
+            if let Some(t) = run.timer {
+                kernel.cancel(t);
+            }
+            for fid in run.pending {
+                self.flow_owner.remove(&fid);
+                net.cancel_flow_on(kernel, fid);
+            }
+        }
+    }
 }

@@ -5,11 +5,13 @@
 //! and reports the numbers the examples and the e2e bench print:
 //! throughput, waiting times, node utilization, true vs measured energy.
 
+use crate::api::protocol::{JobRequest, Request};
+use crate::api::Channel;
 use crate::api::ClusterApi as Cluster;
 use crate::app::{AppSpec, Collective, PhaseSpec};
 use crate::power::Activity;
 use crate::sim::SimTime;
-use crate::slurm::{JobSpec, JobState};
+use crate::slurm::{JobId, JobSpec, JobState};
 use crate::util::stats::Summary;
 use crate::util::Xoshiro256;
 
@@ -189,6 +191,111 @@ impl TraceGen {
     }
 }
 
+/// One arrival in a multi-client API storm: at `at`, client `client`
+/// enqueues `request` on the [`ApiServer`](crate::api::ApiServer).
+#[derive(Clone, Debug)]
+pub struct StormEvent {
+    pub at: SimTime,
+    pub client: usize,
+    pub request: Request,
+}
+
+impl TraceGen {
+    /// Generate a seeded multi-client request storm for the
+    /// `ApiServer`: `clients` concurrent sessions (client 0 is the
+    /// operator, `root`; the rest are `user1..`) firing `n` Poisson
+    /// arrivals that mix srun tickets, plain submissions, job lookups,
+    /// energy queries, subscriptions (job events, telemetry at varied
+    /// rates, the operator's power-events feed), event polls, and
+    /// operator-only actions (power budgets, rate-limit overrides).
+    /// Entirely RNG-driven off `self.rng`: the same seed replays
+    /// bit-for-bit — the reproducible "storm" the determinism suite
+    /// and `benches/api_throughput.rs` replay.
+    pub fn client_storm(&mut self, clients: usize, n: usize) -> Vec<StormEvent> {
+        assert!(clients >= 2, "a storm needs an operator and at least one user");
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        for _ in 0..n {
+            t += self.rng.exponential(self.jobs_per_hour / 3600.0);
+            let client = self.rng.uniform_u64(0, clients as u64 - 1) as usize;
+            let (part, max_nodes) = self.rng.choose(&self.partitions).clone();
+            let job_req = |rng: &mut Xoshiro256| JobRequest {
+                partition: part.clone(),
+                nodes: 1 + rng.uniform_u64(0, max_nodes as u64 - 1) as u32,
+                duration: SimTime::from_secs_f64(20.0 + rng.uniform_f64(0.0, 280.0)),
+                time_limit: None,
+                payload: None,
+                iters: 1,
+                user: None,
+                app: None,
+            };
+            let request = match self.rng.uniform_u64(0, 9) {
+                0 | 1 => Request::SubmitJob(job_req(&mut self.rng)),
+                // srun ticket: nonblocking, progress via JobEvents
+                2 | 3 => Request::RunJob(job_req(&mut self.rng)),
+                4 => Request::JobInfo {
+                    job: JobId(1 + self.rng.uniform_u64(0, 30)),
+                },
+                5 => Request::QueryEnergy {
+                    node: None,
+                    window: None,
+                },
+                6 => Request::Subscribe {
+                    channel: if self.rng.next_f64() < 0.5 {
+                        Channel::JobEvents
+                    } else {
+                        Channel::Telemetry
+                    },
+                    rate_hz: Some(
+                        [0.2, 1.0, 2.0, 10.0][self.rng.uniform_u64(0, 3) as usize],
+                    ),
+                },
+                7 => Request::PollEvents {
+                    max: 1 + self.rng.uniform_u64(0, 63) as u32,
+                },
+                8 => Request::ClusterReport,
+                // operator actions land on client 0 regardless of who
+                // drew them — capability-scoped ops from non-admins
+                // would only exercise the error path
+                _ => {
+                    push_operator_op(&mut self.rng, &mut out, t);
+                    continue;
+                }
+            };
+            out.push(StormEvent {
+                at: SimTime::from_secs_f64(t),
+                client,
+                request,
+            });
+        }
+        out
+    }
+}
+
+/// One operator-plane arrival (client 0): budget moves, power-events
+/// subscription, rate-limit overrides, governor report reads.
+fn push_operator_op(rng: &mut Xoshiro256, out: &mut Vec<StormEvent>, t: f64) {
+    let request = match rng.uniform_u64(0, 3) {
+        0 => Request::SetPowerBudget {
+            watts: Some(400.0 + rng.uniform_f64(0.0, 800.0)),
+        },
+        1 => Request::Subscribe {
+            channel: Channel::PowerEvents,
+            rate_hz: None,
+        },
+        2 => Request::SetRateLimit {
+            user: format!("user{}", 1 + rng.uniform_u64(0, 5)),
+            ops: 1 + rng.uniform_u64(0, 7) as u32,
+        },
+        _ => Request::PowerReport,
+    };
+    out.push(StormEvent {
+        at: SimTime::from_secs_f64(t),
+        client: 0,
+        request,
+    });
+}
+
 /// Replay results.
 #[derive(Clone, Debug)]
 pub struct ReplayReport {
@@ -357,6 +464,40 @@ mod tests {
         let report = replay(&mut cluster, &trace, false);
         assert_eq!(report.completed + report.timeouts, 12);
         assert_eq!(report.timeouts, 0, "app limits leave comm headroom");
+    }
+
+    #[test]
+    fn client_storm_is_deterministic_and_well_formed() {
+        let a = TraceGen::dalek_mix(21).client_storm(8, 120);
+        let b = TraceGen::dalek_mix(21).client_storm(8, 120);
+        assert_eq!(a.len(), 120);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.client, y.client);
+            assert_eq!(x.request, y.request);
+        }
+        // arrivals non-decreasing, clients in range, the mix is a mix
+        let mut tickets = 0;
+        let mut subs = 0;
+        let mut admin = 0;
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        for ev in &a {
+            assert!(ev.client < 8);
+            match &ev.request {
+                Request::RunJob(_) => tickets += 1,
+                Request::Subscribe { .. } => subs += 1,
+                Request::SetPowerBudget { .. } | Request::SetRateLimit { .. } => {
+                    assert_eq!(ev.client, 0, "operator ops go to the operator");
+                    admin += 1;
+                }
+                _ => {}
+            }
+        }
+        assert!(tickets > 5, "{tickets} srun tickets");
+        assert!(subs > 2, "{subs} subscriptions");
+        assert!(admin > 0, "{admin} operator ops");
     }
 
     #[test]

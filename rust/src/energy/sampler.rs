@@ -68,8 +68,10 @@ use crate::sim::SimTime;
 use crate::util::Xoshiro256;
 
 /// How much piecewise power history the rolling-telemetry buffers
-/// retain. Governor windows must stay at or below this.
-const ROLLING_HORIZON: SimTime = SimTime(120 * 1_000_000_000);
+/// retain. Governor windows and telemetry decimation periods must stay
+/// at or below this; a `Telemetry` subscription whose cursor falls
+/// further behind than this skips the aged-out windows and signals lag.
+pub const ROLLING_HORIZON: SimTime = SimTime(120 * 1_000_000_000);
 
 /// ±√3 σ uniform noise keeps the variance exact (see `probe.rs`).
 const SQRT12: f64 = 3.464_101_615_137_754_6;
@@ -365,6 +367,51 @@ impl StreamingSampler {
         total
     }
 
+    /// Integral of the true piecewise cluster power over `[from, to)`,
+    /// in joules, from the folded rolling history — the telemetry
+    /// channel's window cutter. No sample is materialized: the cost is
+    /// proportional to the number of retained transitions, identical in
+    /// sampled and unsampled runs. `from` must lie within the
+    /// [`ROLLING_HORIZON`] of the last fold; older spans integrate the
+    /// oldest retained level (callers clamp and signal lag instead).
+    pub fn span_energy_j(&self, from: SimTime, to: SimTime) -> f64 {
+        if to <= from {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for dq in &self.rolling {
+            // only the segments overlapping [from, to) contribute; a
+            // telemetry subscription cuts many short windows per pump,
+            // so skip the non-overlapping prefix by binary search. The
+            // last entry at or before `from` carries the level across
+            // the window start (dq[0] always qualifies: it is the kept
+            // window-start value).
+            let i0 = dq.partition_point(|&(at, _)| at <= from).saturating_sub(1);
+            for k in i0..dq.len() {
+                let (at, w) = dq[k];
+                if at >= to {
+                    break;
+                }
+                let seg_start = if k == i0 { from } else { at };
+                let seg_end = dq.get(k + 1).map(|&(t, _)| t).unwrap_or(to).min(to);
+                if seg_end > seg_start {
+                    total += w * seg_end.since(seg_start).as_secs_f64();
+                }
+            }
+        }
+        total
+    }
+
+    /// Mean cluster draw over `[from, to)`, watts — the decimated
+    /// telemetry figure ([`StreamingSampler::span_energy_j`] ÷ span).
+    pub fn span_mean_w(&self, from: SimTime, to: SimTime) -> f64 {
+        let span = to.since(from).as_secs_f64();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.span_energy_j(from, to) / span
+    }
+
     /// Apply a drained transition batch and advance every stream to
     /// `to`, writing samples through `board_of` (node name → board).
     /// Returns the number of samples emitted. The caller clears the
@@ -600,6 +647,42 @@ mod tests {
         s.fold_rolling(&[], SimTime::from_hours(2));
         let m = s.rolling_mean_w(SimTime::from_secs(10), SimTime::from_hours(2));
         assert!((m - 42.0).abs() < 1e-9, "{m}");
+    }
+
+    #[test]
+    fn span_energy_integrates_piecewise_windows() {
+        let mut s = StreamingSampler::new();
+        s.add_node("a", 10.0);
+        s.add_node("b", 2.0);
+        let trs = [
+            PowerTransition {
+                node: 0,
+                at: SimTime::from_secs(5),
+                watts: 30.0,
+            },
+            PowerTransition {
+                node: 1,
+                at: SimTime::from_secs(8),
+                watts: 4.0,
+            },
+        ];
+        s.fold_rolling(&trs, SimTime::from_secs(10));
+        // [0,10): a = 5x10 + 5x30 = 200 J, b = 8x2 + 2x4 = 24 J
+        let e = s.span_energy_j(SimTime::ZERO, SimTime::from_secs(10));
+        assert!((e - 224.0).abs() < 1e-9, "{e}");
+        // a sub-window straddling one step: [4,6) = 1x10 + 1x30 + 2x2
+        let e = s.span_energy_j(SimTime::from_secs(4), SimTime::from_secs(6));
+        assert!((e - 44.0).abs() < 1e-9, "{e}");
+        // consecutive windows tile exactly
+        let parts: f64 = (0..10)
+            .map(|k| {
+                s.span_energy_j(SimTime::from_secs(k), SimTime::from_secs(k + 1))
+            })
+            .sum();
+        assert!((parts - 224.0).abs() < 1e-9, "{parts}");
+        assert!((s.span_mean_w(SimTime::ZERO, SimTime::from_secs(10)) - 22.4).abs() < 1e-9);
+        // degenerate span
+        assert_eq!(s.span_energy_j(SimTime::from_secs(3), SimTime::from_secs(3)), 0.0);
     }
 
     #[test]

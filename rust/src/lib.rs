@@ -48,9 +48,16 @@
 //! * [`runtime`] — PJRT client running the AOT-compiled JAX/Pallas payloads
 //! * [`api`] — the unified session-based user API: log in once, then
 //!   drive jobs (§3.4–3.5), the energy platform (§4.3) and reports
-//!   through one typed request/response protocol with a JSON wire
-//!   codec; owns the cluster's kernel and its only dispatch loop
-//!   (`api::ClusterEvent` routes scheduler/network/service events)
+//!   through one typed request/response protocol with a versioned
+//!   JSON wire codec; owns the cluster's kernel and its only dispatch
+//!   loop (`api::ClusterEvent` routes scheduler/network/service
+//!   events). Protocol v2 is streaming and multi-client: nonblocking
+//!   `run_job`/`alloc_nodes` tickets, typed event subscriptions
+//!   ([`api::events`]: job lifecycle, governor actuations, decimated
+//!   telemetry windows with no sample materialization) in bounded
+//!   per-session outboxes, and the deterministic [`api::ApiServer`]
+//!   multiplexer (round-robin, rate-limited, bit-for-bit reproducible
+//!   under seeded storms)
 //! * [`coordinator`] — the frontend daemon: trace replay over the API
 //!   (the cluster façade itself is [`api::ClusterApi`])
 //!

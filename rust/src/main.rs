@@ -10,14 +10,16 @@
 //! dalek payloads [--artifacts DIR]              list AOT payloads
 //! dalek exec <payload> [--iters N] [--artifacts DIR]
 //!                                               run one payload through the API
-//! dalek api <request.json|-> [--artifacts DIR]  execute protocol requests
+//! dalek api <batch.jsonl|request.json|->        execute protocol requests
+//!           [--artifacts DIR]
 //! ```
 //!
 //! Every cluster operation goes through the session-based
-//! `dalek::api::ClusterApi`; `dalek api` exposes the raw JSON protocol
-//! (one request object, or an array forming a scripted session — a
+//! `dalek::api::ClusterApi`; `dalek api` exposes the raw JSON protocol.
+//! Input is one request per line (a batch file; `#`-comments allowed),
+//! a single object, or an array — all forming a scripted session (a
 //! `login` response's token is threaded into subsequent requests that
-//! omit `"session"`).
+//! omit `"session"`). One response/event is printed per line.
 
 use dalek::api::{ClusterApi, Request, Response, SessionId};
 use dalek::bench;
@@ -78,7 +80,7 @@ fn usage() -> String {
      \x20 dalek run [--jobs N] [--seed N] [--sample] [--no-suspend] [--artifacts DIR]\n\
      \x20 dalek payloads [--artifacts DIR]\n\
      \x20 dalek exec <payload> [--iters N] [--artifacts DIR]\n\
-     \x20 dalek api <request.json|-> [--artifacts DIR]\n"
+     \x20 dalek api <batch.jsonl|request.json|-> [--artifacts DIR]\n"
         .to_string()
 }
 
@@ -348,17 +350,21 @@ fn cmd_exec(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `dalek api` — execute one JSON request (or an array of them) against
-/// a freshly built cluster, printing one response JSON per line. When a
-/// request omits `"session"`, the token from the last `login` response
-/// is threaded in, so a file like
-/// `[{"op":"login","user":"root"}, {"op":"cluster_report"}]`
-/// forms a scripted session.
+/// `dalek api` — execute a batch of JSON requests against a freshly
+/// built cluster, printing one response (and any delivered events) per
+/// line. Input is either one request per line (a JSONL batch file,
+/// `#`-comments and blank lines ignored), a single request object, or
+/// a JSON array of requests — all three form one scripted session: when
+/// a request omits `"session"`, the token from the last `login`
+/// response is threaded in. After every request, events buffered for
+/// the issuing session by its subscriptions are drained and printed,
+/// one JSON line each, so a batch transcript interleaves responses and
+/// the event stream they caused.
 fn cmd_api(args: &Args) -> anyhow::Result<()> {
     let path = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow::anyhow!("usage: dalek api <request.json> (`-` for stdin)"))?;
+        .ok_or_else(|| anyhow::anyhow!("usage: dalek api <request.json|batch.jsonl|-> "))?;
     let src = if path == "-" {
         use std::io::Read as _;
         let mut s = String::new();
@@ -373,26 +379,56 @@ fn cmd_api(args: &Args) -> anyhow::Result<()> {
         ClusterConfig::dalek_default(),
         have_artifacts.then_some(dir.as_str()),
     )?;
-    let parsed = Json::parse(&src).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-    let entries = match parsed {
-        Json::Arr(a) => a,
-        v => vec![v],
+    // whole-document JSON first (single object or scripted array), then
+    // the batch form: one JSON request per line
+    let entries = match Json::parse(&src) {
+        Ok(Json::Arr(a)) => a,
+        Ok(v) => vec![v],
+        Err(_) => {
+            let mut batch = Vec::new();
+            for (lineno, line) in src.lines().enumerate() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let v = Json::parse(line)
+                    .map_err(|e| anyhow::anyhow!("{path}:{}: {e}", lineno + 1))?;
+                batch.push(v);
+            }
+            batch
+        }
     };
     let mut last: Option<SessionId> = None;
     for entry in entries {
+        let effective;
         let resp = match Request::from_json(&entry) {
-            Ok((sid, req)) => match cluster.handle(sid.or(last), &req) {
-                Ok(resp) => {
-                    if let Response::Session { id, .. } = &resp {
-                        last = Some(*id);
+            Ok((sid, req)) => {
+                effective = sid.or(last);
+                match cluster.handle(effective, &req) {
+                    Ok(resp) => {
+                        if let Response::Session { id, .. } = &resp {
+                            last = Some(*id);
+                        }
+                        resp
                     }
-                    resp
+                    Err(e) => Response::from_error(&e),
                 }
-                Err(e) => Response::from_error(&e),
-            },
-            Err(e) => Response::from_error(&e),
+            }
+            Err(e) => {
+                effective = last;
+                Response::from_error(&e)
+            }
         };
         println!("{}", resp.to_json());
+        // deliver what the request caused: one event line each (skip
+        // an explicit poll's reply — its events are in the response)
+        if !matches!(resp, Response::Events { .. }) {
+            if let Some(sid) = effective {
+                for ev in cluster.take_events(sid, usize::MAX) {
+                    println!("{}", ev.to_json());
+                }
+            }
+        }
     }
     Ok(())
 }

@@ -213,6 +213,15 @@ impl LoginGate {
         live
     }
 
+    /// Revoke one grant immediately (session teardown: the allocation
+    /// was released before its reservation expired). Any open shell is
+    /// terminated; returns whether one was.
+    pub fn revoke(&mut self, node: &str, login: &str) -> bool {
+        let key = (node.to_string(), login.to_string());
+        self.grants.remove(&key);
+        self.shells.remove(&key)
+    }
+
     /// Reservation expiry sweep: terminates shells of expired users and
     /// returns the evicted (node, login) pairs.
     pub fn sweep(&mut self, now: SimTime) -> Vec<(String, String)> {

@@ -83,6 +83,44 @@ pub enum AppNotice {
     Repriced(JobId),
 }
 
+/// One step of a job's lifecycle, published for the `dalek::api`
+/// streaming layer ([`Slurm::take_job_notices`]). The controller
+/// reports facts; scoping (who may see which job's events) happens at
+/// the session layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JobLifecycle {
+    /// accepted into the pending queue
+    Queued,
+    /// left `Configuring`: all nodes booted, work began
+    Started,
+    /// a §3.6 knob changed on an allocated node; `rate` is the new
+    /// slowest-allocated-node relative execution rate
+    Repriced { rate: f64 },
+    /// terminal; `energy_j` is the measured settlement joules (0 for
+    /// jobs that never started)
+    Finished { state: JobState, energy_j: f64 },
+}
+
+/// A timestamped [`JobLifecycle`] record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobNotice {
+    pub job: JobId,
+    pub at: SimTime,
+    pub what: JobLifecycle,
+}
+
+/// A §3.6 knob actuation record ([`Slurm::take_power_notices`]): what
+/// [`Slurm::apply_power_knobs`] actually set (post-clamping), for the
+/// `PowerEvents` subscription channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerNotice {
+    pub at: SimTime,
+    pub node: usize,
+    pub cpu_cap_w: Option<f64>,
+    pub gpu_cap_w: Option<f64>,
+    pub powersave: bool,
+}
+
 /// Result of a §4.3 manual power action ([`Slurm::admin_power`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdminPowerOutcome {
@@ -204,6 +242,13 @@ pub struct Slurm {
     /// app-job lifecycle notices since the last drain — the app engine
     /// ([`crate::app::AppEngine`]) takes these after every dispatch
     app_notices: Vec<AppNotice>,
+    /// every job's lifecycle notices since the last drain — the api
+    /// layer's event router takes these after every dispatch and fans
+    /// them out to `JobEvents` subscribers
+    job_notices: Vec<JobNotice>,
+    /// §3.6 knob actuations since the last drain — fanned out to
+    /// `PowerEvents` subscribers
+    power_notices: Vec<PowerNotice>,
     pub policy: SchedPolicy,
     pub power_policy: PowerPolicyConfig,
     /// per-partition placement policy (§6.2): absent means first-fit
@@ -258,6 +303,8 @@ impl Slurm {
             next_job: 1,
             transitions: Vec::new(),
             app_notices: Vec::new(),
+            job_notices: Vec::new(),
+            power_notices: Vec::new(),
             policy,
             power_policy: cfg.power.clone(),
             placement: BTreeMap::new(),
@@ -461,6 +508,11 @@ impl Slurm {
         self.jobs.insert(id, Job::new(id, spec, now));
         self.queue.push(id);
         self.stats.submitted += 1;
+        self.job_notices.push(JobNotice {
+            job: id,
+            at: now,
+            what: JobLifecycle::Queued,
+        });
         self.try_schedule(kernel, now);
         Ok(id)
     }
@@ -475,7 +527,101 @@ impl Slurm {
         job.finished = Some(now);
         self.queue.retain(|q| *q != id);
         self.stats.cancelled += 1;
+        self.job_notices.push(JobNotice {
+            job: id,
+            at: now,
+            what: JobLifecycle::Finished {
+                state: JobState::Cancelled,
+                energy_j: 0.0,
+            },
+        });
         Ok(())
+    }
+
+    /// Release every resource a job holds, whatever its state — the
+    /// session-teardown path (`logout`/expiry must not leak a live
+    /// `salloc` allocation). Pending jobs are cancelled; configuring
+    /// jobs drop their reservations (booting nodes finish booting and
+    /// idle into the §3.4 policy); running jobs are terminated as
+    /// `Cancelled`, with the energy they actually drew settled against
+    /// the owner's §6.2 quota. Already-terminal jobs are a no-op.
+    pub fn release_job<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) -> Result<(), SlurmError> {
+        self.clock = self.clock.max(now);
+        let state = self.jobs.get(&id).ok_or(SlurmError::UnknownJob(id))?.state;
+        match state {
+            JobState::Pending => self.cancel(id, now),
+            JobState::Configuring => {
+                let allocated = self.jobs[&id].allocated.clone();
+                for &i in &allocated {
+                    self.nodes[i].reserved_for = None;
+                    if matches!(self.nodes[i].fsm.state(), PowerState::Idle { .. }) {
+                        self.arm_suspend_timer(kernel, i, now);
+                    }
+                }
+                let job = self.jobs.get_mut(&id).expect("exists");
+                job.state = JobState::Cancelled;
+                job.finished = Some(now);
+                self.stats.cancelled += 1;
+                self.job_notices.push(JobNotice {
+                    job: id,
+                    at: now,
+                    what: JobLifecycle::Finished {
+                        state: JobState::Cancelled,
+                        energy_j: 0.0,
+                    },
+                });
+                self.try_schedule(kernel, now);
+                Ok(())
+            }
+            JobState::Running => {
+                if let Some(ev) = self.jobs.get_mut(&id).expect("exists").completion_ev.take() {
+                    kernel.cancel(ev);
+                }
+                let allocated = self.jobs[&id].allocated.clone();
+                let mut job_energy = 0.0;
+                for &i in &allocated {
+                    self.nodes[i].fsm.release(now).expect("allocated node");
+                    self.nodes[i].activity_override = None;
+                    self.touch(i, now);
+                    job_energy += self.nodes[i].energy_j - self.nodes[i].job_energy_mark;
+                    self.nodes[i].running = None;
+                    self.nodes[i].reserved_for = None;
+                    self.arm_suspend_timer(kernel, i, now);
+                }
+                let job = self.jobs.get_mut(&id).expect("exists");
+                job.state = JobState::Cancelled;
+                job.finished = Some(now);
+                job.energy_j = job_energy;
+                self.stats.cancelled += 1;
+                let user = job.spec.user.clone();
+                let node_seconds = job
+                    .started
+                    .map(|s| now.since(s).as_secs_f64() * job.spec.nodes as f64)
+                    .unwrap_or(0.0);
+                if self.quota.has_account(&user) {
+                    self.quota
+                        .charge(&user, node_seconds, job_energy, now)
+                        .expect("account checked");
+                }
+                self.job_notices.push(JobNotice {
+                    job: id,
+                    at: now,
+                    what: JobLifecycle::Finished {
+                        state: JobState::Cancelled,
+                        energy_j: job_energy,
+                    },
+                });
+                self.try_schedule(kernel, now);
+                Ok(())
+            }
+            // already terminal: nothing held, nothing to release
+            _ => Ok(()),
+        }
     }
 
     // -- event handling ------------------------------------------------------
@@ -653,6 +799,18 @@ impl Slurm {
         std::mem::take(&mut self.app_notices)
     }
 
+    /// Drain every job's lifecycle notices accumulated since the last
+    /// call (the api layer fans them out to `JobEvents` subscribers).
+    pub fn take_job_notices(&mut self) -> Vec<JobNotice> {
+        std::mem::take(&mut self.job_notices)
+    }
+
+    /// Drain the §3.6 knob-actuation notices accumulated since the
+    /// last call (fanned out to `PowerEvents` subscribers).
+    pub fn take_power_notices(&mut self) -> Vec<PowerNotice> {
+        std::mem::take(&mut self.power_notices)
+    }
+
     /// Complete a phase-structured job at `now` — the app engine's
     /// completion path. App jobs carry no armed completion timer (their
     /// progress is the program, not a single work scalar), so the
@@ -743,6 +901,17 @@ impl Slurm {
                 n.base_power.dvfs.governor
             };
         }
+        {
+            // report what was actually set, post-clamping
+            let n = &self.nodes[idx];
+            self.power_notices.push(PowerNotice {
+                at: now,
+                node: idx,
+                cpu_cap_w: n.power.cpu_rapl.cap(),
+                gpu_cap_w: n.power.gpu_cap.as_ref().and_then(|g| g.cap()),
+                powersave: n.power.dvfs.governor != n.base_power.dvfs.governor,
+            });
+        }
         self.touch(idx, now);
         if let Some(jid) = self.nodes[idx].running {
             self.reprice(kernel, jid, now);
@@ -801,12 +970,6 @@ impl Slurm {
         if job.state != JobState::Running {
             return;
         }
-        // phase-structured jobs keep per-rank ledgers in the app engine
-        // and have no completion timer to move: notify instead
-        if job.spec.app.is_some() {
-            self.app_notices.push(AppNotice::Repriced(id));
-            return;
-        }
         let act = job.spec.activity;
         let new_rate = job
             .allocated
@@ -814,10 +977,27 @@ impl Slurm {
             .map(|&i| Self::node_rate_of(&self.nodes[i], act))
             .fold(f64::INFINITY, f64::min);
         let new_rate = if new_rate.is_finite() { new_rate } else { 1.0 };
+        // phase-structured jobs keep per-rank ledgers in the app engine
+        // and have no completion timer to move: notify instead
+        if job.spec.app.is_some() {
+            self.app_notices.push(AppNotice::Repriced(id));
+            self.job_notices.push(JobNotice {
+                job: id,
+                at: now,
+                what: JobLifecycle::Repriced { rate: new_rate },
+            });
+            return;
+        }
         let job = self.jobs.get_mut(&id).expect("checked above");
         if (new_rate - job.rate).abs() < 1e-12 {
             return;
         }
+        self.job_notices.push(JobNotice {
+            job: id,
+            at: now,
+            what: JobLifecycle::Repriced { rate: new_rate },
+        });
+        let job = self.jobs.get_mut(&id).expect("checked above");
         job.work_done_s += now.since(job.last_rate_change).as_secs_f64() * job.rate;
         job.last_rate_change = now;
         job.rate = new_rate;
@@ -1085,6 +1265,11 @@ impl Slurm {
         if is_app {
             self.app_notices.push(AppNotice::Started(id));
         }
+        self.job_notices.push(JobNotice {
+            job: id,
+            at: now,
+            what: JobLifecycle::Started,
+        });
     }
 
     fn finish_job<E: From<SchedEvent>>(
@@ -1143,6 +1328,15 @@ impl Slurm {
                 .charge(&user, node_seconds, job_energy, now)
                 .expect("account checked");
         }
+        let state = self.jobs[&id].state;
+        self.job_notices.push(JobNotice {
+            job: id,
+            at: now,
+            what: JobLifecycle::Finished {
+                state,
+                energy_j: job_energy,
+            },
+        });
         self.try_schedule(kernel, now);
     }
 }
@@ -1603,6 +1797,96 @@ mod tests {
         s.run_until(at);
         assert!(s.submit_at(j, at).is_ok());
         s.run_to_idle();
+    }
+
+    #[test]
+    fn job_notices_track_the_lifecycle() {
+        let mut s = slurm();
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 2, 120), SimTime::ZERO)
+            .unwrap();
+        s.run_to_idle();
+        let notices = s.ctl.take_job_notices();
+        let kinds: Vec<JobLifecycle> = notices
+            .iter()
+            .filter(|n| n.job == id)
+            .map(|n| n.what)
+            .collect();
+        assert!(matches!(kinds[0], JobLifecycle::Queued));
+        assert!(matches!(kinds[1], JobLifecycle::Started));
+        let JobLifecycle::Finished { state, energy_j } = kinds[2] else {
+            panic!("expected Finished, got {:?}", kinds[2]);
+        };
+        assert_eq!(state, JobState::Completed);
+        assert!((energy_j - s.job(id).unwrap().energy_j).abs() < 1e-12);
+        // drained: a second take is empty
+        assert!(s.ctl.take_job_notices().is_empty());
+    }
+
+    #[test]
+    fn release_job_frees_resources_in_every_state() {
+        let mut s = slurm();
+        // pending (partition full) -> cancelled
+        let big = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 4, 600), SimTime::ZERO)
+            .unwrap();
+        let waiting = s
+            .submit_at(JobSpec::cpu("b", "az5-a890m", 1, 60), SimTime::ZERO)
+            .unwrap();
+        let now = s.kernel.now();
+        s.ctl.release_job(&mut s.kernel, waiting, now).unwrap();
+        assert_eq!(s.job(waiting).unwrap().state, JobState::Cancelled);
+
+        // configuring (nodes still booting) -> reservations dropped
+        let now = s.kernel.now();
+        assert_eq!(s.job(big).unwrap().state, JobState::Configuring);
+        s.ctl.release_job(&mut s.kernel, big, now).unwrap();
+        assert_eq!(s.job(big).unwrap().state, JobState::Cancelled);
+        s.run_to_idle();
+        // boots completed into idle; nothing runs, nodes resuspended
+        for n in s.node_infos().iter().filter(|n| n.partition == "az5-a890m") {
+            assert!(n.running.is_none());
+            assert!(matches!(n.state, PowerState::Suspended), "{:?}", n.state);
+        }
+
+        // running -> terminated, energy settled, nodes freed for the queue
+        s.ctl.quota.set_account("c", 1e9, 1e12);
+        let now = s.kernel.now();
+        let id = s.submit_at(JobSpec::cpu("c", "az5-a890m", 2, 600), now).unwrap();
+        s.run_until(now + mins(3)); // booted + running
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        let at = s.kernel.now();
+        s.ctl.release_job(&mut s.kernel, id, at).unwrap();
+        let job = s.job(id).unwrap();
+        assert_eq!(job.state, JobState::Cancelled);
+        assert!(job.energy_j > 0.0, "ran for a while, drew energy");
+        let acct = s.ctl.quota.account("c").unwrap();
+        assert!((acct.used_energy_j - job.energy_j).abs() < 1e-9);
+        // the completion timer is gone: draining never completes it
+        s.run_to_idle();
+        assert_eq!(s.job(id).unwrap().state, JobState::Cancelled);
+        // releasing a terminal job is a no-op
+        let at = s.kernel.now();
+        assert!(s.ctl.release_job(&mut s.kernel, id, at).is_ok());
+    }
+
+    #[test]
+    fn power_notices_report_clamped_actuation() {
+        let mut s = slurm();
+        s.run_until(mins(1));
+        let now = s.kernel.now();
+        // az5 has no dGPU; cpu cap clamps into the RAPL range
+        s.ctl
+            .apply_power_knobs(&mut s.kernel, 12, Some(0.001), None, true, now);
+        let notices = s.ctl.take_power_notices();
+        assert_eq!(notices.len(), 1);
+        let n = &notices[0];
+        assert_eq!(n.node, 12);
+        let cap = n.cpu_cap_w.expect("cap set");
+        assert!(cap > 0.001, "clamped to the domain floor, got {cap}");
+        assert_eq!(n.gpu_cap_w, None);
+        assert!(n.powersave);
+        assert!(s.ctl.take_power_notices().is_empty());
     }
 
     #[test]

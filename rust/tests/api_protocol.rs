@@ -116,7 +116,7 @@ fn wire_errors_never_panic() {
 }
 
 #[test]
-fn salloc_over_the_wire_grants_and_reports_nodes() {
+fn salloc_over_the_wire_is_a_ticket_then_wait_alloc() {
     let mut c = cluster();
     c.add_user("alice");
     let sid = c.login("alice").unwrap();
@@ -132,12 +132,43 @@ fn salloc_over_the_wire_grants_and_reports_nodes() {
     });
     let wire = req.to_json(Some(sid)).to_string();
     let (s, r) = Request::parse(&wire).unwrap();
+    // v2: alloc_nodes no longer blocks — it returns a ticket at once
     let resp = c.handle(s, &r).unwrap();
+    let Response::Ticket { job, ticket } = resp else {
+        panic!("expected Ticket, got {resp:?}");
+    };
+    assert!(ticket > 0);
+    assert_eq!(c.now(), SimTime::ZERO, "nonblocking: no time advanced");
+    // the blocking semantics live in the thin wait op on top
+    let resp = c.handle(Some(sid), &Request::WaitAlloc { job }).unwrap();
     let Response::Allocated { nodes, .. } = resp else {
         panic!("expected Allocated, got {resp:?}");
     };
     assert_eq!(nodes.len(), 2);
     assert!(nodes.iter().all(|n| n.starts_with("iml-ia770-")));
+}
+
+#[test]
+fn run_job_over_the_wire_is_a_ticket_then_wait_job() {
+    let mut c = cluster();
+    c.add_user("alice");
+    let sid = c.login("alice").unwrap();
+    let out = c.handle_json(&format!(
+        r#"{{"op": "run_job", "session": {}, "partition": "az5-a890m",
+            "nodes": 1, "duration_s": 60}}"#,
+        sid.0
+    ));
+    let out = Json::parse(&out).unwrap();
+    assert_eq!(out.get("ok").unwrap().as_bool(), Some(true), "{out}");
+    assert_eq!(out.get("type").unwrap().as_str(), Some("ticket"));
+    let job = out.get("job").unwrap().as_u64().unwrap();
+    let out = c.handle_json(&format!(
+        r#"{{"op": "wait_job", "session": {}, "job": {job}}}"#,
+        sid.0
+    ));
+    let out = Json::parse(&out).unwrap();
+    assert_eq!(out.get("type").unwrap().as_str(), Some("job_ran"), "{out}");
+    assert_eq!(out.get("state").unwrap().as_str(), Some("completed"));
 }
 
 #[test]
@@ -158,4 +189,176 @@ fn admin_ops_are_fenced_on_the_wire() {
     let root = c.login("root").unwrap();
     let resp = c.handle(Some(root), &power).unwrap();
     assert!(matches!(resp, Response::PowerQueued { on: false, .. }));
+}
+
+/// Every admin op on the v2 surface, driven by a non-admin session:
+/// all must come back `restricted to administrators`, none may leave a
+/// side effect.
+#[test]
+fn every_admin_op_rejects_non_admins() {
+    let mut c = cluster();
+    c.add_user("alice");
+    let sid = c.login("alice").unwrap();
+    let admin_ops = vec![
+        Request::AddUser {
+            user: "mallory".into(),
+            admin: true,
+        },
+        Request::Power {
+            node: "az4-n4090-0".into(),
+            on: true,
+        },
+        Request::Advance {
+            to: SimTime::from_hours(1),
+            sample: false,
+        },
+        Request::SetPowerBudget { watts: Some(500.0) },
+        Request::SetPolicy {
+            partition: "az5-a890m".into(),
+            policy: "energy_efficient".into(),
+        },
+        Request::Subscribe {
+            channel: dalek::api::Channel::PowerEvents,
+            rate_hz: None,
+        },
+        Request::SetRateLimit {
+            user: "alice".into(),
+            ops: 1,
+        },
+    ];
+    for op in &admin_ops {
+        let err = c.handle(Some(sid), op);
+        assert!(
+            matches!(err, Err(dalek::api::DalekError::AdminOnly)),
+            "{op:?} -> {err:?}"
+        );
+    }
+    // no side effects leaked past the fence
+    assert_eq!(c.now(), SimTime::ZERO);
+    assert!(c.login("mallory").is_err(), "user must not have been added");
+    let root = c.login("root").unwrap();
+    let Ok(Response::PowerReport { budget_w, .. }) = c.handle(Some(root), &Request::PowerReport)
+    else {
+        panic!("power report");
+    };
+    assert_eq!(budget_w, None, "budget must not have been set");
+}
+
+/// Expired and forged tokens across the new surface: every op must be
+/// rejected with `InvalidSession`, including the streaming ones.
+#[test]
+fn expired_and_forged_tokens_rejected_everywhere() {
+    let mut c = cluster();
+    c.add_user("alice");
+    let sid = c.login("alice").unwrap();
+    // the session works now…
+    assert!(c.handle(Some(sid), &Request::ClusterReport).is_ok());
+    // …then idles past the 7-day sliding TTL
+    let root = c.login("root").unwrap();
+    c.handle(
+        Some(root),
+        &Request::Advance {
+            to: SimTime::from_hours(8 * 24),
+            sample: false,
+        },
+    )
+    .unwrap();
+    let ops = vec![
+        Request::ClusterReport,
+        Request::SubmitJob(JobRequest {
+            partition: "az5-a890m".into(),
+            nodes: 1,
+            duration: SimTime::from_secs(30),
+            time_limit: None,
+            payload: None,
+            iters: 1,
+            user: None,
+            app: None,
+        }),
+        Request::Subscribe {
+            channel: dalek::api::Channel::JobEvents,
+            rate_hz: None,
+        },
+        Request::PollEvents { max: 10 },
+        Request::WaitJob { job: dalek::slurm::JobId(1) },
+        Request::QueryEnergy {
+            node: None,
+            window: None,
+        },
+    ];
+    for op in &ops {
+        let now = c.now();
+        let expired = c.handle(Some(sid), op);
+        assert!(
+            matches!(expired, Err(dalek::api::DalekError::InvalidSession)),
+            "expired token on {op:?} -> {expired:?}"
+        );
+        // forged: a token that was never minted
+        let forged = c.handle(Some(SessionId(123_456_789)), op);
+        assert!(
+            matches!(forged, Err(dalek::api::DalekError::InvalidSession)),
+            "forged token on {op:?} -> {forged:?}"
+        );
+        assert_eq!(c.now(), now, "rejected ops must not advance time");
+    }
+}
+
+/// Bounded-outbox overflow surfaces as a leading `lagged` event on the
+/// wire.
+#[test]
+fn outbox_overflow_reports_lagged_on_the_wire() {
+    let mut c = cluster();
+    c.add_user("alice");
+    let sid = c.login("alice").unwrap();
+    c.set_outbox_capacity(2);
+    c.handle(
+        Some(sid),
+        &Request::Subscribe {
+            channel: dalek::api::Channel::JobEvents,
+            rate_hz: None,
+        },
+    )
+    .unwrap();
+    for k in 0..3u64 {
+        c.handle(
+            Some(sid),
+            &Request::SubmitJob(JobRequest {
+                partition: "az5-a890m".into(),
+                nodes: 1,
+                duration: SimTime::from_secs(30 + k),
+                time_limit: None,
+                payload: None,
+                iters: 1,
+                user: None,
+                app: None,
+            }),
+        )
+        .unwrap();
+    }
+    let root = c.login("root").unwrap();
+    c.handle(
+        Some(root),
+        &Request::Advance {
+            to: SimTime::from_mins(10),
+            sample: false,
+        },
+    )
+    .unwrap();
+    let out = c.handle(Some(sid), &Request::PollEvents { max: 100 }).unwrap();
+    let Response::Events { events } = out else {
+        panic!("expected Events");
+    };
+    let json = Response::Events {
+        events: events.clone(),
+    }
+    .to_json();
+    let arr = json.get("events").unwrap().as_arr().unwrap();
+    assert_eq!(
+        arr[0].get("event").unwrap().as_str(),
+        Some("lagged"),
+        "{json}"
+    );
+    assert!(arr[0].get("missed").unwrap().as_u64().unwrap() > 0);
+    // exactly cap events survived behind the signal
+    assert_eq!(arr.len(), 3);
 }

@@ -1,0 +1,235 @@
+//! Acceptance suite for the streaming multi-client API (protocol v2):
+//!
+//! * a seeded `TraceGen::client_storm` (8 concurrent sessions mixing
+//!   srun tickets, subscriptions and admin ops) replayed through
+//!   `ApiServer` is bit-identical across two runs;
+//! * a single-session ticket+wait run reproduces the old blocking
+//!   `run_job` timestamps and joules exactly;
+//! * a `Telemetry` subscription at 10 Hz over a governor-capped run
+//!   delivers windows whose integrated energy matches `QueryEnergy`
+//!   over the same span within the probes' quantization bound, with no
+//!   per-sample materialization on the telemetry path.
+
+use dalek::api::{ApiServer, Channel, ClusterApi, Event, JobRequest, Ticket};
+use dalek::config::cluster::resolve_partition;
+use dalek::config::ClusterConfig;
+use dalek::coordinator::trace::TraceGen;
+use dalek::power::{Activity, PowerModel};
+use dalek::sim::SimTime;
+use dalek::slurm::JobState;
+
+fn cluster() -> ClusterApi {
+    ClusterApi::new(ClusterConfig::dalek_default(), None).unwrap()
+}
+
+fn req(partition: &str, nodes: u32, secs: u64) -> JobRequest {
+    JobRequest {
+        partition: partition.into(),
+        nodes,
+        duration: SimTime::from_secs(secs),
+        time_limit: None,
+        payload: None,
+        iters: 1,
+        user: None,
+        app: None,
+    }
+}
+
+/// One full storm run: 8 concurrent sessions (operator + 7 users),
+/// dense seeded arrivals, settled to quiescence. Returns the complete
+/// per-client transcript digest and the cluster's final report line.
+fn storm_run(seed: u64) -> (String, String) {
+    let mut server = ApiServer::new(cluster());
+    server.connect("root").unwrap();
+    for k in 1..8 {
+        server.connect(&format!("user{k}")).unwrap();
+    }
+    // deterministic prologue: the operator arms a budget and watches
+    // the power plane, user1 follows their own jobs and fires a ticket
+    // — guarantees every channel carries traffic whatever the seed
+    server.enqueue(0, dalek::api::Request::SetPowerBudget { watts: Some(700.0) });
+    server.enqueue(
+        0,
+        dalek::api::Request::Subscribe {
+            channel: Channel::PowerEvents,
+            rate_hz: None,
+        },
+    );
+    server.enqueue(
+        1,
+        dalek::api::Request::Subscribe {
+            channel: Channel::JobEvents,
+            rate_hz: None,
+        },
+    );
+    server.enqueue(1, dalek::api::Request::RunJob(req("az5-a890m", 2, 120)));
+    server.drain();
+    let mut gen = TraceGen::dalek_mix(seed);
+    gen.jobs_per_hour = 600.0; // dense: an arrival every ~6 s
+    let storm = gen.client_storm(8, 150);
+    assert_eq!(storm.len(), 150);
+    server.run_storm(&storm);
+    let settle_to = server.cluster.now() + SimTime::from_mins(30);
+    server.settle(settle_to);
+    let digest = server.transcript_digest();
+    let r = server.cluster.report();
+    let line = format!(
+        "{} {} {} {:.9} {:.9}",
+        r.now.as_secs_f64(),
+        r.jobs_completed,
+        r.jobs_pending,
+        r.true_energy_j,
+        r.measured_energy_j,
+    );
+    (digest, line)
+}
+
+#[test]
+fn seeded_multi_client_storm_is_bit_identical() {
+    let (digest_a, report_a) = storm_run(0xDA1EC);
+    let (digest_b, report_b) = storm_run(0xDA1EC);
+    assert_eq!(report_a, report_b, "cluster state diverged across replays");
+    assert_eq!(digest_a, digest_b, "transcripts diverged across replays");
+    // the storm genuinely exercised the streaming surface
+    assert!(digest_a.contains("\"type\":\"ticket\""), "no srun tickets ran");
+    assert!(digest_a.contains("\"type\":\"subscribed\""), "no subscriptions");
+    assert!(digest_a.contains("\"type\":\"events\""), "no event polls");
+    assert!(
+        digest_a.contains("\"event\":\"job\""),
+        "no job events were delivered"
+    );
+    // and a different seed produces a different storm
+    let (digest_c, _) = storm_run(0xBEEF);
+    assert_ne!(digest_a, digest_c);
+}
+
+#[test]
+fn ticket_plus_wait_reproduces_blocking_srun_exactly() {
+    // the old blocking run_job semantics, rebuilt as ticket + wait,
+    // must land on the same timestamps and joules the one-shot call
+    // produced: pinned against the analytic values
+    let mut c = cluster();
+    c.add_user("alice");
+    let sid = c.login("alice").unwrap();
+    let (ticket, id) = c
+        .run_ticket(sid, &req("az5-a890m", 2, 300), SimTime::ZERO)
+        .unwrap();
+    assert_eq!(ticket, Ticket(1));
+    assert_eq!(c.now(), SimTime::ZERO, "the ticket must not advance time");
+    let (jid, state) = c.wait_job(sid, id, SimTime::ZERO).unwrap();
+    assert_eq!(jid, id);
+    assert_eq!(state, JobState::Completed);
+    let job = c.slurm().job(id).unwrap();
+    // az5 wakes from suspend in 70 s; the uncapped run is bit-exactly
+    // the nominal duration (rate 1.0 path)
+    assert_eq!(job.started, Some(SimTime::from_secs(70)));
+    assert_eq!(job.finished, Some(SimTime::from_secs(370)));
+    // joules: constant draw while running, integrated exactly
+    let node = resolve_partition("az5-a890m").unwrap().node;
+    let w = PowerModel::for_node(&node).watts(Activity::cpu_only(0.95));
+    let expect = 2.0 * w * 300.0;
+    assert!(
+        (job.energy_j - expect).abs() < 1e-6,
+        "{} vs {expect}",
+        job.energy_j
+    );
+}
+
+#[test]
+fn telemetry_windows_match_query_energy_under_a_cap() {
+    let mut c = cluster();
+    let root = c.login("root").unwrap();
+    c.set_outbox_capacity(100_000);
+    // subscribe at t = 0, 10 Hz decimation
+    c.subscribe(root, Channel::Telemetry, Some(10.0)).unwrap();
+    // governor-capped run: 180 W over a saturated az5 partition
+    c.set_power_budget(root, Some(180.0)).unwrap();
+    c.submit_request(root, &req("az5-a890m", 4, 600), SimTime::ZERO)
+        .unwrap();
+    // drive sampled in uneven strides to T = 120 s (split-invariance is
+    // part of the contract: windows are cut as the clock advances)
+    for t in [3u64, 11, 30, 45, 60, 90, 120] {
+        c.run_until(SimTime::from_secs(t), true);
+    }
+    let span = 120.0;
+    let events = c.take_events(root, usize::MAX);
+    // 10 Hz × 120 s = 1200 tiling windows, no lag
+    assert_eq!(events.len(), 1200, "first: {:?}", events.first());
+    let mut expect_from = SimTime::ZERO;
+    let mut window_sum = 0.0;
+    for e in &events {
+        let Event::Telemetry {
+            from, to, energy_j, ..
+        } = e
+        else {
+            panic!("expected telemetry, got {e:?}");
+        };
+        assert_eq!(*from, expect_from, "windows must tile");
+        window_sum += energy_j;
+        expect_from = *to;
+    }
+    assert_eq!(expect_from, SimTime::from_secs(120));
+
+    // the same span through the §4.3 measurement path (probe samples)
+    let measured = c.query_energy(root, None, None).unwrap();
+    assert!(measured > 0.0);
+    // governor actually engaged (this is the capped scenario)
+    let report = c.power_report(root).unwrap();
+    assert!(report.governor_ticks > 0);
+    assert!(report.capped_nodes >= 4, "capped {}", report.capped_nodes);
+
+    // agreement bound: one power-LSB × duration per probe
+    // (quantization ≤ LSB/2 per sample) + one 250 µs conversion
+    // rectangle per transition at the worst step height (ADC boundary
+    // smear; ≤ 4 actuated nodes per tick + boot/start edges) + one
+    // trailing sample period per probe at the comparison edge. Probe
+    // noise is zero-mean and variance-matched per batch: its residual
+    // is orders of magnitude below the LSB term.
+    let probes = 16.0;
+    let lsb = 1e-3;
+    let transitions = (report.governor_ticks as f64) * 4.0 + 64.0;
+    let bound = probes * lsb * span + transitions * 0.25e-3 * 600.0 + probes * lsb * 600.0;
+    let diff = (window_sum - measured).abs();
+    assert!(
+        diff <= bound,
+        "telemetry {window_sum} vs measured {measured}: |diff| {diff} > {bound}"
+    );
+    // sanity: both track the scheduler's exact truth closely
+    let truth = c.slurm().total_energy_j();
+    assert!((window_sum - truth).abs() / truth < 0.01, "{window_sum} vs {truth}");
+}
+
+#[test]
+fn storm_mixes_tickets_with_salloc_and_teardown() {
+    // a compact end-to-end: tickets, a subscription, an interactive
+    // allocation, and the session teardown releasing it — through the
+    // server, not the typed methods
+    let mut server = ApiServer::new(cluster());
+    let a = server.connect("alice").unwrap();
+    server.enqueue(
+        a,
+        dalek::api::Request::Subscribe {
+            channel: Channel::JobEvents,
+            rate_hz: None,
+        },
+    );
+    server.enqueue(a, dalek::api::Request::AllocNodes(req("iml-ia770", 2, 3600)));
+    server.enqueue(a, dalek::api::Request::RunJob(req("az5-a890m", 1, 60)));
+    server.drain();
+    server.run_until(SimTime::from_mins(5));
+    let events = server.take_events(a);
+    // the salloc and the srun both queued; the srun completed
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, Event::Job { kind: dalek::api::JobEventKind::Finished { .. }, .. })));
+    // logout through the wire releases the allocation
+    server.enqueue(a, dalek::api::Request::Logout);
+    server.drain();
+    let cancelled = server
+        .cluster
+        .slurm()
+        .jobs()
+        .filter(|j| j.state == JobState::Cancelled)
+        .count();
+    assert_eq!(cancelled, 1, "the salloc allocation must not leak");
+}
