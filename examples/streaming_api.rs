@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
         Request::Subscribe {
             channel: Channel::PowerEvents,
             rate_hz: None,
+            expr: None,
         },
     );
     // the dashboard decimates cluster telemetry at 2 Hz — no samples
@@ -59,6 +60,7 @@ fn main() -> anyhow::Result<()> {
         Request::Subscribe {
             channel: Channel::Telemetry,
             rate_hz: Some(2.0),
+            expr: None,
         },
     );
     // users follow their own jobs; srun no longer blocks anyone
@@ -68,6 +70,7 @@ fn main() -> anyhow::Result<()> {
             Request::Subscribe {
                 channel: Channel::JobEvents,
                 rate_hz: None,
+                expr: None,
             },
         );
     }

@@ -45,6 +45,8 @@ use crate::energy::sampler::ROLLING_HORIZON;
 use crate::energy::{EnergyApi, MainBoard, ProbeConfig, Sample, StreamingSampler};
 use crate::net::{FlowId, FlowNet, NetEvent, Topology};
 use crate::power::Activity;
+use crate::query::standing::StandingQuery;
+use crate::query::{ClusterTree, Expr as QueryExpr, QueryOutput, QueryValue, WindowSpec};
 use crate::runtime::{ExecReport, PjRtRuntime};
 use crate::services::auth::UserDb;
 use crate::services::{ServiceEvent, ServiceRack};
@@ -167,6 +169,8 @@ struct SessionSubs {
     power_events: bool,
     /// decimated telemetry cursor: `(period, start of the next window)`
     telemetry: Option<(SimTime, SimTime)>,
+    /// registered standing DQL queries (the `query_events` channel)
+    standing: Vec<StandingQuery>,
     outbox: Outbox,
 }
 
@@ -178,6 +182,7 @@ impl SessionSubs {
             job_events: false,
             power_events: false,
             telemetry: None,
+            standing: Vec::new(),
             outbox: Outbox::new(cap),
         }
     }
@@ -418,6 +423,13 @@ impl ClusterApi {
     /// Read-only view of the controller (reports, node tables, tests).
     pub fn slurm(&self) -> &Slurm {
         &self.slurm.ctl
+    }
+
+    /// Read-only view of the streaming sampler (rolling telemetry;
+    /// tests assert its `materialized_samples()` counter to prove the
+    /// query and telemetry paths stay closed-form).
+    pub fn sampler(&self) -> &StreamingSampler {
+        &self.sampler
     }
 
     /// Read-only view of the periodic frontend services.
@@ -704,6 +716,51 @@ impl ClusterApi {
                 s.telemetry = Some((period, next_t));
             }
         }
+        // standing DQL queries → QueryEvents. Cadenced queries fire on
+        // their sim-time grid; edge-triggered ones whenever this round
+        // carried job/power notices. Delta suppression: a result equal
+        // to the last delivery is not re-sent.
+        if self.subs.values().any(|s| !s.standing.is_empty()) {
+            let now = self.kernel.now();
+            let edge = !jnotices.is_empty() || !pnotices.is_empty();
+            self.sampler.fold_rolling(self.slurm.ctl.transitions(), now);
+            let slurm = &self.slurm.ctl;
+            let sampler = &self.sampler;
+            let energy = &self.energy;
+            let net = &self.net;
+            let topo = &self.topo;
+            for s in self.subs.values_mut() {
+                let SessionSubs {
+                    user,
+                    admin,
+                    standing,
+                    outbox,
+                    ..
+                } = s;
+                let scope = if *admin { None } else { Some(user.as_str()) };
+                for q in standing.iter_mut() {
+                    if !q.due(now, edge) {
+                        continue;
+                    }
+                    let tree = ClusterTree::new(slurm, sampler, energy, net, topo, now, scope);
+                    // evaluation errors are skipped: the cadence stays
+                    // deterministic and an error has no delta to carry
+                    let Ok(out) = crate::query::eval(&tree, &q.expr) else {
+                        continue;
+                    };
+                    let encoded = crate::query::output_json(&out);
+                    if q.last.as_ref() == Some(&encoded) {
+                        continue;
+                    }
+                    q.last = Some(encoded.clone());
+                    outbox.push(Event::Query {
+                        at: now,
+                        expr: q.canonical.clone(),
+                        result: encoded,
+                    });
+                }
+            }
+        }
     }
 
     /// Open a typed event channel on a session. `PowerEvents` is
@@ -718,6 +775,14 @@ impl ClusterApi {
         rate_hz: Option<f64>,
     ) -> Result<(), DalekError> {
         let now = self.now();
+        if channel == Channel::QueryEvents {
+            // the channel is stood up per-expression, not bare
+            return Err(DalekError::BadRequest(
+                "subscribing to `query_events` requires an `expr` \
+                 (the standing query to register)"
+                    .into(),
+            ));
+        }
         let sess = match channel {
             Channel::PowerEvents => self.admin_session(sid, now)?,
             _ => self.session(sid, now)?,
@@ -730,6 +795,7 @@ impl ClusterApi {
         match channel {
             Channel::JobEvents => entry.job_events = true,
             Channel::PowerEvents => entry.power_events = true,
+            Channel::QueryEvents => unreachable!("rejected above"),
             Channel::Telemetry => {
                 let rate = rate_hz.unwrap_or(1.0);
                 if !rate.is_finite() || rate <= 0.0 {
@@ -765,6 +831,48 @@ impl ClusterApi {
         Ok(())
     }
 
+    /// Register a standing DQL query on the `query_events` channel.
+    /// With a `rate_hz` the expression re-evaluates on that
+    /// deterministic sim-time cadence; without one it re-evaluates on
+    /// job/power edges. Results are owner-scoped exactly like one-shot
+    /// queries, delta-suppressed, and delivered through the session's
+    /// bounded outbox (lag semantics included). Each call adds one
+    /// query; `unsubscribe` on the channel clears them all.
+    pub fn subscribe_query(
+        &mut self,
+        sid: SessionId,
+        expr: &str,
+        rate_hz: Option<f64>,
+    ) -> Result<(), DalekError> {
+        let now = self.now();
+        let sess = self.session(sid, now)?;
+        let parsed = QueryExpr::parse(expr)?;
+        let period = match rate_hz {
+            None => None,
+            Some(r) => {
+                if !r.is_finite() || r <= 0.0 {
+                    return Err(DalekError::BadRequest(format!(
+                        "standing-query rate must be a positive number of Hz, got {r}"
+                    )));
+                }
+                let p = SimTime::from_secs_f64(1.0 / r);
+                if p.as_ns() == 0 {
+                    return Err(DalekError::BadRequest(format!(
+                        "standing-query rate {r} Hz is finer than the ns clock"
+                    )));
+                }
+                Some(p)
+            }
+        };
+        let cap = self.outbox_cap;
+        let entry = self
+            .subs
+            .entry(sid)
+            .or_insert_with(|| SessionSubs::new(sess.login.clone(), sess.admin, cap));
+        entry.standing.push(StandingQuery::new(parsed, period, now));
+        Ok(())
+    }
+
     /// Close one channel; buffered events remain pollable. Idempotent.
     pub fn unsubscribe(&mut self, sid: SessionId, channel: Channel) -> Result<(), DalekError> {
         let now = self.now();
@@ -774,6 +882,7 @@ impl ClusterApi {
                 Channel::JobEvents => s.job_events = false,
                 Channel::PowerEvents => s.power_events = false,
                 Channel::Telemetry => s.telemetry = None,
+                Channel::QueryEvents => s.standing.clear(),
             }
         }
         Ok(())
@@ -1295,7 +1404,72 @@ impl ClusterApi {
         Ok(())
     }
 
+    // -----------------------------------------------------------------
+    // DQL (`dalek::query`, sessions)
+    // -----------------------------------------------------------------
+
+    /// Evaluate one DQL expression against the live virtual cluster
+    /// tree (the `query` protocol op). Owner-scoped: non-admin
+    /// sessions see only their own jobs and quota account. Returns the
+    /// canonical spelling of the expression and the shaped result; no
+    /// samples are materialized and no state is cloned.
+    pub fn query(
+        &mut self,
+        sid: SessionId,
+        expr: &str,
+    ) -> Result<(String, QueryOutput), DalekError> {
+        let now = self.now();
+        let sess = self.session(sid, now)?;
+        let parsed = QueryExpr::parse(expr)?;
+        // windowed aggregates read the rolling piecewise history: fold
+        // the pending transitions so the window reaches `now`
+        self.sampler.fold_rolling(self.slurm.ctl.transitions(), now);
+        let scope = if sess.admin {
+            None
+        } else {
+            Some(sess.login.as_str())
+        };
+        let tree = ClusterTree::new(
+            &self.slurm.ctl,
+            &self.sampler,
+            &self.energy,
+            &self.net,
+            &self.topo,
+            now,
+            scope,
+        );
+        let out = crate::query::eval(&tree, &parsed)?;
+        Ok((parsed.to_string(), out))
+    }
+
+    /// Evaluate a trusted, programmatically-built expression against
+    /// the unscoped tree and return its scalar number. The legacy
+    /// aggregate surfaces (`query_energy`, `power_report`) are thin
+    /// sugar over this — one evaluator, pinned equivalent by
+    /// construction.
+    fn eval_scalar_num(&mut self, expr: &QueryExpr) -> Result<f64, DalekError> {
+        let now = self.now();
+        self.sampler.fold_rolling(self.slurm.ctl.transitions(), now);
+        let tree = ClusterTree::new(
+            &self.slurm.ctl,
+            &self.sampler,
+            &self.energy,
+            &self.net,
+            &self.topo,
+            now,
+            None,
+        );
+        match crate::query::eval(&tree, expr)? {
+            QueryOutput::Scalar(QueryValue::Num(x)) => Ok(x),
+            other => Err(DalekError::InvalidQuery(format!(
+                "`{expr}` did not evaluate to a number: {other:?}"
+            ))),
+        }
+    }
+
     /// Measured energy: whole cluster, one node, or one node windowed.
+    /// Sugar over the DQL evaluator: `sum(nodes.<n|*>.measured.energy_j
+    /// [, window])` against the virtual tree.
     pub fn query_energy(
         &mut self,
         sid: SessionId,
@@ -1304,26 +1478,10 @@ impl ClusterApi {
     ) -> Result<f64, DalekError> {
         let now = self.now();
         self.session(sid, now)?;
-        let nprobes = self.cfg.energy.probes_per_node as u8;
-        let windowed = |board: &MainBoard, (a, b)| -> Result<f64, DalekError> {
-            let mut j = 0.0;
-            for p in 0..nprobes {
-                j += board.store(p)?.window_energy_j(a, b);
-            }
-            Ok(j)
-        };
-        match (node, window) {
-            (None, None) => Ok(self.energy.total_energy_j()),
-            (None, Some(w)) => {
-                let mut j = 0.0;
-                for board in self.energy.boards() {
-                    j += windowed(board, w)?;
-                }
-                Ok(j)
-            }
-            (Some(n), None) => Ok(self.energy.board(n)?.total_energy_j()),
-            (Some(n), Some(w)) => windowed(self.energy.board(n)?, w),
+        if let Some(n) = node {
+            self.energy.board(n)?; // keep the typed NoBoard surface
         }
+        self.eval_scalar_num(&measured_energy_expr(node, window))
     }
 
     // -----------------------------------------------------------------
@@ -1396,15 +1554,26 @@ impl ClusterApi {
     }
 
     fn power_report_now(&mut self) -> PowerReport {
-        let now = self.now();
-        self.sampler.fold_rolling(self.slurm.ctl.transitions(), now);
+        // the report's aggregate fields are DQL sugar: the same tree
+        // queries any client can issue, summed in the same node-index
+        // order the sampler folds in (equivalence pinned in tests)
+        let window = self.governor.window;
+        let rolling_w = self
+            .eval_scalar_num(&rolling_watts_expr(window))
+            .expect("static expression over live nodes");
+        let cluster_w = self
+            .eval_scalar_num(&parse_static("cluster.watts"))
+            .expect("static expression");
+        let capped = self
+            .eval_scalar_num(&parse_static("count(nodes[capped=true])"))
+            .expect("static expression");
         PowerReport {
             budget_w: self.governor.budget_w(),
-            rolling_w: self.sampler.rolling_mean_w(self.governor.window, now),
-            window_s: self.governor.window.as_secs_f64(),
-            cluster_w: self.slurm.ctl.cluster_watts(),
+            rolling_w,
+            window_s: window.as_secs_f64(),
+            cluster_w,
             throttle: self.governor.stats.last_throttle,
-            capped_nodes: self.slurm.ctl.capped_nodes() as u32,
+            capped_nodes: capped as u32,
             governor_ticks: self.governor.stats.ticks,
             idle_shutdowns: self.governor.stats.idle_shutdowns,
         }
@@ -1633,9 +1802,27 @@ impl ClusterApi {
                 let (job, nodes) = self.wait_alloc(sid, *job)?;
                 Ok(Response::Allocated { job, nodes })
             }
-            Request::Subscribe { channel, rate_hz } => {
-                self.subscribe(sid, *channel, *rate_hz)?;
+            Request::Subscribe {
+                channel,
+                rate_hz,
+                expr,
+            } => {
+                match (channel, expr) {
+                    (Channel::QueryEvents, Some(e)) => {
+                        self.subscribe_query(sid, e, *rate_hz)?
+                    }
+                    (_, None) => self.subscribe(sid, *channel, *rate_hz)?,
+                    (_, Some(_)) => {
+                        return Err(DalekError::BadRequest(
+                            "`expr` only applies to the `query_events` channel".into(),
+                        ))
+                    }
+                }
                 Ok(Response::Subscribed { channel: *channel })
+            }
+            Request::Query { expr } => {
+                let (expr, result) = self.query(sid, expr)?;
+                Ok(Response::QueryResult { expr, result })
             }
             Request::Unsubscribe { channel } => {
                 self.unsubscribe(sid, *channel)?;
@@ -1763,6 +1950,46 @@ impl ClusterApi {
             Err(e) => Response::from_error(&e),
         };
         resp.to_json().to_string()
+    }
+}
+
+/// Parse a DQL expression known valid at compile time.
+fn parse_static(src: &str) -> QueryExpr {
+    QueryExpr::parse(src).expect("static DQL expression")
+}
+
+/// `sum(nodes.*.power.watts, window=<w>)` — the governor's measured
+/// rolling cluster draw, as a tree query.
+fn rolling_watts_expr(window: SimTime) -> QueryExpr {
+    let mut e = parse_static("sum(nodes.*.power.watts)");
+    let QueryExpr::Agg { window: w, .. } = &mut e else {
+        unreachable!("parsed an aggregate")
+    };
+    *w = Some(WindowSpec::Trailing(window));
+    e
+}
+
+/// `sum(nodes.<n|*>.measured.energy_j[, window=a..b])` — the legacy
+/// `query_energy` surface, as a tree query. Built programmatically so
+/// node names never round-trip through the parser.
+fn measured_energy_expr(node: Option<&str>, window: Option<(SimTime, SimTime)>) -> QueryExpr {
+    use crate::query::{AggFunc, Path, SegKey, Segment};
+    let seg = |key: SegKey| Segment { key, pred: None };
+    let path = Path {
+        segments: vec![
+            seg(SegKey::Name("nodes".into())),
+            seg(match node {
+                Some(n) => SegKey::Name(n.into()),
+                None => SegKey::Wildcard,
+            }),
+            seg(SegKey::Name("measured".into())),
+            seg(SegKey::Name("energy_j".into())),
+        ],
+    };
+    QueryExpr::Agg {
+        func: AggFunc::Sum,
+        path,
+        window: window.map(|(a, b)| WindowSpec::Span(a, b)),
     }
 }
 

@@ -35,6 +35,8 @@ pub enum DalekError {
     Deadline(JobId),
     #[error("malformed request: {0}")]
     BadRequest(String),
+    #[error("invalid query: {0}")]
+    InvalidQuery(String),
     #[error(transparent)]
     Wire(#[from] JsonError),
     #[error("no PJRT runtime loaded (run `make artifacts`)")]

@@ -2,7 +2,7 @@
 //!
 //! The §4 energy platform exists to be *watched live*: 1 kSPS probes,
 //! governor actuations, job state changes. This module defines the
-//! three subscription channels ([`Channel`]) and their event payloads
+//! four subscription channels ([`Channel`]) and their event payloads
 //! ([`Event`]), plus the bounded per-session [`Outbox`] they buffer in:
 //!
 //! * `JobEvents` — queued / started / repriced / finished (with the
@@ -14,7 +14,11 @@
 //!   rolling piecewise history at a client-chosen rate. No sample is
 //!   materialized: each window is one closed-form integral over the
 //!   transition segments, so a 10 Hz subscription costs the same in a
-//!   sampled and an unsampled run.
+//!   sampled and an unsampled run;
+//! * `QueryEvents` — standing DQL queries (`dalek::query`): registered
+//!   expressions re-evaluated on a deterministic cadence or on
+//!   job/power edges, delivered as deltas (only when the result
+//!   changed), owner-scoped like the one-shot `query` op.
 //!
 //! Outboxes are bounded; on overflow the oldest events are dropped and
 //! the next poll leads with an explicit [`Event::Lagged`] signal, the
@@ -41,6 +45,7 @@ pub enum Channel {
     JobEvents,
     PowerEvents,
     Telemetry,
+    QueryEvents,
 }
 
 impl Channel {
@@ -49,6 +54,7 @@ impl Channel {
             Channel::JobEvents => "job_events",
             Channel::PowerEvents => "power_events",
             Channel::Telemetry => "telemetry",
+            Channel::QueryEvents => "query_events",
         }
     }
 
@@ -57,6 +63,7 @@ impl Channel {
             "job_events" => Some(Channel::JobEvents),
             "power_events" => Some(Channel::PowerEvents),
             "telemetry" => Some(Channel::Telemetry),
+            "query_events" => Some(Channel::QueryEvents),
             _ => None,
         }
     }
@@ -114,6 +121,14 @@ pub enum Event {
         to: SimTime,
         mean_w: f64,
         energy_j: f64,
+    },
+    /// one standing-query delta on `QueryEvents`: the registered
+    /// expression's result changed (`result` is the query's wire
+    /// encoding — `{"kind": "scalar" | "vector" | "table", ...}`)
+    Query {
+        at: SimTime,
+        expr: String,
+        result: Json,
     },
     /// the outbox overflowed (or telemetry windows aged past the
     /// rolling-history horizon): `missed` events/windows were dropped
@@ -202,6 +217,12 @@ impl Event {
                 ("mean_w", Json::from(*mean_w)),
                 ("energy_j", Json::from(*energy_j)),
             ]),
+            Event::Query { at, expr, result } => Json::object([
+                ("event", Json::from("query")),
+                ("at_s", Json::from(at.as_secs_f64())),
+                ("expr", Json::from(expr.as_str())),
+                ("result", result.clone()),
+            ]),
             Event::Lagged { missed } => Json::object([
                 ("event", Json::from("lagged")),
                 ("missed", Json::from(*missed)),
@@ -287,7 +308,12 @@ mod tests {
 
     #[test]
     fn channel_names_round_trip() {
-        for c in [Channel::JobEvents, Channel::PowerEvents, Channel::Telemetry] {
+        for c in [
+            Channel::JobEvents,
+            Channel::PowerEvents,
+            Channel::Telemetry,
+            Channel::QueryEvents,
+        ] {
             assert_eq!(Channel::from_wire(c.as_str()), Some(c));
         }
         assert_eq!(Channel::from_wire("exterminate"), None);

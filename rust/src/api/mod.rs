@@ -20,8 +20,9 @@
 //!   runtime on one `sim::Kernel` ([`ClusterEvent`] is the routing
 //!   enum) and routes every request to the (crate-internal)
 //!   `SlurmApi`/`EnergyApi` targets
-//! * [`events`] — the streaming side: typed [`Event`]s on three
-//!   subscription channels (`JobEvents`, `PowerEvents`, `Telemetry`),
+//! * [`events`] — the streaming side: typed [`Event`]s on four
+//!   subscription channels (`JobEvents`, `PowerEvents`, `Telemetry`,
+//!   `QueryEvents` — standing DQL queries from [`crate::query`]),
 //!   buffered in bounded per-session outboxes with explicit lag
 //!   signaling; `run_job`/`alloc_nodes` are nonblocking [`Ticket`]s
 //!   with the old blocking semantics rebuilt on top (`wait_job` /

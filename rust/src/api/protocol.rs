@@ -108,13 +108,20 @@ pub enum Request {
     SetPolicy { partition: String, policy: String },
     /// Read the governor's telemetry/actuation state.
     PowerReport,
+    /// One-shot DQL evaluation (`dalek::query`): a path expression
+    /// with wildcards/predicates/aggregation over the virtual cluster
+    /// tree, owner-scoped through the session. Replies `QueryResult`.
+    Query { expr: String },
     /// Open a typed event channel on this session. `PowerEvents` is
     /// admin-only (it exposes the governor's actuation plane);
     /// `Telemetry` takes a client-chosen decimation rate (`rate_hz`,
-    /// default 1 Hz, period at most the 120 s rolling horizon).
+    /// default 1 Hz, period at most the 120 s rolling horizon);
+    /// `QueryEvents` requires a DQL `expr` to stand up (re-evaluated
+    /// on the `rate_hz` cadence, or on job/power edges when absent).
     Subscribe {
         channel: Channel,
         rate_hz: Option<f64>,
+        expr: Option<String>,
     },
     /// Close one channel (idempotent; buffered events stay pollable).
     Unsubscribe { channel: Channel },
@@ -206,6 +213,12 @@ pub enum Response {
     Unsubscribed { channel: Channel },
     Events { events: Vec<Event> },
     RateLimitSet { user: String, ops: u32 },
+    /// A DQL evaluation: the canonical expression spelling plus the
+    /// typed scalar/vector/table result.
+    QueryResult {
+        expr: String,
+        result: crate::query::QueryOutput,
+    },
     Error { message: String },
 }
 
@@ -515,11 +528,15 @@ impl Request {
                 }
             }
             "power_report" => Request::PowerReport,
+            "query" => Request::Query {
+                expr: need_str(j, "expr")?,
+            },
             "subscribe" => {
                 let ch = need_str(j, "channel")?;
                 let channel = Channel::from_wire(&ch).ok_or_else(|| {
                     bad(format!(
-                        "unknown channel `{ch}` (job_events | power_events | telemetry)"
+                        "unknown channel `{ch}` \
+                         (job_events | power_events | telemetry | query_events)"
                     ))
                 })?;
                 let rate_hz = match j.get("rate_hz") {
@@ -533,13 +550,29 @@ impl Request {
                         }
                     },
                 };
-                Request::Subscribe { channel, rate_hz }
+                let expr = match j.get("expr") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => match v.as_str() {
+                        Some(s) => Some(s.to_string()),
+                        None => {
+                            return Err(bad(format!(
+                                "field `expr` must be a string, got {v}"
+                            )))
+                        }
+                    },
+                };
+                Request::Subscribe {
+                    channel,
+                    rate_hz,
+                    expr,
+                }
             }
             "unsubscribe" => {
                 let ch = need_str(j, "channel")?;
                 let channel = Channel::from_wire(&ch).ok_or_else(|| {
                     bad(format!(
-                        "unknown channel `{ch}` (job_events | power_events | telemetry)"
+                        "unknown channel `{ch}` \
+                         (job_events | power_events | telemetry | query_events)"
                     ))
                 })?;
                 Request::Unsubscribe { channel }
@@ -694,10 +727,21 @@ impl Request {
                 "set_policy"
             }
             Request::PowerReport => "power_report",
-            Request::Subscribe { channel, rate_hz } => {
+            Request::Query { expr } => {
+                push("expr", Json::from(expr.as_str()));
+                "query"
+            }
+            Request::Subscribe {
+                channel,
+                rate_hz,
+                expr,
+            } => {
                 push("channel", Json::from(channel.as_str()));
                 if let Some(r) = rate_hz {
                     push("rate_hz", Json::from(*r));
+                }
+                if let Some(e) = expr {
+                    push("expr", Json::from(e.as_str()));
                 }
                 "subscribe"
             }
@@ -940,6 +984,17 @@ impl Response {
                 push("ops", Json::from(*ops));
                 "rate_limit_set"
             }
+            Response::QueryResult { expr, result } => {
+                push("expr", Json::from(expr.as_str()));
+                // splice the result's wire object (kind + payload) —
+                // the same encoding standing-query events carry
+                if let Json::Obj(m) = crate::query::output_json(result) {
+                    for (k, v) in m {
+                        fields.push((k, v));
+                    }
+                }
+                "query_result"
+            }
             Response::Error { message } => {
                 let j = Json::object([
                     ("ok", Json::from(false)),
@@ -1072,13 +1127,23 @@ mod tests {
             Request::Subscribe {
                 channel: Channel::JobEvents,
                 rate_hz: None,
+                expr: None,
             },
             Request::Subscribe {
                 channel: Channel::Telemetry,
                 rate_hz: Some(10.0),
+                expr: None,
+            },
+            Request::Subscribe {
+                channel: Channel::QueryEvents,
+                rate_hz: Some(0.5),
+                expr: Some("sum(nodes.*.power.watts)".into()),
             },
             Request::Unsubscribe {
                 channel: Channel::PowerEvents,
+            },
+            Request::Query {
+                expr: "mean(nodes[partition=\"az5-a890m\"].power.watts, window=60s)".into(),
             },
             Request::PollEvents { max: 32 },
             Request::WaitJob { job: JobId(7) },
@@ -1214,6 +1279,7 @@ mod tests {
             Request::Subscribe {
                 channel: Channel::Telemetry,
                 rate_hz: Some(2.0),
+                expr: None,
             },
             Request::JobInfo { job: JobId(3) },
             Request::QueryEnergy {
@@ -1278,6 +1344,44 @@ mod tests {
             Request::parse(r#"{"op": "set_rate_limit", "user": "a", "ops": 0, "session": 1}"#),
             Err(DalekError::BadRequest(_))
         ));
+        // query needs an expr string; subscribe's expr must be a string
+        assert!(matches!(
+            Request::parse(r#"{"op": "query", "session": 1}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(
+                r#"{"op": "subscribe", "channel": "query_events", "expr": 7, "session": 1}"#
+            ),
+            Err(DalekError::BadRequest(_))
+        ));
+        // expr = null is treated as absent
+        let (_, r) = Request::parse(
+            r#"{"op": "subscribe", "channel": "job_events", "expr": null, "session": 1}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::Subscribe {
+                channel: Channel::JobEvents,
+                rate_hz: None,
+                expr: None,
+            }
+        );
+    }
+
+    #[test]
+    fn query_result_encodes_kind_and_payload() {
+        let r = Response::QueryResult {
+            expr: "cluster.watts".into(),
+            result: crate::query::QueryOutput::Scalar(crate::query::QueryValue::Num(42.5)),
+        }
+        .to_json();
+        assert_eq!(r.get("type").unwrap().as_str(), Some("query_result"));
+        assert_eq!(r.get("expr").unwrap().as_str(), Some("cluster.watts"));
+        assert_eq!(r.get("kind").unwrap().as_str(), Some("scalar"));
+        assert_eq!(r.get("value").unwrap().as_f64(), Some(42.5));
+        assert_eq!(r.get("ok").unwrap(), &Json::Bool(true));
     }
 
     #[test]

@@ -308,6 +308,7 @@ mod tests {
             Request::Subscribe {
                 channel: crate::api::Channel::JobEvents,
                 rate_hz: None,
+                expr: None,
             },
         );
         s.drain();

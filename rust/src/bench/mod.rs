@@ -12,11 +12,16 @@
 //! | [`latency`] | Fig. 8             |
 //! | [`ssd`]     | Fig. 9             |
 //! | [`tables`]  | Tables 1–3         |
+//!
+//! [`perf`] is different in kind: not a paper figure but the repo's
+//! own machine-readable perf harness (`dalek bench perf`), emitting
+//! `BENCH_<name>.json` baselines checked by CI's bench-smoke job.
 
 pub mod clpeak;
 pub mod cpufp;
 pub mod latency;
 pub mod membw;
+pub mod perf;
 pub mod ssd;
 pub mod tables;
 

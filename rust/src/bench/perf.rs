@@ -1,0 +1,404 @@
+//! Machine-readable perf harness (`dalek bench perf`).
+//!
+//! Runs the repo's headline hot paths — the streaming sampler, the
+//! SLURM controller, the multi-client API storm, and the DQL evaluator
+//! — through [`crate::util::benchkit`] and emits one `BENCH_<name>.json`
+//! per case (wall-time summary + a throughput metric). The JSON files
+//! are committed at the repository root as the perf baseline; CI's
+//! bench-smoke job replays `--quick --check` and fails on a >
+//! [`REGRESSION_TOLERANCE`] p50 wall-time regression against them.
+//!
+//! Baselines flagged `"provisional": true` are bootstrap placeholders
+//! (written before numbers existed for the canonical machine): `--check`
+//! reports and skips them instead of comparing. Regenerate real ones
+//! with `dalek bench perf --quick --out ..` from `rust/` and commit.
+
+use crate::api::{ApiServer, ClusterApi};
+use crate::config::ClusterConfig;
+use crate::coordinator::trace::TraceGen;
+use crate::coordinator::Cluster;
+use crate::power::Activity;
+use crate::query::{self, Expr, MemTree, QueryValue};
+use crate::sim::SimTime;
+use crate::slurm::{JobSpec, SlurmSim};
+use crate::util::benchkit::{self, BenchResult};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Fractional p50 wall-time growth over the committed baseline that
+/// `--check` treats as a regression (15%).
+pub const REGRESSION_TOLERANCE: f64 = 0.15;
+
+/// The four perf cases, in run order.
+pub const CASES: [&str; 4] = ["sampling", "scheduler", "api_throughput", "query_eval"];
+
+/// Options for one `dalek bench perf` invocation.
+pub struct PerfOpts {
+    /// Scaled-down workloads (CI smoke); baselines must match mode.
+    pub quick: bool,
+    /// Directory to write `BENCH_<name>.json` into (`None` = don't write).
+    pub out: Option<PathBuf>,
+    /// Compare against committed baselines in this directory.
+    pub baseline: Option<PathBuf>,
+}
+
+/// One case's result: wall-time summary plus a named throughput metric,
+/// exactly what `BENCH_<name>.json` carries.
+pub struct PerfRecord {
+    pub name: &'static str,
+    pub mode: &'static str,
+    pub iters: u32,
+    pub wall_ns_min: f64,
+    pub wall_ns_p50: f64,
+    pub wall_ns_max: f64,
+    /// (metric name, per-wall-second rate), e.g. `("samples_per_sec", …)`.
+    pub metrics: Vec<(&'static str, f64)>,
+}
+
+impl PerfRecord {
+    fn from_bench(name: &'static str, mode: &'static str, r: &BenchResult) -> Self {
+        Self {
+            name,
+            mode,
+            iters: r.iters,
+            wall_ns_min: r.summary.min,
+            wall_ns_p50: r.summary.p50,
+            wall_ns_max: r.summary.max,
+            metrics: Vec::new(),
+        }
+    }
+
+    fn metric(mut self, key: &'static str, per_sec: f64) -> Self {
+        self.metrics.push((key, per_sec));
+        self
+    }
+
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("name", Json::from(self.name)),
+            ("mode", Json::from(self.mode)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("wall_ns_min", Json::Num(self.wall_ns_min)),
+            ("wall_ns_p50", Json::Num(self.wall_ns_p50)),
+            ("wall_ns_max", Json::Num(self.wall_ns_max)),
+        ];
+        for &(k, v) in &self.metrics {
+            pairs.push((k, Json::Num(v)));
+        }
+        Json::object(pairs)
+    }
+}
+
+/// Run every case, write JSON records (if `out` is set), then check
+/// against baselines (if `baseline` is set). Returns the records;
+/// `Err` lists regressions / IO failures.
+pub fn run(opts: &PerfOpts) -> Result<Vec<PerfRecord>, String> {
+    let mode = if opts.quick { "quick" } else { "full" };
+    let mut records = Vec::new();
+    for name in CASES {
+        println!("perf/{name} ({mode}) ...");
+        let rec = match name {
+            "sampling" => case_sampling(opts.quick),
+            "scheduler" => case_scheduler(opts.quick),
+            "api_throughput" => case_api_throughput(opts.quick),
+            "query_eval" => case_query_eval(opts.quick),
+            _ => unreachable!("CASES is exhaustive"),
+        };
+        let rate = rec
+            .metrics
+            .first()
+            .map(|(k, v)| format!("   {k}: {v:.0}"))
+            .unwrap_or_default();
+        println!(
+            "  wall p50: {}{rate}",
+            crate::util::units::secs(rec.wall_ns_p50 / 1e9)
+        );
+        records.push(rec);
+    }
+
+    if let Some(dir) = &opts.out {
+        for rec in &records {
+            let path = dir.join(rec.file_name());
+            std::fs::write(&path, format!("{}\n", rec.to_json()))
+                .map_err(|e| format!("write {}: {e}", path.display()))?;
+            println!("wrote {}", path.display());
+        }
+    }
+
+    if let Some(dir) = &opts.baseline {
+        check_against(&records, dir)?;
+    }
+    Ok(records)
+}
+
+/// Compare fresh records against `BENCH_<name>.json` files in `dir`.
+/// Missing, provisional, or mode-mismatched baselines are reported and
+/// skipped (the gate arms itself once real baselines are committed).
+pub fn check_against(records: &[PerfRecord], dir: &Path) -> Result<(), String> {
+    let mut failures = Vec::new();
+    for rec in records {
+        let path = dir.join(rec.file_name());
+        let raw = match std::fs::read_to_string(&path) {
+            Ok(s) => s,
+            Err(_) => {
+                println!("check perf/{}: no baseline at {} — skipped", rec.name, path.display());
+                continue;
+            }
+        };
+        let base = Json::parse(&raw).map_err(|e| format!("parse {}: {e:?}", path.display()))?;
+        if base.get("provisional").and_then(Json::as_bool) == Some(true) {
+            println!("check perf/{}: baseline is provisional (bootstrap) — skipped", rec.name);
+            continue;
+        }
+        let base_mode = base.get("mode").and_then(Json::as_str).unwrap_or("full");
+        if base_mode != rec.mode {
+            println!(
+                "check perf/{}: baseline mode `{base_mode}` != run mode `{}` — skipped",
+                rec.name, rec.mode
+            );
+            continue;
+        }
+        let Some(base_p50) = base.get("wall_ns_p50").and_then(Json::as_f64) else {
+            failures.push(format!("{}: baseline missing wall_ns_p50", rec.name));
+            continue;
+        };
+        let ratio = rec.wall_ns_p50 / base_p50;
+        let verdict = if ratio > 1.0 + REGRESSION_TOLERANCE {
+            failures.push(format!(
+                "{}: p50 {:.3e} ns vs baseline {:.3e} ns ({:+.1}%)",
+                rec.name,
+                rec.wall_ns_p50,
+                base_p50,
+                (ratio - 1.0) * 100.0
+            ));
+            "REGRESSION"
+        } else {
+            "ok"
+        };
+        println!(
+            "check perf/{}: {:+.1}% vs baseline — {verdict}",
+            rec.name,
+            (ratio - 1.0) * 100.0
+        );
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "perf regressions (> {:.0}% over baseline):\n  {}",
+            REGRESSION_TOLERANCE * 100.0,
+            failures.join("\n  ")
+        ))
+    }
+}
+
+// cases — each reuses the corresponding `benches/` workload, scaled
+// down under `quick` so the CI smoke stays cheap
+
+/// Streaming sampler: idle-heavy trace replay with 1 kSPS × 16-node
+/// sampling ON (cost ∝ power changes + ring materialization).
+fn case_sampling(quick: bool) -> PerfRecord {
+    let (hours, jobs, warmup, iters) = if quick { (2u64, 4, 0, 2) } else { (24, 12, 1, 5) };
+    let mut gen = TraceGen::dalek_mix(0x5A9);
+    gen.payloads.clear();
+    gen.jobs_per_hour = 0.5;
+    let tr = gen.generate(jobs);
+    let horizon = SimTime::from_hours(hours);
+    let run = || {
+        let mut c = Cluster::new(ClusterConfig::dalek_default(), None).expect("cluster");
+        for ev in &tr {
+            c.submit(ev.spec.clone(), ev.at).expect("valid trace");
+        }
+        c.run_until(horizon, true);
+        c.report()
+    };
+    let samples = run().samples;
+    let r = benchkit::bench("perf/sampling", warmup, iters, || {
+        std::hint::black_box(run().measured_energy_j);
+    });
+    PerfRecord::from_bench("sampling", mode_str(quick), &r)
+        .metric("samples_per_sec", benchkit::per_sec(&r, samples as f64))
+}
+
+/// SLURM controller: a day of submissions scheduled to idle, with the
+/// suspend/resume machinery on.
+fn case_scheduler(quick: bool) -> PerfRecord {
+    let (n, warmup, iters) = if quick { (200u64, 1, 3) } else { (800, 1, 10) };
+    let jobs: Vec<(SimTime, JobSpec)> = (0..n)
+        .map(|i| {
+            let part = ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"][(i % 4) as usize];
+            let spec = JobSpec {
+                user: format!("u{}", i % 5),
+                partition: part.into(),
+                nodes: 1 + (i % 4) as u32,
+                duration: SimTime::from_secs(60 + (i % 7) * 45),
+                time_limit: SimTime::from_mins(30),
+                payload: None,
+                activity: Activity::cpu_only(0.9),
+                app: None,
+            };
+            (SimTime::from_secs(i * 97), spec)
+        })
+        .collect();
+    let r = benchkit::bench("perf/scheduler", warmup, iters, || {
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+        for (at, spec) in &jobs {
+            s.submit_at(spec.clone(), *at).expect("valid");
+        }
+        s.run_to_idle();
+        assert_eq!(s.stats.completed, n);
+        std::hint::black_box(s.total_energy_j());
+    });
+    PerfRecord::from_bench("scheduler", mode_str(quick), &r)
+        .metric("jobs_per_sec", benchkit::per_sec(&r, n as f64))
+}
+
+/// Multi-client API storm through the deterministic `ApiServer`
+/// multiplexer (tickets, subscriptions, polls, admin ops).
+fn case_api_throughput(quick: bool) -> PerfRecord {
+    let (clients, requests, warmup, iters) = if quick { (4, 120, 0, 2) } else { (8, 400, 1, 5) };
+    let storm_server = || {
+        let cluster = ClusterApi::new(ClusterConfig::dalek_default(), None).expect("cluster");
+        let mut server = ApiServer::new(cluster);
+        server.connect("root").expect("root session");
+        for k in 1..clients {
+            server.connect(&format!("user{k}")).expect("user session");
+        }
+        let mut gen = TraceGen::dalek_mix(0xDA1EC);
+        gen.jobs_per_hour = 1200.0;
+        let storm = gen.client_storm(clients, requests);
+        (server, storm)
+    };
+    let r = benchkit::bench("perf/api_throughput", warmup, iters, || {
+        let (mut server, storm) = storm_server();
+        server.run_storm(&storm);
+        let settle = server.cluster.now() + SimTime::from_mins(30);
+        server.settle(settle);
+        std::hint::black_box(server.transcript_digest().len());
+    });
+    PerfRecord::from_bench("api_throughput", mode_str(quick), &r)
+        .metric("requests_per_sec", benchkit::per_sec(&r, requests as f64))
+}
+
+/// DQL evaluator over a synthetic [`MemTree`] cluster: wildcard fan-out,
+/// predicate filtering, and windowed aggregation on every iteration.
+fn case_query_eval(quick: bool) -> PerfRecord {
+    let (nodes, warmup, iters) = if quick { (2_000usize, 1, 5) } else { (10_000, 2, 20) };
+    let tree = synthetic_tree(nodes);
+    let exprs: Vec<Expr> = [
+        "sum(nodes.*.power.watts)",
+        "count(nodes[capped=true])",
+        "mean(nodes[partition=\"p7\"].power.watts, window=60s)",
+        "max(nodes.*.power.watts)",
+    ]
+    .iter()
+    .map(|s| Expr::parse(s).expect("static expression"))
+    .collect();
+    let r = benchkit::bench("perf/query_eval", warmup, iters, || {
+        for e in &exprs {
+            std::hint::black_box(query::eval(&tree, e).expect("evaluates"));
+        }
+    });
+    PerfRecord::from_bench("query_eval", mode_str(quick), &r)
+        .metric("evals_per_sec", benchkit::per_sec(&r, exprs.len() as f64))
+}
+
+/// A synthetic `n`-node cluster tree: 16 partitions, deterministic
+/// per-node watts, every third node capped.
+pub fn synthetic_tree(n: usize) -> MemTree {
+    let mut t = MemTree::new();
+    for i in 0..n {
+        let base = format!("nodes.n{i:05}");
+        t.insert(&format!("{base}.partition"), QueryValue::Str(format!("p{}", i % 16)));
+        t.insert(&format!("{base}.power.watts"), QueryValue::Num(20.0 + (i % 97) as f64));
+        t.insert(&format!("{base}.capped"), QueryValue::Bool(i % 3 == 0));
+    }
+    t
+}
+
+fn mode_str(quick: bool) -> &'static str {
+    if quick {
+        "quick"
+    } else {
+        "full"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_json_carries_summary_and_metric() {
+        let rec = PerfRecord {
+            name: "query_eval",
+            mode: "quick",
+            iters: 3,
+            wall_ns_min: 1.0e6,
+            wall_ns_p50: 2.0e6,
+            wall_ns_max: 3.0e6,
+            metrics: vec![("evals_per_sec", 1234.5)],
+        };
+        let j = rec.to_json();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("query_eval"));
+        assert_eq!(j.get("mode").and_then(Json::as_str), Some("quick"));
+        assert_eq!(j.get("wall_ns_p50").and_then(Json::as_f64), Some(2.0e6));
+        assert_eq!(j.get("evals_per_sec").and_then(Json::as_f64), Some(1234.5));
+        assert_eq!(rec.file_name(), "BENCH_query_eval.json");
+    }
+
+    #[test]
+    fn check_skips_provisional_and_flags_regressions() {
+        let dir = std::env::temp_dir().join(format!("dalek-perf-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let rec = |p50: f64| PerfRecord {
+            name: "scheduler",
+            mode: "quick",
+            iters: 1,
+            wall_ns_min: p50,
+            wall_ns_p50: p50,
+            wall_ns_max: p50,
+            metrics: vec![],
+        };
+        let path = dir.join("BENCH_scheduler.json");
+
+        // provisional baseline: skipped, never a failure
+        std::fs::write(
+            &path,
+            r#"{"name":"scheduler","mode":"quick","wall_ns_p50":1.0,"provisional":true}"#,
+        )
+        .unwrap();
+        assert!(check_against(&[rec(1.0e9)], &dir).is_ok());
+
+        // real baseline: within tolerance passes, beyond fails
+        std::fs::write(
+            &path,
+            r#"{"name":"scheduler","mode":"quick","wall_ns_p50":1000000.0}"#,
+        )
+        .unwrap();
+        assert!(check_against(&[rec(1.10e6)], &dir).is_ok());
+        let err = check_against(&[rec(1.40e6)], &dir).unwrap_err();
+        assert!(err.contains("scheduler"), "{err}");
+
+        // mode mismatch: skipped
+        std::fs::write(&path, r#"{"name":"scheduler","mode":"full","wall_ns_p50":1.0}"#).unwrap();
+        assert!(check_against(&[rec(1.0e9)], &dir).is_ok());
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn synthetic_tree_evaluates_the_bench_expressions() {
+        let t = synthetic_tree(48);
+        let e = Expr::parse("count(nodes[capped=true])").unwrap();
+        let out = query::eval(&t, &e).unwrap();
+        // every third of 48 nodes is capped
+        assert_eq!(query::output_json(&out).get("value").and_then(Json::as_f64), Some(16.0));
+        let e = Expr::parse("mean(nodes[partition=\"p7\"].power.watts, window=60s)").unwrap();
+        assert!(query::eval(&t, &e).is_ok());
+    }
+}

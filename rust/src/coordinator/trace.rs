@@ -249,6 +249,7 @@ impl TraceGen {
                     rate_hz: Some(
                         [0.2, 1.0, 2.0, 10.0][self.rng.uniform_u64(0, 3) as usize],
                     ),
+                    expr: None,
                 },
                 7 => Request::PollEvents {
                     max: 1 + self.rng.uniform_u64(0, 63) as u32,
@@ -282,6 +283,7 @@ fn push_operator_op(rng: &mut Xoshiro256, out: &mut Vec<StormEvent>, t: f64) {
         1 => Request::Subscribe {
             channel: Channel::PowerEvents,
             rate_hz: None,
+            expr: None,
         },
         2 => Request::SetRateLimit {
             user: format!("user{}", 1 + rng.uniform_u64(0, 5)),

@@ -273,6 +273,10 @@ pub struct StreamingSampler {
     /// already folded into `rolling` — lets the governor observe the
     /// buffer repeatedly between drains without double counting
     rolling_seen: usize,
+    /// lifetime count of samples materialized into probe stores —
+    /// instrumentation that lets tests assert a code path (telemetry
+    /// windows, query evaluation) stayed on the closed-form math
+    materialized: u64,
 }
 
 impl Default for StreamingSampler {
@@ -288,7 +292,13 @@ impl StreamingSampler {
             scratch: Vec::new(),
             rolling: Vec::new(),
             rolling_seen: 0,
+            materialized: 0,
         }
+    }
+
+    /// Lifetime count of samples materialized into probe stores.
+    pub fn materialized_samples(&self) -> u64 {
+        self.materialized
     }
 
     /// Register a node's stream; returns it for probe attachment.
@@ -340,31 +350,39 @@ impl StreamingSampler {
     /// clamp to it (history past the horizon is pruned, so a longer
     /// window could only report a fabricated mean).
     pub fn rolling_mean_w(&self, window: SimTime, now: SimTime) -> f64 {
+        (0..self.rolling.len())
+            .map(|i| self.node_rolling_mean_w(i, window, now))
+            .sum()
+    }
+
+    /// One node's mean draw over the trailing `window` ending at `now`
+    /// — the per-node term of [`StreamingSampler::rolling_mean_w`]
+    /// (which is exactly the index-ordered sum of these), exposed for
+    /// the query layer's windowed `nodes.<n>.power.watts` leaves.
+    pub fn node_rolling_mean_w(&self, node: usize, window: SimTime, now: SimTime) -> f64 {
         let window = window.min(ROLLING_HORIZON);
         let from = SimTime(now.as_ns().saturating_sub(window.as_ns()));
         let span = now.since(from).as_secs_f64();
-        let mut total = 0.0;
-        for dq in &self.rolling {
-            let Some(&(_, last_w)) = dq.back() else { continue };
-            if span <= 0.0 {
-                total += last_w;
-                continue;
-            }
-            let mut acc = 0.0;
-            for (k, &(at, w)) in dq.iter().enumerate() {
-                let seg_start = at.max(from);
-                let seg_end = dq
-                    .get(k + 1)
-                    .map(|&(t, _)| t)
-                    .unwrap_or(now)
-                    .min(now);
-                if seg_end > seg_start {
-                    acc += w * seg_end.since(seg_start).as_secs_f64();
-                }
-            }
-            total += acc / span;
+        let Some(dq) = self.rolling.get(node) else {
+            return 0.0;
+        };
+        let Some(&(_, last_w)) = dq.back() else { return 0.0 };
+        if span <= 0.0 {
+            return last_w;
         }
-        total
+        let mut acc = 0.0;
+        for (k, &(at, w)) in dq.iter().enumerate() {
+            let seg_start = at.max(from);
+            let seg_end = dq
+                .get(k + 1)
+                .map(|&(t, _)| t)
+                .unwrap_or(now)
+                .min(now);
+            if seg_end > seg_start {
+                acc += w * seg_end.since(seg_start).as_secs_f64();
+            }
+        }
+        acc / span
     }
 
     /// Integral of the true piecewise cluster power over `[from, to)`,
@@ -375,28 +393,39 @@ impl StreamingSampler {
     /// [`ROLLING_HORIZON`] of the last fold; older spans integrate the
     /// oldest retained level (callers clamp and signal lag instead).
     pub fn span_energy_j(&self, from: SimTime, to: SimTime) -> f64 {
+        (0..self.rolling.len())
+            .map(|i| self.node_span_energy_j(i, from, to))
+            .sum()
+    }
+
+    /// One node's integral over `[from, to)`, joules — the per-node
+    /// term of [`StreamingSampler::span_energy_j`] (which is exactly
+    /// the index-ordered sum of these), exposed for the query layer's
+    /// windowed `nodes.<n>.power.energy_j` leaves.
+    pub fn node_span_energy_j(&self, node: usize, from: SimTime, to: SimTime) -> f64 {
         if to <= from {
             return 0.0;
         }
+        let Some(dq) = self.rolling.get(node) else {
+            return 0.0;
+        };
+        // only the segments overlapping [from, to) contribute; a
+        // telemetry subscription cuts many short windows per pump,
+        // so skip the non-overlapping prefix by binary search. The
+        // last entry at or before `from` carries the level across
+        // the window start (dq[0] always qualifies: it is the kept
+        // window-start value).
         let mut total = 0.0;
-        for dq in &self.rolling {
-            // only the segments overlapping [from, to) contribute; a
-            // telemetry subscription cuts many short windows per pump,
-            // so skip the non-overlapping prefix by binary search. The
-            // last entry at or before `from` carries the level across
-            // the window start (dq[0] always qualifies: it is the kept
-            // window-start value).
-            let i0 = dq.partition_point(|&(at, _)| at <= from).saturating_sub(1);
-            for k in i0..dq.len() {
-                let (at, w) = dq[k];
-                if at >= to {
-                    break;
-                }
-                let seg_start = if k == i0 { from } else { at };
-                let seg_end = dq.get(k + 1).map(|&(t, _)| t).unwrap_or(to).min(to);
-                if seg_end > seg_start {
-                    total += w * seg_end.since(seg_start).as_secs_f64();
-                }
+        let i0 = dq.partition_point(|&(at, _)| at <= from).saturating_sub(1);
+        for k in i0..dq.len() {
+            let (at, w) = dq[k];
+            if at >= to {
+                break;
+            }
+            let seg_start = if k == i0 { from } else { at };
+            let seg_end = dq.get(k + 1).map(|&(t, _)| t).unwrap_or(to).min(to);
+            if seg_end > seg_start {
+                total += w * seg_end.since(seg_start).as_secs_f64();
             }
         }
         total
@@ -438,6 +467,7 @@ impl StreamingSampler {
                 emitted += ns.pump(&self.scratch[i], to, board);
             }
         }
+        self.materialized += emitted as u64;
         emitted
     }
 }

@@ -58,6 +58,12 @@
 //!   per-session outboxes, and the deterministic [`api::ApiServer`]
 //!   multiplexer (round-robin, rate-limited, bit-for-bit reproducible
 //!   under seeded storms)
+//! * [`query`] — DQL, the opath-style query language over cluster
+//!   state and rolling telemetry: path expressions with wildcards,
+//!   predicates and windowed aggregation, evaluated lazily against a
+//!   virtual tree projected from live state (never materializing
+//!   samples); surfaced as `Request::Query` and as standing queries
+//!   on the `query_events` channel
 //! * [`coordinator`] — the frontend daemon: trace replay over the API
 //!   (the cluster façade itself is [`api::ClusterApi`])
 //!
@@ -73,6 +79,7 @@ pub mod energy;
 pub mod hw;
 pub mod net;
 pub mod power;
+pub mod query;
 pub mod runtime;
 pub mod services;
 pub mod sim;

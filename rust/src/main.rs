@@ -12,6 +12,9 @@
 //!                                               run one payload through the API
 //! dalek api <batch.jsonl|request.json|->        execute protocol requests
 //!           [--artifacts DIR]
+//! dalek query <expr> [--jobs N] [--hours H]     evaluate one DQL expression
+//! dalek bench perf [--quick] [--out DIR]        machine-readable perf records
+//!           [--check] [--baseline DIR]          (+ regression gate)
 //! ```
 //!
 //! Every cluster operation goes through the session-based
@@ -37,8 +40,11 @@ use dalek::util::{units, Table};
 
 const VALUE_FLAGS: &[&str] = &[
     "seed", "jobs", "iters", "artifacts", "partition", "nodes", "payload", "hours", "config",
+    "out", "baseline",
 ];
-const BOOL_FLAGS: &[&str] = &["csv", "sample", "spec", "power", "net", "help", "no-suspend"];
+const BOOL_FLAGS: &[&str] = &[
+    "csv", "sample", "spec", "power", "net", "help", "no-suspend", "quick", "check",
+];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -60,6 +66,7 @@ fn main() {
         "payloads" => cmd_payloads(&args),
         "exec" => cmd_exec(&args),
         "api" => cmd_api(&args),
+        "query" => cmd_query(&args),
         other => {
             eprintln!("unknown command `{other}`\n{}", usage());
             std::process::exit(2);
@@ -77,10 +84,12 @@ fn usage() -> String {
      usage:\n\
      \x20 dalek topology [--spec] [--power] [--net]\n\
      \x20 dalek bench <fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab3|energy|idle|pxe|all> [--seed N] [--csv]\n\
+     \x20 dalek bench perf [--quick] [--out DIR] [--check] [--baseline DIR]\n\
      \x20 dalek run [--jobs N] [--seed N] [--sample] [--no-suspend] [--artifacts DIR]\n\
      \x20 dalek payloads [--artifacts DIR]\n\
      \x20 dalek exec <payload> [--iters N] [--artifacts DIR]\n\
-     \x20 dalek api <batch.jsonl|request.json|-> [--artifacts DIR]\n"
+     \x20 dalek api <batch.jsonl|request.json|-> [--artifacts DIR]\n\
+     \x20 dalek query <expr> [--jobs N] [--hours H] [--seed N]\n"
         .to_string()
 }
 
@@ -123,6 +132,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         .get(1)
         .map(|s| s.as_str())
         .unwrap_or("all");
+    if target == "perf" {
+        return cmd_bench_perf(args);
+    }
     let seed: u64 = args.get_or("seed", 0xDA1EC)?;
     let csv = args.has("csv");
     let catalog = Catalog::dalek();
@@ -174,6 +186,22 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     } else {
         run_one(target)?;
     }
+    Ok(())
+}
+
+/// `dalek bench perf` — the machine-readable perf harness: run the
+/// hot-path cases, write `BENCH_<name>.json` records, and optionally
+/// gate against committed baselines (CI's bench-smoke job).
+fn cmd_bench_perf(args: &Args) -> anyhow::Result<()> {
+    let opts = bench::perf::PerfOpts {
+        quick: args.has("quick"),
+        out: args.get("out").map(std::path::PathBuf::from),
+        baseline: args
+            .get("baseline")
+            .map(std::path::PathBuf::from)
+            .or_else(|| args.has("check").then(|| std::path::PathBuf::from("."))),
+    };
+    bench::perf::run(&opts).map_err(|e| anyhow::anyhow!(e))?;
     Ok(())
 }
 
@@ -430,5 +458,29 @@ fn cmd_api(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// `dalek query` — evaluate one DQL expression against a freshly
+/// exercised cluster and print the `query_result` wire object. The
+/// cluster runs a short seeded trace first so the virtual tree has
+/// jobs, telemetry history and energy to query; `--hours 0 --jobs 0`
+/// queries the pristine cluster.
+fn cmd_query(args: &Args) -> anyhow::Result<()> {
+    let usage = "usage: dalek query '<expr>'   (e.g. sum(nodes.*.power.watts))";
+    let expr = args.positional.get(1).ok_or_else(|| anyhow::anyhow!(usage))?;
+    let jobs: usize = args.get_or("jobs", 8)?;
+    let hours: u64 = args.get_or("hours", 1)?;
+    let seed: u64 = args.get_or("seed", 0xDA1EC)?;
+    let mut cluster = ClusterApi::new(ClusterConfig::dalek_default(), None)?;
+    let sid = cluster.login("root")?;
+    let mut gen = trace::TraceGen::dalek_mix(seed);
+    gen.payloads.clear();
+    for ev in gen.generate(jobs) {
+        cluster.submit(ev.spec.clone(), ev.at)?;
+    }
+    cluster.run_until(SimTime::from_hours(hours), false);
+    let (expr, result) = cluster.query(sid, expr)?;
+    println!("{}", Response::QueryResult { expr, result }.to_json());
     Ok(())
 }

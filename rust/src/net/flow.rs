@@ -131,6 +131,41 @@ impl FlowNet {
         self.flows.len()
     }
 
+    /// Switch-fabric capacity, bits/s.
+    pub fn fabric_capacity_bps(&self) -> f64 {
+        self.capacity.get(&LinkId::Fabric).copied().unwrap_or(0.0)
+    }
+
+    /// Aggregate rate currently crossing the fabric, bits/s (every
+    /// active flow crosses it once).
+    pub fn fabric_used_bps(&self) -> f64 {
+        self.flows.values().map(|f| f.rate_bps).sum()
+    }
+
+    /// One host's NIC capacity, bits/s (uplink == downlink).
+    pub fn host_capacity_bps(&self, host: HostId) -> f64 {
+        self.capacity
+            .get(&LinkId::Up(host))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    /// One host's current (uplink, downlink) utilization, bits/s —
+    /// the sum of active flow rates sourced at / sunk into the host.
+    pub fn host_load_bps(&self, host: HostId) -> (f64, f64) {
+        let mut up = 0.0;
+        let mut down = 0.0;
+        for f in self.flows.values() {
+            if f.src == host {
+                up += f.rate_bps;
+            }
+            if f.dst == host {
+                down += f.rate_bps;
+            }
+        }
+        (up, down)
+    }
+
     /// Start a transfer of `bytes` from `src` to `dst` at current time.
     pub fn start_flow(&mut self, src: HostId, dst: HostId, bytes: u64) -> FlowId {
         self.start_flow_tagged(src, dst, bytes, 0)

@@ -1,0 +1,497 @@
+//! The DQL evaluator: resolve a path expression against a [`Tree`],
+//! then shape or aggregate the result.
+//!
+//! Resolution walks segments left to right over a frontier of
+//! candidate paths:
+//!
+//! * a plain name extends every candidate by one level;
+//! * `*` expands a candidate into its children (in the tree's
+//!   canonical order — determinism rides on this);
+//! * a `[field op literal]` predicate expands into children and keeps
+//!   those whose `field` leaf matches, so `jobs[user="az5"]` and
+//!   `jobs.*[user="az5"]` are the same set.
+//!
+//! A plain path that resolves to nothing is a typed `InvalidQuery`
+//! ("no such path"); a *filtered* path (wildcard or predicate
+//! involved) may legitimately resolve to an empty set — `sum` and
+//! `count` answer 0, `mean`/`min`/`max` answer null.
+//!
+//! Shapes: one unfiltered leaf → `Scalar`; a set of leaves →
+//! `Vector` (dotted path → value); a set of interior nodes → `Table`
+//! (one row per node, columns = its scalar-leaf children). Aggregates
+//! always produce a `Scalar`; windowed aggregates ask the tree's
+//! closed-form [`Tree::windowed`] leaves instead of the instantaneous
+//! values.
+
+use super::expr::{AggFunc, CmpOp, Expr, Literal, Path, SegKey, WindowSpec};
+use super::tree::{QueryValue, Tree, TreeNode};
+use crate::api::error::DalekError;
+use crate::util::json::Json;
+
+/// The typed result of a query evaluation.
+#[derive(Clone, PartialEq, Debug)]
+pub enum QueryOutput {
+    Scalar(QueryValue),
+    /// resolved leaf paths with their values, in resolution order
+    Vector(Vec<(String, QueryValue)>),
+    /// resolved interior nodes as rows; `columns` are the scalar-leaf
+    /// children of the first row (missing cells are null)
+    Table {
+        columns: Vec<String>,
+        rows: Vec<(String, Vec<QueryValue>)>,
+    },
+}
+
+fn invalid(msg: impl Into<String>) -> DalekError {
+    DalekError::InvalidQuery(msg.into())
+}
+
+/// Resolve + shape/aggregate: the whole evaluation.
+pub fn eval(tree: &dyn Tree, expr: &Expr) -> Result<QueryOutput, DalekError> {
+    match expr {
+        Expr::Path(path) => {
+            let r = resolve(tree, path)?;
+            shape(tree, r)
+        }
+        Expr::Agg { func, path, window } => {
+            let r = resolve(tree, path)?;
+            aggregate(tree, r, *func, window.as_ref())
+        }
+    }
+}
+
+struct Resolved {
+    /// resolved candidate paths, in resolution order
+    paths: Vec<Vec<String>>,
+    /// whether a wildcard or predicate was involved (empty is then a
+    /// legitimate answer rather than a "no such path" error)
+    filtered: bool,
+    display: String,
+}
+
+fn resolve(tree: &dyn Tree, path: &Path) -> Result<Resolved, DalekError> {
+    let mut frontier: Vec<Vec<String>> = vec![Vec::new()];
+    let mut filtered = false;
+    for seg in &path.segments {
+        let mut next: Vec<Vec<String>> = Vec::new();
+        match &seg.key {
+            SegKey::Name(name) => {
+                for p in &frontier {
+                    let mut q = p.clone();
+                    q.push(name.clone());
+                    if tree.node(&q)?.is_some() {
+                        next.push(q);
+                    } else if !filtered && seg.pred.is_none() {
+                        return Err(invalid(format!("no such path: `{}`", q.join("."))));
+                    }
+                }
+            }
+            SegKey::Wildcard => {
+                filtered = true;
+                for p in &frontier {
+                    if let Some(TreeNode::Interior(kids)) = tree.node(p)? {
+                        for kid in kids {
+                            let mut q = p.clone();
+                            q.push(kid);
+                            next.push(q);
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(pred) = &seg.pred {
+            filtered = true;
+            // the predicate selects among the children of the set the
+            // key resolved (so `jobs[user="x"]` filters jobs' children)
+            let base = std::mem::take(&mut next);
+            for p in &base {
+                if let Some(TreeNode::Interior(kids)) = tree.node(p)? {
+                    for kid in kids {
+                        let mut q = p.clone();
+                        q.push(kid);
+                        if pred_matches(tree, &q, pred)? {
+                            next.push(q);
+                        }
+                    }
+                }
+            }
+        }
+        frontier = next;
+    }
+    if frontier.is_empty() && !filtered {
+        return Err(invalid(format!("no such path: `{path}`")));
+    }
+    Ok(Resolved {
+        paths: frontier,
+        filtered,
+        display: path.to_string(),
+    })
+}
+
+fn pred_matches(
+    tree: &dyn Tree,
+    path: &[String],
+    pred: &super::expr::Pred,
+) -> Result<bool, DalekError> {
+    let mut q = path.to_vec();
+    q.push(pred.field.clone());
+    // capability refusals inside a *filter* just exclude the candidate
+    // (a non-admin filtering jobs must not fail on other users' rows)
+    let node = match tree.node(&q) {
+        Ok(n) => n,
+        Err(DalekError::AdminOnly) => return Ok(false),
+        Err(e) => return Err(e),
+    };
+    let Some(TreeNode::Leaf(v)) = node else {
+        return Ok(false);
+    };
+    Ok(match (&v, &pred.value) {
+        (QueryValue::Num(a), Literal::Num(b)) => match a.partial_cmp(b) {
+            None => false,
+            Some(ord) => cmp_holds(pred.op, ord),
+        },
+        (QueryValue::Str(a), Literal::Str(b)) => cmp_holds(pred.op, a.as_str().cmp(b.as_str())),
+        (QueryValue::Bool(a), Literal::Bool(b)) => match pred.op {
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+            _ => {
+                return Err(invalid(format!(
+                    "boolean predicate `{}` supports only = and !=",
+                    pred.field
+                )))
+            }
+        },
+        _ => false,
+    })
+}
+
+fn cmp_holds(op: CmpOp, ord: std::cmp::Ordering) -> bool {
+    use std::cmp::Ordering::*;
+    match op {
+        CmpOp::Eq => ord == Equal,
+        CmpOp::Ne => ord != Equal,
+        CmpOp::Lt => ord == Less,
+        CmpOp::Le => ord != Greater,
+        CmpOp::Gt => ord == Greater,
+        CmpOp::Ge => ord != Less,
+    }
+}
+
+fn shape(tree: &dyn Tree, r: Resolved) -> Result<QueryOutput, DalekError> {
+    let mut leaves: Vec<(String, QueryValue)> = Vec::new();
+    let mut interiors: Vec<Vec<String>> = Vec::new();
+    for p in &r.paths {
+        match tree.node(p)? {
+            Some(TreeNode::Leaf(v)) => leaves.push((p.join("."), v)),
+            Some(TreeNode::Interior(_)) => interiors.push(p.clone()),
+            None => {}
+        }
+    }
+    match (leaves.is_empty(), interiors.is_empty()) {
+        (false, false) => Err(invalid(format!(
+            "`{}` mixes leaf and interior results",
+            r.display
+        ))),
+        (false, true) => {
+            if !r.filtered && leaves.len() == 1 {
+                Ok(QueryOutput::Scalar(leaves.pop().expect("len 1").1))
+            } else {
+                Ok(QueryOutput::Vector(leaves))
+            }
+        }
+        (true, false) => table(tree, interiors),
+        (true, true) => Ok(QueryOutput::Vector(Vec::new())),
+    }
+}
+
+fn table(tree: &dyn Tree, rows_paths: Vec<Vec<String>>) -> Result<QueryOutput, DalekError> {
+    // columns: the scalar-leaf children of the first row, in the
+    // tree's canonical child order; other rows fill missing cells
+    // with null
+    let mut columns: Vec<String> = Vec::new();
+    if let Some(TreeNode::Interior(kids)) = tree.node(&rows_paths[0])? {
+        for kid in kids {
+            let mut q = rows_paths[0].clone();
+            q.push(kid.clone());
+            if let Some(TreeNode::Leaf(_)) = tree.node(&q)? {
+                columns.push(kid);
+            }
+        }
+    }
+    let mut rows = Vec::with_capacity(rows_paths.len());
+    for p in &rows_paths {
+        let mut cells = Vec::with_capacity(columns.len());
+        for c in &columns {
+            let mut q = p.clone();
+            q.push(c.clone());
+            cells.push(match tree.node(&q)? {
+                Some(TreeNode::Leaf(v)) => v,
+                _ => QueryValue::Null,
+            });
+        }
+        rows.push((p.join("."), cells));
+    }
+    Ok(QueryOutput::Table { columns, rows })
+}
+
+fn aggregate(
+    tree: &dyn Tree,
+    r: Resolved,
+    func: AggFunc,
+    window: Option<&WindowSpec>,
+) -> Result<QueryOutput, DalekError> {
+    if func == AggFunc::Count {
+        return Ok(QueryOutput::Scalar(QueryValue::Num(r.paths.len() as f64)));
+    }
+    // collect the numeric inputs, in resolution order (float sums are
+    // order-sensitive; resolution order == the tree's canonical order)
+    let mut values: Vec<f64> = Vec::with_capacity(r.paths.len());
+    for p in &r.paths {
+        let v = match window {
+            Some(w) => tree.windowed(p, w)?.ok_or_else(|| {
+                invalid(format!("`{}` is not windowable", p.join(".")))
+            })?,
+            None => match tree.node(p)? {
+                Some(TreeNode::Leaf(QueryValue::Num(v))) => v,
+                Some(TreeNode::Leaf(_)) | Some(TreeNode::Interior(_)) => {
+                    return Err(invalid(format!(
+                        "`{}` is not a numeric leaf",
+                        p.join(".")
+                    )))
+                }
+                None => continue,
+            },
+        };
+        values.push(v);
+    }
+    let out = match func {
+        AggFunc::Sum => QueryValue::Num(values.iter().sum()),
+        AggFunc::Mean => {
+            if values.is_empty() {
+                QueryValue::Null
+            } else {
+                QueryValue::Num(values.iter().sum::<f64>() / values.len() as f64)
+            }
+        }
+        AggFunc::Min => values
+            .iter()
+            .copied()
+            .reduce(f64::min)
+            .map(QueryValue::Num)
+            .unwrap_or(QueryValue::Null),
+        AggFunc::Max => values
+            .iter()
+            .copied()
+            .reduce(f64::max)
+            .map(QueryValue::Num)
+            .unwrap_or(QueryValue::Null),
+        AggFunc::Count => unreachable!("handled above"),
+    };
+    Ok(QueryOutput::Scalar(out))
+}
+
+// ---------------------------------------------------------------------------
+// JSON projection (shared by Response::QueryResult and query events)
+
+/// A leaf value as wire JSON.
+pub fn value_json(v: &QueryValue) -> Json {
+    match v {
+        QueryValue::Num(x) => Json::from(*x),
+        QueryValue::Str(s) => Json::from(s.as_str()),
+        QueryValue::Bool(b) => Json::from(*b),
+        QueryValue::Null => Json::Null,
+    }
+}
+
+/// A query result as wire JSON: `{"kind": "scalar" | "vector" |
+/// "table", ...}` — the same encoding on the response path and the
+/// standing-query event path (delta suppression compares these).
+pub fn output_json(out: &QueryOutput) -> Json {
+    match out {
+        QueryOutput::Scalar(v) => Json::object([
+            ("kind", Json::from("scalar")),
+            ("value", value_json(v)),
+        ]),
+        QueryOutput::Vector(items) => Json::object([
+            ("kind", Json::from("vector")),
+            (
+                "items",
+                Json::array(items.iter().map(|(p, v)| {
+                    Json::object([("path", Json::from(p.as_str())), ("value", value_json(v))])
+                })),
+            ),
+        ]),
+        QueryOutput::Table { columns, rows } => Json::object([
+            ("kind", Json::from("table")),
+            (
+                "columns",
+                Json::array(columns.iter().map(|c| Json::from(c.as_str()))),
+            ),
+            (
+                "rows",
+                Json::array(rows.iter().map(|(p, cells)| {
+                    Json::object([
+                        ("path", Json::from(p.as_str())),
+                        ("values", Json::array(cells.iter().map(value_json))),
+                    ])
+                })),
+            ),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::tree::MemTree;
+
+    fn farm() -> MemTree {
+        let mut t = MemTree::new();
+        for (n, part, w, capped) in [
+            ("n0", "gpu", 100.0, true),
+            ("n1", "gpu", 50.0, false),
+            ("n2", "cpu", 25.0, false),
+        ] {
+            t.insert(&format!("nodes.{n}.partition"), QueryValue::Str(part.into()));
+            t.insert(&format!("nodes.{n}.power.watts"), QueryValue::Num(w));
+            t.insert(&format!("nodes.{n}.capped"), QueryValue::Bool(capped));
+        }
+        t
+    }
+
+    fn run(t: &MemTree, src: &str) -> QueryOutput {
+        eval(t, &Expr::parse(src).unwrap()).unwrap_or_else(|e| panic!("{src}: {e}"))
+    }
+
+    #[test]
+    fn scalar_vector_and_aggregates() {
+        let t = farm();
+        assert_eq!(
+            run(&t, "nodes.n0.power.watts"),
+            QueryOutput::Scalar(QueryValue::Num(100.0))
+        );
+        let QueryOutput::Vector(v) = run(&t, "nodes.*.power.watts") else {
+            panic!("vector");
+        };
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].0, "nodes.n0.power.watts");
+        assert_eq!(
+            run(&t, "sum(nodes.*.power.watts)"),
+            QueryOutput::Scalar(QueryValue::Num(175.0))
+        );
+        assert_eq!(
+            run(&t, "min(nodes.*.power.watts)"),
+            QueryOutput::Scalar(QueryValue::Num(25.0))
+        );
+        assert_eq!(
+            run(&t, "count(nodes.*)"),
+            QueryOutput::Scalar(QueryValue::Num(3.0))
+        );
+    }
+
+    #[test]
+    fn predicates_filter_children() {
+        let t = farm();
+        assert_eq!(
+            run(&t, r#"mean(nodes[partition="gpu"].power.watts)"#),
+            QueryOutput::Scalar(QueryValue::Num(75.0))
+        );
+        assert_eq!(
+            run(&t, "count(nodes[capped=true])"),
+            QueryOutput::Scalar(QueryValue::Num(1.0))
+        );
+        assert_eq!(
+            run(&t, "count(nodes[power=1])"), // field is not a leaf
+            QueryOutput::Scalar(QueryValue::Num(0.0))
+        );
+        // numeric comparisons
+        assert_eq!(
+            run(&t, "count(nodes.*[watts>30])"), // missing field -> none
+            QueryOutput::Scalar(QueryValue::Num(0.0))
+        );
+        // wildcard + pred filters the same set the bare pred does
+        assert_eq!(
+            run(&t, r#"count(nodes.*[partition!="gpu"])"#),
+            run(&t, r#"count(nodes[partition!="gpu"])"#),
+        );
+    }
+
+    #[test]
+    fn empty_filters_and_missing_paths() {
+        let t = farm();
+        // filtered-empty is an answer, not an error
+        assert_eq!(
+            run(&t, r#"sum(nodes[partition="tpu"].power.watts)"#),
+            QueryOutput::Scalar(QueryValue::Num(0.0))
+        );
+        assert_eq!(
+            run(&t, r#"mean(nodes[partition="tpu"].power.watts)"#),
+            QueryOutput::Scalar(QueryValue::Null)
+        );
+        assert_eq!(run(&t, r#"nodes[partition="tpu"]"#), QueryOutput::Vector(vec![]));
+        // a plain path that goes nowhere is typed
+        assert!(matches!(
+            eval(&t, &Expr::parse("nodes.n9.power.watts").unwrap()),
+            Err(DalekError::InvalidQuery(_))
+        ));
+        assert!(matches!(
+            eval(&t, &Expr::parse("sum(nodes.n0.nope)").unwrap()),
+            Err(DalekError::InvalidQuery(_))
+        ));
+    }
+
+    #[test]
+    fn tables_project_interior_rows() {
+        let t = farm();
+        let QueryOutput::Table { columns, rows } = run(&t, r#"nodes[partition="gpu"]"#)
+        else {
+            panic!("table");
+        };
+        assert_eq!(columns, vec!["capped", "partition"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "nodes.n0");
+        assert_eq!(rows[0].1[0], QueryValue::Bool(true));
+        // single unfiltered interior is still a table
+        let QueryOutput::Table { rows, .. } = run(&t, "nodes.n2") else {
+            panic!("table");
+        };
+        assert_eq!(rows.len(), 1);
+    }
+
+    #[test]
+    fn windowed_aggregates_use_the_window_surface() {
+        let t = farm();
+        assert_eq!(
+            run(&t, "sum(nodes.*.power.watts, window=60s)"),
+            QueryOutput::Scalar(QueryValue::Num(175.0))
+        );
+        // a non-numeric leaf refuses windows, typed
+        assert!(matches!(
+            eval(&t, &Expr::parse("sum(nodes.*.partition, window=60s)").unwrap()),
+            Err(DalekError::InvalidQuery(_))
+        ));
+    }
+
+    #[test]
+    fn bool_predicates_reject_orderings() {
+        let t = farm();
+        assert!(matches!(
+            eval(&t, &Expr::parse("count(nodes[capped>false])").unwrap()),
+            Err(DalekError::InvalidQuery(_))
+        ));
+    }
+
+    #[test]
+    fn output_json_shapes() {
+        let j = output_json(&QueryOutput::Scalar(QueryValue::Num(2.5)));
+        assert_eq!(j.to_string(), r#"{"kind":"scalar","value":2.5}"#);
+        let j = output_json(&QueryOutput::Vector(vec![(
+            "a.b".into(),
+            QueryValue::Bool(true),
+        )]));
+        assert_eq!(
+            j.to_string(),
+            r#"{"items":[{"path":"a.b","value":true}],"kind":"vector"}"#
+        );
+    }
+}

@@ -1,0 +1,722 @@
+//! DQL expressions: the opath-style AST and its parser.
+//!
+//! The grammar is deliberately small — dotted paths over the virtual
+//! cluster tree, one optional `[field op literal]` predicate per
+//! segment, `*` wildcards, and a single aggregation call wrapping a
+//! path:
+//!
+//! ```text
+//! query     := aggregate | path
+//! aggregate := func '(' path [',' window] ')'
+//! func      := 'sum' | 'mean' | 'min' | 'max' | 'count'
+//! window    := 'window' '=' dur | 'from' '=' dur ',' 'to' '=' dur
+//! path      := segment ('.' segment)*
+//! segment   := (ident | '*') [pred]
+//! pred      := '[' ident op literal ']'
+//! op        := '=' | '!=' | '<' | '<=' | '>' | '>='
+//! literal   := '"' chars '"' | number | 'true' | 'false'
+//! dur       := number [unit]      unit := ns | us | ms | s | m | h
+//! ```
+//!
+//! Identifiers are runs of `[A-Za-z0-9_-]` (node names like
+//! `az5-a890m-0` and numeric job ids are idents). A bare duration
+//! number means seconds. Every malformed input is a typed
+//! [`DalekError::InvalidQuery`] — the parser never panics.
+//!
+//! `Display` renders the *canonical* spelling (no extra whitespace,
+//! durations in the largest exact unit), and parsing the canonical
+//! spelling reproduces the same AST — the round-trip property the
+//! query tests pin.
+
+use std::fmt;
+
+use crate::api::error::DalekError;
+use crate::sim::SimTime;
+
+/// Aggregation functions over a resolved path set.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AggFunc {
+    Sum,
+    Mean,
+    Min,
+    Max,
+    /// counts resolved paths; takes no window
+    Count,
+}
+
+impl AggFunc {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AggFunc::Sum => "sum",
+            AggFunc::Mean => "mean",
+            AggFunc::Min => "min",
+            AggFunc::Max => "max",
+            AggFunc::Count => "count",
+        }
+    }
+
+    fn from_str(s: &str) -> Option<Self> {
+        Some(match s {
+            "sum" => AggFunc::Sum,
+            "mean" => AggFunc::Mean,
+            "min" => AggFunc::Min,
+            "max" => AggFunc::Max,
+            "count" => AggFunc::Count,
+            _ => return None,
+        })
+    }
+}
+
+/// Predicate comparison operators.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpOp {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CmpOp::Eq => "=",
+            CmpOp::Ne => "!=",
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+        }
+    }
+}
+
+/// Predicate literal values.
+#[derive(Clone, PartialEq, Debug)]
+pub enum Literal {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+/// One `[field op literal]` filter on a segment's children.
+#[derive(Clone, PartialEq, Debug)]
+pub struct Pred {
+    pub field: String,
+    pub op: CmpOp,
+    pub value: Literal,
+}
+
+/// A segment's key: a literal name or the `*` wildcard.
+#[derive(Clone, PartialEq, Debug)]
+pub enum SegKey {
+    Name(String),
+    Wildcard,
+}
+
+/// One dotted path segment.
+#[derive(Clone, PartialEq, Debug)]
+pub struct Segment {
+    pub key: SegKey,
+    pub pred: Option<Pred>,
+}
+
+/// A dotted path over the virtual tree.
+#[derive(Clone, PartialEq, Debug)]
+pub struct Path {
+    pub segments: Vec<Segment>,
+}
+
+/// Aggregation window: a trailing window ending now, or an explicit
+/// `[from, to)` span.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum WindowSpec {
+    Trailing(SimTime),
+    Span(SimTime, SimTime),
+}
+
+/// A parsed DQL expression.
+#[derive(Clone, PartialEq, Debug)]
+pub enum Expr {
+    Path(Path),
+    Agg {
+        func: AggFunc,
+        path: Path,
+        window: Option<WindowSpec>,
+    },
+}
+
+impl Expr {
+    /// Parse source text into an expression; every malformed input is
+    /// a typed [`DalekError::InvalidQuery`].
+    pub fn parse(src: &str) -> Result<Expr, DalekError> {
+        let mut p = Parser {
+            s: src.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let expr = p.expr()?;
+        p.ws();
+        if p.i < p.s.len() {
+            return Err(p.err(format!(
+                "unexpected trailing input at byte {}",
+                p.i
+            )));
+        }
+        Ok(expr)
+    }
+}
+
+fn invalid(msg: impl Into<String>) -> DalekError {
+    DalekError::InvalidQuery(msg.into())
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> DalekError {
+        invalid(msg)
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> bool {
+        if self.peek() == Some(b) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), DalekError> {
+        if self.eat(b) {
+            Ok(())
+        } else {
+            Err(self.err(format!(
+                "expected `{}` at byte {}",
+                b as char, self.i
+            )))
+        }
+    }
+
+    fn is_ident_byte(b: u8) -> bool {
+        b.is_ascii_alphanumeric() || b == b'_' || b == b'-'
+    }
+
+    fn ident(&mut self) -> Result<String, DalekError> {
+        let start = self.i;
+        while self.peek().map(Self::is_ident_byte).unwrap_or(false) {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(self.err(format!("expected an identifier at byte {start}")));
+        }
+        Ok(String::from_utf8_lossy(&self.s[start..self.i]).into_owned())
+    }
+
+    fn expr(&mut self) -> Result<Expr, DalekError> {
+        // lookahead: `func(` opens an aggregate; anything else is a path
+        let mark = self.i;
+        if self.peek().map(Self::is_ident_byte).unwrap_or(false) {
+            let name = self.ident()?;
+            let after_ident = self.i;
+            self.ws();
+            if self.eat(b'(') {
+                let func = AggFunc::from_str(&name).ok_or_else(|| {
+                    self.err(format!(
+                        "unknown aggregation `{name}` (sum | mean | min | max | count)"
+                    ))
+                })?;
+                return self.agg_body(func);
+            }
+            // not a call: rewind past the whitespace and parse as a path
+            self.i = after_ident;
+            self.i = mark;
+        }
+        Ok(Expr::Path(self.path()?))
+    }
+
+    fn agg_body(&mut self, func: AggFunc) -> Result<Expr, DalekError> {
+        self.ws();
+        let path = self.path()?;
+        self.ws();
+        let window = if self.eat(b',') {
+            self.ws();
+            Some(self.window()?)
+        } else {
+            None
+        };
+        self.ws();
+        self.expect(b')')?;
+        if func == AggFunc::Count && window.is_some() {
+            return Err(self.err("count() takes no window"));
+        }
+        Ok(Expr::Agg { func, path, window })
+    }
+
+    fn window(&mut self) -> Result<WindowSpec, DalekError> {
+        let key = self.ident()?;
+        self.ws();
+        self.expect(b'=')?;
+        self.ws();
+        match key.as_str() {
+            "window" => Ok(WindowSpec::Trailing(self.duration()?)),
+            "from" => {
+                let from = self.duration()?;
+                self.ws();
+                self.expect(b',')?;
+                self.ws();
+                let key2 = self.ident()?;
+                if key2 != "to" {
+                    return Err(self.err(format!("expected `to=`, got `{key2}`")));
+                }
+                self.ws();
+                self.expect(b'=')?;
+                self.ws();
+                let to = self.duration()?;
+                if to <= from {
+                    return Err(self.err(format!(
+                        "window span is empty: from={from} to={to}"
+                    )));
+                }
+                Ok(WindowSpec::Span(from, to))
+            }
+            other => Err(self.err(format!(
+                "unknown window argument `{other}` (window= | from=, to=)"
+            ))),
+        }
+    }
+
+    fn path(&mut self) -> Result<Path, DalekError> {
+        let mut segments = vec![self.segment()?];
+        while self.eat(b'.') {
+            segments.push(self.segment()?);
+        }
+        Ok(Path { segments })
+    }
+
+    fn segment(&mut self) -> Result<Segment, DalekError> {
+        let key = if self.eat(b'*') {
+            SegKey::Wildcard
+        } else {
+            SegKey::Name(self.ident()?)
+        };
+        let pred = if self.eat(b'[') {
+            self.ws();
+            let field = self.ident()?;
+            self.ws();
+            let op = self.cmp_op()?;
+            self.ws();
+            let value = self.literal()?;
+            self.ws();
+            self.expect(b']')?;
+            Some(Pred { field, op, value })
+        } else {
+            None
+        };
+        Ok(Segment { key, pred })
+    }
+
+    fn cmp_op(&mut self) -> Result<CmpOp, DalekError> {
+        if self.eat(b'!') {
+            self.expect(b'=')?;
+            return Ok(CmpOp::Ne);
+        }
+        if self.eat(b'<') {
+            return Ok(if self.eat(b'=') { CmpOp::Le } else { CmpOp::Lt });
+        }
+        if self.eat(b'>') {
+            return Ok(if self.eat(b'=') { CmpOp::Ge } else { CmpOp::Gt });
+        }
+        if self.eat(b'=') {
+            return Ok(CmpOp::Eq);
+        }
+        Err(self.err(format!(
+            "expected a comparison operator at byte {}",
+            self.i
+        )))
+    }
+
+    fn literal(&mut self) -> Result<Literal, DalekError> {
+        match self.peek() {
+            Some(b'"') => Ok(Literal::Str(self.string()?)),
+            Some(b't') | Some(b'f') => {
+                let mark = self.i;
+                let word = self.ident()?;
+                match word.as_str() {
+                    "true" => Ok(Literal::Bool(true)),
+                    "false" => Ok(Literal::Bool(false)),
+                    _ => Err(self.err(format!(
+                        "invalid literal `{word}` at byte {mark} \
+                         (string, number, true or false)"
+                    ))),
+                }
+            }
+            _ => Ok(Literal::Num(self.number()?)),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, DalekError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string literal")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        _ => return Err(self.err("invalid string escape (\\\" or \\\\)")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // multi-byte UTF-8 passes through byte by byte
+                    let start = self.i;
+                    self.i += 1;
+                    while self.i < self.s.len() && (self.s[self.i] & 0xC0) == 0x80 {
+                        self.i += 1;
+                    }
+                    out.push_str(&String::from_utf8_lossy(&self.s[start..self.i]));
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, DalekError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .map(|b| b.is_ascii_digit() || matches!(b, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            // a sign is only part of the number straight after an exponent
+            if matches!(self.peek(), Some(b'+') | Some(b'-'))
+                && !matches!(self.s.get(self.i - 1), Some(b'e') | Some(b'E'))
+            {
+                break;
+            }
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i])
+            .map_err(|_| self.err("invalid number"))?;
+        let v: f64 = text
+            .parse()
+            .map_err(|_| self.err(format!("invalid number `{text}` at byte {start}")))?;
+        if !v.is_finite() {
+            return Err(self.err(format!("number `{text}` is not finite")));
+        }
+        Ok(v)
+    }
+
+    /// A duration: number + optional unit (ns | us | ms | s | m | h);
+    /// a bare number means seconds. Rounded to the ns grid.
+    fn duration(&mut self) -> Result<SimTime, DalekError> {
+        let v = self.number()?;
+        if v < 0.0 {
+            return Err(self.err(format!("duration {v} must be non-negative")));
+        }
+        let unit_ns: f64 = if self.peek().map(Self::is_ident_byte).unwrap_or(false) {
+            let unit = self.ident()?;
+            match unit.as_str() {
+                "ns" => 1.0,
+                "us" => 1e3,
+                "ms" => 1e6,
+                "s" => 1e9,
+                "m" => 60e9,
+                "h" => 3600e9,
+                other => {
+                    return Err(self.err(format!(
+                        "unknown duration unit `{other}` (ns | us | ms | s | m | h)"
+                    )))
+                }
+            }
+        } else {
+            1e9
+        };
+        let ns = v * unit_ns;
+        if !ns.is_finite() || ns > u64::MAX as f64 {
+            return Err(self.err(format!("duration {v} is out of range")));
+        }
+        Ok(SimTime::from_ns(ns.round() as u64))
+    }
+}
+
+/// Canonical duration spelling: the largest unit that divides the
+/// ns value exactly, so `Display` → parse is lossless.
+pub(crate) fn dur_str(t: SimTime) -> String {
+    let ns = t.as_ns();
+    if ns % 1_000_000_000 == 0 {
+        format!("{}s", ns / 1_000_000_000)
+    } else if ns % 1_000_000 == 0 {
+        format!("{}ms", ns / 1_000_000)
+    } else if ns % 1_000 == 0 {
+        format!("{}us", ns / 1_000)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+impl fmt::Display for Literal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Literal::Num(v) => write!(f, "{v}"),
+            Literal::Str(s) => {
+                write!(f, "\"")?;
+                for c in s.chars() {
+                    match c {
+                        '"' => write!(f, "\\\"")?,
+                        '\\' => write!(f, "\\\\")?,
+                        c => write!(f, "{c}")?,
+                    }
+                }
+                write!(f, "\"")
+            }
+            Literal::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+impl fmt::Display for Segment {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.key {
+            SegKey::Name(n) => write!(f, "{n}")?,
+            SegKey::Wildcard => write!(f, "*")?,
+        }
+        if let Some(p) = &self.pred {
+            write!(f, "[{}{}{}]", p.field, p.op.as_str(), p.value)?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Path {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (k, seg) in self.segments.iter().enumerate() {
+            if k > 0 {
+                write!(f, ".")?;
+            }
+            write!(f, "{seg}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Path(p) => write!(f, "{p}"),
+            Expr::Agg { func, path, window } => {
+                write!(f, "{}({path}", func.as_str())?;
+                match window {
+                    None => {}
+                    Some(WindowSpec::Trailing(w)) => write!(f, ", window={}", dur_str(*w))?,
+                    Some(WindowSpec::Span(a, b)) => {
+                        write!(f, ", from={}, to={}", dur_str(*a), dur_str(*b))?
+                    }
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Expr {
+        Expr::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"))
+    }
+
+    #[test]
+    fn issue_examples_parse() {
+        let e = parse("nodes.*.power.watts");
+        let Expr::Path(p) = &e else { panic!("path") };
+        assert_eq!(p.segments.len(), 4);
+        assert_eq!(p.segments[1].key, SegKey::Wildcard);
+
+        let e = parse(r#"jobs[user="az5"].energy_j"#);
+        let Expr::Path(p) = &e else { panic!("path") };
+        let pred = p.segments[0].pred.as_ref().unwrap();
+        assert_eq!(pred.field, "user");
+        assert_eq!(pred.op, CmpOp::Eq);
+        assert_eq!(pred.value, Literal::Str("az5".into()));
+
+        let e = parse("sum(partitions.gpu.queue.depth)");
+        assert!(matches!(
+            e,
+            Expr::Agg {
+                func: AggFunc::Sum,
+                window: None,
+                ..
+            }
+        ));
+
+        let e = parse(r#"mean(nodes[partition="gpu"].power.watts, window=60s)"#);
+        let Expr::Agg { func, window, .. } = &e else {
+            panic!("agg")
+        };
+        assert_eq!(*func, AggFunc::Mean);
+        assert_eq!(*window, Some(WindowSpec::Trailing(SimTime::from_secs(60))));
+    }
+
+    #[test]
+    fn canonical_display_round_trips() {
+        for src in [
+            "nodes.*.power.watts",
+            r#"jobs[user="az5"].energy_j"#,
+            "sum(partitions.gpu.queue.depth)",
+            r#"mean(nodes[partition="gpu"].power.watts, window=60s)"#,
+            "count(nodes[capped=true])",
+            "min(nodes.*.power.watts, from=10s, to=70s)",
+            "max(nodes[boots>=2].power.energy_j)",
+            r#"jobs[state!="completed"].id"#,
+            "sum(nodes.*.power.energy_j, window=500ms)",
+            "cluster.watts",
+        ] {
+            let a = parse(src);
+            let shown = a.to_string();
+            let b = parse(&shown);
+            assert_eq!(a, b, "{src} -> {shown}");
+            assert_eq!(shown, b.to_string(), "display must be idempotent");
+        }
+    }
+
+    #[test]
+    fn whitespace_is_tolerated_and_canonicalized() {
+        let a = parse("  mean( nodes . * . power . watts ,  window = 2m )  ");
+        assert_eq!(a.to_string(), "mean(nodes.*.power.watts, window=120s)");
+        let b = parse(&a.to_string());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn durations_pick_the_largest_exact_unit() {
+        assert_eq!(dur_str(SimTime::from_secs(3600)), "3600s");
+        assert_eq!(dur_str(SimTime::from_ms(1500)), "1500ms");
+        assert_eq!(dur_str(SimTime::from_us(7)), "7us");
+        assert_eq!(dur_str(SimTime::from_ns(3)), "3ns");
+        // all unit spellings land on the ns grid exactly
+        let Expr::Agg { window, .. } = parse("sum(a, window=1h)") else {
+            panic!()
+        };
+        assert_eq!(window, Some(WindowSpec::Trailing(SimTime::from_hours(1))));
+        let Expr::Agg { window, .. } = parse("sum(a, window=250us)") else {
+            panic!()
+        };
+        assert_eq!(window, Some(WindowSpec::Trailing(SimTime::from_us(250))));
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_errors() {
+        for src in [
+            "",
+            ".",
+            "nodes.",
+            ".nodes",
+            "nodes..watts",
+            "nodes[",
+            "nodes[x]",
+            "nodes[x=]",
+            "nodes[x=1",
+            "nodes[=1]",
+            "nodes[x~1]",
+            "sum(",
+            "sum()",
+            "sum(nodes",
+            "sum(nodes,)",
+            "sum(nodes, window)",
+            "sum(nodes, window=)",
+            "sum(nodes, window=5parsecs)",
+            "sum(nodes, from=1s)",
+            "sum(nodes, from=1s, till=2s)",
+            "sum(nodes, from=5s, to=5s)",
+            "count(nodes, window=5s)",
+            "avg(nodes.*)",
+            "frobnicate(x)",
+            "nodes.*.watts trailing junk",
+            "nodes[x=\"unterminated]",
+            "nodes[x=\"bad\\escape\"]",
+            "nodes[x=--3]",
+            "nodes[x=1e999]",
+            "sum(a, window=-5s)",
+            "nodes[x=truish]",
+        ] {
+            match Expr::parse(src) {
+                Err(DalekError::InvalidQuery(_)) => {}
+                other => panic!("`{src}` must be InvalidQuery, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn agg_names_are_valid_path_heads_without_parens() {
+        // `sum` with no call syntax is just a segment named sum
+        let e = parse("sum.count");
+        let Expr::Path(p) = &e else { panic!("path") };
+        assert_eq!(p.segments[0].key, SegKey::Name("sum".into()));
+        assert_eq!(p.segments[1].key, SegKey::Name("count".into()));
+        // but a non-aggregate call is an error
+        assert!(matches!(
+            Expr::parse("exterminate(nodes)"),
+            Err(DalekError::InvalidQuery(_))
+        ));
+    }
+
+    #[test]
+    fn numeric_and_bool_predicates() {
+        let e = parse("nodes[boots>2].name");
+        let Expr::Path(p) = &e else { panic!() };
+        let pred = p.segments[0].pred.as_ref().unwrap();
+        assert_eq!(pred.op, CmpOp::Gt);
+        assert_eq!(pred.value, Literal::Num(2.0));
+        let e = parse("nodes[capped=false]");
+        let Expr::Path(p) = &e else { panic!() };
+        assert_eq!(
+            p.segments[0].pred.as_ref().unwrap().value,
+            Literal::Bool(false)
+        );
+        // scientific notation survives the round trip
+        let e = parse("jobs[energy_j<1.5e6]");
+        assert_eq!(parse(&e.to_string()), e);
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let lit = Literal::Str("a\"b\\c".into());
+        let p = Expr::Path(Path {
+            segments: vec![Segment {
+                key: SegKey::Name("jobs".into()),
+                pred: Some(Pred {
+                    field: "user".into(),
+                    op: CmpOp::Eq,
+                    value: lit,
+                }),
+            }],
+        });
+        let shown = p.to_string();
+        assert_eq!(shown, r#"jobs[user="a\"b\\c"]"#);
+        assert_eq!(parse(&shown), p);
+    }
+}

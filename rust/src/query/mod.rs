@@ -1,0 +1,44 @@
+//! DQL — the dalek query language over cluster state and rolling
+//! telemetry.
+//!
+//! The paper's 1 kSPS milliwatt-resolution measurement plane only pays
+//! off if operators can *ask questions* of it. DQL is the server-side
+//! answer: opath-style path expressions with wildcards, predicates and
+//! aggregation, evaluated against a **virtual tree** projected lazily
+//! from live state — scheduler indexes, quota accounts, flow-network
+//! link loads, and the sampler's closed-form rolling windows. No
+//! samples are materialized and no cluster state is cloned to answer
+//! a query.
+//!
+//! ```text
+//! nodes.*.power.watts
+//! jobs[user="az5"].energy_j
+//! sum(partitions.az5-a890m.queue.depth)
+//! mean(nodes[partition="az5-a890m"].power.watts, window=60s)
+//! count(nodes[capped=true])
+//! ```
+//!
+//! * [`expr`] — the AST, parser and canonical `Display`;
+//! * [`tree`] — the [`Tree`] lookup trait, the live [`ClusterTree`]
+//!   projection and the synthetic [`MemTree`];
+//! * [`eval`] — resolution, shaping and aggregation into
+//!   [`QueryOutput`];
+//! * [`standing`] — standing-query registration state for the
+//!   `query_events` channel (cadenced or edge-triggered, delta
+//!   suppressed).
+//!
+//! Wire surface: `Request::Query { expr }` →
+//! `Response::QueryResult`, and `subscribe` with
+//! `channel = "query_events"` + an `expr`. Results are owner-scoped
+//! through the capability model: non-admin sessions see only their own
+//! jobs and quota account — enforced in the tree itself, so every
+//! evaluation path inherits it.
+
+pub mod eval;
+pub mod expr;
+pub mod standing;
+pub mod tree;
+
+pub use eval::{eval, output_json, value_json, QueryOutput};
+pub use expr::{AggFunc, CmpOp, Expr, Literal, Path, Pred, SegKey, Segment, WindowSpec};
+pub use tree::{ClusterTree, MemTree, QueryValue, Tree, TreeNode};

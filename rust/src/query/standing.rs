@@ -1,0 +1,93 @@
+//! Standing queries: registered expressions re-evaluated inside the
+//! event pump and delivered as `query_events` deltas.
+//!
+//! A standing query is either *cadenced* (a `rate_hz` was given at
+//! subscribe time: it re-evaluates on that deterministic sim-time
+//! grid) or *edge-triggered* (no rate: it re-evaluates whenever the
+//! pump observes job or power notices — the same edges the
+//! `job_events`/`power_events` channels carry). Either way the result
+//! is encoded to wire JSON and pushed into the session's bounded
+//! outbox **only when it differs from the last delivery** — delta
+//! suppression keeps a quiet cluster's channel quiet. Evaluation
+//! errors (e.g. a path that stopped existing) are skipped silently:
+//! the schedule must stay deterministic, and an error has no delta to
+//! deliver.
+
+use super::expr::Expr;
+use crate::sim::SimTime;
+use crate::util::json::Json;
+
+/// One registered standing query of a session.
+pub(crate) struct StandingQuery {
+    pub expr: Expr,
+    /// canonical spelling (what events echo back)
+    pub canonical: String,
+    /// `Some(period)` = cadenced; `None` = edge-triggered
+    pub period: Option<SimTime>,
+    /// next due time on the cadence grid (unused when edge-triggered)
+    pub next_due: SimTime,
+    /// last delivered wire encoding, for delta suppression
+    pub last: Option<Json>,
+}
+
+impl StandingQuery {
+    pub fn new(expr: Expr, period: Option<SimTime>, now: SimTime) -> Self {
+        let canonical = expr.to_string();
+        let next_due = match period {
+            Some(p) => now + p,
+            None => now,
+        };
+        Self {
+            expr,
+            canonical,
+            period,
+            next_due,
+            last: None,
+        }
+    }
+
+    /// Whether this query re-evaluates at `now` (`edge` = the pump saw
+    /// job/power notices this round). Advances the cadence grid past
+    /// `now` when due, so a long stride between pumps fires once, not
+    /// once per missed grid point.
+    pub fn due(&mut self, now: SimTime, edge: bool) -> bool {
+        match self.period {
+            None => edge,
+            Some(p) => {
+                if now < self.next_due {
+                    return false;
+                }
+                while self.next_due <= now {
+                    self.next_due = self.next_due + p;
+                }
+                true
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::expr::Expr;
+
+    #[test]
+    fn cadence_fires_once_per_stride_and_stays_on_grid() {
+        let e = Expr::parse("cluster.watts").unwrap();
+        let mut q = StandingQuery::new(e, Some(SimTime::from_secs(10)), SimTime::ZERO);
+        assert!(!q.due(SimTime::from_secs(5), true), "not due yet");
+        // a long stride covering many grid points fires exactly once
+        assert!(q.due(SimTime::from_secs(35), false));
+        assert_eq!(q.next_due, SimTime::from_secs(40));
+        assert!(!q.due(SimTime::from_secs(39), true));
+        assert!(q.due(SimTime::from_secs(40), false));
+    }
+
+    #[test]
+    fn edge_triggered_follows_edges_only() {
+        let e = Expr::parse("cluster.watts").unwrap();
+        let mut q = StandingQuery::new(e, None, SimTime::ZERO);
+        assert!(!q.due(SimTime::from_secs(1), false));
+        assert!(q.due(SimTime::from_secs(1), true));
+    }
+}

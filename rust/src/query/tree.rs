@@ -1,0 +1,619 @@
+//! The virtual tree DQL evaluates against.
+//!
+//! Nothing here is materialized: [`Tree`] is a lazy lookup interface —
+//! "what is at this path" / "what are this node's children" — and
+//! [`ClusterTree`] answers it by *projecting* the live cluster state
+//! (scheduler indexes, quota accounts, flow-network link loads, the
+//! sampler's closed-form rolling windows) on demand. Resolving
+//! `nodes.*.power.watts` over a 16-node cluster costs 16 index reads,
+//! not a snapshot.
+//!
+//! The admin schema:
+//!
+//! ```text
+//! cluster.{watts, energy_j, measured_energy_j, jobs_pending,
+//!          jobs_completed, now_s}
+//! nodes.<name>.{name, partition, state, running, capped, boots,
+//!               suspends, power.{watts, energy_j}, measured.energy_j}
+//! jobs.<id>.{id, user, partition, state, nodes, energy_j, rate,
+//!            submitted_s, started_s, finished_s, wait_s, run_s}
+//! partitions.<name>.{name, nodes, running, watts, queue.depth}
+//! quota.<user>.{time_budget_s, energy_budget_j, used_time_s,
+//!               used_energy_j}
+//! net.{active_flows, completed_flows, delivered_bytes,
+//!      fabric.{capacity_bps, used_bps},
+//!      links.<host>.{up, down}.{capacity_bps, used_bps}}
+//! ```
+//!
+//! Ordering is pinned for determinism: `nodes` children follow the
+//! scheduler's node-index order (the same order every cluster-wide
+//! float sum already uses), `jobs` follow ascending id, everything
+//! else is name-sorted. Owner scoping is enforced *in the tree*: a
+//! non-admin session only lists its own jobs and quota account, and a
+//! direct path to another user's entry is a typed `AdminOnly` error —
+//! the evaluator cannot leak what the tree refuses to show.
+//!
+//! Windowed leaves ([`Tree::windowed`]) answer from the closed-form
+//! segment math (`node_rolling_mean_w` / `node_span_energy_j`) or the
+//! probe stores' batched `window_energy_j` — never by materializing
+//! samples.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::expr::WindowSpec;
+use crate::api::error::DalekError;
+use crate::api::protocol::job_state_str;
+use crate::energy::api::EnergyApi;
+use crate::energy::StreamingSampler;
+use crate::net::{FlowNet, HostId, Topology};
+use crate::power::PowerState;
+use crate::sim::SimTime;
+use crate::slurm::{JobId, Slurm};
+
+/// A scalar value at a tree leaf.
+#[derive(Clone, PartialEq, Debug)]
+pub enum QueryValue {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Null,
+}
+
+/// What lives at one tree path.
+#[derive(Clone, PartialEq, Debug)]
+pub enum TreeNode {
+    /// an interior node: its children's names, in canonical order
+    Interior(Vec<String>),
+    Leaf(QueryValue),
+}
+
+/// Lazy lookup interface the evaluator walks.
+pub trait Tree {
+    /// What is at `path`? `None` = no such path. Errors are capability
+    /// refusals (e.g. a non-admin reaching into another user's jobs).
+    fn node(&self, path: &[String]) -> Result<Option<TreeNode>, DalekError>;
+
+    /// A leaf's windowed value, if the leaf supports windows: `None`
+    /// means "exists but not windowable" (the evaluator turns that
+    /// into a typed error).
+    fn windowed(&self, path: &[String], window: &WindowSpec)
+        -> Result<Option<f64>, DalekError>;
+}
+
+fn power_state_str(s: PowerState) -> &'static str {
+    match s {
+        PowerState::Suspended => "suspended",
+        PowerState::Booting { .. } => "booting",
+        PowerState::Idle { .. } => "idle",
+        PowerState::Allocated => "allocated",
+        PowerState::Suspending { .. } => "suspending",
+    }
+}
+
+fn names(items: &[&str]) -> Vec<String> {
+    items.iter().map(|s| s.to_string()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// ClusterTree: the live projection
+
+/// The live cluster projected as a [`Tree`], borrowing the read
+/// surfaces the evaluator needs. Constructed per evaluation by
+/// `ClusterApi` from disjoint field borrows; `scope` is the session's
+/// login for owner scoping (`None` = admin, sees all).
+pub struct ClusterTree<'a> {
+    slurm: &'a Slurm,
+    sampler: &'a StreamingSampler,
+    energy: &'a EnergyApi,
+    net: &'a FlowNet,
+    topo: &'a Topology,
+    now: SimTime,
+    scope: Option<&'a str>,
+}
+
+impl<'a> ClusterTree<'a> {
+    pub(crate) fn new(
+        slurm: &'a Slurm,
+        sampler: &'a StreamingSampler,
+        energy: &'a EnergyApi,
+        net: &'a FlowNet,
+        topo: &'a Topology,
+        now: SimTime,
+        scope: Option<&'a str>,
+    ) -> Self {
+        Self {
+            slurm,
+            sampler,
+            energy,
+            net,
+            topo,
+            now,
+            scope,
+        }
+    }
+
+    /// Host names are FQDNs (`az5-a890m-0.dalek`); the tree uses the
+    /// bare host part so names stay valid path idents.
+    fn short_host(name: &str) -> &str {
+        name.split('.').next().unwrap_or(name)
+    }
+
+    fn host_by_short(&self, short: &str) -> Option<HostId> {
+        self.topo
+            .hosts()
+            .iter()
+            .position(|h| Self::short_host(&h.name) == short)
+            .map(HostId)
+    }
+
+    fn visible_job(&self, id: JobId) -> Result<Option<&crate::slurm::Job>, DalekError> {
+        let Some(job) = self.slurm.job(id) else {
+            return Ok(None);
+        };
+        if let Some(user) = self.scope {
+            if job.spec.user != user {
+                return Err(DalekError::AdminOnly);
+            }
+        }
+        Ok(Some(job))
+    }
+
+    fn cluster_node(&self, rest: &[String]) -> Result<Option<TreeNode>, DalekError> {
+        let leaf = |v: QueryValue| Ok(Some(TreeNode::Leaf(v)));
+        match rest {
+            [] => Ok(Some(TreeNode::Interior(names(&[
+                "energy_j",
+                "jobs_completed",
+                "jobs_pending",
+                "measured_energy_j",
+                "now_s",
+                "watts",
+            ])))),
+            [k] => match k.as_str() {
+                "energy_j" => leaf(QueryValue::Num(self.slurm.total_energy_j())),
+                "jobs_completed" => {
+                    leaf(QueryValue::Num(self.slurm.stats.completed as f64))
+                }
+                "jobs_pending" => leaf(QueryValue::Num(self.slurm.pending_count() as f64)),
+                "measured_energy_j" => leaf(QueryValue::Num(self.energy.total_energy_j())),
+                "now_s" => leaf(QueryValue::Num(self.now.as_secs_f64())),
+                "watts" => leaf(QueryValue::Num(self.slurm.cluster_watts())),
+                _ => Ok(None),
+            },
+            _ => Ok(None),
+        }
+    }
+
+    fn node_node(&self, rest: &[String]) -> Result<Option<TreeNode>, DalekError> {
+        let leaf = |v: QueryValue| Ok(Some(TreeNode::Leaf(v)));
+        let [name, rest @ ..] = rest else {
+            // node-index order: the same order every cluster-wide sum
+            // (watts, joules, rolling means) folds in
+            let list = (0..self.slurm.node_count())
+                .filter_map(|i| self.slurm.node_name(i).map(str::to_string))
+                .collect();
+            return Ok(Some(TreeNode::Interior(list)));
+        };
+        let Some(idx) = self.slurm.node_index(name) else {
+            return Ok(None);
+        };
+        let info = self.slurm.node_info(idx);
+        match rest {
+            [] => Ok(Some(TreeNode::Interior(names(&[
+                "boots",
+                "capped",
+                "measured",
+                "name",
+                "partition",
+                "power",
+                "running",
+                "state",
+                "suspends",
+            ])))),
+            [k] => match k.as_str() {
+                "boots" => leaf(QueryValue::Num(info.boots as f64)),
+                "capped" => leaf(QueryValue::Bool(self.slurm.node_capped(idx))),
+                "measured" => Ok(Some(TreeNode::Interior(names(&["energy_j"])))),
+                "name" => leaf(QueryValue::Str(info.name)),
+                "partition" => leaf(QueryValue::Str(info.partition)),
+                "power" => Ok(Some(TreeNode::Interior(names(&["energy_j", "watts"])))),
+                "running" => leaf(match info.running {
+                    Some(j) => QueryValue::Num(j.0 as f64),
+                    None => QueryValue::Null,
+                }),
+                "state" => leaf(QueryValue::Str(power_state_str(info.state).into())),
+                "suspends" => leaf(QueryValue::Num(info.suspends as f64)),
+                _ => Ok(None),
+            },
+            [k, l] => match (k.as_str(), l.as_str()) {
+                ("power", "watts") => leaf(QueryValue::Num(info.watts)),
+                ("power", "energy_j") => leaf(QueryValue::Num(info.energy_j)),
+                ("measured", "energy_j") => {
+                    let j = self
+                        .energy
+                        .board(name)
+                        .map(|b| b.total_energy_j())
+                        .unwrap_or(0.0);
+                    leaf(QueryValue::Num(j))
+                }
+                _ => Ok(None),
+            },
+            _ => Ok(None),
+        }
+    }
+
+    fn job_node(&self, rest: &[String]) -> Result<Option<TreeNode>, DalekError> {
+        let leaf = |v: QueryValue| Ok(Some(TreeNode::Leaf(v)));
+        let opt_secs = |t: Option<SimTime>| match t {
+            Some(t) => QueryValue::Num(t.as_secs_f64()),
+            None => QueryValue::Null,
+        };
+        let [id, rest @ ..] = rest else {
+            let list = self
+                .slurm
+                .jobs()
+                .filter(|j| match self.scope {
+                    Some(user) => j.spec.user == user,
+                    None => true,
+                })
+                .map(|j| j.id.0.to_string())
+                .collect();
+            return Ok(Some(TreeNode::Interior(list)));
+        };
+        let Ok(id) = id.parse::<u64>() else {
+            return Ok(None);
+        };
+        let Some(job) = self.visible_job(JobId(id))? else {
+            return Ok(None);
+        };
+        match rest {
+            [] => Ok(Some(TreeNode::Interior(names(&[
+                "energy_j",
+                "finished_s",
+                "id",
+                "nodes",
+                "partition",
+                "rate",
+                "run_s",
+                "started_s",
+                "state",
+                "submitted_s",
+                "user",
+                "wait_s",
+            ])))),
+            [k] => match k.as_str() {
+                "energy_j" => leaf(QueryValue::Num(job.energy_j)),
+                "finished_s" => leaf(opt_secs(job.finished)),
+                "id" => leaf(QueryValue::Num(job.id.0 as f64)),
+                "nodes" => leaf(QueryValue::Num(job.spec.nodes as f64)),
+                "partition" => leaf(QueryValue::Str(job.spec.partition.clone())),
+                "rate" => leaf(QueryValue::Num(job.rate)),
+                "run_s" => leaf(opt_secs(job.run_time())),
+                "started_s" => leaf(opt_secs(job.started)),
+                "state" => leaf(QueryValue::Str(job_state_str(job.state).into())),
+                "submitted_s" => leaf(QueryValue::Num(job.submitted.as_secs_f64())),
+                "user" => leaf(QueryValue::Str(job.spec.user.clone())),
+                "wait_s" => leaf(opt_secs(job.wait_time())),
+                _ => Ok(None),
+            },
+            _ => Ok(None),
+        }
+    }
+
+    fn partition_node(&self, rest: &[String]) -> Result<Option<TreeNode>, DalekError> {
+        let leaf = |v: QueryValue| Ok(Some(TreeNode::Leaf(v)));
+        let [name, rest @ ..] = rest else {
+            let list = self.slurm.partitions().map(|(n, _)| n.to_string()).collect();
+            return Ok(Some(TreeNode::Interior(list)));
+        };
+        let Some(indices) = self.slurm.partition_nodes(name) else {
+            return Ok(None);
+        };
+        match rest {
+            [] => Ok(Some(TreeNode::Interior(names(&[
+                "name", "nodes", "queue", "running", "watts",
+            ])))),
+            [k] => match k.as_str() {
+                "name" => leaf(QueryValue::Str(name.clone())),
+                "nodes" => leaf(QueryValue::Num(indices.len() as f64)),
+                "queue" => Ok(Some(TreeNode::Interior(names(&["depth"])))),
+                "running" => {
+                    let n = indices
+                        .iter()
+                        .filter(|&&i| self.slurm.node_info(i).running.is_some())
+                        .count();
+                    leaf(QueryValue::Num(n as f64))
+                }
+                "watts" => {
+                    let w: f64 =
+                        indices.iter().map(|&i| self.slurm.node_info(i).watts).sum();
+                    leaf(QueryValue::Num(w))
+                }
+                _ => Ok(None),
+            },
+            [k, l] if k == "queue" && l == "depth" => {
+                leaf(QueryValue::Num(self.slurm.partition_pending(name) as f64))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    fn quota_node(&self, rest: &[String]) -> Result<Option<TreeNode>, DalekError> {
+        let leaf = |v: QueryValue| Ok(Some(TreeNode::Leaf(v)));
+        let [user, rest @ ..] = rest else {
+            let list = self
+                .slurm
+                .quota
+                .accounts()
+                .filter(|(u, _)| match self.scope {
+                    Some(me) => *u == me,
+                    None => true,
+                })
+                .map(|(u, _)| u.to_string())
+                .collect();
+            return Ok(Some(TreeNode::Interior(list)));
+        };
+        if let Some(me) = self.scope {
+            if user != me {
+                return Err(DalekError::AdminOnly);
+            }
+        }
+        let Ok(a) = self.slurm.quota.account(user) else {
+            return Ok(None);
+        };
+        match rest {
+            [] => Ok(Some(TreeNode::Interior(names(&[
+                "energy_budget_j",
+                "time_budget_s",
+                "used_energy_j",
+                "used_time_s",
+            ])))),
+            [k] => match k.as_str() {
+                "energy_budget_j" => leaf(QueryValue::Num(a.energy_budget_j)),
+                "time_budget_s" => leaf(QueryValue::Num(a.time_budget_s)),
+                "used_energy_j" => leaf(QueryValue::Num(a.used_energy_j)),
+                "used_time_s" => leaf(QueryValue::Num(a.used_time_s)),
+                _ => Ok(None),
+            },
+            _ => Ok(None),
+        }
+    }
+
+    fn net_node(&self, rest: &[String]) -> Result<Option<TreeNode>, DalekError> {
+        let leaf = |v: QueryValue| Ok(Some(TreeNode::Leaf(v)));
+        match rest {
+            [] => Ok(Some(TreeNode::Interior(names(&[
+                "active_flows",
+                "completed_flows",
+                "delivered_bytes",
+                "fabric",
+                "links",
+            ])))),
+            [k] => match k.as_str() {
+                "active_flows" => leaf(QueryValue::Num(self.net.active_flows() as f64)),
+                "completed_flows" => {
+                    leaf(QueryValue::Num(self.net.completed_flows as f64))
+                }
+                "delivered_bytes" => leaf(QueryValue::Num(self.net.delivered_bytes)),
+                "fabric" => Ok(Some(TreeNode::Interior(names(&[
+                    "capacity_bps",
+                    "used_bps",
+                ])))),
+                "links" => {
+                    let list = self
+                        .topo
+                        .hosts()
+                        .iter()
+                        .map(|h| Self::short_host(&h.name).to_string())
+                        .collect();
+                    Ok(Some(TreeNode::Interior(list)))
+                }
+                _ => Ok(None),
+            },
+            [k, rest @ ..] if k == "fabric" => match rest {
+                [l] if l == "capacity_bps" => {
+                    leaf(QueryValue::Num(self.net.fabric_capacity_bps()))
+                }
+                [l] if l == "used_bps" => leaf(QueryValue::Num(self.net.fabric_used_bps())),
+                _ => Ok(None),
+            },
+            [k, host, rest @ ..] if k == "links" => {
+                let Some(h) = self.host_by_short(host) else {
+                    return Ok(None);
+                };
+                let (up, down) = self.net.host_load_bps(h);
+                let cap = self.net.host_capacity_bps(h);
+                match rest {
+                    [] => Ok(Some(TreeNode::Interior(names(&["down", "up"])))),
+                    [d] if d == "up" || d == "down" => Ok(Some(TreeNode::Interior(
+                        names(&["capacity_bps", "used_bps"]),
+                    ))),
+                    [d, l] => {
+                        let used = if d == "up" { up } else { down };
+                        match (d.as_str(), l.as_str()) {
+                            ("up" | "down", "capacity_bps") => leaf(QueryValue::Num(cap)),
+                            ("up" | "down", "used_bps") => leaf(QueryValue::Num(used)),
+                            _ => Ok(None),
+                        }
+                    }
+                    _ => Ok(None),
+                }
+            }
+            _ => Ok(None),
+        }
+    }
+}
+
+impl Tree for ClusterTree<'_> {
+    fn node(&self, path: &[String]) -> Result<Option<TreeNode>, DalekError> {
+        let [root, rest @ ..] = path else {
+            return Ok(Some(TreeNode::Interior(names(&[
+                "cluster",
+                "jobs",
+                "net",
+                "nodes",
+                "partitions",
+                "quota",
+            ]))));
+        };
+        match root.as_str() {
+            "cluster" => self.cluster_node(rest),
+            "jobs" => self.job_node(rest),
+            "net" => self.net_node(rest),
+            "nodes" => self.node_node(rest),
+            "partitions" => self.partition_node(rest),
+            "quota" => self.quota_node(rest),
+            _ => Ok(None),
+        }
+    }
+
+    fn windowed(
+        &self,
+        path: &[String],
+        window: &WindowSpec,
+    ) -> Result<Option<f64>, DalekError> {
+        let span = |w: &WindowSpec| match *w {
+            WindowSpec::Trailing(w) => (
+                SimTime(self.now.as_ns().saturating_sub(w.as_ns())),
+                self.now,
+            ),
+            WindowSpec::Span(a, b) => (a, b),
+        };
+        let strs: Vec<&str> = path.iter().map(|s| s.as_str()).collect();
+        match strs.as_slice() {
+            ["cluster", "watts"] => Ok(Some(match *window {
+                WindowSpec::Trailing(w) => self.sampler.rolling_mean_w(w, self.now),
+                WindowSpec::Span(a, b) => self.sampler.span_mean_w(a, b),
+            })),
+            ["cluster", "energy_j"] => {
+                let (a, b) = span(window);
+                Ok(Some(self.sampler.span_energy_j(a, b)))
+            }
+            ["nodes", name, "power", "watts"] => {
+                let Some(idx) = self.slurm.node_index(name) else {
+                    return Ok(None);
+                };
+                Ok(Some(match *window {
+                    WindowSpec::Trailing(w) => {
+                        self.sampler.node_rolling_mean_w(idx, w, self.now)
+                    }
+                    WindowSpec::Span(a, b) => {
+                        let s = b.since(a).as_secs_f64();
+                        if s <= 0.0 {
+                            0.0
+                        } else {
+                            self.sampler.node_span_energy_j(idx, a, b) / s
+                        }
+                    }
+                }))
+            }
+            ["nodes", name, "power", "energy_j"] => {
+                let Some(idx) = self.slurm.node_index(name) else {
+                    return Ok(None);
+                };
+                let (a, b) = span(window);
+                Ok(Some(self.sampler.node_span_energy_j(idx, a, b)))
+            }
+            ["nodes", name, "measured", "energy_j"] => {
+                let Ok(board) = self.energy.board(name) else {
+                    return Ok(None);
+                };
+                let (a, b) = span(window);
+                let mut total = 0.0;
+                for p in 0..board.probe_count() {
+                    if let Ok(store) = board.store(p as u8) {
+                        total += store.window_energy_j(a, b);
+                    }
+                }
+                Ok(Some(total))
+            }
+            _ => Ok(None),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MemTree: a synthetic tree for tests and benches
+
+/// A materialized in-memory [`Tree`], for parser/evaluator tests and
+/// the `query_eval` bench (e.g. a synthetic 10k-node cluster). Leaves
+/// are inserted by dotted path; interiors are implied.
+#[derive(Default)]
+pub struct MemTree {
+    leaves: BTreeMap<String, QueryValue>,
+    children: BTreeMap<String, BTreeSet<String>>,
+}
+
+impl MemTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a leaf at a dotted path, creating implied interiors.
+    pub fn insert(&mut self, path: &str, value: QueryValue) {
+        let parts: Vec<&str> = path.split('.').collect();
+        let mut prefix = String::new();
+        for (k, part) in parts.iter().enumerate() {
+            self.children
+                .entry(prefix.clone())
+                .or_default()
+                .insert(part.to_string());
+            if k > 0 {
+                prefix.push('.');
+            }
+            prefix.push_str(part);
+        }
+        self.leaves.insert(prefix, value);
+    }
+}
+
+impl Tree for MemTree {
+    fn node(&self, path: &[String]) -> Result<Option<TreeNode>, DalekError> {
+        let key = path.join(".");
+        if let Some(kids) = self.children.get(&key) {
+            return Ok(Some(TreeNode::Interior(
+                kids.iter().cloned().collect(),
+            )));
+        }
+        Ok(self.leaves.get(&key).cloned().map(TreeNode::Leaf))
+    }
+
+    fn windowed(
+        &self,
+        path: &[String],
+        _window: &WindowSpec,
+    ) -> Result<Option<f64>, DalekError> {
+        // synthetic: every numeric leaf answers windows with its value
+        let key = path.join(".");
+        Ok(match self.leaves.get(&key) {
+            Some(QueryValue::Num(v)) => Some(*v),
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memtree_projects_leaves_and_interiors() {
+        let mut t = MemTree::new();
+        t.insert("nodes.a.power.watts", QueryValue::Num(10.0));
+        t.insert("nodes.b.power.watts", QueryValue::Num(20.0));
+        t.insert("nodes.a.partition", QueryValue::Str("gpu".into()));
+        let root = t.node(&[]).unwrap().unwrap();
+        assert_eq!(root, TreeNode::Interior(vec!["nodes".into()]));
+        let nodes = t.node(&["nodes".into()]).unwrap().unwrap();
+        assert_eq!(
+            nodes,
+            TreeNode::Interior(vec!["a".into(), "b".into()])
+        );
+        let leaf = t
+            .node(&["nodes".into(), "b".into(), "power".into(), "watts".into()])
+            .unwrap()
+            .unwrap();
+        assert_eq!(leaf, TreeNode::Leaf(QueryValue::Num(20.0)));
+        assert_eq!(t.node(&["nope".into()]).unwrap(), None);
+    }
+}

@@ -92,6 +92,11 @@ impl QuotaDb {
         self.accounts.contains_key(user)
     }
 
+    /// All accounts in name order — the query layer's read surface.
+    pub fn accounts(&self) -> impl Iterator<Item = (&str, &Account)> {
+        self.accounts.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
     fn roll_period(&mut self, user: &str, now: SimTime) {
         let period = self.period;
         if let Some(a) = self.accounts.get_mut(user) {

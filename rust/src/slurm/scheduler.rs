@@ -336,22 +336,51 @@ impl Slurm {
         self.queue.len()
     }
 
+    /// Snapshot of one node (energy integrated up to the last observed
+    /// time) — the query layer's lazy per-node projection.
+    pub fn node_info(&self, idx: usize) -> NodeInfo {
+        let now = self.now();
+        let n = &self.nodes[idx];
+        NodeInfo {
+            name: n.name.clone(),
+            partition: n.partition.clone(),
+            state: n.fsm.state(),
+            running: n.running,
+            energy_j: n.energy_j + n.cur_watts * now.since(n.last_change).as_secs_f64(),
+            watts: n.cur_watts,
+            boots: n.fsm.boots,
+            suspends: n.fsm.suspends,
+        }
+    }
+
     /// Node snapshots (energy integrated up to the last observed time).
     pub fn node_infos(&self) -> Vec<NodeInfo> {
-        let now = self.now();
-        self.nodes
+        (0..self.nodes.len()).map(|i| self.node_info(i)).collect()
+    }
+
+    /// Partition names with their node indexes, in name order.
+    pub fn partitions(&self) -> impl Iterator<Item = (&str, &[usize])> {
+        self.by_partition
             .iter()
-            .map(|n| NodeInfo {
-                name: n.name.clone(),
-                partition: n.partition.clone(),
-                state: n.fsm.state(),
-                running: n.running,
-                energy_j: n.energy_j + n.cur_watts * now.since(n.last_change).as_secs_f64(),
-                watts: n.cur_watts,
-                boots: n.fsm.boots,
-                suspends: n.fsm.suspends,
+            .map(|(k, v)| (k.as_str(), v.as_slice()))
+    }
+
+    /// Node indexes of one partition, if it exists.
+    pub fn partition_nodes(&self, name: &str) -> Option<&[usize]> {
+        self.by_partition.get(name).map(|v| v.as_slice())
+    }
+
+    /// Queued (pending) jobs targeting one partition.
+    pub fn partition_pending(&self, name: &str) -> usize {
+        self.queue
+            .iter()
+            .filter(|id| {
+                self.jobs
+                    .get(id)
+                    .map(|j| j.spec.partition == name)
+                    .unwrap_or(false)
             })
-            .collect()
+            .count()
     }
 
     /// Instantaneous compute-node draw, watts.
@@ -918,19 +947,22 @@ impl Slurm {
         }
     }
 
+    /// Whether one node's knobs differ from the nominal operating point.
+    pub fn node_capped(&self, idx: usize) -> bool {
+        let n = &self.nodes[idx];
+        n.power.cpu_rapl.cap().is_some()
+            || n.power
+                .gpu_cap
+                .as_ref()
+                .map(|g| g.cap().is_some())
+                .unwrap_or(false)
+            || n.power.dvfs.governor != n.base_power.dvfs.governor
+    }
+
     /// Nodes whose knobs differ from the nominal operating point.
     pub fn capped_nodes(&self) -> usize {
-        self.nodes
-            .iter()
-            .filter(|n| {
-                n.power.cpu_rapl.cap().is_some()
-                    || n.power
-                        .gpu_cap
-                        .as_ref()
-                        .map(|g| g.cap().is_some())
-                        .unwrap_or(false)
-                    || n.power.dvfs.governor != n.base_power.dvfs.governor
-            })
+        (0..self.nodes.len())
+            .filter(|&i| self.node_capped(i))
             .count()
     }
 

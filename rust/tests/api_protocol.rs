@@ -220,6 +220,7 @@ fn every_admin_op_rejects_non_admins() {
         Request::Subscribe {
             channel: dalek::api::Channel::PowerEvents,
             rate_hz: None,
+            expr: None,
         },
         Request::SetRateLimit {
             user: "alice".into(),
@@ -278,6 +279,7 @@ fn expired_and_forged_tokens_rejected_everywhere() {
         Request::Subscribe {
             channel: dalek::api::Channel::JobEvents,
             rate_hz: None,
+            expr: None,
         },
         Request::PollEvents { max: 10 },
         Request::WaitJob { job: dalek::slurm::JobId(1) },
@@ -316,6 +318,7 @@ fn outbox_overflow_reports_lagged_on_the_wire() {
         &Request::Subscribe {
             channel: dalek::api::Channel::JobEvents,
             rate_hz: None,
+            expr: None,
         },
     )
     .unwrap();

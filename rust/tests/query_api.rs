@@ -1,0 +1,428 @@
+//! Acceptance suite for the DQL query layer (`dalek::query`):
+//!
+//! * a seeded AST generator proves parse → display → parse is the
+//!   identity (the canonical form is lossless);
+//! * malformed expressions — curated and fuzzed — always fail with a
+//!   typed `InvalidQuery`, never a panic;
+//! * the virtual tree is owner-scoped: wildcards silently narrow to
+//!   the session's own jobs/quota, direct paths into another user's
+//!   entries are typed `AdminOnly` refusals, admins see everything;
+//! * a windowed DQL mean over a governor-capped partition matches the
+//!   §4.3 measured (`query_energy`) ground truth within the probes'
+//!   quantization bound — with zero samples materialized by the
+//!   evaluation itself;
+//! * the legacy aggregate surfaces (`query_energy`, `power_report`)
+//!   are pinned bit-equal to the DQL expressions they now desugar to;
+//! * an `ApiServer` storm with standing queries subscribed replays
+//!   bit-identically across two runs.
+
+use dalek::api::{ApiServer, Channel, ClusterApi, DalekError, Request};
+use dalek::config::ClusterConfig;
+use dalek::coordinator::trace::TraceGen;
+use dalek::query::{
+    AggFunc, CmpOp, Expr, Literal, Path, Pred, QueryOutput, QueryValue, SegKey, Segment,
+    WindowSpec,
+};
+use dalek::sim::SimTime;
+use dalek::slurm::JobSpec;
+use dalek::util::Xoshiro256;
+
+fn cluster() -> ClusterApi {
+    ClusterApi::new(ClusterConfig::dalek_default(), None).unwrap()
+}
+
+fn scalar(out: &QueryOutput) -> f64 {
+    match out {
+        QueryOutput::Scalar(QueryValue::Num(x)) => *x,
+        other => panic!("expected a numeric scalar, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parse → display → parse round-trip (property)
+// ---------------------------------------------------------------------------
+
+fn gen_ident(rng: &mut Xoshiro256) -> String {
+    const POOL: &[&str] = &[
+        "nodes", "jobs", "partitions", "power", "watts", "energy_j", "state", "user",
+        "az5-a890m", "queue", "depth", "n07", "x_1", "a-b-c", "capped",
+    ];
+    POOL[rng.uniform_u64(0, POOL.len() as u64 - 1) as usize].to_string()
+}
+
+fn gen_literal(rng: &mut Xoshiro256) -> Literal {
+    match rng.uniform_u64(0, 2) {
+        0 => {
+            let nums = [0.0, 1.0, 42.0, 12.5, 999.0, 0.125];
+            Literal::Num(nums[rng.uniform_u64(0, 5) as usize])
+        }
+        1 => Literal::Bool(rng.uniform_u64(0, 1) == 1),
+        _ => {
+            let strs = ["completed", "az5-a890m", "a \"quoted\" one", "back\\slash", ""];
+            Literal::Str(strs[rng.uniform_u64(0, 4) as usize].to_string())
+        }
+    }
+}
+
+fn gen_segment(rng: &mut Xoshiro256) -> Segment {
+    let key = if rng.uniform_u64(0, 3) == 0 {
+        SegKey::Wildcard
+    } else {
+        SegKey::Name(gen_ident(rng))
+    };
+    let pred = if rng.uniform_u64(0, 2) == 0 {
+        let ops = [CmpOp::Eq, CmpOp::Ne, CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge];
+        Some(Pred {
+            field: gen_ident(rng),
+            op: ops[rng.uniform_u64(0, 5) as usize],
+            value: gen_literal(rng),
+        })
+    } else {
+        None
+    };
+    Segment { key, pred }
+}
+
+fn gen_expr(rng: &mut Xoshiro256) -> Expr {
+    let nsegs = 1 + rng.uniform_u64(0, 3) as usize;
+    let path = Path {
+        segments: (0..nsegs).map(|_| gen_segment(rng)).collect(),
+    };
+    if rng.uniform_u64(0, 2) == 0 {
+        return Expr::Path(path);
+    }
+    let funcs = [AggFunc::Sum, AggFunc::Mean, AggFunc::Min, AggFunc::Max, AggFunc::Count];
+    let func = funcs[rng.uniform_u64(0, 4) as usize];
+    let window = if func == AggFunc::Count {
+        None
+    } else {
+        match rng.uniform_u64(0, 2) {
+            0 => None,
+            1 => Some(WindowSpec::Trailing(SimTime::from_ns(
+                1 + rng.uniform_u64(0, 7_200_000_000_000),
+            ))),
+            _ => {
+                let a = rng.uniform_u64(0, 1_000_000_000_000);
+                let b = a + 1 + rng.uniform_u64(0, 3_600_000_000_000);
+                Some(WindowSpec::Span(SimTime::from_ns(a), SimTime::from_ns(b)))
+            }
+        }
+    };
+    Expr::Agg { func, path, window }
+}
+
+#[test]
+fn display_then_parse_is_the_identity() {
+    let mut rng = Xoshiro256::new(0xD0_1234);
+    for k in 0..500 {
+        let e = gen_expr(&mut rng);
+        let text = e.to_string();
+        let back = Expr::parse(&text)
+            .unwrap_or_else(|err| panic!("case {k}: `{text}` failed to re-parse: {err}"));
+        assert_eq!(back, e, "case {k}: `{text}` re-parsed differently");
+        // and the canonical form is a fixed point
+        assert_eq!(back.to_string(), text, "case {k}: display is not canonical");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// malformed expressions: typed errors, never panics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_expressions_fail_typed() {
+    let bad = [
+        "",
+        " ",
+        ".",
+        "nodes.",
+        ".nodes",
+        "nodes..watts",
+        "nodes.*.",
+        "sum()",
+        "sum(",
+        "sum(nodes.*.watts",
+        "sum(nodes.*.watts,)",
+        "sum(nodes.*.watts, window=)",
+        "sum(nodes.*.watts, window=-5s)",
+        "sum(nodes.*.watts, window=5parsecs)",
+        "sum(nodes.*.watts, from=10s)",
+        "sum(nodes.*.watts, from=10s, to=5s)",
+        "sum(nodes.*.watts, until=10s)",
+        "count(jobs.*, window=60s)",
+        "median(nodes.*.watts)",
+        "nodes[",
+        "nodes[]",
+        "nodes[state]",
+        "nodes[state=]",
+        "nodes[state~\"up\"]",
+        "nodes[state=\"unterminated]",
+        "nodes[state=\"x\"",
+        "nodes[watts=1e309]",
+        "nodes[watts=nan]",
+        "sum(nodes.*.watts) trailing",
+        "nodes.*.watts extra",
+        "sum sum(nodes.*.watts)",
+        "(nodes.watts)",
+        "nodes.*.watts\u{0}",
+        "nodes.é.watts",
+    ];
+    for src in bad {
+        match Expr::parse(src) {
+            Err(DalekError::InvalidQuery(_)) => {}
+            other => panic!("`{src}`: expected InvalidQuery, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn random_byte_soup_never_panics() {
+    const CHARSET: &[u8] = b"abz059_-.*[]()=!<>,\"\\ \tsumcountwindowfromto";
+    let mut rng = Xoshiro256::new(0xF022);
+    let mut parsed_ok = 0u32;
+    for _ in 0..4000 {
+        let len = rng.uniform_u64(0, 48) as usize;
+        let s: String = (0..len)
+            .map(|_| CHARSET[rng.uniform_u64(0, CHARSET.len() as u64 - 1) as usize] as char)
+            .collect();
+        match Expr::parse(&s) {
+            Ok(e) => {
+                parsed_ok += 1;
+                // whatever the soup produced must round-trip canonically
+                let back = Expr::parse(&e.to_string()).expect("canonical form re-parses");
+                assert_eq!(back, e);
+            }
+            Err(DalekError::InvalidQuery(_)) => {}
+            Err(other) => panic!("`{s}`: wrong error type {other:?}"),
+        }
+    }
+    // the soup is drawn from grammar bytes: some strings must parse
+    assert!(parsed_ok > 10, "charset fuzz never produced a valid expression");
+}
+
+// ---------------------------------------------------------------------------
+// owner scoping on the virtual tree
+// ---------------------------------------------------------------------------
+
+fn job(user: &str, partition: &str, secs: u64) -> JobSpec {
+    JobSpec::cpu(user, partition, 1, secs)
+}
+
+#[test]
+fn queries_are_owner_scoped() {
+    let mut c = cluster();
+    c.submit(job("alice", "az5-a890m", 60), SimTime::ZERO).unwrap();
+    c.submit(job("alice", "az5-a890m", 60), SimTime::ZERO).unwrap();
+    c.submit(job("bob", "az4-a7900", 60), SimTime::ZERO).unwrap();
+    c.run_until(SimTime::from_mins(10), false);
+    let root = c.login("root").unwrap();
+    let alice = c.login("alice").unwrap();
+
+    // wildcards narrow silently to the session's own rows
+    let (_, all) = c.query(root, "count(jobs.*)").unwrap();
+    let (_, mine) = c.query(alice, "count(jobs.*)").unwrap();
+    assert_eq!(scalar(&all), 3.0);
+    assert_eq!(scalar(&mine), 2.0);
+
+    // predicate filters exclude the invisible rows instead of erroring
+    let (_, bobs) = c.query(alice, "count(jobs[user=\"bob\"])").unwrap();
+    assert_eq!(scalar(&bobs), 0.0);
+    let (_, bobs_root) = c.query(root, "count(jobs[user=\"bob\"])").unwrap();
+    assert_eq!(scalar(&bobs_root), 1.0);
+
+    // a direct path into another user's job is a typed refusal
+    let err = c.query(alice, "jobs.3.energy_j").unwrap_err();
+    assert!(matches!(err, DalekError::AdminOnly), "got {err:?}");
+    assert!(matches!(c.query(root, "jobs.3.energy_j"), Ok(_)));
+    // same for the quota subtree
+    let err = c.query(alice, "quota.bob.used_energy_j").unwrap_err();
+    assert!(matches!(err, DalekError::AdminOnly), "got {err:?}");
+
+    // node/partition state is world-readable either way
+    let (_, w_alice) = c.query(alice, "cluster.watts").unwrap();
+    let (_, w_root) = c.query(root, "cluster.watts").unwrap();
+    assert_eq!(scalar(&w_alice).to_bits(), scalar(&w_root).to_bits());
+
+    // a path that names nothing is a typed InvalidQuery, not a panic
+    let err = c.query(root, "nodes.nope.power.watts").unwrap_err();
+    assert!(matches!(err, DalekError::InvalidQuery(_)), "got {err:?}");
+}
+
+// ---------------------------------------------------------------------------
+// windowed aggregation vs measured ground truth (the tentpole's
+// acceptance: right answer, zero samples materialized by the query)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn windowed_mean_matches_measured_truth_without_materializing() {
+    let mut c = cluster();
+    let root = c.login("root").unwrap();
+    // governor-capped az5 partition, sampled run to T = 120 s
+    c.set_power_budget(root, Some(180.0)).unwrap();
+    c.submit(JobSpec::cpu("root", "az5-a890m", 4, 600), SimTime::ZERO).unwrap();
+    for t in [30u64, 70, 120] {
+        c.run_until(SimTime::from_secs(t), true);
+    }
+    let report = c.power_report(root).unwrap();
+    assert!(report.governor_ticks > 0, "the cap never engaged");
+
+    // the DQL windowed mean must not touch the sample rings
+    let before = c.sampler().materialized_samples();
+    let (_, out) = c
+        .query(root, "mean(nodes[partition=\"az5-a890m\"].power.watts, window=60s)")
+        .unwrap();
+    let dql_mean_w = scalar(&out);
+    assert_eq!(
+        c.sampler().materialized_samples(),
+        before,
+        "query evaluation materialized samples"
+    );
+
+    // ground truth via the §4.3 measured path: per-node probe energy
+    // over the same [60 s, 120 s] span
+    let span = (SimTime::from_secs(60), SimTime::from_secs(120));
+    let mut measured_j = 0.0;
+    for n in 0..4 {
+        measured_j += c
+            .query_energy(root, Some(&format!("az5-a890m-{n}")), Some(span))
+            .unwrap();
+    }
+    let measured_mean_w = measured_j / (4.0 * 60.0);
+    assert!(measured_mean_w > 0.0, "az5 drew nothing in the window");
+
+    // quantization bound (per tests/streaming_api.rs): one power-LSB
+    // per probe over the span, one 250 µs conversion rectangle per
+    // transition at the worst step height, one trailing sample period
+    // per probe — scaled to a 4-node 60 s mean
+    let probes = 4.0;
+    let lsb = 1e-3;
+    let transitions = (report.governor_ticks as f64) * 4.0 + 64.0;
+    let bound_j = probes * lsb * 60.0 + transitions * 0.25e-3 * 600.0 + probes * lsb * 600.0;
+    let bound_w = bound_j / (4.0 * 60.0);
+    let diff = (dql_mean_w - measured_mean_w).abs();
+    assert!(
+        diff <= bound_w,
+        "DQL mean {dql_mean_w} W vs measured {measured_mean_w} W: |diff| {diff} > {bound_w}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// the legacy aggregate surfaces are DQL sugar — pinned bit-equal
+// ---------------------------------------------------------------------------
+
+#[test]
+fn legacy_aggregates_pin_to_their_dql_expressions() {
+    let mut c = cluster();
+    let root = c.login("root").unwrap();
+    c.set_power_budget(root, Some(200.0)).unwrap();
+    c.submit(job("root", "az5-a890m", 300), SimTime::ZERO).unwrap();
+    c.submit(job("root", "az4-a7900", 200), SimTime::ZERO).unwrap();
+    c.run_until(SimTime::from_mins(8), true);
+
+    // QueryEnergy == sum(nodes.*.measured.energy_j), bit-for-bit
+    let legacy = c.query_energy(root, None, None).unwrap();
+    let (_, out) = c.query(root, "sum(nodes.*.measured.energy_j)").unwrap();
+    assert_eq!(legacy.to_bits(), scalar(&out).to_bits());
+    // per-node form too
+    let legacy1 = c.query_energy(root, Some("az5-a890m-1"), None).unwrap();
+    let (_, out1) = c.query(root, "sum(nodes.az5-a890m-1.measured.energy_j)").unwrap();
+    assert_eq!(legacy1.to_bits(), scalar(&out1).to_bits());
+
+    // power_report fields == the expressions they desugar to
+    let rep = c.power_report(root).unwrap();
+    let (_, w) = c.query(root, "cluster.watts").unwrap();
+    assert_eq!(rep.cluster_w.to_bits(), scalar(&w).to_bits());
+    let (_, capped) = c.query(root, "count(nodes[capped=true])").unwrap();
+    assert_eq!(rep.capped_nodes, scalar(&capped) as u32);
+    let window = format!("sum(nodes.*.power.watts, window={}s)", rep.window_s as u64);
+    let (_, rolling) = c.query(root, &window).unwrap();
+    assert_eq!(rep.rolling_w.to_bits(), scalar(&rolling).to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// standing queries: deterministic replay under a multi-client storm
+// ---------------------------------------------------------------------------
+
+fn storm_with_standing_queries(seed: u64) -> String {
+    let mut server = ApiServer::new(cluster());
+    server.connect("root").unwrap();
+    for k in 1..6 {
+        server.connect(&format!("user{k}")).unwrap();
+    }
+    // prologue: the operator stands a cadenced cluster-watts query,
+    // user1 stands an edge-triggered (rate-less) count of their jobs
+    server.enqueue(0, Request::SetPowerBudget { watts: Some(700.0) });
+    server.enqueue(
+        0,
+        Request::Subscribe {
+            channel: Channel::QueryEvents,
+            rate_hz: Some(0.05),
+            expr: Some("sum(nodes.*.power.watts)".into()),
+        },
+    );
+    server.enqueue(
+        1,
+        Request::Subscribe {
+            channel: Channel::QueryEvents,
+            rate_hz: None,
+            expr: Some("count(jobs[state=\"completed\"])".into()),
+        },
+    );
+    server.drain();
+    let mut gen = TraceGen::dalek_mix(seed);
+    gen.jobs_per_hour = 600.0;
+    let storm = gen.client_storm(6, 120);
+    server.run_storm(&storm);
+    let settle_to = server.cluster.now() + SimTime::from_mins(30);
+    server.settle(settle_to);
+    // final explicit polls so the standing-query deltas land in the
+    // transcript whatever the seeded request mix polled
+    server.enqueue(0, Request::PollEvents { max: 10_000 });
+    server.enqueue(1, Request::PollEvents { max: 10_000 });
+    server.drain();
+    server.transcript_digest()
+}
+
+#[test]
+fn standing_queries_replay_bit_identically() {
+    let a = storm_with_standing_queries(0xDA1EC);
+    let b = storm_with_standing_queries(0xDA1EC);
+    assert_eq!(a, b, "standing-query transcripts diverged across replays");
+    // the channel genuinely carried deltas
+    assert!(a.contains("\"event\":\"query\""), "no standing-query events fired");
+    let c = storm_with_standing_queries(0xBEEF);
+    assert_ne!(a, c, "different seeds must produce different storms");
+}
+
+#[test]
+fn standing_query_protocol_edges() {
+    let mut c = cluster();
+    let root = c.login("root").unwrap();
+    // query_events without an expression is a typed refusal
+    let err = c
+        .handle(
+            Some(root),
+            &Request::Subscribe { channel: Channel::QueryEvents, rate_hz: None, expr: None },
+        )
+        .unwrap_err();
+    assert!(matches!(err, DalekError::BadRequest(_)), "got {err:?}");
+    // an expression on any other channel is a typed refusal
+    let err = c
+        .handle(
+            Some(root),
+            &Request::Subscribe {
+                channel: Channel::Telemetry,
+                rate_hz: Some(1.0),
+                expr: Some("cluster.watts".into()),
+            },
+        )
+        .unwrap_err();
+    assert!(matches!(err, DalekError::BadRequest(_)), "got {err:?}");
+    // a malformed standing expression fails at registration time
+    let err = c.subscribe_query(root, "sum(", Some(1.0)).unwrap_err();
+    assert!(matches!(err, DalekError::InvalidQuery(_)), "got {err:?}");
+    // unsubscribe clears the standing set; re-registering works
+    c.subscribe_query(root, "cluster.watts", Some(1.0)).unwrap();
+    c.unsubscribe(root, Channel::QueryEvents).unwrap();
+    c.subscribe_query(root, "cluster.watts", None).unwrap();
+}

@@ -53,6 +53,7 @@ fn storm_run(seed: u64) -> (String, String) {
         dalek::api::Request::Subscribe {
             channel: Channel::PowerEvents,
             rate_hz: None,
+            expr: None,
         },
     );
     server.enqueue(
@@ -60,6 +61,7 @@ fn storm_run(seed: u64) -> (String, String) {
         dalek::api::Request::Subscribe {
             channel: Channel::JobEvents,
             rate_hz: None,
+            expr: None,
         },
     );
     server.enqueue(1, dalek::api::Request::RunJob(req("az5-a890m", 2, 120)));
@@ -211,6 +213,7 @@ fn storm_mixes_tickets_with_salloc_and_teardown() {
         dalek::api::Request::Subscribe {
             channel: Channel::JobEvents,
             rate_hz: None,
+            expr: None,
         },
     );
     server.enqueue(a, dalek::api::Request::AllocNodes(req("iml-ia770", 2, 3600)));
