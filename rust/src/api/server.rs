@@ -20,7 +20,7 @@
 //! contract every later scale-out layer (sharding, remote transports)
 //! must preserve.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 use super::cluster_api::ClusterApi;
 use super::error::DalekError;
@@ -52,6 +52,15 @@ pub struct Client {
 pub struct ApiServer {
     pub cluster: ClusterApi,
     clients: Vec<Client>,
+    /// sparse ready-set: exactly the client indices whose queue is
+    /// nonempty, in ascending (= connect) order. Serving a request can
+    /// never enqueue one, so a drain only ever shrinks this set — the
+    /// snapshot taken at drain start covers every client the drain can
+    /// legally touch, and iterating it in order reproduces the dense
+    /// full-scan round-robin with the empty-queue no-ops elided.
+    ready: BTreeSet<usize>,
+    /// maintained mirror of the summed queue lengths
+    queued: usize,
 }
 
 impl ApiServer {
@@ -59,6 +68,8 @@ impl ApiServer {
         Self {
             cluster,
             clients: Vec::new(),
+            ready: BTreeSet::new(),
+            queued: 0,
         }
     }
 
@@ -92,11 +103,18 @@ impl ApiServer {
     /// Queue one request on a client (FIFO; served at the next drain).
     pub fn enqueue(&mut self, client: usize, req: Request) {
         self.clients[client].queue.push_back(req);
+        self.ready.insert(client);
+        self.queued += 1;
     }
 
     /// Queued-but-unserved request count across all clients.
     pub fn backlog(&self) -> usize {
-        self.clients.iter().map(|c| c.queue.len()).sum()
+        debug_assert_eq!(
+            self.queued,
+            self.clients.iter().map(|c| c.queue.len()).sum::<usize>(),
+            "maintained backlog counter diverged from the queue scan"
+        );
+        self.queued
     }
 
     /// One drain: round-robin over the clients in connect order, one
@@ -104,28 +122,50 @@ impl ApiServer {
     /// every client exhausted its per-drain budget. Requests past the
     /// budget stay queued for the next drain — rate limiting delays,
     /// it never drops.
+    ///
+    /// Only the sparse ready-set is walked: per round the serve order
+    /// is the ascending-index subsequence of clients holding requests,
+    /// which is exactly the dense 0..n scan minus its no-op visits —
+    /// same serves, same order, same transcripts.
     pub fn drain(&mut self) {
-        let mut budget: Vec<u32> = self.clients.iter().map(|c| c.ops_per_drain).collect();
-        loop {
-            let mut progressed = false;
-            for ci in 0..self.clients.len() {
-                if budget[ci] == 0 {
-                    continue;
-                }
-                let Some(req) = self.clients[ci].queue.pop_front() else {
-                    continue;
-                };
-                budget[ci] -= 1;
-                progressed = true;
+        debug_assert!(self
+            .ready
+            .iter()
+            .all(|&ci| !self.clients[ci].queue.is_empty()));
+        debug_assert!((0..self.clients.len())
+            .all(|ci| self.clients[ci].queue.is_empty() || self.ready.contains(&ci)));
+        // budget snapshot at drain start, as in the dense scan: a
+        // mid-drain SetRateLimit changes `ops_per_drain` for *future*
+        // drains only
+        let mut active: Vec<usize> = self.ready.iter().copied().collect();
+        let mut budget: Vec<u32> = active
+            .iter()
+            .map(|&ci| self.clients[ci].ops_per_drain)
+            .collect();
+        while !active.is_empty() {
+            let mut next_active = Vec::with_capacity(active.len());
+            let mut next_budget = Vec::with_capacity(active.len());
+            for (k, &ci) in active.iter().enumerate() {
+                let req = self.clients[ci]
+                    .queue
+                    .pop_front()
+                    .expect("ready clients hold at least one request");
+                self.queued -= 1;
                 let resp = self.execute(ci, &req);
                 let line = resp.to_json().to_string();
                 let c = &mut self.clients[ci];
                 c.transcript.push(line);
                 c.served += 1;
+                let left = budget[k] - 1;
+                if self.clients[ci].queue.is_empty() {
+                    self.ready.remove(&ci);
+                } else if left > 0 {
+                    next_active.push(ci);
+                    next_budget.push(left);
+                }
             }
-            if !progressed {
-                break;
-            }
+            active = next_active;
+            budget = next_budget;
         }
     }
 
@@ -296,6 +336,33 @@ mod tests {
         s.drain();
         assert_eq!(s.client(a).ops_per_drain, before, "no self-service limits");
         assert!(s.client(a).transcript[0].contains("restricted to administrators"));
+    }
+
+    #[test]
+    fn sparse_ready_set_serves_only_loaded_clients() {
+        let mut s = server();
+        let ids: Vec<usize> = (0..8).map(|i| s.connect(&format!("u{i}")).unwrap()).collect();
+        // scattered load: most clients stay idle and are never visited
+        s.enqueue(ids[6], Request::ClusterReport);
+        s.enqueue(ids[1], Request::ClusterReport);
+        s.enqueue(ids[1], Request::ClusterReport);
+        s.enqueue(ids[3], Request::ClusterReport);
+        assert_eq!(s.backlog(), 4);
+        s.drain();
+        assert_eq!(s.backlog(), 0);
+        for (i, &c) in ids.iter().enumerate() {
+            let want = match i {
+                1 => 2,
+                3 | 6 => 1,
+                _ => 0,
+            };
+            assert_eq!(s.client(c).served, want, "client {i}");
+        }
+        // a later enqueue re-readies the client
+        s.enqueue(ids[3], Request::ClusterReport);
+        s.drain();
+        assert_eq!(s.client(ids[3]).served, 2);
+        assert_eq!(s.backlog(), 0);
     }
 
     #[test]

@@ -10,8 +10,14 @@
 //!
 //! Baselines flagged `"provisional": true` are bootstrap placeholders
 //! (written before numbers existed for the canonical machine): `--check`
-//! reports and skips them instead of comparing. Regenerate real ones
+//! refuses them outright — a provisional baseline means the regression
+//! gate is vacuous, which is itself a failure. Regenerate real ones
 //! with `dalek bench perf --quick --out ..` from `rust/` and commit.
+//!
+//! Independently of baselines, every case carries a hard wall-time
+//! ceiling ([`wall_ceiling_secs`]) enforced by [`run`]: a reverted
+//! index or an accidentally quadratic hot path fails the bench even
+//! when no baseline is present to compare against.
 
 use crate::api::{ApiServer, ClusterApi};
 use crate::config::ClusterConfig;
@@ -29,8 +35,30 @@ use std::path::{Path, PathBuf};
 /// `--check` treats as a regression (15%).
 pub const REGRESSION_TOLERANCE: f64 = 0.15;
 
-/// The four perf cases, in run order.
-pub const CASES: [&str; 4] = ["sampling", "scheduler", "api_throughput", "query_eval"];
+/// The five perf cases, in run order.
+pub const CASES: [&str; 5] = [
+    "sampling",
+    "scheduler",
+    "api_throughput",
+    "query_eval",
+    "fleet_storm",
+];
+
+/// Hard per-case wall-time ceiling in seconds, enforced by [`run`] as a
+/// failure even without a baseline. Ceilings are deliberately generous
+/// (an order of magnitude over healthy numbers): they exist to catch a
+/// reverted index degenerating into a linear scan, not scheduler jitter.
+pub fn wall_ceiling_secs(name: &str, quick: bool) -> f64 {
+    let quick_s = match name {
+        "fleet_storm" => 120.0,
+        _ => 60.0,
+    };
+    if quick {
+        quick_s
+    } else {
+        quick_s * 5.0
+    }
+}
 
 /// Options for one `dalek bench perf` invocation.
 pub struct PerfOpts {
@@ -99,6 +127,7 @@ impl PerfRecord {
 pub fn run(opts: &PerfOpts) -> Result<Vec<PerfRecord>, String> {
     let mode = if opts.quick { "quick" } else { "full" };
     let mut records = Vec::new();
+    let mut ceiling_failures = Vec::new();
     for name in CASES {
         println!("perf/{name} ({mode}) ...");
         let rec = match name {
@@ -106,6 +135,7 @@ pub fn run(opts: &PerfOpts) -> Result<Vec<PerfRecord>, String> {
             "scheduler" => case_scheduler(opts.quick),
             "api_throughput" => case_api_throughput(opts.quick),
             "query_eval" => case_query_eval(opts.quick),
+            "fleet_storm" => case_fleet_storm(opts.quick),
             _ => unreachable!("CASES is exhaustive"),
         };
         let rate = rec
@@ -117,6 +147,13 @@ pub fn run(opts: &PerfOpts) -> Result<Vec<PerfRecord>, String> {
             "  wall p50: {}{rate}",
             crate::util::units::secs(rec.wall_ns_p50 / 1e9)
         );
+        let ceiling = wall_ceiling_secs(name, opts.quick);
+        if rec.wall_ns_p50 / 1e9 > ceiling {
+            ceiling_failures.push(format!(
+                "{name}: p50 {} exceeds the hard {mode}-mode ceiling of {ceiling} s",
+                crate::util::units::secs(rec.wall_ns_p50 / 1e9)
+            ));
+        }
         records.push(rec);
     }
 
@@ -129,6 +166,13 @@ pub fn run(opts: &PerfOpts) -> Result<Vec<PerfRecord>, String> {
         }
     }
 
+    if !ceiling_failures.is_empty() {
+        return Err(format!(
+            "perf wall-time ceilings exceeded:\n  {}",
+            ceiling_failures.join("\n  ")
+        ));
+    }
+
     if let Some(dir) = &opts.baseline {
         check_against(&records, dir)?;
     }
@@ -136,8 +180,9 @@ pub fn run(opts: &PerfOpts) -> Result<Vec<PerfRecord>, String> {
 }
 
 /// Compare fresh records against `BENCH_<name>.json` files in `dir`.
-/// Missing, provisional, or mode-mismatched baselines are reported and
-/// skipped (the gate arms itself once real baselines are committed).
+/// Missing or mode-mismatched baselines are reported and skipped;
+/// provisional baselines are refused — a placeholder disarms the
+/// regression gate, which is itself a failure.
 pub fn check_against(records: &[PerfRecord], dir: &Path) -> Result<(), String> {
     let mut failures = Vec::new();
     for rec in records {
@@ -151,7 +196,11 @@ pub fn check_against(records: &[PerfRecord], dir: &Path) -> Result<(), String> {
         };
         let base = Json::parse(&raw).map_err(|e| format!("parse {}: {e:?}", path.display()))?;
         if base.get("provisional").and_then(Json::as_bool) == Some(true) {
-            println!("check perf/{}: baseline is provisional (bootstrap) — skipped", rec.name);
+            failures.push(format!(
+                "{}: baseline is a provisional placeholder — record real numbers \
+                 (`dalek bench perf --quick --out ..` from rust/) and commit them",
+                rec.name
+            ));
             continue;
         }
         let base_mode = base.get("mode").and_then(Json::as_str).unwrap_or("full");
@@ -307,6 +356,36 @@ fn case_query_eval(quick: bool) -> PerfRecord {
         .metric("evals_per_sec", benchkit::per_sec(&r, exprs.len() as f64))
 }
 
+/// The fleet storm: a [`ClusterConfig::fleet`] cluster (10k nodes in
+/// full mode) under a compressed multi-session request storm — the
+/// end-to-end proof that placement, power accounting, flow rates, the
+/// session multiplexer, and the event queue stay indexed at fleet
+/// scale. Wall time here is the acceptance metric, backed by the
+/// [`wall_ceiling_secs`] hard limit.
+fn case_fleet_storm(quick: bool) -> PerfRecord {
+    let (nodes, jobs, sessions, warmup, iters) = if quick {
+        (400u32, 2_000usize, 64usize, 0, 2)
+    } else {
+        (10_000, 100_000, 1_000, 0, 2)
+    };
+    let mut gen = TraceGen::dalek_mix(0xF1EE7);
+    let storm = gen.fleet_storm(nodes, jobs, sessions);
+    let r = benchkit::bench("perf/fleet_storm", warmup, iters, || {
+        let cluster = ClusterApi::new(ClusterConfig::fleet(nodes), None).expect("cluster");
+        let mut server = ApiServer::new(cluster);
+        server.connect("root").expect("root session");
+        for k in 1..sessions {
+            server.connect(&format!("user{k}")).expect("user session");
+        }
+        server.run_storm(&storm);
+        let settle = server.cluster.now() + SimTime::from_hours(2);
+        server.settle(settle);
+        std::hint::black_box(server.transcript_digest().len());
+    });
+    PerfRecord::from_bench("fleet_storm", mode_str(quick), &r)
+        .metric("requests_per_sec", benchkit::per_sec(&r, jobs as f64))
+}
+
 /// A synthetic `n`-node cluster tree: 16 partitions, deterministic
 /// per-node watts, every third node capped.
 pub fn synthetic_tree(n: usize) -> MemTree {
@@ -352,7 +431,7 @@ mod tests {
     }
 
     #[test]
-    fn check_skips_provisional_and_flags_regressions() {
+    fn check_refuses_provisional_and_flags_regressions() {
         let dir = std::env::temp_dir().join(format!("dalek-perf-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let rec = |p50: f64| PerfRecord {
@@ -366,13 +445,14 @@ mod tests {
         };
         let path = dir.join("BENCH_scheduler.json");
 
-        // provisional baseline: skipped, never a failure
+        // provisional baseline: the gate would be vacuous — refused
         std::fs::write(
             &path,
             r#"{"name":"scheduler","mode":"quick","wall_ns_p50":1.0,"provisional":true}"#,
         )
         .unwrap();
-        assert!(check_against(&[rec(1.0e9)], &dir).is_ok());
+        let err = check_against(&[rec(1.0e9)], &dir).unwrap_err();
+        assert!(err.contains("provisional"), "{err}");
 
         // real baseline: within tolerance passes, beyond fails
         std::fs::write(
@@ -389,6 +469,18 @@ mod tests {
         assert!(check_against(&[rec(1.0e9)], &dir).is_ok());
 
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wall_ceilings_cover_every_case() {
+        for name in CASES {
+            for quick in [true, false] {
+                assert!(wall_ceiling_secs(name, quick) > 0.0);
+            }
+        }
+        // the fleet storm gets more headroom, full mode more than quick
+        assert!(wall_ceiling_secs("fleet_storm", true) > wall_ceiling_secs("scheduler", true));
+        assert!(wall_ceiling_secs("fleet_storm", false) > wall_ceiling_secs("fleet_storm", true));
     }
 
     #[test]

@@ -132,6 +132,23 @@ impl ClusterConfig {
         }
     }
 
+    /// A fleet-scale deployment: the paper's four catalog partitions
+    /// scaled out to `total_nodes` compute nodes (remainder nodes go to
+    /// the leading partitions). Addressing past each rack's /27 block
+    /// comes from the fleet extension ranges in
+    /// [`SubnetPlan::node_ip`](crate::net::addr::SubnetPlan::node_ip).
+    pub fn fleet(total_nodes: u32) -> Self {
+        assert!(total_nodes >= 4, "a fleet has at least one node per partition");
+        let mut cfg = Self::dalek_default();
+        cfg.name = format!("dalek-fleet-{total_nodes}");
+        let per = total_nodes / 4;
+        let extra = (total_nodes % 4) as usize;
+        for (i, p) in cfg.partitions.iter_mut().enumerate() {
+            p.nodes = per + u32::from(i < extra);
+        }
+        cfg
+    }
+
     /// Parse from the TOML-subset format. Missing sections fall back to
     /// the paper's defaults; unknown partition names are rejected here
     /// (they could not be resolved against the hw catalog later).
@@ -237,6 +254,23 @@ mod tests {
         assert_eq!(c.power.suspend_after, SimTime::from_mins(10));
         assert_eq!(c.power.max_boot_delay, SimTime::from_mins(2));
         assert_eq!(c.network_base, [192, 168, 1]);
+    }
+
+    #[test]
+    fn fleet_scales_partitions_evenly() {
+        let c = ClusterConfig::fleet(10_000);
+        assert_eq!(c.total_nodes(), 10_000);
+        assert!(c.partitions.iter().all(|p| p.nodes == 2_500));
+        let c = ClusterConfig::fleet(10);
+        assert_eq!(c.total_nodes(), 10);
+        assert_eq!(
+            c.partitions.iter().map(|p| p.nodes).collect::<Vec<_>>(),
+            vec![3, 3, 2, 2]
+        );
+        // rack-sized fleet is the paper deployment with another name
+        let mut c = ClusterConfig::fleet(16);
+        c.name = "dalek".into();
+        assert_eq!(c, ClusterConfig::dalek_default());
     }
 
     #[test]

@@ -271,6 +271,58 @@ impl TraceGen {
         }
         out
     }
+
+    /// Generate a fleet-scale request storm for a
+    /// [`ClusterConfig::fleet(nodes)`](crate::config::ClusterConfig::fleet)
+    /// cluster: `sessions` concurrent clients firing `jobs` arrivals —
+    /// mostly short plain submissions over the four scaled catalog
+    /// partitions, with srun tickets, job lookups, event polls, and
+    /// cluster reports mixed in. Arrivals are compressed into a fixed
+    /// ~20-sim-minute window regardless of `jobs`, so the drained
+    /// makespan (and the per-second prober sweeps riding it) stays
+    /// bounded as the storm grows. Entirely RNG-driven off `self.rng`:
+    /// the same seed replays bit-for-bit.
+    pub fn fleet_storm(&mut self, nodes: u32, jobs: usize, sessions: usize) -> Vec<StormEvent> {
+        assert!(sessions >= 2, "a storm needs an operator and at least one user");
+        assert!(nodes >= 4, "one node per catalog partition at minimum");
+        let parts = ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"];
+        let window_s = 1_200.0;
+        let rate = jobs as f64 / window_s; // arrivals per sim-second
+        let mut out = Vec::with_capacity(jobs);
+        let mut t = 0.0f64;
+        for _ in 0..jobs {
+            t += self.rng.exponential(rate);
+            let client = self.rng.uniform_u64(0, sessions as u64 - 1) as usize;
+            let part = parts[self.rng.uniform_u64(0, 3) as usize];
+            let job_req = |rng: &mut Xoshiro256| JobRequest {
+                partition: part.into(),
+                nodes: 1 + rng.uniform_u64(0, 3) as u32,
+                duration: SimTime::from_secs_f64(60.0 + rng.uniform_f64(0.0, 120.0)),
+                time_limit: None,
+                payload: None,
+                iters: 1,
+                user: None,
+                app: None,
+            };
+            let request = match self.rng.uniform_u64(0, 9) {
+                0..=5 => Request::SubmitJob(job_req(&mut self.rng)),
+                6 => Request::RunJob(job_req(&mut self.rng)),
+                7 => Request::JobInfo {
+                    job: JobId(1 + self.rng.uniform_u64(0, jobs as u64)),
+                },
+                8 => Request::PollEvents {
+                    max: 1 + self.rng.uniform_u64(0, 63) as u32,
+                },
+                _ => Request::ClusterReport,
+            };
+            out.push(StormEvent {
+                at: SimTime::from_secs_f64(t),
+                client,
+                request,
+            });
+        }
+        out
+    }
 }
 
 /// One operator-plane arrival (client 0): budget moves, power-events
@@ -500,6 +552,73 @@ mod tests {
         assert!(tickets > 5, "{tickets} srun tickets");
         assert!(subs > 2, "{subs} subscriptions");
         assert!(admin > 0, "{admin} operator ops");
+    }
+
+    #[test]
+    fn fleet_storm_is_deterministic_and_well_formed() {
+        let a = TraceGen::dalek_mix(29).fleet_storm(10_000, 2_000, 64);
+        let b = TraceGen::dalek_mix(29).fleet_storm(10_000, 2_000, 64);
+        assert_eq!(a.len(), 2_000);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.client, y.client);
+            assert_eq!(x.request, y.request);
+        }
+        let mut submits = 0;
+        let mut tickets = 0;
+        let mut reports = 0;
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        for ev in &a {
+            assert!(ev.client < 64);
+            match &ev.request {
+                Request::SubmitJob(r) => {
+                    assert!((1..=4).contains(&r.nodes));
+                    submits += 1;
+                }
+                Request::RunJob(_) => tickets += 1,
+                Request::ClusterReport => reports += 1,
+                _ => {}
+            }
+        }
+        assert!(submits > 1_000, "{submits} submissions");
+        assert!(tickets > 50, "{tickets} srun tickets");
+        assert!(reports > 50, "{reports} reports");
+        // the arrival window is compressed: bounded regardless of size
+        assert!(a.last().unwrap().at < SimTime::from_mins(40));
+    }
+
+    #[test]
+    fn zero_app_fraction_consumes_no_rng() {
+        // replay the classic draw sequence by hand: if a zero
+        // app_fraction (or an empty payload mix) consumed an RNG draw,
+        // every subsequent field would shift off this transcript
+        let mut g = TraceGen::powercap_mix(41); // payloads empty, apps off
+        assert_eq!(g.app_fraction, 0.0);
+        let t = g.generate(30);
+        let probe = TraceGen::powercap_mix(41);
+        let mut rng = Xoshiro256::new(41);
+        let mut at = 0.0f64;
+        for ev in &t {
+            at += rng.exponential(240.0 / 3600.0);
+            let (part, max_nodes) = rng.choose(&probe.partitions).clone();
+            let nodes = 1 + rng.uniform_u64(0, max_nodes as u64 - 1) as u32;
+            let dur_s = 30.0 + rng.exponential(1.0 / 240.0);
+            let cpu = rng.uniform_f64(0.6, 1.0);
+            let dgpu = if probe.gpu_partitions.contains(&part) {
+                rng.uniform_f64(0.7, 1.0)
+            } else {
+                0.0
+            };
+            assert_eq!(ev.at, SimTime::from_secs_f64(at));
+            assert_eq!(ev.spec.partition, part);
+            assert_eq!(ev.spec.nodes, nodes);
+            assert_eq!(ev.spec.duration, SimTime::from_secs_f64(dur_s));
+            assert_eq!(ev.spec.activity.cpu, cpu);
+            assert_eq!(ev.spec.activity.dgpu, dgpu);
+            assert!(ev.spec.app.is_none());
+        }
     }
 
     #[test]

@@ -98,9 +98,18 @@ impl SubnetPlan {
     }
 
     /// Compute node `n` of partition `idx` (contiguous from the first).
-    pub fn node_ip(&self, idx: u8, n: u8) -> Ipv4 {
-        assert!(n < 30, "node index out of /27 host range");
-        self.ip(self.partition_first(idx) + n)
+    ///
+    /// The first 30 nodes live in the partition's Listing-1 /27 rack
+    /// block; fleet-scale nodes beyond that spill into a per-partition
+    /// `10.(16+idx).0.0/16` block, disjoint from any `192.168.*` rack
+    /// base, so rack-sized configs keep their Table-3 addresses
+    /// bit-identically.
+    pub fn node_ip(&self, idx: u8, n: u16) -> Ipv4 {
+        if n < 30 {
+            self.ip(self.partition_first(idx) + n as u8)
+        } else {
+            Ipv4([10, 16u8.wrapping_add(idx), (n >> 8) as u8, (n & 0xff) as u8])
+        }
     }
 
     /// The partition's Raspberry Pi: last usable address of the block.
@@ -125,6 +134,13 @@ impl SubnetPlan {
 
     /// Which partition block a host address belongs to, if any.
     pub fn partition_of(&self, ip: Ipv4) -> Option<u8> {
+        // fleet extension blocks: 10.(16+idx).0.0/16, host ≥ 30
+        if ip.0[0] == 10 && (16..=19).contains(&ip.0[1]) {
+            let n = ((ip.0[2] as u16) << 8) | ip.0[3] as u16;
+            if n >= 30 {
+                return Some(ip.0[1] - 16);
+            }
+        }
         if ip.0[0] != self.base[0] || ip.0[1] != self.base[1] || ip.0[2] != self.base[2] {
             return None;
         }
@@ -179,7 +195,7 @@ mod tests {
         let p = plan();
         let mut seen = std::collections::HashSet::new();
         for idx in 0..4u8 {
-            for n in 0..30u8 {
+            for n in 0..30u16 {
                 assert!(seen.insert(p.node_ip(idx, n)), "overlap at {idx}/{n}");
             }
         }
@@ -189,7 +205,7 @@ mod tests {
     fn partition_of_inverts_node_ip() {
         let p = plan();
         for idx in 0..4u8 {
-            for n in 0..4u8 {
+            for n in 0..4u16 {
                 assert_eq!(p.partition_of(p.node_ip(idx, n)), Some(idx));
             }
             assert_eq!(p.partition_of(p.rpi_ip(idx)), Some(idx));
@@ -199,9 +215,25 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "host range")]
-    fn node_index_bounded() {
-        plan().node_ip(0, 30);
+    fn fleet_extension_beyond_rack_block() {
+        let p = plan();
+        // node 30+ spills into the per-partition 10.(16+idx).0.0/16
+        assert_eq!(p.node_ip(0, 30), Ipv4::new(10, 16, 0, 30));
+        assert_eq!(p.node_ip(1, 30), Ipv4::new(10, 17, 0, 30));
+        assert_eq!(p.node_ip(2, 2500), Ipv4::new(10, 18, 9, 196));
+        // no overlap with rack blocks, rpis, or each other
+        let mut seen = std::collections::HashSet::new();
+        for idx in 0..4u8 {
+            for n in 0..600u16 {
+                assert!(seen.insert(p.node_ip(idx, n)), "overlap at {idx}/{n}");
+            }
+            assert!(seen.insert(p.rpi_ip(idx)));
+            // inversion holds in both regimes
+            assert_eq!(p.partition_of(p.node_ip(idx, 0)), Some(idx));
+            assert_eq!(p.partition_of(p.node_ip(idx, 599)), Some(idx));
+        }
+        assert!(seen.insert(p.frontend_ip()));
+        assert!(seen.insert(p.switch_ip()));
     }
 
     #[test]

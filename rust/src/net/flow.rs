@@ -53,7 +53,7 @@
 //! down because collective phases create and drop flows far more often
 //! than PXE/NFS ever did.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::topology::{HostId, Topology};
 use crate::sim::{Kernel, ScheduledId, SimTime};
@@ -187,7 +187,7 @@ impl FlowNet {
                 tag,
             },
         );
-        self.recompute_rates();
+        self.recompute_after_change(src, dst);
         id
     }
 
@@ -253,7 +253,7 @@ impl FlowNet {
         let f = self.flows.remove(&id)?;
         let dur = self.now.since(f.started);
         self.completed_flows += 1;
-        self.recompute_rates();
+        self.recompute_after_change(f.src, f.dst);
         Some((f.remaining_bits.max(0.0) / 8.0, dur))
     }
 
@@ -333,9 +333,10 @@ impl FlowNet {
     ) -> bool {
         let now = kernel.now().max(self.now);
         self.advance_to(now);
-        let existed = self.flows.remove(&id).is_some();
-        if existed {
-            self.recompute_rates();
+        let removed = self.flows.remove(&id);
+        let existed = removed.is_some();
+        if let Some(f) = removed {
+            self.recompute_after_change(f.src, f.dst);
         }
         // always re-arm: the armed event may point at the removed flow
         self.reschedule(kernel);
@@ -377,8 +378,21 @@ impl FlowNet {
         }
     }
 
-    /// Max-min fair allocation via progressive filling.
+    /// Max-min fair allocation via full global progressive filling —
+    /// the fallback when the fabric might bind, and the ground truth
+    /// the incremental path is checked against.
     fn recompute_rates(&mut self) {
+        let rates = self.rates_naive();
+        for (id, r) in rates {
+            self.flows.get_mut(&id).expect("solved its own flows").rate_bps = r;
+        }
+    }
+
+    /// Side-effect-free global max-min solve (progressive filling) over
+    /// the current flow set. Public so property tests can compare the
+    /// incrementally-maintained rates against a from-scratch recompute
+    /// bit-for-bit.
+    pub fn rates_naive(&self) -> BTreeMap<FlowId, f64> {
         // flows per link
         let mut link_flows: BTreeMap<LinkId, Vec<FlowId>> = BTreeMap::new();
         for (id, f) in &self.flows {
@@ -402,9 +416,8 @@ impl FlowNet {
             .map(|(l, fs)| (*l, fs.len()))
             .collect();
 
-        for f in self.flows.values_mut() {
-            f.rate_bps = 0.0;
-        }
+        let mut rates: BTreeMap<FlowId, f64> =
+            self.flows.keys().map(|id| (*id, 0.0)).collect();
 
         while !unfixed.is_empty() {
             // bottleneck link: minimal fair share among its unfixed flows
@@ -415,6 +428,128 @@ impl FlowNet {
                 .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite"))
                 .expect("some link carries unfixed flows");
             // fix every unfixed flow crossing the bottleneck at `share`
+            let to_fix: Vec<FlowId> = unfixed
+                .iter()
+                .filter(|(_, links)| links.contains(&bl))
+                .map(|(id, _)| *id)
+                .collect();
+            for id in to_fix {
+                let links = unfixed.remove(&id).expect("present");
+                *rates.get_mut(&id).expect("present") = share;
+                for l in links {
+                    *residual.get_mut(&l).expect("present") -= share;
+                    *unfixed_per_link.get_mut(&l).expect("present") -= 1;
+                }
+            }
+        }
+        rates
+    }
+
+    /// Incremental max-min recomputation after one flow arrived at or
+    /// departed from (`src`, `dst`): re-solve only the connected
+    /// component of flows reachable from the changed flow's two NIC
+    /// links — every other flow's bottleneck set is untouched, so its
+    /// rate is already exact.
+    ///
+    /// Soundness of ignoring the shared Fabric link: if the fabric were
+    /// ever selected as a bottleneck, every then-unfixed flow would be
+    /// fixed there and the fabric would saturate — total rate = C_F.
+    /// But each fixed rate never exceeds the flow's min NIC capacity,
+    /// so total rate ≤ Σ min(up, down) caps. When C_F exceeds that sum
+    /// the selection is a contradiction, hence with margin (×2 here, so
+    /// fp rounding can never flip a bottleneck comparison) the fabric
+    /// is provably passive and components interact through nothing.
+    /// Otherwise we fall back to the full global solve.
+    fn recompute_after_change(&mut self, src: HostId, dst: HostId) {
+        let fabric = self.capacity.get(&LinkId::Fabric).copied().unwrap_or(0.0);
+        let nic_min_sum: f64 = self
+            .flows
+            .values()
+            .map(|f| {
+                let up = self.capacity.get(&LinkId::Up(f.src)).copied().unwrap_or(0.0);
+                let down = self
+                    .capacity
+                    .get(&LinkId::Down(f.dst))
+                    .copied()
+                    .unwrap_or(0.0);
+                up.min(down)
+            })
+            .sum();
+        if !(fabric > 2.0 * nic_min_sum) {
+            self.recompute_rates();
+            return;
+        }
+
+        // dirty component: BFS over the link-flow incidence graph from
+        // the changed flow's two links (covers merges on arrival and
+        // both halves of a split on departure)
+        let mut by_link: BTreeMap<LinkId, Vec<FlowId>> = BTreeMap::new();
+        for (id, f) in &self.flows {
+            by_link.entry(LinkId::Up(f.src)).or_default().push(*id);
+            by_link.entry(LinkId::Down(f.dst)).or_default().push(*id);
+        }
+        let mut seen_links = BTreeSet::from([LinkId::Up(src), LinkId::Down(dst)]);
+        let mut queue: Vec<LinkId> = seen_links.iter().copied().collect();
+        let mut dirty: BTreeSet<FlowId> = BTreeSet::new();
+        while let Some(l) = queue.pop() {
+            for &fid in by_link.get(&l).map(Vec::as_slice).unwrap_or_default() {
+                if dirty.insert(fid) {
+                    let f = &self.flows[&fid];
+                    for nl in [LinkId::Up(f.src), LinkId::Down(f.dst)] {
+                        if seen_links.insert(nl) {
+                            queue.push(nl);
+                        }
+                    }
+                }
+            }
+        }
+        self.solve_component(&dirty);
+
+        #[cfg(debug_assertions)]
+        {
+            let naive = self.rates_naive();
+            for (id, f) in &self.flows {
+                debug_assert_eq!(
+                    f.rate_bps.to_bits(),
+                    naive[id].to_bits(),
+                    "incremental rate for {id:?} diverged from the global solve"
+                );
+            }
+        }
+    }
+
+    /// Progressive filling restricted to one closed component (no flow
+    /// outside `subset` crosses any of its links, and the fabric is
+    /// provably passive) — arithmetically identical to the rounds the
+    /// global solve would run for these flows.
+    fn solve_component(&mut self, subset: &BTreeSet<FlowId>) {
+        let mut unfixed: BTreeMap<FlowId, [LinkId; 2]> = subset
+            .iter()
+            .map(|id| {
+                let f = &self.flows[id];
+                (*id, [LinkId::Up(f.src), LinkId::Down(f.dst)])
+            })
+            .collect();
+        let mut unfixed_per_link: BTreeMap<LinkId, usize> = BTreeMap::new();
+        for links in unfixed.values() {
+            for l in links {
+                *unfixed_per_link.entry(*l).or_default() += 1;
+            }
+        }
+        let mut residual: BTreeMap<LinkId, f64> = unfixed_per_link
+            .keys()
+            .map(|l| (*l, self.capacity[l]))
+            .collect();
+        for id in subset {
+            self.flows.get_mut(id).expect("present").rate_bps = 0.0;
+        }
+        while !unfixed.is_empty() {
+            let (bl, share) = residual
+                .iter()
+                .filter(|(l, _)| unfixed_per_link.get(l).copied().unwrap_or(0) > 0)
+                .map(|(l, c)| (*l, c / unfixed_per_link[l] as f64))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite"))
+                .expect("some link carries unfixed flows");
             let to_fix: Vec<FlowId> = unfixed
                 .iter()
                 .filter(|(_, links)| links.contains(&bl))
@@ -706,6 +841,64 @@ mod tests {
         for (l, used) in per_link {
             let cap = n.capacity[&l];
             assert!(used <= cap * (1.0 + 1e-9), "{l:?}: {used} > {cap}");
+        }
+    }
+
+    #[test]
+    fn incremental_component_merge_and_split_match_global_solve() {
+        // two disjoint NIC components; a bridging flow merges them,
+        // then its departure splits them again — at every step the
+        // incrementally maintained rates must equal a from-scratch
+        // global solve bit-for-bit
+        let (t, mut n) = net();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        let c = t.by_name("az4-n4090-2.dalek").unwrap();
+        let d = t.by_name("az4-n4090-3.dalek").unwrap();
+        let check = |n: &FlowNet| {
+            let naive = n.rates_naive();
+            for (id, f) in &n.flows {
+                assert_eq!(f.rate_bps.to_bits(), naive[id].to_bits(), "{id:?}");
+            }
+        };
+        let _ab = n.start_flow(a, b, gb(1)); // component {a->b}
+        let _cd = n.start_flow(c, d, gb(1)); // component {c->d}
+        check(&n);
+        assert!((n.rate(_ab).unwrap() - 2.5e9).abs() < 1.0);
+        assert!((n.rate(_cd).unwrap() - 2.5e9).abs() < 1.0);
+        // bridge shares a's uplink and d's downlink: one component now
+        let bridge = n.start_flow(a, d, gb(1));
+        check(&n);
+        assert!((n.rate(_ab).unwrap() - 1.25e9).abs() < 1.0);
+        assert!((n.rate(bridge).unwrap() - 1.25e9).abs() < 1.0);
+        assert!((n.rate(_cd).unwrap() - 1.25e9).abs() < 1.0);
+        // departure splits again and releases b's downlink
+        let mut kernel: Kernel<NetEvent> = Kernel::new();
+        assert!(n.cancel_flow_on(&mut kernel, bridge));
+        check(&n);
+        assert!((n.rate(_ab).unwrap() - 2.5e9).abs() < 1.0);
+        assert!((n.rate(_cd).unwrap() - 2.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn fabric_bound_fallback_saturates_fabric_exactly() {
+        // shrink the fabric below the NIC demand so the fast path's
+        // passivity condition fails: the global fallback must run and
+        // the fabric becomes the shared bottleneck
+        let (t, mut n) = net();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        let c = t.by_name("az4-n4090-2.dalek").unwrap();
+        let d = t.by_name("az4-n4090-3.dalek").unwrap();
+        n.capacity.insert(LinkId::Fabric, 3.0e9);
+        let f1 = n.start_flow(a, b, gb(1));
+        let f2 = n.start_flow(c, d, gb(1));
+        // disjoint NICs (2.5 G each) but 3 G fabric -> 1.5 G each
+        assert!((n.rate(f1).unwrap() - 1.5e9).abs() < 1.0);
+        assert!((n.rate(f2).unwrap() - 1.5e9).abs() < 1.0);
+        let naive = n.rates_naive();
+        for (id, f) in &n.flows {
+            assert_eq!(f.rate_bps.to_bits(), naive[id].to_bits(), "{id:?}");
         }
     }
 }

@@ -17,7 +17,7 @@ pub struct HostId(pub usize);
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum HostRole {
     Frontend,
-    Compute { partition: u8, node: u8 },
+    Compute { partition: u8, node: u16 },
     Rpi { partition: u8 },
     Switch,
 }
@@ -81,16 +81,23 @@ impl Topology {
             };
             for n in 0..pc.nodes {
                 // Table 3: az4-n4090 on ports 33–36, az4-a7900 37–40, …
-                let port = 33 + (pi as u32) * 4 + n;
+                // Fleet-scale nodes past the physical 4-per-partition
+                // rack rows take unique virtual ports well above the
+                // 48-port switch so Table-3 numbering never collides.
+                let port = if n < 4 {
+                    33 + (pi as u32) * 4 + n
+                } else {
+                    1_000 + (pi as u32) * 100_000 + n
+                };
                 t.add(Host {
                     name: format!("{}-{}.dalek", pc.name, n),
                     role: HostRole::Compute {
                         partition: pc.subnet_index,
-                        node: n as u8,
+                        node: n as u16,
                     },
                     iface: iface.to_string(),
                     nic_hw: Box::leak(hw.to_string().into_boxed_str()),
-                    ip: plan.node_ip(pc.subnet_index, n as u8),
+                    ip: plan.node_ip(pc.subnet_index, n as u16),
                     mac: Mac::from_name(&format!("{}-{}", pc.name, n)),
                     nic_bps: spec.node.nic_bps,
                     switch_ports: vec![port],

@@ -1,16 +1,46 @@
 //! The event queue at the heart of the simulator.
 //!
-//! A classic calendar of (time, sequence, event) entries in a binary
-//! heap. Ties in time break by insertion sequence, so the engine is
-//! deterministic regardless of heap internals. Events can be cancelled
-//! (lazily: a cancelled id is skipped on pop), which the suspend-timer
-//! logic in `power` uses heavily.
+//! A two-tier calendar: a bucketed **near-future band** (fixed-width
+//! time buckets over a sliding window anchored at `now`) in front of a
+//! binary-heap **far tier** for everything beyond the window. Most
+//! simulation events — boot completions, suspend timers, governor
+//! ticks, job completions — land within the band and cost O(1)
+//! amortized to schedule and pop; only long-horizon work (idle
+//! shutdown sweeps, session TTLs) pays the heap's O(log n).
+//!
+//! The ordering contract is unchanged from the plain-heap
+//! implementation: entries pop in `(time, insertion sequence)` order,
+//! so ties in time break by insertion order and the engine is
+//! deterministic regardless of container internals. Events can be
+//! cancelled (lazily: a cancelled id is skipped when encountered),
+//! which the suspend-timer logic in `power` uses heavily.
+//!
+//! Band mechanics: bucket `b` of an event at time `t` is
+//! `t.as_ns() >> BUCKET_SHIFT`; an event is banded iff its bucket lies
+//! within `NUM_BUCKETS` of `now`'s bucket at scheduling time, else it
+//! goes to the far heap. A drain walk (`walk_bno`) advances through
+//! buckets, sorting each bucket once on first touch and thereafter
+//! draining it front-to-back; scheduling into the bucket currently
+//! being drained inserts in sorted position. Because `pop` always
+//! compares the band's head against the far heap's head by the full
+//! `(time, seq)` key, an event that aged from "far" into the window
+//! without migrating still pops in exactly the right order.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::collections::HashSet;
+use std::collections::VecDeque;
 
 use super::time::SimTime;
+
+/// log2 of the band bucket width in ns (2^30 ns ≈ 1.07 s per bucket).
+const BUCKET_SHIFT: u32 = 30;
+/// Buckets in the sliding band window (window ≈ 73 min of sim time).
+const NUM_BUCKETS: usize = 4096;
+
+fn bucket_of(t: SimTime) -> u64 {
+    t.as_ns() >> BUCKET_SHIFT
+}
 
 /// Handle to a scheduled event, usable for cancellation.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
@@ -44,9 +74,19 @@ impl<E> Ord for Entry<E> {
     }
 }
 
-/// Deterministic future-event list.
+/// Deterministic future-event list (bucketed calendar + far heap).
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    /// near-future band: slot `b % NUM_BUCKETS` holds bucket `b`
+    band: Vec<VecDeque<Entry<E>>>,
+    /// entries (live + tombstones) currently sitting in the band
+    band_entries: usize,
+    /// next bucket number the drain walk examines; rewound when an
+    /// event is scheduled into an earlier bucket
+    walk_bno: u64,
+    /// bucket whose slot is currently sorted for in-order draining
+    sorted_bno: Option<u64>,
+    /// events beyond the band window at scheduling time
+    far: BinaryHeap<Entry<E>>,
     /// ids scheduled but not yet fired or cancelled — O(1) cancel checks
     pending: HashSet<ScheduledId>,
     cancelled: HashSet<ScheduledId>,
@@ -64,7 +104,11 @@ impl<E> Default for EventQueue<E> {
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
         Self {
-            heap: BinaryHeap::new(),
+            band: (0..NUM_BUCKETS).map(|_| VecDeque::new()).collect(),
+            band_entries: 0,
+            walk_bno: 0,
+            sorted_bno: None,
+            far: BinaryHeap::new(),
             pending: HashSet::new(),
             cancelled: HashSet::new(),
             now: SimTime::ZERO,
@@ -95,15 +139,28 @@ impl<E> EventQueue<E> {
     /// Schedule `event` at absolute time `at`. Panics if `at` is in the past.
     pub fn schedule_at(&mut self, at: SimTime, event: E) -> ScheduledId {
         assert!(at >= self.now, "cannot schedule into the past ({at:?} < {:?})", self.now);
-        let id = ScheduledId(self.next_seq);
-        self.pending.insert(id);
-        self.heap.push(Entry {
-            at,
-            seq: self.next_seq,
-            id,
-            event,
-        });
+        let seq = self.next_seq;
         self.next_seq += 1;
+        let id = ScheduledId(seq);
+        self.pending.insert(id);
+        let entry = Entry { at, seq, id, event };
+        let bno = bucket_of(at);
+        if bno < bucket_of(self.now) + NUM_BUCKETS as u64 {
+            let slot = (bno % NUM_BUCKETS as u64) as usize;
+            if self.sorted_bno == Some(bno) {
+                // the drain walk is inside this bucket: keep it sorted
+                let pos = self.band[slot].partition_point(|e| (e.at, e.seq) < (at, seq));
+                self.band[slot].insert(pos, entry);
+            } else {
+                self.band[slot].push_back(entry);
+            }
+            self.band_entries += 1;
+            if bno < self.walk_bno {
+                self.walk_bno = bno;
+            }
+        } else {
+            self.far.push(entry);
+        }
         id
     }
 
@@ -122,33 +179,90 @@ impl<E> EventQueue<E> {
         }
     }
 
-    /// Pop the earliest live event, advancing `now` to its timestamp.
-    pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        while let Some(entry) = self.heap.pop() {
-            if self.cancelled.remove(&entry.id) {
+    /// Advance the band walk to its earliest live entry and return that
+    /// entry's `(time, seq)` key; cleans tombstones along the way.
+    fn band_peek_key(&mut self) -> Option<(SimTime, u64)> {
+        while self.band_entries > 0 {
+            let slot = (self.walk_bno % NUM_BUCKETS as u64) as usize;
+            if self.band[slot].is_empty() {
+                self.sorted_bno = None;
+                self.walk_bno += 1;
                 continue;
             }
-            self.pending.remove(&entry.id);
-            debug_assert!(entry.at >= self.now, "time went backwards");
-            self.now = entry.at;
-            self.processed += 1;
-            return Some((entry.at, entry.event));
+            if self.sorted_bno != Some(self.walk_bno) {
+                self.band[slot]
+                    .make_contiguous()
+                    .sort_unstable_by_key(|e| (e.at, e.seq));
+                self.sorted_bno = Some(self.walk_bno);
+            }
+            while let Some(front) = self.band[slot].front() {
+                if self.cancelled.contains(&front.id) {
+                    let e = self.band[slot].pop_front().expect("peeked");
+                    self.cancelled.remove(&e.id);
+                    self.band_entries -= 1;
+                    continue;
+                }
+                if bucket_of(front.at) != self.walk_bno {
+                    // slot wrapped: the front belongs to a later window
+                    // round; this bucket's own entries are exhausted
+                    break;
+                }
+                return Some((front.at, front.seq));
+            }
+            self.sorted_bno = None;
+            self.walk_bno += 1;
         }
         None
     }
 
-    /// Timestamp of the next live event without popping it.
-    pub fn peek_time(&mut self) -> Option<SimTime> {
-        // Drop leading cancelled entries so peek is accurate.
-        while let Some(entry) = self.heap.peek() {
+    /// `(time, seq)` of the far heap's earliest live entry, dropping
+    /// cancelled heads.
+    fn far_peek_key(&mut self) -> Option<(SimTime, u64)> {
+        while let Some(entry) = self.far.peek() {
             if self.cancelled.contains(&entry.id) {
-                let e = self.heap.pop().expect("peeked");
+                let e = self.far.pop().expect("peeked");
                 self.cancelled.remove(&e.id);
             } else {
-                return Some(entry.at);
+                return Some((entry.at, entry.seq));
             }
         }
         None
+    }
+
+    /// Pop the earliest live event, advancing `now` to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let band_key = self.band_peek_key();
+        let far_key = self.far_peek_key();
+        let from_far = match (band_key, far_key) {
+            (None, None) => return None,
+            (Some(_), None) => false,
+            (None, Some(_)) => true,
+            (Some(b), Some(f)) => f < b,
+        };
+        let entry = if from_far {
+            self.far.pop().expect("peeked live far entry")
+        } else {
+            let slot = (self.walk_bno % NUM_BUCKETS as u64) as usize;
+            self.band_entries -= 1;
+            self.band[slot].pop_front().expect("peeked live band entry")
+        };
+        self.pending.remove(&entry.id);
+        debug_assert!(entry.at >= self.now, "time went backwards");
+        self.now = entry.at;
+        self.processed += 1;
+        Some((entry.at, entry.event))
+    }
+
+    /// Timestamp of the next live event without popping it.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        let band_key = self.band_peek_key();
+        let far_key = self.far_peek_key();
+        match (band_key, far_key) {
+            (None, None) => None,
+            (Some(b), None) => Some(b.0),
+            (None, Some(f)) => Some(f.0),
+            (Some(b), Some(f)) => Some(if f < b { f.0 } else { b.0 }),
+        }
     }
 }
 
@@ -257,5 +371,177 @@ mod tests {
         }
         while q.pop().is_some() {}
         assert_eq!(q.processed(), 5);
+    }
+
+    #[test]
+    fn band_and_far_tiers_interleave_correctly() {
+        // far-future events (beyond the ~73 min band window) and
+        // near-future ones must pop in global time order
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime::from_hours(3), "far");
+        q.schedule_at(SimTime::from_secs(30), "near");
+        q.schedule_at(SimTime::from_hours(2), "mid-far");
+        q.schedule_at(SimTime::from_mins(10), "mid-near");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["near", "mid-near", "mid-far", "far"]);
+    }
+
+    #[test]
+    fn far_event_aging_into_band_keeps_insertion_tie_break() {
+        // e1 goes to the far tier (scheduled > window ahead); later,
+        // after time advances, e2 is banded at the *same* timestamp.
+        // e1 has the smaller seq and must pop first.
+        let mut q = EventQueue::new();
+        let t = SimTime::from_hours(2);
+        q.schedule_at(t, "first");
+        q.schedule_at(SimTime::from_hours(1) + SimTime::from_mins(50), "advance");
+        let (_, e) = q.pop().unwrap();
+        assert_eq!(e, "advance");
+        // now ≈ 1h50m: bucket(t) is within the window → banded
+        q.schedule_at(t, "second");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["first", "second"]);
+    }
+
+    #[test]
+    fn walk_rewinds_for_earlier_insert() {
+        // drain walk advances toward a distant banded event, then an
+        // earlier event is scheduled behind the walk position
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime::from_mins(50), "late");
+        q.schedule_at(SimTime::from_secs(1), "early");
+        assert_eq!(q.peek_time(), Some(SimTime::from_secs(1)));
+        let (_, e) = q.pop().unwrap();
+        assert_eq!(e, "early");
+        // the walk scanned toward min 50; rewind it
+        q.schedule_at(SimTime::from_mins(2), "rewound");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["rewound", "late"]);
+    }
+
+    #[test]
+    fn insert_into_bucket_being_drained_stays_sorted() {
+        let mut q = EventQueue::new();
+        // several events in one bucket (same second)
+        for i in 0..4u64 {
+            q.schedule_at(SimTime::from_ms(100 + i), i);
+        }
+        let (_, first) = q.pop().unwrap();
+        assert_eq!(first, 0);
+        // bucket is now sorted + partially drained; insert into it
+        q.schedule_at(SimTime::from_ms(102), 100); // ties at 102 after seq 2
+        q.schedule_at(SimTime::from_ms(101) + SimTime::from_us(500), 200);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 200, 2, 100, 3]);
+    }
+
+    /// Reference model: a flat vector scanned for the `(at, seq)` min.
+    struct NaiveQueue<E> {
+        items: Vec<(SimTime, u64, E)>,
+        now: SimTime,
+        next_seq: u64,
+    }
+
+    impl<E> NaiveQueue<E> {
+        fn new() -> Self {
+            Self { items: Vec::new(), now: SimTime::ZERO, next_seq: 0 }
+        }
+        fn schedule_at(&mut self, at: SimTime, event: E) -> u64 {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.items.push((at, seq, event));
+            seq
+        }
+        fn cancel(&mut self, seq: u64) -> bool {
+            match self.items.iter().position(|(_, s, _)| *s == seq) {
+                Some(i) => {
+                    self.items.remove(i);
+                    true
+                }
+                None => false,
+            }
+        }
+        fn pop(&mut self) -> Option<(SimTime, E)> {
+            let best = self
+                .items
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (at, seq, _))| (*at, *seq))
+                .map(|(i, _)| i)?;
+            let (at, _, e) = self.items.remove(best);
+            self.now = at;
+            Some((at, e))
+        }
+        fn peek_time(&self) -> Option<SimTime> {
+            self.items.iter().map(|(at, seq, _)| (*at, *seq)).min().map(|k| k.0)
+        }
+    }
+
+    #[test]
+    fn differential_fuzz_against_naive_model() {
+        // deterministic xorshift; mixed near/far horizons, ties,
+        // cancels, and interleaved pops must match the naive model
+        let mut rng: u64 = 0x9E3779B97F4A7C15;
+        let mut step = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        let mut q = EventQueue::new();
+        let mut model = NaiveQueue::new();
+        let mut live_ids: Vec<(ScheduledId, u64)> = Vec::new();
+        for _ in 0..4000 {
+            match step() % 10 {
+                0..=5 => {
+                    // horizons from sub-second to multiple hours, with
+                    // deliberate collisions for tie-break coverage
+                    let base = q.now().as_ns();
+                    let delta = match step() % 4 {
+                        0 => step() % 1_000_000_000,              // < 1 s
+                        1 => step() % 60_000_000_000,             // < 1 min
+                        2 => step() % 8_000_000_000_000,          // ~2.2 h (past band)
+                        _ => (step() % 16) * 250_000_000,         // tie-prone grid
+                    };
+                    let at = SimTime::from_ns(base + delta);
+                    let ev = step() % 1000;
+                    let id = q.schedule_at(at, ev);
+                    let seq = model.schedule_at(at, ev);
+                    live_ids.push((id, seq));
+                }
+                6 => {
+                    if !live_ids.is_empty() {
+                        let k = (step() % live_ids.len() as u64) as usize;
+                        let (id, seq) = live_ids.swap_remove(k);
+                        assert_eq!(q.cancel(id), model.cancel(seq));
+                    }
+                }
+                7 => {
+                    assert_eq!(q.peek_time(), model.peek_time());
+                }
+                _ => {
+                    let got = q.pop();
+                    let want = model.pop();
+                    assert_eq!(
+                        got.map(|(t, e)| (t, e)),
+                        want.map(|(t, e)| (t, e)),
+                        "pop diverged from model"
+                    );
+                    if let Some((t, _)) = got {
+                        assert_eq!(q.now(), t);
+                    }
+                }
+            }
+        }
+        // drain both to empty, comparing every remaining pop
+        loop {
+            let got = q.pop();
+            let want = model.pop();
+            assert_eq!(got, want);
+            if got.is_none() {
+                break;
+            }
+        }
+        assert!(q.is_empty());
     }
 }

@@ -248,10 +248,17 @@ impl PowerGovernor {
         };
 
         // feed-forward plan: floors are uncappable, the headroom above
-        // them is split across the busy nodes' nominal demand
-        let nodes = slurm.power_breakdown();
-        let floor: f64 = nodes.iter().map(|n| n.floor_w).sum();
-        let demand: f64 = nodes.iter().map(|n| n.cpu_demand_w + n.gpu_demand_w).sum();
+        // them is split across the busy nodes' nominal demand. The fold
+        // runs over the scheduler's incrementally-maintained NodeDraw
+        // cache in node-index order — the same arithmetic order as the
+        // old full recompute, so the throttle factor is bit-identical —
+        // without re-evaluating any power model.
+        let (floor, demand) = {
+            let draws = slurm.power_draws();
+            let floor: f64 = draws.iter().map(|n| n.floor_w).sum();
+            let demand: f64 = draws.iter().map(|n| n.cpu_demand_w + n.gpu_demand_w).sum();
+            (floor, demand)
+        };
         let headroom = (budget - floor).max(0.0);
         let throttle = if demand <= f64::EPSILON {
             1.0
@@ -266,8 +273,8 @@ impl PowerGovernor {
             // and only if there is anything to release (steady
             // under-budget ticks are free)
             if rolling_w <= budget && slurm.capped_nodes() > 0 {
-                for n in &nodes {
-                    slurm.apply_power_knobs(kernel, n.idx, None, None, false, now);
+                for idx in 0..slurm.node_count() {
+                    slurm.apply_power_knobs(kernel, idx, None, None, false, now);
                 }
                 self.deep = false;
                 self.stats.relaxes += 1;
@@ -276,7 +283,11 @@ impl PowerGovernor {
         }
 
         // caps clamp at their domain floors; if the floor-clamped plan
-        // still overshoots the budget, deep-throttle DVFS as well
+        // still overshoots the budget, deep-throttle DVFS as well.
+        // Actuation deliberately visits every node exactly as before:
+        // each apply is an observable (PowerNotice + energy-settlement
+        // point), so narrowing the loop would change the event stream.
+        let nodes = slurm.power_breakdown();
         let mut projected = floor;
         for n in nodes.iter().filter(|n| n.allocated) {
             let (cmin, cmax) = n.cpu_cap_range;

@@ -33,7 +33,7 @@
 //! jobs genuinely run longer. Completed jobs settle their §6.2 energy
 //! quota with the measured joules their nodes drew while running.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use super::job::{Job, JobId, JobSpec, JobState};
 use super::policy::{self, PlacementPolicy};
@@ -164,7 +164,7 @@ struct NodeEntry {
 /// power-cap governor sees it: the uncappable floor of its current
 /// state plus the nominal (uncapped, base-governor) demand of its
 /// cappable domains.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct NodeDraw {
     pub idx: usize,
     /// a job is running here (only these nodes get capped)
@@ -224,13 +224,81 @@ pub enum SlurmError {
     InvalidApp(String),
 }
 
+/// Per-partition index of claimable nodes, bucketed by the FirstFit
+/// boot-delay class (Idle < Booting < Suspended). Each bucket is an
+/// ordered set of node indexes, so chaining the buckets reproduces the
+/// partition-vector-order stable sort of the old linear scan exactly:
+/// within a class, ascending node index *is* submission/creation order.
+/// Maintained by [`Slurm::reindex_node`] at every membership-affecting
+/// mutation (FSM transition, reservation, allocation).
+#[derive(Default)]
+struct FreeIndex {
+    by_class: [BTreeSet<usize>; 3],
+}
+
+impl FreeIndex {
+    fn len(&self) -> usize {
+        self.by_class.iter().map(|s| s.len()).sum()
+    }
+
+    /// Members in FirstFit preference order (class, then node index).
+    fn first_fit(&self) -> impl Iterator<Item = usize> + '_ {
+        self.by_class.iter().flat_map(|s| s.iter().copied())
+    }
+
+    /// Members in ascending node-index order — the order the old
+    /// linear `claimable` scan produced.
+    fn members_sorted(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.first_fit().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Place `idx` in exactly `class` (or nowhere for `None`).
+    fn set(&mut self, idx: usize, class: Option<usize>) {
+        for (c, s) in self.by_class.iter_mut().enumerate() {
+            if Some(c) == class {
+                s.insert(idx);
+            } else {
+                s.remove(&idx);
+            }
+        }
+    }
+}
+
 /// The controller.
 pub struct Slurm {
     nodes: Vec<NodeEntry>,
     by_partition: BTreeMap<String, Vec<usize>>,
     jobs: BTreeMap<JobId, Job>,
-    /// pending job ids in submission order
-    queue: Vec<JobId>,
+    /// per-partition pending job ids in submission order. Lazily
+    /// cleaned: cancellation/reservation only decrement the counters,
+    /// stale ids are dropped when a scheduling pass next compacts the
+    /// queue — so cancel stays O(1) instead of O(queue).
+    pend_q: BTreeMap<String, VecDeque<JobId>>,
+    /// exact count of Pending jobs per partition (the lazily-cleaned
+    /// queues may still hold ids of jobs that already left Pending)
+    pend_n: BTreeMap<String, usize>,
+    /// total Pending jobs across all partitions
+    pend_total: usize,
+    /// per-partition claimable-node index (see [`FreeIndex`])
+    free_idx: BTreeMap<String, FreeIndex>,
+    /// per-partition projected completion of running jobs for the EASY
+    /// shadow walk: (started + min(duration, time_limit), job) → node
+    /// count. The key is a run-time constant (repricing moves the real
+    /// completion, not the shadow estimate), so entries are inserted at
+    /// start and removed at release/finish.
+    run_ends: BTreeMap<String, BTreeMap<(SimTime, JobId), u32>>,
+    /// node name → index (names are fixed at construction)
+    name_idx: BTreeMap<String, usize>,
+    /// nodes whose §3.6 knobs currently differ from nominal
+    capped: BTreeSet<usize>,
+    /// cached per-node governor ledger ([`NodeDraw`]), refreshed by
+    /// `touch` — the single choke point every watts-affecting mutation
+    /// already flows through. `power_breakdown` is therefore O(changed
+    /// nodes) amortized instead of re-evaluating every power model per
+    /// governor tick.
+    draw_cache: Vec<NodeDraw>,
     /// mirror of the kernel clock: the last time this controller
     /// observed (event dispatch, submission, or an explicit sync). The
     /// kernel is the single authoritative clock.
@@ -294,11 +362,36 @@ impl Slurm {
         } else {
             SchedPolicy::Backfill
         };
-        Self {
+        let name_idx = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.name.clone(), i))
+            .collect();
+        let pend_q = by_partition
+            .keys()
+            .map(|k| (k.clone(), VecDeque::new()))
+            .collect();
+        let pend_n = by_partition.keys().map(|k| (k.clone(), 0)).collect();
+        let free_idx = by_partition
+            .keys()
+            .map(|k| (k.clone(), FreeIndex::default()))
+            .collect();
+        let run_ends = by_partition
+            .keys()
+            .map(|k| (k.clone(), BTreeMap::new()))
+            .collect();
+        let mut s = Self {
             nodes,
             by_partition,
             jobs: BTreeMap::new(),
-            queue: Vec::new(),
+            pend_q,
+            pend_n,
+            pend_total: 0,
+            free_idx,
+            run_ends,
+            name_idx,
+            capped: BTreeSet::new(),
+            draw_cache: Vec::new(),
             clock: SimTime::ZERO,
             next_job: 1,
             transitions: Vec::new(),
@@ -310,6 +403,54 @@ impl Slurm {
             placement: BTreeMap::new(),
             quota: QuotaDb::new(),
             stats: SlurmStats::default(),
+        };
+        for i in 0..s.nodes.len() {
+            s.reindex_node(i);
+        }
+        s.draw_cache = s.power_breakdown_naive();
+        s
+    }
+
+    /// Re-derive one node's membership in its partition's claimable
+    /// index from the current (reserved, running, FSM) facts. Called
+    /// after every mutation of any of those.
+    fn reindex_node(&mut self, idx: usize) {
+        let n = &self.nodes[idx];
+        let class = if n.reserved_for.is_none() && n.running.is_none() {
+            match n.fsm.state() {
+                PowerState::Idle { .. } => Some(0),
+                PowerState::Booting { .. } => Some(1),
+                PowerState::Suspended => Some(2),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        if let Some(fi) = self.free_idx.get_mut(&n.partition) {
+            fi.set(idx, class);
+        }
+    }
+
+    /// Bookkeeping when one job leaves the Pending state (reserved or
+    /// cancelled): its queue entry stays behind and is dropped lazily
+    /// at the next compaction.
+    fn pending_removed(&mut self, part: &str) {
+        if let Some(c) = self.pend_n.get_mut(part) {
+            debug_assert!(*c > 0, "pending counter underflow for {part}");
+            *c = c.saturating_sub(1);
+        }
+        self.pend_total = self.pend_total.saturating_sub(1);
+    }
+
+    /// Remove a running job's EASY shadow-walk entry. The key is the
+    /// same run-time constant `maybe_start` inserted, so this is an
+    /// exact O(log jobs) removal (no-op for jobs that never started).
+    fn drop_run_end(&mut self, id: JobId) {
+        let Some(job) = self.jobs.get(&id) else { return };
+        let Some(started) = job.started else { return };
+        let key = (started + job.spec.duration.min(job.spec.time_limit), id);
+        if let Some(ends) = self.run_ends.get_mut(&job.spec.partition) {
+            ends.remove(&key);
         }
     }
 
@@ -333,7 +474,14 @@ impl Slurm {
     }
 
     pub fn pending_count(&self) -> usize {
-        self.queue.len()
+        debug_assert_eq!(
+            self.pend_total,
+            self.jobs
+                .values()
+                .filter(|j| j.state == JobState::Pending)
+                .count()
+        );
+        self.pend_total
     }
 
     /// Snapshot of one node (energy integrated up to the last observed
@@ -372,15 +520,15 @@ impl Slurm {
 
     /// Queued (pending) jobs targeting one partition.
     pub fn partition_pending(&self, name: &str) -> usize {
-        self.queue
-            .iter()
-            .filter(|id| {
-                self.jobs
-                    .get(id)
-                    .map(|j| j.spec.partition == name)
-                    .unwrap_or(false)
-            })
-            .count()
+        let n = self.pend_n.get(name).copied().unwrap_or(0);
+        debug_assert_eq!(
+            n,
+            self.jobs
+                .values()
+                .filter(|j| j.state == JobState::Pending && j.spec.partition == name)
+                .count()
+        );
+        n
     }
 
     /// Instantaneous compute-node draw, watts.
@@ -451,6 +599,9 @@ impl Slurm {
                 watts: n.cur_watts,
             });
         }
+        // every watts-affecting mutation flows through here, so this is
+        // the one place the governor's cached ledger needs refreshing
+        self.refresh_draw(idx);
     }
 
     /// Power change points accumulated since the last
@@ -534,8 +685,14 @@ impl Slurm {
         }
         let id = JobId(self.next_job);
         self.next_job += 1;
+        let part = spec.partition.clone();
         self.jobs.insert(id, Job::new(id, spec, now));
-        self.queue.push(id);
+        self.pend_q
+            .get_mut(&part)
+            .expect("partition validated above")
+            .push_back(id);
+        *self.pend_n.get_mut(&part).expect("partition validated above") += 1;
+        self.pend_total += 1;
         self.stats.submitted += 1;
         self.job_notices.push(JobNotice {
             job: id,
@@ -554,7 +711,8 @@ impl Slurm {
         }
         job.state = JobState::Cancelled;
         job.finished = Some(now);
-        self.queue.retain(|q| *q != id);
+        let part = job.spec.partition.clone();
+        self.pending_removed(&part);
         self.stats.cancelled += 1;
         self.job_notices.push(JobNotice {
             job: id,
@@ -588,6 +746,7 @@ impl Slurm {
                 let allocated = self.jobs[&id].allocated.clone();
                 for &i in &allocated {
                     self.nodes[i].reserved_for = None;
+                    self.reindex_node(i);
                     if matches!(self.nodes[i].fsm.state(), PowerState::Idle { .. }) {
                         self.arm_suspend_timer(kernel, i, now);
                     }
@@ -611,6 +770,7 @@ impl Slurm {
                 if let Some(ev) = self.jobs.get_mut(&id).expect("exists").completion_ev.take() {
                     kernel.cancel(ev);
                 }
+                self.drop_run_end(id);
                 let allocated = self.jobs[&id].allocated.clone();
                 let mut job_energy = 0.0;
                 for &i in &allocated {
@@ -620,6 +780,7 @@ impl Slurm {
                     job_energy += self.nodes[i].energy_j - self.nodes[i].job_energy_mark;
                     self.nodes[i].running = None;
                     self.nodes[i].reserved_for = None;
+                    self.reindex_node(i);
                     self.arm_suspend_timer(kernel, i, now);
                 }
                 let job = self.jobs.get_mut(&id).expect("exists");
@@ -668,6 +829,7 @@ impl Slurm {
             SchedEvent::BootComplete(i) => {
                 self.nodes[i].fsm.boot_complete(now).expect("boot scheduled");
                 self.touch(i, now);
+                self.reindex_node(i);
                 // a freshly-booted node either belongs to a configuring
                 // job or idles (and gets a suspend timer)
                 if let Some(j) = self.nodes[i].reserved_for {
@@ -682,6 +844,7 @@ impl Slurm {
                     .shutdown_complete(now)
                     .expect("shutdown scheduled");
                 self.touch(i, now);
+                self.reindex_node(i);
                 // resources changed (a node finished suspending can now
                 // be woken again for a waiting head job)
                 self.try_schedule(kernel, now);
@@ -702,6 +865,7 @@ impl Slurm {
                         self.nodes[i].fsm.suspend(now)
                     {
                         self.touch(i, now);
+                        self.reindex_node(i);
                         kernel.schedule_at(at, SchedEvent::ShutdownComplete(i));
                     }
                 }
@@ -743,6 +907,7 @@ impl Slurm {
                         self.nodes[idx].fsm.wake(now)
                     {
                         self.touch(idx, now);
+                        self.reindex_node(idx);
                         kernel.schedule_at(at, SchedEvent::BootComplete(idx));
                     }
                     AdminPowerOutcome::Applied
@@ -763,6 +928,7 @@ impl Slurm {
                         self.nodes[idx].fsm.suspend(now)
                     {
                         self.touch(idx, now);
+                        self.reindex_node(idx);
                         kernel.schedule_at(at, SchedEvent::ShutdownComplete(idx));
                     }
                     AdminPowerOutcome::Applied
@@ -797,7 +963,9 @@ impl Slurm {
 
     /// Index of a node by name — the inverse of [`Slurm::node_name`].
     pub fn node_index(&self, name: &str) -> Option<usize> {
-        self.nodes.iter().position(|n| n.name == name)
+        let idx = self.name_idx.get(name).copied();
+        debug_assert_eq!(idx, self.nodes.iter().position(|n| n.name == name));
+        idx
     }
 
     /// Relative execution rate of `act` on node `idx` under its current
@@ -861,40 +1029,56 @@ impl Slurm {
     /// the cappable domains (CPU package, dGPU) under the running job's
     /// activity.
     pub fn power_breakdown(&self) -> Vec<NodeDraw> {
-        self.nodes
-            .iter()
-            .enumerate()
-            .map(|(idx, n)| {
-                // the governor plans against what the node is actually
-                // drawing for: a rank in a communication phase demands
-                // NIC-level power, not its job's compute profile
-                let act = n.activity_override.or_else(|| {
-                    n.running
-                        .and_then(|j| self.jobs.get(&j))
-                        .map(|j| j.spec.activity)
-                });
-                let (allocated, floor_w, cpu_demand_w, gpu_demand_w) =
-                    match (n.fsm.state(), act) {
-                        (PowerState::Allocated, Some(act)) => (
-                            true,
-                            n.base_power.idle_w() + n.base_power.igpu_w(act),
-                            n.base_power.cpu_demand_w(act),
-                            n.base_power.dgpu_demand_w(act),
-                        ),
-                        // any other state draws only its (uncappable) floor
-                        _ => (false, n.cur_watts, 0.0, 0.0),
-                    };
-                NodeDraw {
-                    idx,
-                    allocated,
-                    floor_w,
-                    cpu_demand_w,
-                    gpu_demand_w,
-                    cpu_cap_range: (n.power.cpu_rapl.min_w, n.power.cpu_rapl.max_w),
-                    gpu_cap_range: n.power.gpu_cap.as_ref().map(|g| (g.min_w, g.max_w)),
-                }
-            })
-            .collect()
+        debug_assert_eq!(self.draw_cache, self.power_breakdown_naive());
+        self.draw_cache.clone()
+    }
+
+    /// Borrowed view of the cached ledger — what the governor folds
+    /// each tick without cloning anything.
+    pub fn power_draws(&self) -> &[NodeDraw] {
+        &self.draw_cache
+    }
+
+    /// The full linear recompute of [`Slurm::power_breakdown`] —
+    /// retained as the ground truth the incremental cache is checked
+    /// against (debug assertions here, property tests externally).
+    pub fn power_breakdown_naive(&self) -> Vec<NodeDraw> {
+        (0..self.nodes.len()).map(|i| self.compute_draw(i)).collect()
+    }
+
+    fn compute_draw(&self, idx: usize) -> NodeDraw {
+        let n = &self.nodes[idx];
+        // the governor plans against what the node is actually
+        // drawing for: a rank in a communication phase demands
+        // NIC-level power, not its job's compute profile
+        let act = n.activity_override.or_else(|| {
+            n.running
+                .and_then(|j| self.jobs.get(&j))
+                .map(|j| j.spec.activity)
+        });
+        let (allocated, floor_w, cpu_demand_w, gpu_demand_w) = match (n.fsm.state(), act) {
+            (PowerState::Allocated, Some(act)) => (
+                true,
+                n.base_power.idle_w() + n.base_power.igpu_w(act),
+                n.base_power.cpu_demand_w(act),
+                n.base_power.dgpu_demand_w(act),
+            ),
+            // any other state draws only its (uncappable) floor
+            _ => (false, n.cur_watts, 0.0, 0.0),
+        };
+        NodeDraw {
+            idx,
+            allocated,
+            floor_w,
+            cpu_demand_w,
+            gpu_demand_w,
+            cpu_cap_range: (n.power.cpu_rapl.min_w, n.power.cpu_rapl.max_w),
+            gpu_cap_range: n.power.gpu_cap.as_ref().map(|g| (g.min_w, g.max_w)),
+        }
+    }
+
+    fn refresh_draw(&mut self, idx: usize) {
+        self.draw_cache[idx] = self.compute_draw(idx);
     }
 
     /// Actuate one node's §3.6 knobs: RAPL package cap, dGPU cap
@@ -942,6 +1126,11 @@ impl Slurm {
             });
         }
         self.touch(idx, now);
+        if self.node_capped(idx) {
+            self.capped.insert(idx);
+        } else {
+            self.capped.remove(&idx);
+        }
         if let Some(jid) = self.nodes[idx].running {
             self.reprice(kernel, jid, now);
         }
@@ -961,14 +1150,38 @@ impl Slurm {
 
     /// Nodes whose knobs differ from the nominal operating point.
     pub fn capped_nodes(&self) -> usize {
-        (0..self.nodes.len())
-            .filter(|&i| self.node_capped(i))
-            .count()
+        debug_assert_eq!(
+            self.capped.len(),
+            (0..self.nodes.len())
+                .filter(|&i| self.node_capped(i))
+                .count()
+        );
+        self.capped.len()
     }
 
     /// Unreserved nodes idle for at least `after` — the §3.6 idle
-    /// power-down candidates.
+    /// power-down candidates. Served from the free-node index: an idle
+    /// unreserved non-running node is exactly a class-0 index member.
     pub fn idle_nodes_over(&self, after: SimTime, now: SimTime) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .free_idx
+            .values()
+            .flat_map(|fi| fi.by_class[0].iter().copied())
+            .filter(|&i| {
+                self.nodes[i]
+                    .fsm
+                    .idle_for(now)
+                    .map(|d| d >= after)
+                    .unwrap_or(false)
+            })
+            .collect();
+        out.sort_unstable();
+        debug_assert_eq!(out, self.idle_nodes_over_naive(after, now));
+        out
+    }
+
+    /// Linear-scan ground truth for [`Slurm::idle_nodes_over`].
+    pub fn idle_nodes_over_naive(&self, after: SimTime, now: SimTime) -> Vec<usize> {
         self.nodes
             .iter()
             .enumerate()
@@ -1065,8 +1278,15 @@ impl Slurm {
     // -- scheduling ----------------------------------------------------------
 
     fn try_schedule<E: From<SchedEvent>>(&mut self, kernel: &mut Kernel<E>, now: SimTime) {
-        // per-partition independent queues
-        let partitions: Vec<String> = self.by_partition.keys().cloned().collect();
+        // per-partition independent queues; partitions with nothing
+        // pending are skipped outright (the old code visited each one
+        // only to rebuild an empty candidate list)
+        let partitions: Vec<String> = self
+            .pend_n
+            .iter()
+            .filter(|(_, &c)| c > 0)
+            .map(|(k, _)| k.clone())
+            .collect();
         for part in partitions {
             self.schedule_partition(kernel, &part, now);
         }
@@ -1078,15 +1298,21 @@ impl Slurm {
         part: &str,
         now: SimTime,
     ) {
-        let pending: Vec<JobId> = self
-            .queue
-            .iter()
-            .copied()
-            .filter(|id| {
-                let j = &self.jobs[id];
-                j.spec.partition == part && j.state == JobState::Pending
-            })
-            .collect();
+        if self.pend_n.get(part).copied().unwrap_or(0) == 0 {
+            return;
+        }
+        // compact the lazily-cleaned per-partition queue: the survivors
+        // are exactly the old global-queue filter (this partition's
+        // Pending jobs, in submission order)
+        let jobs = &self.jobs;
+        let pending: Vec<JobId> = match self.pend_q.get_mut(part) {
+            Some(q) => {
+                q.retain(|id| jobs.get(id).map_or(false, |j| j.state == JobState::Pending));
+                q.iter().copied().collect()
+            }
+            None => return,
+        };
+        debug_assert_eq!(pending.len(), self.pend_n.get(part).copied().unwrap_or(0));
         let Some(&head) = pending.first() else { return };
 
         if self.reserve(kernel, head, now) {
@@ -1100,7 +1326,14 @@ impl Slurm {
         // EASY backfill: shadow time = when the head could start
         let shadow = self.shadow_time(head, now);
         for &bf in pending.iter().skip(1) {
-            let fits_now = self.claimable(part, None).len() as u32 >= self.jobs[&bf].spec.nodes;
+            let free = self.free_count(part);
+            if free == 0 {
+                // nothing left to claim — no later candidate can fit
+                // (identical outcomes to the old full scan: every
+                // remaining `fits_now` test would be false)
+                break;
+            }
+            let fits_now = free as u32 >= self.jobs[&bf].spec.nodes;
             let ends_before_shadow = now + self.jobs[&bf].spec.time_limit <= shadow;
             if fits_now && ends_before_shadow {
                 let ok = self.reserve(kernel, bf, now);
@@ -1109,32 +1342,89 @@ impl Slurm {
         }
     }
 
+    /// Number of claimable nodes in `part`, from the free-node index.
+    fn free_count(&self, part: &str) -> usize {
+        let n = self.free_idx.get(part).map_or(0, FreeIndex::len);
+        debug_assert_eq!(n, self.claimable_scan(part).len());
+        n
+    }
+
+    /// Claimable nodes of `part` from the free-node index, in ascending
+    /// node-index order — must always equal [`Slurm::claimable_scan`].
+    pub fn free_nodes(&self, part: &str) -> Vec<usize> {
+        self.free_idx
+            .get(part)
+            .map(FreeIndex::members_sorted)
+            .unwrap_or_default()
+    }
+
     /// Nodes of `part` a job could claim right now (idle, booting or
-    /// suspended; unreserved, not running anything).
-    fn claimable(&self, part: &str, _for_job: Option<JobId>) -> Vec<usize> {
-        self.by_partition[part]
-            .iter()
-            .copied()
-            .filter(|&i| {
-                let n = &self.nodes[i];
-                n.reserved_for.is_none()
-                    && n.running.is_none()
-                    && matches!(
-                        n.fsm.state(),
-                        PowerState::Idle { .. }
-                            | PowerState::Booting { .. }
-                            | PowerState::Suspended
-                    )
+    /// suspended; unreserved, not running anything) — the full linear
+    /// scan, retained as the ground truth the index is checked against
+    /// (debug assertions here, property tests externally).
+    pub fn claimable_scan(&self, part: &str) -> Vec<usize> {
+        self.by_partition
+            .get(part)
+            .map(|nodes| {
+                nodes
+                    .iter()
+                    .copied()
+                    .filter(|&i| {
+                        let n = &self.nodes[i];
+                        n.reserved_for.is_none()
+                            && n.running.is_none()
+                            && matches!(
+                                n.fsm.state(),
+                                PowerState::Idle { .. }
+                                    | PowerState::Booting { .. }
+                                    | PowerState::Suspended
+                            )
+                    })
+                    .collect()
             })
-            .collect()
+            .unwrap_or_default()
     }
 
     /// Earliest time `head` could plausibly start: walk running jobs'
-    /// completion times until enough nodes are free (EASY reservation).
+    /// projected completions until enough nodes are free (EASY
+    /// reservation). Served from the incrementally-maintained
+    /// `run_ends` set — O(crossing jobs) instead of re-collecting and
+    /// sorting every running job's end per backfill pass.
     fn shadow_time(&self, head: JobId, now: SimTime) -> SimTime {
         let job = &self.jobs[&head];
         let part = &job.spec.partition;
-        let mut free = self.claimable(part, Some(head)).len() as u32;
+        let shadow = self.shadow_time_from_index(job.spec.nodes, part, now);
+        debug_assert_eq!(shadow, self.shadow_time_naive(head, now));
+        shadow
+    }
+
+    fn shadow_time_from_index(&self, need: u32, part: &str, now: SimTime) -> SimTime {
+        let mut free = self.free_count(part) as u32;
+        if free >= need {
+            return now;
+        }
+        if let Some(ends) = self.run_ends.get(part) {
+            for (&(end, _jid), &cnt) in ends {
+                // the old walk freed one node per allocated-node entry;
+                // batching a job's nodes crosses the threshold at the
+                // same end value
+                free += cnt;
+                if free >= need {
+                    // plus a boot budget if suspended nodes must join
+                    return end + self.power_policy.max_boot_delay;
+                }
+            }
+        }
+        // cannot estimate (shouldn't happen: submit validated size)
+        now + SimTime::from_hours(24)
+    }
+
+    /// The original per-node collect-and-sort shadow walk, retained as
+    /// ground truth for the `run_ends` index.
+    fn shadow_time_naive(&self, head: JobId, now: SimTime) -> SimTime {
+        let job = &self.jobs[&head];
+        let part = &job.spec.partition;
+        let mut free = self.claimable_scan(part).len() as u32;
         if free >= job.spec.nodes {
             return now;
         }
@@ -1151,11 +1441,9 @@ impl Slurm {
         for end in ends {
             free += 1;
             if free >= job.spec.nodes {
-                // plus a boot budget if suspended nodes must join
                 return end + self.power_policy.max_boot_delay;
             }
         }
-        // cannot estimate (shouldn't happen: submit validated size)
         now + SimTime::from_hours(24)
     }
 
@@ -1169,35 +1457,40 @@ impl Slurm {
     ) -> bool {
         let needed = self.jobs[&id].spec.nodes as usize;
         let part = self.jobs[&id].spec.partition.clone();
-        let mut cands = self.claimable(&part, Some(id));
-        if cands.len() < needed {
+        // the index must agree with the linear scan at every claim
+        debug_assert_eq!(self.free_nodes(&part), self.claimable_scan(&part));
+        let Some(fi) = self.free_idx.get(&part) else {
+            return false;
+        };
+        if fi.len() < needed {
             return false;
         }
-        match self
+        let cands: Vec<usize> = match self
             .placement
             .get(&part)
             .copied()
             .unwrap_or(PlacementPolicy::FirstFit)
         {
             // prefer nodes that are already up: Idle, then Booting,
-            // then Suspended — minimizes the §3.4 boot delay
-            PlacementPolicy::FirstFit => {
-                cands.sort_by_key(|&i| match self.nodes[i].fsm.state() {
-                    PowerState::Idle { .. } => 0,
-                    PowerState::Booting { .. } => 1,
-                    PowerState::Suspended => 2,
-                    _ => 3,
-                });
-            }
+            // then Suspended — minimizes the §3.4 boot delay. The
+            // class-bucketed index yields candidates already in that
+            // order (ascending node index within a class), which is
+            // exactly what the old stable sort over the ascending
+            // partition vector produced — so taking the first `needed`
+            // is O(needed log nodes), not O(nodes log nodes).
+            PlacementPolicy::FirstFit => fi.first_fit().take(needed).collect(),
             // §6.2 "prototyping on energy-efficient nodes": order by
             // estimated joules-to-completion on each candidate — boot
             // energy for cold nodes plus draw × (work / rate) under the
             // node's current knobs (a capped node draws less per unit
             // of work by the c^(2/3) law, so it scores better even
-            // though the job runs longer there)
+            // though the job runs longer there). The score depends on
+            // the job's spec, so it is computed per claim — but only
+            // over the free set the index hands us, not every node.
             PlacementPolicy::EnergyEfficient => {
                 let spec = self.jobs[&id].spec.clone();
-                cands.sort_by(|&a, &b| {
+                let mut all = fi.members_sorted();
+                all.sort_by(|&a, &b| {
                     let na = &self.nodes[a];
                     let nb = &self.nodes[b];
                     let sa = policy::joules_to_completion(
@@ -1216,11 +1509,13 @@ impl Slurm {
                     );
                     sa.total_cmp(&sb)
                 });
+                all.truncate(needed);
+                all
             }
-        }
-        cands.truncate(needed);
+        };
         for &i in &cands {
             self.nodes[i].reserved_for = Some(id);
+            self.reindex_node(i);
             self.disarm_suspend_timer(kernel, i);
             if matches!(self.nodes[i].fsm.state(), PowerState::Suspended) {
                 if let Ok(Transition::ScheduleBootComplete(at)) = self.nodes[i].fsm.wake(now) {
@@ -1232,7 +1527,7 @@ impl Slurm {
         let job = self.jobs.get_mut(&id).expect("exists");
         job.state = JobState::Configuring;
         job.allocated = cands;
-        self.queue.retain(|q| *q != id);
+        self.pending_removed(&part);
         self.maybe_start(kernel, id, now);
         true
     }
@@ -1294,6 +1589,14 @@ impl Slurm {
         job.last_rate_change = now;
         job.work_done_s = 0.0;
         job.completion_ev = ev;
+        let part = job.spec.partition.clone();
+        // one batched EASY shadow entry per running job: the key is a
+        // run-time constant (repricing moves the real completion, not
+        // the shadow projection), removed again at finish/release
+        self.run_ends
+            .get_mut(&part)
+            .expect("partition exists")
+            .insert((now + dur, id), allocated.len() as u32);
         if is_app {
             self.app_notices.push(AppNotice::Started(id));
         }
@@ -1336,6 +1639,7 @@ impl Slurm {
             self.stats.total_wait_s += s.since(job.submitted).as_secs_f64();
         }
         let allocated = job.allocated.clone();
+        self.drop_run_end(id);
         let mut job_energy = 0.0;
         for &i in &allocated {
             self.nodes[i].fsm.release(now).expect("allocated node");
@@ -1344,6 +1648,7 @@ impl Slurm {
             job_energy += self.nodes[i].energy_j - self.nodes[i].job_energy_mark;
             self.nodes[i].running = None;
             self.nodes[i].reserved_for = None;
+            self.reindex_node(i);
             self.arm_suspend_timer(kernel, i, now);
         }
         // §6.2 settlement: charge the measured joules and the true

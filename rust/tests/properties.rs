@@ -8,7 +8,7 @@
 use dalek::config::ClusterConfig;
 use dalek::coordinator::{trace, Cluster};
 use dalek::energy::{Ina228Probe, MainBoard, NodeStream, ProbeConfig};
-use dalek::net::{FlowNet, Topology};
+use dalek::net::{FlowId, FlowNet, Topology};
 use dalek::power::{Activity, PowerModel, PowerState};
 use dalek::sim::{EventQueue, SimTime};
 use dalek::slurm::{JobSpec, JobState, SlurmSim};
@@ -334,7 +334,7 @@ fn prop_addressing_bijective() {
     let plan = SubnetPlan::new([192, 168, 1]);
     let mut seen = std::collections::HashSet::new();
     for part in 0..4u8 {
-        for node in 0..30u8 {
+        for node in 0..30u16 {
             assert!(seen.insert(plan.node_ip(part, node)));
         }
     }
@@ -485,4 +485,122 @@ fn prop_replay_monotone_in_load() {
     assert_eq!(sparse.completed, dense.completed);
     // denser packing finishes sooner in wall-clock (same work)
     assert!(dense.makespan <= sparse.makespan);
+}
+
+/// Property: the scheduler's free-node index and incrementally
+/// maintained power ledger agree *exactly* with the retained naive
+/// scans ([`Slurm::claimable_scan`], [`Slurm::power_breakdown_naive`])
+/// at dense observation points, across seeded trace × policy × budget
+/// rows — and a second identical run reproduces bit-identical
+/// scheduler results: job timestamps, states, and joules.
+#[test]
+fn prop_index_matches_naive_scans_across_policy_and_budget() {
+    let parts = ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"];
+    // fingerprint of one full run: per-job (id, state-discriminant via
+    // Debug, started, finished, joule bits) plus the cluster integral
+    let run = |seed: u64, policy: &str, budget: Option<f64>| {
+        let mut cfg = ClusterConfig::dalek_default();
+        cfg.scheduler.policy = policy.into();
+        let mut c = Cluster::new(cfg, None).unwrap();
+        if let Some(b) = budget {
+            let sid = c.login("root").unwrap();
+            c.set_power_budget(sid, Some(b)).unwrap();
+        }
+        let mut gen = trace::TraceGen::dalek_mix(seed);
+        gen.payloads.clear();
+        gen.jobs_per_hour = 240.0;
+        let tr = gen.generate(10);
+        for ev in &tr {
+            c.submit(ev.spec.clone(), ev.at).expect("valid");
+        }
+        let mut t = c.now();
+        while !c.slurm().jobs().all(|j| j.is_terminal()) {
+            t += SimTime::from_secs(45);
+            c.run_until(t, false);
+            for p in parts {
+                assert_eq!(
+                    c.slurm().free_nodes(p),
+                    c.slurm().claimable_scan(p),
+                    "seed {seed} policy {policy} at {t:?}: free index diverged on {p}"
+                );
+            }
+            let naive = c.slurm().power_breakdown_naive();
+            assert_eq!(
+                c.slurm().power_draws(),
+                &naive[..],
+                "seed {seed} policy {policy} at {t:?}: draw cache diverged"
+            );
+            assert_eq!(c.slurm().power_breakdown(), naive);
+            assert!(t < SimTime::from_hours(24), "seed {seed}: no progress");
+        }
+        let jobs: Vec<(String, Option<SimTime>, Option<SimTime>, u64)> = c
+            .slurm()
+            .jobs()
+            .map(|j| {
+                (
+                    format!("{:?}/{:?}", j.id, j.state),
+                    j.started,
+                    j.finished,
+                    j.energy_j.to_bits(),
+                )
+            })
+            .collect();
+        (jobs, c.slurm().total_energy_j().to_bits(), c.now())
+    };
+    for case in 0..3u64 {
+        let seed = 0x1DE5 ^ case;
+        for policy in ["backfill", "fifo"] {
+            for budget in [None, Some(1_000.0)] {
+                let a = run(seed, policy, budget);
+                let b = run(seed, policy, budget);
+                assert_eq!(
+                    a, b,
+                    "seed {seed} policy {policy} budget {budget:?}: runs not bit-identical"
+                );
+            }
+        }
+    }
+}
+
+/// Property: the incremental max-min-fair solver produces bit-identical
+/// rates to the retained from-scratch solve ([`FlowNet::rates_naive`])
+/// after every arrival and departure, across random interleavings that
+/// cross the fabric-passivity threshold in both directions (small flow
+/// sets take the component fast path, large ones force the global
+/// fallback).
+#[test]
+fn prop_incremental_flow_rates_match_naive() {
+    let topo = Topology::build(&ClusterConfig::dalek_default());
+    for case in 0..20u64 {
+        let mut rng = Xoshiro256::new(0xF1DE ^ case);
+        let mut net = FlowNet::new(&topo);
+        let hosts = topo.compute_hosts();
+        let mut live: Vec<FlowId> = Vec::new();
+        for step in 0..120 {
+            if rng.next_f64() < 0.75 || live.is_empty() {
+                let a = hosts[rng.index(hosts.len())];
+                let mut b = hosts[rng.index(hosts.len())];
+                if a == b {
+                    b = topo.frontend();
+                }
+                live.push(net.start_flow(a, b, 1_000_000));
+            } else {
+                let f = live.swap_remove(rng.index(live.len()));
+                net.finish_flow(f);
+            }
+            let naive = net.rates_naive();
+            assert_eq!(naive.len(), live.len(), "case {case} step {step}");
+            for f in &live {
+                let inc = net.rate(*f).expect("live").to_bits();
+                let ref_bits = naive[f].to_bits();
+                assert_eq!(
+                    inc, ref_bits,
+                    "case {case} step {step}: flow {f:?} rate diverged from naive solve"
+                );
+            }
+        }
+        // drain cleanly through the same incremental path
+        net.run_to_idle();
+        assert_eq!(net.active_flows(), 0, "case {case}");
+    }
 }
