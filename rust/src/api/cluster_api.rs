@@ -43,7 +43,8 @@ use crate::config::ClusterConfig;
 use crate::energy::api::PowerAction;
 use crate::energy::sampler::ROLLING_HORIZON;
 use crate::energy::{EnergyApi, MainBoard, ProbeConfig, Sample, StreamingSampler};
-use crate::net::{FlowId, FlowNet, NetEvent, Topology};
+use crate::faults::{FaultKind, FaultPlan, FaultSpec};
+use crate::net::{FlowId, FlowNet, HostId, NetEvent, Topology};
 use crate::power::Activity;
 use crate::query::standing::StandingQuery;
 use crate::query::{ClusterTree, Expr as QueryExpr, QueryOutput, QueryValue, WindowSpec};
@@ -52,8 +53,8 @@ use crate::services::auth::UserDb;
 use crate::services::{ServiceEvent, ServiceRack};
 use crate::sim::{Kernel, SimTime};
 use crate::slurm::{
-    JobId, JobLifecycle, JobSpec, JobState, PlacementPolicy, PolicyEvent, PowerGovernor,
-    SchedEvent, Slurm, SlurmApi,
+    JobId, JobLifecycle, JobSpec, JobState, NodeFault, PlacementPolicy, PolicyEvent,
+    PowerGovernor, SchedEvent, Slurm, SlurmApi,
 };
 use crate::util::Xoshiro256;
 
@@ -67,6 +68,16 @@ pub enum ClusterEvent {
     Policy(PolicyEvent),
     /// `dalek::app` BSP barrier timers (compute-phase rank completions)
     App(AppEvent),
+    /// `dalek::faults` plan edges (injection / recovery instants)
+    Fault(FaultEvent),
+}
+
+/// A fault-plan edge riding the kernel: the index addresses the armed
+/// entry in [`ClusterApi`]'s installed plan.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultEvent {
+    Inject(usize),
+    Recover(usize),
 }
 
 impl From<SchedEvent> for ClusterEvent {
@@ -92,6 +103,11 @@ impl From<PolicyEvent> for ClusterEvent {
 impl From<AppEvent> for ClusterEvent {
     fn from(e: AppEvent) -> Self {
         ClusterEvent::App(e)
+    }
+}
+impl From<FaultEvent> for ClusterEvent {
+    fn from(e: FaultEvent) -> Self {
+        ClusterEvent::Fault(e)
     }
 }
 
@@ -167,6 +183,8 @@ struct SessionSubs {
     admin: bool,
     job_events: bool,
     power_events: bool,
+    /// `dalek::faults` injection/recovery edges (admin-gated channel)
+    fault_events: bool,
     /// decimated telemetry cursor: `(period, start of the next window)`
     telemetry: Option<(SimTime, SimTime)>,
     /// registered standing DQL queries (the `query_events` channel)
@@ -181,11 +199,28 @@ impl SessionSubs {
             admin,
             job_events: false,
             power_events: false,
+            fault_events: false,
             telemetry: None,
             standing: Vec::new(),
             outbox: Outbox::new(cap),
         }
     }
+}
+
+/// One installed fault, resolved against the live cluster at arm time
+/// so the injection/recovery handlers never re-run name lookup (and a
+/// link recovery restores the exact pre-fault capacity).
+struct ArmedFault {
+    spec: FaultSpec,
+    /// scheduler node index (node-plane faults)
+    node_idx: Option<usize>,
+    /// `(host, nominal NIC bps at arm time)` (link-plane faults)
+    link: Option<(HostId, f64)>,
+    /// did the inject edge actually take effect? An ad-hoc fault may
+    /// already hold the node when this entry's inject edge fires; the
+    /// matching recover edge must then not clear a fault it never
+    /// placed (it would cut the other fault's outage short).
+    fired: bool,
 }
 
 pub struct ClusterApi {
@@ -221,6 +256,13 @@ pub struct ClusterApi {
     /// governor-plane events staged by `on_governor_tick` until the
     /// next `pump_events`
     pending_power: Vec<(SimTime, PowerEventKind)>,
+    /// the armed `dalek::faults` plan entries, addressed by the
+    /// [`FaultEvent`] indices riding the kernel
+    fault_plan: Vec<ArmedFault>,
+    /// link-plane fault edges (which never pass through the scheduler,
+    /// so produce no `FaultNotice`) staged for the next `pump_events`:
+    /// `(at, host name, kind, injected)`
+    pending_faults: Vec<(SimTime, String, FaultKind, bool)>,
     /// outbox bound applied to new subscriptions (tests shrink it to
     /// force overflow, telemetry-heavy runs raise it)
     outbox_cap: usize,
@@ -300,6 +342,8 @@ impl ClusterApi {
             session_allocs: BTreeMap::new(),
             next_ticket: 1,
             pending_power: Vec::new(),
+            fault_plan: Vec::new(),
+            pending_faults: Vec::new(),
             outbox_cap: OUTBOX_CAP,
         })
     }
@@ -541,6 +585,7 @@ impl ClusterApi {
                 }
             }
             ClusterEvent::Policy(PolicyEvent::GovernorTick) => self.on_governor_tick(now),
+            ClusterEvent::Fault(e) => self.on_fault_event(now, e),
             ClusterEvent::App(e) => self.apps.on_event(
                 &mut self.slurm.ctl,
                 &mut self.net,
@@ -594,6 +639,168 @@ impl ClusterApi {
         }
     }
 
+    /// One `dalek::faults` plan edge: inject or recover the armed
+    /// fault. Node-plane faults route through the scheduler (which
+    /// evicts, settles and requeues); the api layer's only added duty
+    /// is the BSP checkpoint — banking a phase-structured victim's
+    /// completed iterations *before* the eviction discards the engine
+    /// run. Link-plane faults re-rate the host's NIC on the flow
+    /// network and never touch the scheduler.
+    fn on_fault_event(&mut self, now: SimTime, ev: FaultEvent) {
+        let (idx, inject) = match ev {
+            FaultEvent::Inject(i) => (i, true),
+            FaultEvent::Recover(i) => (i, false),
+        };
+        // a replaced plan can leave stale edges on the kernel: ignore
+        let Some(armed) = self.fault_plan.get(idx) else {
+            return;
+        };
+        let kind = armed.spec.kind;
+        let name = armed.spec.node.clone();
+        let node_idx = armed.node_idx;
+        let link = armed.link;
+        let fired = armed.fired;
+        if let Some((host, nominal)) = link {
+            let FaultKind::LinkDegrade { fraction } = kind else {
+                unreachable!("link entries only arm LinkDegrade");
+            };
+            if !inject && !fired {
+                return;
+            }
+            let bps = if inject { nominal * fraction } else { nominal };
+            self.net.set_host_nic_bps(&mut self.kernel, host, bps);
+            self.fault_plan[idx].fired = inject;
+            self.pending_faults.push((now, name, kind, inject));
+            return;
+        }
+        let Some(ni) = node_idx else { return };
+        if inject {
+            // an ad-hoc injection may already hold the node: leave it
+            // alone entirely — checkpointing (which cancels the engine
+            // run) and then failing to inject would kill a healthy job
+            if self.slurm.ctl.node_fault(ni).is_some() {
+                return;
+            }
+            let nf = match kind {
+                FaultKind::Crash => NodeFault::Crashed,
+                // hold_w is captured from the live draw at injection
+                FaultKind::Hang => NodeFault::Hung { hold_w: 0.0 },
+                FaultKind::Brownout { floor_w } => NodeFault::Brownout { floor_w },
+                FaultKind::Throttle { factor } => NodeFault::Throttled { factor },
+                FaultKind::LinkDegrade { .. } => unreachable!("handled above"),
+            };
+            // only crash/hang evict; brownout/throttle leave the job in
+            // place, so its engine run must keep running
+            let evicts = matches!(kind, FaultKind::Crash | FaultKind::Hang);
+            let victim = if evicts {
+                self.slurm.ctl.node_info(ni).running
+            } else {
+                None
+            };
+            let iters =
+                victim.and_then(|id| self.apps.checkpoint(&mut self.net, &mut self.kernel, id));
+            if self.slurm.ctl.inject_fault(&mut self.kernel, ni, nf, now) {
+                self.fault_plan[idx].fired = true;
+                if let (Some(id), Some(iters)) = (victim, iters) {
+                    self.slurm.ctl.checkpoint_app(id, iters);
+                }
+            }
+        } else {
+            // only this entry's own injection is ours to undo
+            if fired {
+                let _ = self.slurm.ctl.recover_fault(&mut self.kernel, ni, now);
+            }
+        }
+        // eviction/recovery may start queued work (possibly app jobs)
+        self.pump_apps();
+    }
+
+    /// Arm a seeded [`FaultPlan`] on the kernel — operator-level, like
+    /// trace replay (the admin wire surface is `Request::InjectFault`,
+    /// one fault at a time). The whole plan is validated and resolved
+    /// before anything is scheduled, so a bad entry arms nothing.
+    /// Returns the number of faults armed. Entries whose instants are
+    /// already past fire at the next advance.
+    pub fn install_fault_plan(&mut self, plan: &FaultPlan) -> Result<usize, DalekError> {
+        plan.validate().map_err(DalekError::BadRequest)?;
+        let mut armed = Vec::with_capacity(plan.faults.len());
+        for spec in &plan.faults {
+            let entry = match spec.kind {
+                FaultKind::LinkDegrade { .. } => {
+                    let host = self
+                        .topo
+                        .by_name(&spec.node)
+                        .or_else(|| self.topo.by_name(&format!("{}.dalek", spec.node)))
+                        .ok_or_else(|| {
+                            DalekError::BadRequest(format!("unknown host `{}`", spec.node))
+                        })?;
+                    ArmedFault {
+                        spec: spec.clone(),
+                        node_idx: None,
+                        link: Some((host, self.net.host_nic_bps(host))),
+                        fired: false,
+                    }
+                }
+                _ => {
+                    let ni = self.slurm.ctl.node_index(&spec.node).ok_or_else(|| {
+                        DalekError::Slurm(crate::slurm::scheduler::SlurmError::UnknownNode(
+                            spec.node.clone(),
+                        ))
+                    })?;
+                    ArmedFault {
+                        spec: spec.clone(),
+                        node_idx: Some(ni),
+                        link: None,
+                        fired: false,
+                    }
+                }
+            };
+            armed.push(entry);
+        }
+        let now = self.now();
+        let base = self.fault_plan.len();
+        for (i, entry) in armed.into_iter().enumerate() {
+            let at = entry.spec.at.max(now);
+            let rec = entry.spec.recovers_at().max(now);
+            self.kernel.schedule_at(at, FaultEvent::Inject(base + i));
+            self.kernel.schedule_at(rec, FaultEvent::Recover(base + i));
+            self.fault_plan.push(entry);
+        }
+        Ok(self.fault_plan.len() - base)
+    }
+
+    /// Arm one fault right now for `duration` — the admin wire surface
+    /// (`Request::InjectFault`) and a convenience for tests.
+    pub fn inject_fault_now(
+        &mut self,
+        sid: SessionId,
+        node: &str,
+        kind: FaultKind,
+        duration: SimTime,
+    ) -> Result<(), DalekError> {
+        let now = self.now();
+        self.admin_session(sid, now)?;
+        if duration == SimTime::ZERO {
+            return Err(DalekError::BadRequest(
+                "fault `duration_s` must be positive".into(),
+            ));
+        }
+        let plan = FaultPlan {
+            seed: 0,
+            faults: vec![FaultSpec {
+                at: now,
+                duration,
+                node: node.into(),
+                kind,
+            }],
+        };
+        self.install_fault_plan(&plan)?;
+        // the injection edge is due at `now`: deliver it immediately so
+        // the admin's next poll already sees the fault state
+        self.drive(now);
+        Ok(())
+    }
+
     /// Feed the scheduler's drained power transitions to the streaming
     /// sampler, emitting every due sample batch up to the present.
     fn pump_samples(&mut self) {
@@ -630,7 +837,9 @@ impl ClusterApi {
     fn pump_events(&mut self) {
         let jnotices = self.slurm.ctl.take_job_notices();
         let pnotices = self.slurm.ctl.take_power_notices();
+        let fnotices = self.slurm.ctl.take_fault_notices();
         let staged = std::mem::take(&mut self.pending_power);
+        let staged_faults = std::mem::take(&mut self.pending_faults);
         if self.subs.is_empty() {
             return;
         }
@@ -640,6 +849,7 @@ impl ClusterApi {
             let kind = match n.what {
                 JobLifecycle::Queued => JobEventKind::Queued,
                 JobLifecycle::Started => JobEventKind::Started,
+                JobLifecycle::Requeued => JobEventKind::Requeued,
                 JobLifecycle::Repriced { rate } => JobEventKind::Repriced { rate },
                 JobLifecycle::Finished { state, energy_j } => JobEventKind::Finished {
                     state,
@@ -677,6 +887,39 @@ impl ClusterApi {
                     s.outbox.push(Event::Power {
                         at: *at,
                         kind: kind.clone(),
+                    });
+                }
+            }
+        }
+        // fault injection/recovery edges → FaultEvents. Scheduler-side
+        // (node-plane) notices and staged link-plane edges merge into
+        // one time-ordered stream; the kind mapping recovers the knob
+        // parameters the scheduler bound at injection (a hang's hold_w
+        // is physics, not plan input, so it stays scheduler-internal).
+        if self.subs.values().any(|s| s.fault_events) {
+            let mut faults = staged_faults;
+            for n in &fnotices {
+                let kind = match n.fault {
+                    NodeFault::Crashed => FaultKind::Crash,
+                    NodeFault::Hung { .. } => FaultKind::Hang,
+                    NodeFault::Brownout { floor_w } => FaultKind::Brownout { floor_w },
+                    NodeFault::Throttled { factor } => FaultKind::Throttle { factor },
+                };
+                faults.push((
+                    n.at,
+                    self.slurm.ctl.node_name(n.node).to_string(),
+                    kind,
+                    n.injected,
+                ));
+            }
+            faults.sort_by_key(|(at, ..)| *at); // stable: ties keep order
+            for s in self.subs.values_mut().filter(|s| s.fault_events) {
+                for (at, node, kind, injected) in &faults {
+                    s.outbox.push(Event::Fault {
+                        at: *at,
+                        node: node.clone(),
+                        kind: *kind,
+                        injected: *injected,
                     });
                 }
             }
@@ -763,8 +1006,10 @@ impl ClusterApi {
         }
     }
 
-    /// Open a typed event channel on a session. `PowerEvents` is
-    /// admin-only (it exposes the governor's actuation plane).
+    /// Open a typed event channel on a session. `PowerEvents` and
+    /// `FaultEvents` are admin-only (the actuation and fault planes
+    /// are infrastructure views; non-admins see fault consequences on
+    /// their own jobs as `JobEvents` requeues).
     /// `Telemetry` takes a client-chosen decimation rate; the window
     /// period must fit the sampler's 120 s rolling-history horizon.
     /// Re-subscribing to `Telemetry` restarts the cursor at `now`.
@@ -784,7 +1029,7 @@ impl ClusterApi {
             ));
         }
         let sess = match channel {
-            Channel::PowerEvents => self.admin_session(sid, now)?,
+            Channel::PowerEvents | Channel::FaultEvents => self.admin_session(sid, now)?,
             _ => self.session(sid, now)?,
         };
         let cap = self.outbox_cap;
@@ -795,6 +1040,7 @@ impl ClusterApi {
         match channel {
             Channel::JobEvents => entry.job_events = true,
             Channel::PowerEvents => entry.power_events = true,
+            Channel::FaultEvents => entry.fault_events = true,
             Channel::QueryEvents => unreachable!("rejected above"),
             Channel::Telemetry => {
                 let rate = rate_hz.unwrap_or(1.0);
@@ -881,6 +1127,7 @@ impl ClusterApi {
             match channel {
                 Channel::JobEvents => s.job_events = false,
                 Channel::PowerEvents => s.power_events = false,
+                Channel::FaultEvents => s.fault_events = false,
                 Channel::Telemetry => s.telemetry = None,
                 Channel::QueryEvents => s.standing.clear(),
             }
@@ -1934,6 +2181,17 @@ impl ClusterApi {
                 let r = self.power_report(sid)?;
                 Ok(power_report_response(r))
             }
+            Request::InjectFault {
+                node,
+                kind,
+                duration,
+            } => {
+                self.inject_fault_now(sid, node, *kind, *duration)?;
+                Ok(Response::FaultInjected {
+                    node: node.clone(),
+                    kind: kind.label().into(),
+                })
+            }
         }
     }
 
@@ -2839,6 +3097,342 @@ mod tests {
         c.run_until(SimTime::from_hours(6), false);
         assert_eq!(c.slurm().job(id).unwrap().state, JobState::Cancelled);
         assert_eq!(c.net().active_flows(), 0);
+    }
+
+    // ---- the fault plane (dalek::faults) ----
+
+    #[test]
+    fn crash_requeues_running_job_and_fault_stream_reports_both_edges() {
+        let mut c = cluster();
+        let root = c.login("root").unwrap();
+        c.set_outbox_capacity(10_000);
+        c.subscribe(root, Channel::FaultEvents, None).unwrap();
+        c.subscribe(root, Channel::JobEvents, None).unwrap();
+        c.submit(JobSpec::cpu("root", "az5-a890m", 2, 600), SimTime::ZERO)
+            .unwrap();
+        c.run_until(SimTime::from_mins(2), false); // booted, running
+        let victim = c
+            .slurm()
+            .node_infos()
+            .iter()
+            .find(|n| n.running.is_some())
+            .expect("the job is running somewhere")
+            .name
+            .clone();
+        let plan = FaultPlan {
+            seed: 0,
+            faults: vec![FaultSpec {
+                at: c.now(),
+                duration: SimTime::from_secs(120),
+                node: victim.clone(),
+                kind: FaultKind::Crash,
+            }],
+        };
+        assert_eq!(c.install_fault_plan(&plan).unwrap(), 1);
+        c.run_until(c.now() + SimTime::from_mins(40), false);
+        let job = c.slurm().jobs().next().unwrap();
+        assert_eq!(job.state, JobState::Completed);
+        assert!(job.energy_j > 0.0);
+        assert_eq!(c.slurm().stats.faults_injected, 1);
+        assert_eq!(c.slurm().stats.fault_requeues, 1);
+        let events = c.take_events(root, usize::MAX);
+        let edges: Vec<(String, FaultKind, bool)> = events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Fault {
+                    node,
+                    kind,
+                    injected,
+                    ..
+                } => Some((node.clone(), *kind, *injected)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            edges,
+            vec![
+                (victim.clone(), FaultKind::Crash, true),
+                (victim.clone(), FaultKind::Crash, false),
+            ]
+        );
+        assert!(
+            events
+                .iter()
+                .any(|e| matches!(e, Event::Job { kind: JobEventKind::Requeued, .. })),
+            "the eviction must surface as a Requeued job event"
+        );
+        // a bad plan arms nothing
+        let overlap = FaultPlan {
+            seed: 0,
+            faults: vec![
+                plan.faults[0].clone(),
+                FaultSpec {
+                    at: plan.faults[0].at + SimTime::from_secs(1),
+                    ..plan.faults[0].clone()
+                },
+            ],
+        };
+        assert!(matches!(
+            c.install_fault_plan(&overlap),
+            Err(DalekError::BadRequest(_))
+        ));
+        let unknown = FaultPlan {
+            seed: 0,
+            faults: vec![FaultSpec {
+                node: "nope".into(),
+                ..plan.faults[0].clone()
+            }],
+        };
+        assert!(c.install_fault_plan(&unknown).is_err());
+    }
+
+    #[test]
+    fn crash_checkpoints_app_job_at_its_last_bsp_barrier() {
+        let mut c = cluster();
+        let root = c.login("root").unwrap();
+        let app = crate::app::AppSpec::allreduce_loop("train", 30.0, 8_000_000, 10);
+        let work = app.compute_work_s(); // 300 s of compute
+        let spec = JobSpec {
+            user: "root".into(),
+            partition: "az5-a890m".into(),
+            nodes: 2,
+            duration: SimTime::from_secs_f64(work),
+            time_limit: SimTime::from_secs_f64(work * 4.0 + 3600.0),
+            payload: None,
+            activity: Activity::cpu_only(0.9),
+            app: Some(app),
+        };
+        let id = c.submit(spec, SimTime::ZERO).unwrap();
+        // boot is 70 s, each iteration is 30 s compute + an allreduce:
+        // by 4 min several barriers have been crossed
+        c.run_until(SimTime::from_mins(4), false);
+        assert_eq!(c.slurm().job(id).unwrap().state, JobState::Running);
+        let victim = c
+            .slurm()
+            .node_infos()
+            .iter()
+            .find(|n| n.running == Some(id))
+            .unwrap()
+            .name
+            .clone();
+        c.inject_fault_now(root, &victim, FaultKind::Crash, SimTime::from_mins(2))
+            .unwrap();
+        // the eviction banked completed iterations into a trimmed spec:
+        // the restart replays only the unfinished tail (the scheduler
+        // may have re-placed the job synchronously during the eviction
+        // — the trim must land regardless of the state it reached)
+        let job = c.slurm().job(id).unwrap();
+        assert_ne!(job.state, JobState::Completed);
+        let left = job.spec.app.as_ref().unwrap().iterations;
+        assert!(left < 10, "no iterations were checkpointed");
+        assert!(left >= 1, "the in-flight iteration is never banked");
+        assert_eq!(
+            job.spec.duration,
+            SimTime::from_secs_f64(30.0 * left as f64),
+            "the work ledger must shrink with the checkpoint"
+        );
+        c.run_until(c.now() + SimTime::from_mins(40), false);
+        assert_eq!(c.slurm().job(id).unwrap().state, JobState::Completed);
+        assert_eq!(c.apps().active_apps(), 0);
+        assert_eq!(c.slurm().stats.fault_requeues, 1);
+    }
+
+    #[test]
+    fn fault_channel_and_wire_op_are_admin_scoped() {
+        let mut c = cluster();
+        c.add_user("alice");
+        let alice = c.login("alice").unwrap();
+        assert!(matches!(
+            c.subscribe(alice, Channel::FaultEvents, None),
+            Err(DalekError::AdminOnly)
+        ));
+        let inject = |node: &str, kind: FaultKind| Request::InjectFault {
+            node: node.into(),
+            kind,
+            duration: SimTime::from_secs(60),
+        };
+        assert!(matches!(
+            c.handle(Some(alice), &inject("az5-a890m-0", FaultKind::Crash)),
+            Err(DalekError::AdminOnly)
+        ));
+        let root = c.login("root").unwrap();
+        c.subscribe(root, Channel::FaultEvents, None).unwrap();
+        let r = c
+            .handle(
+                Some(root),
+                &inject("az5-a890m-0", FaultKind::Brownout { floor_w: 120.0 }),
+            )
+            .unwrap();
+        assert!(matches!(
+            r,
+            Response::FaultInjected { ref kind, .. } if kind == "brownout"
+        ));
+        // the fault is live and already visible in the admin's outbox
+        let ni = c.slurm().node_index("az5-a890m-0").unwrap();
+        assert!(matches!(
+            c.slurm().node_fault(ni),
+            Some(NodeFault::Brownout { .. })
+        ));
+        assert!(c
+            .take_events(root, usize::MAX)
+            .iter()
+            .any(|e| matches!(e, Event::Fault { injected: true, .. })));
+        // unknown nodes and zero durations are typed refusals
+        assert!(c.handle(Some(root), &inject("nope", FaultKind::Crash)).is_err());
+        assert!(matches!(
+            c.inject_fault_now(root, "az5-a890m-1", FaultKind::Crash, SimTime::ZERO),
+            Err(DalekError::BadRequest(_))
+        ));
+        // recovery fires after the armed duration
+        c.run_until(c.now() + SimTime::from_mins(2), false);
+        assert!(c.slurm().node_fault(ni).is_none());
+    }
+
+    #[test]
+    fn dql_exposes_fault_state_and_mtbf() {
+        let mut c = cluster();
+        let root = c.login("root").unwrap();
+        let scalar = |out: &QueryOutput| match out {
+            QueryOutput::Scalar(QueryValue::Num(x)) => *x,
+            other => panic!("expected a numeric scalar, got {other:?}"),
+        };
+        // a fault-free cluster has no MTBF yet (Null, not 0 or ∞)
+        let (_, out) = c.query(root, "cluster.mtbf_s").unwrap();
+        assert!(matches!(out, QueryOutput::Scalar(QueryValue::Null)));
+        let (_, out) = c.query(root, "cluster.faults_injected").unwrap();
+        assert_eq!(scalar(&out), 0.0);
+        let (_, out) = c.query(root, "nodes.az5-a890m-0.faults.active").unwrap();
+        assert!(matches!(out, QueryOutput::Scalar(QueryValue::Bool(false))));
+        c.run_until(SimTime::from_mins(10), false);
+        c.inject_fault_now(
+            root,
+            "az5-a890m-0",
+            FaultKind::Brownout { floor_w: 133.0 },
+            SimTime::from_mins(5),
+        )
+        .unwrap();
+        let (_, out) = c.query(root, "nodes.az5-a890m-0.faults.active").unwrap();
+        assert!(matches!(out, QueryOutput::Scalar(QueryValue::Bool(true))));
+        let (_, out) = c.query(root, "nodes.az5-a890m-0.faults.kind").unwrap();
+        assert!(matches!(
+            out,
+            QueryOutput::Scalar(QueryValue::Str(ref s)) if s == "brownout"
+        ));
+        let (_, out) = c.query(root, "nodes.az5-a890m-0.faults.param").unwrap();
+        assert_eq!(scalar(&out), 133.0);
+        let (_, out) = c.query(root, "cluster.faults_injected").unwrap();
+        assert_eq!(scalar(&out), 1.0);
+        let (_, out) = c.query(root, "cluster.mtbf_s").unwrap();
+        assert_eq!(scalar(&out), c.now().as_secs_f64());
+        // recovery clears the subtree back to the quiet shape
+        c.run_until(c.now() + SimTime::from_mins(6), false);
+        let (_, out) = c.query(root, "nodes.az5-a890m-0.faults.kind").unwrap();
+        assert!(matches!(out, QueryOutput::Scalar(QueryValue::Null)));
+        // ... but the MTBF keeps aging on the same single failure
+        let (_, out) = c.query(root, "cluster.mtbf_s").unwrap();
+        assert_eq!(scalar(&out), c.now().as_secs_f64());
+    }
+
+    #[test]
+    fn governor_routes_around_faulted_nodes_under_budget() {
+        // the §3.6 loop through chaos: actuation skips crashed and
+        // browned-out nodes (their draw is a constraint, not a knob)
+        // while the budget still binds on the healthy remainder
+        let mut c = cluster();
+        let root = c.login("root").unwrap();
+        c.set_power_budget(root, Some(150.0)).unwrap();
+        c.inject_fault_now(root, "az5-a890m-3", FaultKind::Crash, SimTime::from_mins(30))
+            .unwrap();
+        c.inject_fault_now(
+            root,
+            "az5-a890m-2",
+            FaultKind::Brownout { floor_w: 40.0 },
+            SimTime::from_mins(30),
+        )
+        .unwrap();
+        let id = c
+            .submit(JobSpec::cpu("root", "az5-a890m", 2, 300), c.now())
+            .unwrap();
+        c.run_until(c.now() + SimTime::from_mins(10), false);
+        let scalar = |c: &mut ClusterApi, expr: &str| {
+            let (_, out) = c.query(root, expr).unwrap();
+            match out {
+                QueryOutput::Scalar(QueryValue::Num(x)) => x,
+                QueryOutput::Scalar(QueryValue::Bool(b)) => b as u8 as f64,
+                other => panic!("expected a scalar, got {other:?}"),
+            }
+        };
+        // the governor kept ticking through the faults
+        let r = c.power_report(root).unwrap();
+        assert!(r.governor_ticks > 0);
+        // faulted nodes were never actuated: a crashed node draws
+        // nothing, a browned-out node is pinned at its PSU floor
+        assert_eq!(scalar(&mut c, "nodes.az5-a890m-3.capped"), 0.0);
+        assert_eq!(scalar(&mut c, "nodes.az5-a890m-2.capped"), 0.0);
+        assert_eq!(scalar(&mut c, "nodes.az5-a890m-3.power.watts"), 0.0);
+        assert!(scalar(&mut c, "nodes.az5-a890m-2.power.watts") >= 40.0 - 1e-9);
+        // the job only ever landed on the two healthy nodes
+        let faulted = [
+            c.slurm().node_index("az5-a890m-2").unwrap(),
+            c.slurm().node_index("az5-a890m-3").unwrap(),
+        ];
+        for j in c.slurm().jobs() {
+            for ni in &j.allocated {
+                assert!(!faulted.contains(ni), "placed work on a grounded node");
+            }
+        }
+        // lift the budget (a 150 W cap over a ~144 W uncappable floor
+        // can pin the survivors at MIN_RATE, which is legitimately
+        // slow) and the healthy pair carries the job home
+        c.set_power_budget(root, None).unwrap();
+        c.run_until(SimTime::from_mins(40), false);
+        assert_eq!(c.slurm().job(id).unwrap().state, JobState::Completed);
+        // and after recovery the nodes are schedulable again
+        assert!(c.slurm().node_fault(faulted[0]).is_none());
+        assert!(c.slurm().node_fault(faulted[1]).is_none());
+    }
+
+    #[test]
+    fn telemetry_cursor_at_exact_horizon_boundary_is_not_lagged() {
+        // regression pin for the lag arithmetic at the 120 s boundary:
+        // a cursor sitting exactly at `now - ROLLING_HORIZON` can still
+        // integrate every window truthfully — the strict `<` must not
+        // round it into a phantom `Lagged`
+        let mut c = cluster();
+        let root = c.login("root").unwrap();
+        c.set_outbox_capacity(10_000);
+        c.subscribe(root, Channel::Telemetry, Some(1.0)).unwrap();
+        c.run_until(SimTime::from_secs(300), false);
+        c.take_events(root, usize::MAX); // drop the catch-up windows
+        let now = c.now();
+        let hs = SimTime(now.as_ns() - ROLLING_HORIZON.as_ns());
+        let period = SimTime::from_secs(1);
+        c.subs.get_mut(&root).unwrap().telemetry = Some((period, hs));
+        c.pump_events();
+        let events = c.take_events(root, usize::MAX);
+        assert_eq!(events.len(), 120, "{events:?}");
+        assert!(
+            events.iter().all(|e| matches!(e, Event::Telemetry { .. })),
+            "no Lagged may fire for a cursor exactly on the horizon"
+        );
+        assert!(
+            matches!(events[0], Event::Telemetry { from, .. } if from == hs),
+            "the first window starts exactly at the horizon"
+        );
+        // one nanosecond behind: exactly one window is unintegrable —
+        // it is skipped, reported, and the cursor rounds up past the
+        // horizon (never onto a second phantom miss)
+        c.subs.get_mut(&root).unwrap().telemetry = Some((period, SimTime(hs.as_ns() - 1)));
+        c.pump_events();
+        let events = c.take_events(root, usize::MAX);
+        let Event::Lagged { missed } = events[0] else {
+            panic!("expected a leading Lagged, got {:?}", events[0]);
+        };
+        assert_eq!(missed, 1);
+        assert_eq!(events.len(), 1 + 119, "{}", events.len());
+        assert!(events[1..]
+            .iter()
+            .all(|e| matches!(e, Event::Telemetry { .. })));
     }
 
     #[test]

@@ -2,12 +2,12 @@
 //!
 //! The §4 energy platform exists to be *watched live*: 1 kSPS probes,
 //! governor actuations, job state changes. This module defines the
-//! four subscription channels ([`Channel`]) and their event payloads
+//! five subscription channels ([`Channel`]) and their event payloads
 //! ([`Event`]), plus the bounded per-session [`Outbox`] they buffer in:
 //!
-//! * `JobEvents` — queued / started / repriced / finished (with the
-//!   measured joules the §6.2 settlement charged), scoped to the
-//!   session's own jobs (admins see every job);
+//! * `JobEvents` — queued / started / requeued / repriced / finished
+//!   (with the measured joules the §6.2 settlement charged), scoped to
+//!   the session's own jobs (admins see every job);
 //! * `PowerEvents` — governor control ticks, §3.6 cap actuations and
 //!   budget violations (admin-only, like the ops that cause them);
 //! * `Telemetry` — decimated windows cut from the streaming sampler's
@@ -18,7 +18,11 @@
 //! * `QueryEvents` — standing DQL queries (`dalek::query`): registered
 //!   expressions re-evaluated on a deterministic cadence or on
 //!   job/power edges, delivered as deltas (only when the result
-//!   changed), owner-scoped like the one-shot `query` op.
+//!   changed), owner-scoped like the one-shot `query` op;
+//! * `FaultEvents` — `dalek::faults` inject/recover notices (crash,
+//!   hang, brownout, throttle, link degradation), admin-only like
+//!   `PowerEvents`: the infrastructure view. Non-admin sessions see
+//!   the *consequences* on their own jobs as `JobEvents` requeues.
 //!
 //! Outboxes are bounded; on overflow the oldest events are dropped and
 //! the next poll leads with an explicit [`Event::Lagged`] signal, the
@@ -46,6 +50,7 @@ pub enum Channel {
     PowerEvents,
     Telemetry,
     QueryEvents,
+    FaultEvents,
 }
 
 impl Channel {
@@ -55,6 +60,7 @@ impl Channel {
             Channel::PowerEvents => "power_events",
             Channel::Telemetry => "telemetry",
             Channel::QueryEvents => "query_events",
+            Channel::FaultEvents => "fault_events",
         }
     }
 
@@ -64,6 +70,7 @@ impl Channel {
             "power_events" => Some(Channel::PowerEvents),
             "telemetry" => Some(Channel::Telemetry),
             "query_events" => Some(Channel::QueryEvents),
+            "fault_events" => Some(Channel::FaultEvents),
             _ => None,
         }
     }
@@ -74,6 +81,10 @@ impl Channel {
 pub enum JobEventKind {
     Queued,
     Started,
+    /// the job was evicted by a node fault and put back at the head of
+    /// the queue with its work ledger intact (classic jobs) or rolled
+    /// back to its last BSP barrier (app jobs)
+    Requeued,
     /// a §3.6 knob changed on one of the job's nodes; `rate` is the new
     /// slowest-allocated-node relative execution rate
     Repriced { rate: f64 },
@@ -130,6 +141,14 @@ pub enum Event {
         expr: String,
         result: Json,
     },
+    /// one fault-plane edge on `FaultEvents`: a `dalek::faults` fault
+    /// was injected (`injected`) or recovered (`!injected`) on `node`
+    Fault {
+        at: SimTime,
+        node: String,
+        kind: crate::faults::FaultKind,
+        injected: bool,
+    },
     /// the outbox overflowed (or telemetry windows aged past the
     /// rolling-history horizon): `missed` events/windows were dropped
     Lagged { missed: u64 },
@@ -150,6 +169,7 @@ impl Event {
                 match kind {
                     JobEventKind::Queued => fields.push(("kind", Json::from("queued"))),
                     JobEventKind::Started => fields.push(("kind", Json::from("started"))),
+                    JobEventKind::Requeued => fields.push(("kind", Json::from("requeued"))),
                     JobEventKind::Repriced { rate } => {
                         fields.push(("kind", Json::from("repriced")));
                         fields.push(("rate", Json::from(*rate)));
@@ -223,6 +243,33 @@ impl Event {
                 ("expr", Json::from(expr.as_str())),
                 ("result", result.clone()),
             ]),
+            Event::Fault {
+                at,
+                node,
+                kind,
+                injected,
+            } => {
+                let mut fields: Vec<(&str, Json)> = vec![
+                    ("event", Json::from("fault")),
+                    ("at_s", Json::from(at.as_secs_f64())),
+                    ("node", Json::from(node.as_str())),
+                    ("kind", Json::from(kind.label())),
+                    ("injected", Json::from(*injected)),
+                ];
+                match kind {
+                    crate::faults::FaultKind::Brownout { floor_w } => {
+                        fields.push(("floor_w", Json::from(*floor_w)))
+                    }
+                    crate::faults::FaultKind::Throttle { factor } => {
+                        fields.push(("factor", Json::from(*factor)))
+                    }
+                    crate::faults::FaultKind::LinkDegrade { fraction } => {
+                        fields.push(("fraction", Json::from(*fraction)))
+                    }
+                    crate::faults::FaultKind::Crash | crate::faults::FaultKind::Hang => {}
+                }
+                Json::object(fields)
+            }
             Event::Lagged { missed } => Json::object([
                 ("event", Json::from("lagged")),
                 ("missed", Json::from(*missed)),
@@ -313,6 +360,7 @@ mod tests {
             Channel::PowerEvents,
             Channel::Telemetry,
             Channel::QueryEvents,
+            Channel::FaultEvents,
         ] {
             assert_eq!(Channel::from_wire(c.as_str()), Some(c));
         }
@@ -383,5 +431,26 @@ mod tests {
         assert_eq!(t.get("mean_w").unwrap().as_f64(), Some(42.0));
         let l = Event::Lagged { missed: 7 }.to_json();
         assert_eq!(l.get("missed").unwrap().as_u64(), Some(7));
+        let f = Event::Fault {
+            at: SimTime::from_secs(5),
+            node: "az5-a890m-0".into(),
+            kind: crate::faults::FaultKind::Brownout { floor_w: 180.0 },
+            injected: true,
+        }
+        .to_json();
+        assert_eq!(f.get("event").unwrap().as_str(), Some("fault"));
+        assert_eq!(f.get("kind").unwrap().as_str(), Some("brownout"));
+        assert_eq!(f.get("floor_w").unwrap().as_f64(), Some(180.0));
+        assert_eq!(f.get("injected").unwrap().as_bool(), Some(true));
+        let r = Event::Fault {
+            at: SimTime::from_secs(6),
+            node: "az5-a890m-0".into(),
+            kind: crate::faults::FaultKind::Crash,
+            injected: false,
+        }
+        .to_json();
+        assert_eq!(r.get("kind").unwrap().as_str(), Some("crash"));
+        assert_eq!(r.get("injected").unwrap().as_bool(), Some(false));
+        assert!(r.get("floor_w").is_none());
     }
 }

@@ -20,8 +20,9 @@
 //!   runtime on one `sim::Kernel` ([`ClusterEvent`] is the routing
 //!   enum) and routes every request to the (crate-internal)
 //!   `SlurmApi`/`EnergyApi` targets
-//! * [`events`] — the streaming side: typed [`Event`]s on four
-//!   subscription channels (`JobEvents`, `PowerEvents`, `Telemetry`,
+//! * [`events`] — the streaming side: typed [`Event`]s on five
+//!   subscription channels (`JobEvents`, `PowerEvents`, `FaultEvents`
+//!   — the `dalek::faults` injection/recovery edges — `Telemetry`,
 //!   `QueryEvents` — standing DQL queries from [`crate::query`]),
 //!   buffered in bounded per-session outboxes with explicit lag
 //!   signaling; `run_job`/`alloc_nodes` are nonblocking [`Ticket`]s
@@ -42,7 +43,7 @@ pub mod protocol;
 pub mod server;
 pub mod session;
 
-pub use cluster_api::{ClusterApi, ClusterEvent, ClusterReport, PowerReport};
+pub use cluster_api::{ClusterApi, ClusterEvent, ClusterReport, FaultEvent, PowerReport};
 pub use error::DalekError;
 pub use events::{Channel, Event, JobEventKind, PowerEventKind, Ticket};
 pub use protocol::{JobRequest, JobView, Request, Response, WIRE_MAJOR};

@@ -39,6 +39,7 @@ use super::events::{Channel, Event};
 use super::session::SessionId;
 use crate::app::{AppSpec, Collective, PhaseSpec};
 use crate::energy::Sample;
+use crate::faults::FaultKind;
 use crate::sim::SimTime;
 use crate::slurm::{JobId, JobState};
 use crate::util::json::Json;
@@ -139,6 +140,16 @@ pub enum Request {
     /// Override a user's per-drain request budget on the multiplexing
     /// `ApiServer` (admin-only; a no-op outside a server).
     SetRateLimit { user: String, ops: u32 },
+    /// Inject one `dalek::faults` anomaly on a node right now, for
+    /// `duration` (admin-only). Kind-specific knobs travel as
+    /// `floor_w` / `factor` / `fraction`; crash and hang carry none.
+    /// Bulk seeded plans go through the operator surface
+    /// (`ClusterApi::install_fault_plan`), not the wire.
+    InjectFault {
+        node: String,
+        kind: FaultKind,
+        duration: SimTime,
+    },
 }
 
 /// A job snapshot on the wire.
@@ -213,6 +224,8 @@ pub enum Response {
     Unsubscribed { channel: Channel },
     Events { events: Vec<Event> },
     RateLimitSet { user: String, ops: u32 },
+    /// Acknowledges an immediate fault injection (`inject_fault`).
+    FaultInjected { node: String, kind: String },
     /// A DQL evaluation: the canonical expression spelling plus the
     /// typed scalar/vector/table result.
     QueryResult {
@@ -536,7 +549,7 @@ impl Request {
                 let channel = Channel::from_wire(&ch).ok_or_else(|| {
                     bad(format!(
                         "unknown channel `{ch}` \
-                         (job_events | power_events | telemetry | query_events)"
+                         (job_events | power_events | fault_events | telemetry | query_events)"
                     ))
                 })?;
                 let rate_hz = match j.get("rate_hz") {
@@ -572,7 +585,7 @@ impl Request {
                 let channel = Channel::from_wire(&ch).ok_or_else(|| {
                     bad(format!(
                         "unknown channel `{ch}` \
-                         (job_events | power_events | telemetry | query_events)"
+                         (job_events | power_events | fault_events | telemetry | query_events)"
                     ))
                 })?;
                 Request::Unsubscribe { channel }
@@ -597,6 +610,51 @@ impl Request {
                 Request::SetRateLimit {
                     user: need_str(j, "user")?,
                     ops,
+                }
+            }
+            "inject_fault" => {
+                let kind_s = need_str(j, "kind")?;
+                let ratio = |key: &str| -> Result<f64, DalekError> {
+                    let v = need_f64(j, key)?;
+                    if !v.is_finite() || v <= 0.0 || v > 1.0 {
+                        return Err(bad(format!("field `{key}` must be in (0, 1], got {v}")));
+                    }
+                    Ok(v)
+                };
+                let kind = match kind_s.as_str() {
+                    "crash" => FaultKind::Crash,
+                    "hang" => FaultKind::Hang,
+                    "brownout" => {
+                        let floor_w = need_f64(j, "floor_w")?;
+                        if !floor_w.is_finite() || floor_w <= 0.0 {
+                            return Err(bad(format!(
+                                "field `floor_w` must be a positive number of watts, \
+                                 got {floor_w}"
+                            )));
+                        }
+                        FaultKind::Brownout { floor_w }
+                    }
+                    "throttle" => FaultKind::Throttle {
+                        factor: ratio("factor")?,
+                    },
+                    "link_degrade" => FaultKind::LinkDegrade {
+                        fraction: ratio("fraction")?,
+                    },
+                    other => {
+                        return Err(bad(format!(
+                            "unknown fault kind `{other}` \
+                             (crash | hang | brownout | throttle | link_degrade)"
+                        )))
+                    }
+                };
+                let duration = secs(need_f64(j, "duration_s")?)?;
+                if duration == SimTime::ZERO {
+                    return Err(bad("field `duration_s` must be positive"));
+                }
+                Request::InjectFault {
+                    node: need_str(j, "node")?,
+                    kind,
+                    duration,
                 }
             }
             other => return Err(bad(format!("unknown op `{other}`"))),
@@ -765,6 +823,24 @@ impl Request {
                 push("user", Json::from(user.as_str()));
                 push("ops", Json::from(*ops));
                 "set_rate_limit"
+            }
+            Request::InjectFault {
+                node,
+                kind,
+                duration,
+            } => {
+                push("node", Json::from(node.as_str()));
+                push("kind", Json::from(kind.label()));
+                match *kind {
+                    FaultKind::Brownout { floor_w } => push("floor_w", Json::from(floor_w)),
+                    FaultKind::Throttle { factor } => push("factor", Json::from(factor)),
+                    FaultKind::LinkDegrade { fraction } => {
+                        push("fraction", Json::from(fraction))
+                    }
+                    FaultKind::Crash | FaultKind::Hang => {}
+                }
+                push("duration_s", Json::from(duration.as_secs_f64()));
+                "inject_fault"
             }
         };
         fields.push(("op".to_string(), Json::from(op)));
@@ -984,6 +1060,11 @@ impl Response {
                 push("ops", Json::from(*ops));
                 "rate_limit_set"
             }
+            Response::FaultInjected { node, kind } => {
+                push("node", Json::from(node.as_str()));
+                push("kind", Json::from(kind.as_str()));
+                "fault_injected"
+            }
             Response::QueryResult { expr, result } => {
                 push("expr", Json::from(expr.as_str()));
                 // splice the result's wire object (kind + payload) —
@@ -1151,6 +1232,26 @@ mod tests {
             Request::SetRateLimit {
                 user: "alice".into(),
                 ops: 2,
+            },
+            Request::InjectFault {
+                node: "az4-n4090-0".into(),
+                kind: FaultKind::Crash,
+                duration: SimTime::from_secs(120),
+            },
+            Request::InjectFault {
+                node: "az5-a890m-1".into(),
+                kind: FaultKind::Brownout { floor_w: 150.0 },
+                duration: SimTime::from_secs(60),
+            },
+            Request::InjectFault {
+                node: "az4-n4090-1".into(),
+                kind: FaultKind::Throttle { factor: 0.5 },
+                duration: SimTime::from_secs(300),
+            },
+            Request::InjectFault {
+                node: "az4-n4090-2".into(),
+                kind: FaultKind::LinkDegrade { fraction: 0.25 },
+                duration: SimTime::from_secs(90),
             },
         ];
         for req in reqs {
@@ -1368,6 +1469,54 @@ mod tests {
                 expr: None,
             }
         );
+    }
+
+    #[test]
+    fn inject_fault_wire_validation() {
+        // an unknown fault kind is refused with the menu
+        let e = Request::parse(
+            r#"{"op": "inject_fault", "node": "n", "kind": "emp", "duration_s": 10, "session": 1}"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("link_degrade"), "{e}");
+        // throttle factor and link fraction are ratios in (0, 1]
+        assert!(matches!(
+            Request::parse(
+                r#"{"op": "inject_fault", "node": "n", "kind": "throttle",
+                    "factor": 1.5, "duration_s": 10, "session": 1}"#
+            ),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(
+                r#"{"op": "inject_fault", "node": "n", "kind": "link_degrade",
+                    "fraction": 0, "duration_s": 10, "session": 1}"#
+            ),
+            Err(DalekError::BadRequest(_))
+        ));
+        // a brownout must state its floor; crash needs no knobs
+        assert!(matches!(
+            Request::parse(
+                r#"{"op": "inject_fault", "node": "n", "kind": "brownout",
+                    "duration_s": 10, "session": 1}"#
+            ),
+            Err(DalekError::BadRequest(_))
+        ));
+        // zero-length faults are refused at the wire
+        assert!(matches!(
+            Request::parse(
+                r#"{"op": "inject_fault", "node": "n", "kind": "crash",
+                    "duration_s": 0, "session": 1}"#
+            ),
+            Err(DalekError::BadRequest(_))
+        ));
+        let r = Response::FaultInjected {
+            node: "az4-n4090-0".into(),
+            kind: "crash".into(),
+        }
+        .to_json();
+        assert_eq!(r.get("type").unwrap().as_str(), Some("fault_injected"));
+        assert_eq!(r.get("kind").unwrap().as_str(), Some("crash"));
     }
 
     #[test]

@@ -169,6 +169,10 @@ impl AppEngine {
                 match n {
                     AppNotice::Started(id) => self.begin(slurm, net, topo, kernel, id, now),
                     AppNotice::Repriced(id) => self.repriced(slurm, kernel, id, now),
+                    // a fault evicted the job: the scheduler already
+                    // requeued it, tear the in-flight program down (a
+                    // no-op when the fault path checkpointed first)
+                    AppNotice::Interrupted(id) => self.cancel(net, kernel, id),
                 }
             }
         }
@@ -552,5 +556,28 @@ impl AppEngine {
                 net.cancel_flow_on(kernel, fid);
             }
         }
+    }
+
+    /// Checkpoint-and-tear-down for the fault path: BSP barriers are
+    /// the natural checkpoint lines, so the program's progress *is*
+    /// its completed-iteration count. Returns that count (None for
+    /// jobs the engine is not running) after cancelling the run like
+    /// [`AppEngine::cancel`]; the caller feeds it to
+    /// `Slurm::checkpoint_app` so the requeued job restarts from the
+    /// last barrier instead of from scratch. Partial-iteration work is
+    /// deliberately dropped — restarting mid-iteration has no
+    /// consistent cut, that is what the barrier is for.
+    pub fn checkpoint<E>(
+        &mut self,
+        net: &mut FlowNet,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+    ) -> Option<u32>
+    where
+        E: From<NetEvent>,
+    {
+        let iters = self.runs.get(&id).map(|run| run.iter)?;
+        self.cancel(net, kernel, id);
+        Some(iters)
     }
 }

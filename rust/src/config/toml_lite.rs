@@ -177,16 +177,57 @@ pub fn parse(src: &str) -> Result<BTreeMap<String, Value>, TomlError> {
 }
 
 fn strip_comment(line: &str) -> &str {
-    // respect '#' inside quoted strings
+    // respect '#' inside quoted strings; an escaped quote (`\"`) does
+    // not close the string, so it cannot flip the scanner out of
+    // string context and expose a later `#` for truncation
     let mut in_str = false;
+    let mut escaped = false;
     for (i, ch) in line.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if ch == '\\' {
+                escaped = true;
+            } else if ch == '"' {
+                in_str = false;
+            }
+            continue;
+        }
         match ch {
-            '"' => in_str = !in_str,
-            '#' if !in_str => return &line[..i],
+            '"' => in_str = true,
+            '#' => return &line[..i],
             _ => {}
         }
     }
     line
+}
+
+/// Scan a double-quoted string starting at the opening quote of `src`.
+/// Returns the unescaped content and the byte length consumed (opening
+/// through closing quote inclusive). `\n`, `\t`, `\"` and `\\` are
+/// unescaped; unknown escapes stay literal.
+fn scan_str(src: &str, lineno: usize) -> Result<(String, usize), TomlError> {
+    debug_assert!(src.starts_with('"'));
+    let mut out = String::new();
+    let mut chars = src.char_indices().skip(1); // past the opening quote
+    while let Some((i, ch)) = chars.next() {
+        match ch {
+            '"' => return Ok((out, i + 1)),
+            '\\' => match chars.next() {
+                Some((_, 'n')) => out.push('\n'),
+                Some((_, 't')) => out.push('\t'),
+                Some((_, '"')) => out.push('"'),
+                Some((_, '\\')) => out.push('\\'),
+                Some((_, other)) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => break,
+            },
+            c => out.push(c),
+        }
+    }
+    Err(TomlError::Syntax(lineno, "unterminated string".into()))
 }
 
 fn split_header(inner: &str, lineno: usize) -> Result<Vec<String>, TomlError> {
@@ -198,6 +239,14 @@ fn split_header(inner: &str, lineno: usize) -> Result<Vec<String>, TomlError> {
 }
 
 fn parse_key(k: &str, lineno: usize) -> Result<String, TomlError> {
+    // quoted keys may contain anything a string may (incl. `#`)
+    if k.starts_with('"') {
+        let (s, used) = scan_str(k, lineno)?;
+        if s.is_empty() || !k[used..].trim().is_empty() {
+            return Err(TomlError::Syntax(lineno, format!("bad key `{k}`")));
+        }
+        return Ok(s);
+    }
     if k.is_empty()
         || !k
             .chars()
@@ -257,14 +306,15 @@ fn parse_value(v: &str, lineno: usize) -> Result<Value, TomlError> {
     if v.is_empty() {
         return Err(TomlError::Syntax(lineno, "empty value".into()));
     }
-    if let Some(rest) = v.strip_prefix('"') {
-        let Some(s) = rest.strip_suffix('"') else {
-            return Err(TomlError::Syntax(lineno, "unterminated string".into()));
-        };
-        if s.contains('"') {
-            return Err(TomlError::Syntax(lineno, "embedded quote".into()));
+    if v.starts_with('"') {
+        let (s, used) = scan_str(v, lineno)?;
+        if !v[used..].trim().is_empty() {
+            return Err(TomlError::Syntax(
+                lineno,
+                format!("trailing characters after string: `{}`", &v[used..]),
+            ));
         }
-        return Ok(Value::Str(s.replace("\\n", "\n").replace("\\t", "\t")));
+        return Ok(Value::Str(s));
     }
     if v == "true" {
         return Ok(Value::Bool(true));
@@ -298,13 +348,24 @@ fn split_array_items(s: &str) -> Vec<&str> {
     let mut items = Vec::new();
     let mut depth = 0usize;
     let mut in_str = false;
+    let mut escaped = false;
     let mut start = 0usize;
     for (i, ch) in s.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if ch == '\\' {
+                escaped = true;
+            } else if ch == '"' {
+                in_str = false;
+            }
+            continue;
+        }
         match ch {
-            '"' => in_str = !in_str,
-            '[' if !in_str => depth += 1,
-            ']' if !in_str => depth = depth.saturating_sub(1),
-            ',' if !in_str && depth == 0 => {
+            '"' => in_str = true,
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
                 items.push(&s[start..i]);
                 start = i + 1;
             }
@@ -450,5 +511,50 @@ flag = true
     #[test]
     fn unterminated_string_rejected() {
         assert!(matches!(parse("s = \"oops\n"), Err(TomlError::Syntax(1, _))));
+    }
+
+    #[test]
+    fn hash_after_escaped_quote_is_not_a_comment() {
+        // pre-fix, the comment scanner toggled string context on the
+        // escaped quote and truncated the line at `#`
+        let doc = parse("a = \"x \\\" # y\"\n").unwrap();
+        assert_eq!(Value::get_str(&doc, "a").unwrap(), "x \" # y");
+    }
+
+    #[test]
+    fn comment_after_value_with_escaped_quote() {
+        // pre-fix this truncated mid-string and mis-reported the line
+        // as Syntax("unterminated string")
+        let doc = parse("a = \"x \\\" y\" # z\n").unwrap();
+        assert_eq!(Value::get_str(&doc, "a").unwrap(), "x \" y");
+    }
+
+    #[test]
+    fn quoted_key_may_contain_hash() {
+        let doc = parse("\"a#b\" = 1\n").unwrap();
+        assert_eq!(Value::get_int(&doc, "a#b").unwrap(), 1);
+    }
+
+    #[test]
+    fn array_items_with_escaped_quotes_and_hash() {
+        let doc = parse("xs = [\"p \\\" q\", \"r#s\"] # tail\n").unwrap();
+        assert_eq!(
+            doc["xs"].as_array().unwrap(),
+            &[Value::Str("p \" q".into()), Value::Str("r#s".into())]
+        );
+    }
+
+    #[test]
+    fn standard_escapes_unescape() {
+        let doc = parse("a = \"l1\\nl2\\tend\\\\\"\n").unwrap();
+        assert_eq!(Value::get_str(&doc, "a").unwrap(), "l1\nl2\tend\\");
+    }
+
+    #[test]
+    fn trailing_garbage_after_string_rejected() {
+        assert!(matches!(
+            parse("a = \"x\" y\n"),
+            Err(TomlError::Syntax(1, _))
+        ));
     }
 }

@@ -106,6 +106,31 @@ impl TraceGen {
         }
     }
 
+    /// The chaos-suite mix: steady arrivals dense enough that a seeded
+    /// [`FaultPlan`](crate::faults::FaultPlan) reliably lands faults on
+    /// busy nodes, with a slice of phase-structured `dalek::app`
+    /// programs so crash recovery exercises both the classic work
+    /// ledger and BSP barrier checkpointing, and GPU draw on the dGPU
+    /// partitions so brownout floors actually bind. Pairs with
+    /// `ClusterApi::install_fault_plan` in the golden chaos scenarios
+    /// (`tests/chaos.rs`).
+    pub fn chaos_mix(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed),
+            jobs_per_hour: 120.0,
+            partitions: vec![
+                ("az4-n4090".into(), 4),
+                ("az4-a7900".into(), 4),
+                ("iml-ia770".into(), 4),
+                ("az5-a890m".into(), 4),
+            ],
+            payloads: Vec::new(),
+            payload_fraction: 0.0,
+            gpu_partitions: vec!["az4-n4090".into(), "az4-a7900".into()],
+            app_fraction: 0.25,
+        }
+    }
+
     /// Generate `n` jobs starting at t=0.
     pub fn generate(&mut self, n: usize) -> Vec<TraceEvent> {
         let mut out = Vec::with_capacity(n);
@@ -518,6 +543,27 @@ mod tests {
         let report = replay(&mut cluster, &trace, false);
         assert_eq!(report.completed + report.timeouts, 12);
         assert_eq!(report.timeouts, 0, "app limits leave comm headroom");
+    }
+
+    #[test]
+    fn chaos_mix_is_deterministic_and_mixed() {
+        let a = TraceGen::chaos_mix(31).generate(100);
+        let b = TraceGen::chaos_mix(31).generate(100);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.spec.app, y.spec.app);
+            assert_eq!(x.spec.activity, y.spec.activity);
+        }
+        // the mix carries both classic jobs and programs, and the dGPU
+        // partitions draw GPU power (so brownout floors bind)
+        let apps = a.iter().filter(|e| e.spec.app.is_some()).count();
+        assert!(apps > 5, "only {apps} app jobs");
+        assert!(apps < 100, "no classic jobs left");
+        assert!(a
+            .iter()
+            .any(|e| e.spec.partition.starts_with("az4") && e.spec.activity.dgpu >= 0.7));
+        // dense: 100 jobs arrive within ~an hour on average
+        assert!(a.last().unwrap().at < SimTime::from_hours(2));
     }
 
     #[test]

@@ -355,10 +355,56 @@ impl StreamingSampler {
             .sum()
     }
 
+    /// The span a trailing-`window` rolling mean ending at `now`
+    /// actually averages over: the requested window clamped to both the
+    /// [`ROLLING_HORIZON`] retention limit and the elapsed run time.
+    /// Early in a run (`now < window`) there is simply less history
+    /// than the window asks for; the mean is then taken over the
+    /// shorter span rather than padded with fabricated zeros. Callers
+    /// that must know whether the answer covers the full requested
+    /// window compare this against `window` (see
+    /// [`StreamingSampler::rolling_mean_w_reported`]).
+    pub fn effective_window(&self, window: SimTime, now: SimTime) -> SimTime {
+        window.min(ROLLING_HORIZON).min(now)
+    }
+
+    /// [`StreamingSampler::rolling_mean_w`] with the clamp made
+    /// explicit: returns `(mean_w, effective_window)`, where the mean
+    /// was taken over exactly `effective_window` (which equals the
+    /// request iff enough history has elapsed and the request is within
+    /// the retention horizon).
+    pub fn rolling_mean_w_reported(&self, window: SimTime, now: SimTime) -> (f64, SimTime) {
+        (
+            self.rolling_mean_w(window, now),
+            self.effective_window(window, now),
+        )
+    }
+
+    /// Per-node [`StreamingSampler::rolling_mean_w_reported`]: one
+    /// node's trailing mean plus the effective (clamped) span it was
+    /// averaged over.
+    pub fn node_rolling_mean_w_reported(
+        &self,
+        node: usize,
+        window: SimTime,
+        now: SimTime,
+    ) -> (f64, SimTime) {
+        (
+            self.node_rolling_mean_w(node, window, now),
+            self.effective_window(window, now),
+        )
+    }
+
     /// One node's mean draw over the trailing `window` ending at `now`
     /// — the per-node term of [`StreamingSampler::rolling_mean_w`]
     /// (which is exactly the index-ordered sum of these), exposed for
     /// the query layer's windowed `nodes.<n>.power.watts` leaves.
+    ///
+    /// The window silently clamps to
+    /// [`StreamingSampler::effective_window`]: at `now = 0` there is no
+    /// span at all and the current level is returned; at `now <
+    /// window` the mean covers only the elapsed `[0, now)`. Use the
+    /// `*_reported` variants when the effective span matters.
     pub fn node_rolling_mean_w(&self, node: usize, window: SimTime, now: SimTime) -> f64 {
         let window = window.min(ROLLING_HORIZON);
         let from = SimTime(now.as_ns().saturating_sub(window.as_ns()));
@@ -656,6 +702,51 @@ mod tests {
         s.fold_rolling(&[t2], SimTime::from_secs(110));
         let m = s.rolling_mean_w(SimTime::from_secs(10), SimTime::from_secs(110));
         assert!((m - 10.0).abs() < 1e-9, "{m}");
+    }
+
+    #[test]
+    fn rolling_window_wider_than_elapsed_reports_effective_span() {
+        // the satellite-2 regression: early in a run the trailing
+        // window is wider than the elapsed time; the mean must be over
+        // the elapsed span only, and the clamp must be *reported*, not
+        // silent
+        let mut s = StreamingSampler::new();
+        s.add_node("a", 2.0);
+        let w = SimTime::from_secs(60);
+
+        // t = 0: no span at all — the current level, effective span 0
+        let (m, eff) = s.node_rolling_mean_w_reported(0, w, SimTime::ZERO);
+        assert_eq!(m, 2.0);
+        assert_eq!(eff, SimTime::ZERO);
+
+        // t = window/2: a step at t = 10 s to 12 W; the mean covers
+        // exactly [0, 30) (10 s at 2 W + 20 s at 12 W), not a
+        // zero-padded 60 s window
+        let tr = PowerTransition {
+            node: 0,
+            at: SimTime::from_secs(10),
+            watts: 12.0,
+        };
+        let half = SimTime::from_secs(30);
+        s.fold_rolling(&[tr], half);
+        let (m, eff) = s.node_rolling_mean_w_reported(0, w, half);
+        assert_eq!(eff, half);
+        let expect = (10.0 * 2.0 + 20.0 * 12.0) / 30.0;
+        assert!((m - expect).abs() < 1e-9, "{m} vs {expect}");
+        // the cluster-level variant agrees (single node)
+        let (cm, ceff) = s.rolling_mean_w_reported(w, half);
+        assert_eq!(ceff, half);
+        assert!((cm - expect).abs() < 1e-9);
+
+        // once the run is older than the window, the full request is in
+        // effect again
+        s.fold_rolling(&[], SimTime::from_secs(90));
+        let (_, eff) = s.node_rolling_mean_w_reported(0, w, SimTime::from_secs(90));
+        assert_eq!(eff, w);
+        // and a request beyond the retention horizon clamps to it
+        let (_, eff) =
+            s.node_rolling_mean_w_reported(0, SimTime::from_secs(600), SimTime::from_secs(90));
+        assert_eq!(eff, SimTime::from_secs(90));
     }
 
     #[test]

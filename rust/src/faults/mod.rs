@@ -1,0 +1,449 @@
+//! Seeded fault injection — the chaos layer that breaks the
+//! fair-weather world.
+//!
+//! A [`FaultPlan`] is a deterministic schedule of node-scoped faults
+//! (crashes, hangs, PSU brownouts, thermal throttling, NIC link
+//! degradation) generated from a seed and a set of [`ChaosKnobs`], or
+//! hand-written. The plan itself is pure data: it names nodes and
+//! times, nothing else. Arming it against a live cluster is the api
+//! layer's job (`api::ClusterApi::install_fault_plan`), which turns
+//! each [`FaultSpec`] into a pair of kernel events — inject at `at`,
+//! recover at `at + duration` — and routes them through the same
+//! dispatch loop as every other subsystem, so chaos runs are
+//! bit-for-bit reproducible.
+//!
+//! RNG discipline: each fault family draws from its own stream,
+//! derived from `(seed, family label)` alone — never from a shared
+//! cursor. Setting one family's count to zero therefore consumes no
+//! draws and cannot shift any other family's schedule, the same
+//! zero-probability rule the trace generator follows.
+//!
+//! Self-healing (what the injected faults exercise) lives where the
+//! state lives: the scheduler requeues or checkpoints victims and
+//! settles quota conservation-exactly (`slurm::scheduler`), the flow
+//! net re-rates transfers crossing a degraded link (`net::flow`), and
+//! the power-cap governor refuses to actuate faulted nodes.
+
+use std::collections::BTreeMap;
+
+use crate::config::toml_lite::{self, TomlError, Value};
+use crate::sim::SimTime;
+use crate::util::Xoshiro256;
+
+/// What goes wrong. Crash and hang carry no parameters — the live
+/// values they need (pre-hang draw, victim job) are captured at
+/// injection time from the node itself.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Hard power loss: node drops to 0 W, running job requeued.
+    Crash,
+    /// OS wedge: node freezes at its pre-hang draw, job requeued;
+    /// recovery is a watchdog power-cycle.
+    Hang,
+    /// PSU brownout: draw is floored at `floor_w`; work continues.
+    Brownout { floor_w: f64 },
+    /// Thermal throttle: compute rate is multiplied by `factor`.
+    Throttle { factor: f64 },
+    /// NIC drops a speed class: both link directions re-rate to
+    /// `fraction` of nominal capacity.
+    LinkDegrade { fraction: f64 },
+}
+
+impl FaultKind {
+    /// Stable label, used for RNG stream derivation and display.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Hang => "hang",
+            FaultKind::Brownout { .. } => "brownout",
+            FaultKind::Throttle { .. } => "throttle",
+            FaultKind::LinkDegrade { .. } => "link_degrade",
+        }
+    }
+}
+
+/// One scheduled fault: `node` suffers `kind` from `at` until
+/// `at + duration`, then recovers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub at: SimTime,
+    pub duration: SimTime,
+    pub node: String,
+    pub kind: FaultKind,
+}
+
+impl FaultSpec {
+    pub fn recovers_at(&self) -> SimTime {
+        self.at + self.duration
+    }
+}
+
+/// Generation knobs: how many faults of each family to place inside
+/// the horizon, and the parameter ranges they draw from.
+#[derive(Clone, Debug)]
+pub struct ChaosKnobs {
+    /// Faults are placed so that inject and recover both land in
+    /// `[0, horizon_s]`.
+    pub horizon_s: f64,
+    pub crashes: u32,
+    pub hangs: u32,
+    pub brownouts: u32,
+    pub throttles: u32,
+    pub link_degrades: u32,
+    /// Outage length range (uniform), shared by every family.
+    pub min_outage_s: f64,
+    pub max_outage_s: f64,
+    /// Brownout floor draw range, watts.
+    pub floor_w: (f64, f64),
+    /// Throttle rate-multiplier draw range, (0, 1].
+    pub factor: (f64, f64),
+    /// Link-degrade capacity fraction draw range, (0, 1].
+    pub fraction: (f64, f64),
+}
+
+impl Default for ChaosKnobs {
+    fn default() -> Self {
+        Self {
+            horizon_s: 3600.0,
+            crashes: 1,
+            hangs: 1,
+            brownouts: 1,
+            throttles: 1,
+            link_degrades: 1,
+            min_outage_s: 60.0,
+            max_outage_s: 600.0,
+            floor_w: (80.0, 250.0),
+            factor: (0.25, 0.75),
+            fraction: (0.1, 0.5),
+        }
+    }
+}
+
+fn opt_f64(t: &BTreeMap<String, Value>, key: &str, default: f64) -> Result<f64, TomlError> {
+    match t.get(key) {
+        Some(_) => Value::get_float(t, key),
+        None => Ok(default),
+    }
+}
+
+fn opt_u32(t: &BTreeMap<String, Value>, key: &str, default: u32) -> Result<u32, TomlError> {
+    match t.get(key) {
+        Some(_) => Ok(Value::get_int(t, key)?.max(0) as u32),
+        None => Ok(default),
+    }
+}
+
+impl ChaosKnobs {
+    /// Parse a `[chaos]` section from toml-lite source. Every key is
+    /// optional and falls back to the default; unknown keys are
+    /// ignored (forward compatibility with scenario files).
+    ///
+    /// ```toml
+    /// [chaos]
+    /// horizon_s = 7200.0
+    /// crashes = 2
+    /// brownouts = 1
+    /// floor_w_lo = 100.0   # "quoted # is not a comment" — see toml_lite
+    /// ```
+    pub fn from_toml(src: &str) -> Result<Self, TomlError> {
+        let root = toml_lite::parse(src)?;
+        let d = Self::default();
+        let empty = BTreeMap::new();
+        let t = match root.get("chaos") {
+            Some(v) => v
+                .as_table()
+                .ok_or(TomlError::Type("chaos".into(), "table"))?,
+            None => &empty,
+        };
+        Ok(Self {
+            horizon_s: opt_f64(t, "horizon_s", d.horizon_s)?,
+            crashes: opt_u32(t, "crashes", d.crashes)?,
+            hangs: opt_u32(t, "hangs", d.hangs)?,
+            brownouts: opt_u32(t, "brownouts", d.brownouts)?,
+            throttles: opt_u32(t, "throttles", d.throttles)?,
+            link_degrades: opt_u32(t, "link_degrades", d.link_degrades)?,
+            min_outage_s: opt_f64(t, "min_outage_s", d.min_outage_s)?,
+            max_outage_s: opt_f64(t, "max_outage_s", d.max_outage_s)?,
+            floor_w: (
+                opt_f64(t, "floor_w_lo", d.floor_w.0)?,
+                opt_f64(t, "floor_w_hi", d.floor_w.1)?,
+            ),
+            factor: (
+                opt_f64(t, "factor_lo", d.factor.0)?,
+                opt_f64(t, "factor_hi", d.factor.1)?,
+            ),
+            fraction: (
+                opt_f64(t, "fraction_lo", d.fraction.0)?,
+                opt_f64(t, "fraction_hi", d.fraction.1)?,
+            ),
+        })
+    }
+}
+
+/// A deterministic fault schedule: sorted by `(at, node)`, at most one
+/// fault active per node at any instant.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub faults: Vec<FaultSpec>,
+}
+
+/// Per-family RNG: depends only on `(seed, label)`, so families are
+/// mutually independent and a disabled family consumes no draws.
+fn family_rng(seed: u64, label: &str) -> Xoshiro256 {
+    Xoshiro256::new(seed).fork(label)
+}
+
+impl FaultPlan {
+    /// Generate a plan over `nodes` (by name). Faults never overlap on
+    /// a node: a placement colliding with an earlier one on the same
+    /// node is re-drawn (bounded retries), and dropped if the node set
+    /// is too saturated to place it — `generate` is total, never
+    /// panics, and is a pure function of its arguments.
+    pub fn generate(knobs: &ChaosKnobs, nodes: &[String], seed: u64) -> Self {
+        let mut busy: BTreeMap<&str, Vec<(f64, f64)>> = BTreeMap::new();
+        let mut faults = Vec::new();
+        if nodes.is_empty() {
+            return Self { seed, faults };
+        }
+        let families: [(u32, &str); 5] = [
+            (knobs.crashes, "crash"),
+            (knobs.hangs, "hang"),
+            (knobs.brownouts, "brownout"),
+            (knobs.throttles, "throttle"),
+            (knobs.link_degrades, "link_degrade"),
+        ];
+        let max_outage = knobs.max_outage_s.min(knobs.horizon_s).max(0.0);
+        let min_outage = knobs.min_outage_s.clamp(0.0, max_outage);
+        for (count, label) in families {
+            if count == 0 {
+                continue;
+            }
+            let mut rng = family_rng(seed, label);
+            for _ in 0..count {
+                // bounded rejection sampling against per-node overlap
+                for _attempt in 0..32 {
+                    let node = &nodes[rng.index(nodes.len())];
+                    let dur = rng.uniform_f64(min_outage, max_outage);
+                    let at = rng.uniform_f64(0.0, (knobs.horizon_s - dur).max(0.0));
+                    let end = at + dur;
+                    let slots = busy.entry(node.as_str()).or_default();
+                    if slots.iter().any(|&(s, e)| at < e && s < end) {
+                        continue;
+                    }
+                    slots.push((at, end));
+                    let kind = match label {
+                        "crash" => FaultKind::Crash,
+                        "hang" => FaultKind::Hang,
+                        "brownout" => FaultKind::Brownout {
+                            floor_w: rng.uniform_f64(knobs.floor_w.0, knobs.floor_w.1),
+                        },
+                        "throttle" => FaultKind::Throttle {
+                            factor: rng.uniform_f64(knobs.factor.0, knobs.factor.1),
+                        },
+                        _ => FaultKind::LinkDegrade {
+                            fraction: rng.uniform_f64(knobs.fraction.0, knobs.fraction.1),
+                        },
+                    };
+                    faults.push(FaultSpec {
+                        at: SimTime::from_secs_f64(at),
+                        duration: SimTime::from_secs_f64(dur),
+                        node: node.clone(),
+                        kind,
+                    });
+                    break;
+                }
+            }
+        }
+        faults.sort_by(|a, b| (a.at, &a.node).cmp(&(b.at, &b.node)));
+        Self { seed, faults }
+    }
+
+    /// Check the per-node non-overlap invariant (for hand-written
+    /// plans; generated plans hold it by construction).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut by_node: BTreeMap<&str, Vec<(SimTime, SimTime)>> = BTreeMap::new();
+        for f in &self.faults {
+            by_node
+                .entry(f.node.as_str())
+                .or_default()
+                .push((f.at, f.recovers_at()));
+        }
+        for (node, mut spans) in by_node {
+            spans.sort();
+            for w in spans.windows(2) {
+                if w[1].0 < w[0].1 {
+                    return Err(format!(
+                        "overlapping faults on {node}: [{:?},{:?}) and [{:?},{:?})",
+                        w[0].0, w[0].1, w[1].0, w[1].1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("node-{i}")).collect()
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_counts_respected() {
+        let knobs = ChaosKnobs {
+            crashes: 2,
+            hangs: 2,
+            brownouts: 3,
+            throttles: 2,
+            link_degrades: 2,
+            ..ChaosKnobs::default()
+        };
+        let nodes = names(16);
+        let a = FaultPlan::generate(&knobs, &nodes, 42);
+        let b = FaultPlan::generate(&knobs, &nodes, 42);
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.len(), 11); // 16 nodes, 1h horizon: all place
+        a.validate().unwrap();
+        // sorted by time
+        for w in a.faults.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        // a different seed gives a different plan
+        let c = FaultPlan::generate(&knobs, &nodes, 43);
+        assert_ne!(a.faults, c.faults);
+    }
+
+    #[test]
+    fn families_are_independent_streams() {
+        // turning crashes off must not move any brownout or throttle
+        let nodes = names(16);
+        let with = ChaosKnobs {
+            crashes: 3,
+            hangs: 0,
+            link_degrades: 0,
+            ..ChaosKnobs::default()
+        };
+        let without = ChaosKnobs {
+            crashes: 0,
+            ..with.clone()
+        };
+        let keep = |p: &FaultPlan| {
+            p.faults
+                .iter()
+                .filter(|f| !matches!(f.kind, FaultKind::Crash))
+                .cloned()
+                .collect::<Vec<_>>()
+        };
+        let a = FaultPlan::generate(&with, &nodes, 7);
+        let b = FaultPlan::generate(&without, &nodes, 7);
+        assert!(!keep(&a).is_empty());
+        assert_eq!(keep(&a), keep(&b));
+    }
+
+    #[test]
+    fn zero_counts_and_empty_node_set_yield_empty_plans() {
+        let knobs = ChaosKnobs {
+            crashes: 0,
+            hangs: 0,
+            brownouts: 0,
+            throttles: 0,
+            link_degrades: 0,
+            ..ChaosKnobs::default()
+        };
+        assert!(FaultPlan::generate(&knobs, &names(4), 1).is_empty());
+        assert!(FaultPlan::generate(&ChaosKnobs::default(), &[], 1).is_empty());
+    }
+
+    #[test]
+    fn parameters_drawn_inside_knob_ranges_and_inside_horizon() {
+        let knobs = ChaosKnobs {
+            horizon_s: 1000.0,
+            crashes: 4,
+            hangs: 4,
+            brownouts: 4,
+            throttles: 4,
+            link_degrades: 4,
+            min_outage_s: 10.0,
+            max_outage_s: 50.0,
+            floor_w: (100.0, 120.0),
+            factor: (0.4, 0.6),
+            fraction: (0.2, 0.3),
+        };
+        let plan = FaultPlan::generate(&knobs, &names(8), 99);
+        assert!(!plan.is_empty());
+        for f in &plan.faults {
+            assert!(f.at.as_secs_f64() >= 0.0);
+            assert!(f.recovers_at().as_secs_f64() <= 1000.0 + 1e-9);
+            let d = f.duration.as_secs_f64();
+            assert!((10.0..=50.0).contains(&d), "outage {d}");
+            match f.kind {
+                FaultKind::Brownout { floor_w } => {
+                    assert!((100.0..=120.0).contains(&floor_w))
+                }
+                FaultKind::Throttle { factor } => assert!((0.4..=0.6).contains(&factor)),
+                FaultKind::LinkDegrade { fraction } => {
+                    assert!((0.2..=0.3).contains(&fraction))
+                }
+                FaultKind::Crash | FaultKind::Hang => {}
+            }
+        }
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_overlap_on_one_node() {
+        let mk = |at, dur| FaultSpec {
+            at: SimTime::from_secs(at),
+            duration: SimTime::from_secs(dur),
+            node: "n0".into(),
+            kind: FaultKind::Crash,
+        };
+        let ok = FaultPlan {
+            seed: 0,
+            faults: vec![mk(0, 10), mk(10, 5)], // back-to-back is legal
+        };
+        ok.validate().unwrap();
+        let bad = FaultPlan {
+            seed: 0,
+            faults: vec![mk(0, 10), mk(9, 5)],
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn knobs_parse_from_toml_with_defaults_for_missing_keys() {
+        let src = r#"
+            # scenario file
+            [chaos]
+            horizon_s = 7200.0
+            crashes = 2
+            brownouts = 0
+            floor_w_lo = 100.0  # trailing comment
+            name = "has # inside quotes"
+        "#;
+        let k = ChaosKnobs::from_toml(src).unwrap();
+        assert_eq!(k.horizon_s, 7200.0);
+        assert_eq!(k.crashes, 2);
+        assert_eq!(k.brownouts, 0);
+        assert_eq!(k.floor_w, (100.0, ChaosKnobs::default().floor_w.1));
+        // untouched families keep their defaults
+        let d = ChaosKnobs::default();
+        assert_eq!(k.hangs, d.hangs);
+        assert_eq!(k.throttles, d.throttles);
+        // no [chaos] section at all -> pure defaults
+        let k2 = ChaosKnobs::from_toml("x = 1").unwrap();
+        assert_eq!(k2.crashes, d.crashes);
+    }
+}

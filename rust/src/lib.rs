@@ -37,6 +37,12 @@
 //!   [`energy::StreamingSampler`] consumes the scheduler's transition
 //!   stream and emits each constant-power segment's 1 kSPS samples in
 //!   one closed-form batch (cost ∝ power changes, not simulated time)
+//! * [`faults`] — seeded fault injection: a [`faults::FaultPlan`] is a
+//!   deterministic schedule of crashes, hangs, PSU brownouts, thermal
+//!   throttles and NIC link degradations, armed through the api layer
+//!   as kernel events; self-healing lives in the layers (scheduler
+//!   requeue/checkpoint, flow re-rating, governor refusal) so chaos
+//!   runs stay bit-for-bit reproducible
 //! * [`app`] — phase-structured MPI-style applications (§6.2):
 //!   [`app::AppSpec`] programs of compute phases (rated through the
 //!   §3.6 knobs) and collectives (bcast/allreduce/alltoall/halo/p2p/
@@ -76,6 +82,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod faults;
 pub mod hw;
 pub mod net;
 pub mod power;

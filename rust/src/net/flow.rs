@@ -343,6 +343,39 @@ impl FlowNet {
         existed
     }
 
+    /// Re-rate one host's NIC at the kernel's current time — the
+    /// `dalek::faults` link-degradation hook (and its recovery: pass
+    /// the nominal capacity back). Both directions move together, like
+    /// a real autonegotiated link dropping a speed class. In-flight
+    /// flows are first advanced at their old rates up to now, then the
+    /// whole allocation is re-solved max-min fairly against the new
+    /// capacity (a capacity change can shift bottlenecks anywhere, so
+    /// this is the one mutation that always takes the global solve)
+    /// and the single completion event is re-armed.
+    pub fn set_host_nic_bps<E: From<NetEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        host: HostId,
+        bps: f64,
+    ) {
+        let now = kernel.now().max(self.now);
+        self.advance_to(now);
+        self.capacity.insert(LinkId::Up(host), bps);
+        self.capacity.insert(LinkId::Down(host), bps);
+        self.recompute_rates();
+        self.reschedule(kernel);
+    }
+
+    /// A host's currently configured NIC capacity in bits/s (uplink ==
+    /// downlink). The fault layer reads this before degrading a link so
+    /// recovery can restore the exact pre-fault capacity.
+    pub fn host_nic_bps(&self, host: HostId) -> f64 {
+        self.capacity
+            .get(&LinkId::Up(host))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
     /// Handle a due [`NetEvent`]: drain every flow completing at or
     /// before `now`, then re-arm. Returns the completed flow ids.
     pub fn on_event<E: From<NetEvent>>(
@@ -878,6 +911,39 @@ mod tests {
         check(&n);
         assert!((n.rate(_ab).unwrap() - 2.5e9).abs() < 1.0);
         assert!((n.rate(_cd).unwrap() - 2.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn nic_degradation_rerates_in_flight_and_recovery_restores() {
+        // the dalek::faults link-degradation hook: a mid-transfer NIC
+        // re-rate must advance the flow at the old rate first, then
+        // re-solve and re-arm the completion event — and restoring the
+        // nominal capacity must recover, with byte accounting exact
+        let (t, mut n) = net();
+        let mut kernel: Kernel<NetEvent> = Kernel::new();
+        let a = t.by_name("az4-n4090-0.dalek").unwrap();
+        let b = t.by_name("az4-n4090-1.dalek").unwrap();
+        // 1 GB at 2.5 G -> nominally done at 3.2 s
+        let f = n.start_flow_on(&mut kernel, a, b, gb(1));
+        assert!((n.rate(f).unwrap() - 2.5e9).abs() < 1.0);
+        assert!((kernel.peek_time().unwrap().as_secs_f64() - 3.2).abs() < 1e-6);
+        // halve b's link at 1.6 s: 0.5 GB remain at 1.25 G -> 3.2 s more
+        kernel.advance_to(SimTime::from_secs_f64(1.6));
+        n.set_host_nic_bps(&mut kernel, b, 1.25e9);
+        assert!((n.rate(f).unwrap() - 1.25e9).abs() < 1.0);
+        assert_eq!(kernel.pending(), 1); // stale event cancelled, one re-armed
+        assert!((kernel.peek_time().unwrap().as_secs_f64() - 4.8).abs() < 1e-6);
+        let naive = n.rates_naive();
+        assert_eq!(n.rate(f).unwrap().to_bits(), naive[&f].to_bits());
+        // recover at 3.2 s: 0.25 GB remain, back at 2.5 G -> done at 4.0 s
+        kernel.advance_to(SimTime::from_secs_f64(3.2));
+        n.set_host_nic_bps(&mut kernel, b, 2.5e9);
+        assert!((n.rate(f).unwrap() - 2.5e9).abs() < 1.0);
+        let (at, _ev) = kernel.pop_due(SimTime::from_secs(10)).unwrap();
+        assert!((at.as_secs_f64() - 4.0).abs() < 1e-6);
+        assert_eq!(n.on_event(&mut kernel, at), vec![f]);
+        assert_eq!(n.completed_flows, 1);
+        assert!(kernel.is_idle());
     }
 
     #[test]

@@ -167,6 +167,19 @@ impl NodePowerFsm {
         }
     }
 
+    /// Hard power loss (crash / watchdog power-cycle): the node drops
+    /// to Suspended from *any* state, with no clean shutdown and no
+    /// scheduled completion. Unlike every other transition this one
+    /// cannot fail — physics does not consult the state machine. The
+    /// caller must cancel any BootComplete/ShutdownComplete events it
+    /// scheduled for this node (they now describe a machine that no
+    /// longer exists) and account the energy up to `now` itself. The
+    /// boot/suspend lifetime counters are untouched: a crash is not an
+    /// orderly §3.4 cycle.
+    pub fn power_cut(&mut self, _now: SimTime) {
+        self.state = PowerState::Suspended;
+    }
+
     /// Idle duration as of `now` (None unless idle) — the §3.4 policy input.
     pub fn idle_for(&self, now: SimTime) -> Option<SimTime> {
         match self.state {
@@ -263,6 +276,29 @@ mod tests {
         assert!(f.wake(SimTime::from_secs(705)).is_err());
         f.shutdown_complete(SimTime::from_secs(720)).unwrap();
         assert!(f.wake(SimTime::from_secs(721)).is_ok());
+    }
+
+    #[test]
+    fn power_cut_drops_any_state_without_counting_a_cycle() {
+        // from Allocated (the crash-under-load case)
+        let mut f = fsm();
+        f.wake(SimTime::ZERO).unwrap();
+        f.boot_complete(SimTime::from_secs(95)).unwrap();
+        f.allocate().unwrap();
+        f.power_cut(SimTime::from_secs(100));
+        assert_eq!(f.state(), PowerState::Suspended);
+        assert_eq!((f.boots, f.suspends), (1, 0));
+        // from mid-boot: the pending BootComplete is now stale (the
+        // coordinator cancels it); a later wake restarts cleanly
+        f.wake(SimTime::from_secs(200)).unwrap();
+        f.power_cut(SimTime::from_secs(210));
+        assert_eq!(f.state(), PowerState::Suspended);
+        assert!(f.wake(SimTime::from_secs(220)).is_ok());
+        // from mid-suspend
+        f.boot_complete(SimTime::from_secs(315)).unwrap();
+        f.suspend(SimTime::from_secs(400)).unwrap();
+        f.power_cut(SimTime::from_secs(405));
+        assert_eq!(f.state(), PowerState::Suspended);
     }
 
     #[test]

@@ -12,9 +12,11 @@
 //!
 //! ```text
 //! cluster.{watts, energy_j, measured_energy_j, jobs_pending,
-//!          jobs_completed, now_s}
+//!          jobs_completed, now_s, faults_injected, fault_requeues,
+//!          mtbf_s}
 //! nodes.<name>.{name, partition, state, running, capped, boots,
-//!               suspends, power.{watts, energy_j}, measured.energy_j}
+//!               suspends, power.{watts, energy_j}, measured.energy_j,
+//!               faults.{active, kind, param}}
 //! jobs.<id>.{id, user, partition, state, nodes, energy_j, rate,
 //!            submitted_s, started_s, finished_s, wait_s, run_s}
 //! partitions.<name>.{name, nodes, running, watts, queue.depth}
@@ -48,7 +50,7 @@ use crate::energy::StreamingSampler;
 use crate::net::{FlowNet, HostId, Topology};
 use crate::power::PowerState;
 use crate::sim::SimTime;
-use crate::slurm::{JobId, Slurm};
+use crate::slurm::{JobId, NodeFault, Slurm};
 
 /// A scalar value at a tree leaf.
 #[derive(Clone, PartialEq, Debug)]
@@ -163,19 +165,35 @@ impl<'a> ClusterTree<'a> {
         match rest {
             [] => Ok(Some(TreeNode::Interior(names(&[
                 "energy_j",
+                "fault_requeues",
+                "faults_injected",
                 "jobs_completed",
                 "jobs_pending",
                 "measured_energy_j",
+                "mtbf_s",
                 "now_s",
                 "watts",
             ])))),
             [k] => match k.as_str() {
                 "energy_j" => leaf(QueryValue::Num(self.slurm.total_energy_j())),
+                "fault_requeues" => {
+                    leaf(QueryValue::Num(self.slurm.stats.fault_requeues as f64))
+                }
+                "faults_injected" => {
+                    leaf(QueryValue::Num(self.slurm.stats.faults_injected as f64))
+                }
                 "jobs_completed" => {
                     leaf(QueryValue::Num(self.slurm.stats.completed as f64))
                 }
                 "jobs_pending" => leaf(QueryValue::Num(self.slurm.pending_count() as f64)),
                 "measured_energy_j" => leaf(QueryValue::Num(self.energy.total_energy_j())),
+                // observed mean time between failures over this run;
+                // null until the first injection (not 0 — "no failures
+                // yet" must not read as "fails constantly")
+                "mtbf_s" => leaf(match self.slurm.stats.faults_injected {
+                    0 => QueryValue::Null,
+                    n => QueryValue::Num(self.now.as_secs_f64() / n as f64),
+                }),
                 "now_s" => leaf(QueryValue::Num(self.now.as_secs_f64())),
                 "watts" => leaf(QueryValue::Num(self.slurm.cluster_watts())),
                 _ => Ok(None),
@@ -202,6 +220,7 @@ impl<'a> ClusterTree<'a> {
             [] => Ok(Some(TreeNode::Interior(names(&[
                 "boots",
                 "capped",
+                "faults",
                 "measured",
                 "name",
                 "partition",
@@ -213,6 +232,9 @@ impl<'a> ClusterTree<'a> {
             [k] => match k.as_str() {
                 "boots" => leaf(QueryValue::Num(info.boots as f64)),
                 "capped" => leaf(QueryValue::Bool(self.slurm.node_capped(idx))),
+                "faults" => Ok(Some(TreeNode::Interior(names(&[
+                    "active", "kind", "param",
+                ])))),
                 "measured" => Ok(Some(TreeNode::Interior(names(&["energy_j"])))),
                 "name" => leaf(QueryValue::Str(info.name)),
                 "partition" => leaf(QueryValue::Str(info.partition)),
@@ -228,6 +250,23 @@ impl<'a> ClusterTree<'a> {
             [k, l] => match (k.as_str(), l.as_str()) {
                 ("power", "watts") => leaf(QueryValue::Num(info.watts)),
                 ("power", "energy_j") => leaf(QueryValue::Num(info.energy_j)),
+                // live `dalek::faults` state: whether an anomaly holds
+                // the node, which kind, and its bound knob value (the
+                // hang hold draw, brownout floor or throttle factor)
+                ("faults", "active") => leaf(QueryValue::Bool(info.fault.is_some())),
+                ("faults", "kind") => leaf(match info.fault {
+                    Some(NodeFault::Crashed) => QueryValue::Str("crash".into()),
+                    Some(NodeFault::Hung { .. }) => QueryValue::Str("hang".into()),
+                    Some(NodeFault::Brownout { .. }) => QueryValue::Str("brownout".into()),
+                    Some(NodeFault::Throttled { .. }) => QueryValue::Str("throttle".into()),
+                    None => QueryValue::Null,
+                }),
+                ("faults", "param") => leaf(match info.fault {
+                    Some(NodeFault::Hung { hold_w }) => QueryValue::Num(hold_w),
+                    Some(NodeFault::Brownout { floor_w }) => QueryValue::Num(floor_w),
+                    Some(NodeFault::Throttled { factor }) => QueryValue::Num(factor),
+                    Some(NodeFault::Crashed) | None => QueryValue::Null,
+                }),
                 ("measured", "energy_j") => {
                     let j = self
                         .energy

@@ -43,6 +43,6 @@ pub use job::{Job, JobId, JobSpec, JobState};
 pub use policy::{GovernorStats, PlacementPolicy, PolicyEvent, PowerGovernor};
 pub use quota::{QuotaDb, QuotaDecision};
 pub use scheduler::{
-    AdminPowerOutcome, AppNotice, JobLifecycle, JobNotice, NodeDraw, NodeInfo, PowerNotice,
-    SchedEvent, SchedPolicy, Slurm, SlurmSim, SlurmStats,
+    AdminPowerOutcome, AppNotice, FaultNotice, JobLifecycle, JobNotice, NodeDraw, NodeFault,
+    NodeInfo, PowerNotice, SchedEvent, SchedPolicy, Slurm, SlurmSim, SlurmStats,
 };

@@ -81,6 +81,10 @@ pub enum AppNotice {
     /// a knob changed on a node running an app job: per-rank rates
     /// must be re-read and the barrier re-armed
     Repriced(JobId),
+    /// a fault evicted a running app job: the engine must tear down
+    /// its in-flight program (the job itself is already requeued; the
+    /// api layer checkpoints completed BSP iterations into the spec)
+    Interrupted(JobId),
 }
 
 /// One step of a job's lifecycle, published for the `dalek::api`
@@ -96,8 +100,11 @@ pub enum JobLifecycle {
     /// a §3.6 knob changed on an allocated node; `rate` is the new
     /// slowest-allocated-node relative execution rate
     Repriced { rate: f64 },
-    /// terminal; `energy_j` is the measured settlement joules (0 for
-    /// jobs that never started)
+    /// a fault evicted the job back into the pending queue; its work
+    /// ledger and already-burned joules are banked, not lost
+    Requeued,
+    /// terminal; `energy_j` is the measured settlement joules across
+    /// every run segment (0 for jobs that never started)
     Finished { state: JobState, energy_j: f64 },
 }
 
@@ -119,6 +126,41 @@ pub struct PowerNotice {
     pub cpu_cap_w: Option<f64>,
     pub gpu_cap_w: Option<f64>,
     pub powersave: bool,
+}
+
+/// An injected node anomaly — physics the scheduler must route
+/// around, not a state it controls. While any fault is active the
+/// node is grounded: unclaimable for placement, refused by
+/// [`Slurm::admin_power`], and skipped by
+/// [`Slurm::apply_power_knobs`] (its draw is a floor the §3.6
+/// governor plans around, not a knob it may move).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NodeFault {
+    /// hard power loss: draw drops to 0 W, the FSM is cut to
+    /// `Suspended`, any running/configuring job here is requeued
+    Crashed,
+    /// wedged machine: draw freezes at the pre-hang watts; the job is
+    /// requeued (it makes no progress on a frozen host) and recovery
+    /// power-cycles the node
+    Hung { hold_w: f64 },
+    /// PSU brownout: the node's draw floor rises to `floor_w`
+    /// (uncappable); running work continues at full rate
+    Brownout { floor_w: f64 },
+    /// thermal throttling: the relative execution rate is multiplied
+    /// by `factor` (< 1); running work is repriced, draw unchanged
+    Throttled { factor: f64 },
+}
+
+/// A timestamped fault inject/recover record
+/// ([`Slurm::take_fault_notices`]) — fanned out to the `FaultEvents`
+/// stream and aggregated into DQL's `cluster.mtbf`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultNotice {
+    pub at: SimTime,
+    pub node: usize,
+    pub fault: NodeFault,
+    /// true = injected, false = recovered
+    pub injected: bool,
 }
 
 /// Result of a §4.3 manual power action ([`Slurm::admin_power`]).
@@ -151,6 +193,12 @@ struct NodeEntry {
     /// ranks idle). `None` = the running job's own activity.
     activity_override: Option<Activity>,
     suspend_timer: Option<ScheduledId>,
+    /// the active injected anomaly, if any (see [`NodeFault`])
+    fault: Option<NodeFault>,
+    /// in-flight BootComplete/ShutdownComplete events, cancelled when
+    /// a crash/hang makes them describe a machine that no longer runs
+    boot_ev: Option<ScheduledId>,
+    shutdown_ev: Option<ScheduledId>,
     // exact energy integration
     last_change: SimTime,
     cur_watts: f64,
@@ -193,6 +241,7 @@ pub struct NodeInfo {
     pub watts: f64,
     pub boots: u32,
     pub suspends: u32,
+    pub fault: Option<NodeFault>,
 }
 
 /// Aggregate counters.
@@ -204,6 +253,10 @@ pub struct SlurmStats {
     pub cancelled: u64,
     pub total_wait_s: f64,
     pub total_run_s: f64,
+    /// faults injected so far (MTBF numerator lives in elapsed time)
+    pub faults_injected: u64,
+    /// jobs evicted back into the queue by a crash/hang
+    pub fault_requeues: u64,
 }
 
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -317,6 +370,9 @@ pub struct Slurm {
     /// §3.6 knob actuations since the last drain — fanned out to
     /// `PowerEvents` subscribers
     power_notices: Vec<PowerNotice>,
+    /// fault inject/recover records since the last drain — fanned out
+    /// to `FaultEvents` subscribers
+    fault_notices: Vec<FaultNotice>,
     pub policy: SchedPolicy,
     pub power_policy: PowerPolicyConfig,
     /// per-partition placement policy (§6.2): absent means first-fit
@@ -349,6 +405,9 @@ impl Slurm {
                     reserved_for: None,
                     activity_override: None,
                     suspend_timer: None,
+                    fault: None,
+                    boot_ev: None,
+                    shutdown_ev: None,
                     last_change: SimTime::ZERO,
                     cur_watts: model.power.suspend_w,
                     energy_j: 0.0,
@@ -398,6 +457,7 @@ impl Slurm {
             app_notices: Vec::new(),
             job_notices: Vec::new(),
             power_notices: Vec::new(),
+            fault_notices: Vec::new(),
             policy,
             power_policy: cfg.power.clone(),
             placement: BTreeMap::new(),
@@ -416,7 +476,7 @@ impl Slurm {
     /// after every mutation of any of those.
     fn reindex_node(&mut self, idx: usize) {
         let n = &self.nodes[idx];
-        let class = if n.reserved_for.is_none() && n.running.is_none() {
+        let class = if n.fault.is_none() && n.reserved_for.is_none() && n.running.is_none() {
             match n.fsm.state() {
                 PowerState::Idle { .. } => Some(0),
                 PowerState::Booting { .. } => Some(1),
@@ -498,6 +558,7 @@ impl Slurm {
             watts: n.cur_watts,
             boots: n.fsm.boots,
             suspends: n.fsm.suspends,
+            fault: n.fault,
         }
     }
 
@@ -591,6 +652,15 @@ impl Slurm {
             PowerState::Suspending { .. } => n.power.idle_w(),
             PowerState::Idle { .. } => n.power.watts(Activity::idle()),
             PowerState::Allocated => n.power.watts(activity.unwrap_or_default()),
+        };
+        // fault overrides are physics, not policy: a crashed node
+        // draws nothing, a hung one freezes at its pre-hang watts, a
+        // brownout raises the floor whatever the FSM state says
+        n.cur_watts = match n.fault {
+            Some(NodeFault::Crashed) => 0.0,
+            Some(NodeFault::Hung { hold_w }) => hold_w,
+            Some(NodeFault::Brownout { floor_w }) => n.cur_watts.max(floor_w),
+            _ => n.cur_watts,
         };
         if (n.cur_watts - old_watts).abs() > 1e-12 {
             self.transitions.push(PowerTransition {
@@ -786,7 +856,8 @@ impl Slurm {
                 let job = self.jobs.get_mut(&id).expect("exists");
                 job.state = JobState::Cancelled;
                 job.finished = Some(now);
-                job.energy_j = job_energy;
+                job.energy_j += job_energy;
+                let total_energy = job.energy_j;
                 self.stats.cancelled += 1;
                 let user = job.spec.user.clone();
                 let node_seconds = job
@@ -803,7 +874,7 @@ impl Slurm {
                     at: now,
                     what: JobLifecycle::Finished {
                         state: JobState::Cancelled,
-                        energy_j: job_energy,
+                        energy_j: total_energy,
                     },
                 });
                 self.try_schedule(kernel, now);
@@ -827,6 +898,7 @@ impl Slurm {
         self.clock = self.clock.max(now);
         match ev {
             SchedEvent::BootComplete(i) => {
+                self.nodes[i].boot_ev = None;
                 self.nodes[i].fsm.boot_complete(now).expect("boot scheduled");
                 self.touch(i, now);
                 self.reindex_node(i);
@@ -839,6 +911,7 @@ impl Slurm {
                 }
             }
             SchedEvent::ShutdownComplete(i) => {
+                self.nodes[i].shutdown_ev = None;
                 self.nodes[i]
                     .fsm
                     .shutdown_complete(now)
@@ -860,13 +933,15 @@ impl Slurm {
                 if self.power_policy.enabled
                     && idle_long_enough
                     && self.nodes[i].reserved_for.is_none()
+                    && self.nodes[i].fault.is_none()
                 {
                     if let Ok(Transition::ScheduleShutdownComplete(at)) =
                         self.nodes[i].fsm.suspend(now)
                     {
                         self.touch(i, now);
                         self.reindex_node(i);
-                        kernel.schedule_at(at, SchedEvent::ShutdownComplete(i));
+                        let ev = kernel.schedule_at(at, SchedEvent::ShutdownComplete(i));
+                        self.nodes[i].shutdown_ev = Some(ev);
                     }
                 }
             }
@@ -899,6 +974,12 @@ impl Slurm {
         now: SimTime,
     ) -> AdminPowerOutcome {
         self.clock = self.clock.max(now);
+        // faulted nodes are out of the power policy's hands: crashed
+        // and hung machines don't answer WoL/ssh, and a brownout or
+        // throttle floor is not something an orderly shutdown clears
+        if self.nodes[idx].fault.is_some() {
+            return AdminPowerOutcome::Refused;
+        }
         let state = self.nodes[idx].fsm.state();
         if on {
             match state {
@@ -908,7 +989,8 @@ impl Slurm {
                     {
                         self.touch(idx, now);
                         self.reindex_node(idx);
-                        kernel.schedule_at(at, SchedEvent::BootComplete(idx));
+                        let ev = kernel.schedule_at(at, SchedEvent::BootComplete(idx));
+                        self.nodes[idx].boot_ev = Some(ev);
                     }
                     AdminPowerOutcome::Applied
                 }
@@ -929,7 +1011,8 @@ impl Slurm {
                     {
                         self.touch(idx, now);
                         self.reindex_node(idx);
-                        kernel.schedule_at(at, SchedEvent::ShutdownComplete(idx));
+                        let ev = kernel.schedule_at(at, SchedEvent::ShutdownComplete(idx));
+                        self.nodes[idx].shutdown_ev = Some(ev);
                     }
                     AdminPowerOutcome::Applied
                 }
@@ -941,13 +1024,258 @@ impl Slurm {
         }
     }
 
+    // -- fault injection and self-healing (dalek::faults' mechanism) --------
+
+    /// Inject one anomaly on node `idx` at `now`. Returns false (and
+    /// does nothing) if a fault is already active there — the seeded
+    /// planner guarantees non-overlap per node, this guards ad-hoc
+    /// callers. Crash/hang evict the victim job first (its ledger and
+    /// measurably-burned joules settle at the pre-fault draw), cancel
+    /// any in-flight boot/shutdown events, and ground the node; a
+    /// brownout or throttle only moves the power/rate physics — work
+    /// in place continues (repriced under throttle) but no *new* work
+    /// lands on an anomalous machine.
+    pub fn inject_fault<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        idx: usize,
+        fault: NodeFault,
+        now: SimTime,
+    ) -> bool {
+        self.clock = self.clock.max(now);
+        if self.nodes[idx].fault.is_some() {
+            return false;
+        }
+        // a hang freezes the machine at whatever it drew the instant
+        // the wedge hit — capture before the eviction changes it
+        let fault = match fault {
+            NodeFault::Hung { .. } => NodeFault::Hung {
+                hold_w: self.nodes[idx].cur_watts,
+            },
+            f => f,
+        };
+        match fault {
+            NodeFault::Crashed | NodeFault::Hung { .. } => {
+                let victim = self.nodes[idx].running.or(self.nodes[idx].reserved_for);
+                if let Some(jid) = victim {
+                    self.requeue_job(kernel, jid, now);
+                }
+                self.disarm_suspend_timer(kernel, idx);
+                if let Some(ev) = self.nodes[idx].boot_ev.take() {
+                    kernel.cancel(ev);
+                }
+                if let Some(ev) = self.nodes[idx].shutdown_ev.take() {
+                    kernel.cancel(ev);
+                }
+                if matches!(fault, NodeFault::Crashed) {
+                    self.nodes[idx].fsm.power_cut(now);
+                }
+                self.nodes[idx].fault = Some(fault);
+                self.touch(idx, now);
+                self.reindex_node(idx);
+            }
+            NodeFault::Brownout { .. } | NodeFault::Throttled { .. } => {
+                self.disarm_suspend_timer(kernel, idx);
+                self.nodes[idx].fault = Some(fault);
+                self.touch(idx, now);
+                self.reindex_node(idx);
+                if matches!(fault, NodeFault::Throttled { .. }) {
+                    if let Some(jid) = self.nodes[idx].running {
+                        self.reprice(kernel, jid, now);
+                    }
+                }
+            }
+        }
+        self.stats.faults_injected += 1;
+        self.fault_notices.push(FaultNotice {
+            at: now,
+            node: idx,
+            fault,
+            injected: true,
+        });
+        // an eviction may have re-queued work other nodes can take
+        self.try_schedule(kernel, now);
+        true
+    }
+
+    /// Clear the fault on node `idx` at `now`, returning it. Hung
+    /// machines come back power-cycled (Suspended, like a watchdog
+    /// reset); crashed ones are already down; throttle recovery
+    /// reprices any job still running here back to its knob rate.
+    pub fn recover_fault<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        idx: usize,
+        now: SimTime,
+    ) -> Option<NodeFault> {
+        self.clock = self.clock.max(now);
+        let fault = self.nodes[idx].fault.take()?;
+        if matches!(fault, NodeFault::Hung { .. }) {
+            self.nodes[idx].fsm.power_cut(now);
+        }
+        self.touch(idx, now);
+        self.reindex_node(idx);
+        if matches!(fault, NodeFault::Throttled { .. }) {
+            if let Some(jid) = self.nodes[idx].running {
+                self.reprice(kernel, jid, now);
+            }
+        }
+        if self.nodes[idx].running.is_none()
+            && self.nodes[idx].reserved_for.is_none()
+            && matches!(self.nodes[idx].fsm.state(), PowerState::Idle { .. })
+        {
+            self.arm_suspend_timer(kernel, idx, now);
+        }
+        self.fault_notices.push(FaultNotice {
+            at: now,
+            node: idx,
+            fault,
+            injected: false,
+        });
+        // the node is claimable again — waiting work may fit now
+        self.try_schedule(kernel, now);
+        Some(fault)
+    }
+
+    /// Evict one job back into the *front* of its partition's pending
+    /// queue (the fault path). Its nodes are released, the classic
+    /// work ledger is banked so the restart runs only the remaining
+    /// work, and the joules and node-seconds this segment measurably
+    /// burned settle against the owner's §6.2 quota immediately — a
+    /// later crash can never un-charge them, which is what keeps
+    /// settlement conservation-exact through chaos.
+    fn requeue_job<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) {
+        let Some(job) = self.jobs.get(&id) else { return };
+        if !matches!(job.state, JobState::Running | JobState::Configuring) {
+            return;
+        }
+        let was_running = job.state == JobState::Running;
+        if let Some(ev) = self.jobs.get_mut(&id).expect("exists").completion_ev.take() {
+            kernel.cancel(ev);
+        }
+        self.drop_run_end(id);
+        let allocated = self.jobs[&id].allocated.clone();
+        let mut seg_energy = 0.0;
+        for &i in &allocated {
+            if was_running {
+                self.nodes[i].fsm.release(now).expect("allocated node");
+                self.nodes[i].activity_override = None;
+                self.touch(i, now); // integrates the pre-fault segment
+                seg_energy += self.nodes[i].energy_j - self.nodes[i].job_energy_mark;
+            }
+            self.nodes[i].running = None;
+            self.nodes[i].reserved_for = None;
+            self.reindex_node(i);
+            // survivors idle back into the §3.4 policy; the faulted
+            // node itself is grounded by the caller right after this
+            if self.nodes[i].fault.is_none()
+                && matches!(self.nodes[i].fsm.state(), PowerState::Idle { .. })
+            {
+                self.arm_suspend_timer(kernel, i, now);
+            }
+        }
+        let job = self.jobs.get_mut(&id).expect("exists");
+        let is_app = job.spec.app.is_some();
+        // bank the classic work ledger; app jobs' per-rank ledgers
+        // live in the engine — the api layer checkpoints completed
+        // BSP iterations into a trimmed spec via `checkpoint_app`
+        if was_running && !is_app {
+            job.work_done_s += now.since(job.last_rate_change).as_secs_f64() * job.rate;
+        }
+        job.last_rate_change = now;
+        let seg_seconds = job
+            .started
+            .take()
+            .map(|s| now.since(s).as_secs_f64() * job.spec.nodes as f64)
+            .unwrap_or(0.0);
+        job.energy_j += seg_energy;
+        job.rate = 1.0;
+        job.allocated.clear();
+        job.state = JobState::Pending;
+        job.completion_ev = None;
+        let user = job.spec.user.clone();
+        let part = job.spec.partition.clone();
+        if was_running && self.quota.has_account(&user) {
+            self.quota
+                .charge(&user, seg_seconds, seg_energy, now)
+                .expect("account checked");
+        }
+        self.pend_q
+            .get_mut(&part)
+            .expect("partition exists")
+            .push_front(id);
+        *self.pend_n.get_mut(&part).expect("partition exists") += 1;
+        self.pend_total += 1;
+        self.stats.fault_requeues += 1;
+        self.job_notices.push(JobNotice {
+            job: id,
+            at: now,
+            what: JobLifecycle::Requeued,
+        });
+        if is_app && was_running {
+            self.app_notices.push(AppNotice::Interrupted(id));
+        }
+    }
+
+    /// Trim a requeued phase-structured job's program so it restarts
+    /// from its last completed BSP barrier: `iters_done` completed
+    /// iterations leave the spec (at least one always remains —
+    /// partial-iteration progress restarts from the barrier line) and
+    /// the nominal duration is re-derived so admission estimates and
+    /// backfill windows see only the remaining work. Meaningful between
+    /// a fault requeue and the engine's restart pump, whatever
+    /// scheduler state the job reached in between.
+    pub fn checkpoint_app(&mut self, id: JobId, iters_done: u32) {
+        let Some(job) = self.jobs.get_mut(&id) else { return };
+        // the eviction's own `try_schedule` may have re-placed — or,
+        // with warm nodes, even restarted — the job synchronously, so
+        // Configuring/Running are as legitimate here as Pending: the
+        // engine only reads the spec at its next pump, which the fault
+        // path orders after this trim. App jobs arm no completion
+        // timer, so a Running trim re-prices nothing retroactively.
+        let restartable = matches!(
+            job.state,
+            JobState::Pending | JobState::Configuring | JobState::Running
+        );
+        if !restartable || iters_done == 0 {
+            return;
+        }
+        if let Some(app) = &mut job.spec.app {
+            let done = iters_done.min(app.iterations.saturating_sub(1));
+            app.iterations -= done;
+            job.spec.duration = SimTime::from_secs_f64(app.compute_work_s());
+        }
+    }
+
+    /// The active fault on one node, if any.
+    pub fn node_fault(&self, idx: usize) -> Option<NodeFault> {
+        self.nodes[idx].fault
+    }
+
+    /// Drain the fault inject/recover records accumulated since the
+    /// last call (fanned out to `FaultEvents` subscribers).
+    pub fn take_fault_notices(&mut self) -> Vec<FaultNotice> {
+        std::mem::take(&mut self.fault_notices)
+    }
+
     // -- §3.6 power-knob actuation (the governor's mechanism) ---------------
 
     /// Relative execution rate of work with `act` on node `n` — see
     /// [`policy::relative_rate`]. Exactly 1.0 while the node's knobs
     /// are untouched.
     fn node_rate_of(n: &NodeEntry, act: Activity) -> f64 {
-        policy::relative_rate(&n.power, &n.base_power, act)
+        let base = policy::relative_rate(&n.power, &n.base_power, act);
+        // thermal throttling multiplies whatever the knobs allow —
+        // floored like any capped rate so work never stalls outright
+        match n.fault {
+            Some(NodeFault::Throttled { factor }) => (base * factor).max(MIN_RATE),
+            _ => base,
+        }
     }
 
     /// Number of compute nodes in the scheduler's table.
@@ -1057,6 +1385,11 @@ impl Slurm {
                 .map(|j| j.spec.activity)
         });
         let (allocated, floor_w, cpu_demand_w, gpu_demand_w) = match (n.fsm.state(), act) {
+            // a faulted node's draw is an uncappable constraint: the
+            // governor plans around its floor, it never caps it (§3.6
+            // knobs are unreachable on a crashed/frozen machine, and a
+            // brownout/throttle floor is imposed by the hardware)
+            _ if n.fault.is_some() => (false, n.cur_watts, 0.0, 0.0),
             (PowerState::Allocated, Some(act)) => (
                 true,
                 n.base_power.idle_w() + n.base_power.igpu_w(act),
@@ -1096,6 +1429,16 @@ impl Slurm {
         now: SimTime,
     ) {
         self.clock = self.clock.max(now);
+        // silent skip, not an error: the §3.6 governor sweeps every
+        // node each tick (clear paths included) and must keep running
+        // through chaos. A faulted node's knobs are unreachable — a
+        // crashed/hung machine doesn't answer, and a brownout/throttle
+        // floor is the hardware's constraint, not ours to move. Knobs
+        // applied before the fault stay as-is until the first
+        // post-recovery governor pass revisits the node.
+        if self.nodes[idx].fault.is_some() {
+            return;
+        }
         {
             let n = &mut self.nodes[idx];
             let cpu_cap =
@@ -1186,7 +1529,8 @@ impl Slurm {
             .iter()
             .enumerate()
             .filter(|(_, n)| {
-                n.reserved_for.is_none()
+                n.fault.is_none()
+                    && n.reserved_for.is_none()
                     && n.running.is_none()
                     && n.fsm.idle_for(now).map(|d| d >= after).unwrap_or(false)
             })
@@ -1371,7 +1715,8 @@ impl Slurm {
                     .copied()
                     .filter(|&i| {
                         let n = &self.nodes[i];
-                        n.reserved_for.is_none()
+                        n.fault.is_none()
+                            && n.reserved_for.is_none()
                             && n.running.is_none()
                             && matches!(
                                 n.fsm.state(),
@@ -1520,7 +1865,8 @@ impl Slurm {
             if matches!(self.nodes[i].fsm.state(), PowerState::Suspended) {
                 if let Ok(Transition::ScheduleBootComplete(at)) = self.nodes[i].fsm.wake(now) {
                     self.touch(i, now);
-                    kernel.schedule_at(at, SchedEvent::BootComplete(i));
+                    let ev = kernel.schedule_at(at, SchedEvent::BootComplete(i));
+                    self.nodes[i].boot_ev = Some(ev);
                 }
             }
         }
@@ -1569,10 +1915,15 @@ impl Slurm {
             .map(|&i| Self::node_rate_of(&self.nodes[i], act))
             .fold(f64::INFINITY, f64::min);
         let rate = if rate.is_finite() { rate } else { 1.0 };
-        let wall = if (rate - 1.0).abs() < 1e-15 {
+        // honor the banked work ledger: a fault-requeued job restarts
+        // with its completed work credited (zero for first starts,
+        // which stay bit-exact on the fast path)
+        let done = self.jobs[&id].work_done_s;
+        let wall = if (rate - 1.0).abs() < 1e-15 && done == 0.0 {
             dur
         } else {
-            SimTime::from_secs_f64(dur.as_secs_f64() / rate)
+            let remaining = (dur.as_secs_f64() - done).max(0.0);
+            SimTime::from_secs_f64(remaining / rate)
         };
         // phase-structured jobs complete when their program does (the
         // app engine calls `finish_app_job`); classic jobs arm the
@@ -1587,7 +1938,6 @@ impl Slurm {
         job.started = Some(now);
         job.rate = rate;
         job.last_rate_change = now;
-        job.work_done_s = 0.0;
         job.completion_ev = ev;
         let part = job.spec.partition.clone();
         // one batched EASY shadow entry per running job: the key is a
@@ -1652,9 +2002,13 @@ impl Slurm {
             self.arm_suspend_timer(kernel, i, now);
         }
         // §6.2 settlement: charge the measured joules and the true
-        // node-seconds, not the admission estimate
+        // node-seconds, not the admission estimate. Only this run
+        // segment is charged — a fault requeue already settled the
+        // joules earlier segments measurably burned, so the sum over
+        // segments is conservation-exact with no double counting.
         let job = self.jobs.get_mut(&id).expect("exists");
-        job.energy_j = job_energy;
+        job.energy_j += job_energy;
+        let total_energy = job.energy_j;
         let user = job.spec.user.clone();
         let node_seconds = match (job.started, job.finished) {
             (Some(s), Some(f)) => f.since(s).as_secs_f64() * job.spec.nodes as f64,
@@ -1671,7 +2025,7 @@ impl Slurm {
             at: now,
             what: JobLifecycle::Finished {
                 state,
-                energy_j: job_energy,
+                energy_j: total_energy,
             },
         });
         self.try_schedule(kernel, now);
@@ -2242,5 +2596,275 @@ mod tests {
         assert_eq!(out, AdminPowerOutcome::Refused);
         s.run_to_idle();
         assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+    }
+
+    // -- fault injection ----------------------------------------------------
+
+    #[test]
+    fn crash_requeues_job_with_ledger_and_settlement_intact() {
+        let mut s = slurm();
+        s.ctl.quota.set_account("alice", 1e9, 1e12);
+        let id = s
+            .submit_at(JobSpec::cpu("alice", "az5-a890m", 2, 400), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(3)); // boot 70 s, well inside the run
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        let victim = s.job(id).unwrap().allocated[0];
+        let now = s.kernel.now();
+        assert!(s.ctl.inject_fault(&mut s.kernel, victim, NodeFault::Crashed, now));
+        // evicted, ledger banked, first segment's joules already settled
+        let job = s.job(id).unwrap();
+        assert_eq!(job.state, JobState::Pending);
+        assert!(job.work_done_s > 0.0, "banked {0}", job.work_done_s);
+        assert!(job.energy_j > 0.0);
+        let charged_mid = s.ctl.quota.account("alice").unwrap().used_energy_j;
+        assert!((charged_mid - job.energy_j).abs() < 1e-9);
+        // the crashed node is down and drawing nothing
+        assert_eq!(s.ctl.node_fault(victim), Some(NodeFault::Crashed));
+        assert!(matches!(s.node_infos()[victim].state, PowerState::Suspended));
+        assert_eq!(s.node_infos()[victim].watts, 0.0);
+        // self-healing: 3 healthy nodes remain, the job restarts and
+        // finishes with exactly its nominal work done across segments
+        s.run_to_idle();
+        let job = s.job(id).unwrap();
+        assert_eq!(job.state, JobState::Completed);
+        assert!((job.work_done_s - 400.0).abs() < 1e-6, "{}", job.work_done_s);
+        assert!(!job.allocated.contains(&victim));
+        // conservation: settled joules == sum of measured segments
+        let acct = s.ctl.quota.account("alice").unwrap();
+        assert!((acct.used_energy_j - job.energy_j).abs() < 1e-9);
+        assert_eq!(s.stats.faults_injected, 1);
+        assert_eq!(s.stats.fault_requeues, 1);
+        // lifecycle: Queued, Started, Requeued, Started, Finished
+        let kinds: Vec<JobLifecycle> = s
+            .ctl
+            .take_job_notices()
+            .iter()
+            .filter(|n| n.job == id)
+            .map(|n| n.what)
+            .collect();
+        assert!(matches!(kinds[2], JobLifecycle::Requeued));
+        let JobLifecycle::Finished { energy_j, .. } = kinds[4] else {
+            panic!("expected Finished, got {:?}", kinds[4]);
+        };
+        assert!((energy_j - job.energy_j).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hang_holds_pre_hang_draw_and_recovery_power_cycles() {
+        let mut s = slurm();
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 1, 600), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(3));
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        let node = s.job(id).unwrap().allocated[0];
+        let busy_w = s.node_infos()[node].watts;
+        assert!(busy_w > 10.0);
+        let now = s.kernel.now();
+        s.ctl
+            .inject_fault(&mut s.kernel, node, NodeFault::Hung { hold_w: 0.0 }, now);
+        // the wedge freezes the *pre-hang* draw, whatever the caller said
+        assert_eq!(s.ctl.node_fault(node), Some(NodeFault::Hung { hold_w: busy_w }));
+        assert_eq!(s.node_infos()[node].watts, busy_w);
+        assert_eq!(s.job(id).unwrap().state, JobState::Pending);
+        // double injection refused while the first fault is active
+        let now = s.kernel.now();
+        assert!(!s.ctl.inject_fault(&mut s.kernel, node, NodeFault::Crashed, now));
+        // recovery = watchdog power-cycle: node comes back Suspended
+        let now = s.kernel.now();
+        let cleared = s.ctl.recover_fault(&mut s.kernel, node, now);
+        assert_eq!(cleared, Some(NodeFault::Hung { hold_w: busy_w }));
+        assert!(matches!(s.node_infos()[node].state, PowerState::Suspended));
+        assert_eq!(s.ctl.node_fault(node), None);
+        s.run_to_idle();
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+        // notices drain in order and only once
+        let notices = s.ctl.take_fault_notices();
+        assert_eq!(notices.len(), 2);
+        assert!(notices[0].injected && !notices[1].injected);
+        assert!(s.ctl.take_fault_notices().is_empty());
+    }
+
+    #[test]
+    fn brownout_raises_floor_but_running_work_continues() {
+        let mut s = slurm();
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 1, 400), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(3));
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        let node = s.job(id).unwrap().allocated[0];
+        let started = s.job(id).unwrap().started.unwrap();
+        let now = s.kernel.now();
+        s.ctl
+            .inject_fault(&mut s.kernel, node, NodeFault::Brownout { floor_w: 200.0 }, now);
+        // the job keeps running; the node pins at the brownout floor
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        assert_eq!(s.node_infos()[node].watts, 200.0);
+        // the governor sees an uncappable floor, not cappable demand
+        let draw = &s.ctl.power_breakdown()[node];
+        assert!(!draw.allocated);
+        assert_eq!(draw.floor_w, 200.0);
+        assert_eq!(draw.cpu_demand_w, 0.0);
+        // knobs and manual power are refused/skipped silently
+        let now = s.kernel.now();
+        s.ctl.take_power_notices();
+        s.ctl
+            .apply_power_knobs(&mut s.kernel, node, Some(5.0), None, true, now);
+        assert!(s.ctl.take_power_notices().is_empty());
+        assert_eq!(
+            s.ctl.admin_power_idx(&mut s.kernel, node, false, now),
+            AdminPowerOutcome::Refused
+        );
+        // an un-repriced job still completes bit-exactly on time
+        s.run_to_idle();
+        let job = s.job(id).unwrap();
+        assert_eq!(job.state, JobState::Completed);
+        assert_eq!(job.finished.unwrap(), started + SimTime::from_secs(400));
+    }
+
+    #[test]
+    fn throttle_reprices_and_recovery_restores_rate() {
+        let mut s = slurm();
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 1, 400), SimTime::ZERO)
+            .unwrap();
+        s.run_until(mins(3));
+        let node = s.job(id).unwrap().allocated[0];
+        let now = s.kernel.now();
+        s.ctl.inject_fault(
+            &mut s.kernel,
+            node,
+            NodeFault::Throttled { factor: 0.5 },
+            now,
+        );
+        let job = s.job(id).unwrap();
+        assert_eq!(job.state, JobState::Running);
+        assert!((job.rate - 0.5).abs() < 1e-12, "rate {}", job.rate);
+        s.run_until(now + mins(2));
+        let at = s.kernel.now();
+        s.ctl.recover_fault(&mut s.kernel, node, at);
+        assert!((s.job(id).unwrap().rate - 1.0).abs() < 1e-12);
+        s.run_to_idle();
+        let job = s.job(id).unwrap();
+        assert_eq!(job.state, JobState::Completed);
+        // throttled minutes stretch the wall clock, work is conserved
+        assert!(job.run_time().unwrap() > SimTime::from_secs(400));
+        assert!((job.work_done_s - 400.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn faulted_nodes_are_unclaimable_until_recovery() {
+        let mut s = slurm();
+        let now = SimTime::ZERO;
+        let crashed = 12; // az5-a890m-0
+        s.ctl
+            .inject_fault(&mut s.kernel, crashed, NodeFault::Crashed, now);
+        assert_eq!(s.ctl.free_nodes("az5-a890m").len(), 3);
+        assert_eq!(s.ctl.claimable_scan("az5-a890m").len(), 3);
+        // a partition-wide job cannot start around the hole...
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 4, 60), SimTime::ZERO)
+            .unwrap();
+        assert_eq!(s.job(id).unwrap().state, JobState::Pending);
+        // ...until the node recovers
+        s.run_until(mins(5));
+        let at = s.kernel.now();
+        s.ctl.recover_fault(&mut s.kernel, crashed, at);
+        s.run_to_idle();
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+    }
+
+    #[test]
+    fn crash_mid_boot_and_mid_suspend_cancels_stale_events() {
+        let mut s = slurm();
+        // mid-boot: reserve wakes the nodes, then one crashes
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 2, 60), SimTime::ZERO)
+            .unwrap();
+        assert_eq!(s.job(id).unwrap().state, JobState::Configuring);
+        let booting = s.job(id).unwrap().allocated[0];
+        s.ctl
+            .inject_fault(&mut s.kernel, booting, NodeFault::Crashed, SimTime::ZERO);
+        assert_eq!(s.job(id).unwrap().state, JobState::Pending);
+        // draining must not panic on a stale BootComplete, and the job
+        // self-heals onto the surviving nodes (restart boots at 70 s,
+        // runs 60 s, idles 10 min, suspends over 15 s from t = 730)
+        s.run_until(SimTime::from_secs(735));
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+        // mid-suspend: catch a node in Suspending, crash it, and drain
+        // past its stale ShutdownComplete
+        let target = s
+            .node_infos()
+            .iter()
+            .position(|n| matches!(n.state, PowerState::Suspending { .. }))
+            .expect("a node is mid-suspend at t=735");
+        let now = s.kernel.now();
+        s.ctl
+            .inject_fault(&mut s.kernel, target, NodeFault::Crashed, now);
+        s.run_to_idle();
+        let at = s.kernel.now();
+        assert!(matches!(s.node_infos()[target].state, PowerState::Suspended));
+        s.ctl.recover_fault(&mut s.kernel, target, at);
+        // cluster power ledger stayed consistent throughout
+        assert_eq!(s.ctl.power_breakdown(), s.ctl.power_breakdown_naive());
+    }
+
+    #[test]
+    fn power_knobs_on_transitional_states_never_revive_or_corrupt() {
+        let mut s = slurm();
+        // mid-boot actuation: knobs land, the node still boots on time
+        let id = s
+            .submit_at(JobSpec::cpu("a", "az5-a890m", 1, 600), SimTime::ZERO)
+            .unwrap();
+        let booting = s.job(id).unwrap().allocated[0];
+        assert!(matches!(
+            s.node_infos()[booting].state,
+            PowerState::Booting { .. }
+        ));
+        s.ctl
+            .apply_power_knobs(&mut s.kernel, booting, Some(10.0), None, false, SimTime::ZERO);
+        assert!(matches!(
+            s.node_infos()[booting].state,
+            PowerState::Booting { .. }
+        ));
+        assert_eq!(s.ctl.power_breakdown(), s.ctl.power_breakdown_naive());
+        s.run_until(mins(3));
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        // clear the cap again so later rates are nominal
+        let now = s.kernel.now();
+        s.ctl
+            .apply_power_knobs(&mut s.kernel, booting, None, None, false, now);
+        // mid-suspend actuation: the node still completes its shutdown
+        s.run_until(mins(15));
+        let end = s.job(id).unwrap().finished.expect("completed by 15 min");
+        s.run_until(end + mins(10) + SimTime::from_secs(5));
+        let target = s
+            .node_infos()
+            .iter()
+            .position(|n| matches!(n.state, PowerState::Suspending { .. }))
+            .expect("a node is mid-suspend 10 min after the job");
+        let now = s.kernel.now();
+        s.ctl
+            .apply_power_knobs(&mut s.kernel, target, Some(10.0), None, true, now);
+        assert!(matches!(
+            s.node_infos()[target].state,
+            PowerState::Suspending { .. }
+        ));
+        assert_eq!(s.ctl.power_breakdown(), s.ctl.power_breakdown_naive());
+        s.run_to_idle();
+        assert!(matches!(s.node_infos()[target].state, PowerState::Suspended));
+        // crashed-node actuation: silently skipped, no notice, still 0 W
+        let now = s.kernel.now();
+        s.ctl
+            .inject_fault(&mut s.kernel, target, NodeFault::Crashed, now);
+        s.ctl.take_power_notices();
+        s.ctl
+            .apply_power_knobs(&mut s.kernel, target, Some(10.0), None, true, now);
+        assert!(s.ctl.take_power_notices().is_empty());
+        assert!(matches!(s.node_infos()[target].state, PowerState::Suspended));
+        assert_eq!(s.node_infos()[target].watts, 0.0);
+        assert_eq!(s.ctl.power_breakdown(), s.ctl.power_breakdown_naive());
     }
 }

@@ -1,0 +1,292 @@
+//! The locked golden chaos suite: a seeded `dalek::faults` plan (every
+//! fault family represented — crashes, a hang, PSU brownouts, thermal
+//! throttles, NIC link degradations) is armed over a 100-job
+//! `chaos_mix` storm, and the whole stack must self-heal: every job
+//! completes (requeued work included), nothing is cancelled or killed
+//! by a fault, the run is bit-identical when repeated, and settlement
+//! is conservation-exact — per-user quota charges equal the per-job
+//! settled joules, which the per-node energy watermarks bound.
+//!
+//! The scenario itself is expressed as `.toml` chaos knobs, so the
+//! suite also locks the `ChaosKnobs::from_toml` surface end-to-end.
+
+use std::collections::HashSet;
+
+use dalek::api::{Channel, ClusterApi, Event};
+use dalek::config::ClusterConfig;
+use dalek::coordinator::trace::TraceGen;
+use dalek::faults::{ChaosKnobs, FaultKind, FaultPlan, FaultSpec};
+use dalek::sim::SimTime;
+use dalek::slurm::JobSpec;
+
+/// The locked scenario: nine faults across all five families, outages
+/// of 1–5 minutes scattered over the busy first 50 minutes of a
+/// 120 jobs/h trace. Throttle floors at 0.5 so no classic job can
+/// outrun its 4x time limit even if it spends its whole life throttled.
+const SCENARIO: &str = r#"
+# chaos knobs for the golden storm (see dalek::faults)
+[chaos]
+horizon_s = 3000.0   # faults only while the trace is arriving
+crashes = 2
+hangs = 1
+brownouts = 2
+throttles = 2
+link_degrades = 2
+min_outage_s = 60.0
+max_outage_s = 300.0
+floor_w_lo = 80.0
+floor_w_hi = 200.0
+factor_lo = 0.5
+factor_hi = 0.8
+fraction_lo = 0.25
+fraction_hi = 0.5
+"#;
+
+struct ChaosOutcome {
+    completed: u64,
+    timeouts: u64,
+    cancelled: u64,
+    injected: u64,
+    requeues: u64,
+    makespan: SimTime,
+    true_energy_j: f64,
+    settled_j: f64,
+    /// every `(node, kind-label, injected)` edge off the fault channel
+    edges: Vec<(String, String, bool)>,
+}
+
+/// One full chaos run: storm + seeded plan + one targeted crash on a
+/// provably-busy node (so at least one eviction/requeue is exercised
+/// whatever the seed), drained to quiescence with every conservation
+/// invariant asserted along the way.
+fn chaos_run(seed: u64) -> ChaosOutcome {
+    let mut c = ClusterApi::new(ClusterConfig::dalek_default(), None).unwrap();
+    let root = c.login("root").unwrap();
+    c.set_outbox_capacity(50_000);
+    c.subscribe(root, Channel::FaultEvents, None).unwrap();
+    // quota accounts for every trace user: settlement must stay
+    // conservation-exact through crash requeues (charged per segment)
+    for u in 0..7 {
+        let user = format!("user{u}");
+        c.add_user(&user);
+        c.set_quota(root, &user, 1e9, 1e12).unwrap();
+    }
+    let trace = TraceGen::chaos_mix(seed).generate(100);
+    for ev in &trace {
+        c.submit(ev.spec.clone(), ev.at).expect("valid trace");
+    }
+
+    let knobs = ChaosKnobs::from_toml(SCENARIO).unwrap();
+    let nodes: Vec<String> = c
+        .slurm()
+        .node_infos()
+        .iter()
+        .map(|n| n.name.clone())
+        .collect();
+    let plan = FaultPlan::generate(&knobs, &nodes, seed);
+    // the scenario contract: every fault family made it into the plan
+    for want in ["crash", "hang", "brownout", "throttle", "link_degrade"] {
+        assert!(
+            plan.faults.iter().any(|f| f.kind.label() == want),
+            "plan missing a {want}"
+        );
+    }
+    let planned_node_faults = plan
+        .faults
+        .iter()
+        .filter(|f| !matches!(f.kind, FaultKind::LinkDegrade { .. }))
+        .count() as u64;
+    let planned_links = plan.len() as u64 - planned_node_faults;
+    assert_eq!(c.install_fault_plan(&plan).unwrap(), plan.len());
+
+    // guarantee at least one eviction regardless of where the seeded
+    // plan lands: 10 minutes into the storm, crash the first busy node
+    // the plan never touches (a deterministic pick, so the double run
+    // stays bit-identical)
+    c.run_until(SimTime::from_secs(600), false);
+    let planned: HashSet<&str> = plan.faults.iter().map(|f| f.node.as_str()).collect();
+    let victim = c
+        .slurm()
+        .node_infos()
+        .into_iter()
+        .find(|n| n.running.is_some() && !planned.contains(n.name.as_str()))
+        .expect("a busy unplanned node 10 min into a 120 jobs/h storm");
+    let targeted = FaultPlan {
+        seed,
+        faults: vec![FaultSpec {
+            at: c.now(),
+            duration: SimTime::from_secs(120),
+            node: victim.name.clone(),
+            kind: FaultKind::Crash,
+        }],
+    };
+    c.install_fault_plan(&targeted).unwrap();
+
+    // drain to quiescence in hour strides
+    let mut horizon = c.now() + SimTime::from_hours(1);
+    while !c.slurm().jobs().all(|j| j.is_terminal()) {
+        c.run_until(horizon, false);
+        horizon += SimTime::from_hours(1);
+        assert!(
+            horizon < SimTime::from_hours(24 * 10),
+            "chaos run failed to quiesce"
+        );
+    }
+
+    // every outage recovered: no node still holds a fault
+    assert!(c.slurm().node_infos().iter().all(|n| n.fault.is_none()));
+
+    let edges: Vec<(String, String, bool)> = c
+        .take_events(root, usize::MAX)
+        .into_iter()
+        .filter_map(|e| match e {
+            Event::Fault {
+                node,
+                kind,
+                injected,
+                ..
+            } => Some((node, kind.label().to_string(), injected)),
+            Event::Lagged { missed } => panic!("fault channel lagged by {missed}"),
+            _ => None,
+        })
+        .collect();
+    // plan nodes were chosen disjoint from the targeted victim, so no
+    // injection is ever refused: every armed edge reaches the stream
+    let inject_edges = edges.iter().filter(|e| e.2).count() as u64;
+    let recover_edges = edges.iter().filter(|e| !e.2).count() as u64;
+    assert_eq!(inject_edges, planned_node_faults + planned_links + 1);
+    assert_eq!(recover_edges, inject_edges);
+
+    // conservation: per-job settled joules are bounded by the per-node
+    // energy watermarks (nodes also burn boot/idle joules no job owns)
+    let settled_j: f64 = c.slurm().jobs().map(|j| j.energy_j).sum();
+    let node_total: f64 = c.slurm().node_infos().iter().map(|n| n.energy_j).sum();
+    let true_j = c.slurm().total_energy_j();
+    assert!(
+        (node_total - true_j).abs() < 1e-6,
+        "watermarks {node_total} vs integral {true_j}"
+    );
+    assert!(settled_j > 0.0);
+    assert!(
+        settled_j <= true_j + 1e-6,
+        "settled {settled_j} exceeds burned {true_j}"
+    );
+    // quota settlement is conservation-exact per user through requeues
+    for u in 0..7 {
+        let user = format!("user{u}");
+        let by_jobs: f64 = c
+            .slurm()
+            .jobs()
+            .filter(|j| j.spec.user == user)
+            .map(|j| j.energy_j)
+            .sum();
+        let acct = c.slurm().quota.account(&user).unwrap();
+        assert!(
+            (acct.used_energy_j - by_jobs).abs() < 1e-6,
+            "{user}: quota charged {} vs settled {by_jobs}",
+            acct.used_energy_j
+        );
+    }
+
+    let makespan = c.slurm().jobs().filter_map(|j| j.finished).max().unwrap();
+    let s = &c.slurm().stats;
+    ChaosOutcome {
+        completed: s.completed,
+        timeouts: s.timeouts,
+        cancelled: s.cancelled,
+        injected: s.faults_injected,
+        requeues: s.fault_requeues,
+        makespan,
+        true_energy_j: true_j,
+        settled_j,
+        edges,
+    }
+}
+
+/// The acceptance scenario, locked: ≥1 crash, ≥1 brownout, ≥1 link
+/// degradation over a 100-job trace; every job completes or requeues
+/// and then completes; double runs are bit-identical.
+#[test]
+fn golden_chaos_storm_completes_every_job_bit_identically() {
+    let a = chaos_run(0xC4A05);
+
+    // self-healing: chaos requeues work, it never kills it
+    assert_eq!(a.completed, 100, "every job must complete");
+    assert_eq!(a.timeouts, 0);
+    assert_eq!(a.cancelled, 0);
+    // 7 seeded node faults + the targeted crash, none refused
+    assert!(a.injected >= 8, "injected only {}", a.injected);
+    assert!(a.requeues >= 1, "the targeted crash must evict someone");
+    assert!(a.makespan > SimTime::from_hours(1));
+
+    // bit-identical double run: same trace, same plan, same world
+    let b = chaos_run(0xC4A05);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.timeouts, b.timeouts);
+    assert_eq!(a.injected, b.injected);
+    assert_eq!(a.requeues, b.requeues);
+    assert_eq!(a.makespan, b.makespan);
+    assert!(a.true_energy_j == b.true_energy_j, "energy must be exact");
+    assert!(a.settled_j == b.settled_j, "settlement must be exact");
+    assert_eq!(a.edges, b.edges);
+}
+
+/// The plan (and therefore the whole run) is seed-sensitive: a
+/// different seed reshuffles where and when the world breaks.
+#[test]
+fn different_chaos_seed_changes_the_plan() {
+    let knobs = ChaosKnobs::from_toml(SCENARIO).unwrap();
+    let nodes: Vec<String> = (0..16).map(|i| format!("node-{i}")).collect();
+    let a = FaultPlan::generate(&knobs, &nodes, 1);
+    let b = FaultPlan::generate(&knobs, &nodes, 2);
+    let c = FaultPlan::generate(&knobs, &nodes, 1);
+    assert_eq!(a.faults, c.faults, "same seed, same plan");
+    assert_ne!(a.faults, b.faults, "different seed, different plan");
+}
+
+/// Fast chaos smoke for CI: one crash (evicting a running 4-node job),
+/// one brownout and one link degradation over two jobs, drained in
+/// half an hour of sim time with sampling on.
+#[test]
+fn quick_chaos_smoke() {
+    let mut c = ClusterApi::new(ClusterConfig::dalek_default(), None).unwrap();
+    c.submit(JobSpec::cpu("root", "az5-a890m", 4, 600), SimTime::ZERO)
+        .unwrap();
+    c.submit(JobSpec::cpu("root", "az4-n4090", 2, 300), SimTime::ZERO)
+        .unwrap();
+    // the az5 job holds all four az5 nodes, so this crash must evict it
+    let plan = FaultPlan {
+        seed: 7,
+        faults: vec![
+            FaultSpec {
+                at: SimTime::from_secs(100),
+                duration: SimTime::from_secs(300),
+                node: "az4-n4090-0".into(),
+                kind: FaultKind::Brownout { floor_w: 150.0 },
+            },
+            FaultSpec {
+                at: SimTime::from_secs(100),
+                duration: SimTime::from_secs(300),
+                node: "az4-n4090-1".into(),
+                kind: FaultKind::LinkDegrade { fraction: 0.5 },
+            },
+            FaultSpec {
+                at: SimTime::from_secs(200),
+                duration: SimTime::from_secs(120),
+                node: "az5-a890m-0".into(),
+                kind: FaultKind::Crash,
+            },
+        ],
+    };
+    assert_eq!(c.install_fault_plan(&plan).unwrap(), 3);
+    c.run_until(SimTime::from_mins(30), true);
+
+    let s = &c.slurm().stats;
+    assert_eq!(s.completed, 2, "both jobs self-heal to completion");
+    assert_eq!(s.timeouts + s.cancelled, 0);
+    assert_eq!(s.faults_injected, 2); // the link degrade is net-plane
+    assert_eq!(s.fault_requeues, 1);
+    assert!(c.slurm().node_infos().iter().all(|n| n.fault.is_none()));
+    let settled: f64 = c.slurm().jobs().map(|j| j.energy_j).sum();
+    assert!(settled > 0.0 && settled <= c.slurm().total_energy_j());
+}
