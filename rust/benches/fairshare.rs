@@ -1,0 +1,85 @@
+//! Bench: the fair-share hot paths — the per-partition priority sort
+//! under a 1k-tenant skewed-share population, deficit bookkeeping at
+//! settlement rate, and the preempt/requeue churn the margin allows.
+//! The machine-readable twin (`dalek bench perf`, case `fairshare`)
+//! feeds the committed `BENCH_fairshare.json` regression baseline.
+
+use dalek::config::ClusterConfig;
+use dalek::power::Activity;
+use dalek::sim::SimTime;
+use dalek::slurm::{FairShareDb, JobSpec, SlurmSim};
+use dalek::util::benchkit;
+
+/// `n` single-to-3-node jobs from `users` tenants at ~4x cluster
+/// capacity: the queue stays deep, so every pass sorts real backlog.
+fn skewed_storm(users: u64, n: u64) -> Vec<(SimTime, JobSpec)> {
+    (0..n)
+        .map(|i| {
+            let part = ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"][(i % 4) as usize];
+            let spec = JobSpec {
+                user: format!("u{}", i % users),
+                partition: part.into(),
+                nodes: 1 + (i % 3) as u32,
+                duration: SimTime::from_secs(90 + (i % 11) * 30),
+                time_limit: SimTime::from_mins(60),
+                payload: None,
+                activity: Activity::cpu_only(0.9),
+                app: None,
+            };
+            (SimTime::from_secs(i * 11), spec)
+        })
+        .collect()
+}
+
+fn run(users: u64, jobs: &[(SimTime, JobSpec)]) -> SlurmSim {
+    let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+    for u in 0..users {
+        s.ctl.fairshare.set_share(&format!("u{u}"), 1.0 + (u % 37) as f64);
+    }
+    for (at, spec) in jobs {
+        s.submit_at(spec.clone(), *at).expect("valid");
+    }
+    s.run_to_idle();
+    s
+}
+
+fn main() {
+    println!("=== fair-share / preemption hot paths ===\n");
+
+    let (users, n) = (1_000u64, 6_000u64);
+    let jobs = skewed_storm(users, n);
+    let r = benchkit::bench("fairshare/storm(1k tenants, 6k jobs, preempt ON)", 1, 3, || {
+        let s = run(users, &jobs);
+        assert_eq!(s.stats.completed, n);
+        std::hint::black_box(s.stats.preemptions);
+    });
+    let s = run(users, &jobs);
+    println!(
+        "jobs/s: {:.0}   preemptions: {}   settled units: {:.3e}\n",
+        benchkit::per_sec(&r, n as f64),
+        s.stats.preemptions,
+        s.ctl
+            .fairshare
+            .accounts()
+            .map(|(_, a)| a.usage)
+            .sum::<f64>(),
+    );
+
+    // the ledger alone: reserve/settle cycles at queue rate, no sim —
+    // pins the cost of the exact-once bookkeeping itself
+    benchkit::bench("fairshare/ledger(100k reserve+settle cycles)", 2, 10, || {
+        use dalek::slurm::JobId;
+        let mut db = FairShareDb::default();
+        for u in 0..1_000u64 {
+            db.set_share(&format!("u{u}"), 1.0 + (u % 37) as f64);
+        }
+        let mut acc = 0.0f64;
+        for i in 0..100_000u64 {
+            let user = format!("u{}", i % 1_000);
+            db.reserve(JobId(i), &user, 600.0);
+            db.settle(JobId(i), &user, 120.0, 9_000.0);
+            acc += db.user_priority(&user);
+        }
+        std::hint::black_box(acc);
+    });
+}

@@ -563,8 +563,24 @@ impl ClusterApi {
     fn dispatch(&mut self, now: SimTime, ev: ClusterEvent) {
         match ev {
             ClusterEvent::Sched(e) => {
+                // a preemption grace expiry mirrors the fault path's
+                // checkpoint ordering: bank a phase-structured victim's
+                // completed BSP iterations *before* the eviction
+                // discards the engine run, and trim its work ledger
+                // *after* (the run-end index rekeys from the current
+                // spec at eviction time)
+                let victim = match e {
+                    SchedEvent::PreemptGrace(id) => self
+                        .apps
+                        .checkpoint(&mut self.net, &mut self.kernel, id)
+                        .map(|iters| (id, iters)),
+                    _ => None,
+                };
                 self.services.observe_sched(&mut self.kernel, &e, now);
                 self.slurm.ctl.handle_event(&mut self.kernel, e, now);
+                if let Some((id, iters)) = victim {
+                    self.slurm.ctl.checkpoint_app(id, iters);
+                }
             }
             ClusterEvent::Service(e) => {
                 self.services
@@ -850,6 +866,8 @@ impl ClusterApi {
                 JobLifecycle::Queued => JobEventKind::Queued,
                 JobLifecycle::Started => JobEventKind::Started,
                 JobLifecycle::Requeued => JobEventKind::Requeued,
+                JobLifecycle::Preempted => JobEventKind::Preempted,
+                JobLifecycle::Resumed => JobEventKind::Resumed,
                 JobLifecycle::Repriced { rate } => JobEventKind::Repriced { rate },
                 JobLifecycle::Finished { state, energy_j } => JobEventKind::Finished {
                     state,
@@ -1793,6 +1811,29 @@ impl ClusterApi {
         Ok(())
     }
 
+    /// Configure a user's fair-share weight — administrators only. The
+    /// first non-zero share switches the scheduler from legacy
+    /// submission order to priority order (aging + share deficit) and
+    /// arms preemption; setting every share back to zero restores the
+    /// legacy order bit-identically.
+    pub fn set_shares(
+        &mut self,
+        sid: SessionId,
+        user: &str,
+        share: f64,
+    ) -> Result<(), DalekError> {
+        let now = self.now();
+        self.admin_session(sid, now)?;
+        self.users.user(user)?; // must exist in the directory
+        if !share.is_finite() || share < 0.0 {
+            return Err(DalekError::BadRequest(format!(
+                "fair-share must be a finite non-negative weight, got {share}"
+            )));
+        }
+        self.slurm.ctl.fairshare.set_share(user, share);
+        Ok(())
+    }
+
     /// Governor telemetry/actuation snapshot — any authenticated user.
     pub fn power_report(&mut self, sid: SessionId) -> Result<PowerReport, DalekError> {
         let now = self.now();
@@ -2089,6 +2130,13 @@ impl ClusterApi {
                 Ok(Response::RateLimitSet {
                     user: user.clone(),
                     ops: *ops,
+                })
+            }
+            Request::SetShares { user, share } => {
+                self.set_shares(sid, user, *share)?;
+                Ok(Response::SharesSet {
+                    user: user.clone(),
+                    share: *share,
                 })
             }
             Request::JobInfo { job } => Ok(Response::Job(self.job_info(sid, *job)?)),

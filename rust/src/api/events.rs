@@ -88,6 +88,13 @@ pub enum JobEventKind {
     /// a §3.6 knob changed on one of the job's nodes; `rate` is the new
     /// slowest-allocated-node relative execution rate
     Repriced { rate: f64 },
+    /// a higher-priority job (or the governor's infeasible-budget path)
+    /// claimed this job's nodes: the fair-share grace window is running
+    /// and the job will be evicted unless it finishes first
+    Preempted,
+    /// the job restarted after a preemption eviction, work ledger
+    /// intact (classic) or rolled back to its last BSP barrier (app)
+    Resumed,
     /// terminal: `joules` is the measured settlement energy the job's
     /// nodes drew while it ran (0 for jobs cancelled before starting)
     Finished { state: JobState, joules: f64 },
@@ -170,6 +177,8 @@ impl Event {
                     JobEventKind::Queued => fields.push(("kind", Json::from("queued"))),
                     JobEventKind::Started => fields.push(("kind", Json::from("started"))),
                     JobEventKind::Requeued => fields.push(("kind", Json::from("requeued"))),
+                    JobEventKind::Preempted => fields.push(("kind", Json::from("preempted"))),
+                    JobEventKind::Resumed => fields.push(("kind", Json::from("resumed"))),
                     JobEventKind::Repriced { rate } => {
                         fields.push(("kind", Json::from("repriced")));
                         fields.push(("rate", Json::from(*rate)));

@@ -140,6 +140,11 @@ pub enum Request {
     /// Override a user's per-drain request budget on the multiplexing
     /// `ApiServer` (admin-only; a no-op outside a server).
     SetRateLimit { user: String, ops: u32 },
+    /// Configure a user's fair-share weight (admin-only). The first
+    /// non-zero share flips the scheduler to priority order with
+    /// preemption armed; zeroing every share restores the legacy
+    /// submission order bit-identically.
+    SetShares { user: String, share: f64 },
     /// Inject one `dalek::faults` anomaly on a node right now, for
     /// `duration` (admin-only). Kind-specific knobs travel as
     /// `floor_w` / `factor` / `fraction`; crash and hang carry none.
@@ -224,6 +229,7 @@ pub enum Response {
     Unsubscribed { channel: Channel },
     Events { events: Vec<Event> },
     RateLimitSet { user: String, ops: u32 },
+    SharesSet { user: String, share: f64 },
     /// Acknowledges an immediate fault injection (`inject_fault`).
     FaultInjected { node: String, kind: String },
     /// A DQL evaluation: the canonical expression spelling plus the
@@ -612,6 +618,18 @@ impl Request {
                     ops,
                 }
             }
+            "set_shares" => {
+                let share = need_f64(j, "share")?;
+                if !share.is_finite() || share < 0.0 {
+                    return Err(bad(format!(
+                        "field `share` must be a finite non-negative weight, got {share}"
+                    )));
+                }
+                Request::SetShares {
+                    user: need_str(j, "user")?,
+                    share,
+                }
+            }
             "inject_fault" => {
                 let kind_s = need_str(j, "kind")?;
                 let ratio = |key: &str| -> Result<f64, DalekError> {
@@ -823,6 +841,11 @@ impl Request {
                 push("user", Json::from(user.as_str()));
                 push("ops", Json::from(*ops));
                 "set_rate_limit"
+            }
+            Request::SetShares { user, share } => {
+                push("user", Json::from(user.as_str()));
+                push("share", Json::from(*share));
+                "set_shares"
             }
             Request::InjectFault {
                 node,
@@ -1060,6 +1083,11 @@ impl Response {
                 push("ops", Json::from(*ops));
                 "rate_limit_set"
             }
+            Response::SharesSet { user, share } => {
+                push("user", Json::from(user.as_str()));
+                push("share", Json::from(*share));
+                "shares_set"
+            }
             Response::FaultInjected { node, kind } => {
                 push("node", Json::from(node.as_str()));
                 push("kind", Json::from(kind.as_str()));
@@ -1232,6 +1260,14 @@ mod tests {
             Request::SetRateLimit {
                 user: "alice".into(),
                 ops: 2,
+            },
+            Request::SetShares {
+                user: "alice".into(),
+                share: 2.5,
+            },
+            Request::SetShares {
+                user: "bob".into(),
+                share: 0.0, // zeroing a share must survive the wire too
             },
             Request::InjectFault {
                 node: "az4-n4090-0".into(),
@@ -1443,6 +1479,15 @@ mod tests {
         // a zero rate limit would wedge the client's queue: refused
         assert!(matches!(
             Request::parse(r#"{"op": "set_rate_limit", "user": "a", "ops": 0, "session": 1}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        // negative / non-finite fair-share weights are refused at the wire
+        assert!(matches!(
+            Request::parse(r#"{"op": "set_shares", "user": "a", "share": -1, "session": 1}"#),
+            Err(DalekError::BadRequest(_))
+        ));
+        assert!(matches!(
+            Request::parse(r#"{"op": "set_shares", "user": "a", "share": "big", "session": 1}"#),
             Err(DalekError::BadRequest(_))
         ));
         // query needs an expr string; subscribe's expr must be a string

@@ -35,13 +35,14 @@ use std::path::{Path, PathBuf};
 /// `--check` treats as a regression (15%).
 pub const REGRESSION_TOLERANCE: f64 = 0.15;
 
-/// The five perf cases, in run order.
-pub const CASES: [&str; 5] = [
+/// The six perf cases, in run order.
+pub const CASES: [&str; 6] = [
     "sampling",
     "scheduler",
     "api_throughput",
     "query_eval",
     "fleet_storm",
+    "fairshare",
 ];
 
 /// Hard per-case wall-time ceiling in seconds, enforced by [`run`] as a
@@ -51,6 +52,9 @@ pub const CASES: [&str; 5] = [
 pub fn wall_ceiling_secs(name: &str, quick: bool) -> f64 {
     let quick_s = match name {
         "fleet_storm" => 120.0,
+        // preemption churn makes the fair-share storm's wall time the
+        // most load-dependent of the cases; headroom over `scheduler`
+        "fairshare" => 90.0,
         _ => 60.0,
     };
     if quick {
@@ -136,6 +140,7 @@ pub fn run(opts: &PerfOpts) -> Result<Vec<PerfRecord>, String> {
             "api_throughput" => case_api_throughput(opts.quick),
             "query_eval" => case_query_eval(opts.quick),
             "fleet_storm" => case_fleet_storm(opts.quick),
+            "fairshare" => case_fairshare(opts.quick),
             _ => unreachable!("CASES is exhaustive"),
         };
         let rate = rec
@@ -384,6 +389,52 @@ fn case_fleet_storm(quick: bool) -> PerfRecord {
     });
     PerfRecord::from_bench("fleet_storm", mode_str(quick), &r)
         .metric("requests_per_sec", benchkit::per_sec(&r, jobs as f64))
+}
+
+/// Fair-share under tenant pressure: a skewed-share user population
+/// (1k tenants in full mode) hammering the preemptive priority
+/// scheduler at ~4x cluster capacity, so the per-partition priority
+/// sort, the deficit lookups, and the preempt/requeue churn are all on
+/// the measured path. The ceiling catches the sort (or the account
+/// bookkeeping) degenerating into a per-pass rescan of every tenant.
+fn case_fairshare(quick: bool) -> PerfRecord {
+    let (users, n, warmup, iters) = if quick {
+        (300u64, 600u64, 0, 2)
+    } else {
+        (1_000, 6_000, 1, 3)
+    };
+    let parts = ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"];
+    let jobs: Vec<(SimTime, JobSpec)> = (0..n)
+        .map(|i| {
+            let spec = JobSpec {
+                user: format!("u{}", i % users),
+                partition: parts[(i % 4) as usize].into(),
+                nodes: 1 + (i % 3) as u32,
+                duration: SimTime::from_secs(90 + (i % 11) * 30),
+                time_limit: SimTime::from_mins(60),
+                payload: None,
+                activity: Activity::cpu_only(0.9),
+                app: None,
+            };
+            (SimTime::from_secs(i * 11), spec)
+        })
+        .collect();
+    let r = benchkit::bench("perf/fairshare", warmup, iters, || {
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+        for u in 0..users {
+            // skewed shares: a handful of weight classes, so the sort
+            // always has real reordering work to do
+            s.ctl.fairshare.set_share(&format!("u{u}"), 1.0 + (u % 37) as f64);
+        }
+        for (at, spec) in &jobs {
+            s.submit_at(spec.clone(), *at).expect("valid");
+        }
+        s.run_to_idle();
+        assert_eq!(s.stats.completed, n);
+        std::hint::black_box(s.stats.preemptions);
+    });
+    PerfRecord::from_bench("fairshare", mode_str(quick), &r)
+        .metric("jobs_per_sec", benchkit::per_sec(&r, n as f64))
 }
 
 /// A synthetic `n`-node cluster tree: 16 partitions, deterministic

@@ -43,6 +43,11 @@ pub struct TraceGen {
     /// halo patterns, and NFS-heavy prototyping mixes. 0.0 keeps the
     /// classic mixes bit-identical (no RNG draw is consumed)
     pub app_fraction: f64,
+    /// multi-tenant demand skew: each job's owner is drawn from this
+    /// `(user, weight)` table. Empty keeps the legacy round-robin
+    /// `user{i % 7}` naming bit-identical (no RNG draw is consumed) —
+    /// the fair-share studies use [`TraceGen::tenant_mix`]
+    pub user_weights: Vec<(String, f64)>,
 }
 
 impl TraceGen {
@@ -60,6 +65,7 @@ impl TraceGen {
             payload_fraction: 0.3,
             gpu_partitions: Vec::new(),
             app_fraction: 0.0,
+            user_weights: Vec::new(),
         }
     }
 
@@ -81,6 +87,7 @@ impl TraceGen {
             payload_fraction: 0.0,
             gpu_partitions: vec!["az4-n4090".into(), "az4-a7900".into()],
             app_fraction: 0.0,
+            user_weights: Vec::new(),
         }
     }
 
@@ -103,6 +110,7 @@ impl TraceGen {
             payload_fraction: 0.0,
             gpu_partitions: Vec::new(),
             app_fraction: 0.6,
+            user_weights: Vec::new(),
         }
     }
 
@@ -128,7 +136,49 @@ impl TraceGen {
             payload_fraction: 0.0,
             gpu_partitions: vec!["az4-n4090".into(), "az4-a7900".into()],
             app_fraction: 0.25,
+            user_weights: Vec::new(),
         }
+    }
+
+    /// The multi-tenant fair-share mix: dense synthetic arrivals whose
+    /// owners are drawn from a Zipf-like skew over `users` tenants
+    /// (`user0` weighted 1, `user1` ½, `user2` ⅓, …) — a single greedy
+    /// tenant dominating the queue, which is exactly what the
+    /// fair-share sort and preemption exist to correct. Classic jobs
+    /// only: the fairness and endurance suites measure allocation and
+    /// conservation against the work ledger.
+    pub fn tenant_mix(seed: u64, users: usize) -> Self {
+        assert!(users >= 2, "a tenant mix needs at least two tenants");
+        Self {
+            rng: Xoshiro256::new(seed),
+            jobs_per_hour: 180.0,
+            partitions: vec![
+                ("az4-n4090".into(), 4),
+                ("az4-a7900".into(), 4),
+                ("iml-ia770".into(), 4),
+                ("az5-a890m".into(), 4),
+            ],
+            payloads: Vec::new(),
+            payload_fraction: 0.0,
+            gpu_partitions: Vec::new(),
+            app_fraction: 0.0,
+            user_weights: (0..users)
+                .map(|k| (format!("user{k}"), 1.0 / (k + 1) as f64))
+                .collect(),
+        }
+    }
+
+    /// Draw one owner from the weight table (weights need not sum to 1).
+    fn weighted_user(&mut self) -> String {
+        let total: f64 = self.user_weights.iter().map(|(_, w)| w).sum();
+        let mut x = self.rng.next_f64() * total;
+        for (u, w) in &self.user_weights {
+            x -= w;
+            if x <= 0.0 {
+                return u.clone();
+            }
+        }
+        self.user_weights.last().expect("non-empty table").0.clone()
     }
 
     /// Generate `n` jobs starting at t=0.
@@ -196,8 +246,16 @@ impl TraceGen {
                     SimTime::from_secs_f64(dur_s * 4.0 + 120.0),
                 ),
             };
+            // skewed tenants draw from the weight table; the empty
+            // table keeps the legacy round-robin naming without
+            // consuming an RNG draw (classic mixes stay bit-identical)
+            let user = if self.user_weights.is_empty() {
+                format!("user{}", i % 7)
+            } else {
+                self.weighted_user()
+            };
             let spec = JobSpec {
-                user: format!("user{}", i % 7),
+                user,
                 partition: part,
                 nodes,
                 duration,
@@ -633,6 +691,27 @@ mod tests {
         assert!(reports > 50, "{reports} reports");
         // the arrival window is compressed: bounded regardless of size
         assert!(a.last().unwrap().at < SimTime::from_mins(40));
+    }
+
+    #[test]
+    fn tenant_mix_is_skewed_and_deterministic() {
+        let a = TraceGen::tenant_mix(47, 5).generate(400);
+        let b = TraceGen::tenant_mix(47, 5).generate(400);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.spec.user, y.spec.user);
+            assert_eq!(x.spec.partition, y.spec.partition);
+        }
+        // every owner comes from the configured tenant set, the skew
+        // materializes (the weight-1 tenant clearly out-submits the
+        // weight-⅕ one), and no tenant starves out of the trace itself
+        let mut count = std::collections::BTreeMap::new();
+        for ev in &a {
+            assert!(ev.spec.app.is_none());
+            *count.entry(ev.spec.user.clone()).or_insert(0usize) += 1;
+        }
+        assert_eq!(count.len(), 5, "tenants seen: {count:?}");
+        assert!(count["user0"] > 2 * count["user4"], "{count:?}");
     }
 
     #[test]

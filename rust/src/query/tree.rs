@@ -22,6 +22,7 @@
 //! partitions.<name>.{name, nodes, running, watts, queue.depth}
 //! quota.<user>.{time_budget_s, energy_budget_j, used_time_s,
 //!               used_energy_j}
+//! users.<user>.fairshare.{share, usage, priority}
 //! net.{active_flows, completed_flows, delivered_bytes,
 //!      fabric.{capacity_bps, used_bps},
 //!      links.<host>.{up, down}.{capacity_bps, used_bps}}
@@ -31,7 +32,8 @@
 //! scheduler's node-index order (the same order every cluster-wide
 //! float sum already uses), `jobs` follow ascending id, everything
 //! else is name-sorted. Owner scoping is enforced *in the tree*: a
-//! non-admin session only lists its own jobs and quota account, and a
+//! non-admin session only lists its own jobs and quota/fair-share
+//! accounts, and a
 //! direct path to another user's entry is a typed `AdminOnly` error —
 //! the evaluator cannot leak what the tree refuses to show.
 //!
@@ -418,6 +420,44 @@ impl<'a> ClusterTree<'a> {
         }
     }
 
+    fn users_node(&self, rest: &[String]) -> Result<Option<TreeNode>, DalekError> {
+        let leaf = |v: QueryValue| Ok(Some(TreeNode::Leaf(v)));
+        let [user, rest @ ..] = rest else {
+            let list = self
+                .slurm
+                .fairshare
+                .accounts()
+                .filter(|(u, _)| match self.scope {
+                    Some(me) => *u == me,
+                    None => true,
+                })
+                .map(|(u, _)| u.to_string())
+                .collect();
+            return Ok(Some(TreeNode::Interior(list)));
+        };
+        if let Some(me) = self.scope {
+            if user != me {
+                return Err(DalekError::AdminOnly);
+            }
+        }
+        let Some(a) = self.slurm.fairshare.account(user) else {
+            return Ok(None);
+        };
+        match rest {
+            [] => Ok(Some(TreeNode::Interior(names(&["fairshare"])))),
+            [k] if k == "fairshare" => Ok(Some(TreeNode::Interior(names(&[
+                "priority", "share", "usage",
+            ])))),
+            [k, l] if k == "fairshare" => match l.as_str() {
+                "priority" => leaf(QueryValue::Num(self.slurm.fairshare.user_priority(user))),
+                "share" => leaf(QueryValue::Num(a.share)),
+                "usage" => leaf(QueryValue::Num(a.usage)),
+                _ => Ok(None),
+            },
+            _ => Ok(None),
+        }
+    }
+
     fn net_node(&self, rest: &[String]) -> Result<Option<TreeNode>, DalekError> {
         let leaf = |v: QueryValue| Ok(Some(TreeNode::Leaf(v)));
         match rest {
@@ -493,6 +533,7 @@ impl Tree for ClusterTree<'_> {
                 "nodes",
                 "partitions",
                 "quota",
+                "users",
             ]))));
         };
         match root.as_str() {
@@ -502,6 +543,7 @@ impl Tree for ClusterTree<'_> {
             "nodes" => self.node_node(rest),
             "partitions" => self.partition_node(rest),
             "quota" => self.quota_node(rest),
+            "users" => self.users_node(rest),
             _ => Ok(None),
         }
     }

@@ -121,6 +121,13 @@ pub struct Job {
     /// live completion timer on the kernel (cancelled + rescheduled on
     /// every rate change)
     pub(crate) completion_ev: Option<ScheduledId>,
+    /// live preemption grace timer: `Some` from the `Preempted` notice
+    /// until the job is actually evicted (or finishes/cancels first,
+    /// which cancels the timer — a race may only ever settle once)
+    pub(crate) preempt_ev: Option<ScheduledId>,
+    /// the next start is a preemption resume: emit `Resumed` instead of
+    /// `Started` (fault requeues keep emitting `Started`, unchanged)
+    pub(crate) resume_pending: bool,
 }
 
 impl Job {
@@ -138,6 +145,8 @@ impl Job {
             rate: 1.0,
             last_rate_change: now,
             completion_ev: None,
+            preempt_ev: None,
+            resume_pending: false,
         }
     }
 

@@ -33,12 +33,14 @@
 //! `dalek::api`.
 
 pub(crate) mod api;
+pub mod fairshare;
 pub mod job;
 pub mod policy;
 pub mod quota;
 pub mod scheduler;
 
 pub(crate) use api::SlurmApi;
+pub use fairshare::{FairShareDb, ShareAccount};
 pub use job::{Job, JobId, JobSpec, JobState};
 pub use policy::{GovernorStats, PlacementPolicy, PolicyEvent, PowerGovernor};
 pub use quota::{QuotaDb, QuotaDecision};

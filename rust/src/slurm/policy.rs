@@ -155,6 +155,14 @@ pub struct PowerGovernor {
     /// idle power-down threshold (None disables; the scheduler's own
     /// 10-minute policy still applies either way)
     pub idle_shutdown_after: Option<SimTime>,
+    /// power-aware preemption: when even the floor-clamped cap plan
+    /// overshoots the budget, preempt the lowest-priority running jobs
+    /// (through the scheduler's fair-share grace path) and subtract
+    /// their pledged demand from the projection before deciding whether
+    /// the survivors still need the deep-throttle hammer. Off by
+    /// default — the governor's event stream is bit-identical to the
+    /// pre-preemption behaviour until an admin opts in.
+    pub preempt_on_infeasible: bool,
     armed: bool,
     deep: bool,
     pub stats: GovernorStats,
@@ -174,6 +182,7 @@ impl PowerGovernor {
             window: SimTime::from_secs(10),
             tolerance: 0.05,
             idle_shutdown_after: None,
+            preempt_on_infeasible: false,
             armed: false,
             deep: false,
             stats: GovernorStats {
@@ -301,6 +310,16 @@ impl PowerGovernor {
             } else {
                 projected += n.gpu_demand_w; // no cappable dGPU domain
             }
+        }
+        // the budget is infeasible even with every cap at its floor:
+        // instead of (only) deep-throttling everyone, shed the
+        // lowest-priority jobs. Their demand is *pledged*, not yet
+        // gone — the eviction lands at grace expiry — but counting the
+        // pledge here keeps the decision idempotent across the ticks
+        // inside the grace window (the same victims pledge the same
+        // watts every tick), so the plan is deterministic.
+        if self.preempt_on_infeasible && projected > budget * (1.0 + self.tolerance) {
+            projected -= slurm.preempt_for_power(kernel, projected - budget, now);
         }
         let deep = projected > budget * (1.0 + self.tolerance);
         for n in &nodes {

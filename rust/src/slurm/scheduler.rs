@@ -35,6 +35,7 @@
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
+use super::fairshare::FairShareDb;
 use super::job::{Job, JobId, JobSpec, JobState};
 use super::policy::{self, PlacementPolicy};
 use super::quota::{QuotaDb, QuotaDecision};
@@ -67,6 +68,9 @@ pub enum SchedEvent {
     ShutdownComplete(usize),
     JobComplete(JobId),
     SuspendTimer(usize),
+    /// a preemption grace window expired: evict the victim now (banked,
+    /// requeue-style) unless it finished or was cancelled in the window
+    PreemptGrace(JobId),
 }
 
 /// Notices the app-model engine (`dalek::app`, hosted at the api
@@ -103,6 +107,14 @@ pub enum JobLifecycle {
     /// a fault evicted the job back into the pending queue; its work
     /// ledger and already-burned joules are banked, not lost
     Requeued,
+    /// a higher-priority job (or the power governor's infeasible-budget
+    /// path) marked this running job for eviction; it keeps running
+    /// through the configurable grace window before being requeued with
+    /// its ledger banked exactly like a fault requeue
+    Preempted,
+    /// a previously-preempted job left `Configuring` again — the
+    /// preemption counterpart of `Started`
+    Resumed,
     /// terminal; `energy_j` is the measured settlement joules across
     /// every run segment (0 for jobs that never started)
     Finished { state: JobState, energy_j: f64 },
@@ -257,6 +269,10 @@ pub struct SlurmStats {
     pub faults_injected: u64,
     /// jobs evicted back into the queue by a crash/hang
     pub fault_requeues: u64,
+    /// `Preempted` notices issued (scheduler fair-share path and the
+    /// governor's power path both count here; a victim that finishes
+    /// inside its grace window still counts — the notice went out)
+    pub preemptions: u64,
 }
 
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -380,6 +396,10 @@ pub struct Slurm {
     /// §6.2 time/energy quotas: admission-checked at submit (estimate),
     /// settled at completion against the measured joules
     pub quota: QuotaDb,
+    /// multi-tenant fair-share ledger + preemption policy knobs. Inert
+    /// (legacy submission order, no preemption, bit-identical runs)
+    /// until a share is configured.
+    pub fairshare: FairShareDb,
     pub stats: SlurmStats,
 }
 
@@ -462,6 +482,7 @@ impl Slurm {
             power_policy: cfg.power.clone(),
             placement: BTreeMap::new(),
             quota: QuotaDb::new(),
+            fairshare: FairShareDb::new(),
             stats: SlurmStats::default(),
         };
         for i in 0..s.nodes.len() {
@@ -756,6 +777,14 @@ impl Slurm {
         let id = JobId(self.next_job);
         self.next_job += 1;
         let part = spec.partition.clone();
+        // fair-share: the estimated demand charges against the owner
+        // the moment the job enters the queue (a flooding tenant loses
+        // priority at submit, not a week later at settlement)
+        self.fairshare.reserve(
+            id,
+            &spec.user,
+            spec.time_limit.as_secs_f64() * spec.nodes as f64,
+        );
         self.jobs.insert(id, Job::new(id, spec, now));
         self.pend_q
             .get_mut(&part)
@@ -783,6 +812,9 @@ impl Slurm {
         job.finished = Some(now);
         let part = job.spec.partition.clone();
         self.pending_removed(&part);
+        // same transaction as the state change: a cancelled job's
+        // estimated demand must not keep deflating its owner's priority
+        self.fairshare.release(id);
         self.stats.cancelled += 1;
         self.job_notices.push(JobNotice {
             job: id,
@@ -824,6 +856,8 @@ impl Slurm {
                 let job = self.jobs.get_mut(&id).expect("exists");
                 job.state = JobState::Cancelled;
                 job.finished = Some(now);
+                // never ran: drop the reservation, charge nothing
+                self.fairshare.release(id);
                 self.stats.cancelled += 1;
                 self.job_notices.push(JobNotice {
                     job: id,
@@ -837,8 +871,15 @@ impl Slurm {
                 Ok(())
             }
             JobState::Running => {
-                if let Some(ev) = self.jobs.get_mut(&id).expect("exists").completion_ev.take() {
-                    kernel.cancel(ev);
+                {
+                    let job = self.jobs.get_mut(&id).expect("exists");
+                    if let Some(ev) = job.completion_ev.take() {
+                        kernel.cancel(ev);
+                    }
+                    // a victim cancelled mid-grace settles exactly once
+                    if let Some(ev) = job.preempt_ev.take() {
+                        kernel.cancel(ev);
+                    }
                 }
                 self.drop_run_end(id);
                 let allocated = self.jobs[&id].allocated.clone();
@@ -869,6 +910,9 @@ impl Slurm {
                         .charge(&user, node_seconds, job_energy, now)
                         .expect("account checked");
                 }
+                // same settlement transaction as the quota charge: the
+                // reservation is swapped for measured usage exactly once
+                self.fairshare.settle(id, &user, node_seconds, job_energy);
                 self.job_notices.push(JobNotice {
                     job: id,
                     at: now,
@@ -923,6 +967,7 @@ impl Slurm {
                 self.try_schedule(kernel, now);
             }
             SchedEvent::JobComplete(id) => self.finish_job(kernel, id, now),
+            SchedEvent::PreemptGrace(id) => self.preempt_job(kernel, id, now),
             SchedEvent::SuspendTimer(i) => {
                 self.nodes[i].suspend_timer = None;
                 let idle_long_enough = self.nodes[i]
@@ -1150,9 +1195,46 @@ impl Slurm {
         id: JobId,
         now: SimTime,
     ) {
-        let Some(job) = self.jobs.get(&id) else { return };
-        if !matches!(job.state, JobState::Running | JobState::Configuring) {
+        // a crash landing on a preemption victim mid-grace-window must
+        // settle exactly once: the fault eviction wins, the pending
+        // grace timer is cancelled and never fires
+        if let Some(job) = self.jobs.get_mut(&id) {
+            if let Some(ev) = job.preempt_ev.take() {
+                kernel.cancel(ev);
+            }
+        }
+        let Some((was_running, is_app)) = self.evict_job(kernel, id, now, true) else {
             return;
+        };
+        self.stats.fault_requeues += 1;
+        self.job_notices.push(JobNotice {
+            job: id,
+            at: now,
+            what: JobLifecycle::Requeued,
+        });
+        if is_app && was_running {
+            self.app_notices.push(AppNotice::Interrupted(id));
+        }
+    }
+
+    /// The shared eviction/settlement transaction of the fault-requeue
+    /// and preemption paths: cancel the completion timer, release the
+    /// nodes, bank the classic work ledger, settle the measured
+    /// node-seconds and joules against quota *and* fair-share in one
+    /// transaction, and put the job back in the pending queue (`front`
+    /// for faults — legacy order restores it first — `back` for
+    /// preemption, where the priority sort decides anyway). Returns
+    /// `(was_running, is_app)`, or `None` if there was nothing to evict.
+    fn evict_job<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+        to_front: bool,
+    ) -> Option<(bool, bool)> {
+        let job = self.jobs.get(&id)?;
+        if !matches!(job.state, JobState::Running | JobState::Configuring) {
+            return None;
         }
         let was_running = job.state == JobState::Running;
         if let Some(ev) = self.jobs.get_mut(&id).expect("exists").completion_ev.take() {
@@ -1165,13 +1247,13 @@ impl Slurm {
             if was_running {
                 self.nodes[i].fsm.release(now).expect("allocated node");
                 self.nodes[i].activity_override = None;
-                self.touch(i, now); // integrates the pre-fault segment
+                self.touch(i, now); // integrates the pre-eviction segment
                 seg_energy += self.nodes[i].energy_j - self.nodes[i].job_energy_mark;
             }
             self.nodes[i].running = None;
             self.nodes[i].reserved_for = None;
             self.reindex_node(i);
-            // survivors idle back into the §3.4 policy; the faulted
+            // survivors idle back into the §3.4 policy; a faulted
             // node itself is grounded by the caller right after this
             if self.nodes[i].fault.is_none()
                 && matches!(self.nodes[i].fsm.state(), PowerState::Idle { .. })
@@ -1200,26 +1282,195 @@ impl Slurm {
         job.completion_ev = None;
         let user = job.spec.user.clone();
         let part = job.spec.partition.clone();
-        if was_running && self.quota.has_account(&user) {
-            self.quota
-                .charge(&user, seg_seconds, seg_energy, now)
-                .expect("account checked");
+        let remaining_est = job.spec.time_limit.as_secs_f64() * job.spec.nodes as f64;
+        if was_running {
+            if self.quota.has_account(&user) {
+                self.quota
+                    .charge(&user, seg_seconds, seg_energy, now)
+                    .expect("account checked");
+            }
+            // the same settlement transaction updates the fair-share
+            // ledger: measured usage in, and the still-pending work is
+            // re-reserved so the owner keeps paying for queue presence
+            self.fairshare.settle(id, &user, seg_seconds, seg_energy);
+            self.fairshare.reserve(id, &user, remaining_est);
         }
-        self.pend_q
-            .get_mut(&part)
-            .expect("partition exists")
-            .push_front(id);
+        let q = self.pend_q.get_mut(&part).expect("partition exists");
+        if to_front {
+            q.push_front(id);
+        } else {
+            q.push_back(id);
+        }
         *self.pend_n.get_mut(&part).expect("partition exists") += 1;
         self.pend_total += 1;
-        self.stats.fault_requeues += 1;
+        Some((was_running, is_app))
+    }
+
+    // -- preemption (fair-share and power paths) -----------------------------
+
+    /// Priority of one job under the fair-share policy. Queued jobs age
+    /// with the clock; running jobs keep the wait they had at dispatch
+    /// (a long run is not seniority).
+    fn job_priority(&self, id: JobId, now: SimTime) -> f64 {
+        let job = &self.jobs[&id];
+        let waited = job.started.unwrap_or(now).since(job.submitted);
+        let part_nodes = self
+            .by_partition
+            .get(&job.spec.partition)
+            .map_or(1, Vec::len);
+        self.fairshare
+            .job_priority(&job.spec.user, waited, job.spec.nodes, part_nodes)
+    }
+
+    /// Mark a running job for preemption: the `Preempted` notice goes
+    /// out now, the eviction happens when the grace window expires.
+    /// Returns false if the job is not running or already marked.
+    fn begin_preempt<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) -> bool {
+        let grace = self.fairshare.grace;
+        let Some(job) = self.jobs.get_mut(&id) else {
+            return false;
+        };
+        if job.state != JobState::Running || job.preempt_ev.is_some() {
+            return false;
+        }
+        job.preempt_ev = Some(kernel.schedule_at(now + grace, SchedEvent::PreemptGrace(id)));
+        self.stats.preemptions += 1;
         self.job_notices.push(JobNotice {
             job: id,
             at: now,
-            what: JobLifecycle::Requeued,
+            what: JobLifecycle::Preempted,
         });
+        true
+    }
+
+    /// Grace expiry: evict the victim requeue-style (ledger banked,
+    /// joules settled exactly once) and mark it to emit `Resumed` on
+    /// its next start. Queue position is immaterial — the fair-share
+    /// sort orders the compacted queue on every scheduling pass.
+    fn preempt_job<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        id: JobId,
+        now: SimTime,
+    ) {
+        if let Some(job) = self.jobs.get_mut(&id) {
+            job.preempt_ev = None; // this event just fired
+        }
+        let Some((was_running, is_app)) = self.evict_job(kernel, id, now, false) else {
+            return;
+        };
+        self.jobs.get_mut(&id).expect("evicted above").resume_pending = true;
         if is_app && was_running {
             self.app_notices.push(AppNotice::Interrupted(id));
         }
+        // freed nodes go to whoever tops the priority order now
+        self.try_schedule(kernel, now);
+    }
+
+    /// The scheduler preemption path: when the queue head cannot be
+    /// placed, mark enough lowest-priority running victims (strictly
+    /// below the head by `preempt_margin`, never the head's own user)
+    /// to free the nodes it needs. Victims already inside a grace
+    /// window count toward the need, so repeated scheduling passes
+    /// during the window never cascade extra evictions; and nothing is
+    /// preempted at all unless the victims found actually satisfy the
+    /// head (partial evictions would feed backfill, not the head).
+    fn preempt_for_job<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        head: JobId,
+        now: SimTime,
+    ) {
+        let part = self.jobs[&head].spec.partition.clone();
+        let need = self.jobs[&head].spec.nodes as usize;
+        let head_user = self.jobs[&head].spec.user.clone();
+        let head_prio = self.job_priority(head, now);
+        let mut avail = self.free_count(&part);
+        // running jobs of this partition via its node table — the
+        // BTreeSet dedups multi-node jobs and fixes iteration order
+        let running: BTreeSet<JobId> = self.by_partition[&part]
+            .iter()
+            .filter_map(|&i| self.nodes[i].running)
+            .collect();
+        let mut victims: Vec<(f64, JobId, usize)> = Vec::new();
+        for id in running {
+            let job = &self.jobs[&id];
+            if job.preempt_ev.is_some() {
+                // already going: its nodes are as good as freed
+                avail += job.allocated.len();
+                continue;
+            }
+            if job.spec.user == head_user {
+                continue;
+            }
+            let prio = self.job_priority(id, now);
+            if prio + self.fairshare.preempt_margin <= head_prio {
+                victims.push((prio, id, job.allocated.len()));
+            }
+        }
+        if avail >= need {
+            return; // pending grace expiries already satisfy the head
+        }
+        if avail + victims.iter().map(|v| v.2).sum::<usize>() < need {
+            return;
+        }
+        // lowest priority evicted first; youngest first among equals
+        victims.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
+        for (_, id, nodes) in victims {
+            if avail >= need {
+                break;
+            }
+            if self.begin_preempt(kernel, id, now) {
+                avail += nodes;
+            }
+        }
+    }
+
+    /// The governor's infeasible-budget hook: mark lowest-priority
+    /// running jobs for preemption until their nominal cappable demand
+    /// covers `excess_w`, and return the total demand pledged — victims
+    /// already mid-grace included, so calling this every governor tick
+    /// during a grace window is idempotent, not a cascade. The caller
+    /// subtracts the pledge from its projection before deciding whether
+    /// the survivors still need the deep-throttle hammer.
+    pub fn preempt_for_power<E: From<SchedEvent>>(
+        &mut self,
+        kernel: &mut Kernel<E>,
+        excess_w: f64,
+        now: SimTime,
+    ) -> f64 {
+        self.clock = self.clock.max(now);
+        let running: BTreeSet<JobId> = self.nodes.iter().filter_map(|n| n.running).collect();
+        let mut pledged = 0.0;
+        let mut cands: Vec<(f64, JobId, f64)> = Vec::new();
+        for id in running {
+            let job = &self.jobs[&id];
+            let w: f64 = job
+                .allocated
+                .iter()
+                .map(|&i| self.draw_cache[i].cpu_demand_w + self.draw_cache[i].gpu_demand_w)
+                .sum();
+            if job.preempt_ev.is_some() {
+                pledged += w;
+            } else {
+                cands.push((self.job_priority(id, now), id, w));
+            }
+        }
+        cands.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
+        for (_, id, w) in cands {
+            if pledged >= excess_w {
+                break;
+            }
+            if self.begin_preempt(kernel, id, now) {
+                pledged += w;
+            }
+        }
+        pledged
     }
 
     /// Trim a requeued phase-structured job's program so it restarts
@@ -1649,7 +1900,7 @@ impl Slurm {
         // are exactly the old global-queue filter (this partition's
         // Pending jobs, in submission order)
         let jobs = &self.jobs;
-        let pending: Vec<JobId> = match self.pend_q.get_mut(part) {
+        let mut pending: Vec<JobId> = match self.pend_q.get_mut(part) {
             Some(q) => {
                 q.retain(|id| jobs.get(id).map_or(false, |j| j.state == JobState::Pending));
                 q.iter().copied().collect()
@@ -1657,12 +1908,29 @@ impl Slurm {
             None => return,
         };
         debug_assert_eq!(pending.len(), self.pend_n.get(part).copied().unwrap_or(0));
+        if self.fairshare.enabled() {
+            // fair-share priority order (deterministic: exact priority
+            // ties fall back to submission order via ascending JobId).
+            // The disabled path must not even sort — legacy submission
+            // order is a pinned bit-identity contract.
+            let mut keyed: Vec<(f64, JobId)> = pending
+                .iter()
+                .map(|&id| (self.job_priority(id, now), id))
+                .collect();
+            keyed.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            pending = keyed.into_iter().map(|(_, id)| id).collect();
+        }
         let Some(&head) = pending.first() else { return };
 
         if self.reserve(kernel, head, now) {
             // head got its nodes; recurse for the next head
             self.schedule_partition(kernel, part, now);
             return;
+        }
+        if self.fairshare.enabled() && self.fairshare.preempt {
+            // the head can't be placed: line up lowest-priority victims
+            // (their eviction lands after the grace window)
+            self.preempt_for_job(kernel, head, now);
         }
         if self.policy == SchedPolicy::Fifo {
             return;
@@ -1939,6 +2207,7 @@ impl Slurm {
         job.rate = rate;
         job.last_rate_change = now;
         job.completion_ev = ev;
+        let resumed = std::mem::take(&mut job.resume_pending);
         let part = job.spec.partition.clone();
         // one batched EASY shadow entry per running job: the key is a
         // run-time constant (repricing moves the real completion, not
@@ -1953,7 +2222,13 @@ impl Slurm {
         self.job_notices.push(JobNotice {
             job: id,
             at: now,
-            what: JobLifecycle::Started,
+            // a preempted job's restart is a `Resumed` (fault requeues
+            // keep emitting `Started`, unchanged)
+            what: if resumed {
+                JobLifecycle::Resumed
+            } else {
+                JobLifecycle::Started
+            },
         });
     }
 
@@ -1976,6 +2251,10 @@ impl Slurm {
         };
         job.finished = Some(now);
         job.completion_ev = None; // this event just fired (None for apps)
+        if let Some(ev) = job.preempt_ev.take() {
+            // finished inside its grace window: the preemption is moot
+            kernel.cancel(ev);
+        }
         if job.spec.app.is_none() {
             // classic work ledger; app jobs' authoritative ledgers are
             // the engine's per-rank ones (wall time includes barriers)
@@ -2019,6 +2298,9 @@ impl Slurm {
                 .charge(&user, node_seconds, job_energy, now)
                 .expect("account checked");
         }
+        // fair-share rides the same settlement transaction: the final
+        // segment's measured usage replaces the job's reservation
+        self.fairshare.settle(id, &user, node_seconds, job_energy);
         let state = self.jobs[&id].state;
         self.job_notices.push(JobNotice {
             job: id,

@@ -17,7 +17,7 @@ use dalek::config::ClusterConfig;
 use dalek::coordinator::trace::TraceGen;
 use dalek::faults::{ChaosKnobs, FaultKind, FaultPlan, FaultSpec};
 use dalek::sim::SimTime;
-use dalek::slurm::JobSpec;
+use dalek::slurm::{JobId, JobSpec};
 
 /// The locked scenario: nine faults across all five families, outages
 /// of 1–5 minutes scattered over the busy first 50 minutes of a
@@ -289,4 +289,126 @@ fn quick_chaos_smoke() {
     assert!(c.slurm().node_infos().iter().all(|n| n.fault.is_none()));
     let settled: f64 = c.slurm().jobs().map(|j| j.energy_j).sum();
     assert!(settled > 0.0 && settled <= c.slurm().total_energy_j());
+}
+
+/// One crash × preemption run for the equal-timestamp edge-ordering
+/// pin: the crash is armed *before* the run, so at the shared t=360
+/// instant it pops ahead of the preemption-grace timer (registered
+/// later, at t=300) — registration order is the kernel's tiebreak.
+/// Returns everything the double run must reproduce bit-for-bit.
+fn preempt_crash_run() -> (Vec<String>, Vec<String>, u64, u64, SimTime) {
+    let mut c = ClusterApi::new(ClusterConfig::dalek_default(), None).unwrap();
+    let root = c.login("root").unwrap();
+    c.subscribe(root, Channel::JobEvents, None).unwrap();
+    for user in ["hog", "vip"] {
+        c.add_user(user);
+        c.set_quota(root, user, 1e9, 1e12).unwrap();
+    }
+    c.set_shares(root, "hog", 1.0).unwrap();
+    c.set_shares(root, "vip", 9.0).unwrap();
+
+    // the hog owns the whole az4-n4090 partition when the vip arrives
+    // at t=300, so the vip (share 9 vs 1, both unsettled — a ~160-point
+    // priority gap, far past the preemption margin) preempts on arrival
+    // and the 60 s grace window expires at exactly t=360
+    let hog = c
+        .submit(JobSpec::cpu("hog", "az4-n4090", 4, 1800), SimTime::ZERO)
+        .unwrap();
+    let vip = c
+        .submit(JobSpec::cpu("vip", "az4-n4090", 4, 600), SimTime::from_secs(300))
+        .unwrap();
+    let plan = FaultPlan {
+        seed: 1,
+        faults: vec![FaultSpec {
+            at: SimTime::from_secs(360),
+            duration: SimTime::from_secs(150),
+            node: "az4-n4090-0".into(),
+            kind: FaultKind::Crash,
+        }],
+    };
+    assert_eq!(c.install_fault_plan(&plan).unwrap(), 1);
+
+    c.run_until(SimTime::from_hours(2), false);
+    assert!(
+        c.slurm().jobs().all(|j| j.is_terminal()),
+        "both jobs must drain within two hours"
+    );
+
+    // the crash eviction won the t=360 tie: exactly one preemption
+    // notice went out, exactly one (fault) requeue happened, and the
+    // cancelled grace timer never double-evicted or double-settled
+    let s = &c.slurm().stats;
+    assert_eq!(s.preemptions, 1);
+    assert_eq!(s.fault_requeues, 1);
+    assert_eq!(s.completed, 2);
+    assert_eq!(s.timeouts + s.cancelled, 0);
+
+    let evs = c.take_events(root, usize::MAX);
+    assert!(!evs.iter().any(|e| matches!(e, Event::Lagged { .. })));
+    let kinds = |id: JobId| -> Vec<String> {
+        evs.iter()
+            .filter_map(|e| match e {
+                Event::Job { job, kind, .. } if *job == id => Some(format!("{kind:?}")),
+                _ => None,
+            })
+            .collect()
+    };
+    // the locked victim lifecycle: the restart after the crash is a
+    // fault-style `Started`, NOT `Resumed` — the preemption eviction
+    // never completed, its grace timer died with the crash
+    let hog_seq = kinds(hog);
+    assert_eq!(hog_seq.len(), 6, "hog lifecycle {hog_seq:?}");
+    let want = ["Queued", "Started", "Preempted", "Requeued", "Started"];
+    for (i, w) in want.iter().enumerate() {
+        assert_eq!(hog_seq[i], *w, "hog lifecycle {hog_seq:?}");
+    }
+    assert!(
+        hog_seq[5].starts_with("Finished") && hog_seq[5].contains("Completed"),
+        "hog lifecycle {hog_seq:?}"
+    );
+    let vip_seq = kinds(vip);
+    assert!(
+        !vip_seq
+            .iter()
+            .any(|k| matches!(k.as_str(), "Preempted" | "Requeued")),
+        "the vip must never be evicted: {vip_seq:?}"
+    );
+
+    // exactly-once settlement: the work ledger carried the full
+    // duration across the crash, and the quota charge equals the job's
+    // settled joules segment-for-segment
+    let hj = c.slurm().job(hog).unwrap();
+    assert!((hj.work_done_s - 1800.0).abs() < 1e-6, "ledger {}", hj.work_done_s);
+    for (user, id) in [("hog", hog), ("vip", vip)] {
+        let e = c.slurm().job(id).unwrap().energy_j;
+        let acct = c.slurm().quota.account(user).unwrap();
+        assert!(
+            (acct.used_energy_j - e).abs() <= 1e-9 * e.max(1.0),
+            "{user}: quota charged {} vs settled {e}",
+            acct.used_energy_j
+        );
+        let fs = c.slurm().fairshare.account(user).unwrap();
+        assert!(fs.reserved.abs() < 1e-6, "{user} leaked a reservation");
+        assert!(fs.usage > 0.0);
+    }
+
+    let makespan = c.slurm().jobs().filter_map(|j| j.finished).max().unwrap();
+    (
+        hog_seq,
+        vip_seq,
+        c.slurm().job(hog).unwrap().energy_j.to_bits(),
+        c.slurm().job(vip).unwrap().energy_j.to_bits(),
+        makespan,
+    )
+}
+
+/// A crash landing on a preemption victim at the exact instant its
+/// grace window expires settles exactly once — no double requeue, no
+/// joule leak — and the equal-timestamp edge ordering (fault first,
+/// grace timer cancelled) is pinned bit-identically across a double run.
+#[test]
+fn crash_on_preemption_victim_at_grace_expiry_settles_exactly_once() {
+    let a = preempt_crash_run();
+    let b = preempt_crash_run();
+    assert_eq!(a, b, "crash × preemption run must be bit-identical");
 }

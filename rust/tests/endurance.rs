@@ -1,0 +1,242 @@
+//! The endurance battery: a simulated month of diurnal multi-tenant
+//! traffic (five tenants, Zipf-skewed demand, fair-share weights set
+//! *against* the skew so preemption stays engaged) under a power budget
+//! that moves twice a day — generous by day, tight by night, with a
+//! weekly brownout night — and the governor's power-aware preemption
+//! hook armed. The run must hold three promises at month scale:
+//!
+//! - **liveness** — every job completes; nothing times out, nothing is
+//!   cancelled, preempted work resumes and finishes;
+//! - **conservation** — per-user quota charges equal the per-job
+//!   settled joules through every preempt/resume segment, the per-node
+//!   energy watermarks equal the power-rail integral, and the
+//!   fair-share ledger ends with zero outstanding reservations;
+//! - **determinism** — a double run is bit-identical in makespan,
+//!   joules and the complete job-event stream (FNV-folded).
+//!
+//! The full month is `#[ignore]`d (minutes of wall time); CI and the
+//! default test run take the 48 h `quick_endurance_smoke` cut of the
+//! same scenario.
+
+use dalek::api::{Channel, ClusterApi, Event, JobEventKind};
+use dalek::config::ClusterConfig;
+use dalek::coordinator::trace::TraceGen;
+use dalek::sim::SimTime;
+
+const USERS: usize = 5;
+/// Daytime budget: roughly the whole cluster busy on classic CPU work,
+/// so caps engage only at peaks.
+const DAY_BUDGET_W: f64 = 2_000.0;
+/// Night budget: well above the 680 W powered-on idle floor but tight
+/// enough that the governor caps (and occasionally sheds) real work.
+const NIGHT_BUDGET_W: f64 = 1_100.0;
+/// One night a week the budget drops to a brownout level barely above
+/// the idle floor — the governor's infeasible path (and, because
+/// `preempt_on_infeasible` is armed, its preemption hook) gets a
+/// standing weekly rehearsal.
+const BROWNOUT_BUDGET_W: f64 = 750.0;
+
+/// Everything a run must reproduce bit-for-bit. Floats are carried as
+/// bit patterns: "close" is not a grade determinism can get.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    submitted: u64,
+    completed: u64,
+    preemptions: u64,
+    preempt_events: u64,
+    resume_events: u64,
+    events: u64,
+    stream_fnv: u64,
+    makespan: SimTime,
+    end: SimTime,
+    true_energy_bits: u64,
+    settled_bits: u64,
+}
+
+fn fnv1a(mut h: u64, s: &str) -> u64 {
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// One endurance run: `days` days of diurnal tenant_mix traffic
+/// (`day_rate` jobs/h for the 12 daylight hours, `night_rate` for the
+/// 12 dark ones), budget flips at 08:00 and 20:00, drained to
+/// quiescence with every conservation invariant asserted.
+fn endurance_run(seed: u64, days: u64, day_rate: f64, night_rate: f64) -> Outcome {
+    let mut c = ClusterApi::new(ClusterConfig::dalek_default(), None).unwrap();
+    let root = c.login("root").unwrap();
+    c.set_outbox_capacity(200_000);
+    c.subscribe(root, Channel::JobEvents, None).unwrap();
+
+    // five tenants: demand is Zipf-skewed toward user0, shares are
+    // quadratically skewed toward user4 — the fair-share sort has to
+    // fight the arrival process all month, so preemption really runs
+    for u in 0..USERS {
+        let user = format!("user{u}");
+        c.add_user(&user);
+        c.set_quota(root, &user, 1e9, 1e12).unwrap();
+        c.set_shares(root, &user, ((u + 1) * (u + 1)) as f64).unwrap();
+    }
+    // infeasible budgets shed the lowest-priority work instead of
+    // deep-throttling everyone below their time limits
+    c.governor_mut().preempt_on_infeasible = true;
+
+    // the whole month's arrivals come from ONE generator, stitched as
+    // 12 h Poisson blocks offset to their half-day (a block's stragglers
+    // past its 12 h window are dropped, keeping submission times
+    // monotone); submitted up-front like the chaos storms
+    let mut gen = TraceGen::tenant_mix(seed, USERS);
+    let half = SimTime::from_hours(12);
+    let mut submitted = 0u64;
+    for d in 0..days {
+        for (k, rate) in [day_rate, night_rate].into_iter().enumerate() {
+            let start = SimTime::from_hours(24 * d + 12 * k as u64);
+            gen.jobs_per_hour = rate;
+            for ev in gen.generate((rate * 12.0).round() as usize) {
+                if ev.at < half {
+                    c.submit(ev.spec.clone(), start + ev.at).expect("valid trace");
+                    submitted += 1;
+                }
+            }
+        }
+    }
+
+    // drive the month a day at a time, folding each day's job-event
+    // stream into the determinism fingerprint as we go
+    let mut stream_fnv = 0xcbf29ce484222325u64;
+    let mut events = 0u64;
+    let mut preempt_events = 0u64;
+    let mut resume_events = 0u64;
+    let fold = |out: Vec<Event>, fnv: &mut u64, n: &mut u64, p: &mut u64, r: &mut u64| {
+        for e in out {
+            if let Event::Lagged { missed } = &e {
+                panic!("job-event stream lagged by {missed}");
+            }
+            if let Event::Job { kind, .. } = &e {
+                match kind {
+                    JobEventKind::Preempted => *p += 1,
+                    JobEventKind::Resumed => *r += 1,
+                    _ => {}
+                }
+            }
+            *fnv = fnv1a(*fnv, &format!("{e:?}"));
+            *n += 1;
+        }
+    };
+    for d in 0..days {
+        c.run_until(SimTime::from_hours(24 * d + 8), false);
+        c.set_power_budget(root, Some(DAY_BUDGET_W)).unwrap();
+        c.run_until(SimTime::from_hours(24 * d + 20), false);
+        let night = if d % 7 == 6 { BROWNOUT_BUDGET_W } else { NIGHT_BUDGET_W };
+        c.set_power_budget(root, Some(night)).unwrap();
+        let out = c.take_events(root, usize::MAX);
+        fold(out, &mut stream_fnv, &mut events, &mut preempt_events, &mut resume_events);
+    }
+
+    // drain to quiescence in hour strides (the last night's budget
+    // stays in force — the backlog must clear under it)
+    let mut horizon = SimTime::from_hours(24 * days);
+    loop {
+        c.run_until(horizon, false);
+        if c.slurm().jobs().all(|j| j.is_terminal()) {
+            break;
+        }
+        horizon += SimTime::from_hours(1);
+        assert!(
+            horizon < SimTime::from_hours(24 * (days + 4)),
+            "endurance run failed to drain"
+        );
+    }
+    let out = c.take_events(root, usize::MAX);
+    fold(out, &mut stream_fnv, &mut events, &mut preempt_events, &mut resume_events);
+
+    // liveness: the month ends with every job completed, none killed
+    let s = &c.slurm().stats;
+    assert_eq!(s.completed, submitted, "every submitted job must complete");
+    assert_eq!(s.timeouts, 0, "no job may outrun its limit under caps");
+    assert_eq!(s.cancelled, 0);
+    assert_eq!(s.fault_requeues, 0, "no faults are armed here");
+    assert!(s.preemptions > 0, "skewed shares must actually preempt");
+    assert_eq!(
+        preempt_events, s.preemptions,
+        "every preemption must reach the admin event stream"
+    );
+    assert!(resume_events > 0 && resume_events <= preempt_events);
+
+    // conservation: watermarks equal the integral; settlement is
+    // bounded by it; per-user quota charges equal the per-job joules
+    // (relative tolerance: month-scale sums differ only by float
+    // summation order across preemption segments)
+    let true_j = c.slurm().total_energy_j();
+    let node_total: f64 = c.slurm().node_infos().iter().map(|n| n.energy_j).sum();
+    assert!(
+        (node_total - true_j).abs() < 1e-6,
+        "watermarks {node_total} vs integral {true_j}"
+    );
+    let settled_j: f64 = c.slurm().jobs().map(|j| j.energy_j).sum();
+    assert!(settled_j > 0.0 && settled_j <= true_j + 1e-6);
+    for u in 0..USERS {
+        let user = format!("user{u}");
+        let by_jobs: f64 = c
+            .slurm()
+            .jobs()
+            .filter(|j| j.spec.user == user)
+            .map(|j| j.energy_j)
+            .sum();
+        let acct = c.slurm().quota.account(&user).unwrap();
+        assert!(
+            (acct.used_energy_j - by_jobs).abs() <= 1e-9 * by_jobs.max(1.0),
+            "{user}: quota charged {} vs settled {by_jobs}",
+            acct.used_energy_j
+        );
+        // the fair-share ledger settled every segment it reserved
+        let fs = c.slurm().fairshare.account(&user).unwrap();
+        assert!(
+            fs.reserved.abs() <= 1e-6 * fs.usage.max(1.0),
+            "{user}: {} fair-share units still reserved",
+            fs.reserved
+        );
+        assert!(fs.usage > 0.0, "{user} settled no usage");
+    }
+
+    let makespan = c.slurm().jobs().filter_map(|j| j.finished).max().unwrap();
+    Outcome {
+        submitted,
+        completed: s.completed,
+        preemptions: s.preemptions,
+        preempt_events,
+        resume_events,
+        events,
+        stream_fnv,
+        makespan,
+        end: c.now(),
+        true_energy_bits: true_j.to_bits(),
+        settled_bits: settled_j.to_bits(),
+    }
+}
+
+/// The 48 h cut: same scenario, two diurnal cycles at 60/10 jobs per
+/// hour (~1700 jobs). Runs in the default suite and as the CI smoke.
+#[test]
+fn quick_endurance_smoke() {
+    let a = endurance_run(0xE9D1, 2, 60.0, 10.0);
+    assert!(a.makespan > SimTime::from_hours(40), "traffic must span both days");
+    let b = endurance_run(0xE9D1, 2, 60.0, 10.0);
+    assert_eq!(a, b, "48 h double run must be bit-identical");
+}
+
+/// The full simulated month: 30 diurnal cycles at 100/10 jobs per hour
+/// (~40k jobs), four brownout nights, drained to quiescence — twice,
+/// bit-identically. Ignored by default (minutes of wall time); run with
+/// `cargo test --release --test endurance -- --ignored`.
+#[test]
+#[ignore = "simulated month (~40k jobs); run with --ignored in release"]
+fn month_of_diurnal_traffic_is_conservation_exact_and_bit_identical() {
+    let a = endurance_run(0xE9D1, 30, 100.0, 10.0);
+    assert!(a.makespan > SimTime::from_hours(29 * 24), "traffic must span the month");
+    let b = endurance_run(0xE9D1, 30, 100.0, 10.0);
+    assert_eq!(a, b, "month-long double run must be bit-identical");
+}

@@ -11,7 +11,7 @@ use dalek::energy::{Ina228Probe, MainBoard, NodeStream, ProbeConfig};
 use dalek::net::{FlowId, FlowNet, Topology};
 use dalek::power::{Activity, PowerModel, PowerState};
 use dalek::sim::{EventQueue, SimTime};
-use dalek::slurm::{JobSpec, JobState, SlurmSim};
+use dalek::slurm::{FairShareDb, JobLifecycle, JobSpec, JobState, SlurmSim};
 use dalek::util::Xoshiro256;
 
 const CASES: u64 = 60;
@@ -603,4 +603,397 @@ fn prop_incremental_flow_rates_match_naive() {
         net.run_to_idle();
         assert_eq!(net.active_flows(), 0, "case {case}");
     }
+}
+
+/// Property: fair-share allocation converges to the configured shares.
+/// Demand is *equal* across five users while shares are skewed 5:4:3:2:1
+/// and every user's demand exceeds their share of capacity, so a
+/// scheduler that allocates by arrival (FIFO, or an offset-FIFO) fails
+/// by construction. Aging is zeroed to isolate the deficit mechanism —
+/// starvation freedom, which aging exists for, is the next property.
+/// Allocation is sampled *during* the backlogged contention window:
+/// measuring at final drain would be vacuous (completed totals always
+/// equal demand once everything finishes).
+#[test]
+fn prop_fairshare_allocation_tracks_shares() {
+    let parts = ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"];
+    let shares = [5.0f64, 4.0, 3.0, 2.0, 1.0];
+    for case in 0..4u64 {
+        let mut rng = Xoshiro256::new(0xFA14 ^ case);
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+        for (u, &sh) in shares.iter().enumerate() {
+            s.ctl.fairshare.set_share(&format!("user{u}"), sh);
+        }
+        s.ctl.fairshare.weight_age_per_hour = 0.0;
+        // each user: 1-node 180 s jobs every ~19 s for two hours, round-
+        // robined over partitions identically (≈ 3× aggregate capacity,
+        // and ≈ 1.8× even the largest single share's slice)
+        let end = SimTime::from_hours(2);
+        let mut arrivals: Vec<(SimTime, JobSpec)> = Vec::new();
+        for u in 0..shares.len() {
+            let mut t = SimTime::from_secs_f64(rng.uniform_f64(0.0, 19.0));
+            let mut i = 0usize;
+            while t < end {
+                arrivals.push((t, JobSpec::cpu(&format!("user{u}"), parts[i % 4], 1, 180)));
+                t += SimTime::from_secs_f64(rng.uniform_f64(14.0, 24.0));
+                i += 1;
+            }
+        }
+        arrivals.sort_by_key(|(t, _)| *t);
+
+        let warm = SimTime::from_mins(20);
+        let mut alloc = [0.0f64; 5];
+        let mut total = 0.0f64;
+        let mut next = SimTime::ZERO;
+        let mut k = 0usize;
+        while next <= end {
+            while k < arrivals.len() && arrivals[k].0 <= next {
+                let (t, spec) = arrivals[k].clone();
+                s.submit_at(spec, t).expect("valid");
+                k += 1;
+            }
+            s.run_until(next);
+            if next >= warm {
+                for j in s.jobs().filter(|j| j.state == JobState::Running) {
+                    let u: usize = j.spec.user[4..].parse().expect("userN");
+                    alloc[u] += j.allocated.len() as f64;
+                    total += j.allocated.len() as f64;
+                }
+            }
+            next += SimTime::from_secs(60);
+        }
+        s.run_to_idle();
+        // the backlog drains fully — rationing bounded the *rate*, it
+        // never dropped work
+        for j in s.jobs() {
+            assert_eq!(j.state, JobState::Completed, "case {case}: {:?}", j.id);
+        }
+        let sum: f64 = shares.iter().sum();
+        for u in 0..shares.len() {
+            let got = alloc[u] / total.max(1.0);
+            let want = shares[u] / sum;
+            assert!(
+                (got - want).abs() < 0.10,
+                "case {case} user{u}: got {got:.3} of the cluster, share says {want:.3}"
+            );
+        }
+        // and the skew is genuinely expressed at the extremes
+        assert!(alloc[0] > 2.0 * alloc[4], "case {case}: skew not expressed");
+    }
+}
+
+/// Property: starvation freedom — a tenant with *no configured share*,
+/// competing against a favored tenant flooding the cluster at ~1.5×
+/// capacity for six hours, still gets every job dispatched and
+/// completed: the aging term grows without bound while the deficit and
+/// size terms are clamped. Also pins d(priority)/d(wait) > 0 for every
+/// queued job at every observation point, so a later capped-age or
+/// decaying-age change cannot silently reintroduce starvation.
+#[test]
+fn prop_fairshare_starvation_freedom() {
+    let parts = ["az4-n4090", "az4-a7900", "iml-ia770", "az5-a890m"];
+    for case in 0..2u64 {
+        let mut rng = Xoshiro256::new(0x57A7 ^ case);
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+        s.ctl.fairshare.set_share("hog", 5.0);
+        let flood_end = SimTime::from_hours(6);
+        let mut arrivals: Vec<(SimTime, JobSpec)> = Vec::new();
+        let mut t = SimTime::ZERO;
+        let mut i = 0usize;
+        while t < flood_end {
+            arrivals.push((t, JobSpec::cpu("hog", parts[i % 4], 1, 300)));
+            t += SimTime::from_secs_f64(rng.uniform_f64(9.0, 16.0));
+            i += 1;
+        }
+        for p in 0..8u64 {
+            let at = SimTime::from_mins(30 + 45 * p);
+            arrivals.push((at, JobSpec::cpu("pleb", parts[p as usize % 4], 1, 300)));
+        }
+        arrivals.sort_by_key(|(t, _)| *t);
+
+        let mut pleb_ids = Vec::new();
+        let mut now = SimTime::ZERO;
+        let mut k = 0usize;
+        loop {
+            while k < arrivals.len() && arrivals[k].0 <= now {
+                let (t, spec) = arrivals[k].clone();
+                let is_pleb = spec.user == "pleb";
+                let id = s.submit_at(spec, t).expect("valid");
+                if is_pleb {
+                    pleb_ids.push(id);
+                }
+                k += 1;
+            }
+            s.run_until(now);
+            // every queued job's priority strictly ages toward dispatch
+            for j in s.jobs().filter(|j| j.state == JobState::Pending) {
+                let pn = s.ctl.partition_nodes(&j.spec.partition).expect("known").len();
+                let w = now.since(j.submitted);
+                let p0 = s.ctl.fairshare.job_priority(&j.spec.user, w, j.spec.nodes, pn);
+                let p1 = s.ctl.fairshare.job_priority(
+                    &j.spec.user,
+                    w + SimTime::from_mins(5),
+                    j.spec.nodes,
+                    pn,
+                );
+                assert!(p1 > p0, "case {case}: priority failed to age at {now:?}");
+            }
+            if k == arrivals.len() && s.jobs().all(|j| j.is_terminal()) {
+                break;
+            }
+            now += SimTime::from_secs(300);
+            assert!(now < SimTime::from_hours(16), "case {case}: no progress");
+        }
+        assert_eq!(pleb_ids.len(), 8, "case {case}");
+        for id in &pleb_ids {
+            let j = s.ctl.job(*id).expect("submitted");
+            assert_eq!(j.state, JobState::Completed, "case {case}: pleb job starved");
+            let wait = j.wait_time().expect("started");
+            assert!(
+                wait <= SimTime::from_hours(6),
+                "case {case}: pleb waited {wait:?}"
+            );
+        }
+        for j in s.jobs() {
+            assert_eq!(j.state, JobState::Completed, "case {case}: {:?}", j.id);
+        }
+        assert_eq!(s.ctl.stats.timeouts, 0, "case {case}");
+        assert_eq!(s.ctl.stats.cancelled, 0, "case {case}");
+    }
+}
+
+/// Property: preempt/resume cycles conserve work and joules exactly.
+/// A low-share tenant fills a partition with long jobs; a high-share
+/// tenant then arrives and must preempt. Every job still completes with
+/// its full work ledger delivered, per-user quota charges equal the sum
+/// of their jobs' measured joules across *all* run segments (settlement
+/// is per-segment and exactly-once), the preempted jobs' final segment
+/// is strictly shorter than their total work (the bank was honored, not
+/// recomputed from zero), and a double run is bit-identical down to the
+/// notice stream.
+#[test]
+fn prop_preempt_resume_conserves_work_and_joules() {
+    let run = |seed: u64| {
+        let mut rng = Xoshiro256::new(0x93EE ^ seed);
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+        s.ctl.fairshare.set_share("hog", 1.0);
+        s.ctl.fairshare.set_share("vip", 9.0);
+        s.ctl.quota.set_account("hog", 1e12, 1e15);
+        s.ctl.quota.set_account("vip", 1e12, 1e15);
+        let hog_secs = 1500 + rng.uniform_u64(0, 600);
+        for _ in 0..4 {
+            s.submit_at(JobSpec::cpu("hog", "az4-n4090", 1, hog_secs), SimTime::ZERO)
+                .expect("valid");
+        }
+        // well past the ≤ 2 min boot: all four hogs are Running and the
+        // partition is full when the vip arrives
+        let at = SimTime::from_secs(240 + rng.uniform_u64(0, 180));
+        for _ in 0..2 {
+            s.submit_at(JobSpec::cpu("vip", "az4-n4090", 1, 600), at)
+                .expect("valid");
+        }
+        s.run_to_idle();
+
+        assert!(
+            s.ctl.stats.preemptions >= 2,
+            "seed {seed}: expected preemptions, got {}",
+            s.ctl.stats.preemptions
+        );
+        let mut per_user = std::collections::BTreeMap::new();
+        for j in s.jobs() {
+            assert_eq!(j.state, JobState::Completed, "seed {seed}: {:?}", j.id);
+            // the work ledger across every segment sums to the full job
+            assert!(
+                (j.work_done_s - j.spec.duration.as_secs_f64()).abs() < 1e-6,
+                "seed {seed} {:?}: work {} vs duration {}",
+                j.id,
+                j.work_done_s,
+                j.spec.duration.as_secs_f64()
+            );
+            *per_user.entry(j.spec.user.clone()).or_insert(0.0) += j.energy_j;
+        }
+        for (user, expect) in &per_user {
+            let acct = s.ctl.quota.account(user).expect("account set");
+            assert!(
+                (acct.used_energy_j - expect).abs() <= 1e-9 * expect.max(1.0),
+                "seed {seed} {user}: charged {} vs measured {expect}",
+                acct.used_energy_j
+            );
+        }
+        let notices = s.ctl.take_job_notices();
+        let mut preempted: Vec<_> = notices
+            .iter()
+            .filter(|n| n.what == JobLifecycle::Preempted)
+            .map(|n| n.job)
+            .collect();
+        let mut resumed: Vec<_> = notices
+            .iter()
+            .filter(|n| n.what == JobLifecycle::Resumed)
+            .map(|n| n.job)
+            .collect();
+        assert_eq!(
+            preempted.len() as u64,
+            s.ctl.stats.preemptions,
+            "seed {seed}: notice stream disagrees with stats"
+        );
+        for id in &preempted {
+            let j = s.ctl.job(*id).expect("exists");
+            // final segment < total work: the bank was honored
+            assert!(
+                j.run_time().expect("ran") < j.spec.duration,
+                "seed {seed} {id:?}: banked work was lost on resume"
+            );
+        }
+        preempted.sort();
+        resumed.sort();
+        assert_eq!(preempted, resumed, "seed {seed}: a victim never resumed");
+        // settlement swapped every reservation for measured usage
+        for user in ["hog", "vip"] {
+            let a = s.ctl.fairshare.account(user).expect("share set");
+            assert!(a.reserved.abs() < 1e-6, "seed {seed} {user}: {}", a.reserved);
+            assert!(a.usage > 0.0, "seed {seed} {user}: nothing settled");
+        }
+        let jobs: Vec<(String, Option<SimTime>, Option<SimTime>, u64)> = s
+            .jobs()
+            .map(|j| {
+                (
+                    format!("{:?}/{:?}", j.id, j.state),
+                    j.started,
+                    j.finished,
+                    j.energy_j.to_bits(),
+                )
+            })
+            .collect();
+        let stream: Vec<String> = notices
+            .iter()
+            .map(|n| format!("{:?}@{:?}:{:?}", n.job, n.at, n.what))
+            .collect();
+        (jobs, stream, s.ctl.stats.preemptions)
+    };
+    for case in 0..6u64 {
+        let a = run(case);
+        let b = run(case);
+        assert_eq!(a, b, "case {case}: preempting runs not bit-identical");
+    }
+}
+
+/// Property: a controller whose fair-share accounts all carry share 0
+/// (including one set and then zeroed) behaves bit-identically to a
+/// pristine controller — same job timestamps, states, joules, and
+/// lifecycle notice stream. This pins the `enabled()` gate: no priority
+/// sort, no preemption, no reserve/settle side effects while disabled.
+#[test]
+fn prop_zero_shares_bit_identical_to_legacy_order() {
+    let run = |seed: u64, zeroed: bool| {
+        let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+        if zeroed {
+            for u in 0..7 {
+                s.ctl.fairshare.set_share(&format!("user{u}"), 0.0);
+            }
+            // a share set and zeroed again must also leave no trace
+            s.ctl.fairshare.set_share("user0", 2.5);
+            s.ctl.fairshare.set_share("user0", 0.0);
+        }
+        let mut gen = trace::TraceGen::dalek_mix(seed);
+        gen.payloads.clear();
+        let tr = gen.generate(18);
+        for ev in &tr {
+            s.submit_at(ev.spec.clone(), ev.at).expect("valid");
+        }
+        let end = s.run_to_idle();
+        if zeroed {
+            // the ledgers stayed inert while disabled
+            for (user, a) in s.ctl.fairshare.accounts() {
+                assert_eq!(a.usage, 0.0, "seed {seed} {user}");
+                assert_eq!(a.reserved, 0.0, "seed {seed} {user}");
+            }
+        }
+        let jobs: Vec<(String, Option<SimTime>, Option<SimTime>, u64)> = s
+            .jobs()
+            .map(|j| {
+                (
+                    format!("{:?}/{:?}", j.id, j.state),
+                    j.started,
+                    j.finished,
+                    j.energy_j.to_bits(),
+                )
+            })
+            .collect();
+        let stream: Vec<String> = s
+            .ctl
+            .take_job_notices()
+            .iter()
+            .map(|n| format!("{:?}@{:?}:{:?}", n.job, n.at, n.what))
+            .collect();
+        (jobs, stream, s.total_energy_j().to_bits(), end)
+    };
+    for case in 0..3u64 {
+        let seed = 0x2E80 ^ case;
+        assert_eq!(
+            run(seed, false),
+            run(seed, true),
+            "seed {seed}: zeroed shares changed scheduler behavior"
+        );
+    }
+}
+
+/// Regression: `cancel` and `release_job` clear fair-share accounting in
+/// the same transaction that settles (or voids) the job. A cancelled
+/// pending job leaves no reservation, a released *running* job swaps its
+/// reservation for measured usage in lock-step with its quota charge,
+/// and a released *configuring* job is charged nothing at all.
+#[test]
+fn fairshare_release_and_cancel_clear_accounting() {
+    let mut s = SlurmSim::from_config(&ClusterConfig::dalek_default());
+    s.ctl.fairshare.set_share("a", 1.0);
+    s.ctl.fairshare.set_share("b", 1.0);
+    s.ctl.quota.set_account("a", 1e12, 1e15);
+    let j1 = s
+        .submit_at(JobSpec::cpu("a", "az4-n4090", 2, 600), SimTime::ZERO)
+        .expect("valid");
+    let j2 = s
+        .submit_at(JobSpec::cpu("a", "az4-n4090", 4, 600), SimTime::ZERO)
+        .expect("valid");
+    // both reservations live: time_limit × nodes each
+    let lim = (600 * 4 + 60) as f64;
+    let a = s.ctl.fairshare.account("a").expect("share set");
+    assert!((a.reserved - (lim * 2.0 + lim * 4.0)).abs() < 1e-9, "{}", a.reserved);
+    // cancelling the queued job drops its reservation, settles nothing
+    s.cancel(j2).expect("pending");
+    let a = s.ctl.fairshare.account("a").expect("share set");
+    assert!((a.reserved - lim * 2.0).abs() < 1e-9, "{}", a.reserved);
+    assert_eq!(a.usage, 0.0);
+    // run j1 well past boot, then tear it down mid-flight
+    s.run_until(SimTime::from_secs(240));
+    assert_eq!(s.ctl.job(j1).expect("exists").state, JobState::Running);
+    s.ctl
+        .release_job(&mut s.kernel, j1, SimTime::from_secs(240))
+        .expect("releases");
+    let j = s.ctl.job(j1).expect("exists").clone();
+    assert_eq!(j.state, JobState::Cancelled);
+    assert!(j.energy_j > 0.0, "ran 2+ minutes, must have burned joules");
+    let node_seconds =
+        SimTime::from_secs(240).since(j.started.expect("ran")).as_secs_f64() * 2.0;
+    let want = FairShareDb::units(node_seconds, j.energy_j);
+    let a = s.ctl.fairshare.account("a").expect("share set");
+    assert!(a.reserved.abs() < 1e-9, "reservation leaked: {}", a.reserved);
+    assert!(
+        (a.usage - want).abs() < 1e-9 * want.max(1.0),
+        "usage {} vs measured {want}",
+        a.usage
+    );
+    // the quota ledger settled the identical joules in the same step
+    let q = s.ctl.quota.account("a").expect("account set");
+    assert!((q.used_energy_j - j.energy_j).abs() < 1e-9 * j.energy_j.max(1.0));
+    // a job released while still Configuring charges nothing
+    let j3 = s
+        .submit_at(JobSpec::cpu("b", "az4-n4090", 4, 600), SimTime::from_secs(240))
+        .expect("valid");
+    assert_eq!(s.ctl.job(j3).expect("exists").state, JobState::Configuring);
+    s.ctl
+        .release_job(&mut s.kernel, j3, SimTime::from_secs(240))
+        .expect("releases");
+    let b = s.ctl.fairshare.account("b").expect("share set");
+    assert_eq!(b.usage, 0.0, "configuring release must charge nothing");
+    assert!(b.reserved.abs() < 1e-9, "{}", b.reserved);
 }
